@@ -1,0 +1,74 @@
+//! Feature selection on a planted sparse model — verifies that the
+//! distributed CA solvers recover the true support, the application the
+//! paper's intro cites (feature selection in classification/data
+//! analysis [21], [22]).
+//!
+//! A ground-truth model w* with known support generates the labels; we
+//! solve LASSO with CA-SFISTA across several sampling rates b and report
+//! precision/recall of the recovered support — reproducing the *content*
+//! of the paper's b-sensitivity discussion (§V-B1) on a task with a
+//! known answer.
+//!
+//! ```bash
+//! cargo run --release --example feature_selection
+//! ```
+
+use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::datasets::synthetic::{generate, planted_model, SyntheticSpec};
+use ca_prox::solvers::ca_sfista::run_ca_sfista;
+use ca_prox::solvers::traits::SolverConfig;
+
+fn main() -> ca_prox::Result<()> {
+    ca_prox::util::logging::init();
+    let spec = SyntheticSpec {
+        d: 64,
+        n: 8_000,
+        density: 1.0,
+        noise: 0.05,
+        model_sparsity: 0.25, // 16 of 64 features are real
+        condition: 20.0,      // mildly ill-conditioned features
+    };
+    let seed = 2024;
+    let ds = generate(&spec, seed);
+    let w_star = planted_model(&spec, seed);
+    let true_support: Vec<usize> =
+        (0..spec.d).filter(|&i| w_star[i] != 0.0).collect();
+    println!(
+        "planted model: {} features, {} in true support",
+        spec.d,
+        true_support.len()
+    );
+
+    let machine = MachineModel::comet();
+    println!(
+        "\n{:>8} {:>10} {:>10} {:>10} {:>12}",
+        "b", "precision", "recall", "f1", "iterations"
+    );
+    for &b in &[0.01, 0.05, 0.1, 0.5] {
+        let cfg = SolverConfig::default()
+            .with_lambda(0.02)
+            .with_sample_fraction(b)
+            .with_k(16)
+            .with_max_iters(480)
+            .with_seed(5);
+        let out = run_ca_sfista(&ds, &cfg, 8, &machine)?;
+        // Support = coefficients above a small magnitude floor.
+        let sel: Vec<usize> =
+            (0..spec.d).filter(|&i| out.w[i].abs() > 1e-3).collect();
+        let tp = sel.iter().filter(|i| w_star[**i] != 0.0).count() as f64;
+        let precision = if sel.is_empty() { 0.0 } else { tp / sel.len() as f64 };
+        let recall = tp / true_support.len() as f64;
+        let f1 = if precision + recall > 0.0 {
+            2.0 * precision * recall / (precision + recall)
+        } else {
+            0.0
+        };
+        println!(
+            "{:>8} {:>10.3} {:>10.3} {:>10.3} {:>12}",
+            b, precision, recall, f1, out.iterations
+        );
+    }
+    println!("\nlarger b → lower gradient variance → cleaner support recovery,");
+    println!("at proportionally higher flop cost per iteration (paper §V-B1)");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Strong-scaling demonstration (the shape of the paper's Figures 1 & 7):
+//! classical SFISTA stops scaling as latency dominates while CA-SFISTA
+//! keeps going, on a covtype-shaped workload from P = 1 to P = 512.
+//!
+//! ```bash
+//! cargo run --release --example scaling_demo
+//! ```
+
+use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::comm::trace::Phase;
+use ca_prox::datasets::registry::load_preset;
+use ca_prox::solvers::ca_sfista::run_ca_sfista;
+use ca_prox::solvers::traits::SolverConfig;
+
+fn main() -> ca_prox::Result<()> {
+    ca_prox::util::logging::init();
+    // Enough samples (and sampling rate) that the per-iteration Gram
+    // compute dominates at small P — the regime where classical SFISTA
+    // scales before latency takes over (Figure 1's shape).
+    let ds = load_preset("covtype", Some(200_000), 42)?;
+    println!("dataset: {} (d={}, n={})", ds.name, ds.d(), ds.n());
+    let machine = MachineModel::comet();
+    let cfg = SolverConfig::default()
+        .with_lambda(0.01)
+        .with_sample_fraction(0.2)
+        .with_max_iters(100) // fixed work: the paper's strong-scaling protocol
+        .with_seed(3);
+
+    println!(
+        "\n{:>6} {:>14} {:>14} {:>9} {:>22}",
+        "P", "SFISTA (s)", "CA-32 (s)", "speedup", "SFISTA latency share"
+    );
+    for &p in &[1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
+        let classical = run_ca_sfista(&ds, &cfg.clone().with_k(1), p, &machine)?;
+        let ca = run_ca_sfista(&ds, &cfg.clone().with_k(32), p, &machine)?;
+        let coll = classical.trace.phase(Phase::Collective);
+        let latency_share = machine.alpha * coll.messages / classical.modeled_seconds;
+        println!(
+            "{:>6} {:>14.5} {:>14.5} {:>8.2}x {:>21.1}%",
+            p,
+            classical.modeled_seconds,
+            ca.modeled_seconds,
+            classical.modeled_seconds / ca.modeled_seconds,
+            latency_share * 100.0
+        );
+    }
+    println!("\nclassical time flattens (then rises) as the α·L term takes over;");
+    println!("CA-SFISTA divides L by k and keeps scaling — Figures 1 & 7.");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path: L1 Pallas kernels, L2 JAX graphs, AOT export.
+
+Nothing in this package is imported at runtime — ``python/compile/aot.py``
+runs once under ``make artifacts`` and emits HLO text + manifest that the
+Rust runtime loads via PJRT.
+"""

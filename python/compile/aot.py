@@ -1,0 +1,146 @@
+"""AOT export: lower the L2 graphs (with their L1 Pallas kernels) to HLO
+text + manifest for the Rust PJRT runtime.
+
+Interchange format is HLO **text**, not serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--small]
+
+Shape set: one gram/kstep entry per (dataset d) x (chunk/k) combination
+used by the examples, integration tests and the hotpath bench. ``--small``
+emits only the smoke-preset shapes (fast, used by pytest).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_gram(d, m):
+    """Lower one gram artifact: (xs[d,m], ys[m], inv_m) -> (G, R)."""
+    fn = jax.jit(model.gram_block)
+    return to_hlo_text(fn.lower(_spec((d, m)), _spec((m,)), _spec(())))
+
+
+def lower_kstep_fista(d, k):
+    """Lower one k-step FISTA artifact."""
+    fn = jax.jit(model.kstep_fista)
+    return to_hlo_text(
+        fn.lower(
+            _spec((k, d, d)), _spec((k, d)), _spec((d,)), _spec((d,)),
+            _spec(()), _spec(()), _spec(()),
+        )
+    )
+
+
+def lower_kstep_spnm(d, k, q):
+    """Lower one k-step SPNM artifact (Q baked in)."""
+    fn = model.kstep_spnm_jit(q)
+    return to_hlo_text(
+        fn.lower(_spec((k, d, d)), _spec((k, d)), _spec((d,)), _spec(()), _spec(()))
+    )
+
+
+def lower_soft_threshold(d):
+    """Lower one soft-threshold artifact."""
+    fn = jax.jit(model.soft_threshold_vec)
+    return to_hlo_text(fn.lower(_spec((d,)), _spec(())))
+
+
+# (kind, params) table. d values follow the paper's datasets
+# (abalone 8, susy 18, covtype 54) plus the smoke preset (12).
+FULL_SHAPES = {
+    "gram": [(8, 128), (12, 64), (18, 128), (54, 128), (54, 256)],
+    "kstep_fista": [(12, 4), (54, 8), (54, 32)],
+    "kstep_spnm": [(12, 4, 5), (54, 8, 5)],
+    "soft_threshold": [(12,), (54,)],
+}
+
+SMALL_SHAPES = {
+    "gram": [(12, 64)],
+    "kstep_fista": [(12, 4)],
+    "kstep_spnm": [(12, 4, 5)],
+    "soft_threshold": [(12,)],
+}
+
+
+def build(out_dir, shapes):
+    """Lower every artifact in `shapes` into `out_dir` + manifest.json."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    for d, m in shapes.get("gram", []):
+        name = f"gram_d{d}_m{m}.hlo.txt"
+        text = lower_gram(d, m)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        entries.append({"kind": "gram", "d": d, "m": m, "file": name})
+        print(f"  gram d={d} m={m} -> {name} ({len(text)} chars)")
+
+    for d, k in shapes.get("kstep_fista", []):
+        name = f"kstep_fista_d{d}_k{k}.hlo.txt"
+        text = lower_kstep_fista(d, k)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        entries.append({"kind": "kstep_fista", "d": d, "k": k, "file": name})
+        print(f"  kstep_fista d={d} k={k} -> {name} ({len(text)} chars)")
+
+    for d, k, q in shapes.get("kstep_spnm", []):
+        name = f"kstep_spnm_d{d}_k{k}_q{q}.hlo.txt"
+        text = lower_kstep_spnm(d, k, q)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        entries.append({"kind": "kstep_spnm", "d": d, "k": k, "q": q, "file": name})
+        print(f"  kstep_spnm d={d} k={k} q={q} -> {name} ({len(text)} chars)")
+
+    for (d,) in shapes.get("soft_threshold", []):
+        name = f"softthr_d{d}.hlo.txt"
+        text = lower_soft_threshold(d)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        entries.append({"kind": "soft_threshold", "d": d, "file": name})
+        print(f"  soft_threshold d={d} -> {name} ({len(text)} chars)")
+
+    manifest = {"version": 1, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(entries)} artifacts + manifest to {out_dir}")
+    return manifest
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--small", action="store_true", help="smoke shapes only")
+    args = parser.parse_args(argv)
+    build(args.out_dir, SMALL_SHAPES if args.small else FULL_SHAPES)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+The compute hot-spot of every algorithm in the paper is the sampled Gram
+product ``G = X_S X_S^T``, ``R = X_S y_S``; :mod:`gram` implements it as a
+Pallas kernel tiled over the sample dimension. :mod:`soft_threshold` is
+the prox operator of the L1 term. :mod:`ref` holds the pure-jnp oracles
+used by the pytest suite.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO ops
+that the Rust runtime's CPU client executes directly. TPU performance is
+*estimated* from the BlockSpec structure (DESIGN.md §Hardware-Adaptation),
+never measured here.
+"""

@@ -1,0 +1,105 @@
+"""Pallas sampled-Gram kernel.
+
+Computes the paper's per-iteration Gram blocks (Alg. III line 6)
+
+    G = inv_m * X_S X_S^T      (d, d)
+    R = inv_m * X_S y_S        (d,)
+
+for a dense block of sampled columns ``xs (d, m)`` with labels ``ys (m,)``.
+
+Tiling (DESIGN.md §Hardware-Adaptation): the sample dimension m is the
+reduction axis; the grid walks m in ``m_tile``-wide chunks, each chunk
+fitting the TPU VMEM budget, accumulating the rank-``m_tile`` update
+``G += x x^T`` in the output block, which Pallas keeps resident across
+grid steps (the standard reduction pattern). The d axis is small
+(8..64 for the paper's datasets) and stays whole — on TPU it would be
+zero-padded to the 8x128 lane grid; padding is exact for Gram products.
+
+``interpret=True`` everywhere: CPU PJRT cannot run Mosaic custom calls;
+interpret mode lowers to plain HLO so the Rust client can execute it.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, y_ref, g_ref, r_ref):
+    """One grid step: accumulate this m-tile's rank update."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        r_ref[...] = jnp.zeros_like(r_ref)
+
+    x = x_ref[...]  # (d, m_tile)
+    y = y_ref[...]  # (m_tile,)
+    # MXU-shaped contraction: (d, mt) @ (mt, d).
+    g_ref[...] += jnp.dot(x, x.T, preferred_element_type=jnp.float32)
+    r_ref[...] += jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def pick_m_tile(d, m):
+    """Largest m-tile that divides m and keeps x-tile + outputs within a
+    conservative VMEM budget (~2 MiB of the 16 MiB VMEM, f32)."""
+    budget_floats = (2 << 20) // 4
+    best = 1
+    for cand in (32, 64, 128, 256, 512):
+        if m % cand == 0 and d * cand + d * d + d <= budget_floats:
+            best = cand
+    return best if m % best == 0 else 1
+
+
+@functools.partial(jax.jit, static_argnames=("m_tile",))
+def gram(xs, ys, inv_m, m_tile=None):
+    """Sampled Gram product via the Pallas kernel.
+
+    Args:
+      xs: (d, m) f32 sampled columns.
+      ys: (m,) f32 sampled labels.
+      inv_m: scalar f32, 1/m with the *global* sample count.
+      m_tile: reduction tile (static); default = :func:`pick_m_tile`.
+
+    Returns:
+      (G, R): (d, d) and (d,) f32.
+    """
+    d, m = xs.shape
+    if m_tile is None:
+        m_tile = pick_m_tile(d, m)
+    assert m % m_tile == 0, f"m={m} not divisible by m_tile={m_tile}"
+    g, r = pl.pallas_call(
+        _gram_kernel,
+        grid=(m // m_tile,),
+        in_specs=[
+            pl.BlockSpec((d, m_tile), lambda i: (0, i)),
+            pl.BlockSpec((m_tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ],
+        interpret=True,
+    )(xs, ys)
+    scale = jnp.asarray(inv_m, jnp.float32)
+    return g * scale, r * scale
+
+
+def vmem_footprint_bytes(d, m_tile):
+    """Estimated VMEM resident bytes per grid step (f32): the x tile,
+    the y tile, and both accumulators. Used by the §Perf analysis."""
+    return 4 * (d * m_tile + m_tile + d * d + d)
+
+
+def mxu_utilization_estimate(d, m_tile):
+    """Fraction of MXU 128x128 systolic slots doing useful work for the
+    (d, m_tile) @ (m_tile, d) contraction — the d axis is the limiter
+    for the paper's small-d datasets. Used by the §Perf analysis."""
+    lanes = 128.0
+    return min(d / lanes, 1.0) ** 2

@@ -1,0 +1,75 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the single source of truth the pytest suites compare against;
+they are intentionally written as direct transcriptions of the math with
+no tiling or tricks.
+"""
+
+import jax.numpy as jnp
+
+
+def gram_ref(xs, ys, inv_m):
+    """Sampled Gram product oracle.
+
+    Args:
+      xs: (d, m) sampled columns of X.
+      ys: (m,) sampled labels.
+      inv_m: scalar 1/m (global sample count).
+
+    Returns:
+      (G, R) with G = inv_m * xs @ xs.T (d, d) and R = inv_m * xs @ ys (d,).
+    """
+    xs = jnp.asarray(xs)
+    ys = jnp.asarray(ys)
+    g = inv_m * (xs @ xs.T)
+    r = inv_m * (xs @ ys)
+    return g, r
+
+
+def soft_threshold_ref(x, thr):
+    """Soft-threshold oracle: sign(x) * max(|x| - thr, 0) (paper Eq. 7)."""
+    x = jnp.asarray(x)
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - thr, 0.0)
+
+
+def fista_kstep_ref(gstack, rstack, w, w_prev, t, lam, iter0):
+    """Sequential reference of the k-step FISTA update block.
+
+    Momentum coefficient (j-2)/j clamped at 0 (paper Eq. 9); gradient at
+    the momentum point v (textbook FISTA — the library default; the
+    paper's literal stale-gradient rule survives only as a Rust-side
+    ablation because it diverges over long stochastic horizons). Matches
+    ``rust/src/coordinator/state.rs`` with ``GradientAt::Momentum``.
+    """
+    gstack = jnp.asarray(gstack)
+    rstack = jnp.asarray(rstack)
+    w = jnp.asarray(w)
+    w_prev = jnp.asarray(w_prev)
+    k = gstack.shape[0]
+    it = float(iter0)
+    for j in range(k):
+        it += 1.0
+        mu = max(0.0, (it - 2.0) / it)
+        v = w + mu * (w - w_prev)
+        grad = gstack[j] @ v - rstack[j]
+        w_new = soft_threshold_ref(v - t * grad, lam * t)
+        w_prev, w = w, w_new
+    return w, w_prev
+
+
+def spnm_kstep_ref(gstack, rstack, w, t, lam, q):
+    """Sequential reference of the k-step SPNM update block (Alg. IV
+    lines 8-17): per block, Q inner ISTA steps on the quadratic model,
+    warm-started from the current iterate."""
+    gstack = jnp.asarray(gstack)
+    rstack = jnp.asarray(rstack)
+    w = jnp.asarray(w)
+    w_prev = w
+    k = gstack.shape[0]
+    for j in range(k):
+        z = w
+        for _ in range(q):
+            grad = gstack[j] @ z - rstack[j]
+            z = soft_threshold_ref(z - t * grad, lam * t)
+        w_prev, w = w, z
+    return w, w_prev

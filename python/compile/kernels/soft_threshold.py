@@ -1,0 +1,42 @@
+"""Pallas soft-threshold kernel (paper Eq. 7) — the prox map of λ‖·‖₁.
+
+Elementwise, so the Pallas mapping is trivial: one VMEM block per grid
+step over the (padded) vector. Kept as a kernel (rather than jnp) so the
+k-step update graphs exercise the same Pallas → HLO path end to end.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _soft_threshold_kernel(x_ref, thr_ref, o_ref):
+    x = x_ref[...]
+    thr = thr_ref[0]
+    o_ref[...] = jnp.sign(x) * jnp.maximum(jnp.abs(x) - thr, 0.0)
+
+
+@jax.jit
+def soft_threshold(x, thr):
+    """Apply S_thr elementwise to a 1-D vector.
+
+    Args:
+      x: (d,) f32.
+      thr: scalar f32 threshold (λ·t in the solvers).
+
+    Returns:
+      (d,) f32.
+    """
+    (d,) = x.shape
+    thr_arr = jnp.reshape(jnp.asarray(thr, jnp.float32), (1,))
+    return pl.pallas_call(
+        _soft_threshold_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(x, thr_arr)

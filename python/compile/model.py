@@ -1,0 +1,109 @@
+"""Layer-2 JAX compute graphs.
+
+These are the computations the Rust coordinator executes through PJRT:
+
+* :func:`gram_block`   — one worker's sampled-Gram contribution
+  (calls the L1 Pallas kernel; Alg. III line 6);
+* :func:`kstep_fista`  — the k redundant replicated FISTA updates every
+  processor runs after the all-reduce (Alg. III lines 8-13);
+* :func:`kstep_spnm`   — ditto for proximal Newton with Q inner ISTA
+  steps (Alg. IV lines 8-17);
+* :func:`soft_threshold_vec` — the prox operator alone.
+
+All graphs are f32, fixed-shape, and lowered once by :mod:`compile.aot`.
+The update rules transcribe ``rust/src/coordinator/state.rs`` exactly
+(gradient at the iterate, momentum (j-2)/j clamped at zero) so the
+artifact path and the native path agree to f32 rounding.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.gram import gram as _pallas_gram
+from compile.kernels.soft_threshold import soft_threshold as _pallas_soft
+
+
+def gram_block(xs, ys, inv_m):
+    """One sampled-Gram block from a dense column batch (L1 kernel)."""
+    return _pallas_gram(xs, ys, inv_m)
+
+
+def soft_threshold_vec(x, thr):
+    """S_thr(x) via the L1 Pallas kernel."""
+    return _pallas_soft(x, thr)
+
+
+def _fista_body(carry, blocks, t, lam):
+    """One unrolled FISTA step.
+
+    Gradient at the momentum point v (textbook FISTA, the library
+    default — see ``GradientAt`` in rust/src/solvers/traits.rs for why
+    the paper's literal stale-gradient rule is kept only as an ablation).
+    """
+    w, w_prev, it = carry
+    g, r = blocks
+    it = it + 1.0
+    mu = jnp.maximum(0.0, (it - 2.0) / it)
+    v = w + mu * (w - w_prev)
+    grad = g @ v - r
+    w_new = _pallas_soft(v - t * grad, lam * t)
+    return (w_new, w, it), None
+
+
+@jax.jit
+def kstep_fista(gstack, rstack, w, w_prev, t, lam, iter0):
+    """Apply the k-step FISTA update block.
+
+    Args:
+      gstack: (k, d, d) reduced Gram blocks.
+      rstack: (k, d) reduced R blocks.
+      w, w_prev: (d,) current and previous iterates.
+      t: scalar step size.
+      lam: scalar λ.
+      iter0: scalar f32, global iteration count before this block
+        (drives the momentum coefficient (j-2)/j).
+
+    Returns:
+      (w, w_prev) after k updates.
+    """
+    t = jnp.asarray(t, jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+    it0 = jnp.asarray(iter0, jnp.float32)
+    (w, w_prev, _), _ = jax.lax.scan(
+        lambda c, b: _fista_body(c, b, t, lam), (w, w_prev, it0), (gstack, rstack)
+    )
+    return w, w_prev
+
+
+def _spnm_block(w, g, r, t, lam, q):
+    """Q inner ISTA steps on the quadratic model, warm-started at w."""
+
+    def inner(_, z):
+        grad = g @ z - r
+        return _pallas_soft(z - t * grad, lam * t)
+
+    return jax.lax.fori_loop(0, q, inner, w)
+
+
+def kstep_spnm(gstack, rstack, w, t, lam, *, q):
+    """Apply the k-step SPNM update block (Q inner iterations each).
+
+    Returns (w, w_prev) after k outer updates.
+    """
+    t = jnp.asarray(t, jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+
+    def body(carry, blocks):
+        w, _ = carry
+        g, r = blocks
+        z = _spnm_block(w, g, r, t, lam, q)
+        return (z, w), None
+
+    (w_out, w_prev_out), _ = jax.lax.scan(body, (w, w), (gstack, rstack))
+    return w_out, w_prev_out
+
+
+def kstep_spnm_jit(q):
+    """Jitted :func:`kstep_spnm` with Q baked in (Q is a loop bound, so it
+    is a compile-time constant of the artifact)."""
+    return jax.jit(lambda gstack, rstack, w, t, lam: kstep_spnm(gstack, rstack, w, t, lam, q=q))

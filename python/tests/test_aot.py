@@ -1,0 +1,57 @@
+"""AOT export: manifest integrity and HLO text validity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(str(out), aot.SMALL_SHAPES)
+    return out, manifest
+
+
+def test_manifest_written_and_parses(built):
+    out, manifest = built
+    path = os.path.join(out, "manifest.json")
+    assert os.path.isfile(path)
+    with open(path) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    assert on_disk["version"] == 1
+    kinds = {e["kind"] for e in on_disk["entries"]}
+    assert kinds == {"gram", "kstep_fista", "kstep_spnm", "soft_threshold"}
+
+
+def test_every_entry_file_exists_and_is_hlo(built):
+    out, manifest = built
+    for e in manifest["entries"]:
+        p = os.path.join(out, e["file"])
+        assert os.path.isfile(p), e
+        text = open(p).read()
+        assert text.startswith("HloModule"), f"{e['file']} is not HLO text"
+        assert "ENTRY" in text
+        # Must be text, never a serialized proto.
+        assert "\x00" not in text
+
+
+def test_hlo_roundtrips_through_xla_parser(built):
+    """The emitted text must re-parse with the local XLA client — the
+    same class of parser the Rust runtime uses."""
+    out, manifest = built
+    from jax._src.lib import xla_client as xc
+
+    for e in manifest["entries"]:
+        text = open(os.path.join(out, e["file"])).read()
+        comp = xc._xla.hlo_module_from_text(text)
+        assert comp is not None
+
+
+def test_full_shape_table_is_consistent():
+    """FULL_SHAPES must cover every dataset d the Rust presets use."""
+    gram_ds = {d for d, _ in aot.FULL_SHAPES["gram"]}
+    assert {8, 18, 54, 12} <= gram_ds

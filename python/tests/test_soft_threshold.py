@@ -1,0 +1,40 @@
+"""L1 correctness: Pallas soft-threshold kernel vs oracle + prox laws."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import soft_threshold_ref
+from compile.kernels.soft_threshold import soft_threshold
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=80),
+    thr=st.floats(min_value=0.0, max_value=3.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_ref(d, thr, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(d) * 2).astype(np.float32)
+    got = np.asarray(soft_threshold(x, np.float32(thr)))
+    want = np.asarray(soft_threshold_ref(x, np.float32(thr)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_exact_zero_region():
+    x = np.array([-0.5, -0.1, 0.0, 0.1, 0.5], np.float32)
+    out = np.asarray(soft_threshold(x, np.float32(0.5)))
+    np.testing.assert_array_equal(out, np.zeros(5, np.float32))
+
+
+def test_shrinks_by_threshold_outside():
+    x = np.array([2.0, -3.0], np.float32)
+    out = np.asarray(soft_threshold(x, np.float32(0.75)))
+    np.testing.assert_allclose(out, [1.25, -2.25], rtol=1e-6)
+
+
+def test_zero_threshold_is_identity():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(33).astype(np.float32)
+    out = np.asarray(soft_threshold(x, np.float32(0.0)))
+    np.testing.assert_allclose(out, x, rtol=1e-7)

@@ -1,0 +1,128 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!  A. all-reduce algorithm (tree / recursive-doubling / ring) — which
+//!     collective the k-step trick needs;
+//!  B. gradient evaluation point — the paper-literal stale-gradient rule
+//!     diverges over long stochastic horizons (the documented deviation);
+//!  C. partition strategy — greedy LPT vs contiguous nnz balance;
+//!  D. sampling with vs without replacement;
+//!  E. machine model sensitivity — on a zero-latency fabric the CA
+//!     advantage disappears (negative control).
+
+use ca_prox::benchkit::{header, table};
+use ca_prox::cluster::shard::{PartitionStrategy, ShardedDataset};
+use ca_prox::comm::collectives::AllReduceAlgo;
+use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::coordinator;
+use ca_prox::datasets::registry::load_preset;
+use ca_prox::sampling::SamplingMode;
+use ca_prox::solvers::traits::{AlgoKind, GradientAt, SolverConfig};
+
+fn main() {
+    header("Ablations", "design-choice studies backing DESIGN.md");
+    let machine = MachineModel::comet();
+    let ds = load_preset("covtype", Some(20_000), 42).unwrap();
+    let base = SolverConfig::default()
+        .with_lambda(0.01)
+        .with_sample_fraction(0.05)
+        .with_k(32)
+        .with_max_iters(64)
+        .with_seed(7);
+
+    // ---- A: collective algorithm ----
+    println!("\n[A] all-reduce algorithm (CA-SFISTA k=32, modeled seconds)");
+    let mut rows = Vec::new();
+    for &p in &[8usize, 64, 512] {
+        let mut cells = Vec::new();
+        for algo in [AllReduceAlgo::BinomialTree, AllReduceAlgo::RecursiveDoubling, AllReduceAlgo::Ring]
+        {
+            let mut cfg = base.clone();
+            cfg.allreduce = algo;
+            let out = coordinator::run(&ds, &cfg, p, &machine, AlgoKind::Sfista).unwrap();
+            cells.push(format!("{:.5}", out.modeled_seconds));
+        }
+        rows.push((format!("P={p}"), cells));
+    }
+    println!(
+        "{}",
+        table(&["tree".into(), "recursive-doubling".into(), "ring".into()], &rows)
+    );
+    println!("ring pays 2(P−1) latency per round: hopeless at large P even with k-stepping");
+
+    // ---- B: gradient evaluation point ----
+    println!("\n[B] gradient point: paper-literal (stale iterate) vs textbook (momentum point)");
+    let mut rows = Vec::new();
+    for (label, ga, iters) in [
+        ("textbook,  T=3000", GradientAt::Momentum, 3000usize),
+        ("literal,   T=300", GradientAt::Iterate, 300),
+        ("literal,   T=3000", GradientAt::Iterate, 3000),
+    ] {
+        let mut cfg = base.clone().with_max_iters(iters);
+        cfg.gradient_at = ga;
+        let out = coordinator::run(&ds, &cfg, 8, &machine, AlgoKind::Sfista).unwrap();
+        rows.push((label.to_string(), vec![format!("{:.4e}", out.final_objective)]));
+    }
+    println!("{}", table(&["final objective".into()], &rows));
+    let literal_short: f64 = rows[1].1[0].parse().unwrap();
+    let literal_long: f64 = rows[2].1[0].parse().unwrap();
+    let textbook: f64 = rows[0].1[0].parse().unwrap();
+    // The literal rule degrades monotonically with the horizon (on
+    // isotropic data it blows up to ~1e31 by T=3000; ill-conditioning
+    // slows the instability but the trend is unmistakable), while the
+    // textbook rule sits at the noise floor.
+    assert!(
+        literal_long > literal_short && literal_long > 1.5 * textbook,
+        "expected the literal rule to degrade with horizon: \
+         literal(300)={literal_short:.3e} literal(3000)={literal_long:.3e} textbook={textbook:.3e}"
+    );
+    println!("the literal Eq. (8) rule destabilizes as momentum → 1 (DESIGN.md §4 deviation)");
+
+    // ---- C: partition strategy ----
+    println!("\n[C] partition strategy: shard nnz imbalance (max/mean)");
+    let mut rows = Vec::new();
+    for &p in &[8usize, 64, 256] {
+        let cont = ShardedDataset::new(&ds, p, PartitionStrategy::Contiguous).unwrap();
+        let greedy = ShardedDataset::new(&ds, p, PartitionStrategy::Greedy).unwrap();
+        rows.push((
+            format!("P={p}"),
+            vec![format!("{:.4}", cont.imbalance()), format!("{:.4}", greedy.imbalance())],
+        ));
+        assert!(greedy.imbalance() <= cont.imbalance() + 1e-9);
+    }
+    println!("{}", table(&["contiguous".into(), "greedy".into()], &rows));
+
+    // ---- D: sampling mode ----
+    println!("\n[D] sampling with vs without replacement (final objective, T=256)");
+    let mut rows = Vec::new();
+    for (label, mode) in [
+        ("without replacement", SamplingMode::WithoutReplacement),
+        ("with replacement", SamplingMode::WithReplacement),
+    ] {
+        let mut cfg = base.clone().with_max_iters(256);
+        cfg.sampling = mode;
+        let out = coordinator::run(&ds, &cfg, 8, &machine, AlgoKind::Sfista).unwrap();
+        rows.push((label.to_string(), vec![format!("{:.6e}", out.final_objective)]));
+    }
+    println!("{}", table(&["objective".into()], &rows));
+
+    // ---- E: machine sensitivity (negative control) ----
+    println!("\n[E] machine sensitivity: CA speedup at P=256, k=32");
+    let mut rows = Vec::new();
+    for m in [MachineModel::comet(), MachineModel::ethernet(), MachineModel::zero_latency()] {
+        let c = coordinator::run(&ds, &base.clone().with_k(1), 256, &m, AlgoKind::Sfista).unwrap();
+        let ca = coordinator::run(&ds, &base.clone(), 256, &m, AlgoKind::Sfista).unwrap();
+        rows.push((
+            m.name.to_string(),
+            vec![format!("{:.2}x", c.modeled_seconds / ca.modeled_seconds)],
+        ));
+    }
+    println!("{}", table(&["CA speedup".into()], &rows));
+    let zero: f64 = rows[2].1[0].trim_end_matches('x').parse().unwrap();
+    assert!(
+        zero < 1.3,
+        "zero-latency fabric should erase (almost) all of the CA advantage, got {zero}x"
+    );
+    println!("without latency there is nothing to avoid — the CA advantage is a latency effect");
+
+    println!("\nablations OK");
+}

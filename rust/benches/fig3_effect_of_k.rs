@@ -1,0 +1,73 @@
+//! Figure 3: effect of k on convergence and stability — CA-SFISTA and
+//! CA-SPNM trace exactly the classical algorithms' curves for every k
+//! (the k-step formulations are arithmetically the same). abalone with
+//! b = 0.1, covtype with b = 0.01; k up to 128 as in the paper.
+
+use ca_prox::benchkit::{header, table};
+use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::coordinator;
+use ca_prox::datasets::registry::{load_preset, preset};
+use ca_prox::solvers::reference::solve_reference;
+use ca_prox::solvers::traits::{AlgoKind, SolverConfig};
+
+fn main() {
+    header(
+        "Figure 3 — effect of k on convergence",
+        "rel. solution error vs iteration; classical (k=1) overlaid with k=32, k=128",
+    );
+    let machine = MachineModel::comet();
+    for (name, scale, b) in [("abalone", None, 0.1), ("covtype", Some(20_000), 0.01)] {
+        let ds = load_preset(name, scale, 42).unwrap();
+        let lambda = preset(name).unwrap().lambda;
+        let (w_op, _) = solve_reference(&ds, lambda, 1e-8, 200_000).unwrap();
+        for algo in [AlgoKind::Sfista, AlgoKind::Spnm] {
+            println!("\n--- {name} / {:?} (b={b}) ---", algo);
+            let iters = 384;
+            let mut series = Vec::new();
+            for &k in &[1usize, 32, 128] {
+                let mut cfg = SolverConfig::default()
+                    .with_lambda(lambda)
+                    .with_sample_fraction(b)
+                    .with_k(k)
+                    .with_q(5)
+                    .with_max_iters(iters)
+                    .with_history(iters / 8)
+                    .with_seed(17);
+                cfg.w_op = Some(w_op.clone());
+                let out = coordinator::run(&ds, &cfg, 8, &machine, algo).unwrap();
+                series.push((k, out.history));
+            }
+            let mut rows = Vec::new();
+            for i in 0..series[0].1.len() {
+                rows.push((
+                    format!("iter {:>4}", series[0].1[i].iter),
+                    series
+                        .iter()
+                        .map(|(_, h)| format!("{:.4e}", h[i].rel_error))
+                        .collect(),
+                ));
+            }
+            println!(
+                "{}",
+                table(
+                    &series
+                        .iter()
+                        .map(|(k, _)| if *k == 1 { "classical".into() } else { format!("k={k}") })
+                        .collect::<Vec<_>>(),
+                    &rows
+                )
+            );
+            // The curves must be *identical*, not merely similar.
+            for (k, h) in &series[1..] {
+                for (a, b_) in h.iter().zip(&series[0].1) {
+                    let diff = (a.rel_error - b_.rel_error).abs();
+                    assert!(
+                        diff <= 1e-9 * (1.0 + b_.rel_error),
+                        "{name}/{algo:?} k={k}: curve deviates by {diff}"
+                    );
+                }
+            }
+        }
+    }
+    println!("\nfig3 OK — k does not change convergence or stability (curves identical)");
+}

@@ -1,0 +1,78 @@
+//! Figure 4: CA-SFISTA speedup over classical SFISTA across (P, k)
+//! grids for abalone, covtype and susy. Speedups are modeled-time
+//! ratios at equal iteration count (classical and CA produce identical
+//! iterates, so equal-iterations == equal-accuracy).
+//!
+//! Expected shape: speedup grows with k and with P; small datasets
+//! (abalone) gain most because their per-iteration compute is tiny
+//! relative to latency.
+
+use ca_prox::benchkit::header;
+use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::coordinator;
+use ca_prox::datasets::registry::{load_preset, preset};
+use ca_prox::metrics::report::{SpeedupCell, SpeedupTable};
+use ca_prox::solvers::traits::{AlgoKind, SolverConfig};
+
+/// One dataset's (P, k) sweep; shared with fig5 via copy — the sweep is
+/// the experiment definition, kept inline so each figure is standalone.
+fn sweep(algo: AlgoKind, name: &str, scale: Option<usize>, b: f64, ps: &[usize], ks: &[usize]) {
+    let ds = load_preset(name, scale, 42).unwrap();
+    let lambda = preset(name).unwrap().lambda;
+    let machine = MachineModel::comet();
+    let iters = 64;
+    let mut tbl = SpeedupTable::new(&format!("{name} (b={b}, T={iters})"));
+    for &p in ps {
+        let cfg = SolverConfig::default()
+            .with_lambda(lambda)
+            .with_sample_fraction(b)
+            .with_q(5)
+            .with_max_iters(iters)
+            .with_seed(7);
+        let base = coordinator::run(&ds, &cfg.clone().with_k(1), p, &machine, algo).unwrap();
+        for &k in ks {
+            let ca = coordinator::run(&ds, &cfg.clone().with_k(k), p, &machine, algo).unwrap();
+            tbl.push(SpeedupCell {
+                p,
+                k,
+                baseline_seconds: base.modeled_seconds,
+                ca_seconds: ca.modeled_seconds,
+            });
+        }
+    }
+    println!("{}", tbl.render());
+    // Shape: speedup non-decreasing in k at the largest P, and > 1 there.
+    let pmax = *ps.last().unwrap();
+    let at_pmax: Vec<f64> =
+        tbl.cells.iter().filter(|c| c.p == pmax).map(|c| c.speedup()).collect();
+    assert!(at_pmax.last().unwrap() > &1.5, "{name}: largest-k speedup too small");
+    assert!(
+        at_pmax.windows(2).all(|w| w[1] >= w[0] * 0.95),
+        "{name}: speedup should grow with k at P={pmax}: {at_pmax:?}"
+    );
+}
+
+fn main() {
+    header(
+        "Figure 4 — CA-SFISTA speedup grid",
+        "speedup over classical SFISTA at the same P (modeled time, Comet model)",
+    );
+    sweep(AlgoKind::Sfista, "abalone", None, 0.1, &[8, 16, 32, 64], &[4, 16, 32, 64, 128]);
+    sweep(
+        AlgoKind::Sfista,
+        "covtype",
+        Some(50_000),
+        0.01,
+        &[64, 128, 256, 512],
+        &[4, 16, 32, 64, 128],
+    );
+    sweep(
+        AlgoKind::Sfista,
+        "susy",
+        Some(100_000),
+        0.01,
+        &[256, 512, 1024],
+        &[16, 32, 64, 128],
+    );
+    println!("fig4 OK — speedup grows with k and P for all three datasets");
+}

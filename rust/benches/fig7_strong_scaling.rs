@@ -1,0 +1,105 @@
+//! Figure 7: strong scaling of CA-SFISTA / CA-SPNM (k = 32) vs the
+//! classical algorithms — execution time for 100 iterations as P grows.
+//!
+//! Expected shapes:
+//!  * classical curves flatten then *rise* once latency dominates;
+//!  * CA curves keep descending much closer to ideal;
+//!  * the intentional covtype P = 1024 point shows the CA algorithms
+//!    becoming **bandwidth-bound**: k·d²·log P words per round stops
+//!    latency-hiding from helping.
+
+use ca_prox::benchkit::{header, table};
+use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::comm::trace::Phase;
+use ca_prox::coordinator;
+use ca_prox::datasets::registry::{load_preset, preset};
+use ca_prox::solvers::traits::{AlgoKind, SolverConfig};
+
+fn main() {
+    header(
+        "Figure 7 — strong scaling, classical vs k-step (k=32)",
+        "modeled seconds for 100 iterations",
+    );
+    let k = 32;
+    // γ_eff is calibrated per dataset: the sampled-Gram kernel for tiny d
+    // is memory-bound, not MXU/dgemm-bound — the paper's own Fig. 7a
+    // (abalone keeps scaling to P ≈ 8) implies a per-iteration compute
+    // cost ≈ 8× the collective cost, i.e. an effective rate of
+    // ~1 GFLOP/s for d = 8, rising with d. α and β stay at the Comet
+    // calibration. (EXPERIMENTS.md documents the calibration.)
+    for (name, scale, b, gamma_eff, ps) in [
+        ("abalone", None, 0.5, 1.0e-9, vec![1usize, 2, 4, 8, 16, 32, 64]),
+        (
+            "covtype",
+            Some(50_000),
+            0.2,
+            2.0e-10,
+            vec![1, 4, 16, 64, 128, 256, 512, 1024], // 1024: bandwidth-bound point
+        ),
+        ("susy", Some(100_000), 0.5, 5.0e-10, vec![1, 4, 16, 64, 256, 1024]),
+    ] {
+        let comet = MachineModel::comet();
+        let machine = MachineModel::custom(gamma_eff, comet.alpha, comet.beta);
+        let ds = load_preset(name, scale, 42).unwrap();
+        let lambda = preset(name).unwrap().lambda;
+        let cfg = SolverConfig::default()
+            .with_lambda(lambda)
+            .with_sample_fraction(b)
+            .with_q(5)
+            .with_max_iters(100)
+            .with_seed(7);
+        println!("--- {name} (b={b}) ---");
+        let mut rows = Vec::new();
+        let mut ca_fista_times = Vec::new();
+        let mut classical_fista_times = Vec::new();
+        for &p in &ps {
+            let mut cells = Vec::new();
+            for (algo, kk) in [
+                (AlgoKind::Sfista, 1usize),
+                (AlgoKind::Sfista, k),
+                (AlgoKind::Spnm, 1),
+                (AlgoKind::Spnm, k),
+            ] {
+                let out =
+                    coordinator::run(&ds, &cfg.clone().with_k(kk), p, &machine, algo).unwrap();
+                cells.push(format!("{:.5}", out.modeled_seconds));
+                if algo == AlgoKind::Sfista {
+                    if kk == 1 {
+                        classical_fista_times.push(out.modeled_seconds);
+                    } else {
+                        ca_fista_times.push((p, out.modeled_seconds, out.trace.phase(Phase::Collective)));
+                    }
+                }
+            }
+            rows.push((format!("P={p}"), cells));
+        }
+        println!(
+            "{}",
+            table(
+                &["SFISTA".into(), "CA-SFISTA".into(), "SPNM".into(), "CA-SPNM".into()],
+                &rows
+            )
+        );
+        // Shape: CA at max P beats classical at max P.
+        let c_last = *classical_fista_times.last().unwrap();
+        let ca_last = ca_fista_times.last().unwrap().1;
+        assert!(ca_last < c_last, "{name}: CA should win at the largest P");
+        if name == "covtype" {
+            // Bandwidth-bound check at P = 1024: words·β exceeds msgs·α
+            // for the CA variant — the effect the paper added this point
+            // to show.
+            let (_, _, coll) = &ca_fista_times.last().unwrap().clone();
+            let bw = machine.beta * coll.words;
+            let lat = machine.alpha * coll.messages;
+            println!(
+                "covtype P=1024 CA-SFISTA comm split: bandwidth {bw:.5}s vs latency {lat:.5}s"
+            );
+            assert!(
+                bw > lat,
+                "at P=1024 with k=32 the CA collective must be bandwidth-bound"
+            );
+        }
+        println!();
+    }
+    println!("fig7 OK — classical stops scaling, CA keeps scaling until bandwidth-bound");
+}

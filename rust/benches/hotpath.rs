@@ -1,0 +1,123 @@
+//! Hot-path microbenchmarks (real wall time, not the α-β-γ model):
+//! the sampled-Gram kernels (CSC native, dense native, PJRT artifact),
+//! the collectives, the k-step update loop, and end-to-end iteration
+//! throughput. This is the §Perf working set — before/after numbers in
+//! EXPERIMENTS.md come from here.
+
+use ca_prox::benchkit::{bench, fmt_secs, header};
+use ca_prox::cluster::shard::{PartitionStrategy, ShardedDataset};
+use ca_prox::comm::collectives::{allreduce_sum, AllReduceAlgo};
+use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::comm::trace::CostTrace;
+use ca_prox::coordinator::state::IterState;
+use ca_prox::datasets::registry::load_preset;
+use ca_prox::matrix::ops::{sampled_gram_csc, sampled_gram_dense, GramStack};
+use ca_prox::runtime::backend::{GramBackend, NativeGramBackend};
+use ca_prox::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
+use ca_prox::solvers::traits::{AlgoKind, GradientAt, SolverConfig};
+use ca_prox::util::rng::Rng;
+use std::path::Path;
+
+fn main() {
+    header("hot path microbenchmarks", "real wall time (release build)");
+    let ds = load_preset("covtype", Some(50_000), 42).unwrap();
+    let d = ds.d();
+    let dense = ds.x.to_dense();
+    let mut rng = Rng::new(1);
+    let idx: Vec<usize> = rng.sample_without_replacement(ds.n(), 2048);
+    let inv_m = 1.0 / idx.len() as f64;
+
+    // ---- gram kernels ----
+    let mut g = vec![0.0; d * d];
+    let mut r = vec![0.0; d];
+    let t = bench("gram/native-csc (d=54, m=2048, 22% nnz)", 3, 20, || {
+        g.iter_mut().for_each(|x| *x = 0.0);
+        r.iter_mut().for_each(|x| *x = 0.0);
+        sampled_gram_csc(&ds.x, &ds.y, &idx, inv_m, &mut g, &mut r).unwrap();
+    });
+    println!("{}", t.summary());
+    let t = bench("gram/native-dense (d=54, m=2048)", 3, 20, || {
+        g.iter_mut().for_each(|x| *x = 0.0);
+        r.iter_mut().for_each(|x| *x = 0.0);
+        sampled_gram_dense(&dense, &ds.y, &idx, inv_m, &mut g, &mut r).unwrap();
+    });
+    println!("{}", t.summary());
+
+    // PJRT artifact path (if built).
+    let artifact_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match PjrtEngine::load(&artifact_dir) {
+        Ok(engine) => {
+            let sharded = ShardedDataset::new(&ds, 1, PartitionStrategy::Contiguous).unwrap();
+            let shard = &sharded.shards[0];
+            let backend = PjrtGramBackend::new(&engine);
+            // warm the executable cache
+            let mut g2 = vec![0.0; d * d];
+            let mut r2 = vec![0.0; d];
+            backend.accumulate(shard, &idx, inv_m, &mut g2, &mut r2).unwrap();
+            let t = bench("gram/pjrt-artifact (d=54, m=2048, 8x256 chunks)", 2, 10, || {
+                g2.iter_mut().for_each(|x| *x = 0.0);
+                r2.iter_mut().for_each(|x| *x = 0.0);
+                backend.accumulate(shard, &idx, inv_m, &mut g2, &mut r2).unwrap();
+            });
+            println!("{}", t.summary());
+        }
+        Err(e) => println!("gram/pjrt-artifact: skipped ({e})"),
+    }
+
+    // ---- collectives (physical data movement) ----
+    for (label, algo) in [
+        ("allreduce/tree", AllReduceAlgo::BinomialTree),
+        ("allreduce/recursive-doubling", AllReduceAlgo::RecursiveDoubling),
+        ("allreduce/ring", AllReduceAlgo::Ring),
+    ] {
+        let p = 64;
+        let w = 32 * (d * d + d); // k=32 gram stack
+        let proto: Vec<Vec<f64>> = (0..p)
+            .map(|i| (0..w).map(|j| (i * j) as f64).collect())
+            .collect();
+        let machine = MachineModel::comet();
+        let mut trace = CostTrace::new();
+        let t = bench(&format!("{label} (P=64, {w} words)"), 2, 10, || {
+            let mut bufs = proto.clone();
+            allreduce_sum(&mut bufs, algo, &machine, &mut trace).unwrap();
+        });
+        println!("{}", t.summary());
+    }
+
+    // ---- k-step update loop ----
+    let mut stack = GramStack::zeros(d, 32);
+    for j in 0..32 {
+        let (gb, rb) = stack.block_mut(j);
+        for i in 0..d {
+            gb[i * d + i] = 1.0;
+            rb[i] = 0.5;
+        }
+    }
+    let mut state = IterState::new(vec![0.0; d]);
+    let t = bench("update/kstep-fista (d=54, k=32)", 5, 50, || {
+        for j in 0..32 {
+            state.fista_step(&stack, j, 0.1, 0.01, GradientAt::Momentum).unwrap();
+        }
+    });
+    println!("{}", t.summary());
+
+    // ---- end-to-end iteration throughput (wall) ----
+    let machine = MachineModel::comet();
+    for p in [8usize, 64] {
+        let cfg = SolverConfig::default()
+            .with_lambda(0.01)
+            .with_sample_fraction(0.02)
+            .with_k(32)
+            .with_max_iters(64)
+            .with_seed(7);
+        let t = bench(&format!("e2e/ca-sfista P={p} k=32 T=64 (wall)"), 1, 5, || {
+            ca_prox::coordinator::run(&ds, &cfg, p, &machine, AlgoKind::Sfista).unwrap();
+        });
+        println!(
+            "{}  ({} per iteration)",
+            t.summary(),
+            fmt_secs(t.median() / 64.0)
+        );
+    }
+    println!("\nhotpath OK");
+}

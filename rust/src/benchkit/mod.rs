@@ -1,0 +1,140 @@
+//! Benchmark kit (no `criterion` offline): warmup + repeated timing with
+//! percentile reporting, plus table printers shared by the figure
+//! benches under `rust/benches/`.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Result of timing one closure.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    /// Label.
+    pub name: String,
+    /// Per-repeat wall seconds.
+    pub samples: Vec<f64>,
+}
+
+impl Timing {
+    /// Mean seconds.
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    /// Median seconds.
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        stats::stddev(&self.samples)
+    }
+
+    /// Short human-readable summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} median {:>10} mean {:>10} ±{:>9} (n={})",
+            self.name,
+            fmt_secs(self.median()),
+            fmt_secs(self.mean()),
+            fmt_secs(self.stddev()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Time `f` with `warmup` discarded runs then `repeats` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, repeats: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(repeats);
+    for _ in 0..repeats.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing { name: name.to_string(), samples }
+}
+
+/// Print a standard bench header (consumed by `cargo bench` logs and
+/// EXPERIMENTS.md).
+pub fn header(title: &str, detail: &str) {
+    println!("\n=== {title} ===");
+    if !detail.is_empty() {
+        println!("{detail}");
+    }
+}
+
+/// Render an aligned text table. `rows` are row-label + cells.
+pub fn table(col_headers: &[String], rows: &[(String, Vec<String>)]) -> String {
+    let mut widths: Vec<usize> = col_headers.iter().map(|h| h.len()).collect();
+    for (_, cells) in rows {
+        for (i, c) in cells.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let label_w = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(4).max(4);
+    let mut s = format!("{:<label_w$}", "");
+    for (h, w) in col_headers.iter().zip(&widths) {
+        s.push_str(&format!(" {h:>w$}"));
+    }
+    s.push('\n');
+    for (label, cells) in rows {
+        s.push_str(&format!("{label:<label_w$}"));
+        for (c, w) in cells.iter().zip(&widths) {
+            s.push_str(&format!(" {c:>w$}"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut count = 0usize;
+        let t = bench("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(t.samples.len(), 5);
+        assert!(t.mean() >= 0.0);
+        assert!(t.summary().contains("noop"));
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = table(
+            &["k=1".into(), "k=8".into()],
+            &[("P=2".into(), vec!["1.00x".into(), "3.50x".into()])],
+        );
+        assert!(t.contains("k=1"));
+        assert!(t.contains("3.50x"));
+        assert_eq!(t.lines().count(), 2);
+    }
+}

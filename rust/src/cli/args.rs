@@ -1,0 +1,212 @@
+//! Declarative flag parsing.
+
+use crate::error::{CaError, Result};
+use std::collections::BTreeMap;
+
+/// A flag definition.
+#[derive(Clone, Debug)]
+pub struct Flag {
+    /// Long name without `--`.
+    pub name: &'static str,
+    /// Takes a value (`--p 8`) vs boolean switch (`--verbose`).
+    pub takes_value: bool,
+    /// Help string.
+    pub help: &'static str,
+}
+
+/// A set of accepted flags.
+#[derive(Clone, Debug, Default)]
+pub struct ArgSpec {
+    flags: Vec<Flag>,
+}
+
+/// Parsed flags: name → value ("true" for switches).
+#[derive(Clone, Debug, Default)]
+pub struct ParsedArgs {
+    values: BTreeMap<String, String>,
+}
+
+impl ParsedArgs {
+    /// Raw string value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    /// Parse a value as usize.
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CaError::Config(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    /// Parse a value as f64.
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CaError::Config(format!("--{name}: expected number, got '{v}'"))),
+        }
+    }
+
+    /// Parse a comma-separated usize list.
+    pub fn get_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim().parse::<usize>().map_err(|_| {
+                        CaError::Config(format!("--{name}: bad list element '{x}'"))
+                    })
+                })
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+
+    /// Parse a comma-separated f64 list.
+    pub fn get_f64_list(&self, name: &str) -> Result<Option<Vec<f64>>> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim().parse::<f64>().map_err(|_| {
+                        CaError::Config(format!("--{name}: bad list element '{x}'"))
+                    })
+                })
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+
+    /// True when a boolean switch was passed.
+    pub fn has(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+}
+
+impl ArgSpec {
+    /// Build a spec from flags.
+    pub fn new(flags: Vec<Flag>) -> Self {
+        ArgSpec { flags }
+    }
+
+    /// The shared flags of `run` (also embedded in `sweep`).
+    pub fn run_flags() -> ArgSpec {
+        ArgSpec::new(vec![
+            Flag { name: "config", takes_value: true, help: "TOML config file" },
+            Flag { name: "dataset", takes_value: true, help: "preset: abalone|susy|covtype|smoke" },
+            Flag { name: "scale-n", takes_value: true, help: "cap sample count (0 = full)" },
+            Flag { name: "p", takes_value: true, help: "processor count" },
+            Flag { name: "algo", takes_value: true, help: "sfista|spnm|ca-sfista|ca-spnm" },
+            Flag { name: "k", takes_value: true, help: "k-step parameter (1 = classical)" },
+            Flag { name: "q", takes_value: true, help: "SPNM inner iterations" },
+            Flag { name: "b", takes_value: true, help: "sampling rate in (0,1]" },
+            Flag { name: "lambda", takes_value: true, help: "L1 weight λ" },
+            Flag { name: "iters", takes_value: true, help: "iteration count T" },
+            Flag { name: "seed", takes_value: true, help: "master seed" },
+            Flag { name: "machine", takes_value: true, help: "comet|ethernet|zero-latency" },
+            Flag { name: "allreduce", takes_value: true, help: "tree|rd|ring" },
+            Flag { name: "artifacts", takes_value: true, help: "artifact dir (enables PJRT backend)" },
+            Flag { name: "record-every", takes_value: true, help: "history interval" },
+            Flag { name: "json", takes_value: false, help: "emit JSON report" },
+        ])
+    }
+
+    /// Parse argv.
+    pub fn parse(&self, argv: &[String]) -> Result<ParsedArgs> {
+        let mut out = ParsedArgs::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            let name = arg
+                .strip_prefix("--")
+                .ok_or_else(|| CaError::Config(format!("unexpected argument '{arg}'")))?;
+            let flag = self
+                .flags
+                .iter()
+                .find(|f| f.name == name)
+                .ok_or_else(|| CaError::Config(format!("unknown flag '--{name}'")))?;
+            if flag.takes_value {
+                let value = argv
+                    .get(i + 1)
+                    .ok_or_else(|| CaError::Config(format!("--{name} needs a value")))?;
+                out.values.insert(name.to_string(), value.clone());
+                i += 2;
+            } else {
+                out.values.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Help block for these flags.
+    pub fn describe(&self) -> String {
+        let mut s = String::new();
+        for f in &self.flags {
+            let arg = if f.takes_value {
+                format!("--{} <v>", f.name)
+            } else {
+                format!("--{}", f.name)
+            };
+            s.push_str(&format!("  {arg:<22} {}\n", f.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_switches() {
+        let spec = ArgSpec::run_flags();
+        let p = spec.parse(&sv(&["--p", "8", "--b", "0.1", "--json"])).unwrap();
+        assert_eq!(p.get_usize("p").unwrap(), Some(8));
+        assert_eq!(p.get_f64("b").unwrap(), Some(0.1));
+        assert!(p.has("json"));
+        assert!(!p.has("config"));
+        assert_eq!(p.get_usize("k").unwrap(), None);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing() {
+        let spec = ArgSpec::run_flags();
+        assert!(spec.parse(&sv(&["--bogus", "1"])).is_err());
+        assert!(spec.parse(&sv(&["--p"])).is_err());
+        assert!(spec.parse(&sv(&["p", "8"])).is_err());
+        assert!(spec.parse(&sv(&["--p", "x"])).unwrap().get_usize("p").is_err());
+    }
+
+    #[test]
+    fn lists_parse() {
+        let spec = ArgSpec::new(vec![
+            Flag { name: "p-list", takes_value: true, help: "" },
+            Flag { name: "b-list", takes_value: true, help: "" },
+        ]);
+        let p = spec.parse(&sv(&["--p-list", "1,2, 4", "--b-list", "0.1,0.5"])).unwrap();
+        assert_eq!(p.get_usize_list("p-list").unwrap(), Some(vec![1, 2, 4]));
+        assert_eq!(p.get_f64_list("b-list").unwrap(), Some(vec![0.1, 0.5]));
+        assert!(spec.parse(&sv(&["--p-list", "1,x"])).unwrap().get_usize_list("p-list").is_err());
+    }
+
+    #[test]
+    fn describe_lists_flags() {
+        let d = ArgSpec::run_flags().describe();
+        assert!(d.contains("--dataset"));
+        assert!(d.contains("--artifacts"));
+    }
+}

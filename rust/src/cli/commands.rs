@@ -1,0 +1,262 @@
+//! CLI subcommand implementations.
+
+use crate::cli::args::{ArgSpec, Flag, ParsedArgs};
+use crate::config::parse::TomlValue;
+use crate::config::spec::RunSpec;
+use crate::coordinator;
+use crate::datasets::registry;
+use crate::error::Result;
+use crate::metrics::report::{RunReport, SpeedupCell, SpeedupTable};
+use crate::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
+use crate::solvers::traits::SolverOutput;
+
+/// Build a [`RunSpec`] from `--config` + flag overrides.
+fn spec_from_args(p: &ParsedArgs) -> Result<RunSpec> {
+    let mut spec = match p.get("config") {
+        Some(path) => RunSpec::from_toml(&std::fs::read_to_string(path)?)?,
+        None => RunSpec::default(),
+    };
+    // Flag overrides reuse the config key-application logic.
+    let overrides: Vec<(&str, Option<TomlValue>)> = vec![
+        ("dataset", p.get("dataset").map(|v| TomlValue::Str(v.into()))),
+        ("scale_n", p.get_usize("scale-n")?.map(|v| TomlValue::Num(v as f64))),
+        ("p", p.get_usize("p")?.map(|v| TomlValue::Num(v as f64))),
+        ("algo", p.get("algo").map(|v| TomlValue::Str(v.into()))),
+        ("k", p.get_usize("k")?.map(|v| TomlValue::Num(v as f64))),
+        ("q", p.get_usize("q")?.map(|v| TomlValue::Num(v as f64))),
+        ("b", p.get_f64("b")?.map(TomlValue::Num)),
+        ("lambda", p.get_f64("lambda")?.map(TomlValue::Num)),
+        ("iters", p.get_usize("iters")?.map(|v| TomlValue::Num(v as f64))),
+        ("seed", p.get_usize("seed")?.map(|v| TomlValue::Num(v as f64))),
+        ("machine", p.get("machine").map(|v| TomlValue::Str(v.into()))),
+        ("allreduce", p.get("allreduce").map(|v| TomlValue::Str(v.into()))),
+        ("artifacts", p.get("artifacts").map(|v| TomlValue::Str(v.into()))),
+        ("record_every", p.get_usize("record-every")?.map(|v| TomlValue::Num(v as f64))),
+    ];
+    for (key, value) in overrides.into_iter() {
+        if let Some(v) = value {
+            spec.apply_kv(key, &v)?;
+        }
+    }
+    Ok(spec)
+}
+
+/// Execute one spec (choosing native or PJRT backend).
+pub fn execute_spec(spec: &RunSpec) -> Result<SolverOutput> {
+    let ds = registry::load_preset(&spec.dataset, spec.scale_n, spec.solver.seed)?;
+    match &spec.artifacts {
+        Some(dir) => {
+            let engine = PjrtEngine::load(std::path::Path::new(dir))?;
+            let backend = PjrtGramBackend::new(&engine);
+            coordinator::run_with_backend(
+                &ds, &spec.solver, spec.p, &spec.machine, spec.algo, &backend,
+            )
+        }
+        None => coordinator::run(&ds, &spec.solver, spec.p, &spec.machine, spec.algo),
+    }
+}
+
+/// `ca-prox run` — one configuration, one report.
+pub fn cmd_run(argv: &[String]) -> Result<()> {
+    let parsed = ArgSpec::run_flags().parse(argv)?;
+    let spec = spec_from_args(&parsed)?;
+    spec.solver.validate()?;
+    let out = execute_spec(&spec)?;
+    let report = RunReport {
+        dataset: spec.dataset.clone(),
+        p: spec.p,
+        k: spec.solver.k,
+        b: spec.solver.b,
+        machine: spec.machine.name.to_string(),
+        output: out,
+    };
+    if parsed.has("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        let o = &report.output;
+        println!("{}: dataset={} P={} k={} b={}", o.algorithm, report.dataset, report.p, report.k, report.b);
+        println!(
+            "  iterations={} objective={:.6e} rel_error={:.3e}",
+            o.iterations, o.final_objective, o.final_rel_error
+        );
+        println!(
+            "  modeled={:.4}s wall={:.3}s collective_rounds={}",
+            o.modeled_seconds, o.wall_seconds, o.trace.collective_rounds
+        );
+        if !o.history.is_empty() {
+            println!("{}", report.history_csv());
+        }
+    }
+    Ok(())
+}
+
+/// `ca-prox sweep` — (P, k) grid → speedup table (the shape of Figs. 4–6).
+pub fn cmd_sweep(argv: &[String]) -> Result<()> {
+    let flags = ArgSpec::new(vec![
+        Flag { name: "p-list", takes_value: true, help: "comma-separated P values" },
+        Flag { name: "k-list", takes_value: true, help: "comma-separated k values" },
+        Flag { name: "config", takes_value: true, help: "TOML config file" },
+        Flag { name: "dataset", takes_value: true, help: "preset name" },
+        Flag { name: "scale-n", takes_value: true, help: "cap sample count" },
+        Flag { name: "algo", takes_value: true, help: "sfista|spnm" },
+        Flag { name: "q", takes_value: true, help: "SPNM inner iterations" },
+        Flag { name: "b", takes_value: true, help: "sampling rate" },
+        Flag { name: "lambda", takes_value: true, help: "L1 weight" },
+        Flag { name: "iters", takes_value: true, help: "iteration count" },
+        Flag { name: "seed", takes_value: true, help: "master seed" },
+        Flag { name: "machine", takes_value: true, help: "machine model" },
+        Flag { name: "allreduce", takes_value: true, help: "collective algorithm" },
+        Flag { name: "artifacts", takes_value: true, help: "artifact dir" },
+        Flag { name: "json", takes_value: false, help: "emit JSON" },
+    ]);
+    let parsed = flags.parse(argv)?;
+    let base = spec_from_args(&parsed)?;
+    let p_list = parsed.get_usize_list("p-list")?.unwrap_or_else(|| vec![base.p]);
+    let k_list = parsed.get_usize_list("k-list")?.unwrap_or_else(|| vec![1, 8, 32]);
+    let mut table = SpeedupTable::new(&base.dataset);
+    for &p in &p_list {
+        let mut classical = base.clone();
+        classical.p = p;
+        classical.solver = classical.solver.with_k(1);
+        let baseline = execute_spec(&classical)?;
+        for &k in &k_list {
+            let mut ca = base.clone();
+            ca.p = p;
+            ca.solver = ca.solver.with_k(k);
+            let out = execute_spec(&ca)?;
+            table.push(SpeedupCell {
+                p,
+                k,
+                baseline_seconds: baseline.modeled_seconds,
+                ca_seconds: out.modeled_seconds,
+            });
+        }
+    }
+    println!("{}", table.render());
+    println!("{}", table.to_csv());
+    Ok(())
+}
+
+/// `ca-prox datagen` — write a synthetic preset to a LIBSVM file.
+pub fn cmd_datagen(argv: &[String]) -> Result<()> {
+    let flags = ArgSpec::new(vec![
+        Flag { name: "dataset", takes_value: true, help: "preset name" },
+        Flag { name: "scale-n", takes_value: true, help: "sample count" },
+        Flag { name: "seed", takes_value: true, help: "generator seed" },
+        Flag { name: "out", takes_value: true, help: "output path" },
+    ]);
+    let parsed = flags.parse(argv)?;
+    let name = parsed.get("dataset").unwrap_or("smoke");
+    let scale = parsed.get_usize("scale-n")?;
+    let seed = parsed.get_usize("seed")?.unwrap_or(42) as u64;
+    let out_path = parsed
+        .get("out")
+        .map(String::from)
+        .unwrap_or_else(|| format!("data/{name}.txt"));
+    let ds = registry::load_preset(name, scale, seed)?;
+    let mut text = String::new();
+    for c in 0..ds.n() {
+        text.push_str(&format!("{}", ds.y[c]));
+        let (ri, vs) = ds.x.col(c);
+        for (&r, &v) in ri.iter().zip(vs) {
+            text.push_str(&format!(" {}:{}", r + 1, v));
+        }
+        text.push('\n');
+    }
+    if let Some(parent) = std::path::Path::new(&out_path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&out_path, text)?;
+    println!("wrote {} samples (d={}) to {out_path}", ds.n(), ds.d());
+    Ok(())
+}
+
+/// `ca-prox info` — presets, machines, artifact status.
+pub fn cmd_info(argv: &[String]) -> Result<()> {
+    let flags = ArgSpec::new(vec![Flag {
+        name: "artifacts",
+        takes_value: true,
+        help: "artifact dir to inspect",
+    }]);
+    let parsed = flags.parse(argv)?;
+    println!("datasets (paper Table II):");
+    for p in registry::PRESETS {
+        println!(
+            "  {:<8} d={:<3} n={:<9} density={:.2}% λ={}",
+            p.name,
+            p.d,
+            p.n,
+            p.density * 100.0,
+            p.lambda
+        );
+    }
+    println!("\nmachine models (α-β-γ):");
+    for m in [
+        crate::comm::costmodel::MachineModel::comet(),
+        crate::comm::costmodel::MachineModel::ethernet(),
+        crate::comm::costmodel::MachineModel::zero_latency(),
+    ] {
+        println!("  {:<13} γ={:.1e} α={:.1e} β={:.1e}", m.name, m.gamma, m.alpha, m.beta);
+    }
+    println!("\nallreduce algorithms: tree, rd (recursive-doubling), ring");
+    let dir = parsed.get("artifacts").unwrap_or("artifacts");
+    match crate::runtime::artifact::ArtifactManifest::load(std::path::Path::new(dir)) {
+        Ok(m) => {
+            println!("\nartifacts in {dir}: {} entries", m.entries.len());
+            for e in &m.entries {
+                println!("  {:?} d={} m={} k={} q={} ({})", e.kind, e.d, e.m, e.k, e.q, e.file);
+            }
+        }
+        Err(e) => println!("\nartifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn run_smoke() {
+        cmd_run(&sv(&[
+            "--dataset", "smoke", "--scale-n", "300", "--p", "2", "--k", "4", "--iters", "8",
+            "--b", "0.5",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn run_json_smoke() {
+        cmd_run(&sv(&[
+            "--dataset", "smoke", "--scale-n", "200", "--p", "1", "--iters", "4", "--json",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn info_smoke() {
+        cmd_info(&[]).unwrap();
+    }
+
+    #[test]
+    fn datagen_roundtrip() {
+        let out = std::env::temp_dir().join("ca_prox_datagen_test.txt");
+        cmd_datagen(&sv(&[
+            "--dataset", "smoke", "--scale-n", "50", "--out", out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let ds = crate::datasets::libsvm::load_file(&out, 0).unwrap();
+        assert_eq!(ds.n(), 50);
+        std::fs::remove_file(&out).ok();
+    }
+
+    #[test]
+    fn bad_flags_error() {
+        assert!(cmd_run(&sv(&["--nope"])).is_err());
+        assert!(cmd_run(&sv(&["--dataset", "doesnotexist", "--iters", "1"])).is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! Command-line interface (from-scratch arg parsing — no `clap` offline).
+//!
+//! ```text
+//! ca-prox run      [--config FILE] [--dataset NAME] [--p N] [--k N] ...
+//! ca-prox sweep    --dataset NAME --p-list 1,2,4 --k-list 1,8,32 ...
+//! ca-prox datagen  --dataset NAME --scale-n N --out FILE
+//! ca-prox info     [--artifacts DIR]
+//! ca-prox help
+//! ```
+
+pub mod args;
+pub mod commands;
+
+use args::ArgSpec;
+
+/// Entry point used by `main`; returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> crate::error::Result<()> {
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let rest = if argv.is_empty() { &[] } else { &argv[1..] };
+    match cmd {
+        "run" => commands::cmd_run(rest),
+        "sweep" => commands::cmd_sweep(rest),
+        "datagen" => commands::cmd_datagen(rest),
+        "info" => commands::cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print!("{}", help_text());
+            Ok(())
+        }
+        other => Err(crate::error::CaError::Config(format!(
+            "unknown command '{other}'\n{}",
+            help_text()
+        ))),
+    }
+}
+
+/// Top-level help.
+pub fn help_text() -> String {
+    let mut s = String::from(
+        "ca-prox — communication-avoiding proximal methods (CA-SFISTA / CA-SPNM)\n\n\
+         USAGE: ca-prox <command> [flags]\n\nCOMMANDS:\n\
+         \x20 run      run one solver configuration and print a report\n\
+         \x20 sweep    run a (P, k) grid and print a speedup table\n\
+         \x20 datagen  generate a synthetic dataset file (LIBSVM format)\n\
+         \x20 info     print presets, machine models and artifact status\n\
+         \x20 help     this message\n\nRUN FLAGS:\n",
+    );
+    s.push_str(&ArgSpec::run_flags().describe());
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn help_exits_zero() {
+        assert_eq!(run(&["help".to_string()]), 0);
+    }
+
+    #[test]
+    fn unknown_command_exits_nonzero() {
+        assert_eq!(run(&["frobnicate".to_string()]), 1);
+    }
+
+    #[test]
+    fn help_mentions_all_commands() {
+        let h = help_text();
+        for cmd in ["run", "sweep", "datagen", "info"] {
+            assert!(h.contains(cmd));
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! The worker-pool execution engine.
+//!
+//! [`SimCluster::map_workers`] runs a per-worker closure over all P
+//! logical workers using up to `threads` real OS threads (crossbeam
+//! scoped threads — no `'static` bound needed, so closures can borrow the
+//! shards). It returns every worker's output plus the **maximum** flop
+//! count across workers — the critical-path value the α-β-γ clock
+//! charges, mirroring the paper's "costs over the critical path".
+
+use crate::comm::costmodel::MachineModel;
+use crate::comm::trace::{CostTrace, Phase};
+use crate::error::{CaError, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A simulated cluster: P logical workers on up to `threads` real threads.
+#[derive(Clone, Debug)]
+pub struct SimCluster {
+    /// Logical processor count (the paper's P, up to 1024).
+    pub p: usize,
+    /// Real threads used to execute worker closures.
+    pub threads: usize,
+    /// Machine model used for time charging.
+    pub machine: MachineModel,
+}
+
+impl SimCluster {
+    /// Cluster with default thread count = min(P, available cores).
+    pub fn new(p: usize, machine: MachineModel) -> Result<Self> {
+        if p == 0 {
+            return Err(CaError::Cluster("cluster needs at least one worker".into()));
+        }
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        Ok(SimCluster { p, threads: p.min(cores), machine })
+    }
+
+    /// Override the real thread count (1 = fully sequential, deterministic
+    /// scheduling; results are identical either way since workers share
+    /// nothing).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Run `f(worker_id) -> (output, flops)` on every logical worker.
+    /// Returns the outputs in worker order and charges the critical-path
+    /// (max) flop count to `phase` in `trace`.
+    pub fn map_workers<T, F>(
+        &self,
+        f: F,
+        phase: Phase,
+        trace: &mut CostTrace,
+    ) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<(T, u64)> + Sync,
+    {
+        let outputs: Vec<Mutex<Option<Result<(T, u64)>>>> =
+            (0..self.p).map(|_| Mutex::new(None)).collect();
+        if self.threads <= 1 || self.p == 1 {
+            for w in 0..self.p {
+                *outputs[w].lock().unwrap() = Some(f(w));
+            }
+        } else {
+            let next = AtomicUsize::new(0);
+            let nthreads = self.threads.min(self.p);
+            crossbeam_utils::thread::scope(|scope| {
+                for _ in 0..nthreads {
+                    scope.spawn(|_| loop {
+                        let w = next.fetch_add(1, Ordering::Relaxed);
+                        if w >= self.p {
+                            break;
+                        }
+                        let out = f(w);
+                        *outputs[w].lock().unwrap() = Some(out);
+                    });
+                }
+            })
+            .map_err(|_| CaError::Cluster("worker thread panicked".into()))?;
+        }
+        let mut results = Vec::with_capacity(self.p);
+        let mut max_flops = 0u64;
+        for (w, slot) in outputs.into_iter().enumerate() {
+            match slot.into_inner().unwrap() {
+                Some(Ok((t, flops))) => {
+                    max_flops = max_flops.max(flops);
+                    results.push(t);
+                }
+                Some(Err(e)) => return Err(e),
+                None => return Err(CaError::Cluster(format!("worker {w} produced no output"))),
+            }
+        }
+        trace.charge_flops(phase, max_flops as f64, &self.machine);
+        Ok(results)
+    }
+
+    /// Charge replicated (redundant-on-every-processor) compute: the
+    /// paper's update steps run identically on all P processors, so the
+    /// critical path sees them exactly once.
+    pub fn charge_replicated_flops(&self, flops: u64, phase: Phase, trace: &mut CostTrace) {
+        trace.charge_flops(phase, flops as f64, &self.machine);
+    }
+
+    /// Memory-bounded fill-and-reduce: every worker fills a private
+    /// buffer of `buf_len` f64s via `f(worker, &mut buf) -> flops`; the
+    /// buffers are summed elementwise **in ascending worker order**
+    /// (deterministic) into the returned accumulator.
+    ///
+    /// Only a window of `2 × threads` buffers is alive at once, so this
+    /// scales to P = 1024 workers with large Gram stacks where
+    /// materializing all P buffers for a physical collective would
+    /// exhaust memory. The caller charges the collective's modeled cost
+    /// separately (see [`crate::coordinator::kstep`]).
+    pub fn map_reduce_buffers<F>(
+        &self,
+        buf_len: usize,
+        f: F,
+        phase: Phase,
+        trace: &mut CostTrace,
+    ) -> Result<Vec<f64>>
+    where
+        F: Fn(usize, &mut [f64]) -> Result<u64> + Sync,
+    {
+        let window = (self.threads * 2).max(1);
+        let mut acc = vec![0.0f64; buf_len];
+        let mut max_flops = 0u64;
+        let mut start = 0usize;
+        while start < self.p {
+            let end = (start + window).min(self.p);
+            let outputs: Vec<Mutex<Option<Result<(Vec<f64>, u64)>>>> =
+                (start..end).map(|_| Mutex::new(None)).collect();
+            if self.threads <= 1 || end - start == 1 {
+                for w in start..end {
+                    let mut buf = vec![0.0f64; buf_len];
+                    let r = f(w, &mut buf).map(|fl| (buf, fl));
+                    *outputs[w - start].lock().unwrap() = Some(r);
+                }
+            } else {
+                let next = AtomicUsize::new(start);
+                crossbeam_utils::thread::scope(|scope| {
+                    for _ in 0..self.threads.min(end - start) {
+                        scope.spawn(|_| loop {
+                            let w = next.fetch_add(1, Ordering::Relaxed);
+                            if w >= end {
+                                break;
+                            }
+                            let mut buf = vec![0.0f64; buf_len];
+                            let r = f(w, &mut buf).map(|fl| (buf, fl));
+                            *outputs[w - start].lock().unwrap() = Some(r);
+                        });
+                    }
+                })
+                .map_err(|_| CaError::Cluster("worker thread panicked".into()))?;
+            }
+            for slot in outputs {
+                match slot.into_inner().unwrap() {
+                    Some(Ok((buf, flops))) => {
+                        max_flops = max_flops.max(flops);
+                        for (a, v) in acc.iter_mut().zip(&buf) {
+                            *a += v;
+                        }
+                    }
+                    Some(Err(e)) => return Err(e),
+                    None => return Err(CaError::Cluster("missing worker output".into())),
+                }
+            }
+            start = end;
+        }
+        trace.charge_flops(phase, max_flops as f64, &self.machine);
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn map_workers_in_order_and_charges_max() {
+        let cluster = SimCluster::new(8, MachineModel::custom(1.0, 0.0, 0.0)).unwrap();
+        let mut trace = CostTrace::new();
+        let out = cluster
+            .map_workers(|w| Ok((w * 10, (w + 1) as u64)), Phase::GramLocal, &mut trace)
+            .unwrap();
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+        // Max flops = 8 → γ=1 so seconds = 8.
+        assert_eq!(trace.phase(Phase::GramLocal).flops, 8.0);
+        assert_eq!(trace.phase(Phase::GramLocal).seconds, 8.0);
+    }
+
+    #[test]
+    fn sequential_and_parallel_agree() {
+        let machine = MachineModel::comet();
+        let run = |threads: usize| {
+            let cluster = SimCluster::new(16, machine).unwrap().with_threads(threads);
+            let mut trace = CostTrace::new();
+            let out = cluster
+                .map_workers(
+                    |w| {
+                        let v: f64 = (0..100).map(|i| ((w * 100 + i) as f64).sqrt()).sum();
+                        Ok((v, 100))
+                    },
+                    Phase::GramLocal,
+                    &mut trace,
+                )
+                .unwrap();
+            (out, trace.phase(Phase::GramLocal).flops)
+        };
+        let (seq, f_seq) = run(1);
+        let (par, f_par) = run(8);
+        assert_eq!(seq, par);
+        assert_eq!(f_seq, f_par);
+    }
+
+    #[test]
+    fn worker_error_propagates() {
+        let cluster = SimCluster::new(4, MachineModel::comet()).unwrap().with_threads(1);
+        let mut trace = CostTrace::new();
+        let r: Result<Vec<u32>> = cluster.map_workers(
+            |w| {
+                if w == 2 {
+                    Err(CaError::Solver("boom".into()))
+                } else {
+                    Ok((w as u32, 0))
+                }
+            },
+            Phase::Update,
+            &mut trace,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        assert!(SimCluster::new(0, MachineModel::comet()).is_err());
+    }
+
+    #[test]
+    fn prop_large_virtual_p_works() {
+        prop_check("virtual P up to 1024 executes", 5, |g| {
+            let p = g.usize_in(500, 1024);
+            let cluster = SimCluster::new(p, MachineModel::comet()).unwrap();
+            let mut trace = CostTrace::new();
+            let out = cluster
+                .map_workers(|w| Ok((w, 1)), Phase::GramLocal, &mut trace)
+                .map_err(|e| e.to_string())?;
+            if out.len() != p || out.iter().enumerate().any(|(i, &w)| i != w) {
+                return Err("output order broken".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,16 @@
+//! Shared-nothing simulated cluster.
+//!
+//! The paper ran on XSEDE Comet with MPI over 1–1024 nodes; this module
+//! is the substitution (DESIGN.md §2): `P` *logical* workers, each owning
+//! only its column shard of the data ([`shard`]), executed on up to
+//! `min(P, cores)` real threads ([`engine`]). The numerics are exactly
+//! those of the distributed algorithm — a worker can only touch its own
+//! shard, and cross-worker data flows exclusively through the collectives
+//! in [`crate::comm`] — while time is charged to the α-β-γ model along
+//! the critical path.
+
+pub mod engine;
+pub mod shard;
+
+pub use engine::SimCluster;
+pub use shard::{ShardedDataset, WorkerShard};

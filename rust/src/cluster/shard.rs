@@ -1,0 +1,130 @@
+//! Column shards: each worker's private slice of the dataset.
+
+use crate::datasets::Dataset;
+use crate::error::Result;
+use crate::matrix::csc::CscMatrix;
+use crate::matrix::partition::{contiguous_by_nnz, greedy_by_nnz, ColumnPartition};
+
+/// Partitioning strategy for distributing columns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Contiguous ranges balanced by nnz (MPI-scatter style).
+    Contiguous,
+    /// Greedy LPT balance (tightest nnz balance).
+    Greedy,
+}
+
+/// One worker's private data: its columns of X and entries of y.
+#[derive(Clone, Debug)]
+pub struct WorkerShard {
+    /// Worker id.
+    pub worker: usize,
+    /// Local column submatrix (d × n_local).
+    pub x: CscMatrix,
+    /// Labels for the local columns (n_local).
+    pub y: Vec<f64>,
+    /// Map local column index → global column index.
+    pub global_cols: Vec<usize>,
+}
+
+/// The dataset split column-wise over P workers, plus the global lookup
+/// tables the sampling schedule needs.
+#[derive(Clone, Debug)]
+pub struct ShardedDataset {
+    /// Per-worker shards, length P.
+    pub shards: Vec<WorkerShard>,
+    /// Global column → owning worker.
+    pub owner: Vec<usize>,
+    /// Global column → local index within its owner.
+    pub local_index: Vec<usize>,
+    /// Feature dimension d.
+    pub d: usize,
+    /// Total samples n.
+    pub n: usize,
+}
+
+impl ShardedDataset {
+    /// Partition a dataset over `p` workers.
+    pub fn new(ds: &Dataset, p: usize, strategy: PartitionStrategy) -> Result<Self> {
+        let part: ColumnPartition = match strategy {
+            PartitionStrategy::Contiguous => contiguous_by_nnz(&ds.x, p),
+            PartitionStrategy::Greedy => greedy_by_nnz(&ds.x, p),
+        };
+        let n = ds.x.cols();
+        let mut local_index = vec![0usize; n];
+        let mut shards = Vec::with_capacity(p);
+        for (w, members) in part.members.iter().enumerate() {
+            for (li, &c) in members.iter().enumerate() {
+                local_index[c] = li;
+            }
+            let x = ds.x.gather_cols(members);
+            let y: Vec<f64> = members.iter().map(|&c| ds.y[c]).collect();
+            shards.push(WorkerShard { worker: w, x, y, global_cols: members.clone() });
+        }
+        Ok(ShardedDataset { shards, owner: part.owner, local_index, d: ds.x.rows(), n })
+    }
+
+    /// Number of workers.
+    pub fn p(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Max / mean nnz imbalance across shards (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let nnz: Vec<usize> = self.shards.iter().map(|s| s.x.nnz()).collect();
+        let total: usize = nnz.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / nnz.len() as f64;
+        *nnz.iter().max().unwrap() as f64 / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synthetic::{generate, SyntheticSpec};
+
+    fn small_ds() -> Dataset {
+        generate(&SyntheticSpec { d: 6, n: 40, density: 0.5, noise: 0.01, model_sparsity: 0.5, condition: 1.0 }, 3)
+    }
+
+    #[test]
+    fn shards_cover_dataset() {
+        let ds = small_ds();
+        for strategy in [PartitionStrategy::Contiguous, PartitionStrategy::Greedy] {
+            let sh = ShardedDataset::new(&ds, 4, strategy).unwrap();
+            assert_eq!(sh.p(), 4);
+            let total_cols: usize = sh.shards.iter().map(|s| s.x.cols()).sum();
+            assert_eq!(total_cols, ds.x.cols());
+            // Every shard column matches the global data exactly.
+            for shard in &sh.shards {
+                for (li, &gc) in shard.global_cols.iter().enumerate() {
+                    assert_eq!(sh.owner[gc], shard.worker);
+                    assert_eq!(sh.local_index[gc], li);
+                    assert_eq!(shard.y[li], ds.y[gc]);
+                    let (ri_l, vs_l) = shard.x.col(li);
+                    let (ri_g, vs_g) = ds.x.col(gc);
+                    assert_eq!(ri_l, ri_g);
+                    assert_eq!(vs_l, vs_g);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_owns_everything() {
+        let ds = small_ds();
+        let sh = ShardedDataset::new(&ds, 1, PartitionStrategy::Contiguous).unwrap();
+        assert_eq!(sh.shards[0].x.cols(), ds.x.cols());
+        assert!((sh.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn greedy_imbalance_reasonable() {
+        let ds = small_ds();
+        let sh = ShardedDataset::new(&ds, 5, PartitionStrategy::Greedy).unwrap();
+        assert!(sh.imbalance() < 1.6, "imbalance {}", sh.imbalance());
+    }
+}

@@ -1,0 +1,406 @@
+//! Collective operations over the simulated fabric.
+//!
+//! Each algorithm physically combines the per-worker buffers — round by
+//! round, in the same combination order a real MPI implementation would
+//! use — and charges the **critical-path** communication cost into a
+//! [`CostTrace`]. All-reduce is *the* communication kernel of the paper:
+//! classical SFISTA/SPNM call it every iteration on `(d² + d)` words;
+//! the CA variants call it every k iterations on `k·(d² + d)` words.
+//!
+//! Per-processor critical-path costs charged (w = words per buffer):
+//!
+//! | algorithm            | messages (L)    | words (W)          | flops (F) |
+//! |----------------------|-----------------|--------------------|-----------|
+//! | binomial tree        | 2⌈log2 P⌉       | 2⌈log2 P⌉·w        | ⌈log2 P⌉·w |
+//! | recursive doubling   | ⌈log2 P⌉ (+2)   | ⌈log2 P⌉·w (+2w)   | ⌈log2 P⌉·w |
+//! | ring (reduce-scatter + allgather) | 2(P−1) | 2w(P−1)/P     | w(P−1)/P  |
+//!
+//! The (+2) terms are the pre/post folding rounds recursive doubling
+//! needs for non-power-of-two P. The paper's Theorems 1–4 use the
+//! `O(log P)` latency / `O(w log P)` bandwidth form — recursive doubling
+//! — which is the default.
+
+use crate::comm::costmodel::MachineModel;
+use crate::comm::topology::{binomial_children, binomial_parent, ceil_log2, floor_pow2};
+use crate::comm::trace::{CostTrace, Phase};
+use crate::error::{CaError, Result};
+
+/// All-reduce algorithm selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllReduceAlgo {
+    /// Reduce to root over a binomial tree, then broadcast back.
+    BinomialTree,
+    /// Hypercube exchange; latency-optimal at log2 P rounds.
+    RecursiveDoubling,
+    /// Reduce-scatter + all-gather ring; bandwidth-optimal.
+    Ring,
+}
+
+impl AllReduceAlgo {
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "tree" | "binomial" => Ok(AllReduceAlgo::BinomialTree),
+            "rd" | "recursive-doubling" | "recursive_doubling" => {
+                Ok(AllReduceAlgo::RecursiveDoubling)
+            }
+            "ring" => Ok(AllReduceAlgo::Ring),
+            other => Err(CaError::Config(format!("unknown allreduce algorithm '{other}'"))),
+        }
+    }
+
+    /// Stable name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllReduceAlgo::BinomialTree => "binomial-tree",
+            AllReduceAlgo::RecursiveDoubling => "recursive-doubling",
+            AllReduceAlgo::Ring => "ring",
+        }
+    }
+
+    /// Analytic per-processor critical-path cost `(messages, words, flops)`
+    /// of one all-reduce of `w` words over `p` processors.
+    pub fn critical_path_cost(&self, p: usize, w: usize) -> (f64, f64, f64) {
+        if p <= 1 {
+            return (0.0, 0.0, 0.0);
+        }
+        let lg = ceil_log2(p) as f64;
+        let wf = w as f64;
+        let pf = p as f64;
+        match self {
+            AllReduceAlgo::BinomialTree => (2.0 * lg, 2.0 * lg * wf, lg * wf),
+            AllReduceAlgo::RecursiveDoubling => {
+                let extra = if crate::comm::topology::is_pow2(p) { 0.0 } else { 2.0 };
+                (lg + extra, (lg + extra) * wf, (lg + extra.min(1.0)) * wf)
+            }
+            AllReduceAlgo::Ring => {
+                let rounds = 2.0 * (pf - 1.0);
+                (rounds, 2.0 * wf * (pf - 1.0) / pf, wf * (pf - 1.0) / pf)
+            }
+        }
+    }
+}
+
+/// All-reduce (sum) across the per-worker buffers; afterwards every
+/// buffer holds the elementwise sum. Charges critical-path cost into
+/// `trace` and counts one collective round.
+///
+/// The combination *order* is fixed by the algorithm and `p` alone, so a
+/// run is bit-reproducible and classical-vs-CA comparisons at equal `p`
+/// are exact.
+pub fn allreduce_sum(
+    buffers: &mut [Vec<f64>],
+    algo: AllReduceAlgo,
+    machine: &MachineModel,
+    trace: &mut CostTrace,
+) -> Result<()> {
+    let p = buffers.len();
+    if p == 0 {
+        return Err(CaError::Cluster("allreduce over zero workers".into()));
+    }
+    let w = buffers[0].len();
+    if buffers.iter().any(|b| b.len() != w) {
+        return Err(CaError::Shape("allreduce buffers differ in length".into()));
+    }
+    if p > 1 {
+        match algo {
+            AllReduceAlgo::BinomialTree => tree_allreduce(buffers),
+            AllReduceAlgo::RecursiveDoubling => recursive_doubling(buffers),
+            AllReduceAlgo::Ring => ring_allreduce(buffers),
+        }
+    }
+    let (msgs, words, flops) = algo.critical_path_cost(p, w);
+    trace.charge_comm(Phase::Collective, msgs, words, machine);
+    trace.charge_flops(Phase::Collective, flops, machine);
+    trace.count_collective_round();
+    Ok(())
+}
+
+/// Binomial-tree reduce to rank 0, then broadcast. Children are combined
+/// into parents in deterministic (ascending-child) order.
+fn tree_allreduce(buffers: &mut [Vec<f64>]) {
+    let p = buffers.len();
+    // Reduce up the tree: deepest ranks first. Process ranks in descending
+    // order; each non-root rank adds its buffer into its parent. Because
+    // children have higher rank than their parent in a binomial tree, a
+    // descending sweep performs a correct bottom-up reduction.
+    for rank in (1..p).rev() {
+        let parent = binomial_parent(rank);
+        let (lo, hi) = buffers.split_at_mut(rank);
+        let src = &hi[0];
+        let dst = &mut lo[parent];
+        for (d, s) in dst.iter_mut().zip(src.iter()) {
+            *d += s;
+        }
+    }
+    // Broadcast down: copy root's buffer along tree edges.
+    let mut order = vec![0usize];
+    let mut i = 0;
+    while i < order.len() {
+        let r = order[i];
+        for c in binomial_children(r, p) {
+            order.push(c);
+        }
+        i += 1;
+    }
+    for &r in order.iter().skip(1) {
+        let root = buffers[0].clone();
+        buffers[r].copy_from_slice(&root);
+    }
+}
+
+/// Recursive-doubling all-reduce; non-power-of-two P handled by folding
+/// the top `p − 2^⌊log2 p⌋` ranks into partners first (MPICH scheme).
+fn recursive_doubling(buffers: &mut [Vec<f64>]) {
+    let p = buffers.len();
+    let p2 = floor_pow2(p);
+    let rem = p - p2;
+    // Pre-fold: ranks p2..p send into (rank − p2).
+    for r in p2..p {
+        let (lo, hi) = buffers.split_at_mut(p2);
+        let src = &hi[r - p2];
+        let dst = &mut lo[r - p2];
+        for (d, s) in dst.iter_mut().zip(src.iter()) {
+            *d += s;
+        }
+    }
+    // Hypercube exchange among the first p2 ranks. Each round pairs
+    // r ↔ r^dist; after the exchange both hold the pair's sum, so we
+    // can combine in place pair-by-pair with one scratch copy per pair
+    // (hot path: no full-fabric snapshot — see EXPERIMENTS.md §Perf).
+    let mut dist = 1usize;
+    let mut scratch = vec![0.0f64; buffers[0].len()];
+    while dist < p2 {
+        for r in 0..p2 {
+            let partner = r ^ dist;
+            if partner < r {
+                continue; // handled when we visited the lower rank
+            }
+            let (lo, hi) = buffers.split_at_mut(partner);
+            let a = &mut lo[r];
+            let b = &mut hi[0];
+            scratch.copy_from_slice(a);
+            for ((av, bv), sv) in a.iter_mut().zip(b.iter_mut()).zip(scratch.iter()) {
+                *av += *bv;
+                *bv += *sv;
+            }
+        }
+        dist <<= 1;
+    }
+    // Post-fold: results copied back out to ranks p2..p.
+    for r in p2..p {
+        let src = buffers[r - p2].clone();
+        buffers[r].copy_from_slice(&src);
+    }
+    let _ = rem;
+}
+
+/// Ring all-reduce: reduce-scatter then all-gather over w/P chunks.
+fn ring_allreduce(buffers: &mut [Vec<f64>]) {
+    let p = buffers.len();
+    let w = buffers[0].len();
+    if w == 0 {
+        return;
+    }
+    // Chunk c boundaries.
+    let bounds: Vec<(usize, usize)> = (0..p)
+        .map(|c| {
+            let s = c * w / p;
+            let e = (c + 1) * w / p;
+            (s, e)
+        })
+        .collect();
+    // Reduce-scatter: after P−1 steps, rank r owns the full sum of chunk
+    // (r+1) mod p. Step s: rank r sends chunk (r − s) mod p to rank r+1.
+    //
+    // Each step only *reads* the chunk a rank is about to pass on, so a
+    // scratch copy of the in-flight chunks (w words total, not P·w)
+    // replaces the former full-fabric snapshot (EXPERIMENTS.md §Perf).
+    let mut scratch = vec![0.0f64; w];
+    for step in 0..p - 1 {
+        // Snapshot the chunk each sender transmits this step.
+        for sender in 0..p {
+            let chunk = (sender + p - step) % p;
+            let (s, e) = bounds[chunk];
+            scratch[s..e].copy_from_slice(&buffers[sender][s..e]);
+        }
+        for r in 0..p {
+            let sender = (r + p - 1) % p;
+            let chunk = (sender + p - step) % p;
+            let (s, e) = bounds[chunk];
+            // scratch holds sender's pre-step chunk values; chunks are
+            // disjoint per sender, so scratch[s..e] is exactly sender's.
+            let dst = &mut buffers[r][s..e];
+            for (d, v) in dst.iter_mut().zip(scratch[s..e].iter()) {
+                *d += v;
+            }
+        }
+    }
+    // All-gather: circulate the completed chunks.
+    for step in 0..p - 1 {
+        for sender in 0..p {
+            let chunk = (sender + 1 + p - step) % p;
+            let (s, e) = bounds[chunk];
+            scratch[s..e].copy_from_slice(&buffers[sender][s..e]);
+        }
+        for r in 0..p {
+            let sender = (r + p - 1) % p;
+            let chunk = (sender + 1 + p - step) % p;
+            let (s, e) = bounds[chunk];
+            buffers[r][s..e].copy_from_slice(&scratch[s..e]);
+        }
+    }
+}
+
+/// Broadcast rank 0's buffer to all workers (binomial tree), charging
+/// critical-path cost.
+pub fn broadcast(
+    buffers: &mut [Vec<f64>],
+    machine: &MachineModel,
+    trace: &mut CostTrace,
+) -> Result<()> {
+    let p = buffers.len();
+    if p == 0 {
+        return Err(CaError::Cluster("broadcast over zero workers".into()));
+    }
+    let w = buffers[0].len();
+    if buffers.iter().any(|b| b.len() != w) {
+        return Err(CaError::Shape("broadcast buffers differ in length".into()));
+    }
+    let root = buffers[0].clone();
+    for b in buffers.iter_mut().skip(1) {
+        b.copy_from_slice(&root);
+    }
+    if p > 1 {
+        let lg = ceil_log2(p) as f64;
+        trace.charge_comm(Phase::Collective, lg, lg * w as f64, machine);
+        trace.count_collective_round();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    const ALGOS: [AllReduceAlgo; 3] =
+        [AllReduceAlgo::BinomialTree, AllReduceAlgo::RecursiveDoubling, AllReduceAlgo::Ring];
+
+    fn serial_sum(buffers: &[Vec<f64>]) -> Vec<f64> {
+        let w = buffers[0].len();
+        let mut s = vec![0.0; w];
+        for b in buffers {
+            for (acc, v) in s.iter_mut().zip(b) {
+                *acc += v;
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn allreduce_small_exact() {
+        for algo in ALGOS {
+            let mut bufs = vec![vec![1.0, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+            let mut trace = CostTrace::new();
+            allreduce_sum(&mut bufs, algo, &MachineModel::comet(), &mut trace).unwrap();
+            for b in &bufs {
+                assert_eq!(b, &vec![111.0, 222.0], "{algo:?}");
+            }
+            assert_eq!(trace.collective_rounds, 1);
+            assert!(trace.phase(Phase::Collective).messages > 0.0);
+        }
+    }
+
+    #[test]
+    fn allreduce_single_worker_is_noop() {
+        for algo in ALGOS {
+            let mut bufs = vec![vec![7.0, 8.0]];
+            let mut trace = CostTrace::new();
+            allreduce_sum(&mut bufs, algo, &MachineModel::comet(), &mut trace).unwrap();
+            assert_eq!(bufs[0], vec![7.0, 8.0]);
+            assert_eq!(trace.phase(Phase::Collective).messages, 0.0);
+        }
+    }
+
+    #[test]
+    fn allreduce_rejects_mismatched() {
+        let mut bufs = vec![vec![1.0], vec![1.0, 2.0]];
+        let mut trace = CostTrace::new();
+        assert!(allreduce_sum(
+            &mut bufs,
+            AllReduceAlgo::Ring,
+            &MachineModel::comet(),
+            &mut trace
+        )
+        .is_err());
+        let mut empty: Vec<Vec<f64>> = vec![];
+        assert!(allreduce_sum(
+            &mut empty,
+            AllReduceAlgo::Ring,
+            &MachineModel::comet(),
+            &mut trace
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn prop_allreduce_equals_serial_sum() {
+        prop_check("allreduce == serial sum for every algorithm and P", 60, |g| {
+            let p = g.usize_in(1, 33);
+            let w = g.usize_in(1, 40);
+            let bufs: Vec<Vec<f64>> = (0..p).map(|_| g.vec_f64(w, -10.0, 10.0)).collect();
+            let expect = serial_sum(&bufs);
+            for algo in ALGOS {
+                let mut b = bufs.clone();
+                let mut trace = CostTrace::new();
+                allreduce_sum(&mut b, algo, &MachineModel::comet(), &mut trace).unwrap();
+                for (r, buf) in b.iter().enumerate() {
+                    for (i, (&got, &want)) in buf.iter().zip(&expect).enumerate() {
+                        if (got - want).abs() > 1e-9 * (1.0 + want.abs()) {
+                            return Err(format!(
+                                "{algo:?} p={p} w={w}: rank {r} elem {i}: {got} vs {want}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cost_model_shapes() {
+        // Latency: ring >> tree ~ rd; bandwidth: ring < rd < tree (large P).
+        let p = 64;
+        let w = 1000;
+        let (l_tree, w_tree, _) = AllReduceAlgo::BinomialTree.critical_path_cost(p, w);
+        let (l_rd, w_rd, _) = AllReduceAlgo::RecursiveDoubling.critical_path_cost(p, w);
+        let (l_ring, w_ring, _) = AllReduceAlgo::Ring.critical_path_cost(p, w);
+        assert_eq!(l_rd, 6.0);
+        assert_eq!(l_tree, 12.0);
+        assert_eq!(l_ring, 126.0);
+        assert!(w_ring < w_rd && w_rd < w_tree);
+        // Ring words ≈ 2w for large P.
+        assert!((w_ring - 2.0 * 1000.0 * 63.0 / 64.0).abs() < 1e-9);
+        // P = 1: free.
+        assert_eq!(AllReduceAlgo::Ring.critical_path_cost(1, w), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn broadcast_copies_root() {
+        let mut bufs = vec![vec![5.0, 6.0], vec![0.0, 0.0], vec![1.0, 1.0]];
+        let mut trace = CostTrace::new();
+        broadcast(&mut bufs, &MachineModel::comet(), &mut trace).unwrap();
+        assert!(bufs.iter().all(|b| b == &vec![5.0, 6.0]));
+        assert_eq!(trace.collective_rounds, 1);
+    }
+
+    #[test]
+    fn recursive_doubling_charges_extra_for_non_pow2() {
+        let (l_8, _, _) = AllReduceAlgo::RecursiveDoubling.critical_path_cost(8, 10);
+        let (l_9, _, _) = AllReduceAlgo::RecursiveDoubling.critical_path_cost(9, 10);
+        assert_eq!(l_8, 3.0);
+        assert_eq!(l_9, 6.0); // ⌈log2 9⌉ = 4 plus 2 folding rounds
+    }
+}

@@ -1,0 +1,22 @@
+//! Communication substrate: the α-β-γ machine model, collective
+//! operations over an in-memory message fabric, and cost tracing.
+//!
+//! The paper analyzes algorithms under the α-β model (§II-C):
+//!
+//! ```text
+//!   T = γ·F + α·L + β·W
+//! ```
+//!
+//! where F = flops, L = messages, W = words. The collectives here do the
+//! *real* data movement and reduction (so numerics are trustworthy) while
+//! charging modeled cost per step into a [`trace::CostTrace`] — the
+//! evidence stream for Table I and the execution-time figures.
+
+pub mod collectives;
+pub mod costmodel;
+pub mod topology;
+pub mod trace;
+
+pub use collectives::{allreduce_sum, AllReduceAlgo};
+pub use costmodel::MachineModel;
+pub use trace::{CostTrace, Phase};

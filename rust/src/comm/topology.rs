@@ -1,0 +1,127 @@
+//! Process-topology helpers used by the collective algorithms:
+//! binomial trees and hypercube partners.
+
+/// ⌈log2(p)⌉ for p ≥ 1.
+pub fn ceil_log2(p: usize) -> u32 {
+    assert!(p >= 1);
+    (usize::BITS - (p - 1).leading_zeros()).min(usize::BITS)
+}
+
+/// True if p is a power of two.
+pub fn is_pow2(p: usize) -> bool {
+    p >= 1 && p & (p - 1) == 0
+}
+
+/// Largest power of two ≤ p.
+pub fn floor_pow2(p: usize) -> usize {
+    assert!(p >= 1);
+    1usize << (usize::BITS - 1 - p.leading_zeros())
+}
+
+/// Binomial-tree parent of `rank` in a tree rooted at 0 over p ranks:
+/// parent clears the lowest set bit.
+pub fn binomial_parent(rank: usize) -> usize {
+    assert!(rank > 0, "root has no parent");
+    rank & (rank - 1)
+}
+
+/// Children of `rank` in the binomial tree over p ranks.
+pub fn binomial_children(rank: usize, p: usize) -> Vec<usize> {
+    let mut children = Vec::new();
+    let mut bit = 1usize;
+    // Children are rank | bit for bits above rank's lowest set bit (or all
+    // bits for the root) while staying < p.
+    let low = if rank == 0 { usize::MAX } else { rank & rank.wrapping_neg() };
+    while bit < p {
+        if bit >= low {
+            break;
+        }
+        let child = rank | bit;
+        if child != rank && child < p {
+            children.push(child);
+        }
+        bit <<= 1;
+    }
+    children
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+    }
+
+    #[test]
+    fn pow2_helpers() {
+        assert!(is_pow2(1) && is_pow2(64));
+        assert!(!is_pow2(12));
+        assert_eq!(floor_pow2(12), 8);
+        assert_eq!(floor_pow2(8), 8);
+        assert_eq!(floor_pow2(1), 1);
+    }
+
+    #[test]
+    fn binomial_tree_structure() {
+        // p = 8 rooted at 0: 1,2,4 are children of 0; 3 of 2; 5 of 4 ...
+        assert_eq!(binomial_parent(1), 0);
+        assert_eq!(binomial_parent(5), 4);
+        assert_eq!(binomial_parent(6), 4);
+        assert_eq!(binomial_parent(7), 6);
+        assert_eq!(binomial_children(0, 8), vec![1, 2, 4]);
+        assert_eq!(binomial_children(2, 8), vec![3]);
+        assert_eq!(binomial_children(4, 8), vec![5, 6]);
+        assert_eq!(binomial_children(7, 8), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn prop_tree_is_spanning() {
+        prop_check("binomial tree spans all ranks exactly once", 30, |g| {
+            let p = g.usize_in(1, 300);
+            let mut seen = vec![false; p];
+            seen[0] = true;
+            let mut frontier = vec![0usize];
+            while let Some(r) = frontier.pop() {
+                for c in binomial_children(r, p) {
+                    if seen[c] {
+                        return Err(format!("rank {c} reached twice (p={p})"));
+                    }
+                    if binomial_parent(c) != r {
+                        return Err(format!("parent({c}) != {r}"));
+                    }
+                    seen[c] = true;
+                    frontier.push(c);
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err(format!("tree does not span p={p}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_tree_depth_is_log() {
+        prop_check("binomial tree depth ≤ ⌈log2 p⌉", 30, |g| {
+            let p = g.usize_in(1, 1024);
+            let rank = g.usize_in(0, p - 1);
+            let mut depth = 0;
+            let mut r = rank;
+            while r != 0 {
+                r = binomial_parent(r);
+                depth += 1;
+            }
+            if depth > ceil_log2(p) as usize {
+                return Err(format!("depth {depth} > log2({p})"));
+            }
+            Ok(())
+        });
+    }
+}

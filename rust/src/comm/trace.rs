@@ -1,0 +1,244 @@
+//! Cost tracing: the measured-counter stream behind Table I and every
+//! execution-time figure.
+//!
+//! A [`CostTrace`] accumulates flops / messages / words / modeled seconds
+//! per [`Phase`]. Solvers charge their local compute and the collectives
+//! charge communication; benches read the totals back and fit them
+//! against the paper's analytic formulas.
+
+use crate::comm::costmodel::MachineModel;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Execution phase labels used across solvers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Sampled Gram computation (local flops).
+    GramLocal,
+    /// Collective communication (all-reduce / broadcast).
+    Collective,
+    /// Redundant replicated update (gradient + prox + momentum).
+    Update,
+    /// Inner first-order solve (SPNM's Q iterations).
+    InnerSolve,
+    /// Data loading / partitioning (one-time, excluded from per-iteration costs).
+    Setup,
+}
+
+impl Phase {
+    /// Stable string form for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::GramLocal => "gram_local",
+            Phase::Collective => "collective",
+            Phase::Update => "update",
+            Phase::InnerSolve => "inner_solve",
+            Phase::Setup => "setup",
+        }
+    }
+}
+
+/// Counters for one phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseCost {
+    /// Floating point operations.
+    pub flops: f64,
+    /// Messages sent (latency count, critical path).
+    pub messages: f64,
+    /// Words moved (8-byte words, critical path).
+    pub words: f64,
+    /// Modeled seconds (γF + αL + βW accumulated as charged).
+    pub seconds: f64,
+}
+
+impl PhaseCost {
+    fn add(&mut self, other: &PhaseCost) {
+        self.flops += other.flops;
+        self.messages += other.messages;
+        self.words += other.words;
+        self.seconds += other.seconds;
+    }
+}
+
+/// Accumulated cost trace for one run (critical-path semantics: the
+/// charged values are per-processor along the slowest path, matching the
+/// paper's "costs over the critical path").
+#[derive(Clone, Debug, Default)]
+pub struct CostTrace {
+    phases: BTreeMap<Phase, PhaseCost>,
+    /// Number of collective operations performed (each may be several
+    /// messages) — the "number of synchronization rounds".
+    pub collective_rounds: u64,
+}
+
+impl CostTrace {
+    /// Empty trace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge `flops` local arithmetic to a phase under a machine model.
+    pub fn charge_flops(&mut self, phase: Phase, flops: f64, machine: &MachineModel) {
+        let e = self.phases.entry(phase).or_default();
+        e.flops += flops;
+        e.seconds += machine.gamma * flops;
+    }
+
+    /// Charge communication (messages + words) to a phase.
+    pub fn charge_comm(
+        &mut self,
+        phase: Phase,
+        messages: f64,
+        words: f64,
+        machine: &MachineModel,
+    ) {
+        let e = self.phases.entry(phase).or_default();
+        e.messages += messages;
+        e.words += words;
+        e.seconds += machine.alpha * messages + machine.beta * words;
+    }
+
+    /// Charge raw wall seconds (e.g. setup I/O) without counters.
+    pub fn charge_seconds(&mut self, phase: Phase, seconds: f64) {
+        self.phases.entry(phase).or_default().seconds += seconds;
+    }
+
+    /// Count one collective round.
+    pub fn count_collective_round(&mut self) {
+        self.collective_rounds += 1;
+    }
+
+    /// Cost of a single phase.
+    pub fn phase(&self, phase: Phase) -> PhaseCost {
+        self.phases.get(&phase).copied().unwrap_or_default()
+    }
+
+    /// Total across phases.
+    pub fn total(&self) -> PhaseCost {
+        let mut t = PhaseCost::default();
+        for c in self.phases.values() {
+            t.add(c);
+        }
+        t
+    }
+
+    /// Total excluding one-time setup — the per-run steady-state cost the
+    /// paper's theorems describe.
+    pub fn total_steady(&self) -> PhaseCost {
+        let mut t = self.total();
+        let s = self.phase(Phase::Setup);
+        t.flops -= s.flops;
+        t.messages -= s.messages;
+        t.words -= s.words;
+        t.seconds -= s.seconds;
+        t
+    }
+
+    /// Merge another trace (summing counters), used when combining the
+    /// leader's trace with the critical-path worker trace.
+    pub fn merge(&mut self, other: &CostTrace) {
+        for (p, c) in &other.phases {
+            self.phases.entry(*p).or_default().add(c);
+        }
+        self.collective_rounds += other.collective_rounds;
+    }
+
+    /// Take the elementwise max per phase — critical-path combination
+    /// across workers ("slowest processor" semantics).
+    pub fn merge_max(&mut self, other: &CostTrace) {
+        for (p, c) in &other.phases {
+            let e = self.phases.entry(*p).or_default();
+            e.flops = e.flops.max(c.flops);
+            e.messages = e.messages.max(c.messages);
+            e.words = e.words.max(c.words);
+            e.seconds = e.seconds.max(c.seconds);
+        }
+        self.collective_rounds = self.collective_rounds.max(other.collective_rounds);
+    }
+
+    /// JSON report (per-phase + totals).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (p, c) in &self.phases {
+            obj.insert(
+                p.name().to_string(),
+                Json::obj(vec![
+                    ("flops", Json::Num(c.flops)),
+                    ("messages", Json::Num(c.messages)),
+                    ("words", Json::Num(c.words)),
+                    ("seconds", Json::Num(c.seconds)),
+                ]),
+            );
+        }
+        let t = self.total();
+        obj.insert(
+            "total".to_string(),
+            Json::obj(vec![
+                ("flops", Json::Num(t.flops)),
+                ("messages", Json::Num(t.messages)),
+                ("words", Json::Num(t.words)),
+                ("seconds", Json::Num(t.seconds)),
+                ("collective_rounds", Json::Num(self.collective_rounds as f64)),
+            ]),
+        );
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_and_total() {
+        let m = MachineModel::custom(1.0, 2.0, 3.0);
+        let mut t = CostTrace::new();
+        t.charge_flops(Phase::GramLocal, 10.0, &m);
+        t.charge_comm(Phase::Collective, 4.0, 5.0, &m);
+        t.count_collective_round();
+        assert_eq!(t.phase(Phase::GramLocal).flops, 10.0);
+        assert_eq!(t.phase(Phase::GramLocal).seconds, 10.0);
+        assert_eq!(t.phase(Phase::Collective).messages, 4.0);
+        assert_eq!(t.phase(Phase::Collective).seconds, 8.0 + 15.0);
+        let tot = t.total();
+        assert_eq!(tot.flops, 10.0);
+        assert_eq!(tot.seconds, 33.0);
+        assert_eq!(t.collective_rounds, 1);
+    }
+
+    #[test]
+    fn steady_state_excludes_setup() {
+        let m = MachineModel::comet();
+        let mut t = CostTrace::new();
+        t.charge_flops(Phase::Setup, 1000.0, &m);
+        t.charge_flops(Phase::Update, 5.0, &m);
+        assert_eq!(t.total_steady().flops, 5.0);
+    }
+
+    #[test]
+    fn merge_sums_and_merge_max_takes_max() {
+        let m = MachineModel::custom(1.0, 1.0, 1.0);
+        let mut a = CostTrace::new();
+        a.charge_flops(Phase::Update, 3.0, &m);
+        let mut b = CostTrace::new();
+        b.charge_flops(Phase::Update, 5.0, &m);
+        b.count_collective_round();
+        let mut sum = a.clone();
+        sum.merge(&b);
+        assert_eq!(sum.phase(Phase::Update).flops, 8.0);
+        let mut mx = a.clone();
+        mx.merge_max(&b);
+        assert_eq!(mx.phase(Phase::Update).flops, 5.0);
+        assert_eq!(mx.collective_rounds, 1);
+    }
+
+    #[test]
+    fn json_report_has_phases_and_total() {
+        let m = MachineModel::comet();
+        let mut t = CostTrace::new();
+        t.charge_flops(Phase::GramLocal, 7.0, &m);
+        let j = t.to_json();
+        assert_eq!(j.get("gram_local").unwrap().get("flops").unwrap().as_f64(), Some(7.0));
+        assert!(j.get("total").is_some());
+    }
+}

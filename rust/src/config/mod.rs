@@ -1,0 +1,11 @@
+//! Run configuration files.
+//!
+//! A TOML-subset parser ([`parse`]) plus the typed [`spec::RunSpec`] that
+//! the CLI and benches consume. No `serde`/`toml` crates exist offline,
+//! so the parser is built from scratch; it covers the subset real run
+//! files need: tables, strings, numbers, booleans, and comments.
+
+pub mod parse;
+pub mod spec;
+
+pub use spec::RunSpec;

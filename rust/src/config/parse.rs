@@ -1,0 +1,179 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supported grammar (sufficient for run configs):
+//!
+//! ```toml
+//! # comment
+//! key = "string"
+//! count = 42
+//! rate = 0.1           # floats
+//! flag = true
+//!
+//! [section]
+//! nested = "value"
+//! ```
+//!
+//! Sections flatten to `section.key` entries in one map.
+
+use crate::error::{CaError, Result};
+use std::collections::BTreeMap;
+
+/// Parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer or float.
+    Num(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl TomlValue {
+    /// As string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As f64.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// As usize (non-negative integral).
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse TOML-subset text into a flat `section.key → value` map.
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| CaError::Parse { pos: lineno + 1, msg: msg.to_string() };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+            let name = name.trim();
+            if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || "._-".contains(c))
+            {
+                return Err(err("invalid section name"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
+        let key = key.trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || "._-".contains(c)) {
+            return Err(err("invalid key"));
+        }
+        let full_key =
+            if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        let value = value.trim();
+        let parsed = if let Some(stripped) = value.strip_prefix('"') {
+            let inner = stripped.strip_suffix('"').ok_or_else(|| err("unterminated string"))?;
+            TomlValue::Str(inner.to_string())
+        } else if value == "true" {
+            TomlValue::Bool(true)
+        } else if value == "false" {
+            TomlValue::Bool(false)
+        } else {
+            TomlValue::Num(
+                value.parse::<f64>().map_err(|_| err(&format!("invalid value '{value}'")))?,
+            )
+        };
+        if map.insert(full_key.clone(), parsed).is_some() {
+            return Err(err(&format!("duplicate key '{full_key}'")));
+        }
+    }
+    Ok(map)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_example() {
+        let text = r#"
+# run config
+dataset = "covtype"
+p = 64
+b = 0.1          # sampling rate
+verbose = true
+
+[solver]
+k = 32
+lambda = 0.01
+algo = "ca-sfista"
+"#;
+        let m = parse_toml(text).unwrap();
+        assert_eq!(m["dataset"].as_str(), Some("covtype"));
+        assert_eq!(m["p"].as_usize(), Some(64));
+        assert_eq!(m["b"].as_f64(), Some(0.1));
+        assert_eq!(m["verbose"].as_bool(), Some(true));
+        assert_eq!(m["solver.k"].as_usize(), Some(32));
+        assert_eq!(m["solver.algo"].as_str(), Some("ca-sfista"));
+    }
+
+    #[test]
+    fn hash_inside_string_preserved() {
+        let m = parse_toml("tag = \"a#b\"\n").unwrap();
+        assert_eq!(m["tag"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_toml("novalue\n").is_err());
+        assert!(parse_toml("[unterminated\n").is_err());
+        assert!(parse_toml("x = \"open\n").is_err());
+        assert!(parse_toml("x = nope\n").is_err());
+        assert!(parse_toml("x = 1\nx = 2\n").is_err(), "duplicate");
+        assert!(parse_toml("bad key! = 1\n").is_err());
+    }
+
+    #[test]
+    fn value_accessor_types() {
+        let m = parse_toml("a = 3\nb = 3.5\nc = -2\n").unwrap();
+        assert_eq!(m["a"].as_usize(), Some(3));
+        assert_eq!(m["b"].as_usize(), None);
+        assert_eq!(m["c"].as_usize(), None);
+        assert_eq!(m["b"].as_f64(), Some(3.5));
+        assert_eq!(m["a"].as_str(), None);
+        assert_eq!(m["a"].as_bool(), None);
+    }
+}

@@ -1,0 +1,186 @@
+//! Typed run specification assembled from a config file and/or CLI flags.
+
+use crate::cluster::shard::PartitionStrategy;
+use crate::comm::collectives::AllReduceAlgo;
+use crate::comm::costmodel::MachineModel;
+use crate::config::parse::{parse_toml, TomlValue};
+use crate::error::{CaError, Result};
+use crate::solvers::traits::{AlgoKind, SolverConfig, Stopping};
+use std::collections::BTreeMap;
+
+/// A fully resolved run request.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// Dataset preset name.
+    pub dataset: String,
+    /// Scale-down cap on n (None = full preset size).
+    pub scale_n: Option<usize>,
+    /// Processor count.
+    pub p: usize,
+    /// Algorithm.
+    pub algo: AlgoKind,
+    /// Solver configuration.
+    pub solver: SolverConfig,
+    /// Machine model.
+    pub machine: MachineModel,
+    /// Artifact directory for the PJRT backend (None = native backend).
+    pub artifacts: Option<String>,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec {
+            dataset: "smoke".into(),
+            scale_n: Some(2_000),
+            p: 4,
+            algo: AlgoKind::Sfista,
+            solver: SolverConfig::default(),
+            machine: MachineModel::comet(),
+            artifacts: None,
+        }
+    }
+}
+
+impl RunSpec {
+    /// Parse a TOML-subset config file into a spec (missing keys keep
+    /// defaults).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let map = parse_toml(text)?;
+        let mut spec = RunSpec::default();
+        spec.apply_map(&map)?;
+        Ok(spec)
+    }
+
+    /// Apply a parsed key/value map (also used by CLI overrides).
+    pub fn apply_map(&mut self, map: &BTreeMap<String, TomlValue>) -> Result<()> {
+        for (key, value) in map {
+            self.apply_kv(key, value)?;
+        }
+        Ok(())
+    }
+
+    /// Apply one key/value pair.
+    pub fn apply_kv(&mut self, key: &str, value: &TomlValue) -> Result<()> {
+        let bad = |what: &str| CaError::Config(format!("{key}: expected {what}"));
+        match key {
+            "dataset" => self.dataset = value.as_str().ok_or_else(|| bad("string"))?.into(),
+            "scale_n" => {
+                let v = value.as_usize().ok_or_else(|| bad("integer"))?;
+                self.scale_n = if v == 0 { None } else { Some(v) };
+            }
+            "p" => self.p = value.as_usize().ok_or_else(|| bad("integer"))?.max(1),
+            "algo" => {
+                self.algo = match value.as_str().ok_or_else(|| bad("string"))? {
+                    "sfista" | "ca-sfista" => AlgoKind::Sfista,
+                    "spnm" | "ca-spnm" => AlgoKind::Spnm,
+                    other => {
+                        return Err(CaError::Config(format!(
+                            "unknown algo '{other}' (sfista|spnm|ca-sfista|ca-spnm)"
+                        )))
+                    }
+                }
+            }
+            "artifacts" => {
+                self.artifacts = Some(value.as_str().ok_or_else(|| bad("string"))?.into())
+            }
+            "machine" => {
+                self.machine = match value.as_str().ok_or_else(|| bad("string"))? {
+                    "comet" => MachineModel::comet(),
+                    "ethernet" => MachineModel::ethernet(),
+                    "zero-latency" => MachineModel::zero_latency(),
+                    other => return Err(CaError::Config(format!("unknown machine '{other}'"))),
+                }
+            }
+            "solver.lambda" | "lambda" => {
+                self.solver.lambda = value.as_f64().ok_or_else(|| bad("number"))?
+            }
+            "solver.b" | "b" => self.solver.b = value.as_f64().ok_or_else(|| bad("number"))?,
+            "solver.k" | "k" => {
+                self.solver.k = value.as_usize().ok_or_else(|| bad("integer"))?
+            }
+            "solver.q" | "q" => {
+                self.solver.q = value.as_usize().ok_or_else(|| bad("integer"))?
+            }
+            "solver.iters" | "iters" => {
+                self.solver.stopping =
+                    Stopping::MaxIters(value.as_usize().ok_or_else(|| bad("integer"))?)
+            }
+            "solver.seed" | "seed" => {
+                self.solver.seed = value.as_usize().ok_or_else(|| bad("integer"))? as u64
+            }
+            "solver.record_every" | "record_every" => {
+                self.solver.record_every = value.as_usize().ok_or_else(|| bad("integer"))?
+            }
+            "solver.allreduce" | "allreduce" => {
+                self.solver.allreduce =
+                    AllReduceAlgo::parse(value.as_str().ok_or_else(|| bad("string"))?)?
+            }
+            "solver.partition" | "partition" => {
+                self.solver.partition = match value.as_str().ok_or_else(|| bad("string"))? {
+                    "contiguous" => PartitionStrategy::Contiguous,
+                    "greedy" => PartitionStrategy::Greedy,
+                    other => {
+                        return Err(CaError::Config(format!("unknown partition '{other}'")))
+                    }
+                }
+            }
+            other => return Err(CaError::Config(format!("unknown config key '{other}'"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_roundtrip() {
+        let spec = RunSpec::from_toml(
+            r#"
+dataset = "covtype"
+scale_n = 20000
+p = 64
+algo = "ca-spnm"
+machine = "ethernet"
+
+[solver]
+k = 32
+q = 4
+b = 0.01
+lambda = 0.01
+iters = 100
+allreduce = "ring"
+partition = "greedy"
+seed = 9
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.dataset, "covtype");
+        assert_eq!(spec.scale_n, Some(20_000));
+        assert_eq!(spec.p, 64);
+        assert_eq!(spec.algo, AlgoKind::Spnm);
+        assert_eq!(spec.solver.k, 32);
+        assert_eq!(spec.solver.q, 4);
+        assert_eq!(spec.solver.b, 0.01);
+        assert_eq!(spec.solver.stopping.cap(), 100);
+        assert_eq!(spec.machine.name, "ethernet");
+        assert_eq!(spec.solver.allreduce, AllReduceAlgo::Ring);
+        assert_eq!(spec.solver.partition, PartitionStrategy::Greedy);
+        spec.solver.validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(RunSpec::from_toml("banana = 1\n").is_err());
+        assert!(RunSpec::from_toml("algo = \"gd\"\n").is_err());
+        assert!(RunSpec::from_toml("machine = \"cray\"\n").is_err());
+        assert!(RunSpec::from_toml("p = \"x\"\n").is_err());
+    }
+
+    #[test]
+    fn scale_n_zero_means_full() {
+        let spec = RunSpec::from_toml("scale_n = 0\n").unwrap();
+        assert_eq!(spec.scale_n, None);
+    }
+}

@@ -1,0 +1,265 @@
+//! The run loop: sharding → schedule → k-step blocks → output.
+
+use crate::cluster::engine::SimCluster;
+use crate::cluster::shard::ShardedDataset;
+use crate::comm::costmodel::MachineModel;
+use crate::comm::trace::{CostTrace, Phase};
+use crate::datasets::Dataset;
+use crate::error::{CaError, Result};
+use crate::matrix::dense::DenseMatrix;
+use crate::matrix::ops::full_gram_csc;
+use crate::prox::objective::{relative_solution_error, LassoObjective};
+use crate::runtime::backend::{GramBackend, NativeGramBackend};
+use crate::sampling::SampleSchedule;
+use crate::solvers::traits::{
+    AlgoKind, HistoryPoint, SolverConfig, SolverOutput, StepPolicy, Stopping,
+};
+
+use super::kstep::compute_gram_stack;
+use super::state::IterState;
+
+/// Estimate the Lipschitz constant `L̂ = λ_max(XXᵀ/n)` by power iteration
+/// on the full Gram matrix (one-time setup; charged to [`Phase::Setup`]).
+pub fn estimate_lipschitz(
+    ds: &Dataset,
+    seed: u64,
+    machine: &MachineModel,
+    trace: &mut CostTrace,
+) -> Result<f64> {
+    let d = ds.d();
+    let (gram, flops) = full_gram_csc(&ds.x, &ds.y)?;
+    trace.charge_flops(Phase::Setup, flops as f64, machine);
+    let gm = DenseMatrix::from_vec(d, d, gram.g().to_vec())?;
+    let iters = 100;
+    let l = gm.power_iteration_sym(iters, seed ^ 0x5EED)?;
+    trace.charge_flops(Phase::Setup, (iters * 2 * d * d) as f64, machine);
+    Ok(l)
+}
+
+/// Run a distributed solver with the native Gram backend.
+pub fn run(
+    ds: &Dataset,
+    cfg: &SolverConfig,
+    p: usize,
+    machine: &MachineModel,
+    algo: AlgoKind,
+) -> Result<SolverOutput> {
+    run_with_backend(ds, cfg, p, machine, algo, &NativeGramBackend)
+}
+
+/// Run a distributed solver with an explicit Gram backend (native or
+/// PJRT artifact-based).
+pub fn run_with_backend(
+    ds: &Dataset,
+    cfg: &SolverConfig,
+    p: usize,
+    machine: &MachineModel,
+    algo: AlgoKind,
+    backend: &dyn GramBackend,
+) -> Result<SolverOutput> {
+    cfg.validate()?;
+    let wall_start = std::time::Instant::now();
+    let d = ds.d();
+    if d == 0 || ds.n() == 0 {
+        return Err(CaError::Dataset("empty dataset".into()));
+    }
+    let mut trace = CostTrace::new();
+    let cluster = SimCluster::new(p, *machine)?;
+    let sharded = ShardedDataset::new(ds, p, cfg.partition)?;
+    let schedule = SampleSchedule::new(ds.n(), cfg.b, cfg.seed, cfg.sampling);
+
+    // Step size.
+    let t_step = match cfg.step {
+        StepPolicy::Fixed(t) => t,
+        StepPolicy::InverseLipschitz { scale } => {
+            let l = estimate_lipschitz(ds, cfg.seed, machine, &mut trace)?;
+            if l <= 0.0 {
+                1.0
+            } else {
+                scale / l
+            }
+        }
+    };
+
+    let objective = LassoObjective::new(cfg.lambda);
+    let w_ref: Option<&[f64]> = match (&cfg.stopping, &cfg.w_op) {
+        (Stopping::RelError { w_op, .. }, _) => Some(w_op.as_slice()),
+        (_, Some(w)) => Some(w.as_slice()),
+        _ => None,
+    };
+
+    let cap = cfg.stopping.cap();
+    let mut state = IterState::new(vec![0.0; d]);
+    let mut history: Vec<HistoryPoint> = Vec::new();
+    let mut converged = false;
+    let mut t0 = 0usize;
+
+    'outer: while t0 < cap {
+        let k_eff = cfg.k.min(cap - t0);
+        let stack = compute_gram_stack(
+            &sharded, &schedule, t0, k_eff, &cluster, backend, cfg.allreduce, &mut trace,
+        )?;
+        for j in 0..k_eff {
+            let (flops, phase) = match algo {
+                AlgoKind::Sfista => (
+                    state.fista_step(&stack, j, t_step, cfg.lambda, cfg.gradient_at)?,
+                    Phase::Update,
+                ),
+                AlgoKind::Spnm => {
+                    (state.spnm_step(&stack, j, t_step, cfg.lambda, cfg.q)?, Phase::InnerSolve)
+                }
+            };
+            cluster.charge_replicated_flops(flops, phase, &mut trace);
+            if state.w.iter().any(|v| !v.is_finite()) {
+                return Err(CaError::Solver(format!(
+                    "{} diverged at iteration {} (step {t_step:.3e}); try a smaller step",
+                    algo.display(cfg.k),
+                    state.iter
+                )));
+            }
+            let gi = state.iter;
+            if cfg.record_every > 0 && (gi % cfg.record_every == 0 || gi == cap) {
+                let obj = objective.value(&ds.x, &ds.y, &state.w)?;
+                let rel = w_ref
+                    .map(|w_op| relative_solution_error(&state.w, w_op))
+                    .unwrap_or(f64::NAN);
+                history.push(HistoryPoint {
+                    iter: gi,
+                    objective: obj,
+                    rel_error: rel,
+                    modeled_seconds: trace.total_steady().seconds,
+                });
+            }
+            if let Stopping::RelError { tol, w_op, .. } = &cfg.stopping {
+                if relative_solution_error(&state.w, w_op) <= *tol {
+                    converged = true;
+                    break 'outer;
+                }
+            }
+        }
+        t0 += k_eff;
+    }
+
+    let final_objective = objective.value(&ds.x, &ds.y, &state.w)?;
+    let final_rel_error =
+        w_ref.map(|w_op| relative_solution_error(&state.w, w_op)).unwrap_or(f64::NAN);
+    let _ = converged;
+    Ok(SolverOutput {
+        algorithm: algo.display(cfg.k),
+        iterations: state.iter,
+        w: state.w,
+        final_objective,
+        final_rel_error,
+        modeled_seconds: trace.total_steady().seconds,
+        wall_seconds: wall_start.elapsed().as_secs_f64(),
+        trace,
+        history,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synthetic::{generate, SyntheticSpec};
+
+    fn ds() -> Dataset {
+        generate(
+            &SyntheticSpec { d: 8, n: 200, density: 1.0, noise: 0.05, model_sparsity: 0.5, condition: 1.0 },
+            21,
+        )
+    }
+
+    fn base_cfg() -> SolverConfig {
+        SolverConfig::default()
+            .with_lambda(0.01)
+            .with_sample_fraction(0.5)
+            .with_max_iters(60)
+            .with_seed(3)
+    }
+
+    #[test]
+    fn sfista_reduces_objective() {
+        let ds = ds();
+        let cfg = base_cfg();
+        let out = run(&ds, &cfg, 4, &MachineModel::comet(), AlgoKind::Sfista).unwrap();
+        let obj0 = LassoObjective::new(cfg.lambda)
+            .value(&ds.x, &ds.y, &vec![0.0; ds.d()])
+            .unwrap();
+        assert!(out.final_objective < 0.5 * obj0, "{} vs {}", out.final_objective, obj0);
+        assert_eq!(out.iterations, 60);
+        assert_eq!(out.trace.collective_rounds, 60); // k = 1: one all-reduce per iter
+    }
+
+    #[test]
+    fn ca_sfista_k_reduces_collective_rounds() {
+        let ds = ds();
+        let cfg = base_cfg().with_k(10);
+        let out = run(&ds, &cfg, 4, &MachineModel::comet(), AlgoKind::Sfista).unwrap();
+        assert_eq!(out.trace.collective_rounds, 6); // 60 iters / k=10
+        assert_eq!(out.iterations, 60);
+    }
+
+    #[test]
+    fn spnm_inner_iterations_accelerate_outer_convergence() {
+        // More inner ISTA steps per outer iteration → lower objective at
+        // the same outer-iteration budget (the value of the Newton-style
+        // inner solve, §III-B).
+        // Short horizon: after convergence both hit the sampling-noise
+        // floor, so measure early where the inner solve matters.
+        let ds = ds();
+        let machine = MachineModel::comet();
+        let budget = base_cfg().with_max_iters(6);
+        let q1 = run(&ds, &budget.clone().with_q(1), 2, &machine, AlgoKind::Spnm).unwrap();
+        let q8 = run(&ds, &budget.clone().with_q(8), 2, &machine, AlgoKind::Spnm).unwrap();
+        assert!(
+            q8.final_objective <= q1.final_objective + 1e-12,
+            "q=8 {} vs q=1 {}",
+            q8.final_objective,
+            q1.final_objective
+        );
+    }
+
+    #[test]
+    fn partial_last_block_handled() {
+        let ds = ds();
+        let cfg = base_cfg().with_k(7).with_max_iters(20); // 20 = 2·7 + 6
+        let out = run(&ds, &cfg, 2, &MachineModel::comet(), AlgoKind::Sfista).unwrap();
+        assert_eq!(out.iterations, 20);
+        assert_eq!(out.trace.collective_rounds, 3);
+    }
+
+    #[test]
+    fn rel_error_stopping_halts_early() {
+        let ds = ds();
+        let mut cfg = base_cfg();
+        // Reference = solution from a long run.
+        let long = run(&ds, &cfg.clone().with_max_iters(400), 1, &MachineModel::comet(), AlgoKind::Sfista)
+            .unwrap();
+        cfg.stopping =
+            Stopping::RelError { tol: 0.5, w_op: long.w.clone(), max_iters: 400 };
+        let out = run(&ds, &cfg, 2, &MachineModel::comet(), AlgoKind::Sfista).unwrap();
+        assert!(out.iterations < 400, "stopped at {}", out.iterations);
+        assert!(out.final_rel_error <= 0.5);
+    }
+
+    #[test]
+    fn history_recorded_at_interval() {
+        let ds = ds();
+        let cfg = base_cfg().with_history(10);
+        let out = run(&ds, &cfg, 2, &MachineModel::comet(), AlgoKind::Sfista).unwrap();
+        assert_eq!(out.history.len(), 6);
+        assert!(out.history.windows(2).all(|w| w[0].objective >= w[1].objective * 0.2));
+        assert!(out.history.last().unwrap().modeled_seconds > 0.0);
+    }
+
+    #[test]
+    fn empty_dataset_rejected() {
+        use crate::matrix::csc::CscMatrix;
+        let empty = Dataset {
+            name: "e".into(),
+            x: CscMatrix::from_triplets(0, 0, &[]).unwrap(),
+            y: vec![],
+        };
+        assert!(run(&empty, &base_cfg(), 1, &MachineModel::comet(), AlgoKind::Sfista).is_err());
+    }
+}

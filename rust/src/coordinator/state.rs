@@ -1,0 +1,230 @@
+//! Replicated optimizer state and the per-iteration update rules.
+//!
+//! After the all-reduce every processor holds the same Gram stack and
+//! applies these updates *redundantly* (paper Alg. III lines 8–13,
+//! Alg. IV lines 8–17) — no communication. The state is therefore
+//! replicated by construction; the simulation keeps one copy and charges
+//! the flops once (critical-path semantics).
+
+use crate::error::Result;
+use crate::matrix::dense::dot;
+use crate::matrix::ops::GramStack;
+use crate::prox::soft_threshold::soft_threshold_scalar;
+use crate::solvers::traits::GradientAt;
+
+/// Replicated iterate state shared by SFISTA and SPNM updates.
+#[derive(Clone, Debug)]
+pub struct IterState {
+    /// Current iterate `w_t`.
+    pub w: Vec<f64>,
+    /// Previous iterate `w_{t−1}` (for momentum).
+    pub w_prev: Vec<f64>,
+    /// Global iteration counter (1-based; the paper's `j` / `ik+j`).
+    pub iter: usize,
+    /// Scratch: gradient buffer (avoids hot-loop allocation).
+    grad: Vec<f64>,
+    /// Scratch: momentum point / inner iterate.
+    scratch: Vec<f64>,
+}
+
+impl IterState {
+    /// Fresh state at `w = w0` (the paper starts at w = 0).
+    pub fn new(w0: Vec<f64>) -> Self {
+        let d = w0.len();
+        IterState { w_prev: w0.clone(), w: w0, iter: 0, grad: vec![0.0; d], scratch: vec![0.0; d] }
+    }
+
+    /// Dimension d.
+    pub fn d(&self) -> usize {
+        self.w.len()
+    }
+
+    /// The paper's momentum coefficient `(j − 2)/j` (Eq. 9 / Alg. III
+    /// line 12), clamped at zero for the first iterations where the
+    /// formula would be negative.
+    #[inline]
+    pub fn momentum_coeff(iter: usize) -> f64 {
+        if iter <= 2 {
+            0.0
+        } else {
+            (iter as f64 - 2.0) / iter as f64
+        }
+    }
+
+    /// One SFISTA / CA-SFISTA update from block `j` of the stack
+    /// (Alg. III lines 9–13). Returns flops.
+    ///
+    /// * `GradientAt::Iterate` (paper-faithful): `∇f = G·w_prev − R`,
+    ///   `v = w_prev + μ·(w_prev − w_prev2)`, `w = S_{λt}(v − t·∇f)`.
+    /// * `GradientAt::Momentum` (textbook FISTA): `v` first, `∇f = G·v − R`.
+    pub fn fista_step(
+        &mut self,
+        stack: &GramStack,
+        j: usize,
+        t: f64,
+        lambda: f64,
+        grad_at: GradientAt,
+    ) -> Result<u64> {
+        let d = self.d();
+        self.iter += 1;
+        let mu = Self::momentum_coeff(self.iter);
+        let (g, r) = stack.block(j);
+
+        // Momentum point v into scratch.
+        for i in 0..d {
+            self.scratch[i] = self.w[i] + mu * (self.w[i] - self.w_prev[i]);
+        }
+        // Gradient at the configured point.
+        let point: &[f64] = match grad_at {
+            GradientAt::Iterate => &self.w,
+            GradientAt::Momentum => &self.scratch,
+        };
+        for i in 0..d {
+            self.grad[i] = dot(&g[i * d..(i + 1) * d], point) - r[i];
+        }
+        // w_new = S_{λt}(v − t·∇f); rotate iterates.
+        std::mem::swap(&mut self.w_prev, &mut self.w);
+        for i in 0..d {
+            // note: w_prev now holds the pre-update iterate
+            self.w[i] = soft_threshold_scalar(self.scratch[i] - t * self.grad[i], lambda * t);
+        }
+        // 2d² (gradient) + 3d (momentum) + 3d (prox & subtract)
+        Ok((2 * d * d + 6 * d) as u64)
+    }
+
+    /// One SPNM / CA-SPNM outer update from block `j`: Q inner ISTA
+    /// steps on the quadratic model, warm-started at the current iterate
+    /// (Alg. IV lines 13–17). Returns flops.
+    pub fn spnm_step(
+        &mut self,
+        stack: &GramStack,
+        j: usize,
+        t: f64,
+        lambda: f64,
+        q_iters: usize,
+    ) -> Result<u64> {
+        let d = self.d();
+        self.iter += 1;
+        // z_0 = w (warm start).
+        self.scratch.copy_from_slice(&self.w);
+        let (g, r) = stack.block(j);
+        for _ in 0..q_iters {
+            for i in 0..d {
+                self.grad[i] = dot(&g[i * d..(i + 1) * d], &self.scratch) - r[i];
+            }
+            for i in 0..d {
+                self.scratch[i] =
+                    soft_threshold_scalar(self.scratch[i] - t * self.grad[i], lambda * t);
+            }
+        }
+        std::mem::swap(&mut self.w_prev, &mut self.w);
+        self.w.copy_from_slice(&self.scratch);
+        Ok((q_iters * (2 * d * d + 4 * d)) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::ops::GramStack;
+
+    /// Identity-Gram stack: G = I, R = r0 — gradient is `w − r0`, so the
+    /// fixed point of the prox iteration is S_{λt·…} around r0.
+    fn identity_stack(d: usize, k: usize, r0: f64) -> GramStack {
+        let mut st = GramStack::zeros(d, k);
+        for j in 0..k {
+            let (g, r) = st.block_mut(j);
+            for i in 0..d {
+                g[i * d + i] = 1.0;
+                r[i] = r0;
+            }
+        }
+        st
+    }
+
+    #[test]
+    fn momentum_coefficient_schedule() {
+        assert_eq!(IterState::momentum_coeff(1), 0.0);
+        assert_eq!(IterState::momentum_coeff(2), 0.0);
+        assert!((IterState::momentum_coeff(4) - 0.5).abs() < 1e-15);
+        assert!(IterState::momentum_coeff(1000) > 0.99);
+    }
+
+    #[test]
+    fn fista_step_moves_toward_solution() {
+        let st = identity_stack(3, 1, 1.0);
+        let mut state = IterState::new(vec![0.0; 3]);
+        // λ = 0: plain gradient step on ½‖w − 1‖², fixed point w = 1.
+        // (The paper-faithful variant evaluates ∇f at w while stepping
+        // from v, which damps the contraction — hence the long horizon.)
+        for _ in 0..2000 {
+            state.fista_step(&st, 0, 0.5, 0.0, GradientAt::Iterate).unwrap();
+        }
+        for &wi in &state.w {
+            assert!((wi - 1.0).abs() < 1e-3, "w = {wi}");
+        }
+    }
+
+    #[test]
+    fn fista_l1_shrinks_exact_zero() {
+        // R = 0 ⇒ optimum is w = 0; λ large keeps everything at 0.
+        let st = identity_stack(2, 1, 0.0);
+        let mut state = IterState::new(vec![0.5, -0.5]);
+        for _ in 0..100 {
+            state.fista_step(&st, 0, 0.5, 1.0, GradientAt::Iterate).unwrap();
+        }
+        assert_eq!(state.w, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn momentum_variant_also_converges() {
+        let st = identity_stack(3, 1, 2.0);
+        let mut state = IterState::new(vec![0.0; 3]);
+        for _ in 0..300 {
+            state.fista_step(&st, 0, 0.5, 0.0, GradientAt::Momentum).unwrap();
+        }
+        for &wi in &state.w {
+            assert!((wi - 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn spnm_inner_loop_converges_faster_per_outer_step() {
+        let st = identity_stack(3, 1, 1.0);
+        let mut fista = IterState::new(vec![0.0; 3]);
+        let mut spnm = IterState::new(vec![0.0; 3]);
+        for _ in 0..5 {
+            fista.fista_step(&st, 0, 0.5, 0.0, GradientAt::Iterate).unwrap();
+            spnm.spnm_step(&st, 0, 0.5, 0.0, 10).unwrap();
+        }
+        let err = |w: &[f64]| w.iter().map(|v| (v - 1.0).abs()).fold(0.0, f64::max);
+        assert!(
+            err(&spnm.w) < err(&fista.w),
+            "spnm {} vs fista {}",
+            err(&spnm.w),
+            err(&fista.w)
+        );
+    }
+
+    #[test]
+    fn iterates_rotate() {
+        let st = identity_stack(2, 1, 1.0);
+        let mut state = IterState::new(vec![0.0; 2]);
+        state.fista_step(&st, 0, 0.1, 0.0, GradientAt::Iterate).unwrap();
+        let w1 = state.w.clone();
+        assert_eq!(state.w_prev, vec![0.0, 0.0]);
+        state.fista_step(&st, 0, 0.1, 0.0, GradientAt::Iterate).unwrap();
+        assert_eq!(state.w_prev, w1);
+        assert_eq!(state.iter, 2);
+    }
+
+    #[test]
+    fn flop_counts_scale_with_d_and_q() {
+        let st = identity_stack(4, 1, 0.0);
+        let mut state = IterState::new(vec![0.0; 4]);
+        let f1 = state.fista_step(&st, 0, 0.1, 0.0, GradientAt::Iterate).unwrap();
+        assert_eq!(f1, (2 * 16 + 24) as u64);
+        let f2 = state.spnm_step(&st, 0, 0.1, 0.0, 3).unwrap();
+        assert_eq!(f2, (3 * (2 * 16 + 16)) as u64);
+    }
+}

@@ -1,0 +1,76 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the ca-prox library.
+#[derive(Error, Debug)]
+pub enum CaError {
+    /// Shape or dimension mismatch in a linear-algebra operation.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Invalid configuration value.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Dataset parsing / generation failure.
+    #[error("dataset error: {0}")]
+    Dataset(String),
+
+    /// PJRT runtime / artifact failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact not found or manifest mismatch.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Cluster / communication failure (a worker panicked or a channel closed).
+    #[error("cluster error: {0}")]
+    Cluster(String),
+
+    /// Solver failed to make progress (divergence, NaN).
+    #[error("solver error: {0}")]
+    Solver(String),
+
+    /// JSON / config parse failure.
+    #[error("parse error at {pos}: {msg}")]
+    Parse { pos: usize, msg: String },
+
+    /// I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Error bubbled up from the xla crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for CaError {
+    fn from(e: xla::Error) -> Self {
+        CaError::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, CaError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_includes_context() {
+        let e = CaError::Shape("expected 3x4 got 4x3".into());
+        assert!(e.to_string().contains("3x4"));
+        let e = CaError::Parse { pos: 17, msg: "unexpected token".into() };
+        assert!(e.to_string().contains("17"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: CaError = io.into();
+        assert!(matches!(e, CaError::Io(_)));
+    }
+}

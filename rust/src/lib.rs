@@ -1,0 +1,65 @@
+//! # ca-prox — Communication-Avoiding Proximal Methods
+//!
+//! A production-grade reproduction of *"Avoiding Communication in Proximal
+//! Methods for Convex Optimization Problems"* (Soori, Devarakonda, Demmel,
+//! Gurbuzbalaban, Mehri Dehnavi — CS.DC 2017).
+//!
+//! The library implements the paper's k-step, communication-avoiding
+//! reformulations of stochastic FISTA (**CA-SFISTA**) and the stochastic
+//! proximal Newton method (**CA-SPNM**) for the LASSO problem
+//!
+//! ```text
+//!   min_w  (1/2n)‖Xᵀw − y‖² + λ‖w‖₁ ,       X ∈ R^{d×n}
+//! ```
+//!
+//! together with every substrate the paper depends on:
+//!
+//! * a **shared-nothing simulated cluster** ([`cluster`]) that executes the
+//!   per-worker numerics exactly on real threads while charging modeled
+//!   α-β-γ time along the critical path,
+//! * **collective operations** ([`comm`]) — tree / recursive-doubling /
+//!   ring all-reduce — that physically move and combine data,
+//! * dense and sparse **matrix kernels** ([`matrix`]) including the sampled
+//!   Gram products at the heart of both algorithms,
+//! * the classical baselines (SFISTA, SPNM, batch ISTA/FISTA) and a
+//!   TFOCS-substitute high-accuracy **reference solver** ([`solvers`]),
+//! * dataset loaders and generators ([`datasets`]) for the paper's three
+//!   benchmarks (abalone / susy / covtype),
+//! * a **PJRT runtime** ([`runtime`]) that executes AOT-compiled JAX/Pallas
+//!   kernels (HLO text artifacts) on the request path with a native
+//!   fallback — Python is never on the request path,
+//! * a config system, CLI, metrics and a benchmark kit.
+//!
+//! See `DESIGN.md` for the architecture and the experiment index, and
+//! `EXPERIMENTS.md` for the reproduction of every table and figure.
+
+pub mod benchkit;
+pub mod cli;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod error;
+pub mod matrix;
+pub mod metrics;
+pub mod prox;
+pub mod runtime;
+pub mod sampling;
+pub mod solvers;
+pub mod util;
+
+pub use error::{CaError, Result};
+
+/// Convenience re-exports for the common library entry points.
+pub mod prelude {
+    pub use crate::cluster::engine::SimCluster;
+    pub use crate::comm::costmodel::MachineModel;
+    pub use crate::comm::trace::CostTrace;
+    pub use crate::datasets::Dataset;
+    pub use crate::error::{CaError, Result};
+    pub use crate::matrix::csc::CscMatrix;
+    pub use crate::matrix::dense::DenseMatrix;
+    pub use crate::solvers::traits::{SolverConfig, SolverOutput, Stopping};
+    pub use crate::util::rng::Rng;
+}

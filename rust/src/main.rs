@@ -1,0 +1,6 @@
+//! `ca-prox` CLI entry point. See [`ca_prox::cli`] for commands.
+fn main() {
+    ca_prox::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(ca_prox::cli::run(&args));
+}

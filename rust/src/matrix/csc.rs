@@ -1,0 +1,311 @@
+//! Compressed sparse column (CSC) matrix.
+//!
+//! CSC is the natural layout for this paper: the data matrix `X ∈ R^{d×n}`
+//! is distributed and *sampled* by columns, so gathering a random column
+//! subset is an O(nnz of those columns) slice walk.
+
+use crate::error::{CaError, Result};
+use crate::matrix::dense::DenseMatrix;
+
+/// Compressed sparse column storage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    rows: usize,
+    cols: usize,
+    /// Column pointers, len = cols + 1.
+    colptr: Vec<usize>,
+    /// Row indices, len = nnz (sorted within each column).
+    rowidx: Vec<usize>,
+    /// Values, len = nnz.
+    values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from triplets (row, col, value). Duplicate entries sum.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Result<Self> {
+        for &(r, c, _) in triplets {
+            if r >= rows || c >= cols {
+                return Err(CaError::Shape(format!(
+                    "triplet ({r},{c}) out of bounds for {rows}x{cols}"
+                )));
+            }
+        }
+        let mut per_col: Vec<Vec<(usize, f64)>> = vec![Vec::new(); cols];
+        for &(r, c, v) in triplets {
+            per_col[c].push((r, v));
+        }
+        let mut colptr = Vec::with_capacity(cols + 1);
+        let mut rowidx = Vec::with_capacity(triplets.len());
+        let mut values = Vec::with_capacity(triplets.len());
+        colptr.push(0);
+        for col in per_col.iter_mut() {
+            col.sort_by_key(|&(r, _)| r);
+            let mut i = 0;
+            while i < col.len() {
+                let r = col[i].0;
+                let mut v = col[i].1;
+                let mut j = i + 1;
+                while j < col.len() && col[j].0 == r {
+                    v += col[j].1;
+                    j += 1;
+                }
+                if v != 0.0 {
+                    rowidx.push(r);
+                    values.push(v);
+                }
+                i = j;
+            }
+            colptr.push(rowidx.len());
+        }
+        Ok(CscMatrix { rows, cols, colptr, rowidx, values })
+    }
+
+    /// Build from a dense matrix, dropping zeros.
+    pub fn from_dense(m: &DenseMatrix) -> Self {
+        let mut trip = Vec::new();
+        for r in 0..m.rows() {
+            for c in 0..m.cols() {
+                let v = m.get(r, c);
+                if v != 0.0 {
+                    trip.push((r, c, v));
+                }
+            }
+        }
+        Self::from_triplets(m.rows(), m.cols(), &trip).expect("in-bounds by construction")
+    }
+
+    /// Number of rows (features, d).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns (samples, n).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Density in [0,1].
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// (row indices, values) of one column.
+    #[inline]
+    pub fn col(&self, c: usize) -> (&[usize], &[f64]) {
+        let (s, e) = (self.colptr[c], self.colptr[c + 1]);
+        (&self.rowidx[s..e], &self.values[s..e])
+    }
+
+    /// nnz of one column.
+    #[inline]
+    pub fn col_nnz(&self, c: usize) -> usize {
+        self.colptr[c + 1] - self.colptr[c]
+    }
+
+    /// Extract a column subset into a new CSC matrix (columns reindexed
+    /// in the order given; duplicates allowed — sampling with replacement).
+    pub fn gather_cols(&self, idx: &[usize]) -> CscMatrix {
+        let mut colptr = Vec::with_capacity(idx.len() + 1);
+        colptr.push(0);
+        let total: usize = idx.iter().map(|&c| self.col_nnz(c)).sum();
+        let mut rowidx = Vec::with_capacity(total);
+        let mut values = Vec::with_capacity(total);
+        for &c in idx {
+            let (ri, vs) = self.col(c);
+            rowidx.extend_from_slice(ri);
+            values.extend_from_slice(vs);
+            colptr.push(rowidx.len());
+        }
+        CscMatrix { rows: self.rows, cols: idx.len(), colptr, rowidx, values }
+    }
+
+    /// Densify (for tests and small d).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.rows, self.cols);
+        for c in 0..self.cols {
+            let (ri, vs) = self.col(c);
+            for (&r, &v) in ri.iter().zip(vs) {
+                m.set(r, c, m.get(r, c) + v);
+            }
+        }
+        m
+    }
+
+    /// y = X·v where v is indexed by columns (length n): `y[r] = Σ_c X[r,c]·v[c]`.
+    pub fn matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
+        if v.len() != self.cols {
+            return Err(CaError::Shape(format!(
+                "csc matvec: X is {}x{}, v has {}",
+                self.rows,
+                self.cols,
+                v.len()
+            )));
+        }
+        let mut y = vec![0.0; self.rows];
+        for c in 0..self.cols {
+            let vc = v[c];
+            if vc == 0.0 {
+                continue;
+            }
+            let (ri, vs) = self.col(c);
+            for (&r, &x) in ri.iter().zip(vs) {
+                y[r] += x * vc;
+            }
+        }
+        Ok(y)
+    }
+
+    /// y = Xᵀ·w (w length d, result length n): `y[c] = Σ_r X[r,c]·w[r]`.
+    pub fn matvec_t(&self, w: &[f64]) -> Result<Vec<f64>> {
+        if w.len() != self.rows {
+            return Err(CaError::Shape(format!(
+                "csc matvec_t: X is {}x{}, w has {}",
+                self.rows,
+                self.cols,
+                w.len()
+            )));
+        }
+        let mut y = vec![0.0; self.cols];
+        for c in 0..self.cols {
+            let (ri, vs) = self.col(c);
+            let mut acc = 0.0;
+            for (&r, &x) in ri.iter().zip(vs) {
+                acc += x * w[r];
+            }
+            y[c] = acc;
+        }
+        Ok(y)
+    }
+
+    /// Per-column squared norms, ‖x_c‖².
+    pub fn col_sq_norms(&self) -> Vec<f64> {
+        (0..self.cols)
+            .map(|c| {
+                let (_, vs) = self.col(c);
+                vs.iter().map(|v| v * v).sum()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn sample() -> CscMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0]]
+        CscMatrix::from_triplets(2, 3, &[(0, 0, 1.0), (1, 1, 3.0), (0, 2, 2.0)]).unwrap()
+    }
+
+    #[test]
+    fn basic_structure() {
+        let m = sample();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.col_nnz(0), 1);
+        assert_eq!(m.col_nnz(1), 1);
+        assert!((m.density() - 0.5).abs() < 1e-15);
+        let (ri, vs) = m.col(2);
+        assert_eq!(ri, &[0]);
+        assert_eq!(vs, &[2.0]);
+    }
+
+    #[test]
+    fn duplicates_sum_and_zeros_drop() {
+        let m = CscMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (0, 0, 2.0), (1, 1, 5.0), (1, 1, -5.0)])
+            .unwrap();
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.to_dense().get(0, 0), 3.0);
+        assert_eq!(m.to_dense().get(1, 1), 0.0);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        assert!(CscMatrix::from_triplets(2, 2, &[(2, 0, 1.0)]).is_err());
+        assert!(CscMatrix::from_triplets(2, 2, &[(0, 2, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let d = DenseMatrix::from_fn(4, 5, |r, c| if (r + c) % 3 == 0 { (r + 1) as f64 } else { 0.0 });
+        let s = CscMatrix::from_dense(&d);
+        assert_eq!(s.to_dense(), d);
+    }
+
+    #[test]
+    fn matvec_agrees_with_dense() {
+        let m = sample();
+        let d = m.to_dense();
+        let v = [1.0, -1.0, 0.5];
+        assert_eq!(m.matvec(&v).unwrap(), d.matvec(&v).unwrap());
+        let w = [2.0, 3.0];
+        assert_eq!(m.matvec_t(&w).unwrap(), d.matvec_t(&w).unwrap());
+        assert!(m.matvec(&[1.0]).is_err());
+        assert!(m.matvec_t(&[1.0, 2.0, 3.0]).is_err());
+    }
+
+    #[test]
+    fn gather_cols_with_duplicates() {
+        let m = sample();
+        let g = m.gather_cols(&[2, 2, 0]);
+        assert_eq!(g.cols(), 3);
+        assert_eq!(g.to_dense().col(0), vec![2.0, 0.0]);
+        assert_eq!(g.to_dense().col(1), vec![2.0, 0.0]);
+        assert_eq!(g.to_dense().col(2), vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn col_sq_norms_match() {
+        let m = sample();
+        assert_eq!(m.col_sq_norms(), vec![1.0, 9.0, 4.0]);
+    }
+
+    #[test]
+    fn prop_sparse_dense_matvec_agree() {
+        prop_check("CSC matvec == dense matvec", 40, |g| {
+            let d = g.usize_in(1, 8);
+            let n = g.usize_in(1, 12);
+            let dense = DenseMatrix::from_fn(d, n, |_, _| {
+                if g.bool(0.4) {
+                    g.f64_in(-2.0, 2.0)
+                } else {
+                    0.0
+                }
+            });
+            let sparse = CscMatrix::from_dense(&dense);
+            let v = g.vec_gauss(n);
+            let a = sparse.matvec(&v).unwrap();
+            let b = dense.matvec(&v).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                if (x - y).abs() > 1e-10 {
+                    return Err(format!("mismatch {x} vs {y}"));
+                }
+            }
+            let w = g.vec_gauss(d);
+            let a = sparse.matvec_t(&w).unwrap();
+            let b = dense.matvec_t(&w).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                if (x - y).abs() > 1e-10 {
+                    return Err(format!("t mismatch {x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,186 @@
+//! Compressed sparse row (CSR) matrix.
+//!
+//! Used where row-major traversal wins: the Gram product accumulates
+//! `G[i][j] += x_i·x_j` over sampled columns, and the paper's C/MKL
+//! implementation stores data in CSR. We provide CSR alongside CSC with
+//! conversions; the sampled-Gram kernel in [`crate::matrix::ops`] accepts
+//! both.
+
+use crate::error::{CaError, Result};
+use crate::matrix::csc::CscMatrix;
+use crate::matrix::dense::DenseMatrix;
+
+/// Compressed sparse row storage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    rowptr: Vec<usize>,
+    colidx: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from triplets (row, col, value). Duplicates sum; zeros drop.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Result<Self> {
+        // Transpose-of-CSC construction keeps one code path.
+        let flipped: Vec<(usize, usize, f64)> =
+            triplets.iter().map(|&(r, c, v)| (c, r, v)).collect();
+        let csc = CscMatrix::from_triplets(cols, rows, &flipped)?;
+        Ok(Self::from_csc_transposed(&csc))
+    }
+
+    /// Interpret a CSC matrix's internals as the CSR of its transpose.
+    fn from_csc_transposed(csc: &CscMatrix) -> Self {
+        let rows = csc.cols();
+        let cols = csc.rows();
+        let mut rowptr = Vec::with_capacity(rows + 1);
+        let mut colidx = Vec::new();
+        let mut values = Vec::new();
+        rowptr.push(0);
+        for r in 0..rows {
+            let (ci, vs) = csc.col(r);
+            colidx.extend_from_slice(ci);
+            values.extend_from_slice(vs);
+            rowptr.push(colidx.len());
+        }
+        CsrMatrix { rows, cols, rowptr, colidx, values }
+    }
+
+    /// Convert from CSC.
+    pub fn from_csc(csc: &CscMatrix) -> Self {
+        let mut trip = Vec::with_capacity(csc.nnz());
+        for c in 0..csc.cols() {
+            let (ri, vs) = csc.col(c);
+            for (&r, &v) in ri.iter().zip(vs) {
+                trip.push((r, c, v));
+            }
+        }
+        Self::from_triplets(csc.rows(), csc.cols(), &trip).expect("valid by construction")
+    }
+
+    /// Build from dense, dropping zeros.
+    pub fn from_dense(m: &DenseMatrix) -> Self {
+        Self::from_csc(&CscMatrix::from_dense(m))
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// (column indices, values) of one row.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[usize], &[f64]) {
+        let (s, e) = (self.rowptr[r], self.rowptr[r + 1]);
+        (&self.colidx[s..e], &self.values[s..e])
+    }
+
+    /// y = A·x.
+    pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.cols {
+            return Err(CaError::Shape(format!(
+                "csr matvec: A is {}x{}, x has {}",
+                self.rows,
+                self.cols,
+                x.len()
+            )));
+        }
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let (ci, vs) = self.row(r);
+            let mut acc = 0.0;
+            for (&c, &v) in ci.iter().zip(vs) {
+                acc += v * x[c];
+            }
+            y[r] = acc;
+        }
+        Ok(y)
+    }
+
+    /// Densify.
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (ci, vs) = self.row(r);
+            for (&c, &v) in ci.iter().zip(vs) {
+                m.set(r, c, v);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn csr_csc_dense_agree() {
+        let d = DenseMatrix::from_fn(5, 7, |r, c| {
+            if (r * 7 + c) % 3 == 0 {
+                (r as f64) - (c as f64) * 0.5
+            } else {
+                0.0
+            }
+        });
+        let csc = CscMatrix::from_dense(&d);
+        let csr = CsrMatrix::from_csc(&csc);
+        assert_eq!(csr.to_dense(), d);
+        assert_eq!(csr.nnz(), csc.nnz());
+    }
+
+    #[test]
+    fn row_access() {
+        let m = CsrMatrix::from_triplets(2, 3, &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0)]).unwrap();
+        let (ci, vs) = m.row(0);
+        assert_eq!(ci, &[0, 2]);
+        assert_eq!(vs, &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = CsrMatrix::from_triplets(3, 3, &[(0, 0, 2.0), (1, 2, -1.0), (2, 1, 4.0)]).unwrap();
+        let x = [1.0, 2.0, 3.0];
+        assert_eq!(m.matvec(&x).unwrap(), m.to_dense().matvec(&x).unwrap());
+        assert!(m.matvec(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn prop_csr_roundtrip() {
+        prop_check("CSR roundtrips through dense", 30, |g| {
+            let rows = g.usize_in(1, 9);
+            let cols = g.usize_in(1, 9);
+            let dense = DenseMatrix::from_fn(rows, cols, |_, _| {
+                if g.bool(0.3) {
+                    g.f64_in(-1.0, 1.0)
+                } else {
+                    0.0
+                }
+            });
+            let csr = CsrMatrix::from_dense(&dense);
+            if csr.to_dense() != dense {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,479 @@
+//! Row-major dense matrix with the micro-kernels the solvers need.
+//!
+//! This is deliberately a small, dependency-free BLAS subset: `gemv`,
+//! `gemm` (tiled), `syrk`-style Gram products, norms and AXPY-type vector
+//! ops. Everything is f64; the f32 path lives in the PJRT runtime.
+
+use crate::error::{CaError, Result};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Zero matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(CaError::Shape(format!(
+                "from_vec: {}x{} needs {} elements, got {}",
+                rows,
+                cols,
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(DenseMatrix { rows, cols, data })
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Raw row-major data.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw row-major data.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of a column.
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// Transpose (allocates).
+    pub fn transpose(&self) -> DenseMatrix {
+        let mut t = DenseMatrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Select a subset of columns into a new matrix (gather).
+    pub fn gather_cols(&self, idx: &[usize]) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.rows, idx.len());
+        for (j_out, &j) in idx.iter().enumerate() {
+            debug_assert!(j < self.cols);
+            for r in 0..self.rows {
+                out.data[r * idx.len() + j_out] = self.data[r * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// y = A·x  (A: rows×cols, x: cols).
+    pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.cols {
+            return Err(CaError::Shape(format!(
+                "matvec: A is {}x{}, x has {}",
+                self.rows,
+                self.cols,
+                x.len()
+            )));
+        }
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            y[r] = dot(row, x);
+        }
+        Ok(y)
+    }
+
+    /// y = Aᵀ·x  (x: rows, result: cols) without materializing Aᵀ.
+    pub fn matvec_t(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.rows {
+            return Err(CaError::Shape(format!(
+                "matvec_t: A is {}x{}, x has {}",
+                self.rows,
+                self.cols,
+                x.len()
+            )));
+        }
+        let mut y = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            let row = self.row(r);
+            for c in 0..self.cols {
+                y[c] += xr * row[c];
+            }
+        }
+        Ok(y)
+    }
+
+    /// C = A·B with blocked loops (cache tiling).
+    pub fn matmul(&self, b: &DenseMatrix) -> Result<DenseMatrix> {
+        if self.cols != b.rows {
+            return Err(CaError::Shape(format!(
+                "matmul: {}x{} · {}x{}",
+                self.rows, self.cols, b.rows, b.cols
+            )));
+        }
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = DenseMatrix::zeros(m, n);
+        const TILE: usize = 64;
+        for i0 in (0..m).step_by(TILE) {
+            let i1 = (i0 + TILE).min(m);
+            for k0 in (0..k).step_by(TILE) {
+                let k1 = (k0 + TILE).min(k);
+                for j0 in (0..n).step_by(TILE) {
+                    let j1 = (j0 + TILE).min(n);
+                    for i in i0..i1 {
+                        for kk in k0..k1 {
+                            let a_ik = self.data[i * k + kk];
+                            if a_ik == 0.0 {
+                                continue;
+                            }
+                            let brow = &b.data[kk * n + j0..kk * n + j1];
+                            let crow = &mut c.data[i * n + j0..i * n + j1];
+                            for (cv, bv) in crow.iter_mut().zip(brow) {
+                                *cv += a_ik * bv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(c)
+    }
+
+    /// Symmetric rank-m update: `G += scale · A·Aᵀ` where A = self.
+    ///
+    /// Computes only the upper triangle then mirrors it — the syrk trick
+    /// halves the flops of the Gram product, the dominant cost of both
+    /// algorithms (paper Theorems 1–4 count this as `d²·m` flops).
+    pub fn syrk_into(&self, scale: f64, g: &mut DenseMatrix) -> Result<()> {
+        let d = self.rows;
+        let m = self.cols;
+        if g.rows != d || g.cols != d {
+            return Err(CaError::Shape(format!(
+                "syrk_into: G must be {d}x{d}, got {}x{}",
+                g.rows, g.cols
+            )));
+        }
+        for i in 0..d {
+            let rowi = self.row(i);
+            for j in i..d {
+                let rowj = self.row(j);
+                let s = dot(rowi, rowj) * scale;
+                g.data[i * d + j] += s;
+                if i != j {
+                    g.data[j * d + i] += s;
+                }
+            }
+        }
+        let _ = m;
+        Ok(())
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Largest eigenvalue of a symmetric PSD matrix by power iteration.
+    ///
+    /// Used to estimate the Lipschitz constant `L = λ_max(XXᵀ)/n` that
+    /// sets the solvers' step size.
+    pub fn power_iteration_sym(&self, iters: usize, seed: u64) -> Result<f64> {
+        if self.rows != self.cols {
+            return Err(CaError::Shape("power_iteration_sym needs square".into()));
+        }
+        let n = self.rows;
+        if n == 0 {
+            return Ok(0.0);
+        }
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut v: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        normalize(&mut v);
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            let mut w = self.matvec(&v)?;
+            let nrm = norm2(&w);
+            if nrm == 0.0 {
+                return Ok(0.0);
+            }
+            for x in w.iter_mut() {
+                *x /= nrm;
+            }
+            lambda = nrm;
+            v = w;
+        }
+        Ok(lambda)
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: keeps the FP pipelines busy and gives
+    // deterministic (fixed-order) reassociation.
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// L1 norm.
+#[inline]
+pub fn norm1(a: &[f64]) -> f64 {
+    a.iter().map(|x| x.abs()).sum()
+}
+
+/// Normalize a vector in place (no-op on zero vectors).
+pub fn normalize(a: &mut [f64]) {
+    let n = norm2(a);
+    if n > 0.0 {
+        for x in a.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+/// y += alpha·x.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Elementwise: out = a - b.
+#[inline]
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn approx(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn construction_and_accessors() {
+        let m = DenseMatrix::from_fn(2, 3, |r, c| (r * 3 + c) as f64);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(m.col(2), vec![2.0, 5.0]);
+        assert!(DenseMatrix::from_vec(2, 2, vec![1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = DenseMatrix::from_fn(3, 5, |r, c| (r + 7 * c) as f64);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().get(4, 2), m.get(2, 4));
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        let a = DenseMatrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let y = a.matvec(&[1.0, 0.0, -1.0]).unwrap();
+        assert_eq!(y, vec![-2.0, -2.0]);
+        let yt = a.matvec_t(&[1.0, -1.0]).unwrap();
+        assert_eq!(yt, vec![-3.0, -3.0, -3.0]);
+        assert!(a.matvec(&[1.0]).is_err());
+        assert!(a.matvec_t(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn matmul_identity_and_associativity() {
+        let a = DenseMatrix::from_fn(4, 6, |r, c| ((r * c) % 5) as f64 - 2.0);
+        let i6 = DenseMatrix::eye(6);
+        assert_eq!(a.matmul(&i6).unwrap(), a);
+        let b = DenseMatrix::from_fn(6, 3, |r, c| (r as f64 - c as f64) / 3.0);
+        let c = DenseMatrix::from_fn(3, 2, |r, c| (r + c) as f64);
+        let left = a.matmul(&b).unwrap().matmul(&c).unwrap();
+        let right = a.matmul(&b.matmul(&c).unwrap()).unwrap();
+        for (x, y) in left.data().iter().zip(right.data()) {
+            assert!(approx(*x, *y, 1e-12));
+        }
+    }
+
+    #[test]
+    fn syrk_matches_explicit_gram() {
+        let a = DenseMatrix::from_fn(5, 9, |r, c| ((r * 31 + c * 7) % 11) as f64 / 3.0 - 1.0);
+        let mut g = DenseMatrix::zeros(5, 5);
+        a.syrk_into(0.5, &mut g).unwrap();
+        let explicit = a.matmul(&a.transpose()).unwrap();
+        for i in 0..5 {
+            for j in 0..5 {
+                assert!(approx(g.get(i, j), 0.5 * explicit.get(i, j), 1e-12));
+            }
+        }
+        // Accumulation: calling twice doubles.
+        a.syrk_into(0.5, &mut g).unwrap();
+        assert!(approx(g.get(2, 3), explicit.get(2, 3), 1e-12));
+    }
+
+    #[test]
+    fn gather_cols_selects() {
+        let a = DenseMatrix::from_fn(3, 6, |r, c| (10 * r + c) as f64);
+        let g = a.gather_cols(&[5, 0, 0]);
+        assert_eq!(g.cols(), 3);
+        assert_eq!(g.col(0), vec![5.0, 15.0, 25.0]);
+        assert_eq!(g.col(1), vec![0.0, 10.0, 20.0]);
+        assert_eq!(g.col(2), g.col(1));
+    }
+
+    #[test]
+    fn power_iteration_finds_dominant_eigenvalue() {
+        // diag(3, 1, 0.5) — λ_max = 3.
+        let d = DenseMatrix::from_fn(3, 3, |r, c| {
+            if r == c {
+                [3.0, 1.0, 0.5][r]
+            } else {
+                0.0
+            }
+        });
+        let l = d.power_iteration_sym(200, 42).unwrap();
+        assert!(approx(l, 3.0, 1e-6), "λ={l}");
+    }
+
+    #[test]
+    fn vector_helpers() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0, 4.0, 5.0], &[1.0, 1.0, 1.0, 1.0, 1.0]), 15.0);
+        assert_eq!(norm1(&[-1.0, 2.0]), 3.0);
+        assert!(approx(norm2(&[3.0, 4.0]), 5.0, 1e-15));
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[1.0, -1.0], &mut y);
+        assert_eq!(y, vec![3.0, -1.0]);
+        assert_eq!(sub(&[3.0], &[1.0]), vec![2.0]);
+        let mut v = vec![0.0, 0.0];
+        normalize(&mut v); // zero-vector no-op
+        assert_eq!(v, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn prop_matmul_linearity() {
+        prop_check("matmul distributes over vector addition", 40, |g| {
+            let m = g.usize_in(1, 8);
+            let n = g.usize_in(1, 8);
+            let data = g.vec_gauss(m * n);
+            let a = DenseMatrix::from_vec(m, n, data).unwrap();
+            let x = g.vec_gauss(n);
+            let y = g.vec_gauss(n);
+            let xy: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+            let lhs = a.matvec(&xy).unwrap();
+            let mut rhs = a.matvec(&x).unwrap();
+            let ay = a.matvec(&y).unwrap();
+            axpy(1.0, &ay, &mut rhs);
+            for (l, r) in lhs.iter().zip(&rhs) {
+                if !approx(*l, *r, 1e-10) {
+                    return Err(format!("linearity violated: {l} vs {r}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_gram_psd_diagonal() {
+        prop_check("Gram matrix has non-negative diagonal and symmetry", 40, |g| {
+            let d = g.usize_in(1, 10);
+            let m = g.usize_in(1, 12);
+            let a = DenseMatrix::from_vec(d, m, g.vec_gauss(d * m)).unwrap();
+            let mut gram = DenseMatrix::zeros(d, d);
+            a.syrk_into(1.0, &mut gram).unwrap();
+            for i in 0..d {
+                if gram.get(i, i) < -1e-12 {
+                    return Err(format!("negative diagonal {}", gram.get(i, i)));
+                }
+                for j in 0..d {
+                    if (gram.get(i, j) - gram.get(j, i)).abs() > 1e-12 {
+                        return Err("asymmetric".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,23 @@
+//! Dense and sparse matrix substrate.
+//!
+//! The paper stores the data matrix `X ∈ R^{d×n}` with **rows = features,
+//! columns = samples** and distributes it column-wise (samples) across
+//! processors. The kernels that dominate both algorithms are the *sampled
+//! Gram products* over a column subset `S` (|S| = m):
+//!
+//! ```text
+//!   G = (1/m) · X_S X_Sᵀ   ∈ R^{d×d}
+//!   R = (1/m) · X_S y_S    ∈ R^d
+//! ```
+//!
+//! [`dense`] provides a row-major dense matrix with micro-tiled kernels;
+//! [`csc`] / [`csr`] provide compressed sparse storage (CSC is the natural
+//! layout for column sampling); [`ops`] implements the sampled Gram
+//! products with exact flop counting; [`partition`] implements the
+//! nnz-balanced column partitioning assumed in §III of the paper.
+
+pub mod csc;
+pub mod csr;
+pub mod dense;
+pub mod ops;
+pub mod partition;

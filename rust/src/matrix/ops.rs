@@ -1,0 +1,456 @@
+//! Sampled Gram products — the flop hot-spot of every algorithm in the
+//! paper — plus the stacked-block container used as the all-reduce payload.
+//!
+//! For a sampled column subset `S` (|S| = m, global sample count across
+//! all processors), each worker accumulates its *local contribution*
+//!
+//! ```text
+//!   G_loc = (1/m) Σ_{c ∈ S_loc} x_c x_cᵀ        (d × d)
+//!   R_loc = (1/m) Σ_{c ∈ S_loc} y_c · x_c       (d)
+//! ```
+//!
+//! over the sampled columns it owns; the all-reduce sums the local
+//! contributions so every processor ends with the paper's
+//! `G = (1/m) X I_j I_jᵀ Xᵀ` and `R = (1/m) X I_j I_jᵀ y` (Alg. III line 6).
+//!
+//! All kernels return an exact flop count so the cost-model traces
+//! (Table I) are grounded in measured arithmetic, not estimates.
+
+use crate::error::{CaError, Result};
+use crate::matrix::csc::CscMatrix;
+use crate::matrix::dense::DenseMatrix;
+
+/// One Gram block: `G` flattened row-major (d²) followed by `R` (d).
+/// Layout is the wire format for collectives and the PJRT boundary.
+#[derive(Clone, Debug)]
+pub struct GramBlock {
+    /// Feature dimension d.
+    pub d: usize,
+    /// Flat buffer: `[G row-major (d·d) | R (d)]`.
+    pub data: Vec<f64>,
+}
+
+impl GramBlock {
+    /// Zeroed block.
+    pub fn zeros(d: usize) -> Self {
+        GramBlock { d, data: vec![0.0; d * d + d] }
+    }
+
+    /// Gram matrix part (d²).
+    pub fn g(&self) -> &[f64] {
+        &self.data[..self.d * self.d]
+    }
+
+    /// R vector part (d).
+    pub fn r(&self) -> &[f64] {
+        &self.data[self.d * self.d..]
+    }
+
+    /// Split mutable views (G, R).
+    pub fn parts_mut(&mut self) -> (&mut [f64], &mut [f64]) {
+        self.data.split_at_mut(self.d * self.d)
+    }
+
+    /// `∇f(w) = G·w − R`, written into `grad`.
+    pub fn gradient_into(&self, w: &[f64], grad: &mut [f64]) -> Result<()> {
+        let d = self.d;
+        if w.len() != d || grad.len() != d {
+            return Err(CaError::Shape(format!(
+                "gradient_into: d={d}, w={}, grad={}",
+                w.len(),
+                grad.len()
+            )));
+        }
+        let g = self.g();
+        let r = self.r();
+        for i in 0..d {
+            let row = &g[i * d..(i + 1) * d];
+            grad[i] = crate::matrix::dense::dot(row, w) - r[i];
+        }
+        Ok(())
+    }
+}
+
+/// A stack of `k` Gram blocks in one contiguous buffer — the paper's
+/// `G = [G_1|…|G_k] ∈ R^{d×kd}`, `R = [R_1|…|R_k] ∈ R^{d×k}` concatenation
+/// (Alg. III line 7), laid out block-major so a single all-reduce covers
+/// all of it.
+#[derive(Clone, Debug)]
+pub struct GramStack {
+    /// Feature dimension d.
+    pub d: usize,
+    /// Number of blocks (the k in k-step).
+    pub k: usize,
+    /// `k · (d² + d)` f64 values; block j at offset `j·(d²+d)`.
+    pub data: Vec<f64>,
+}
+
+impl GramStack {
+    /// Zeroed stack of k blocks.
+    pub fn zeros(d: usize, k: usize) -> Self {
+        GramStack { d, k, data: vec![0.0; k * (d * d + d)] }
+    }
+
+    /// Size in f64 words of one block.
+    #[inline]
+    pub fn block_len(&self) -> usize {
+        self.d * self.d + self.d
+    }
+
+    /// Total payload length in words — the bandwidth cost of the
+    /// one-per-k-iterations all-reduce.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the stack holds no blocks.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Immutable view of block j as (G, R).
+    pub fn block(&self, j: usize) -> (&[f64], &[f64]) {
+        assert!(j < self.k, "block {j} out of {}", self.k);
+        let b = self.block_len();
+        let s = j * b;
+        let g_end = s + self.d * self.d;
+        (&self.data[s..g_end], &self.data[g_end..s + b])
+    }
+
+    /// Mutable view of block j as (G, R).
+    pub fn block_mut(&mut self, j: usize) -> (&mut [f64], &mut [f64]) {
+        assert!(j < self.k, "block {j} out of {}", self.k);
+        let b = self.block_len();
+        let d2 = self.d * self.d;
+        let s = j * b;
+        let (_, rest) = self.data.split_at_mut(s);
+        let (blk, _) = rest.split_at_mut(b);
+        blk.split_at_mut(d2)
+    }
+
+    /// Zero the buffer (reused across outer iterations on the hot path —
+    /// no allocation inside the solver loop).
+    pub fn clear(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// `∇f(w) = G_j·w − R_j` for block j, written into `grad`.
+    pub fn gradient_into(&self, j: usize, w: &[f64], grad: &mut [f64]) -> Result<()> {
+        let d = self.d;
+        if w.len() != d || grad.len() != d {
+            return Err(CaError::Shape(format!(
+                "gradient_into: d={d}, w={}, grad={}",
+                w.len(),
+                grad.len()
+            )));
+        }
+        let (g, r) = self.block(j);
+        for i in 0..d {
+            let row = &g[i * d..(i + 1) * d];
+            grad[i] = crate::matrix::dense::dot(row, w) - r[i];
+        }
+        Ok(())
+    }
+}
+
+/// Accumulate the sampled Gram contribution of a **dense** shard.
+///
+/// `idx` are local column indices into `x` (the worker's shard);
+/// `inv_m = 1/m` uses the *global* sample count. Returns flops performed.
+pub fn sampled_gram_dense(
+    x: &DenseMatrix,
+    y: &[f64],
+    idx: &[usize],
+    inv_m: f64,
+    g: &mut [f64],
+    r: &mut [f64],
+) -> Result<u64> {
+    let d = x.rows();
+    if y.len() != x.cols() {
+        return Err(CaError::Shape(format!("y has {} for {} cols", y.len(), x.cols())));
+    }
+    if g.len() != d * d || r.len() != d {
+        return Err(CaError::Shape(format!(
+            "outputs: g={} (need {}), r={} (need {d})",
+            g.len(),
+            d * d,
+            r.len()
+        )));
+    }
+    let mut flops = 0u64;
+    let mut xc = vec![0.0; d];
+    for &c in idx {
+        if c >= x.cols() {
+            return Err(CaError::Shape(format!("column {c} out of {}", x.cols())));
+        }
+        for i in 0..d {
+            xc[i] = x.get(i, c);
+        }
+        // Rank-1 update of the upper triangle, mirrored.
+        for i in 0..d {
+            let xi = xc[i] * inv_m;
+            if xi == 0.0 {
+                continue;
+            }
+            for j in i..d {
+                let v = xi * xc[j];
+                g[i * d + j] += v;
+                if i != j {
+                    g[j * d + i] += v;
+                }
+            }
+            flops += 2 * (d - i) as u64;
+        }
+        let yc = y[c] * inv_m;
+        for i in 0..d {
+            r[i] += yc * xc[i];
+        }
+        flops += 2 * d as u64;
+    }
+    Ok(flops)
+}
+
+/// Accumulate the sampled Gram contribution of a **CSC sparse** shard.
+/// Only the nonzeros of each sampled column are touched.
+pub fn sampled_gram_csc(
+    x: &CscMatrix,
+    y: &[f64],
+    idx: &[usize],
+    inv_m: f64,
+    g: &mut [f64],
+    r: &mut [f64],
+) -> Result<u64> {
+    let d = x.rows();
+    if y.len() != x.cols() {
+        return Err(CaError::Shape(format!("y has {} for {} cols", y.len(), x.cols())));
+    }
+    if g.len() != d * d || r.len() != d {
+        return Err(CaError::Shape("bad output shapes".into()));
+    }
+    let mut flops = 0u64;
+    // Hot path (§Perf): two regimes.
+    //
+    // * Large samples: accumulate the **upper triangle only** — CSC
+    //   columns store rows ascending, so `ri[b] ≥ ia` and the row slice
+    //   `grow` turns the scatter into forward streaming writes (half the
+    //   writes of the naive double-update). The lower triangle is
+    //   mirrored once at the end; every contribution is symmetric, so
+    //   the upper→lower copy is exact.
+    // * Small samples (per-worker calls where the O(d²) mirror would
+    //   dominate the O(idx·nnz²) work): classic double write, no mirror.
+    let mirror = idx.len() * 8 >= d; // heuristic: work amortizes the d²/2 mirror
+    for &c in idx {
+        if c >= x.cols() {
+            return Err(CaError::Shape(format!("column {c} out of {}", x.cols())));
+        }
+        let (ri, vs) = x.col(c);
+        let nnz = ri.len();
+        for a in 0..nnz {
+            let ia = ri[a];
+            let va = vs[a] * inv_m;
+            if mirror {
+                let grow = &mut g[ia * d..(ia + 1) * d];
+                for b in a..nnz {
+                    grow[ri[b]] += va * vs[b];
+                }
+            } else {
+                for b in a..nnz {
+                    let v = va * vs[b];
+                    g[ia * d + ri[b]] += v;
+                    if a != b {
+                        g[ri[b] * d + ia] += v;
+                    }
+                }
+            }
+            flops += 2 * (nnz - a) as u64;
+        }
+        let yc = y[c] * inv_m;
+        for (&i, &v) in ri.iter().zip(vs) {
+            r[i] += yc * v;
+        }
+        flops += 2 * nnz as u64;
+    }
+    if mirror && !idx.is_empty() {
+        for i in 0..d {
+            for j in (i + 1)..d {
+                g[j * d + i] = g[i * d + j];
+            }
+        }
+    }
+    Ok(flops)
+}
+
+/// Full-batch Gram (all columns, scale 1/n) — used by the batch baselines
+/// and the reference solver. Returns (GramBlock, flops).
+pub fn full_gram_csc(x: &CscMatrix, y: &[f64]) -> Result<(GramBlock, u64)> {
+    let idx: Vec<usize> = (0..x.cols()).collect();
+    let mut blk = GramBlock::zeros(x.rows());
+    let inv_n = 1.0 / x.cols().max(1) as f64;
+    let d = x.rows();
+    let (g, r) = blk.parts_mut();
+    let flops = sampled_gram_csc(x, y, &idx, inv_n, g, r)?;
+    let _ = d;
+    Ok((blk, flops))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    fn approx(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    /// Oracle: explicit (1/m)·X_S X_Sᵀ via dense matmul.
+    fn oracle(x: &DenseMatrix, y: &[f64], idx: &[usize], inv_m: f64) -> (Vec<f64>, Vec<f64>) {
+        let xs = x.gather_cols(idx);
+        let gm = xs.matmul(&xs.transpose()).unwrap();
+        let g: Vec<f64> = gm.data().iter().map(|v| v * inv_m).collect();
+        let ys: Vec<f64> = idx.iter().map(|&c| y[c]).collect();
+        let r: Vec<f64> = xs.matvec(&ys).unwrap().iter().map(|v| v * inv_m).collect();
+        (g, r)
+    }
+
+    #[test]
+    fn dense_gram_matches_oracle() {
+        let mut rng = Rng::new(3);
+        let (d, n) = (6, 20);
+        let x = DenseMatrix::from_fn(d, n, |_, _| rng.next_gaussian());
+        let y: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let idx = [3, 7, 7, 19, 0];
+        let inv_m = 1.0 / idx.len() as f64;
+        let mut g = vec![0.0; d * d];
+        let mut r = vec![0.0; d];
+        let flops = sampled_gram_dense(&x, &y, &idx, inv_m, &mut g, &mut r).unwrap();
+        assert!(flops > 0);
+        let (go, ro) = oracle(&x, &y, &idx, inv_m);
+        for (a, b) in g.iter().zip(&go) {
+            assert!(approx(*a, *b, 1e-12), "{a} vs {b}");
+        }
+        for (a, b) in r.iter().zip(&ro) {
+            assert!(approx(*a, *b, 1e-12), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sparse_gram_matches_dense_gram() {
+        let mut rng = Rng::new(5);
+        let (d, n) = (8, 30);
+        let x = DenseMatrix::from_fn(d, n, |_, _| {
+            if rng.next_bool(0.3) {
+                rng.next_gaussian()
+            } else {
+                0.0
+            }
+        });
+        let xs = CscMatrix::from_dense(&x);
+        let y: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let idx: Vec<usize> = rng.sample_without_replacement(n, 12);
+        let inv_m = 1.0 / 12.0;
+        let mut gd = vec![0.0; d * d];
+        let mut rd = vec![0.0; d];
+        sampled_gram_dense(&x, &y, &idx, inv_m, &mut gd, &mut rd).unwrap();
+        let mut gs = vec![0.0; d * d];
+        let mut rs = vec![0.0; d];
+        sampled_gram_csc(&xs, &y, &idx, inv_m, &mut gs, &mut rs).unwrap();
+        for (a, b) in gd.iter().zip(&gs) {
+            assert!(approx(*a, *b, 1e-12));
+        }
+        for (a, b) in rd.iter().zip(&rs) {
+            assert!(approx(*a, *b, 1e-12));
+        }
+    }
+
+    #[test]
+    fn gram_block_gradient() {
+        // G = I, R = [1, 2] -> grad(w) = w - R.
+        let mut blk = GramBlock::zeros(2);
+        {
+            let (g, r) = blk.parts_mut();
+            g[0] = 1.0;
+            g[3] = 1.0;
+            r[0] = 1.0;
+            r[1] = 2.0;
+        }
+        let mut grad = vec![0.0; 2];
+        blk.gradient_into(&[3.0, 3.0], &mut grad).unwrap();
+        assert_eq!(grad, vec![2.0, 1.0]);
+        assert!(blk.gradient_into(&[1.0], &mut grad).is_err());
+    }
+
+    #[test]
+    fn gram_stack_layout() {
+        let mut st = GramStack::zeros(3, 4);
+        assert_eq!(st.block_len(), 12);
+        assert_eq!(st.len(), 48);
+        {
+            let (g, r) = st.block_mut(2);
+            g[0] = 7.0;
+            r[2] = 9.0;
+        }
+        let (g2, r2) = st.block(2);
+        assert_eq!(g2[0], 7.0);
+        assert_eq!(r2[2], 9.0);
+        let (g1, _) = st.block(1);
+        assert!(g1.iter().all(|&v| v == 0.0));
+        st.clear();
+        let (g2, r2) = st.block(2);
+        assert!(g2.iter().all(|&v| v == 0.0) && r2.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn gram_stack_block_bounds() {
+        let st = GramStack::zeros(2, 2);
+        st.block(2);
+    }
+
+    #[test]
+    fn full_gram_scales_by_n() {
+        let x = CscMatrix::from_dense(&DenseMatrix::from_fn(2, 4, |r, c| (r + c) as f64));
+        let y = vec![1.0; 4];
+        let (blk, _) = full_gram_csc(&x, &y).unwrap();
+        // G[0][0] = (1/4)·Σ_c c² = (0+1+4+9)/4 = 3.5
+        assert!(approx(blk.g()[0], 3.5, 1e-12));
+    }
+
+    #[test]
+    fn prop_partition_additivity() {
+        // Gram over idx A ∪ B == Gram(A) + Gram(B): the property that makes
+        // the distributed all-reduce correct.
+        prop_check("sampled gram is additive over index partition", 30, |gen| {
+            let d = gen.usize_in(1, 7);
+            let n = gen.usize_in(2, 20);
+            let dense = DenseMatrix::from_fn(d, n, |_, _| gen.f64_in(-1.0, 1.0));
+            let y = gen.vec_f64(n, -1.0, 1.0);
+            let m = gen.usize_in(1, n);
+            let idx = gen.rng().sample_without_replacement(n, m);
+            let split = gen.usize_in(0, m);
+            let inv_m = 1.0 / m as f64;
+
+            let mut g_all = vec![0.0; d * d];
+            let mut r_all = vec![0.0; d];
+            sampled_gram_dense(&dense, &y, &idx, inv_m, &mut g_all, &mut r_all).unwrap();
+
+            let mut g_sum = vec![0.0; d * d];
+            let mut r_sum = vec![0.0; d];
+            sampled_gram_dense(&dense, &y, &idx[..split], inv_m, &mut g_sum, &mut r_sum).unwrap();
+            sampled_gram_dense(&dense, &y, &idx[split..], inv_m, &mut g_sum, &mut r_sum).unwrap();
+
+            for (a, b) in g_all.iter().zip(&g_sum) {
+                if (a - b).abs() > 1e-10 {
+                    return Err(format!("G additivity: {a} vs {b}"));
+                }
+            }
+            for (a, b) in r_all.iter().zip(&r_sum) {
+                if (a - b).abs() > 1e-10 {
+                    return Err(format!("R additivity: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,220 @@
+//! Column partitioning of the data matrix across processors.
+//!
+//! The paper (§III) assumes "columns of X are distributed in a way that
+//! each processor has roughly the same number of nonzeros". Two schemes:
+//!
+//! * [`contiguous_by_nnz`] — contiguous column ranges with balanced nnz
+//!   (what an MPI code would scatter);
+//! * [`greedy_by_nnz`] — longest-processing-time greedy assignment,
+//!   tighter balance for skewed columns, non-contiguous.
+
+use crate::matrix::csc::CscMatrix;
+
+/// A partition of `n` columns over `p` parts: `owner[c] = part`, plus the
+/// member list per part.
+#[derive(Clone, Debug)]
+pub struct ColumnPartition {
+    /// Number of parts (processors).
+    pub parts: usize,
+    /// For each column, its owning part.
+    pub owner: Vec<usize>,
+    /// For each part, the (sorted) columns it owns.
+    pub members: Vec<Vec<usize>>,
+}
+
+impl ColumnPartition {
+    fn from_owner(parts: usize, owner: Vec<usize>) -> Self {
+        let mut members = vec![Vec::new(); parts];
+        for (c, &p) in owner.iter().enumerate() {
+            members[p].push(c);
+        }
+        ColumnPartition { parts, owner, members }
+    }
+
+    /// nnz per part for a given matrix.
+    pub fn nnz_per_part(&self, x: &CscMatrix) -> Vec<usize> {
+        let mut nnz = vec![0usize; self.parts];
+        for (c, &p) in self.owner.iter().enumerate() {
+            nnz[p] += x.col_nnz(c);
+        }
+        nnz
+    }
+
+    /// Max/mean nnz imbalance ratio (1.0 = perfect).
+    pub fn imbalance(&self, x: &CscMatrix) -> f64 {
+        let nnz = self.nnz_per_part(x);
+        let total: usize = nnz.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / self.parts as f64;
+        let max = *nnz.iter().max().unwrap() as f64;
+        max / mean
+    }
+}
+
+/// Split columns into `p` contiguous ranges with approximately equal nnz.
+///
+/// Walks columns left to right, cutting when the running nnz reaches the
+/// ideal per-part share. Every part is non-empty when `n ≥ p`.
+pub fn contiguous_by_nnz(x: &CscMatrix, p: usize) -> ColumnPartition {
+    let n = x.cols();
+    assert!(p >= 1);
+    let total: usize = (0..n).map(|c| x.col_nnz(c)).sum();
+    let mut owner = vec![0usize; n];
+    if p == 1 || n == 0 {
+        return ColumnPartition::from_owner(p, owner);
+    }
+    let ideal = total as f64 / p as f64;
+    let mut part = 0usize;
+    let mut acc = 0usize;
+    for c in 0..n {
+        // Ensure the remaining parts can each get at least one column.
+        let remaining_cols = n - c;
+        let remaining_parts = p - part;
+        if part < p - 1
+            && ((acc as f64 >= ideal * (part + 1) as f64 && remaining_cols > remaining_parts - 1)
+                || remaining_cols == remaining_parts)
+        {
+            part += 1;
+        }
+        owner[c] = part;
+        acc += x.col_nnz(c);
+    }
+    ColumnPartition::from_owner(p, owner)
+}
+
+/// Greedy longest-processing-time assignment: sort columns by nnz
+/// descending, place each on the currently lightest part.
+pub fn greedy_by_nnz(x: &CscMatrix, p: usize) -> ColumnPartition {
+    let n = x.cols();
+    assert!(p >= 1);
+    let mut cols: Vec<usize> = (0..n).collect();
+    cols.sort_by_key(|&c| std::cmp::Reverse(x.col_nnz(c).max(1)));
+    let mut load = vec![0usize; p];
+    let mut count = vec![0usize; p];
+    let mut owner = vec![0usize; n];
+    for c in cols {
+        // Lightest load; tie-break on fewest columns to keep counts even
+        // for uniform matrices.
+        let mut best = 0usize;
+        for q in 1..p {
+            if (load[q], count[q]) < (load[best], count[best]) {
+                best = q;
+            }
+        }
+        owner[c] = best;
+        load[best] += x.col_nnz(c).max(1);
+        count[best] += 1;
+    }
+    ColumnPartition::from_owner(p, owner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::dense::DenseMatrix;
+    use crate::util::prop::prop_check;
+
+    fn uniform(d: usize, n: usize) -> CscMatrix {
+        CscMatrix::from_dense(&DenseMatrix::from_fn(d, n, |r, c| (1 + r + c) as f64))
+    }
+
+    #[test]
+    fn contiguous_covers_all_columns_in_order() {
+        let x = uniform(3, 10);
+        let part = contiguous_by_nnz(&x, 4);
+        assert_eq!(part.owner.len(), 10);
+        // Owners are non-decreasing (contiguity).
+        for w in part.owner.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // All parts non-empty.
+        assert!(part.members.iter().all(|m| !m.is_empty()));
+        // Membership consistent with owner.
+        for (p, m) in part.members.iter().enumerate() {
+            for &c in m {
+                assert_eq!(part.owner[c], p);
+            }
+        }
+    }
+
+    #[test]
+    fn contiguous_single_part() {
+        let x = uniform(2, 5);
+        let part = contiguous_by_nnz(&x, 1);
+        assert!(part.owner.iter().all(|&p| p == 0));
+        assert!((part.imbalance(&x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn greedy_balances_skewed_nnz() {
+        // One very heavy column + many light ones.
+        let mut trip = vec![];
+        for r in 0..50 {
+            trip.push((r, 0, 1.0)); // col 0: 50 nnz
+        }
+        for c in 1..26 {
+            trip.push((0, c, 1.0)); // 25 cols with 1 nnz
+        }
+        let x = CscMatrix::from_triplets(50, 26, &trip).unwrap();
+        let part = greedy_by_nnz(&x, 2);
+        let nnz = part.nnz_per_part(&x);
+        // Greedy puts heavy col alone-ish: |50 - 25| split.
+        assert_eq!(nnz.iter().sum::<usize>(), 75);
+        assert!(part.imbalance(&x) < 1.5, "imbalance {}", part.imbalance(&x));
+    }
+
+    #[test]
+    fn prop_partitions_are_exact_covers() {
+        prop_check("partition covers each column exactly once", 30, |g| {
+            let d = g.usize_in(1, 6);
+            let n = g.usize_in(1, 40);
+            let p = g.usize_in(1, n.min(8));
+            let dense = DenseMatrix::from_fn(d, n, |_, _| {
+                if g.bool(0.5) {
+                    g.f64_in(-1.0, 1.0)
+                } else {
+                    0.0
+                }
+            });
+            let x = CscMatrix::from_dense(&dense);
+            for part in [contiguous_by_nnz(&x, p), greedy_by_nnz(&x, p)] {
+                let mut seen = vec![false; n];
+                for (q, m) in part.members.iter().enumerate() {
+                    for &c in m {
+                        if seen[c] {
+                            return Err(format!("column {c} assigned twice"));
+                        }
+                        seen[c] = true;
+                        if part.owner[c] != q {
+                            return Err("owner/member mismatch".into());
+                        }
+                    }
+                }
+                if !seen.iter().all(|&s| s) {
+                    return Err("column unassigned".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_greedy_imbalance_bounded_for_uniform() {
+        prop_check("greedy imbalance small for uniform matrices", 20, |g| {
+            let n = g.usize_in(16, 64);
+            let p = g.usize_in(2, 8);
+            if n < p * 2 {
+                return Ok(());
+            }
+            let x = uniform(4, n);
+            let part = greedy_by_nnz(&x, p);
+            let imb = part.imbalance(&x);
+            if imb > 1.5 {
+                return Err(format!("imbalance {imb} for n={n} p={p}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,5 @@
+//! Run reports: convergence histories, speedup tables, CSV/JSON export.
+
+pub mod report;
+
+pub use report::{RunReport, SpeedupCell, SpeedupTable};

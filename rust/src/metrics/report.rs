@@ -1,0 +1,197 @@
+//! Structured run reports for experiments and benches.
+
+use crate::solvers::traits::SolverOutput;
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// A complete run report: configuration echo + solver output.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Dataset name.
+    pub dataset: String,
+    /// Processor count.
+    pub p: usize,
+    /// k-step parameter.
+    pub k: usize,
+    /// Sampling rate b.
+    pub b: f64,
+    /// Machine model name.
+    pub machine: String,
+    /// Solver output.
+    pub output: SolverOutput,
+}
+
+impl RunReport {
+    /// JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("p", Json::Num(self.p as f64)),
+            ("k", Json::Num(self.k as f64)),
+            ("b", Json::Num(self.b)),
+            ("machine", Json::Str(self.machine.clone())),
+            ("result", self.output.to_json()),
+        ])
+    }
+
+    /// Convergence history as CSV (`iter,objective,rel_error,modeled_seconds`).
+    pub fn history_csv(&self) -> String {
+        let mut s = String::from("iter,objective,rel_error,modeled_seconds\n");
+        for h in &self.output.history {
+            let _ = writeln!(
+                s,
+                "{},{:.9e},{:.9e},{:.9e}",
+                h.iter, h.objective, h.rel_error, h.modeled_seconds
+            );
+        }
+        s
+    }
+}
+
+/// One cell of a speedup grid (Figures 4–6).
+#[derive(Clone, Copy, Debug)]
+pub struct SpeedupCell {
+    /// Processors.
+    pub p: usize,
+    /// k-step parameter.
+    pub k: usize,
+    /// Modeled time of the baseline (classical, same P).
+    pub baseline_seconds: f64,
+    /// Modeled time of the CA variant.
+    pub ca_seconds: f64,
+}
+
+impl SpeedupCell {
+    /// Speedup over the classical baseline.
+    pub fn speedup(&self) -> f64 {
+        if self.ca_seconds > 0.0 {
+            self.baseline_seconds / self.ca_seconds
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// A speedup table over (P, k) combinations for one dataset.
+#[derive(Clone, Debug, Default)]
+pub struct SpeedupTable {
+    /// Dataset name.
+    pub dataset: String,
+    /// Cells in insertion order.
+    pub cells: Vec<SpeedupCell>,
+}
+
+impl SpeedupTable {
+    /// New empty table.
+    pub fn new(dataset: &str) -> Self {
+        SpeedupTable { dataset: dataset.to_string(), cells: Vec::new() }
+    }
+
+    /// Add a cell.
+    pub fn push(&mut self, cell: SpeedupCell) {
+        self.cells.push(cell);
+    }
+
+    /// Pretty text table: rows = P, columns = k, entries = speedup.
+    pub fn render(&self) -> String {
+        let mut ps: Vec<usize> = self.cells.iter().map(|c| c.p).collect();
+        ps.sort_unstable();
+        ps.dedup();
+        let mut ks: Vec<usize> = self.cells.iter().map(|c| c.k).collect();
+        ks.sort_unstable();
+        ks.dedup();
+        let mut s = format!("speedup over classical — {}\n", self.dataset);
+        let _ = write!(s, "{:>6}", "P\\k");
+        for k in &ks {
+            let _ = write!(s, "{k:>9}");
+        }
+        s.push('\n');
+        for p in &ps {
+            let _ = write!(s, "{p:>6}");
+            for k in &ks {
+                match self.cells.iter().find(|c| c.p == *p && c.k == *k) {
+                    Some(c) => {
+                        let _ = write!(s, "{:>8.2}x", c.speedup());
+                    }
+                    None => {
+                        let _ = write!(s, "{:>9}", "-");
+                    }
+                }
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// CSV form (`p,k,baseline_seconds,ca_seconds,speedup`).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("p,k,baseline_seconds,ca_seconds,speedup\n");
+        for c in &self.cells {
+            let _ = writeln!(
+                s,
+                "{},{},{:.9e},{:.9e},{:.4}",
+                c.p, c.k, c.baseline_seconds, c.ca_seconds, c.speedup()
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::traits::HistoryPoint;
+
+    fn dummy_output() -> SolverOutput {
+        SolverOutput {
+            algorithm: "CA-SFISTA(k=8)".into(),
+            w: vec![1.0],
+            iterations: 5,
+            final_objective: 0.5,
+            final_rel_error: 0.1,
+            modeled_seconds: 2.5,
+            wall_seconds: 0.01,
+            trace: Default::default(),
+            history: vec![HistoryPoint {
+                iter: 5,
+                objective: 0.5,
+                rel_error: 0.1,
+                modeled_seconds: 2.5,
+            }],
+        }
+    }
+
+    #[test]
+    fn report_json_and_csv() {
+        let r = RunReport {
+            dataset: "covtype".into(),
+            p: 8,
+            k: 8,
+            b: 0.1,
+            machine: "comet".into(),
+            output: dummy_output(),
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("p").unwrap().as_usize(), Some(8));
+        let csv = r.history_csv();
+        assert!(csv.starts_with("iter,objective"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn speedup_math_and_render() {
+        let mut t = SpeedupTable::new("abalone");
+        t.push(SpeedupCell { p: 8, k: 16, baseline_seconds: 10.0, ca_seconds: 2.0 });
+        t.push(SpeedupCell { p: 64, k: 16, baseline_seconds: 10.0, ca_seconds: 1.0 });
+        assert_eq!(t.cells[0].speedup(), 5.0);
+        let txt = t.render();
+        assert!(txt.contains("abalone"));
+        assert!(txt.contains("5.00x"));
+        assert!(txt.contains("10.00x"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        // Zero time guards.
+        let inf = SpeedupCell { p: 1, k: 1, baseline_seconds: 1.0, ca_seconds: 0.0 };
+        assert!(inf.speedup().is_infinite());
+    }
+}

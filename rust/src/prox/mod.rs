@@ -1,0 +1,15 @@
+//! Proximal operators and the LASSO objective.
+//!
+//! [`soft_threshold`] is the paper's Eq. (7); [`operators`] adds the other
+//! standard proximal maps (L2, elastic net, box) so the library covers the
+//! general composite problem `min f(w) + g(w)` of Eq. (1), not only LASSO.
+//! [`objective`] evaluates the LASSO objective and the relative solution
+//! error used as the paper's convergence metric.
+
+pub mod objective;
+pub mod operators;
+pub mod soft_threshold;
+
+pub use objective::LassoObjective;
+pub use operators::ProxOp;
+pub use soft_threshold::{soft_threshold, soft_threshold_into};

@@ -1,0 +1,130 @@
+//! The LASSO objective and the paper's convergence metrics.
+//!
+//! ```text
+//!   F(w) = (1/2n)‖Xᵀw − y‖² + λ‖w‖₁
+//! ```
+//!
+//! and the *relative solution error* `‖w − w_op‖ / ‖w_op‖` (paper §V-A),
+//! where `w_op` comes from the high-accuracy reference solver.
+
+use crate::error::Result;
+use crate::matrix::csc::CscMatrix;
+use crate::matrix::dense::{norm1, norm2, sub};
+
+/// LASSO problem objective over a CSC data matrix.
+#[derive(Clone, Debug)]
+pub struct LassoObjective {
+    /// λ regularization weight.
+    pub lambda: f64,
+}
+
+impl LassoObjective {
+    /// Create with regularization λ.
+    pub fn new(lambda: f64) -> Self {
+        LassoObjective { lambda }
+    }
+
+    /// Smooth part `f(w) = (1/2n)‖Xᵀw − y‖²`.
+    pub fn smooth(&self, x: &CscMatrix, y: &[f64], w: &[f64]) -> Result<f64> {
+        let n = x.cols().max(1) as f64;
+        let resid = sub(&x.matvec_t(w)?, y);
+        Ok(0.5 / n * resid.iter().map(|r| r * r).sum::<f64>())
+    }
+
+    /// Full objective `F(w) = f(w) + λ‖w‖₁`.
+    pub fn value(&self, x: &CscMatrix, y: &[f64], w: &[f64]) -> Result<f64> {
+        Ok(self.smooth(x, y, w)? + self.lambda * norm1(w))
+    }
+
+    /// Exact full-batch gradient `∇f(w) = (1/n)(XXᵀw − Xy)`.
+    pub fn gradient(&self, x: &CscMatrix, y: &[f64], w: &[f64]) -> Result<Vec<f64>> {
+        let n = x.cols().max(1) as f64;
+        let xtw = x.matvec_t(w)?;
+        let resid = sub(&xtw, y);
+        let mut g = x.matvec(&resid)?;
+        for v in g.iter_mut() {
+            *v /= n;
+        }
+        Ok(g)
+    }
+}
+
+/// Relative solution error `‖w − w_op‖ / ‖w_op‖` (paper §V-A).
+/// Falls back to the absolute error when `‖w_op‖ = 0`.
+pub fn relative_solution_error(w: &[f64], w_op: &[f64]) -> f64 {
+    debug_assert_eq!(w.len(), w_op.len());
+    let denom = norm2(w_op);
+    let num = norm2(&sub(w, w_op));
+    if denom > 0.0 {
+        num / denom
+    } else {
+        num
+    }
+}
+
+/// Count of exact zeros in a weight vector (LASSO sparsity diagnostics).
+pub fn sparsity(w: &[f64]) -> usize {
+    w.iter().filter(|&&v| v == 0.0).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::dense::DenseMatrix;
+
+    fn toy() -> (CscMatrix, Vec<f64>) {
+        // X = [[1, 0], [0, 2]] (d=2, n=2), y = [1, 2].
+        let x = CscMatrix::from_dense(
+            &DenseMatrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 2.0]).unwrap(),
+        );
+        (x, vec![1.0, 2.0])
+    }
+
+    #[test]
+    fn objective_at_zero_is_data_norm() {
+        let (x, y) = toy();
+        let obj = LassoObjective::new(0.5);
+        // f(0) = (1/4)(1 + 4) = 1.25; g(0) = 0.
+        assert!((obj.value(&x, &y, &[0.0, 0.0]).unwrap() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (x, y) = toy();
+        let obj = LassoObjective::new(0.0);
+        let w = [0.3, -0.7];
+        let g = obj.gradient(&x, &y, &w).unwrap();
+        let h = 1e-6;
+        for i in 0..2 {
+            let mut wp = w.to_vec();
+            wp[i] += h;
+            let mut wm = w.to_vec();
+            wm[i] -= h;
+            let fd = (obj.smooth(&x, &y, &wp).unwrap() - obj.smooth(&x, &y, &wm).unwrap())
+                / (2.0 * h);
+            assert!((g[i] - fd).abs() < 1e-6, "grad[{i}]={} fd={fd}", g[i]);
+        }
+    }
+
+    #[test]
+    fn gradient_zero_at_least_squares_solution() {
+        let (x, y) = toy();
+        let obj = LassoObjective::new(0.0);
+        // Xᵀw = y exactly at w = [1, 1].
+        let g = obj.gradient(&x, &y, &[1.0, 1.0]).unwrap();
+        assert!(g.iter().all(|v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn rel_error_basics() {
+        assert_eq!(relative_solution_error(&[1.0, 0.0], &[1.0, 0.0]), 0.0);
+        assert!((relative_solution_error(&[2.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-15);
+        // Zero optimum falls back to absolute.
+        assert!((relative_solution_error(&[3.0, 4.0], &[0.0, 0.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        assert_eq!(sparsity(&[0.0, 1.0, 0.0, -2.0]), 2);
+    }
+}

@@ -1,0 +1,138 @@
+//! General proximal operators for the composite problem of Eq. (1).
+//!
+//! The paper's experiments use `g(w) = λ‖w‖₁` (LASSO), but its framework
+//! — and this library's solvers — accept any separable proximal map. The
+//! solvers take a [`ProxOp`]; LASSO is [`ProxOp::L1`].
+
+use crate::prox::soft_threshold::soft_threshold_scalar;
+
+/// A proximal operator `prox_{t·g}(x)` for a regularizer `g`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ProxOp {
+    /// `g = λ‖w‖₁` (LASSO): soft threshold at `λt`.
+    L1 { lambda: f64 },
+    /// `g = (λ/2)‖w‖₂²` (ridge): scaling by `1/(1 + λt)`.
+    L2 { lambda: f64 },
+    /// Elastic net `g = λ(μ‖w‖₁ + (1−μ)/2·‖w‖₂²)`, μ ∈ [0,1].
+    ElasticNet { lambda: f64, mu: f64 },
+    /// Indicator of the box `[lo, hi]^d` (projection).
+    Box { lo: f64, hi: f64 },
+    /// `g = 0`: identity (plain gradient steps).
+    None,
+}
+
+impl ProxOp {
+    /// Apply elementwise to a scalar with step size `t`.
+    #[inline]
+    pub fn apply_scalar(&self, x: f64, t: f64) -> f64 {
+        match *self {
+            ProxOp::L1 { lambda } => soft_threshold_scalar(x, lambda * t),
+            ProxOp::L2 { lambda } => x / (1.0 + lambda * t),
+            ProxOp::ElasticNet { lambda, mu } => {
+                let shrunk = soft_threshold_scalar(x, lambda * mu * t);
+                shrunk / (1.0 + lambda * (1.0 - mu) * t)
+            }
+            ProxOp::Box { lo, hi } => x.clamp(lo, hi),
+            ProxOp::None => x,
+        }
+    }
+
+    /// Apply in place to a vector with step size `t`.
+    pub fn apply(&self, x: &mut [f64], t: f64) {
+        for v in x.iter_mut() {
+            *v = self.apply_scalar(*v, t);
+        }
+    }
+
+    /// Evaluate the regularizer value `g(w)` (for objective reporting).
+    pub fn value(&self, w: &[f64]) -> f64 {
+        match *self {
+            ProxOp::L1 { lambda } => lambda * w.iter().map(|v| v.abs()).sum::<f64>(),
+            ProxOp::L2 { lambda } => 0.5 * lambda * w.iter().map(|v| v * v).sum::<f64>(),
+            ProxOp::ElasticNet { lambda, mu } => {
+                let l1: f64 = w.iter().map(|v| v.abs()).sum();
+                let l2: f64 = w.iter().map(|v| v * v).sum();
+                lambda * (mu * l1 + 0.5 * (1.0 - mu) * l2)
+            }
+            ProxOp::Box { lo, hi } => {
+                if w.iter().all(|&v| v >= lo && v <= hi) {
+                    0.0
+                } else {
+                    f64::INFINITY
+                }
+            }
+            ProxOp::None => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn l1_is_soft_threshold() {
+        let p = ProxOp::L1 { lambda: 2.0 };
+        assert_eq!(p.apply_scalar(5.0, 0.5), 4.0); // λt = 1
+        assert_eq!(p.apply_scalar(0.5, 0.5), 0.0);
+    }
+
+    #[test]
+    fn l2_shrinks_toward_zero() {
+        let p = ProxOp::L2 { lambda: 1.0 };
+        assert!((p.apply_scalar(4.0, 1.0) - 2.0).abs() < 1e-15);
+        assert_eq!(p.value(&[3.0, 4.0]), 12.5);
+    }
+
+    #[test]
+    fn elastic_net_interpolates() {
+        let l = 1.0;
+        let x = 3.0;
+        let t = 1.0;
+        let pure_l1 = ProxOp::ElasticNet { lambda: l, mu: 1.0 }.apply_scalar(x, t);
+        let pure_l2 = ProxOp::ElasticNet { lambda: l, mu: 0.0 }.apply_scalar(x, t);
+        assert_eq!(pure_l1, ProxOp::L1 { lambda: l }.apply_scalar(x, t));
+        assert!((pure_l2 - ProxOp::L2 { lambda: l }.apply_scalar(x, t)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn box_projects() {
+        let p = ProxOp::Box { lo: -1.0, hi: 1.0 };
+        let mut v = vec![-5.0, 0.3, 2.0];
+        p.apply(&mut v, 1.0);
+        assert_eq!(v, vec![-1.0, 0.3, 1.0]);
+        assert_eq!(p.value(&v), 0.0);
+        assert_eq!(p.value(&[2.0]), f64::INFINITY);
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let p = ProxOp::None;
+        assert_eq!(p.apply_scalar(7.0, 3.0), 7.0);
+        assert_eq!(p.value(&[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn prop_all_prox_nonexpansive() {
+        prop_check("prox maps are non-expansive", 80, |g| {
+            let ops = [
+                ProxOp::L1 { lambda: 0.7 },
+                ProxOp::L2 { lambda: 0.7 },
+                ProxOp::ElasticNet { lambda: 0.7, mu: 0.4 },
+                ProxOp::Box { lo: -1.0, hi: 2.0 },
+                ProxOp::None,
+            ];
+            let op = *g.choose(&ops);
+            let t = g.f64_in(0.01, 3.0);
+            let x = g.f64_in(-5.0, 5.0);
+            let y = g.f64_in(-5.0, 5.0);
+            let d_in = (x - y).abs();
+            let d_out = (op.apply_scalar(x, t) - op.apply_scalar(y, t)).abs();
+            if d_out > d_in + 1e-12 {
+                return Err(format!("{op:?}: |{d_out}| > |{d_in}|"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,90 @@
+//! The soft-thresholding (shrinkage) operator — paper Eq. (7):
+//!
+//! ```text
+//!   [S_λ(w)]_i = w_i − λ   if w_i >  λ
+//!              = 0          if |w_i| ≤ λ
+//!              = w_i + λ   if w_i < −λ
+//! ```
+//!
+//! This is the proximal map of `λ‖·‖₁` and the per-iteration nonsmooth
+//! step of ISTA/FISTA/SPNM.
+
+/// Scalar soft threshold.
+#[inline]
+pub fn soft_threshold_scalar(x: f64, lambda: f64) -> f64 {
+    if x > lambda {
+        x - lambda
+    } else if x < -lambda {
+        x + lambda
+    } else {
+        0.0
+    }
+}
+
+/// Vector soft threshold (allocates).
+pub fn soft_threshold(x: &[f64], lambda: f64) -> Vec<f64> {
+    x.iter().map(|&v| soft_threshold_scalar(v, lambda)).collect()
+}
+
+/// In-place: `out[i] = S_λ(x[i])`. `x` and `out` may alias via split
+/// borrows at the call site; lengths must match.
+pub fn soft_threshold_into(x: &[f64], lambda: f64, out: &mut [f64]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = soft_threshold_scalar(v, lambda);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn scalar_cases() {
+        assert_eq!(soft_threshold_scalar(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold_scalar(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold_scalar(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold_scalar(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold_scalar(1.0, 1.0), 0.0); // boundary inclusive
+        assert_eq!(soft_threshold_scalar(7.0, 0.0), 7.0); // λ=0 is identity
+    }
+
+    #[test]
+    fn vector_matches_scalar() {
+        let x = [2.0, -2.0, 0.3, 0.0];
+        let y = soft_threshold(&x, 0.5);
+        assert_eq!(y, vec![1.5, -1.5, 0.0, 0.0]);
+        let mut out = vec![0.0; 4];
+        soft_threshold_into(&x, 0.5, &mut out);
+        assert_eq!(out, y);
+    }
+
+    #[test]
+    fn prop_prox_properties() {
+        prop_check("soft threshold: shrinkage, sign, sparsity", 100, |g| {
+            let x = g.f64_in(-10.0, 10.0);
+            let l = g.f64_in(0.0, 5.0);
+            let s = soft_threshold_scalar(x, l);
+            // Never increases magnitude.
+            if s.abs() > x.abs() + 1e-15 {
+                return Err(format!("magnitude grew: {x} -> {s}"));
+            }
+            // Never flips sign.
+            if s * x < 0.0 {
+                return Err(format!("sign flipped: {x} -> {s}"));
+            }
+            // Exact-zero region.
+            if x.abs() <= l && s != 0.0 {
+                return Err(format!("should be 0: S_{l}({x}) = {s}"));
+            }
+            // Non-expansive: |S(x) - S(y)| <= |x - y|.
+            let y = g.f64_in(-10.0, 10.0);
+            let sy = soft_threshold_scalar(y, l);
+            if (s - sy).abs() > (x - y).abs() + 1e-12 {
+                return Err("not non-expansive".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,227 @@
+//! AOT artifact manifest.
+//!
+//! `make artifacts` (→ `python/compile/aot.py`) lowers the L2 JAX graphs
+//! (which call the L1 Pallas kernels) to HLO **text** files and writes
+//! `artifacts/manifest.json` describing every compiled shape:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "entries": [
+//!     {"kind": "gram",        "d": 54, "m": 256, "file": "gram_d54_m256.hlo.txt"},
+//!     {"kind": "kstep_fista", "d": 54, "k": 8,   "file": "kstep_fista_d54_k8.hlo.txt"},
+//!     {"kind": "kstep_spnm",  "d": 54, "k": 8, "q": 5, "file": "kstep_spnm_d54_k8_q5.hlo.txt"},
+//!     {"kind": "soft_threshold", "d": 54, "file": "softthr_d54.hlo.txt"}
+//!   ]
+//! }
+//! ```
+//!
+//! The runtime matches request shapes against the manifest; misses fall
+//! back to native kernels (logged), so artifacts are an acceleration,
+//! never a correctness dependency.
+
+use crate::error::{CaError, Result};
+use crate::util::json::{parse, Json};
+use std::path::{Path, PathBuf};
+
+/// Kinds of compiled computations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Sampled Gram product: `(xs[d,m], ys[m], inv_m) → (G[d,d], R[d])`.
+    Gram,
+    /// k unrolled FISTA updates:
+    /// `(G[k,d,d], R[k,d], w[d], w_prev[d], t, λ, iter0) → (w, w_prev)`.
+    KstepFista,
+    /// k unrolled SPNM updates with Q inner iterations baked in:
+    /// `(G[k,d,d], R[k,d], w[d], t, λ) → (w, w_prev)`.
+    KstepSpnm,
+    /// Soft threshold: `(x[d], thr) → y[d]`.
+    SoftThreshold,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "gram" => Ok(ArtifactKind::Gram),
+            "kstep_fista" => Ok(ArtifactKind::KstepFista),
+            "kstep_spnm" => Ok(ArtifactKind::KstepSpnm),
+            "soft_threshold" => Ok(ArtifactKind::SoftThreshold),
+            other => Err(CaError::Artifact(format!("unknown artifact kind '{other}'"))),
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    /// Computation kind.
+    pub kind: ArtifactKind,
+    /// Feature dimension d.
+    pub d: usize,
+    /// Sample-chunk size m (gram only).
+    pub m: usize,
+    /// k-step count (kstep kinds only).
+    pub k: usize,
+    /// Inner iterations Q (kstep_spnm only).
+    pub q: usize,
+    /// HLO text file name, relative to the artifact directory.
+    pub file: String,
+}
+
+/// Parsed manifest plus its directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    /// Directory containing the manifest and HLO files.
+    pub dir: PathBuf,
+    /// Entries in manifest order.
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            CaError::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::from_json_str(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn from_json_str(text: &str, dir: &Path) -> Result<Self> {
+        let root = parse(text)?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| CaError::Artifact("manifest missing version".into()))?;
+        if version != 1 {
+            return Err(CaError::Artifact(format!("unsupported manifest version {version}")));
+        }
+        let entries_json = root
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| CaError::Artifact("manifest missing entries".into()))?;
+        let mut entries = Vec::with_capacity(entries_json.len());
+        for e in entries_json {
+            let kind = ArtifactKind::parse(
+                e.get("kind")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| CaError::Artifact("entry missing kind".into()))?,
+            )?;
+            let get = |key: &str| e.get(key).and_then(Json::as_usize).unwrap_or(0);
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| CaError::Artifact("entry missing file".into()))?
+                .to_string();
+            entries.push(ArtifactEntry { kind, d: get("d"), m: get("m"), k: get("k"), q: get("q"), file });
+        }
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Find the gram artifact for feature dimension `d` (any chunk size;
+    /// prefers the largest m ≤ `m_hint`, else the smallest available).
+    pub fn find_gram(&self, d: usize, m_hint: usize) -> Option<&ArtifactEntry> {
+        let mut candidates: Vec<&ArtifactEntry> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Gram && e.d == d)
+            .collect();
+        candidates.sort_by_key(|e| e.m);
+        candidates
+            .iter()
+            .rev()
+            .find(|e| e.m <= m_hint.max(1))
+            .copied()
+            .or_else(|| candidates.first().copied())
+    }
+
+    /// Find a k-step FISTA artifact with exact (d, k).
+    pub fn find_kstep_fista(&self, d: usize, k: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == ArtifactKind::KstepFista && e.d == d && e.k == k)
+    }
+
+    /// Find a k-step SPNM artifact with exact (d, k, q).
+    pub fn find_kstep_spnm(&self, d: usize, k: usize, q: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == ArtifactKind::KstepSpnm && e.d == d && e.k == k && e.q == q)
+    }
+
+    /// Find a soft-threshold artifact for dimension d.
+    pub fn find_soft_threshold(&self, d: usize) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.kind == ArtifactKind::SoftThreshold && e.d == d)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "entries": [
+            {"kind": "gram", "d": 54, "m": 256, "file": "gram_d54_m256.hlo.txt"},
+            {"kind": "gram", "d": 54, "m": 64, "file": "gram_d54_m64.hlo.txt"},
+            {"kind": "gram", "d": 8, "m": 128, "file": "gram_d8_m128.hlo.txt"},
+            {"kind": "kstep_fista", "d": 54, "k": 8, "file": "kf.hlo.txt"},
+            {"kind": "kstep_spnm", "d": 54, "k": 8, "q": 5, "file": "ks.hlo.txt"},
+            {"kind": "soft_threshold", "d": 54, "file": "st.hlo.txt"}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = ArtifactManifest::from_json_str(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 6);
+        // Prefers largest m ≤ hint.
+        assert_eq!(m.find_gram(54, 300).unwrap().m, 256);
+        assert_eq!(m.find_gram(54, 100).unwrap().m, 64);
+        // Hint below all → smallest.
+        assert_eq!(m.find_gram(54, 1).unwrap().m, 64);
+        assert_eq!(m.find_gram(8, 1000).unwrap().m, 128);
+        assert!(m.find_gram(99, 10).is_none());
+        assert!(m.find_kstep_fista(54, 8).is_some());
+        assert!(m.find_kstep_fista(54, 4).is_none());
+        assert!(m.find_kstep_spnm(54, 8, 5).is_some());
+        assert!(m.find_kstep_spnm(54, 8, 3).is_none());
+        assert!(m.find_soft_threshold(54).is_some());
+        assert_eq!(
+            m.path_of(m.find_soft_threshold(54).unwrap()),
+            PathBuf::from("/tmp/a/st.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        let p = Path::new("/tmp");
+        assert!(ArtifactManifest::from_json_str("{}", p).is_err());
+        assert!(ArtifactManifest::from_json_str(r#"{"version": 2, "entries": []}"#, p).is_err());
+        assert!(ArtifactManifest::from_json_str(
+            r#"{"version": 1, "entries": [{"kind": "nope", "file": "x"}]}"#,
+            p
+        )
+        .is_err());
+        assert!(ArtifactManifest::from_json_str(
+            r#"{"version": 1, "entries": [{"kind": "gram", "d": 1}]}"#,
+            p
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = ArtifactManifest::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

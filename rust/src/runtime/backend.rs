@@ -1,0 +1,80 @@
+//! Compute-backend traits + the native implementation.
+//!
+//! A [`GramBackend`] computes one worker's sampled-Gram contribution.
+//! The native backend runs the CSC kernel from [`crate::matrix::ops`];
+//! the PJRT backend ([`crate::runtime::pjrt`]) dispatches to an AOT
+//! artifact when the shapes match, falling back to native otherwise.
+
+use crate::cluster::shard::WorkerShard;
+use crate::error::Result;
+
+/// Computes one worker's local sampled-Gram contribution
+/// `G += inv_m · Σ x_c x_cᵀ`, `R += inv_m · Σ y_c x_c` over the worker's
+/// sampled local columns. Returns the flop count charged to the trace.
+pub trait GramBackend: Sync {
+    /// Accumulate the contribution of `idx_local` (local column indices)
+    /// into `g` (d²) and `r` (d).
+    fn accumulate(
+        &self,
+        shard: &WorkerShard,
+        idx_local: &[usize],
+        inv_m: f64,
+        g: &mut [f64],
+        r: &mut [f64],
+    ) -> Result<u64>;
+
+    /// Backend name for logs/reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust CSC kernel (f64) — the correctness reference.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeGramBackend;
+
+impl GramBackend for NativeGramBackend {
+    fn accumulate(
+        &self,
+        shard: &WorkerShard,
+        idx_local: &[usize],
+        inv_m: f64,
+        g: &mut [f64],
+        r: &mut [f64],
+    ) -> Result<u64> {
+        crate::matrix::ops::sampled_gram_csc(&shard.x, &shard.y, idx_local, inv_m, g, r)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synthetic::{generate, SyntheticSpec};
+    use crate::cluster::shard::{PartitionStrategy, ShardedDataset};
+
+    #[test]
+    fn native_backend_matches_direct_kernel() {
+        let ds = generate(
+            &SyntheticSpec { d: 5, n: 30, density: 0.6, noise: 0.0, model_sparsity: 0.5, condition: 1.0 },
+            1,
+        );
+        let sh = ShardedDataset::new(&ds, 2, PartitionStrategy::Contiguous).unwrap();
+        let shard = &sh.shards[0];
+        let idx: Vec<usize> = (0..shard.x.cols().min(4)).collect();
+        let backend = NativeGramBackend;
+        let mut g1 = vec![0.0; 25];
+        let mut r1 = vec![0.0; 5];
+        let f1 = backend.accumulate(shard, &idx, 0.25, &mut g1, &mut r1).unwrap();
+        let mut g2 = vec![0.0; 25];
+        let mut r2 = vec![0.0; 5];
+        let f2 =
+            crate::matrix::ops::sampled_gram_csc(&shard.x, &shard.y, &idx, 0.25, &mut g2, &mut r2)
+                .unwrap();
+        assert_eq!(f1, f2);
+        assert_eq!(g1, g2);
+        assert_eq!(r1, r2);
+        assert_eq!(backend.name(), "native");
+    }
+}

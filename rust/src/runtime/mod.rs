@@ -1,0 +1,22 @@
+//! Request-path runtime: compute backends and the PJRT/XLA artifact path.
+//!
+//! The solvers call a [`backend::GramBackend`] for the sampled Gram
+//! hot-spot and a [`backend::UpdateBackend`] for the replicated k-step
+//! updates. Two implementations:
+//!
+//! * **Native** — the Rust kernels in [`crate::matrix::ops`] (f64,
+//!   always available, the correctness reference);
+//! * **PJRT** — AOT-compiled JAX/Pallas kernels loaded from
+//!   `artifacts/*.hlo.txt` and executed through the `xla` crate's PJRT
+//!   CPU client (f32). Python authored the kernels at build time and is
+//!   never on this path.
+//!
+//! [`artifact`] reads the manifest emitted by `python/compile/aot.py`;
+//! [`pjrt`] owns the client and the compiled-executable cache.
+
+pub mod artifact;
+pub mod backend;
+pub mod pjrt;
+
+pub use artifact::ArtifactManifest;
+pub use backend::{GramBackend, NativeGramBackend};

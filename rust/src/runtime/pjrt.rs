@@ -1,0 +1,276 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts and runs them on
+//! the CPU PJRT client from the request path.
+//!
+//! Thread-safety: the `xla` crate's handles wrap raw C pointers and are
+//! not `Send`/`Sync`. All PJRT state lives behind one [`std::sync::Mutex`]
+//! and every FFI call happens with the lock held, which makes the
+//! wrapper types here safe to share across the worker threads (the CPU
+//! client itself is internally thread-safe; the mutex gives us a
+//! conservative serialization on top).
+
+use crate::cluster::shard::WorkerShard;
+use crate::error::{CaError, Result};
+use crate::matrix::ops::GramStack;
+use crate::runtime::artifact::{ArtifactEntry, ArtifactManifest};
+use crate::runtime::backend::GramBackend;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Everything that touches the FFI, guarded by one mutex in [`PjrtEngine`].
+struct EngineInner {
+    client: xla::PjRtClient,
+    /// Compiled executables keyed by artifact file name.
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Execution counter (observability).
+    executions: u64,
+}
+
+/// The PJRT engine: client + manifest + compiled-executable cache.
+pub struct PjrtEngine {
+    manifest: ArtifactManifest,
+    inner: Mutex<EngineInner>,
+}
+
+// SAFETY: every use of the non-Send/Sync xla handles is serialized by
+// `inner`'s mutex; no handle ever escapes the lock.
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+
+impl PjrtEngine {
+    /// Create an engine from an artifact directory (must contain
+    /// `manifest.json`; see `make artifacts`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "pjrt engine up: platform={} artifacts={} ({})",
+            client.platform_name(),
+            manifest.entries.len(),
+            dir.display()
+        );
+        Ok(PjrtEngine {
+            manifest,
+            inner: Mutex::new(EngineInner { client, cache: HashMap::new(), executions: 0 }),
+        })
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Number of artifact executions performed so far.
+    pub fn executions(&self) -> u64 {
+        self.inner.lock().unwrap().executions
+    }
+
+    /// Execute an artifact with the given input literals; returns the
+    /// decomposed output tuple. Compiles and caches on first use.
+    fn execute(&self, entry: &ArtifactEntry, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.cache.contains_key(&entry.file) {
+            let path = self.manifest.path_of(entry);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner.client.compile(&comp)?;
+            log::debug!("compiled artifact {}", entry.file);
+            inner.cache.insert(entry.file.clone(), exe);
+        }
+        let exe = inner.cache.get(&entry.file).expect("just inserted");
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        inner.executions += 1;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        result.to_tuple().map_err(CaError::from)
+    }
+
+    /// Run the sampled-Gram artifact on a dense f32 column block.
+    /// `xs` is d×m row-major, `ys` length m.
+    pub fn run_gram(
+        &self,
+        entry: &ArtifactEntry,
+        xs: &[f32],
+        ys: &[f32],
+        inv_m: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (d, m) = (entry.d, entry.m);
+        if xs.len() != d * m || ys.len() != m {
+            return Err(CaError::Shape(format!(
+                "gram artifact d={d} m={m}: xs={}, ys={}",
+                xs.len(),
+                ys.len()
+            )));
+        }
+        let xs_lit = xla::Literal::vec1(xs).reshape(&[d as i64, m as i64])?;
+        let ys_lit = xla::Literal::vec1(ys);
+        let inv_lit = xla::Literal::scalar(inv_m);
+        let mut out = self.execute(entry, &[xs_lit, ys_lit, inv_lit])?;
+        if out.len() != 2 {
+            return Err(CaError::Runtime(format!("gram artifact returned {} outputs", out.len())));
+        }
+        let r = out.pop().unwrap().to_vec::<f32>()?;
+        let g = out.pop().unwrap().to_vec::<f32>()?;
+        Ok((g, r))
+    }
+
+    /// Run the k-step FISTA artifact: applies k paper-faithful updates.
+    /// Returns `(w, w_prev)` after the block.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_kstep_fista(
+        &self,
+        entry: &ArtifactEntry,
+        stack: &GramStack,
+        w: &[f64],
+        w_prev: &[f64],
+        t: f64,
+        lambda: f64,
+        iter0: usize,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let (d, k) = (entry.d, entry.k);
+        if stack.d != d || stack.k != k || w.len() != d || w_prev.len() != d {
+            return Err(CaError::Shape(format!(
+                "kstep_fista artifact (d={d},k={k}) vs stack (d={},k={})",
+                stack.d, stack.k
+            )));
+        }
+        // Repack the stack into [k,d,d] + [k,d] f32 tensors.
+        let mut gs = Vec::with_capacity(k * d * d);
+        let mut rs = Vec::with_capacity(k * d);
+        for j in 0..k {
+            let (g, r) = stack.block(j);
+            gs.extend(g.iter().map(|&v| v as f32));
+            rs.extend(r.iter().map(|&v| v as f32));
+        }
+        let inputs = [
+            xla::Literal::vec1(&gs).reshape(&[k as i64, d as i64, d as i64])?,
+            xla::Literal::vec1(&rs).reshape(&[k as i64, d as i64])?,
+            xla::Literal::vec1(&w.iter().map(|&v| v as f32).collect::<Vec<f32>>()),
+            xla::Literal::vec1(&w_prev.iter().map(|&v| v as f32).collect::<Vec<f32>>()),
+            xla::Literal::scalar(t as f32),
+            xla::Literal::scalar(lambda as f32),
+            xla::Literal::scalar(iter0 as f32),
+        ];
+        let mut out = self.execute(entry, &inputs)?;
+        if out.len() != 2 {
+            return Err(CaError::Runtime(format!(
+                "kstep_fista artifact returned {} outputs",
+                out.len()
+            )));
+        }
+        let wp = out.pop().unwrap().to_vec::<f32>()?;
+        let wn = out.pop().unwrap().to_vec::<f32>()?;
+        Ok((
+            wn.into_iter().map(|v| v as f64).collect(),
+            wp.into_iter().map(|v| v as f64).collect(),
+        ))
+    }
+
+    /// Run the soft-threshold artifact.
+    pub fn run_soft_threshold(
+        &self,
+        entry: &ArtifactEntry,
+        x: &[f64],
+        thr: f64,
+    ) -> Result<Vec<f64>> {
+        if x.len() != entry.d {
+            return Err(CaError::Shape(format!(
+                "soft_threshold artifact d={}: x={}",
+                entry.d,
+                x.len()
+            )));
+        }
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut out = self.execute(
+            entry,
+            &[xla::Literal::vec1(&xf), xla::Literal::scalar(thr as f32)],
+        )?;
+        if out.len() != 1 {
+            return Err(CaError::Runtime("soft_threshold returned != 1 outputs".into()));
+        }
+        Ok(out.pop().unwrap().to_vec::<f32>()?.into_iter().map(|v| v as f64).collect())
+    }
+}
+
+/// [`GramBackend`] that executes the AOT Pallas Gram kernel through PJRT,
+/// chunking/padding each worker's sample to the artifact's fixed m
+/// (zero columns contribute nothing to a Gram sum, so padding is exact).
+/// Falls back to the native kernel when no artifact matches d.
+pub struct PjrtGramBackend<'a> {
+    engine: &'a PjrtEngine,
+    native: crate::runtime::backend::NativeGramBackend,
+}
+
+impl<'a> PjrtGramBackend<'a> {
+    /// Wrap an engine.
+    pub fn new(engine: &'a PjrtEngine) -> Self {
+        PjrtGramBackend { engine, native: Default::default() }
+    }
+}
+
+impl GramBackend for PjrtGramBackend<'_> {
+    fn accumulate(
+        &self,
+        shard: &WorkerShard,
+        idx_local: &[usize],
+        inv_m: f64,
+        g: &mut [f64],
+        r: &mut [f64],
+    ) -> Result<u64> {
+        let d = shard.x.rows();
+        let entry = match self.engine.manifest.find_gram(d, idx_local.len()) {
+            Some(e) => e.clone(),
+            None => {
+                log::debug!("no gram artifact for d={d}; native fallback");
+                return self.native.accumulate(shard, idx_local, inv_m, g, r);
+            }
+        };
+        let m_chunk = entry.m;
+        let mut flops = 0u64;
+        let mut xs = vec![0.0f32; d * m_chunk];
+        let mut ys = vec![0.0f32; m_chunk];
+        for chunk in idx_local.chunks(m_chunk) {
+            xs.iter_mut().for_each(|v| *v = 0.0);
+            ys.iter_mut().for_each(|v| *v = 0.0);
+            for (slot, &c) in chunk.iter().enumerate() {
+                let (ri, vs) = shard.x.col(c);
+                for (&row, &v) in ri.iter().zip(vs) {
+                    xs[row * m_chunk + slot] = v as f32;
+                }
+                ys[slot] = shard.y[c] as f32;
+            }
+            let (gb, rb) = self.engine.run_gram(&entry, &xs, &ys, inv_m as f32)?;
+            for (acc, v) in g.iter_mut().zip(&gb) {
+                *acc += *v as f64;
+            }
+            for (acc, v) in r.iter_mut().zip(&rb) {
+                *acc += *v as f64;
+            }
+            // Count the arithmetic the kernel actually performs (dense
+            // d×m rank-update per chunk), matching the dense-kernel
+            // accounting used in the theorems.
+            flops += (2 * d * d * chunk.len() + 2 * d * chunk.len()) as u64;
+        }
+        Ok(flops)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in `rust/tests/artifact_path.rs` (they
+    // need `make artifacts` to have run). Here: manifest-only logic.
+    use super::*;
+
+    #[test]
+    fn backend_name() {
+        // Construct-only test: engine requires artifacts, so just check
+        // the fallback machinery compiles and the native name differs.
+        let native = crate::runtime::backend::NativeGramBackend;
+        use crate::runtime::backend::GramBackend as _;
+        assert_eq!(native.name(), "native");
+        let _ = PjrtGramBackend::new; // referenced
+    }
+}

@@ -1,0 +1,16 @@
+//! Randomized sampling — the mechanism that makes the k-step unrolling
+//! possible (paper §IV-B).
+//!
+//! Every iteration `t` of any solver draws a sample of `m = ⌊b·n⌋`
+//! global column indices from a **deterministic schedule** derived from a
+//! master seed. Because the schedule is a pure function of
+//! `(master seed, iteration)`, the classical solver (which consumes one
+//! sample per all-reduce) and the CA solver (which consumes k samples per
+//! all-reduce) see *identical* sample sequences — making the CA-k
+//! iterates arithmetically equal to the classical iterates, the paper's
+//! central equivalence claim. Workers materialize only the portion of a
+//! sample that intersects the columns they own.
+
+pub mod schedule;
+
+pub use schedule::{SampleSchedule, SamplingMode};

@@ -1,0 +1,174 @@
+//! Deterministic per-iteration sampling schedule.
+
+use crate::util::rng::Rng;
+
+/// How the m columns of each iteration's sample are drawn.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplingMode {
+    /// Uniform without replacement (the paper's `I_j` has distinct
+    /// columns — one nonzero per column of the selection matrix).
+    WithoutReplacement,
+    /// Uniform with replacement (cheaper; variance slightly higher).
+    WithReplacement,
+}
+
+/// A reproducible sampling schedule over `n` global columns.
+///
+/// `sample(t)` returns the global sample for iteration `t`; it is a pure
+/// function of `(seed, t)` so any processor — or any reformulation of the
+/// outer loop — regenerates the identical sample.
+#[derive(Clone, Debug)]
+pub struct SampleSchedule {
+    /// Total number of columns n.
+    pub n: usize,
+    /// Sample size m = ⌊b·n⌋ (global).
+    pub m: usize,
+    /// Sampling mode.
+    pub mode: SamplingMode,
+    master: Rng,
+}
+
+impl SampleSchedule {
+    /// Create a schedule. `b` is the paper's sampling rate in (0, 1];
+    /// m is clamped to at least 1.
+    pub fn new(n: usize, b: f64, seed: u64, mode: SamplingMode) -> Self {
+        assert!(n > 0, "empty dataset");
+        assert!(b > 0.0 && b <= 1.0, "sampling rate b must be in (0,1], got {b}");
+        let m = ((b * n as f64).floor() as usize).clamp(1, n);
+        SampleSchedule { n, m, mode, master: Rng::new(seed) }
+    }
+
+    /// The global sample for iteration `t` (size m).
+    pub fn sample(&self, t: usize) -> Vec<usize> {
+        let mut rng = self.master.derive(0xA11CE, t as u64);
+        match self.mode {
+            SamplingMode::WithoutReplacement => rng.sample_without_replacement(self.n, self.m),
+            SamplingMode::WithReplacement => rng.sample_with_replacement(self.n, self.m),
+        }
+    }
+
+    /// The part of iteration `t`'s sample owned by a worker, remapped to
+    /// the worker's *local* column indices.
+    ///
+    /// `owner[c]` gives the owning worker of global column `c` and
+    /// `local_index[c]` its index inside that worker's shard.
+    pub fn local_sample(
+        &self,
+        t: usize,
+        worker: usize,
+        owner: &[usize],
+        local_index: &[usize],
+    ) -> Vec<usize> {
+        Self::filter_local(&self.sample(t), worker, owner, local_index)
+    }
+
+    /// Restrict an already-generated global sample to one worker's local
+    /// indices. Hot path: the coordinator generates each iteration's
+    /// sample once and every worker filters it — O(m) total generation
+    /// instead of O(P·m) (identical result; the schedule is a pure
+    /// function either way). See EXPERIMENTS.md §Perf.
+    pub fn filter_local(
+        global_sample: &[usize],
+        worker: usize,
+        owner: &[usize],
+        local_index: &[usize],
+    ) -> Vec<usize> {
+        global_sample
+            .iter()
+            .filter(|&&c| owner[c] == worker)
+            .map(|&c| local_index[c])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn sample_is_pure_per_iteration() {
+        let s = SampleSchedule::new(100, 0.2, 7, SamplingMode::WithoutReplacement);
+        assert_eq!(s.m, 20);
+        assert_eq!(s.sample(5), s.sample(5));
+        assert_ne!(s.sample(5), s.sample(6));
+    }
+
+    #[test]
+    fn sample_size_clamped() {
+        let s = SampleSchedule::new(10, 0.01, 1, SamplingMode::WithoutReplacement);
+        assert_eq!(s.m, 1); // ⌊0.1⌋ = 0, clamped to 1
+        let s = SampleSchedule::new(10, 1.0, 1, SamplingMode::WithoutReplacement);
+        assert_eq!(s.m, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "sampling rate")]
+    fn invalid_b_rejected() {
+        SampleSchedule::new(10, 1.5, 1, SamplingMode::WithoutReplacement);
+    }
+
+    #[test]
+    fn local_samples_partition_global_sample() {
+        let n = 50;
+        let s = SampleSchedule::new(n, 0.3, 11, SamplingMode::WithoutReplacement);
+        // 3 workers, striped ownership.
+        let p = 3;
+        let owner: Vec<usize> = (0..n).map(|c| c % p).collect();
+        let mut local_index = vec![0usize; n];
+        let mut counters = vec![0usize; p];
+        for c in 0..n {
+            local_index[c] = counters[owner[c]];
+            counters[owner[c]] += 1;
+        }
+        let global = s.sample(4);
+        let total: usize =
+            (0..p).map(|w| s.local_sample(4, w, &owner, &local_index).len()).sum();
+        assert_eq!(total, global.len());
+        // Each local index must be within the worker's shard size.
+        for w in 0..p {
+            for &li in &s.local_sample(4, w, &owner, &local_index) {
+                assert!(li < counters[w]);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_schedule_equivalence_any_grouping() {
+        // Consuming samples one-at-a-time (classical) or k-at-a-time (CA)
+        // yields the same sequence — the arithmetic-equivalence precondition.
+        prop_check("sample schedule independent of consumption grouping", 25, |g| {
+            let n = g.usize_in(5, 200);
+            let b = g.f64_in(0.05, 1.0);
+            let k = g.usize_in(1, 8);
+            let t_total = k * g.usize_in(1, 5);
+            let s = SampleSchedule::new(n, b, 99, SamplingMode::WithoutReplacement);
+            let classical: Vec<Vec<usize>> = (0..t_total).map(|t| s.sample(t)).collect();
+            let mut ca: Vec<Vec<usize>> = Vec::new();
+            let mut t = 0;
+            while t < t_total {
+                for j in 0..k {
+                    ca.push(s.sample(t + j));
+                }
+                t += k;
+            }
+            if classical != ca {
+                return Err("grouping changed the schedule".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_with_replacement_in_range() {
+        prop_check("with-replacement samples in range", 20, |g| {
+            let n = g.usize_in(1, 64);
+            let s = SampleSchedule::new(n, 0.9, 3, SamplingMode::WithReplacement);
+            let t = g.usize_in(0, 100);
+            if s.sample(t).iter().any(|&c| c >= n) {
+                return Err("out of range".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,73 @@
+//! CA-SFISTA (paper Algorithm III): the k-step, communication-avoiding
+//! reformulation of SFISTA. One all-reduce of the concatenated Gram
+//! stack `[G_1|…|G_k], [R_1|…|R_k]` every k iterations — latency reduced
+//! by O(k), bandwidth and flops unchanged (Theorem 3), iterates
+//! arithmetically identical to classical SFISTA under the shared
+//! sampling schedule.
+
+use crate::comm::costmodel::MachineModel;
+use crate::datasets::Dataset;
+use crate::error::Result;
+use crate::solvers::traits::{AlgoKind, SolverConfig, SolverOutput};
+
+/// Run CA-SFISTA with `cfg.k` unrolled steps per communication round.
+pub fn run_ca_sfista(
+    ds: &Dataset,
+    cfg: &SolverConfig,
+    p: usize,
+    machine: &MachineModel,
+) -> Result<SolverOutput> {
+    crate::coordinator::run(ds, cfg, p, machine, AlgoKind::Sfista)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synthetic::{generate, SyntheticSpec};
+    use crate::solvers::sfista::run_sfista;
+
+    /// The paper's central claim: CA-SFISTA's iterates equal classical
+    /// SFISTA's for any k (same schedule, same P).
+    #[test]
+    fn arithmetically_equal_to_classical() {
+        let ds = generate(
+            &SyntheticSpec { d: 6, n: 100, density: 0.8, noise: 0.05, model_sparsity: 0.5, condition: 1.0 },
+            4,
+        );
+        let cfg = SolverConfig::default()
+            .with_sample_fraction(0.3)
+            .with_max_iters(24)
+            .with_seed(77);
+        let classical = run_sfista(&ds, &cfg, 4, &MachineModel::comet()).unwrap();
+        for k in [2usize, 4, 8, 24] {
+            let ca = run_ca_sfista(&ds, &cfg.clone().with_k(k), 4, &MachineModel::comet())
+                .unwrap();
+            for (a, b) in ca.w.iter().zip(&classical.w) {
+                assert!(
+                    (a - b).abs() <= 1e-10 * (1.0 + b.abs()),
+                    "k={k}: {a} vs {b}"
+                );
+            }
+            assert_eq!(ca.trace.collective_rounds, 24usize.div_ceil(k) as u64);
+        }
+    }
+
+    #[test]
+    fn latency_drops_by_k_bandwidth_unchanged() {
+        use crate::comm::trace::Phase;
+        let ds = generate(
+            &SyntheticSpec { d: 6, n: 100, density: 0.8, noise: 0.05, model_sparsity: 0.5, condition: 1.0 },
+            4,
+        );
+        let cfg = SolverConfig::default().with_sample_fraction(0.3).with_max_iters(32);
+        let machine = MachineModel::comet();
+        let c1 = run_ca_sfista(&ds, &cfg.clone().with_k(1), 8, &machine).unwrap();
+        let c8 = run_ca_sfista(&ds, &cfg.clone().with_k(8), 8, &machine).unwrap();
+        let m1 = c1.trace.phase(Phase::Collective).messages;
+        let m8 = c8.trace.phase(Phase::Collective).messages;
+        assert!((m1 / m8 - 8.0).abs() < 1e-9, "messages {m1} vs {m8}");
+        let w1 = c1.trace.phase(Phase::Collective).words;
+        let w8 = c8.trace.phase(Phase::Collective).words;
+        assert!((w1 - w8).abs() < 1e-9, "words {w1} vs {w8}");
+    }
+}

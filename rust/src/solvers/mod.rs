@@ -1,0 +1,26 @@
+//! Solvers: the paper's four distributed algorithms plus serial baselines.
+//!
+//! | module | algorithm | paper | communication |
+//! |---|---|---|---|
+//! | [`sfista`] | stochastic FISTA | Alg. I | all-reduce **every** iteration |
+//! | [`spnm`] | stochastic proximal Newton | Alg. II | all-reduce **every** iteration |
+//! | [`ca_sfista`] | k-step CA-SFISTA | Alg. III | all-reduce every **k** iterations |
+//! | [`ca_spnm`] | k-step CA-SPNM | Alg. IV | all-reduce every **k** iterations |
+//! | [`ista`], [`fista`] | serial batch baselines | §II-B | none (serial) |
+//! | [`reference`] | TFOCS-substitute high-accuracy solver | §V-A | none (serial) |
+//!
+//! The distributed algorithms share one engine ([`crate::coordinator`]);
+//! a classical solver *is* the k-step engine at k = 1, which is what
+//! makes the paper's arithmetic-equivalence claim testable to float
+//! precision (`rust/tests/equivalence.rs`).
+
+pub mod ca_sfista;
+pub mod ca_spnm;
+pub mod fista;
+pub mod ista;
+pub mod reference;
+pub mod sfista;
+pub mod spnm;
+pub mod traits;
+
+pub use traits::{AlgoKind, SolverConfig, SolverOutput, StepPolicy, Stopping};

@@ -1,0 +1,330 @@
+//! Solver configuration, stopping criteria, and run outputs.
+
+use crate::cluster::shard::PartitionStrategy;
+use crate::comm::collectives::AllReduceAlgo;
+use crate::error::{CaError, Result};
+use crate::sampling::SamplingMode;
+use crate::util::json::Json;
+
+/// Which distributed algorithm to run (classical == k-step at k = 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoKind {
+    /// Stochastic FISTA (Alg. I) / CA-SFISTA (Alg. III when k > 1).
+    Sfista,
+    /// Stochastic proximal Newton (Alg. II) / CA-SPNM (Alg. IV when k > 1).
+    Spnm,
+}
+
+impl AlgoKind {
+    /// Display name given the k-step parameter.
+    pub fn display(&self, k: usize) -> String {
+        match (self, k) {
+            (AlgoKind::Sfista, 1) => "SFISTA".to_string(),
+            (AlgoKind::Sfista, _) => format!("CA-SFISTA(k={k})"),
+            (AlgoKind::Spnm, 1) => "SPNM".to_string(),
+            (AlgoKind::Spnm, _) => format!("CA-SPNM(k={k})"),
+        }
+    }
+}
+
+/// Step-size policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepPolicy {
+    /// Fixed step t.
+    Fixed(f64),
+    /// `t = scale / L̂` with `L̂ = λ_max(XXᵀ)/n` estimated by power
+    /// iteration at setup (the paper's constant step).
+    InverseLipschitz { scale: f64 },
+}
+
+/// Where the smooth gradient is evaluated in the accelerated update.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradientAt {
+    /// At the previous iterate `w` — a *literal* reading of the paper's
+    /// Eq. (8) and Algorithms I/III
+    /// (`w_{i+1} = S_{λt}(v_i − t∇f(w_i))`). Measurably **unstable** over
+    /// long stochastic horizons: as the momentum coefficient (j−2)/j → 1
+    /// the stale-gradient extrapolation amplifies sampling noise and the
+    /// iterates diverge (reproduced by `cargo bench --bench ablations`).
+    /// Kept for the ablation study.
+    Iterate,
+    /// At the momentum point `v` — textbook FISTA (Beck–Teboulle 2009),
+    /// which is what a correct implementation (and almost certainly the
+    /// paper's own C/MPI code) computes. **Default.** The CA == classical
+    /// equivalence is unaffected: both consume the same schedule and the
+    /// same update rule.
+    Momentum,
+}
+
+/// Stopping criterion (paper §V-A describes both).
+#[derive(Clone, Debug)]
+pub enum Stopping {
+    /// Run exactly T iterations (strong-scaling experiments).
+    MaxIters(usize),
+    /// Run until `‖w − w_op‖/‖w_op‖ ≤ tol` (speedup experiments), with a
+    /// hard iteration cap as a safety net.
+    RelError {
+        /// Tolerance (paper uses 0.1 for the speedup experiments).
+        tol: f64,
+        /// High-accuracy reference solution from [`crate::solvers::reference`].
+        w_op: Vec<f64>,
+        /// Hard cap on iterations.
+        max_iters: usize,
+    },
+}
+
+impl Stopping {
+    /// The iteration cap implied by this criterion.
+    pub fn cap(&self) -> usize {
+        match self {
+            Stopping::MaxIters(t) => *t,
+            Stopping::RelError { max_iters, .. } => *max_iters,
+        }
+    }
+}
+
+/// Full solver configuration.
+#[derive(Clone, Debug)]
+pub struct SolverConfig {
+    /// L1 regularization weight λ.
+    pub lambda: f64,
+    /// Sampling rate b ∈ (0, 1]: each iteration samples m = ⌊b·n⌋ columns.
+    pub b: f64,
+    /// k-step parameter (1 = classical algorithm).
+    pub k: usize,
+    /// SPNM inner first-order iterations Q.
+    pub q: usize,
+    /// Stopping criterion.
+    pub stopping: Stopping,
+    /// Master seed for the sampling schedule (and any other randomness).
+    pub seed: u64,
+    /// Step-size policy.
+    pub step: StepPolicy,
+    /// Gradient evaluation point (paper-faithful vs textbook FISTA).
+    pub gradient_at: GradientAt,
+    /// All-reduce algorithm.
+    pub allreduce: AllReduceAlgo,
+    /// Column partitioning strategy.
+    pub partition: PartitionStrategy,
+    /// Sampling mode.
+    pub sampling: SamplingMode,
+    /// Record a convergence history point every this many iterations
+    /// (0 = no history).
+    pub record_every: usize,
+    /// Optional reference solution for history relative errors.
+    pub w_op: Option<Vec<f64>>,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            lambda: 0.01,
+            b: 0.1,
+            k: 1,
+            q: 5,
+            stopping: Stopping::MaxIters(100),
+            seed: 42,
+            step: StepPolicy::InverseLipschitz { scale: 1.0 },
+            gradient_at: GradientAt::Momentum,
+            allreduce: AllReduceAlgo::RecursiveDoubling,
+            partition: PartitionStrategy::Contiguous,
+            sampling: SamplingMode::WithoutReplacement,
+            record_every: 0,
+            w_op: None,
+        }
+    }
+}
+
+impl SolverConfig {
+    /// Set λ.
+    pub fn with_lambda(mut self, lambda: f64) -> Self {
+        self.lambda = lambda;
+        self
+    }
+
+    /// Set the sampling rate b.
+    pub fn with_sample_fraction(mut self, b: f64) -> Self {
+        self.b = b;
+        self
+    }
+
+    /// Set the k-step parameter.
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    /// Set SPNM's inner iteration count Q.
+    pub fn with_q(mut self, q: usize) -> Self {
+        self.q = q;
+        self
+    }
+
+    /// Run for a fixed iteration count.
+    pub fn with_max_iters(mut self, t: usize) -> Self {
+        self.stopping = Stopping::MaxIters(t);
+        self
+    }
+
+    /// Set the master seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Record history every `every` iterations.
+    pub fn with_history(mut self, every: usize) -> Self {
+        self.record_every = every;
+        self
+    }
+
+    /// Validate parameter ranges.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.b > 0.0 && self.b <= 1.0) {
+            return Err(CaError::Config(format!("b must be in (0,1], got {}", self.b)));
+        }
+        if self.k == 0 {
+            return Err(CaError::Config("k must be ≥ 1".into()));
+        }
+        if self.q == 0 {
+            return Err(CaError::Config("q must be ≥ 1".into()));
+        }
+        if self.lambda < 0.0 {
+            return Err(CaError::Config(format!("λ must be ≥ 0, got {}", self.lambda)));
+        }
+        if let StepPolicy::Fixed(t) = self.step {
+            if t <= 0.0 {
+                return Err(CaError::Config(format!("step must be > 0, got {t}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One convergence-history point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HistoryPoint {
+    /// Global iteration index.
+    pub iter: usize,
+    /// LASSO objective F(w).
+    pub objective: f64,
+    /// Relative solution error vs `w_op` (NaN when no reference given).
+    pub rel_error: f64,
+    /// Modeled seconds elapsed at this point.
+    pub modeled_seconds: f64,
+}
+
+/// Output of a solver run.
+#[derive(Clone, Debug)]
+pub struct SolverOutput {
+    /// Algorithm display name.
+    pub algorithm: String,
+    /// Final iterate.
+    pub w: Vec<f64>,
+    /// Iterations performed.
+    pub iterations: usize,
+    /// Final LASSO objective.
+    pub final_objective: f64,
+    /// Final relative solution error (NaN without a reference).
+    pub final_rel_error: f64,
+    /// Modeled α-β-γ seconds along the critical path.
+    pub modeled_seconds: f64,
+    /// Wall-clock seconds of the simulation itself.
+    pub wall_seconds: f64,
+    /// Cost trace (flops / messages / words per phase).
+    pub trace: crate::comm::trace::CostTrace,
+    /// Convergence history (empty unless `record_every > 0`).
+    pub history: Vec<HistoryPoint>,
+}
+
+impl SolverOutput {
+    /// JSON summary for reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algorithm", Json::Str(self.algorithm.clone())),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("final_objective", Json::Num(self.final_objective)),
+            ("final_rel_error", Json::Num(self.final_rel_error)),
+            ("modeled_seconds", Json::Num(self.modeled_seconds)),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("trace", self.trace.to_json()),
+            (
+                "history",
+                Json::Arr(
+                    self.history
+                        .iter()
+                        .map(|h| {
+                            Json::obj(vec![
+                                ("iter", Json::Num(h.iter as f64)),
+                                ("objective", Json::Num(h.objective)),
+                                ("rel_error", Json::Num(h.rel_error)),
+                                ("modeled_seconds", Json::Num(h.modeled_seconds)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chain() {
+        let c = SolverConfig::default()
+            .with_lambda(0.5)
+            .with_sample_fraction(0.2)
+            .with_k(8)
+            .with_q(3)
+            .with_max_iters(64)
+            .with_seed(7)
+            .with_history(4);
+        assert_eq!(c.lambda, 0.5);
+        assert_eq!(c.k, 8);
+        assert_eq!(c.q, 3);
+        assert_eq!(c.stopping.cap(), 64);
+        assert_eq!(c.record_every, 4);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        assert!(SolverConfig::default().with_sample_fraction(0.0).validate().is_err());
+        assert!(SolverConfig::default().with_sample_fraction(1.5).validate().is_err());
+        assert!(SolverConfig::default().with_k(0).validate().is_err());
+        assert!(SolverConfig::default().with_q(0).validate().is_err());
+        assert!(SolverConfig::default().with_lambda(-1.0).validate().is_err());
+        let mut c = SolverConfig::default();
+        c.step = StepPolicy::Fixed(0.0);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn algo_display_names() {
+        assert_eq!(AlgoKind::Sfista.display(1), "SFISTA");
+        assert_eq!(AlgoKind::Sfista.display(32), "CA-SFISTA(k=32)");
+        assert_eq!(AlgoKind::Spnm.display(1), "SPNM");
+        assert_eq!(AlgoKind::Spnm.display(4), "CA-SPNM(k=4)");
+    }
+
+    #[test]
+    fn output_json_shape() {
+        let out = SolverOutput {
+            algorithm: "SFISTA".into(),
+            w: vec![0.0],
+            iterations: 10,
+            final_objective: 1.0,
+            final_rel_error: 0.5,
+            modeled_seconds: 2.0,
+            wall_seconds: 0.1,
+            trace: Default::default(),
+            history: vec![HistoryPoint { iter: 0, objective: 2.0, rel_error: 1.0, modeled_seconds: 0.0 }],
+        };
+        let j = out.to_json();
+        assert_eq!(j.get("iterations").unwrap().as_usize(), Some(10));
+        assert_eq!(j.get("history").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

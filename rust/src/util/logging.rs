@@ -1,0 +1,64 @@
+//! Minimal `log` backend (no `env_logger` offline).
+//!
+//! Level comes from `CA_PROX_LOG` (`error|warn|info|debug|trace`,
+//! default `info`). Initialization is idempotent.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::Once;
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let tag = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {}: {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+static INIT: Once = Once::new();
+
+/// Install the stderr logger (idempotent). Returns the active level.
+pub fn init() -> LevelFilter {
+    INIT.call_once(|| {
+        let level = match std::env::var("CA_PROX_LOG").ok().as_deref() {
+            Some("error") => LevelFilter::Error,
+            Some("warn") => LevelFilter::Warn,
+            Some("debug") => LevelFilter::Debug,
+            Some("trace") => LevelFilter::Trace,
+            Some("off") => LevelFilter::Off,
+            _ => LevelFilter::Info,
+        };
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(level);
+    });
+    log::max_level()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        let a = init();
+        let b = init();
+        assert_eq!(a, b);
+        log::info!("logging smoke test");
+    }
+}

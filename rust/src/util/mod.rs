@@ -1,0 +1,8 @@
+//! Foundational utilities built from scratch for the offline environment:
+//! PRNG, JSON, statistics, property-testing harness, logging.
+
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

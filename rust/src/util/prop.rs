@@ -1,0 +1,150 @@
+//! A small property-based testing harness (no `proptest` offline).
+//!
+//! Usage pattern inside `#[cfg(test)]` modules:
+//!
+//! ```ignore
+//! use crate::util::prop::{prop_check, Gen};
+//! prop_check("allreduce equals serial sum", 200, |g| {
+//!     let p = g.usize_in(1, 64);
+//!     let xs = g.vec_f64(p, -1.0, 1.0);
+//!     // ... return Ok(()) or Err(String) ...
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Each case receives a deterministic [`Gen`]; on failure the harness
+//! panics with the case index and seed so the exact case can be replayed
+//! with `CA_PROX_PROP_SEED`.
+
+use crate::util::rng::Rng;
+
+/// Per-case generator: a thin convenience wrapper around [`Rng`].
+pub struct Gen {
+    rng: Rng,
+    /// Human-readable log of generated values, shown on failure.
+    pub log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), log: Vec::new() }
+    }
+
+    /// Underlying RNG for bespoke generation.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Uniform usize in [lo, hi] (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = lo + self.rng.next_below(hi - lo + 1);
+        self.log.push(format!("usize_in({lo},{hi})={v}"));
+        v
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.range_f64(lo, hi);
+        self.log.push(format!("f64_in({lo},{hi})={v:.6}"));
+        v
+    }
+
+    /// Bernoulli(p).
+    pub fn bool(&mut self, p: f64) -> bool {
+        let v = self.rng.next_bool(p);
+        self.log.push(format!("bool({p})={v}"));
+        v
+    }
+
+    /// Vector of uniform f64s.
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let v: Vec<f64> = (0..n).map(|_| self.rng.range_f64(lo, hi)).collect();
+        self.log.push(format!("vec_f64(n={n})"));
+        v
+    }
+
+    /// Vector of standard Gaussians.
+    pub fn vec_gauss(&mut self, n: usize) -> Vec<f64> {
+        let v: Vec<f64> = (0..n).map(|_| self.rng.next_gaussian()).collect();
+        self.log.push(format!("vec_gauss(n={n})"));
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.next_below(xs.len());
+        self.log.push(format!("choose(idx={i})"));
+        &xs[i]
+    }
+}
+
+/// Run `cases` random cases of a property. Panics on the first failure
+/// with enough information to replay it deterministically.
+pub fn prop_check<F>(name: &str, cases: usize, mut property: F)
+where
+    F: FnMut(&mut Gen) -> std::result::Result<(), String>,
+{
+    let base_seed: u64 = std::env::var("CA_PROX_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xCA_9905);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {base_seed}):\n  {msg}\n  generated: {}",
+                g.log.join(", ")
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check("trivial", 50, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            count += 1;
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("x out of range: {x}"))
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_panics_with_context() {
+        prop_check("must fail", 10, |g| {
+            let n = g.usize_in(0, 5);
+            if n < 6 {
+                Err("forced".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_case() {
+        let mut first: Vec<usize> = Vec::new();
+        prop_check("collect", 5, |g| {
+            first.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut second: Vec<usize> = Vec::new();
+        prop_check("collect", 5, |g| {
+            second.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

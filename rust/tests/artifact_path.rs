@@ -1,0 +1,181 @@
+//! Integration: the PJRT artifact path vs the native path.
+//!
+//! Requires `make artifacts` (skips with a message when artifacts are
+//! absent, so `cargo test` stays green on a fresh checkout).
+
+use ca_prox::cluster::shard::{PartitionStrategy, ShardedDataset};
+use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::coordinator;
+use ca_prox::datasets::registry::load_preset;
+use ca_prox::matrix::ops::GramStack;
+use ca_prox::runtime::backend::{GramBackend, NativeGramBackend};
+use ca_prox::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
+use ca_prox::solvers::traits::{AlgoKind, SolverConfig};
+use std::path::Path;
+
+fn engine() -> Option<PjrtEngine> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match PjrtEngine::load(&dir) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping artifact tests: {err}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_gram_matches_native_gram() {
+    let Some(engine) = engine() else { return };
+    let ds = load_preset("smoke", Some(400), 9).unwrap();
+    let sharded = ShardedDataset::new(&ds, 3, PartitionStrategy::Contiguous).unwrap();
+    let shard = &sharded.shards[1];
+    let idx: Vec<usize> = (0..shard.x.cols()).step_by(3).collect();
+    let d = ds.d();
+    let inv_m = 1.0 / 100.0;
+
+    let mut g_native = vec![0.0; d * d];
+    let mut r_native = vec![0.0; d];
+    NativeGramBackend.accumulate(shard, &idx, inv_m, &mut g_native, &mut r_native).unwrap();
+
+    let backend = PjrtGramBackend::new(&engine);
+    let mut g_pjrt = vec![0.0; d * d];
+    let mut r_pjrt = vec![0.0; d];
+    backend.accumulate(shard, &idx, inv_m, &mut g_pjrt, &mut r_pjrt).unwrap();
+
+    for (a, b) in g_pjrt.iter().zip(&g_native) {
+        assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "G: {a} vs {b}");
+    }
+    for (a, b) in r_pjrt.iter().zip(&r_native) {
+        assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "R: {a} vs {b}");
+    }
+    assert!(engine.executions() > 0, "artifact must actually have run");
+}
+
+#[test]
+fn pjrt_gram_chunks_large_samples() {
+    let Some(engine) = engine() else { return };
+    // smoke preset d=12 has an m=64 artifact; a 150-column sample forces
+    // 3 chunks (64+64+22 with zero padding).
+    let ds = load_preset("smoke", Some(600), 4).unwrap();
+    let sharded = ShardedDataset::new(&ds, 1, PartitionStrategy::Contiguous).unwrap();
+    let shard = &sharded.shards[0];
+    let idx: Vec<usize> = (0..150).collect();
+    let d = ds.d();
+    let inv_m = 1.0 / 150.0;
+
+    let mut g_native = vec![0.0; d * d];
+    let mut r_native = vec![0.0; d];
+    NativeGramBackend.accumulate(shard, &idx, inv_m, &mut g_native, &mut r_native).unwrap();
+
+    let before = engine.executions();
+    let backend = PjrtGramBackend::new(&engine);
+    let mut g_pjrt = vec![0.0; d * d];
+    let mut r_pjrt = vec![0.0; d];
+    backend.accumulate(shard, &idx, inv_m, &mut g_pjrt, &mut r_pjrt).unwrap();
+    assert_eq!(engine.executions() - before, 3, "expected 3 chunked executions");
+
+    for (a, b) in g_pjrt.iter().zip(&g_native) {
+        assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+    }
+}
+
+#[test]
+fn full_solver_run_with_pjrt_backend_matches_native() {
+    let Some(engine) = engine() else { return };
+    let ds = load_preset("smoke", Some(500), 11).unwrap();
+    let cfg = SolverConfig::default()
+        .with_lambda(0.05)
+        .with_sample_fraction(0.2)
+        .with_k(4)
+        .with_max_iters(16);
+    let machine = MachineModel::comet();
+
+    let native =
+        coordinator::run(&ds, &cfg, 4, &machine, AlgoKind::Sfista).unwrap();
+    let backend = PjrtGramBackend::new(&engine);
+    let pjrt =
+        coordinator::run_with_backend(&ds, &cfg, 4, &machine, AlgoKind::Sfista, &backend)
+            .unwrap();
+
+    assert_eq!(pjrt.iterations, native.iterations);
+    for (a, b) in pjrt.w.iter().zip(&native.w) {
+        assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "w: {a} vs {b} (f32 artifact)");
+    }
+    // Same communication structure regardless of backend.
+    assert_eq!(pjrt.trace.collective_rounds, native.trace.collective_rounds);
+}
+
+#[test]
+fn kstep_fista_artifact_matches_native_state_updates() {
+    let Some(engine) = engine() else { return };
+    let entry = match engine.manifest().find_kstep_fista(12, 4) {
+        Some(e) => e.clone(),
+        None => {
+            eprintln!("no kstep_fista d=12 k=4 artifact; skipping");
+            return;
+        }
+    };
+    // Random PSD stack.
+    let d = 12;
+    let k = 4;
+    let mut rng = ca_prox::util::rng::Rng::new(31);
+    let mut stack = GramStack::zeros(d, k);
+    for j in 0..k {
+        let a: Vec<f64> = (0..d * d).map(|_| rng.next_gaussian() / (d as f64).sqrt()).collect();
+        let (g, r) = stack.block_mut(j);
+        for i in 0..d {
+            for l in 0..d {
+                let mut acc = 0.0;
+                for m in 0..d {
+                    acc += a[i * d + m] * a[l * d + m];
+                }
+                g[i * d + l] = acc;
+            }
+            r[i] = rng.next_gaussian();
+        }
+    }
+    let w0: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+    let (t, lambda) = (0.2, 0.05);
+
+    // Native: the coordinator's IterState (iter starts at 0).
+    let mut state = ca_prox::coordinator::state::IterState::new(w0.clone());
+    for j in 0..k {
+        state
+            .fista_step(
+                &stack,
+                j,
+                t,
+                lambda,
+                ca_prox::solvers::traits::GradientAt::Momentum,
+            )
+            .unwrap();
+    }
+
+    // Artifact path.
+    let (w_art, w_prev_art) = engine
+        .run_kstep_fista(&entry, &stack, &w0, &w0, t, lambda, 0)
+        .unwrap();
+
+    for (a, b) in w_art.iter().zip(&state.w) {
+        assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "w: {a} vs {b}");
+    }
+    for (a, b) in w_prev_art.iter().zip(&state.w_prev) {
+        assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "w_prev: {a} vs {b}");
+    }
+}
+
+#[test]
+fn soft_threshold_artifact_matches_native() {
+    let Some(engine) = engine() else { return };
+    let entry = match engine.manifest().find_soft_threshold(12) {
+        Some(e) => e.clone(),
+        None => return,
+    };
+    let x: Vec<f64> = (0..12).map(|i| (i as f64 - 6.0) / 3.0).collect();
+    let got = engine.run_soft_threshold(&entry, &x, 0.5).unwrap();
+    let want = ca_prox::prox::soft_threshold::soft_threshold(&x, 0.5);
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+}

@@ -1,0 +1,124 @@
+//! Convergence-quality integration tests: the solvers must actually
+//! solve LASSO (against the high-accuracy reference), SPNM must converge
+//! in fewer outer iterations than SFISTA, and the sampling rate b must
+//! trade variance for flops the way Figure 2 shows.
+
+use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::datasets::registry::load_preset;
+use ca_prox::prox::objective::relative_solution_error;
+use ca_prox::solvers::ca_sfista::run_ca_sfista;
+use ca_prox::solvers::ca_spnm::run_ca_spnm;
+use ca_prox::solvers::reference::solve_reference;
+use ca_prox::solvers::traits::{SolverConfig, Stopping};
+
+#[test]
+fn sfista_approaches_reference_solution() {
+    let ds = load_preset("smoke", Some(1500), 10).unwrap();
+    let lambda = 0.05;
+    let (w_op, _) = solve_reference(&ds, lambda, 1e-8, 50_000).unwrap();
+    let cfg = SolverConfig::default()
+        .with_lambda(lambda)
+        .with_sample_fraction(0.5)
+        .with_k(8)
+        .with_max_iters(600)
+        .with_seed(3);
+    let out = run_ca_sfista(&ds, &cfg, 4, &MachineModel::comet()).unwrap();
+    let rel = relative_solution_error(&out.w, &w_op);
+    assert!(rel < 0.15, "rel error {rel} after 600 stochastic iterations");
+}
+
+#[test]
+fn spnm_converges_in_fewer_outer_iterations_than_sfista() {
+    let ds = load_preset("smoke", Some(1200), 20).unwrap();
+    let lambda = 0.05;
+    let (w_op, _) = solve_reference(&ds, lambda, 1e-8, 50_000).unwrap();
+    let tol = 0.3;
+    let mk = |q| {
+        let mut c = SolverConfig::default()
+            .with_lambda(lambda)
+            .with_sample_fraction(0.5)
+            .with_k(4)
+            .with_q(q)
+            .with_seed(8);
+        c.stopping = Stopping::RelError { tol, w_op: w_op.clone(), max_iters: 2000 };
+        c
+    };
+    let machine = MachineModel::comet();
+    let fista = run_ca_sfista(&ds, &mk(1), 2, &machine).unwrap();
+    let spnm = run_ca_spnm(&ds, &mk(8), 2, &machine).unwrap();
+    assert!(spnm.final_rel_error <= tol);
+    assert!(fista.final_rel_error <= tol);
+    assert!(
+        spnm.iterations <= fista.iterations,
+        "SPNM {} vs SFISTA {} outer iterations to tol {tol}",
+        spnm.iterations,
+        fista.iterations
+    );
+}
+
+#[test]
+fn larger_b_reaches_lower_floor() {
+    // Figure 2's content: tiny b stalls at a higher error floor near the
+    // optimum; larger b keeps descending.
+    let ds = load_preset("smoke", Some(1500), 30).unwrap();
+    let lambda = 0.05;
+    let (w_op, _) = solve_reference(&ds, lambda, 1e-8, 50_000).unwrap();
+    let machine = MachineModel::comet();
+    let run_b = |b: f64| {
+        let mut cfg = SolverConfig::default()
+            .with_lambda(lambda)
+            .with_sample_fraction(b)
+            .with_k(8)
+            .with_max_iters(400)
+            .with_seed(12);
+        cfg.w_op = Some(w_op.clone());
+        run_ca_sfista(&ds, &cfg, 4, &machine).unwrap().final_rel_error
+    };
+    let hi = run_b(0.8);
+    let lo = run_b(0.02);
+    assert!(
+        hi < lo,
+        "b=0.8 should end closer to optimum than b=0.02: {hi} vs {lo}"
+    );
+}
+
+#[test]
+fn solution_is_sparse_at_large_lambda() {
+    let ds = load_preset("smoke", Some(1000), 40).unwrap();
+    let machine = MachineModel::comet();
+    let run_lambda = |lambda: f64| {
+        let cfg = SolverConfig::default()
+            .with_lambda(lambda)
+            .with_sample_fraction(0.5)
+            .with_k(4)
+            .with_max_iters(300)
+            .with_seed(9);
+        let out = run_ca_sfista(&ds, &cfg, 2, &machine).unwrap();
+        out.w.iter().filter(|&&v| v == 0.0).count()
+    };
+    let zeros_small = run_lambda(1e-4);
+    let zeros_large = run_lambda(0.5);
+    assert!(
+        zeros_large > zeros_small,
+        "λ=0.5 should zero more coefficients ({zeros_large}) than λ=1e-4 ({zeros_small})"
+    );
+}
+
+#[test]
+fn rel_error_stopping_matches_paper_speedup_protocol() {
+    // The speedup experiments stop at tol = 0.1 relative error; make
+    // sure the protocol terminates and reports consistently.
+    let ds = load_preset("smoke", Some(800), 50).unwrap();
+    let lambda = 0.05;
+    let (w_op, _) = solve_reference(&ds, lambda, 1e-8, 50_000).unwrap();
+    let mut cfg = SolverConfig::default()
+        .with_lambda(lambda)
+        .with_sample_fraction(0.5)
+        .with_k(8)
+        .with_seed(4);
+    cfg.stopping = Stopping::RelError { tol: 0.1, w_op: w_op.clone(), max_iters: 5000 };
+    let out = run_ca_sfista(&ds, &cfg, 4, &MachineModel::comet()).unwrap();
+    assert!(out.final_rel_error <= 0.1);
+    assert!(out.iterations < 5000);
+    assert!(relative_solution_error(&out.w, &w_op) <= 0.1);
+}

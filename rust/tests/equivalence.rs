@@ -1,0 +1,143 @@
+//! The paper's central claim (§IV, Figure 3): the k-step CA algorithms
+//! are **arithmetically identical** to the classical algorithms — same
+//! iterates, any k, both solvers — because randomized sampling lets the
+//! iterations unroll without changing the math.
+
+use ca_prox::comm::collectives::AllReduceAlgo;
+use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::datasets::registry::load_preset;
+use ca_prox::datasets::synthetic::{generate, SyntheticSpec};
+use ca_prox::solvers::ca_sfista::run_ca_sfista;
+use ca_prox::solvers::ca_spnm::run_ca_spnm;
+use ca_prox::solvers::traits::SolverConfig;
+use ca_prox::util::prop::prop_check;
+
+fn assert_close(a: &[f64], b: &[f64], tol: f64, ctx: &str) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert!((x - y).abs() <= tol * (1.0 + y.abs()), "{ctx}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn ca_sfista_equals_classical_across_k_p_and_collectives() {
+    let ds = load_preset("smoke", Some(600), 3).unwrap();
+    let machine = MachineModel::comet();
+    for algo in [AllReduceAlgo::BinomialTree, AllReduceAlgo::RecursiveDoubling, AllReduceAlgo::Ring]
+    {
+        let mut cfg = SolverConfig::default()
+            .with_lambda(0.05)
+            .with_sample_fraction(0.2)
+            .with_max_iters(30)
+            .with_seed(123);
+        cfg.allreduce = algo;
+        for p in [1usize, 3, 8] {
+            let classical = run_ca_sfista(&ds, &cfg.clone().with_k(1), p, &machine).unwrap();
+            for k in [2usize, 5, 30] {
+                let ca = run_ca_sfista(&ds, &cfg.clone().with_k(k), p, &machine).unwrap();
+                assert_close(
+                    &ca.w,
+                    &classical.w,
+                    1e-10,
+                    &format!("sfista p={p} k={k} algo={algo:?}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ca_spnm_equals_classical_across_k() {
+    let ds = load_preset("smoke", Some(500), 5).unwrap();
+    let machine = MachineModel::comet();
+    let cfg = SolverConfig::default()
+        .with_lambda(0.05)
+        .with_sample_fraction(0.25)
+        .with_q(4)
+        .with_max_iters(20)
+        .with_seed(7);
+    let classical = run_ca_spnm(&ds, &cfg.clone().with_k(1), 4, &machine).unwrap();
+    for k in [2usize, 4, 10, 20] {
+        let ca = run_ca_spnm(&ds, &cfg.clone().with_k(k), 4, &machine).unwrap();
+        assert_close(&ca.w, &classical.w, 1e-10, &format!("spnm k={k}"));
+    }
+}
+
+#[test]
+fn equivalence_holds_on_sparse_data() {
+    let ds = generate(
+        &SyntheticSpec { d: 20, n: 400, density: 0.15, noise: 0.05, model_sparsity: 0.3, condition: 1.0 },
+        77,
+    );
+    let machine = MachineModel::comet();
+    let cfg = SolverConfig::default()
+        .with_lambda(0.02)
+        .with_sample_fraction(0.1)
+        .with_max_iters(40)
+        .with_seed(21);
+    let classical = run_ca_sfista(&ds, &cfg.clone().with_k(1), 6, &machine).unwrap();
+    let ca = run_ca_sfista(&ds, &cfg.clone().with_k(8), 6, &machine).unwrap();
+    assert_close(&ca.w, &classical.w, 1e-10, "sparse");
+    assert!((ca.final_objective - classical.final_objective).abs() < 1e-10);
+}
+
+#[test]
+fn prop_equivalence_random_configs() {
+    let ds = load_preset("smoke", Some(300), 1).unwrap();
+    let machine = MachineModel::comet();
+    prop_check("CA-k == classical for random (k, p, b, λ, seed)", 10, |g| {
+        let k = g.usize_in(2, 12);
+        let p = g.usize_in(1, 6);
+        let b = g.f64_in(0.05, 0.9);
+        let lambda = g.f64_in(0.001, 0.2);
+        let seed = g.usize_in(0, 10_000) as u64;
+        let iters = g.usize_in(k, 3 * k);
+        let cfg = SolverConfig::default()
+            .with_lambda(lambda)
+            .with_sample_fraction(b)
+            .with_max_iters(iters)
+            .with_seed(seed);
+        let classical = run_ca_sfista(&ds, &cfg.clone().with_k(1), p, &machine)
+            .map_err(|e| e.to_string())?;
+        let ca =
+            run_ca_sfista(&ds, &cfg.clone().with_k(k), p, &machine).map_err(|e| e.to_string())?;
+        for (x, y) in ca.w.iter().zip(&classical.w) {
+            if (x - y).abs() > 1e-9 * (1.0 + y.abs()) {
+                return Err(format!("k={k} p={p} b={b:.2}: {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Convergence (not just the final point) is unchanged — the content of
+/// the paper's Figure 3.
+#[test]
+fn history_overlays_for_all_k() {
+    let ds = load_preset("smoke", Some(400), 2).unwrap();
+    let machine = MachineModel::comet();
+    let cfg = SolverConfig::default()
+        .with_lambda(0.05)
+        .with_sample_fraction(0.3)
+        .with_max_iters(24)
+        .with_history(4)
+        .with_seed(11);
+    let h1: Vec<f64> = run_ca_sfista(&ds, &cfg.clone().with_k(1), 4, &machine)
+        .unwrap()
+        .history
+        .iter()
+        .map(|h| h.objective)
+        .collect();
+    for k in [4usize, 12] {
+        let hk: Vec<f64> = run_ca_sfista(&ds, &cfg.clone().with_k(k), 4, &machine)
+            .unwrap()
+            .history
+            .iter()
+            .map(|h| h.objective)
+            .collect();
+        assert_eq!(h1.len(), hk.len());
+        for (a, b) in h1.iter().zip(&hk) {
+            assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()), "objective curve diverged");
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! System-level seams not covered by the other suites: real-file dataset
+//! override, config-file round trips through the CLI layer, and failure
+//! injection through the coordinator.
+
+use ca_prox::cluster::shard::WorkerShard;
+use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::config::spec::RunSpec;
+use ca_prox::coordinator;
+use ca_prox::datasets::registry::load_preset;
+use ca_prox::error::CaError;
+use ca_prox::runtime::backend::GramBackend;
+use ca_prox::solvers::traits::{AlgoKind, SolverConfig};
+
+/// `data/<name>` overrides the synthetic generator — the path real users
+/// take with the actual LIBSVM files.
+#[test]
+fn local_data_file_overrides_synthetic() {
+    // Run from a temp cwd so we don't pollute the repo's data/.
+    let dir = std::env::temp_dir().join(format!("ca_prox_data_{}", std::process::id()));
+    std::fs::create_dir_all(dir.join("data")).unwrap();
+    std::fs::write(
+        dir.join("data/abalone.txt"),
+        "1.5 1:0.5 3:2.0\n-1 2:1.0\n0.25 1:1 2:2 3:3\n",
+    )
+    .unwrap();
+    let old = std::env::current_dir().unwrap();
+    std::env::set_current_dir(&dir).unwrap();
+    let ds = load_preset("abalone", None, 1).unwrap();
+    std::env::set_current_dir(old).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    // The file (3 samples) won, not the 4177-sample synthetic preset.
+    assert_eq!(ds.n(), 3);
+    assert_eq!(ds.d(), 8); // d_hint pads to the preset dimension
+    assert_eq!(ds.y, vec![1.5, -1.0, 0.25]);
+}
+
+/// The shipped example config parses and runs end to end.
+#[test]
+fn shipped_config_file_parses_and_runs() {
+    let text = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/covtype_ca_sfista.toml"),
+    )
+    .unwrap();
+    let mut spec = RunSpec::from_toml(&text).unwrap();
+    assert_eq!(spec.dataset, "covtype");
+    assert_eq!(spec.p, 128);
+    assert_eq!(spec.solver.k, 32);
+    spec.solver.validate().unwrap();
+    // Shrink for test runtime, then actually execute it.
+    spec.scale_n = Some(1000);
+    spec.p = 4;
+    spec.solver = spec.solver.clone().with_max_iters(8);
+    let ds = load_preset(&spec.dataset, spec.scale_n, spec.solver.seed).unwrap();
+    let out = coordinator::run(&ds, &spec.solver, spec.p, &spec.machine, spec.algo).unwrap();
+    assert_eq!(out.iterations, 8);
+}
+
+/// A backend failing on one worker mid-block must surface as an error,
+/// not a wrong answer.
+#[test]
+fn backend_failure_propagates_through_coordinator() {
+    struct FaultyBackend;
+    impl GramBackend for FaultyBackend {
+        fn accumulate(
+            &self,
+            shard: &WorkerShard,
+            idx_local: &[usize],
+            inv_m: f64,
+            g: &mut [f64],
+            r: &mut [f64],
+        ) -> ca_prox::Result<u64> {
+            if shard.worker == 2 {
+                return Err(CaError::Runtime("injected fault on worker 2".into()));
+            }
+            ca_prox::runtime::backend::NativeGramBackend.accumulate(shard, idx_local, inv_m, g, r)
+        }
+        fn name(&self) -> &'static str {
+            "faulty"
+        }
+    }
+    let ds = load_preset("smoke", Some(300), 5).unwrap();
+    let cfg = SolverConfig::default().with_sample_fraction(0.3).with_max_iters(4);
+    let err = coordinator::run_with_backend(
+        &ds,
+        &cfg,
+        4,
+        &MachineModel::comet(),
+        AlgoKind::Sfista,
+        &FaultyBackend,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("injected fault"), "{err}");
+}
+
+/// Degenerate-but-legal configurations run: P > n (some workers own no
+/// columns), k > T, b so small that m = 1.
+#[test]
+fn degenerate_configurations_run() {
+    let ds = load_preset("smoke", Some(40), 9).unwrap();
+    let machine = MachineModel::comet();
+    // More workers than columns.
+    let cfg = SolverConfig::default().with_sample_fraction(0.5).with_max_iters(4);
+    let out = coordinator::run(&ds, &cfg, 64, &machine, AlgoKind::Sfista).unwrap();
+    assert_eq!(out.iterations, 4);
+    // k far beyond T.
+    let cfg = SolverConfig::default().with_sample_fraction(0.5).with_k(512).with_max_iters(3);
+    let out = coordinator::run(&ds, &cfg, 2, &machine, AlgoKind::Sfista).unwrap();
+    assert_eq!(out.iterations, 3);
+    assert_eq!(out.trace.collective_rounds, 1);
+    // Minimal sample size (b → m = 1).
+    let cfg = SolverConfig::default().with_sample_fraction(0.03).with_max_iters(4);
+    let out = coordinator::run(&ds, &cfg, 2, &machine, AlgoKind::Spnm).unwrap();
+    assert!(out.final_objective.is_finite());
+}
+
+/// λ = 0 (pure least squares) and huge λ (all-zero solution) both behave.
+#[test]
+fn lambda_extremes() {
+    let ds = load_preset("smoke", Some(500), 3).unwrap();
+    let machine = MachineModel::comet();
+    let base = SolverConfig::default().with_sample_fraction(0.5).with_k(4).with_max_iters(60);
+    let ridge_free =
+        coordinator::run(&ds, &base.clone().with_lambda(0.0), 2, &machine, AlgoKind::Sfista)
+            .unwrap();
+    assert!(ridge_free.w.iter().any(|&v| v != 0.0));
+    let crushed =
+        coordinator::run(&ds, &base.clone().with_lambda(100.0), 2, &machine, AlgoKind::Sfista)
+            .unwrap();
+    assert!(crushed.w.iter().all(|&v| v == 0.0), "huge λ must zero the solution");
+}
