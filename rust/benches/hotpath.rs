@@ -1,17 +1,22 @@
 //! Hot-path microbenchmarks (real wall time, not the α-β-γ model):
-//! the sampled-Gram kernels (CSC native, dense native, PJRT artifact),
-//! the collectives, the k-step update loop, and end-to-end iteration
-//! throughput. This is the §Perf working set — before/after numbers in
-//! EXPERIMENTS.md come from here.
+//! the sampled-Gram kernels (CSC native, dense naive vs packed, PJRT
+//! artifact), the collectives, the k-step update loop, and end-to-end
+//! iteration throughput. This is the §Perf working set — before/after
+//! numbers in EXPERIMENTS.md come from here, and every timing also
+//! leaves a machine-readable `BENCH {json}` line for the trajectory.
 
-use ca_prox::benchkit::{bench, fmt_secs, header};
+use ca_prox::benchkit::{bench, emit, fmt_secs, header};
 use ca_prox::cluster::shard::{PartitionStrategy, ShardedDataset};
 use ca_prox::comm::collectives::{allreduce_sum, AllReduceAlgo};
 use ca_prox::comm::costmodel::MachineModel;
 use ca_prox::comm::trace::CostTrace;
 use ca_prox::coordinator::state::IterState;
 use ca_prox::datasets::registry::load_preset;
-use ca_prox::matrix::ops::{sampled_gram_csc, sampled_gram_dense, GramStack};
+use ca_prox::matrix::dense::DenseMatrix;
+use ca_prox::matrix::gemm;
+use ca_prox::matrix::ops::{
+    sampled_gram_csc, sampled_gram_dense, sampled_gram_dense_naive, GramStack,
+};
 use ca_prox::runtime::backend::{GramBackend, NativeGramBackend};
 use ca_prox::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
 use ca_prox::solvers::traits::{AlgoKind, GradientAt, SolverConfig};
@@ -20,6 +25,7 @@ use std::path::Path;
 
 fn main() {
     header("hot path microbenchmarks", "real wall time (release build)");
+    println!("gemm kernel: {}", gemm::select_kernel().name());
     let ds = load_preset("covtype", Some(50_000), 42).unwrap();
     let d = ds.d();
     let dense = ds.x.to_dense();
@@ -35,13 +41,52 @@ fn main() {
         r.iter_mut().for_each(|x| *x = 0.0);
         sampled_gram_csc(&ds.x, &ds.y, &idx, inv_m, &mut g, &mut r).unwrap();
     });
-    println!("{}", t.summary());
-    let t = bench("gram/native-dense (d=54, m=2048)", 3, 20, || {
+    emit(&t);
+    let t_naive = bench("gram/naive-dense (d=54, m=2048)", 3, 20, || {
+        g.iter_mut().for_each(|x| *x = 0.0);
+        r.iter_mut().for_each(|x| *x = 0.0);
+        sampled_gram_dense_naive(&dense, &ds.y, &idx, inv_m, &mut g, &mut r).unwrap();
+    });
+    emit(&t_naive);
+    let t_packed = bench("gram/native-dense (d=54, m=2048)", 3, 20, || {
         g.iter_mut().for_each(|x| *x = 0.0);
         r.iter_mut().for_each(|x| *x = 0.0);
         sampled_gram_dense(&dense, &ds.y, &idx, inv_m, &mut g, &mut r).unwrap();
     });
-    println!("{}", t.summary());
+    emit(&t_packed);
+    println!(
+        "gram/packed-vs-naive speedup (d=54): {:.2}x",
+        t_naive.median() / t_packed.median()
+    );
+
+    // Wide-feature panel: d = 256 stresses the MC/NC tiling rather than
+    // the single-block d = 54 case.
+    {
+        let (d2, n2, m2) = (256usize, 4096usize, 2048usize);
+        let mut prng = Rng::new(7);
+        let wide = DenseMatrix::from_fn(d2, n2, |_, _| prng.next_gaussian());
+        let y2: Vec<f64> = (0..n2).map(|_| prng.next_gaussian()).collect();
+        let idx2 = prng.sample_without_replacement(n2, m2);
+        let inv2 = 1.0 / m2 as f64;
+        let mut g2 = vec![0.0; d2 * d2];
+        let mut r2 = vec![0.0; d2];
+        let t_naive = bench("gram/naive-dense (d=256, m=2048)", 1, 8, || {
+            g2.iter_mut().for_each(|x| *x = 0.0);
+            r2.iter_mut().for_each(|x| *x = 0.0);
+            sampled_gram_dense_naive(&wide, &y2, &idx2, inv2, &mut g2, &mut r2).unwrap();
+        });
+        emit(&t_naive);
+        let t_packed = bench("gram/native-dense (d=256, m=2048)", 1, 8, || {
+            g2.iter_mut().for_each(|x| *x = 0.0);
+            r2.iter_mut().for_each(|x| *x = 0.0);
+            sampled_gram_dense(&wide, &y2, &idx2, inv2, &mut g2, &mut r2).unwrap();
+        });
+        emit(&t_packed);
+        println!(
+            "gram/packed-vs-naive speedup (d=256): {:.2}x",
+            t_naive.median() / t_packed.median()
+        );
+    }
 
     // PJRT artifact path (if built).
     let artifact_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -59,7 +104,7 @@ fn main() {
                 r2.iter_mut().for_each(|x| *x = 0.0);
                 backend.accumulate(shard, &idx, inv_m, &mut g2, &mut r2).unwrap();
             });
-            println!("{}", t.summary());
+            emit(&t);
         }
         Err(e) => println!("gram/pjrt-artifact: skipped ({e})"),
     }
@@ -81,7 +126,7 @@ fn main() {
             let mut bufs = proto.clone();
             allreduce_sum(&mut bufs, algo, &machine, &mut trace).unwrap();
         });
-        println!("{}", t.summary());
+        emit(&t);
     }
 
     // ---- k-step update loop ----
@@ -99,7 +144,7 @@ fn main() {
             state.fista_step(&stack, j, 0.1, 0.01, GradientAt::Momentum).unwrap();
         }
     });
-    println!("{}", t.summary());
+    emit(&t);
 
     // ---- end-to-end iteration throughput (wall) ----
     let machine = MachineModel::comet();
@@ -113,11 +158,8 @@ fn main() {
         let t = bench(&format!("e2e/ca-sfista P={p} k=32 T=64 (wall)"), 1, 5, || {
             ca_prox::coordinator::run(&ds, &cfg, p, &machine, AlgoKind::Sfista).unwrap();
         });
-        println!(
-            "{}  ({} per iteration)",
-            t.summary(),
-            fmt_secs(t.median() / 64.0)
-        );
+        emit(&t);
+        println!("  ({} per iteration)", fmt_secs(t.median() / 64.0));
     }
     println!("\nhotpath OK");
 }

@@ -30,6 +30,11 @@ impl Timing {
         stats::stddev(&self.samples)
     }
 
+    /// Fastest sample (0.0 for an empty sample set, per [`stats::min`]).
+    pub fn min(&self) -> f64 {
+        stats::min(&self.samples)
+    }
+
     /// Short human-readable summary line.
     pub fn summary(&self) -> String {
         format!(
@@ -41,6 +46,44 @@ impl Timing {
             self.samples.len()
         )
     }
+
+    /// Machine-readable JSON object (schema v1) for the BENCH trajectory
+    /// consumed by tooling and future-PR comparisons. All stats come
+    /// from [`stats`] (finite even on empty samples) and the name goes
+    /// through a real JSON string escaper, so the line always parses.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"schema\":1,\"name\":\"{}\",\"n\":{},\"median_s\":{:e},\"mean_s\":{:e},\"stddev_s\":{:e},\"min_s\":{:e}}}",
+            json_escape_str(&self.name),
+            self.samples.len(),
+            self.median(),
+            self.mean(),
+            self.stddev(),
+            self.min()
+        )
+    }
+}
+
+/// Escape a string for embedding in a JSON string literal: quotes,
+/// backslashes and control characters; other UTF-8 passes through.
+fn json_escape_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Print the human summary plus a grep-able `BENCH {json}` line — every
+/// bench emits through this so runs leave a machine-readable trajectory.
+pub fn emit(t: &Timing) {
+    println!("{}", t.summary());
+    println!("BENCH {}", t.to_json());
 }
 
 /// Format seconds human-readably (ns/µs/ms/s).
@@ -117,6 +160,23 @@ mod tests {
         assert_eq!(t.samples.len(), 5);
         assert!(t.mean() >= 0.0);
         assert!(t.summary().contains("noop"));
+    }
+
+    #[test]
+    fn json_line_is_parseable_and_complete() {
+        let t = Timing { name: "gram/packed (d=54)".into(), samples: vec![0.5, 1.5, 1.0] };
+        let j = t.to_json();
+        // Round-trips through the in-repo JSON parser.
+        let parsed = crate::util::json::parse(&j).unwrap();
+        assert_eq!(parsed.get("schema").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(
+            parsed.get("name").and_then(|v| v.as_str()),
+            Some("gram/packed (d=54)")
+        );
+        assert_eq!(parsed.get("n").and_then(|v| v.as_usize()), Some(3));
+        let median = parsed.get("median_s").and_then(|v| v.as_f64()).unwrap();
+        assert!((median - 1.0).abs() < 1e-12);
+        assert!((t.min() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -7,7 +7,6 @@
 //! the flops once (critical-path semantics).
 
 use crate::error::Result;
-use crate::matrix::dense::dot;
 use crate::matrix::ops::GramStack;
 use crate::prox::soft_threshold::soft_threshold_scalar;
 use crate::solvers::traits::GradientAt;
@@ -68,20 +67,17 @@ impl IterState {
         let d = self.d();
         self.iter += 1;
         let mu = Self::momentum_coeff(self.iter);
-        let (g, r) = stack.block(j);
 
         // Momentum point v into scratch.
         for i in 0..d {
             self.scratch[i] = self.w[i] + mu * (self.w[i] - self.w_prev[i]);
         }
-        // Gradient at the configured point.
+        // Gradient at the configured point, on the blocked GEMV driver.
         let point: &[f64] = match grad_at {
             GradientAt::Iterate => &self.w,
             GradientAt::Momentum => &self.scratch,
         };
-        for i in 0..d {
-            self.grad[i] = dot(&g[i * d..(i + 1) * d], point) - r[i];
-        }
+        stack.gradient_into(j, point, &mut self.grad)?;
         // w_new = S_{λt}(v − t·∇f); rotate iterates.
         std::mem::swap(&mut self.w_prev, &mut self.w);
         for i in 0..d {
@@ -107,11 +103,8 @@ impl IterState {
         self.iter += 1;
         // z_0 = w (warm start).
         self.scratch.copy_from_slice(&self.w);
-        let (g, r) = stack.block(j);
         for _ in 0..q_iters {
-            for i in 0..d {
-                self.grad[i] = dot(&g[i * d..(i + 1) * d], &self.scratch) - r[i];
-            }
+            stack.gradient_into(j, &self.scratch, &mut self.grad)?;
             for i in 0..d {
                 self.scratch[i] =
                     soft_threshold_scalar(self.scratch[i] - t * self.grad[i], lambda * t);

@@ -1,10 +1,13 @@
 //! Row-major dense matrix with the micro-kernels the solvers need.
 //!
 //! This is deliberately a small, dependency-free BLAS subset: `gemv`,
-//! `gemm` (tiled), `syrk`-style Gram products, norms and AXPY-type vector
-//! ops. Everything is f64; the f32 path lives in the PJRT runtime.
+//! `gemm`, `syrk`-style Gram products, norms and AXPY-type vector ops.
+//! The matrix-level products (`matvec`, `matmul`, `syrk_into`) execute
+//! on the packed, cache-blocked kernel layer in [`crate::matrix::gemm`];
+//! everything is f64 — the f32 path lives in the PJRT runtime.
 
 use crate::error::{CaError, Result};
+use crate::matrix::gemm;
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -94,9 +97,21 @@ impl DenseMatrix {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// Copy of a column.
+    /// Copy of a column (allocates; prefer [`Self::col_into`] in loops).
     pub fn col(&self, c: usize) -> Vec<f64> {
-        (0..self.rows).map(|r| self.get(r, c)).collect()
+        let mut out = vec![0.0; self.rows];
+        self.col_into(c, &mut out);
+        out
+    }
+
+    /// Gather a column into a caller-provided buffer — the
+    /// non-allocating form for hot loops that walk many columns.
+    pub fn col_into(&self, c: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.rows, "col_into: buffer must have {} rows", self.rows);
+        debug_assert!(c < self.cols);
+        for (r, slot) in out.iter_mut().enumerate() {
+            *slot = self.data[r * self.cols + c];
+        }
     }
 
     /// Transpose (allocates).
@@ -133,10 +148,7 @@ impl DenseMatrix {
             )));
         }
         let mut y = vec![0.0; self.rows];
-        for r in 0..self.rows {
-            let row = self.row(r);
-            y[r] = dot(row, x);
-        }
+        gemm::gemv_into(&self.data, self.rows, self.cols, x, &mut y);
         Ok(y)
     }
 
@@ -164,7 +176,7 @@ impl DenseMatrix {
         Ok(y)
     }
 
-    /// C = A·B with blocked loops (cache tiling).
+    /// C = A·B on the packed, cache-blocked GEMM driver.
     pub fn matmul(&self, b: &DenseMatrix) -> Result<DenseMatrix> {
         if self.cols != b.rows {
             return Err(CaError::Shape(format!(
@@ -174,58 +186,26 @@ impl DenseMatrix {
         }
         let (m, k, n) = (self.rows, self.cols, b.cols);
         let mut c = DenseMatrix::zeros(m, n);
-        const TILE: usize = 64;
-        for i0 in (0..m).step_by(TILE) {
-            let i1 = (i0 + TILE).min(m);
-            for k0 in (0..k).step_by(TILE) {
-                let k1 = (k0 + TILE).min(k);
-                for j0 in (0..n).step_by(TILE) {
-                    let j1 = (j0 + TILE).min(n);
-                    for i in i0..i1 {
-                        for kk in k0..k1 {
-                            let a_ik = self.data[i * k + kk];
-                            if a_ik == 0.0 {
-                                continue;
-                            }
-                            let brow = &b.data[kk * n + j0..kk * n + j1];
-                            let crow = &mut c.data[i * n + j0..i * n + j1];
-                            for (cv, bv) in crow.iter_mut().zip(brow) {
-                                *cv += a_ik * bv;
-                            }
-                        }
-                    }
-                }
-            }
-        }
+        gemm::gemm_into(m, n, k, 1.0, &self.data, k, &b.data, n, &mut c.data, n);
         Ok(c)
     }
 
     /// Symmetric rank-m update: `G += scale · A·Aᵀ` where A = self.
     ///
-    /// Computes only the upper triangle then mirrors it — the syrk trick
-    /// halves the flops of the Gram product, the dominant cost of both
+    /// Runs on the packed SYRK driver: only upper-triangle tiles are
+    /// computed and the strict lower triangle is mirrored once — half
+    /// the flops of the Gram product, the dominant cost of both
     /// algorithms (paper Theorems 1–4 count this as `d²·m` flops).
+    /// `G` must be symmetric on entry (Gram accumulators always are).
     pub fn syrk_into(&self, scale: f64, g: &mut DenseMatrix) -> Result<()> {
         let d = self.rows;
-        let m = self.cols;
         if g.rows != d || g.cols != d {
             return Err(CaError::Shape(format!(
                 "syrk_into: G must be {d}x{d}, got {}x{}",
                 g.rows, g.cols
             )));
         }
-        for i in 0..d {
-            let rowi = self.row(i);
-            for j in i..d {
-                let rowj = self.row(j);
-                let s = dot(rowi, rowj) * scale;
-                g.data[i * d + j] += s;
-                if i != j {
-                    g.data[j * d + i] += s;
-                }
-            }
-        }
-        let _ = m;
+        gemm::syrk_acc(d, self.cols, scale, &self.data, &mut g.data);
         Ok(())
     }
 

@@ -1,0 +1,404 @@
+//! Packed, cache-blocked GEMM/SYRK/GEMV drivers — the kernel layer under
+//! every sampled-Gram product (DESIGN.md §Kernel layer).
+//!
+//! Layout follows the Goto/van de Geijn (BLIS) decomposition: three
+//! cache loops (`NC` → `KC` → `MC`) pack operand blocks into contiguous
+//! zero-padded panels ([`pack`]), and two register loops hand `MR×NR`
+//! tiles to a runtime-selected microkernel ([`kernel`]). The SYRK driver
+//! exploits Gram symmetry by skipping every tile strictly below the
+//! diagonal and mirroring the strict lower triangle once at the end —
+//! half the flops of a general product, exactly as the paper's
+//! `d²·s` Gram cost assumes.
+//!
+//! Flop-accounting invariant: these drivers perform the arithmetic but
+//! never report it. Callers (e.g. [`crate::matrix::ops`]) charge flops
+//! analytically from the operand structure, so the counts feeding the
+//! α-β-γ cost traces are identical whichever execution regime or kernel
+//! runs — see `sampled_gram_dense` / `sampled_gram_csc`.
+
+pub mod kernel;
+pub mod pack;
+
+pub use kernel::{all_kernels, select_kernel, GenericSimdKernel, Kernel, ScalarKernel};
+
+/// Depth (k-dimension) cache block: one packed A micro-panel of
+/// `MR×KC` f64s stays resident in L1 while it is reused across the
+/// whole NC loop.
+pub const KC: usize = 256;
+
+/// Row cache block: the packed `MC×KC` A block (≤ 128 KB) targets L2.
+pub const MC: usize = 64;
+
+/// Column cache block: the packed `KC×NC` B block (≤ 512 KB) targets L3.
+pub const NC: usize = 256;
+
+/// The B operand of a blocked product: either a plain row-major matrix
+/// or the implicit transpose of A (SYRK) packed without materializing it.
+enum BOperand<'a> {
+    RowMajor { b: &'a [f64], ldb: usize },
+    TransposedA { a: &'a [f64], lda: usize },
+}
+
+/// Shared cache-blocked driver: `C += A·B` (alpha folded into packed A),
+/// optionally skipping output tiles strictly below the diagonal
+/// (`upper_only`, used by SYRK on square outputs).
+#[allow(clippy::too_many_arguments)]
+fn blocked(
+    kern: &dyn Kernel,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    bop: BOperand<'_>,
+    c: &mut [f64],
+    ldc: usize,
+    upper_only: bool,
+) {
+    let (mr, nr) = (kern.mr(), kern.nr());
+    debug_assert!(mr > 0 && nr > 0);
+    assert!(ldc >= n && c.len() >= m * ldc, "blocked: C buffer too small");
+    assert!(lda >= k && a.len() >= m * lda, "blocked: A buffer too small");
+    if let BOperand::RowMajor { b, ldb } = &bop {
+        assert!(*ldb >= n && b.len() >= k * ldb, "blocked: B buffer too small");
+    }
+    let mut ap: Vec<f64> = Vec::new();
+    let mut bp: Vec<f64> = Vec::new();
+    let mut tile = vec![0.0f64; mr * nr];
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            match &bop {
+                BOperand::RowMajor { b, ldb } => {
+                    pack::pack_b(&mut bp, b, *ldb, pc, kc, jc, nc, nr)
+                }
+                BOperand::TransposedA { a, lda } => {
+                    pack::pack_b_transposed(&mut bp, a, *lda, pc, kc, jc, nc, nr)
+                }
+            }
+            for ic in (0..m).step_by(MC) {
+                // Whole row-block strictly below the diagonal band: skip
+                // before paying for the A packing.
+                if upper_only && ic >= jc + nc {
+                    continue;
+                }
+                let mc = MC.min(m - ic);
+                pack::pack_a(&mut ap, a, lda, ic, mc, pc, kc, mr, alpha);
+                let mut pj = 0usize;
+                let mut jr = 0usize;
+                while jr < nc {
+                    let ncols = nr.min(nc - jr);
+                    let bpanel = &bp[pj * kc * nr..(pj + 1) * kc * nr];
+                    let mut pi = 0usize;
+                    let mut ir = 0usize;
+                    while ir < mc {
+                        let nrows = mr.min(mc - ir);
+                        // Tile entirely strictly below the diagonal?
+                        let skip = upper_only && ic + ir >= jc + jr + ncols;
+                        if !skip {
+                            let apanel = &ap[pi * kc * mr..(pi + 1) * kc * mr];
+                            if nrows == mr && ncols == nr {
+                                let c0 = (ic + ir) * ldc + jc + jr;
+                                kern.micro(kc, apanel, bpanel, &mut c[c0..], ldc);
+                            } else {
+                                // Ragged edge: compute the full padded tile
+                                // into scratch, write back the valid part.
+                                tile.iter_mut().for_each(|v| *v = 0.0);
+                                kern.micro(kc, apanel, bpanel, &mut tile, nr);
+                                for i in 0..nrows {
+                                    let dst = (ic + ir + i) * ldc + jc + jr;
+                                    for j in 0..ncols {
+                                        c[dst + j] += tile[i * nr + j];
+                                    }
+                                }
+                            }
+                        }
+                        pi += 1;
+                        ir += mr;
+                    }
+                    pj += 1;
+                    jr += nr;
+                }
+            }
+        }
+    }
+}
+
+/// `C += alpha·A·B` with the runtime-selected kernel.
+///
+/// `a`: row-major `m×k` (leading dim `lda`), `b`: row-major `k×n`
+/// (leading dim `ldb`), `c`: row-major `m×n` (leading dim `ldc`).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    gemm_with(select_kernel(), m, n, k, alpha, a, lda, b, ldb, c, ldc);
+}
+
+/// [`gemm_into`] with an explicit kernel (tests / A-B benches).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with(
+    kern: &dyn Kernel,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    blocked(kern, m, n, k, alpha, a, lda, BOperand::RowMajor { b, ldb }, c, ldc, false);
+}
+
+/// Symmetric rank-k update `C += alpha·A·Aᵀ` with the runtime-selected
+/// kernel. `a`: row-major `d×k_dim`; `c`: row-major `d×d`.
+///
+/// Only upper-triangle tiles are computed; the strict lower triangle is
+/// mirrored from the upper once at the end. **C must be symmetric on
+/// entry** (the Gram accumulators always are — they are built
+/// exclusively by this routine and by symmetric scatter updates).
+pub fn syrk_acc(d: usize, k_dim: usize, alpha: f64, a: &[f64], c: &mut [f64]) {
+    syrk_with(select_kernel(), d, k_dim, alpha, a, c);
+}
+
+/// [`syrk_acc`] with an explicit kernel (tests / A-B benches).
+pub fn syrk_with(kern: &dyn Kernel, d: usize, k_dim: usize, alpha: f64, a: &[f64], c: &mut [f64]) {
+    assert!(c.len() >= d * d, "syrk: C must be d×d");
+    blocked(kern, d, d, k_dim, alpha, a, k_dim, BOperand::TransposedA { a, lda: k_dim }, c, d, true);
+    for i in 0..d {
+        for j in (i + 1)..d {
+            c[j * d + i] = c[i * d + j];
+        }
+    }
+}
+
+/// `y = A·x` for row-major `a` (`m×n`): four rows share one streaming
+/// pass over `x`, giving four independent FMA chains per pass.
+pub fn gemv_into(a: &[f64], m: usize, n: usize, x: &[f64], y: &mut [f64]) {
+    gemv(a, m, n, x, y, false);
+}
+
+/// `y += A·x` (accumulating variant of [`gemv_into`]).
+pub fn gemv_acc(a: &[f64], m: usize, n: usize, x: &[f64], y: &mut [f64]) {
+    gemv(a, m, n, x, y, true);
+}
+
+fn gemv(a: &[f64], m: usize, n: usize, x: &[f64], y: &mut [f64], accumulate: bool) {
+    assert_eq!(x.len(), n, "gemv: x length");
+    assert_eq!(y.len(), m, "gemv: y length");
+    assert!(a.len() >= m * n, "gemv: A buffer too small");
+    let mut i = 0usize;
+    while i + 4 <= m {
+        let r0 = &a[i * n..(i + 1) * n];
+        let r1 = &a[(i + 1) * n..(i + 2) * n];
+        let r2 = &a[(i + 2) * n..(i + 3) * n];
+        let r3 = &a[(i + 3) * n..(i + 4) * n];
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+        for ((((&a0, &a1), &a2), &a3), &xj) in
+            r0.iter().zip(r1).zip(r2).zip(r3).zip(x)
+        {
+            s0 += a0 * xj;
+            s1 += a1 * xj;
+            s2 += a2 * xj;
+            s3 += a3 * xj;
+        }
+        if accumulate {
+            y[i] += s0;
+            y[i + 1] += s1;
+            y[i + 2] += s2;
+            y[i + 3] += s3;
+        } else {
+            y[i] = s0;
+            y[i + 1] = s1;
+            y[i + 2] = s2;
+            y[i + 3] = s3;
+        }
+        i += 4;
+    }
+    while i < m {
+        let row = &a[i * n..(i + 1) * n];
+        let mut s = 0.0f64;
+        for (&av, &xv) in row.iter().zip(x) {
+            s += av * xv;
+        }
+        if accumulate {
+            y[i] += s;
+        } else {
+            y[i] = s;
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn approx(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    /// Naive triple-loop oracle: C += alpha·A·B.
+    fn gemm_oracle(m: usize, n: usize, k: usize, alpha: f64, a: &[f64], b: &[f64], c: &mut [f64]) {
+        for i in 0..m {
+            for p in 0..k {
+                let aip = alpha * a[i * k + p];
+                for j in 0..n {
+                    c[i * n + j] += aip * b[p * n + j];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_gemm_matches_oracle_all_kernels() {
+        prop_check("packed gemm == naive oracle (ragged shapes)", 40, |g| {
+            let m = g.usize_in(1, 64);
+            let n = g.usize_in(1, 64);
+            let k = g.usize_in(1, 70);
+            let alpha = g.f64_in(-2.0, 2.0);
+            let a = g.vec_gauss(m * k);
+            let b = g.vec_gauss(k * n);
+            let mut expect = g.vec_gauss(m * n); // nonzero prior: += semantics
+            let base = expect.clone();
+            gemm_oracle(m, n, k, alpha, &a, &b, &mut expect);
+            for kern in all_kernels() {
+                let mut got = base.clone();
+                gemm_with(kern, m, n, k, alpha, &a, k, &b, n, &mut got, n);
+                for (x, y) in got.iter().zip(&expect) {
+                    if !approx(*x, *y, 1e-10) {
+                        return Err(format!(
+                            "{} m={m} n={n} k={k}: {x} vs {y}",
+                            kern.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_syrk_matches_gemm_with_transpose() {
+        prop_check("packed syrk == A·Aᵀ oracle + symmetry", 40, |g| {
+            let d = g.usize_in(1, 64);
+            let k = g.usize_in(1, 40);
+            let alpha = g.f64_in(-1.5, 1.5);
+            let a = g.vec_gauss(d * k);
+            let mut at = vec![0.0; k * d];
+            for i in 0..d {
+                for p in 0..k {
+                    at[p * d + i] = a[i * k + p];
+                }
+            }
+            let mut expect = vec![0.0; d * d];
+            gemm_oracle(d, d, k, alpha, &a, &at, &mut expect);
+            for kern in all_kernels() {
+                let mut got = vec![0.0; d * d];
+                syrk_with(kern, d, k, alpha, &a, &mut got);
+                for i in 0..d {
+                    for j in 0..d {
+                        if !approx(got[i * d + j], expect[i * d + j], 1e-10) {
+                            return Err(format!(
+                                "{} d={d} k={k} ({i},{j}): {} vs {}",
+                                kern.name(),
+                                got[i * d + j],
+                                expect[i * d + j]
+                            ));
+                        }
+                        if got[i * d + j] != got[j * d + i] {
+                            return Err(format!("asymmetric at ({i},{j})"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn syrk_accumulates_on_symmetric_prior() {
+        let d = 11;
+        let k = 9;
+        let a: Vec<f64> = (0..d * k).map(|v| ((v * 13 % 7) as f64) - 3.0).collect();
+        let mut c = vec![0.0; d * d];
+        syrk_acc(d, k, 0.5, &a, &mut c);
+        let once = c.clone();
+        syrk_acc(d, k, 0.5, &a, &mut c);
+        for (twice, one) in c.iter().zip(&once) {
+            assert!(approx(*twice, 2.0 * one, 1e-12), "{twice} vs {}", 2.0 * one);
+        }
+    }
+
+    #[test]
+    fn gemm_depth_spanning_multiple_kc_blocks() {
+        // k > KC exercises the pc loop and cross-block accumulation.
+        let (m, n, k) = (5usize, 7usize, KC * 2 + 3);
+        let a: Vec<f64> = (0..m * k).map(|v| ((v % 11) as f64) / 3.0 - 1.0).collect();
+        let b: Vec<f64> = (0..k * n).map(|v| ((v % 5) as f64) / 2.0 - 1.0).collect();
+        let mut expect = vec![0.0; m * n];
+        gemm_oracle(m, n, k, 1.0, &a, &b, &mut expect);
+        let mut got = vec![0.0; m * n];
+        gemm_into(m, n, k, 1.0, &a, k, &b, n, &mut got, n);
+        for (x, y) in got.iter().zip(&expect) {
+            assert!(approx(*x, *y, 1e-10), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn prop_gemv_matches_row_dots() {
+        prop_check("blocked gemv == per-row dot products", 40, |g| {
+            let m = g.usize_in(1, 33);
+            let n = g.usize_in(1, 40);
+            let a = g.vec_gauss(m * n);
+            let x = g.vec_gauss(n);
+            let prior = g.vec_gauss(m);
+            let mut y = prior.clone();
+            gemv_acc(&a, m, n, &x, &mut y);
+            let mut y2 = vec![0.0; m];
+            gemv_into(&a, m, n, &x, &mut y2);
+            for i in 0..m {
+                let mut s = 0.0;
+                for j in 0..n {
+                    s += a[i * n + j] * x[j];
+                }
+                if !approx(y[i], prior[i] + s, 1e-10) {
+                    return Err(format!("acc row {i}: {} vs {}", y[i], prior[i] + s));
+                }
+                if !approx(y2[i], s, 1e-10) {
+                    return Err(format!("into row {i}: {} vs {s}", y2[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degenerate_shapes_are_no_ops_or_exact() {
+        // k = 0: C unchanged.
+        let mut c = vec![4.0; 6];
+        gemm_into(2, 3, 0, 1.0, &[], 0, &[], 3, &mut c, 3);
+        assert_eq!(c, vec![4.0; 6]);
+        // m = 0 / n = 0: nothing touched, no panic.
+        gemm_into(0, 3, 2, 1.0, &[], 2, &[0.0; 6], 3, &mut [], 3);
+        gemm_into(2, 0, 2, 1.0, &[0.0; 4], 2, &[], 0, &mut [], 0);
+        let mut g = vec![1.0, 2.0, 2.0, 5.0];
+        syrk_acc(2, 0, 1.0, &[], &mut g);
+        assert_eq!(g, vec![1.0, 2.0, 2.0, 5.0]);
+    }
+}

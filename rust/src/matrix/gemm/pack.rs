@@ -1,0 +1,151 @@
+//! Panel packing — gathers cache blocks of the operands into the
+//! contiguous, microkernel-ready layouts the BLIS design prescribes.
+//!
+//! Packing costs `O(mc·kc)` loads/stores once per cache block and buys
+//! unit-stride, zero-padded panels for the `O(mc·nc·kc)` microkernel
+//! flops, so its cost vanishes for any nontrivial depth. Padding to full
+//! `MR`/`NR` tiles means the microkernel never branches on ragged edges;
+//! drivers trim the padded rows/columns when writing back.
+
+/// Pack rows `[row0, row0+mc)` × cols `[col0, col0+kc)` of the row-major
+/// matrix `a` (leading dimension `lda`) into `MR`-tall micro-panels,
+/// scaling every value by `alpha` (folding the global scale into the
+/// packed operand keeps the microkernel pure).
+///
+/// Output layout: micro-panel `t` covers rows `row0+t·mr ..`; within a
+/// panel, k-step `p` stores `mr` contiguous values (rows past the block
+/// edge are zero). Total length: `ceil(mc/mr)·kc·mr`.
+pub fn pack_a(
+    out: &mut Vec<f64>,
+    a: &[f64],
+    lda: usize,
+    row0: usize,
+    mc: usize,
+    col0: usize,
+    kc: usize,
+    mr: usize,
+    alpha: f64,
+) {
+    let panels = mc.div_ceil(mr);
+    out.clear();
+    out.resize(panels * kc * mr, 0.0);
+    for t in 0..panels {
+        let r0 = row0 + t * mr;
+        let rows = mr.min(row0 + mc - r0);
+        let base = t * kc * mr;
+        for i in 0..rows {
+            let src = &a[(r0 + i) * lda + col0..(r0 + i) * lda + col0 + kc];
+            for (p, &v) in src.iter().enumerate() {
+                out[base + p * mr + i] = v * alpha;
+            }
+        }
+    }
+}
+
+/// Pack rows `[k0, k0+kc)` × cols `[col0, col0+nc)` of the row-major
+/// matrix `b` (leading dimension `ldb`) into `NR`-wide micro-panels.
+///
+/// Output layout: micro-panel `t` covers columns `col0+t·nr ..`; within
+/// a panel, k-step `p` stores `nr` contiguous values (columns past the
+/// block edge are zero). Total length: `ceil(nc/nr)·kc·nr`.
+pub fn pack_b(
+    out: &mut Vec<f64>,
+    b: &[f64],
+    ldb: usize,
+    k0: usize,
+    kc: usize,
+    col0: usize,
+    nc: usize,
+    nr: usize,
+) {
+    let panels = nc.div_ceil(nr);
+    out.clear();
+    out.resize(panels * kc * nr, 0.0);
+    for t in 0..panels {
+        let c0 = col0 + t * nr;
+        let cols = nr.min(col0 + nc - c0);
+        let base = t * kc * nr;
+        for p in 0..kc {
+            let src = &b[(k0 + p) * ldb + c0..(k0 + p) * ldb + c0 + cols];
+            let dst = &mut out[base + p * nr..base + p * nr + cols];
+            dst.copy_from_slice(src);
+        }
+    }
+}
+
+/// Pack a block of `Aᵀ` as the B operand without materializing the
+/// transpose: `B[p, j] = A[col0+j, k0+p]`. Used by the SYRK driver where
+/// `C += α·A·Aᵀ`. Reads stream along A's rows (contiguous) and scatter
+/// into the panel, the mirror image of [`pack_a`]'s access pattern.
+pub fn pack_b_transposed(
+    out: &mut Vec<f64>,
+    a: &[f64],
+    lda: usize,
+    k0: usize,
+    kc: usize,
+    col0: usize,
+    nc: usize,
+    nr: usize,
+) {
+    let panels = nc.div_ceil(nr);
+    out.clear();
+    out.resize(panels * kc * nr, 0.0);
+    for t in 0..panels {
+        let c0 = col0 + t * nr;
+        let cols = nr.min(col0 + nc - c0);
+        let base = t * kc * nr;
+        for j in 0..cols {
+            let src = &a[(c0 + j) * lda + k0..(c0 + j) * lda + k0 + kc];
+            for (p, &v) in src.iter().enumerate() {
+                out[base + p * nr + j] = v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_a_layout_and_padding() {
+        // 3×4 matrix, mr = 2 → two panels, second padded by one row.
+        let a: Vec<f64> = (0..12).map(|v| v as f64).collect();
+        let mut out = Vec::new();
+        pack_a(&mut out, &a, 4, 0, 3, 1, 2, 2, 1.0);
+        // kc = 2 (cols 1..3), panels: rows {0,1} then {2, pad}.
+        assert_eq!(out, vec![1.0, 5.0, 2.0, 6.0, 9.0, 0.0, 10.0, 0.0]);
+        // alpha folds into the packed values.
+        pack_a(&mut out, &a, 4, 0, 2, 0, 1, 2, 0.5);
+        assert_eq!(out, vec![0.0, 2.0]);
+    }
+
+    #[test]
+    fn pack_b_layout_and_padding() {
+        // 2×3 matrix, nr = 2 → two panels, second padded by one column.
+        let b: Vec<f64> = (0..6).map(|v| v as f64).collect();
+        let mut out = Vec::new();
+        pack_b(&mut out, &b, 3, 0, 2, 0, 3, 2);
+        assert_eq!(out, vec![0.0, 1.0, 3.0, 4.0, 2.0, 0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_b_transposed_matches_explicit_transpose() {
+        let rows = 5;
+        let cols = 7;
+        let a: Vec<f64> = (0..rows * cols).map(|v| (v as f64).sqrt()).collect();
+        // Explicit transpose, then pack_b — must equal pack_b_transposed.
+        let mut at = vec![0.0; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                at[c * rows + r] = a[r * cols + c];
+            }
+        }
+        let (k0, kc, col0, nc, nr) = (1usize, 4usize, 0usize, 5usize, 4usize);
+        let mut expect = Vec::new();
+        pack_b(&mut expect, &at, rows, k0, kc, col0, nc, nr);
+        let mut got = Vec::new();
+        pack_b_transposed(&mut got, &a, cols, k0, kc, col0, nc, nr);
+        assert_eq!(got, expect);
+    }
+}

@@ -10,14 +10,18 @@
 //!   R = (1/m) · X_S y_S    ∈ R^d
 //! ```
 //!
-//! [`dense`] provides a row-major dense matrix with micro-tiled kernels;
-//! [`csc`] / [`csr`] provide compressed sparse storage (CSC is the natural
-//! layout for column sampling); [`ops`] implements the sampled Gram
-//! products with exact flop counting; [`partition`] implements the
-//! nnz-balanced column partitioning assumed in §III of the paper.
+//! [`gemm`] is the packed, cache-blocked kernel layer (BLIS-style
+//! microkernels + panel packing) that executes the dense flops;
+//! [`dense`] provides a row-major dense matrix whose products ride on
+//! that layer; [`csc`] / [`csr`] provide compressed sparse storage (CSC
+//! is the natural layout for column sampling); [`ops`] implements the
+//! sampled Gram products with exact flop counting; [`partition`]
+//! implements the nnz-balanced column partitioning assumed in §III of
+//! the paper.
 
 pub mod csc;
 pub mod csr;
 pub mod dense;
+pub mod gemm;
 pub mod ops;
 pub mod partition;

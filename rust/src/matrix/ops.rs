@@ -15,10 +15,53 @@
 //!
 //! All kernels return an exact flop count so the cost-model traces
 //! (Table I) are grounded in measured arithmetic, not estimates.
+//!
+//! ## Flop-accounting invariant
+//!
+//! The reported count is a function of the *operand structure* (which
+//! entries are nonzero) and the sample, never of the execution regime:
+//! the packed SYRK path, the dense rank-1 path and the sparse scatter
+//! path all report the count the zero-skipping reference kernel would,
+//! so `CostTrace` numbers are stable across kernel rewires and regime
+//! switches. `tests/gemm_kernels.rs` pins this.
 
 use crate::error::{CaError, Result};
 use crate::matrix::csc::CscMatrix;
 use crate::matrix::dense::DenseMatrix;
+use crate::matrix::gemm;
+
+/// Scatter-regime mirror switch: accumulate only the upper triangle and
+/// mirror once iff `idx.len() · MIRROR_WORK_FACTOR ≥ d`. The mirror
+/// costs a fixed `d²/2` copies; each sampled column contributes
+/// `O(nnz²)` scatter work, so a sample at least `d/8` columns deep
+/// amortizes the mirror below ~8 copies per column-update — measured
+/// break-even on the hotpath bench, pinned by a regression test.
+pub const MIRROR_WORK_FACTOR: usize = 8;
+
+/// Densify a sampled CSC panel and run the packed SYRK when the panel's
+/// nnz density reaches this fraction: at ≥ ~25% occupancy the packed
+/// dense product's locality beats the scatter path's strided writes
+/// even though it multiplies the explicit zeros.
+pub const DENSE_PANEL_MIN_DENSITY: f64 = 0.25;
+
+/// Minimum sample count for the dense-panel regime — smaller samples
+/// cannot amortize the `d×s` panel materialization and the `d²` mirror.
+pub const DENSE_PANEL_MIN_SAMPLES: usize = 32;
+
+/// Hard cap (in f64 words) on a densified panel, so full-batch Gram
+/// products over huge-n datasets (susy: d·n ≈ 10⁸) never materialize
+/// gigabyte panels; beyond it the scatter path always runs.
+pub const DENSE_PANEL_MAX_WORDS: usize = 1 << 24;
+
+/// `grad = G·w − R` on the blocked GEMV driver — the one gradient
+/// computation shared by [`GramBlock`] and [`GramStack`].
+fn gradient_from_parts(g: &[f64], r: &[f64], w: &[f64], grad: &mut [f64]) {
+    let d = w.len();
+    gemm::gemv_into(g, d, d, w, grad);
+    for (gi, ri) in grad.iter_mut().zip(r) {
+        *gi -= ri;
+    }
+}
 
 /// One Gram block: `G` flattened row-major (d²) followed by `R` (d).
 /// Layout is the wire format for collectives and the PJRT boundary.
@@ -61,12 +104,7 @@ impl GramBlock {
                 grad.len()
             )));
         }
-        let g = self.g();
-        let r = self.r();
-        for i in 0..d {
-            let row = &g[i * d..(i + 1) * d];
-            grad[i] = crate::matrix::dense::dot(row, w) - r[i];
-        }
+        gradient_from_parts(self.g(), self.r(), w, grad);
         Ok(())
     }
 }
@@ -146,19 +184,90 @@ impl GramStack {
             )));
         }
         let (g, r) = self.block(j);
-        for i in 0..d {
-            let row = &g[i * d..(i + 1) * d];
-            grad[i] = crate::matrix::dense::dot(row, w) - r[i];
-        }
+        gradient_from_parts(g, r, w, grad);
         Ok(())
     }
 }
 
-/// Accumulate the sampled Gram contribution of a **dense** shard.
+/// Accumulate the sampled Gram contribution of a **dense** shard on the
+/// packed SYRK path.
+///
+/// The sampled columns `X_S` are gathered **once**, row by row (the
+/// row-major buffer streams; the old per-element `get` gather touched a
+/// cache line per element), into a contiguous `d×s` panel, then one
+/// packed SYRK computes `G += inv_m·P·Pᵀ` (upper-triangle tiles +
+/// mirror) and one blocked GEMV computes `R += inv_m·P·y_S`.
 ///
 /// `idx` are local column indices into `x` (the worker's shard);
-/// `inv_m = 1/m` uses the *global* sample count. Returns flops performed.
+/// `inv_m = 1/m` uses the *global* sample count. Panels beyond
+/// [`DENSE_PANEL_MAX_WORDS`] fall back to the rank-1 reference kernel
+/// instead of materializing a huge copy. Returns the flop count of the
+/// zero-skipping reference kernel ([`sampled_gram_dense_naive`]) —
+/// identical by the flop-accounting invariant, regardless of the
+/// arithmetic the packed path performs on explicit zeros.
 pub fn sampled_gram_dense(
+    x: &DenseMatrix,
+    y: &[f64],
+    idx: &[usize],
+    inv_m: f64,
+    g: &mut [f64],
+    r: &mut [f64],
+) -> Result<u64> {
+    let d = x.rows();
+    if y.len() != x.cols() {
+        return Err(CaError::Shape(format!("y has {} for {} cols", y.len(), x.cols())));
+    }
+    if g.len() != d * d || r.len() != d {
+        return Err(CaError::Shape(format!(
+            "outputs: g={} (need {}), r={} (need {d})",
+            g.len(),
+            d * d,
+            r.len()
+        )));
+    }
+    for &c in idx {
+        if c >= x.cols() {
+            return Err(CaError::Shape(format!("column {c} out of {}", x.cols())));
+        }
+    }
+    if idx.is_empty() {
+        return Ok(0);
+    }
+    let s = idx.len();
+    // Same materialization cap as the CSC dense-panel regime: a
+    // huge-n full-batch call must not allocate a gigabyte panel copy.
+    if d.saturating_mul(s) > DENSE_PANEL_MAX_WORDS {
+        return sampled_gram_dense_naive(x, y, idx, inv_m, g, r);
+    }
+    let n = x.cols();
+    let xd = x.data();
+    let mut panel = vec![0.0f64; d * s];
+    let mut flops = 0u64;
+    for i in 0..d {
+        let src = &xd[i * n..(i + 1) * n];
+        let dst = &mut panel[i * s..(i + 1) * s];
+        let mut nz = 0u64;
+        for (slot, &c) in dst.iter_mut().zip(idx) {
+            let v = src[c];
+            *slot = v;
+            nz += (v != 0.0) as u64;
+        }
+        // Each nonzero X[i,c] drives a length-(d−i) upper-triangle
+        // update in the reference kernel.
+        flops += nz * 2 * (d - i) as u64;
+    }
+    gemm::syrk_acc(d, s, inv_m, &panel, g);
+    let ys: Vec<f64> = idx.iter().map(|&c| y[c] * inv_m).collect();
+    gemm::gemv_acc(&panel, d, s, &ys, r);
+    flops += 2 * (d * s) as u64;
+    Ok(flops)
+}
+
+/// The pre-packing reference kernel: per-column gather + zero-skipping
+/// rank-1 updates of the mirrored upper triangle. Kept runnable as the
+/// correctness/flop oracle for [`sampled_gram_dense`] and as the
+/// baseline side of the `gram/naive-dense` hotpath bench.
+pub fn sampled_gram_dense_naive(
     x: &DenseMatrix,
     y: &[f64],
     idx: &[usize],
@@ -184,9 +293,7 @@ pub fn sampled_gram_dense(
         if c >= x.cols() {
             return Err(CaError::Shape(format!("column {c} out of {}", x.cols())));
         }
-        for i in 0..d {
-            xc[i] = x.get(i, c);
-        }
+        x.col_into(c, &mut xc);
         // Rank-1 update of the upper triangle, mirrored.
         for i in 0..d {
             let xi = xc[i] * inv_m;
@@ -212,7 +319,25 @@ pub fn sampled_gram_dense(
 }
 
 /// Accumulate the sampled Gram contribution of a **CSC sparse** shard.
-/// Only the nonzeros of each sampled column are touched.
+///
+/// Three execution regimes, selected per call from the sampled panel's
+/// structure (the reported flop count is regime-independent — it is the
+/// nonzero-only count `Σ_c nnz_c·(nnz_c+1) + 2·nnz_c`, computed
+/// analytically from the column pointers):
+///
+/// 1. **Dense panel** — when the sample is deep enough
+///    ([`DENSE_PANEL_MIN_SAMPLES`]), small enough to materialize
+///    ([`DENSE_PANEL_MAX_WORDS`]) and its nnz density crosses
+///    [`DENSE_PANEL_MIN_DENSITY`]: densify `X_S` into a contiguous
+///    `d×s` panel once and run the packed SYRK + blocked GEMV, which
+///    beat the scatter path's strided writes on dense-ish shards.
+/// 2. **Scatter, mirrored** — CSC columns store rows ascending, so
+///    accumulating the upper triangle only turns the scatter into
+///    forward streaming writes (half the writes of the double-update);
+///    the lower triangle is mirrored once at the end. Chosen when the
+///    sample amortizes the `d²/2` mirror ([`MIRROR_WORK_FACTOR`]).
+/// 3. **Scatter, double-write** — tiny samples where the mirror would
+///    dominate the `O(Σ nnz²)` work.
 pub fn sampled_gram_csc(
     x: &CscMatrix,
     y: &[f64],
@@ -228,22 +353,46 @@ pub fn sampled_gram_csc(
     if g.len() != d * d || r.len() != d {
         return Err(CaError::Shape("bad output shapes".into()));
     }
-    let mut flops = 0u64;
-    // Hot path (§Perf): two regimes.
-    //
-    // * Large samples: accumulate the **upper triangle only** — CSC
-    //   columns store rows ascending, so `ri[b] ≥ ia` and the row slice
-    //   `grow` turns the scatter into forward streaming writes (half the
-    //   writes of the naive double-update). The lower triangle is
-    //   mirrored once at the end; every contribution is symmetric, so
-    //   the upper→lower copy is exact.
-    // * Small samples (per-worker calls where the O(d²) mirror would
-    //   dominate the O(idx·nnz²) work): classic double write, no mirror.
-    let mirror = idx.len() * 8 >= d; // heuristic: work amortizes the d²/2 mirror
     for &c in idx {
         if c >= x.cols() {
             return Err(CaError::Shape(format!("column {c} out of {}", x.cols())));
         }
+    }
+    if idx.is_empty() {
+        return Ok(0);
+    }
+    let s = idx.len();
+    // Analytic flop count — the same in every regime (see module docs).
+    let mut flops = 0u64;
+    let mut nnz_panel = 0u64;
+    for &c in idx {
+        let nz = x.col_nnz(c) as u64;
+        nnz_panel += nz;
+        flops += nz * (nz + 1) + 2 * nz;
+    }
+
+    // Regime 1: densified panel on the packed kernel layer.
+    let words = d.saturating_mul(s);
+    if s >= DENSE_PANEL_MIN_SAMPLES
+        && words <= DENSE_PANEL_MAX_WORDS
+        && nnz_panel as f64 >= DENSE_PANEL_MIN_DENSITY * words as f64
+    {
+        let mut panel = vec![0.0f64; d * s];
+        for (t, &c) in idx.iter().enumerate() {
+            let (ri, vs) = x.col(c);
+            for (&i, &v) in ri.iter().zip(vs) {
+                panel[i * s + t] = v;
+            }
+        }
+        gemm::syrk_acc(d, s, inv_m, &panel, g);
+        let ys: Vec<f64> = idx.iter().map(|&c| y[c] * inv_m).collect();
+        gemm::gemv_acc(&panel, d, s, &ys, r);
+        return Ok(flops);
+    }
+
+    // Regimes 2/3: scatter over the stored nonzeros only.
+    let mirror = s * MIRROR_WORK_FACTOR >= d;
+    for &c in idx {
         let (ri, vs) = x.col(c);
         let nnz = ri.len();
         for a in 0..nnz {
@@ -263,15 +412,13 @@ pub fn sampled_gram_csc(
                     }
                 }
             }
-            flops += 2 * (nnz - a) as u64;
         }
         let yc = y[c] * inv_m;
         for (&i, &v) in ri.iter().zip(vs) {
             r[i] += yc * v;
         }
-        flops += 2 * nnz as u64;
     }
-    if mirror && !idx.is_empty() {
+    if mirror {
         for i in 0..d {
             for j in (i + 1)..d {
                 g[j * d + i] = g[i * d + j];
@@ -415,6 +562,134 @@ mod tests {
         let (blk, _) = full_gram_csc(&x, &y).unwrap();
         // G[0][0] = (1/4)·Σ_c c² = (0+1+4+9)/4 = 3.5
         assert!(approx(blk.g()[0], 3.5, 1e-12));
+    }
+
+    #[test]
+    fn packed_dense_matches_naive_values_and_flops() {
+        // Data with exact zeros: the flop identity must survive
+        // zero-skipping in the reference kernel.
+        let mut rng = Rng::new(17);
+        let (d, n) = (13, 40);
+        let x = DenseMatrix::from_fn(d, n, |_, _| {
+            if rng.next_bool(0.6) {
+                rng.next_gaussian()
+            } else {
+                0.0
+            }
+        });
+        let y: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        for s in [0usize, 1, 5, 23] {
+            let idx = rng.sample_without_replacement(n, s);
+            let inv_m = 1.0 / s.max(1) as f64;
+            let mut gp = vec![0.0; d * d];
+            let mut rp = vec![0.0; d];
+            let fp = sampled_gram_dense(&x, &y, &idx, inv_m, &mut gp, &mut rp).unwrap();
+            let mut gn = vec![0.0; d * d];
+            let mut rn = vec![0.0; d];
+            let fnaive = sampled_gram_dense_naive(&x, &y, &idx, inv_m, &mut gn, &mut rn).unwrap();
+            assert_eq!(fp, fnaive, "flop invariant broken at s={s}");
+            for (a, b) in gp.iter().zip(&gn) {
+                assert!(approx(*a, *b, 1e-12), "s={s}: {a} vs {b}");
+            }
+            for (a, b) in rp.iter().zip(&rn) {
+                assert!(approx(*a, *b, 1e-12), "s={s}: {a} vs {b}");
+            }
+        }
+    }
+
+    /// Regression: both scatter regimes (mirror on/off) pinned to the
+    /// dense oracle, with the constants proving which regime ran.
+    #[test]
+    fn csc_scatter_regimes_match_dense_oracle() {
+        let mut rng = Rng::new(23);
+        // (d, s): (40, 4) → 4·8 < 40: double-write; (8, 20) → mirror.
+        for (d, s) in [(40usize, 4usize), (8, 20)] {
+            let n = 30;
+            let dense = DenseMatrix::from_fn(d, n, |_, _| {
+                if rng.next_bool(0.3) {
+                    rng.next_gaussian()
+                } else {
+                    0.0
+                }
+            });
+            let xs = CscMatrix::from_dense(&dense);
+            let y: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let idx = rng.sample_without_replacement(n, s);
+            // Document the regime the constants select.
+            assert!(s < DENSE_PANEL_MIN_SAMPLES, "scatter regime expected");
+            if d == 40 {
+                assert!(s * MIRROR_WORK_FACTOR < d, "double-write regime expected");
+            } else {
+                assert!(s * MIRROR_WORK_FACTOR >= d, "mirror regime expected");
+            }
+            let inv_m = 1.0 / s as f64;
+            let mut g = vec![0.0; d * d];
+            let mut r = vec![0.0; d];
+            sampled_gram_csc(&xs, &y, &idx, inv_m, &mut g, &mut r).unwrap();
+            let (go, ro) = oracle(&dense, &y, &idx, inv_m);
+            for (a, b) in g.iter().zip(&go) {
+                assert!(approx(*a, *b, 1e-12), "d={d} s={s}: {a} vs {b}");
+            }
+            for (a, b) in r.iter().zip(&ro) {
+                assert!(approx(*a, *b, 1e-12), "d={d} s={s}: {a} vs {b}");
+            }
+        }
+    }
+
+    /// The dense-panel regime (deep, dense sample) agrees with the
+    /// oracle and reports the same sparse-structure flop count the
+    /// scatter path would.
+    #[test]
+    fn csc_dense_panel_regime_matches_oracle_and_flops() {
+        let mut rng = Rng::new(29);
+        let (d, n, s) = (10usize, 80usize, 48usize);
+        let dense = DenseMatrix::from_fn(d, n, |_, _| {
+            if rng.next_bool(0.6) {
+                rng.next_gaussian()
+            } else {
+                0.0
+            }
+        });
+        let xs = CscMatrix::from_dense(&dense);
+        let y: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let idx = rng.sample_without_replacement(n, s);
+        assert!(s >= DENSE_PANEL_MIN_SAMPLES);
+        let nnz: u64 = idx.iter().map(|&c| xs.col_nnz(c) as u64).sum();
+        assert!(
+            nnz as f64 >= DENSE_PANEL_MIN_DENSITY * (d * s) as f64,
+            "dense-panel regime expected (density {})",
+            nnz as f64 / (d * s) as f64
+        );
+        let inv_m = 1.0 / s as f64;
+        let mut g = vec![0.0; d * d];
+        let mut r = vec![0.0; d];
+        let flops = sampled_gram_csc(&xs, &y, &idx, inv_m, &mut g, &mut r).unwrap();
+        // Analytic sparse-structure count, independent of the regime.
+        let expect_flops: u64 =
+            idx.iter().map(|&c| {
+                let nz = xs.col_nnz(c) as u64;
+                nz * (nz + 1) + 2 * nz
+            }).sum();
+        assert_eq!(flops, expect_flops);
+        let (go, ro) = oracle(&dense, &y, &idx, inv_m);
+        for (a, b) in g.iter().zip(&go) {
+            assert!(approx(*a, *b, 1e-12), "{a} vs {b}");
+        }
+        for (a, b) in r.iter().zip(&ro) {
+            assert!(approx(*a, *b, 1e-12), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn empty_sample_is_a_no_op() {
+        let x = DenseMatrix::from_fn(3, 5, |r, c| (r + c) as f64);
+        let xs = CscMatrix::from_dense(&x);
+        let y = vec![1.0; 5];
+        let mut g = vec![7.0; 9];
+        let mut r = vec![7.0; 3];
+        assert_eq!(sampled_gram_dense(&x, &y, &[], 1.0, &mut g, &mut r).unwrap(), 0);
+        assert_eq!(sampled_gram_csc(&xs, &y, &[], 1.0, &mut g, &mut r).unwrap(), 0);
+        assert!(g.iter().all(|&v| v == 7.0) && r.iter().all(|&v| v == 7.0));
     }
 
     #[test]

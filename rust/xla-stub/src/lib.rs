@@ -1,0 +1,153 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real `xla` crate wraps the XLA C++ runtime, which is not
+//! buildable in this environment. This stub mirrors exactly the API
+//! subset `ca_prox::runtime::pjrt` consumes so the crate type-checks
+//! unchanged; every runtime entry point returns an "unavailable" error,
+//! which the runtime already treats as "no artifact backend — fall back
+//! to the native kernels". Swapping the path dependency in `Cargo.toml`
+//! for the real crate re-enables the PJRT path with no source changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's surface (`Display` + `to_string`).
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub-local result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: XLA/PJRT support is not built in (offline xla stub); the native kernels serve all requests"
+    )))
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always fails in the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU PJRT client. Always unavailable in the stub.
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Platform name for logs.
+    pub fn platform_name(&self) -> &'static str {
+        "stub"
+    }
+
+    /// Compile a computation. Unreachable (no client can be constructed).
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Always unavailable in the stub.
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap an HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given inputs; returns per-device output buffers.
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device-resident buffer.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host tensor literal.
+#[derive(Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1(_values: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Scalar literal.
+    pub fn scalar(_value: f32) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("/nope.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.clone().to_tuple().is_err());
+        let _scalar = Literal::scalar(0.5);
+    }
+}
