@@ -5,27 +5,27 @@
 //!   L1  Pallas sampled-Gram + soft-threshold kernels (authored in
 //!       Python, AOT-lowered to HLO text by `make artifacts`)
 //!   L2  JAX k-step update graphs (same artifacts)
-//!   L3  the Rust coordinator: sharding, sampling schedule, Gram
-//!       batching, all-reduce, replicated updates — running the L1/L2
-//!       artifacts through PJRT on the request path (no Python)
+//!   L3  the Rust session engine: one plan (sharding, sampling schedule,
+//!       cluster, cached Lipschitz estimate) serving four solves, with
+//!       the L1/L2 artifacts on the request path through PJRT
+//!       (no Python)
 //!
-//! Workload: covtype-shaped LASSO (d = 54, 20k samples), P = 8, the
-//! paper's λ = 0.01. Runs CA-SFISTA and CA-SPNM with the PJRT backend,
-//! validates against the native backend and the high-accuracy reference
-//! solver, and reports the headline metric (speedup over classical at
-//! equal accuracy). Results are recorded in EXPERIMENTS.md §End-to-end.
+//! Workload: covtype-shaped LASSO (d = 54, 20k samples), P = 128, the
+//! paper's λ = 0.01. Runs CA-SFISTA and CA-SPNM on one PJRT-backed
+//! [`Session`], validates against a native-backend session and the
+//! high-accuracy reference solver, and reports the headline metric
+//! (speedup over classical at equal accuracy). Results are recorded in
+//! EXPERIMENTS.md §End-to-end.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example end_to_end
 //! ```
 
-use ca_prox::comm::costmodel::MachineModel;
-use ca_prox::coordinator;
 use ca_prox::datasets::registry::load_preset;
 use ca_prox::prox::objective::relative_solution_error;
 use ca_prox::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
-use ca_prox::solvers::reference::solve_reference;
-use ca_prox::solvers::traits::{AlgoKind, SolverConfig, Stopping};
+use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::solvers::traits::AlgoKind;
 use std::path::Path;
 
 fn main() -> ca_prox::Result<()> {
@@ -52,30 +52,31 @@ fn main() -> ca_prox::Result<()> {
         ds.density() * 100.0
     );
 
-    // ---- ground truth (TFOCS substitute) ----
-    let (w_op, ref_iters) = solve_reference(&ds, lambda, 1e-8, 100_000)?;
-    println!("[3/5] reference solution: {ref_iters} FISTA+restart iterations to 1e-8");
-
     // ---- the paper's speedup protocol: run to a fixed relative error.
     // P = 128 puts the classical algorithm in the latency-dominated
     // regime the paper's Figures 4–6 measure (at small P the problem is
     // compute-bound and k-stepping has nothing to win — see Fig. 7).
-    let machine = MachineModel::comet();
     let p = 128;
     let tol = 3e-2;
-    let mk_cfg = |k: usize| {
-        let mut cfg = SolverConfig::default()
+    let backend = PjrtGramBackend::new(&engine);
+    let mut session = Session::build_with_backend(&ds, Topology::new(p), &backend)?;
+
+    // ---- ground truth (TFOCS substitute), cached on the session ----
+    let w_op = session.reference_solution(lambda, 1e-8, 100_000)?.to_vec();
+    println!("[3/5] reference solution cached (λ={lambda}, tol=1e-8)");
+
+    let mk_spec = |algo: AlgoKind, k: usize| {
+        SolveSpec::default()
+            .with_algo(algo)
             .with_lambda(lambda)
             .with_sample_fraction(0.05)
             .with_k(k)
             .with_q(5)
             .with_seed(7)
-            .with_history(8);
-        cfg.stopping = Stopping::RelError { tol, w_op: w_op.clone(), max_iters: 4000 };
-        cfg
+            .with_history(8)
+            .with_rel_error(tol, w_op.clone(), 4000)
     };
 
-    let backend = PjrtGramBackend::new(&engine);
     println!("[4/5] solving to rel-error ≤ {tol} on P={p} (PJRT artifact backend):");
     let mut rows = Vec::new();
     for (algo, k) in [
@@ -84,13 +85,13 @@ fn main() -> ca_prox::Result<()> {
         (AlgoKind::Spnm, 1),
         (AlgoKind::Spnm, 8),
     ] {
-        let out =
-            coordinator::run_with_backend(&ds, &mk_cfg(k), p, &machine, algo, &backend)?;
+        let out = session.solve(&mk_spec(algo, k))?;
         println!(
-            "  {:<18} iters={:<5} rel_err={:.3e} modeled={:.4}s wall={:.2}s rounds={}",
+            "  {:<18} iters={:<5} rel_err={:.3e} converged={} modeled={:.4}s wall={:.2}s rounds={}",
             out.algorithm,
             out.iterations,
             out.final_rel_error,
+            out.converged,
             out.modeled_seconds,
             out.wall_seconds,
             out.trace.collective_rounds
@@ -100,8 +101,9 @@ fn main() -> ca_prox::Result<()> {
 
     // ---- validation ----
     println!("[5/5] validation:");
-    // (a) PJRT path ≈ native path.
-    let native = coordinator::run(&ds, &mk_cfg(8), p, &machine, AlgoKind::Sfista)?;
+    // (a) PJRT path ≈ native path (separate session, same plan shape).
+    let mut native_session = Session::build(&ds, Topology::new(p))?;
+    let native = native_session.solve(&mk_spec(AlgoKind::Sfista, 8))?;
     let pjrt = &rows[1].2;
     let max_dw = native
         .w
@@ -111,8 +113,9 @@ fn main() -> ca_prox::Result<()> {
         .fold(0.0f64, f64::max);
     println!("  native vs PJRT CA-SFISTA(k=8): max |Δw| = {max_dw:.2e} (f32 artifacts)");
     assert!(max_dw < 1e-2, "artifact path diverged from native");
-    // (b) every run hit the tolerance.
+    // (b) every run hit the tolerance (and says so).
     for (_, _, out) in &rows {
+        assert!(out.converged, "{} must report convergence", out.algorithm);
         assert!(out.final_rel_error <= tol);
         assert!(relative_solution_error(&out.w, &w_op) <= tol);
     }
@@ -126,8 +129,9 @@ fn main() -> ca_prox::Result<()> {
         "CA must win at P={p} on Comet-class fabric"
     );
     println!(
-        "  artifact executions on the request path: {}",
-        engine.executions()
+        "  artifact executions on the request path: {} (one session, {} solves)",
+        engine.executions(),
+        session.solves()
     );
     println!("\nend_to_end OK in {:.1}s", t_start.elapsed().as_secs_f64());
     Ok(())

@@ -7,16 +7,15 @@
 //! solve LASSO with CA-SFISTA across several sampling rates b and report
 //! precision/recall of the recovered support — reproducing the *content*
 //! of the paper's b-sensitivity discussion (§V-B1) on a task with a
-//! known answer.
+//! known answer. The b-sweep runs on one [`Session`] — b is a
+//! solve-time knob, so all four runs share one plan.
 //!
 //! ```bash
 //! cargo run --release --example feature_selection
 //! ```
 
-use ca_prox::comm::costmodel::MachineModel;
 use ca_prox::datasets::synthetic::{generate, planted_model, SyntheticSpec};
-use ca_prox::solvers::ca_sfista::run_ca_sfista;
-use ca_prox::solvers::traits::SolverConfig;
+use ca_prox::session::{Session, SolveSpec, Topology};
 
 fn main() -> ca_prox::Result<()> {
     ca_prox::util::logging::init();
@@ -39,19 +38,19 @@ fn main() -> ca_prox::Result<()> {
         true_support.len()
     );
 
-    let machine = MachineModel::comet();
+    let mut session = Session::build(&ds, Topology::new(8))?;
     println!(
         "\n{:>8} {:>10} {:>10} {:>10} {:>12}",
         "b", "precision", "recall", "f1", "iterations"
     );
     for &b in &[0.01, 0.05, 0.1, 0.5] {
-        let cfg = SolverConfig::default()
+        let solve = SolveSpec::default()
             .with_lambda(0.02)
             .with_sample_fraction(b)
             .with_k(16)
             .with_max_iters(480)
             .with_seed(5);
-        let out = run_ca_sfista(&ds, &cfg, 8, &machine)?;
+        let out = session.solve(&solve)?;
         // Support = coefficients above a small magnitude floor.
         let sel: Vec<usize> =
             (0..spec.d).filter(|&i| out.w[i].abs() > 1e-3).collect();

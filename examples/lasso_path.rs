@@ -2,50 +2,63 @@
 //! trade-off of the LASSO solution — the classic use-case the paper's
 //! §II motivates (subset selection + regression in one solver).
 //!
-//! Uses CA-SPNM (the faster-converging solver) at k = 16 on a simulated
-//! 16-node cluster, plus the reference solver as ground truth.
+//! This is the workload the session API exists for: one
+//! [`Session`] plans the cluster once (sharding, Lipschitz estimate),
+//! then every λ-step reuses the plan, warm-starts from the previous
+//! solution, and pulls its ground truth from the per-λ reference cache.
 //!
 //! ```bash
 //! cargo run --release --example lasso_path
 //! ```
 
-use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::comm::trace::Phase;
 use ca_prox::datasets::registry::load_preset;
 use ca_prox::prox::objective::{relative_solution_error, sparsity};
-use ca_prox::solvers::ca_spnm::run_ca_spnm;
-use ca_prox::solvers::reference::solve_reference;
-use ca_prox::solvers::traits::SolverConfig;
+use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::solvers::traits::AlgoKind;
 
 fn main() -> ca_prox::Result<()> {
     ca_prox::util::logging::init();
     let ds = load_preset("abalone", None, 42)?; // full-size abalone shape
     println!("dataset: {} (d={}, n={})", ds.name, ds.d(), ds.n());
     println!(
-        "\n{:>10} {:>10} {:>12} {:>12} {:>10}",
-        "lambda", "nonzeros", "objective", "rel_err", "iters"
+        "\n{:>10} {:>10} {:>12} {:>12} {:>10} {:>12}",
+        "lambda", "nonzeros", "objective", "rel_err", "iters", "setup flops"
     );
 
-    let machine = MachineModel::comet();
+    // Plan once for a simulated 16-node cluster.
+    let mut session = Session::build(&ds, Topology::new(16))?;
+    let mut warm: Option<Vec<f64>> = None;
     for &lambda in &[0.5, 0.2, 0.1, 0.05, 0.01, 0.001] {
-        let (w_op, _) = solve_reference(&ds, lambda, 1e-8, 100_000)?;
-        let cfg = SolverConfig::default()
+        let w_op = session.reference_solution(lambda, 1e-8, 100_000)?.to_vec();
+        let mut spec = SolveSpec::default()
+            .with_algo(AlgoKind::Spnm)
             .with_lambda(lambda)
             .with_sample_fraction(0.2)
             .with_k(16)
             .with_q(5)
             .with_max_iters(400)
             .with_seed(1);
-        let out = run_ca_spnm(&ds, &cfg, 16, &machine)?;
+        if let Some(w) = &warm {
+            spec = spec.warm_start(w); // continue from the previous λ
+        }
+        let out = session.solve(&spec)?;
         let nnz = ds.d() - sparsity(&out.w);
         println!(
-            "{:>10} {:>10} {:>12.5e} {:>12.3e} {:>10}",
+            "{:>10} {:>10} {:>12.5e} {:>12.3e} {:>10} {:>12}",
             lambda,
             nnz,
             out.final_objective,
             relative_solution_error(&out.w, &w_op),
-            out.iterations
+            out.iterations,
+            out.trace.phase(Phase::Setup).flops
         );
+        warm = Some(out.w);
     }
     println!("\nlarger λ → sparser model (subset selection); smaller λ → better fit");
+    println!(
+        "one plan served {} solves — only the first paid the setup (power method + sharding)",
+        session.solves()
+    );
     Ok(())
 }

@@ -2,15 +2,16 @@
 //! classical SFISTA stops scaling as latency dominates while CA-SFISTA
 //! keeps going, on a covtype-shaped workload from P = 1 to P = 512.
 //!
+//! One [`Session`] per P: the classical and CA runs share the plan
+//! (sharding + Lipschitz estimate), so each grid point pays setup once.
+//!
 //! ```bash
 //! cargo run --release --example scaling_demo
 //! ```
 
-use ca_prox::comm::costmodel::MachineModel;
 use ca_prox::comm::trace::Phase;
 use ca_prox::datasets::registry::load_preset;
-use ca_prox::solvers::ca_sfista::run_ca_sfista;
-use ca_prox::solvers::traits::SolverConfig;
+use ca_prox::session::{Session, SolveSpec, Topology};
 
 fn main() -> ca_prox::Result<()> {
     ca_prox::util::logging::init();
@@ -19,8 +20,7 @@ fn main() -> ca_prox::Result<()> {
     // scales before latency takes over (Figure 1's shape).
     let ds = load_preset("covtype", Some(200_000), 42)?;
     println!("dataset: {} (d={}, n={})", ds.name, ds.d(), ds.n());
-    let machine = MachineModel::comet();
-    let cfg = SolverConfig::default()
+    let spec = SolveSpec::default()
         .with_lambda(0.01)
         .with_sample_fraction(0.2)
         .with_max_iters(100) // fixed work: the paper's strong-scaling protocol
@@ -31,10 +31,12 @@ fn main() -> ca_prox::Result<()> {
         "P", "SFISTA (s)", "CA-32 (s)", "speedup", "SFISTA latency share"
     );
     for &p in &[1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
-        let classical = run_ca_sfista(&ds, &cfg.clone().with_k(1), p, &machine)?;
-        let ca = run_ca_sfista(&ds, &cfg.clone().with_k(32), p, &machine)?;
+        let mut session = Session::build(&ds, Topology::new(p))?;
+        let alpha = session.topology().machine.alpha;
+        let classical = session.solve(&spec.clone().with_k(1))?;
+        let ca = session.solve(&spec.clone().with_k(32))?;
         let coll = classical.trace.phase(Phase::Collective);
-        let latency_share = machine.alpha * coll.messages / classical.modeled_seconds;
+        let latency_share = alpha * coll.messages / classical.modeled_seconds;
         println!(
             "{:>6} {:>14.5} {:>14.5} {:>8.2}x {:>21.1}%",
             p,

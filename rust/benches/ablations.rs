@@ -13,32 +13,30 @@ use ca_prox::benchkit::{header, table};
 use ca_prox::cluster::shard::{PartitionStrategy, ShardedDataset};
 use ca_prox::comm::collectives::AllReduceAlgo;
 use ca_prox::comm::costmodel::MachineModel;
-use ca_prox::coordinator;
 use ca_prox::datasets::registry::load_preset;
 use ca_prox::sampling::SamplingMode;
-use ca_prox::solvers::traits::{AlgoKind, GradientAt, SolverConfig};
+use ca_prox::session::{Session, SolveSpec, Topology};
 
 fn main() {
     header("Ablations", "design-choice studies backing DESIGN.md");
-    let machine = MachineModel::comet();
     let ds = load_preset("covtype", Some(20_000), 42).unwrap();
-    let base = SolverConfig::default()
+    let base = SolveSpec::default()
         .with_lambda(0.01)
         .with_sample_fraction(0.05)
         .with_k(32)
         .with_max_iters(64)
         .with_seed(7);
 
-    // ---- A: collective algorithm ----
+    // ---- A: collective algorithm (plan-time → one session each) ----
     println!("\n[A] all-reduce algorithm (CA-SFISTA k=32, modeled seconds)");
     let mut rows = Vec::new();
     for &p in &[8usize, 64, 512] {
         let mut cells = Vec::new();
         for algo in [AllReduceAlgo::BinomialTree, AllReduceAlgo::RecursiveDoubling, AllReduceAlgo::Ring]
         {
-            let mut cfg = base.clone();
-            cfg.allreduce = algo;
-            let out = coordinator::run(&ds, &cfg, p, &machine, AlgoKind::Sfista).unwrap();
+            let mut session =
+                Session::build(&ds, Topology::new(p).with_allreduce(algo)).unwrap();
+            let out = session.solve(&base).unwrap();
             cells.push(format!("{:.5}", out.modeled_seconds));
         }
         rows.push((format!("P={p}"), cells));
@@ -49,17 +47,18 @@ fn main() {
     );
     println!("ring pays 2(P−1) latency per round: hopeless at large P even with k-stepping");
 
-    // ---- B: gradient evaluation point ----
+    // ---- B: gradient evaluation point (solve-time → shared session) ----
     println!("\n[B] gradient point: paper-literal (stale iterate) vs textbook (momentum point)");
+    use ca_prox::solvers::traits::GradientAt;
+    let mut session8 = Session::build(&ds, Topology::new(8)).unwrap();
     let mut rows = Vec::new();
     for (label, ga, iters) in [
         ("textbook,  T=3000", GradientAt::Momentum, 3000usize),
         ("literal,   T=300", GradientAt::Iterate, 300),
         ("literal,   T=3000", GradientAt::Iterate, 3000),
     ] {
-        let mut cfg = base.clone().with_max_iters(iters);
-        cfg.gradient_at = ga;
-        let out = coordinator::run(&ds, &cfg, 8, &machine, AlgoKind::Sfista).unwrap();
+        let spec = base.clone().with_max_iters(iters).with_gradient_at(ga);
+        let out = session8.solve(&spec).unwrap();
         rows.push((label.to_string(), vec![format!("{:.4e}", out.final_objective)]));
     }
     println!("{}", table(&["final objective".into()], &rows));
@@ -91,16 +90,15 @@ fn main() {
     }
     println!("{}", table(&["contiguous".into(), "greedy".into()], &rows));
 
-    // ---- D: sampling mode ----
+    // ---- D: sampling mode (solve-time → same shared session) ----
     println!("\n[D] sampling with vs without replacement (final objective, T=256)");
     let mut rows = Vec::new();
     for (label, mode) in [
         ("without replacement", SamplingMode::WithoutReplacement),
         ("with replacement", SamplingMode::WithReplacement),
     ] {
-        let mut cfg = base.clone().with_max_iters(256);
-        cfg.sampling = mode;
-        let out = coordinator::run(&ds, &cfg, 8, &machine, AlgoKind::Sfista).unwrap();
+        let spec = base.clone().with_max_iters(256).with_sampling(mode);
+        let out = session8.solve(&spec).unwrap();
         rows.push((label.to_string(), vec![format!("{:.6e}", out.final_objective)]));
     }
     println!("{}", table(&["objective".into()], &rows));
@@ -109,8 +107,10 @@ fn main() {
     println!("\n[E] machine sensitivity: CA speedup at P=256, k=32");
     let mut rows = Vec::new();
     for m in [MachineModel::comet(), MachineModel::ethernet(), MachineModel::zero_latency()] {
-        let c = coordinator::run(&ds, &base.clone().with_k(1), 256, &m, AlgoKind::Sfista).unwrap();
-        let ca = coordinator::run(&ds, &base.clone(), 256, &m, AlgoKind::Sfista).unwrap();
+        let mut session =
+            Session::build(&ds, Topology::new(256).with_machine(m)).unwrap();
+        let c = session.solve(&base.clone().with_k(1)).unwrap();
+        let ca = session.solve(&base.clone()).unwrap();
         rows.push((
             m.name.to_string(),
             vec![format!("{:.2}x", c.modeled_seconds / ca.modeled_seconds)],

@@ -5,11 +5,9 @@
 //! processors vs one processor".
 
 use ca_prox::benchkit::{header, table};
-use ca_prox::comm::costmodel::MachineModel;
 use ca_prox::comm::trace::Phase;
-use ca_prox::coordinator;
 use ca_prox::datasets::registry::load_preset;
-use ca_prox::solvers::traits::{AlgoKind, SolverConfig};
+use ca_prox::session::{Session, SolveSpec, Topology};
 
 fn main() {
     header(
@@ -17,17 +15,17 @@ fn main() {
         "fixed 100 iterations, b=0.2; modeled α-β-γ seconds on Comet-class fabric",
     );
     let ds = load_preset("covtype", Some(200_000), 42).unwrap();
-    let cfg = SolverConfig::default()
+    let spec = SolveSpec::default()
         .with_lambda(0.01)
         .with_sample_fraction(0.2)
         .with_max_iters(100)
         .with_seed(3);
-    let machine = MachineModel::comet();
 
     let mut rows = Vec::new();
     let mut times = Vec::new();
     for &p in &[1usize, 2, 4, 8, 16, 32, 64] {
-        let out = coordinator::run(&ds, &cfg, p, &machine, AlgoKind::Sfista).unwrap();
+        let mut session = Session::build(&ds, Topology::new(p)).unwrap();
+        let out = session.solve(&spec).unwrap();
         let comm = out.trace.phase(Phase::Collective).seconds;
         rows.push((
             format!("P={p}"),

@@ -6,27 +6,28 @@
 //! the optimum where the sampled gradient misrepresents the true one.
 
 use ca_prox::benchkit::{header, table};
-use ca_prox::comm::costmodel::MachineModel;
-use ca_prox::coordinator;
 use ca_prox::datasets::registry::{load_preset, preset};
-use ca_prox::solvers::reference::solve_reference;
-use ca_prox::solvers::traits::{AlgoKind, SolverConfig};
+use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::solvers::traits::AlgoKind;
 
 fn main() {
     header(
         "Figure 2 — effect of b on convergence (k=32)",
         "relative solution error ‖w−w_op‖/‖w_op‖ vs iteration",
     );
-    let machine = MachineModel::comet();
     for (name, scale, iters) in [("abalone", None, 512usize), ("covtype", Some(20_000), 512)] {
         let ds = load_preset(name, scale, 42).unwrap();
         let lambda = preset(name).unwrap().lambda;
-        let (w_op, _) = solve_reference(&ds, lambda, 1e-8, 200_000).unwrap();
+        // One session per dataset: the 6 (algo, b) runs share one plan,
+        // one Lipschitz estimate and one cached reference solution.
+        let mut session = Session::build(&ds, Topology::new(8)).unwrap();
+        let w_op = session.reference_solution(lambda, 1e-8, 200_000).unwrap().to_vec();
         for algo in [AlgoKind::Sfista, AlgoKind::Spnm] {
             println!("\n--- {} / {} (λ={lambda}) ---", name, algo.display(32));
             let mut series = Vec::new();
             for &b in &[0.01, 0.1, 0.5] {
-                let mut cfg = SolverConfig::default()
+                let mut spec = SolveSpec::default()
+                    .with_algo(algo)
                     .with_lambda(lambda)
                     .with_sample_fraction(b)
                     .with_k(32)
@@ -34,8 +35,8 @@ fn main() {
                     .with_max_iters(iters)
                     .with_history(iters / 8)
                     .with_seed(7);
-                cfg.w_op = Some(w_op.clone());
-                let out = coordinator::run(&ds, &cfg, 8, &machine, algo).unwrap();
+                spec.w_op = Some(w_op.clone());
+                let out = session.solve(&spec).unwrap();
                 series.push((b, out.history));
             }
             let mut rows = Vec::new();

@@ -4,28 +4,28 @@
 //! b = 0.1, covtype with b = 0.01; k up to 128 as in the paper.
 
 use ca_prox::benchkit::{header, table};
-use ca_prox::comm::costmodel::MachineModel;
-use ca_prox::coordinator;
 use ca_prox::datasets::registry::{load_preset, preset};
-use ca_prox::solvers::reference::solve_reference;
-use ca_prox::solvers::traits::{AlgoKind, SolverConfig};
+use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::solvers::traits::AlgoKind;
 
 fn main() {
     header(
         "Figure 3 — effect of k on convergence",
         "rel. solution error vs iteration; classical (k=1) overlaid with k=32, k=128",
     );
-    let machine = MachineModel::comet();
     for (name, scale, b) in [("abalone", None, 0.1), ("covtype", Some(20_000), 0.01)] {
         let ds = load_preset(name, scale, 42).unwrap();
         let lambda = preset(name).unwrap().lambda;
-        let (w_op, _) = solve_reference(&ds, lambda, 1e-8, 200_000).unwrap();
+        // All six (algo, k) runs share one plan and one reference.
+        let mut session = Session::build(&ds, Topology::new(8)).unwrap();
+        let w_op = session.reference_solution(lambda, 1e-8, 200_000).unwrap().to_vec();
         for algo in [AlgoKind::Sfista, AlgoKind::Spnm] {
             println!("\n--- {name} / {:?} (b={b}) ---", algo);
             let iters = 384;
             let mut series = Vec::new();
             for &k in &[1usize, 32, 128] {
-                let mut cfg = SolverConfig::default()
+                let mut spec = SolveSpec::default()
+                    .with_algo(algo)
                     .with_lambda(lambda)
                     .with_sample_fraction(b)
                     .with_k(k)
@@ -33,8 +33,8 @@ fn main() {
                     .with_max_iters(iters)
                     .with_history(iters / 8)
                     .with_seed(17);
-                cfg.w_op = Some(w_op.clone());
-                let out = coordinator::run(&ds, &cfg, 8, &machine, algo).unwrap();
+                spec.w_op = Some(w_op.clone());
+                let out = session.solve(&spec).unwrap();
                 series.push((k, out.history));
             }
             let mut rows = Vec::new();

@@ -5,30 +5,28 @@
 //! at small P and converge to it at large P.
 
 use ca_prox::benchkit::header;
-use ca_prox::comm::costmodel::MachineModel;
-use ca_prox::coordinator;
 use ca_prox::datasets::registry::{load_preset, preset};
 use ca_prox::metrics::report::{SpeedupCell, SpeedupTable};
-use ca_prox::solvers::traits::{AlgoKind, SolverConfig};
+use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::solvers::traits::AlgoKind;
 
 fn sweep(name: &str, scale: Option<usize>, b: f64, ps: &[usize], ks: &[usize]) {
     let ds = load_preset(name, scale, 42).unwrap();
     let lambda = preset(name).unwrap().lambda;
-    let machine = MachineModel::comet();
     let iters = 64;
     let mut tbl = SpeedupTable::new(&format!("{name} (b={b}, T={iters}, Q=5)"));
     for &p in ps {
-        let cfg = SolverConfig::default()
+        let spec = SolveSpec::default()
+            .with_algo(AlgoKind::Spnm)
             .with_lambda(lambda)
             .with_sample_fraction(b)
             .with_q(5)
             .with_max_iters(iters)
             .with_seed(7);
-        let base =
-            coordinator::run(&ds, &cfg.clone().with_k(1), p, &machine, AlgoKind::Spnm).unwrap();
+        let mut session = Session::build(&ds, Topology::new(p)).unwrap();
+        let base = session.solve(&spec.clone().with_k(1)).unwrap();
         for &k in ks {
-            let ca = coordinator::run(&ds, &cfg.clone().with_k(k), p, &machine, AlgoKind::Spnm)
-                .unwrap();
+            let ca = session.solve(&spec.clone().with_k(k)).unwrap();
             tbl.push(SpeedupCell {
                 p,
                 k,

@@ -5,17 +5,15 @@
 //! compute take over.
 
 use ca_prox::benchkit::{header, table};
-use ca_prox::comm::costmodel::MachineModel;
-use ca_prox::coordinator;
 use ca_prox::datasets::registry::{load_preset, preset};
-use ca_prox::solvers::traits::{AlgoKind, SolverConfig};
+use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::solvers::traits::AlgoKind;
 
 fn main() {
     header(
         "Figure 6 — speedups at the largest node counts",
         "abalone P=64, covtype P=512, susy P=1024; speedup vs k",
     );
-    let machine = MachineModel::comet();
     let ks = [4usize, 8, 16, 32, 64, 128];
     let iters = 128;
     for (name, scale, b, p) in [
@@ -25,7 +23,9 @@ fn main() {
     ] {
         let ds = load_preset(name, scale, 42).unwrap();
         let lambda = preset(name).unwrap().lambda;
-        let cfg = SolverConfig::default()
+        // One session per dataset: all 14 (algo, k) runs share one plan.
+        let mut session = Session::build(&ds, Topology::new(p)).unwrap();
+        let spec = SolveSpec::default()
             .with_lambda(lambda)
             .with_sample_fraction(b)
             .with_q(5)
@@ -34,12 +34,10 @@ fn main() {
         let mut rows = Vec::new();
         let mut last_fista = 0.0;
         for algo in [AlgoKind::Sfista, AlgoKind::Spnm] {
-            let base =
-                coordinator::run(&ds, &cfg.clone().with_k(1), p, &machine, algo).unwrap();
+            let base = session.solve(&spec.clone().with_algo(algo).with_k(1)).unwrap();
             let mut cells = Vec::new();
             for &k in &ks {
-                let ca =
-                    coordinator::run(&ds, &cfg.clone().with_k(k), p, &machine, algo).unwrap();
+                let ca = session.solve(&spec.clone().with_algo(algo).with_k(k)).unwrap();
                 cells.push(format!("{:.2}x", base.modeled_seconds / ca.modeled_seconds));
             }
             if algo == AlgoKind::Sfista {

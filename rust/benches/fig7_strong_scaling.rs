@@ -11,9 +11,9 @@
 use ca_prox::benchkit::{header, table};
 use ca_prox::comm::costmodel::MachineModel;
 use ca_prox::comm::trace::Phase;
-use ca_prox::coordinator;
 use ca_prox::datasets::registry::{load_preset, preset};
-use ca_prox::solvers::traits::{AlgoKind, SolverConfig};
+use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::solvers::traits::AlgoKind;
 
 fn main() {
     header(
@@ -42,7 +42,7 @@ fn main() {
         let machine = MachineModel::custom(gamma_eff, comet.alpha, comet.beta);
         let ds = load_preset(name, scale, 42).unwrap();
         let lambda = preset(name).unwrap().lambda;
-        let cfg = SolverConfig::default()
+        let spec = SolveSpec::default()
             .with_lambda(lambda)
             .with_sample_fraction(b)
             .with_q(5)
@@ -53,6 +53,10 @@ fn main() {
         let mut ca_fista_times = Vec::new();
         let mut classical_fista_times = Vec::new();
         for &p in &ps {
+            // One session per (dataset, P): the four (algo, k) runs
+            // share one plan and one Lipschitz estimate.
+            let mut session =
+                Session::build(&ds, Topology::new(p).with_machine(machine)).unwrap();
             let mut cells = Vec::new();
             for (algo, kk) in [
                 (AlgoKind::Sfista, 1usize),
@@ -60,8 +64,7 @@ fn main() {
                 (AlgoKind::Spnm, 1),
                 (AlgoKind::Spnm, k),
             ] {
-                let out =
-                    coordinator::run(&ds, &cfg.clone().with_k(kk), p, &machine, algo).unwrap();
+                let out = session.solve(&spec.clone().with_algo(algo).with_k(kk)).unwrap();
                 cells.push(format!("{:.5}", out.modeled_seconds));
                 if algo == AlgoKind::Sfista {
                     if kk == 1 {

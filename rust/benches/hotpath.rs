@@ -19,6 +19,7 @@ use ca_prox::matrix::ops::{
 };
 use ca_prox::runtime::backend::{GramBackend, NativeGramBackend};
 use ca_prox::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
+use ca_prox::session::{Session, SolveSpec, Topology};
 use ca_prox::solvers::traits::{AlgoKind, GradientAt, SolverConfig};
 use ca_prox::util::rng::Rng;
 use std::path::Path;
@@ -160,6 +161,50 @@ fn main() {
         });
         emit(&t);
         println!("  ({} per iteration)", fmt_secs(t.median() / 64.0));
+    }
+
+    // ---- session amortization: lasso_path-shaped λ-sweep (wall) ----
+    // The legacy path re-shards and re-runs the full-Gram power method
+    // for every λ; one session pays both once and warm-starts each λ
+    // from the previous solution. The iterates therefore differ (cold
+    // vs warm starts), but at fixed T the per-iteration work is
+    // iterate-independent, so the wall-time delta measures setup
+    // amortization alone.
+    {
+        let lambdas = [0.5, 0.2, 0.1, 0.05, 0.01, 0.001];
+        let mk_cfg = |lambda: f64| {
+            SolverConfig::default()
+                .with_lambda(lambda)
+                .with_sample_fraction(0.05)
+                .with_k(16)
+                .with_max_iters(32)
+                .with_seed(1)
+        };
+        let p = 16;
+        let t_legacy = bench("sweep/lasso-legacy (6 λ, per-run setup)", 1, 5, || {
+            for &lambda in &lambdas {
+                ca_prox::coordinator::run(&ds, &mk_cfg(lambda), p, &machine, AlgoKind::Sfista)
+                    .unwrap();
+            }
+        });
+        emit(&t_legacy);
+        let t_session = bench("sweep/lasso-session (6 λ, shared plan)", 1, 5, || {
+            let mut session = Session::build(&ds, Topology::new(p)).unwrap();
+            let mut warm: Option<Vec<f64>> = None;
+            for &lambda in &lambdas {
+                let mut spec = SolveSpec::from_config(&mk_cfg(lambda), AlgoKind::Sfista);
+                if let Some(w) = &warm {
+                    spec = spec.warm_start(w);
+                }
+                let out = session.solve(&spec).unwrap();
+                warm = Some(out.w);
+            }
+        });
+        emit(&t_session);
+        println!(
+            "sweep/session-vs-legacy speedup (6 λ on covtype 50k): {:.2}x",
+            t_legacy.median() / t_session.median()
+        );
     }
     println!("\nhotpath OK");
 }

@@ -6,25 +6,26 @@
 //! the printed table shows measured-vs-analytic side by side.
 
 use ca_prox::benchkit::{header, table};
-use ca_prox::comm::costmodel::MachineModel;
 use ca_prox::comm::topology::ceil_log2;
 use ca_prox::comm::trace::Phase;
-use ca_prox::coordinator;
 use ca_prox::datasets::registry::load_preset;
 use ca_prox::matrix::ops::GramStack;
-use ca_prox::solvers::traits::{AlgoKind, SolverConfig, SolverOutput};
+use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::solvers::traits::{AlgoKind, SolverOutput};
 use ca_prox::util::stats::linreg;
 
 fn run(algo: AlgoKind, p: usize, k: usize, b: f64, t_iters: usize) -> SolverOutput {
     let ds = load_preset("smoke", Some(1000), 6).unwrap();
-    let cfg = SolverConfig::default()
+    let spec = SolveSpec::default()
+        .with_algo(algo)
         .with_lambda(0.05)
         .with_sample_fraction(b)
         .with_k(k)
         .with_q(4)
         .with_max_iters(t_iters)
         .with_seed(42);
-    coordinator::run(&ds, &cfg, p, &MachineModel::comet(), algo).unwrap()
+    let mut session = Session::build(&ds, Topology::new(p)).unwrap();
+    session.solve(&spec).unwrap()
 }
 
 fn main() {
@@ -117,13 +118,14 @@ fn main() {
     let mut fs = Vec::new();
     for q in [1usize, 2, 4, 8] {
         let ds = load_preset("smoke", Some(1000), 6).unwrap();
-        let cfg = SolverConfig::default()
+        let spec = SolveSpec::default()
+            .with_algo(AlgoKind::Spnm)
             .with_sample_fraction(0.2)
             .with_q(q)
             .with_max_iters(16)
             .with_seed(42);
-        let out =
-            coordinator::run(&ds, &cfg, 4, &MachineModel::comet(), AlgoKind::Spnm).unwrap();
+        let mut session = Session::build(&ds, Topology::new(4)).unwrap();
+        let out = session.solve(&spec).unwrap();
         let f = out.trace.phase(Phase::InnerSolve).flops;
         xs.push(q as f64);
         fs.push(f);

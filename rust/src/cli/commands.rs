@@ -3,11 +3,11 @@
 use crate::cli::args::{ArgSpec, Flag, ParsedArgs};
 use crate::config::parse::TomlValue;
 use crate::config::spec::RunSpec;
-use crate::coordinator;
 use crate::datasets::registry;
 use crate::error::Result;
 use crate::metrics::report::{RunReport, SpeedupCell, SpeedupTable};
 use crate::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
+use crate::session::Session;
 use crate::solvers::traits::SolverOutput;
 
 /// Build a [`RunSpec`] from `--config` + flag overrides.
@@ -41,18 +41,21 @@ fn spec_from_args(p: &ParsedArgs) -> Result<RunSpec> {
     Ok(spec)
 }
 
-/// Execute one spec (choosing native or PJRT backend).
+/// Execute one spec (choosing native or PJRT backend) through a fresh
+/// single-use [`Session`].
 pub fn execute_spec(spec: &RunSpec) -> Result<SolverOutput> {
-    let ds = registry::load_preset(&spec.dataset, spec.scale_n, spec.solver.seed)?;
+    let ds = registry::load_preset(&spec.dataset, spec.scale_n, spec.solve.seed)?;
     match &spec.artifacts {
         Some(dir) => {
             let engine = PjrtEngine::load(std::path::Path::new(dir))?;
             let backend = PjrtGramBackend::new(&engine);
-            coordinator::run_with_backend(
-                &ds, &spec.solver, spec.p, &spec.machine, spec.algo, &backend,
-            )
+            let mut session = Session::build_with_backend(&ds, spec.topology, &backend)?;
+            session.solve(&spec.solve)
         }
-        None => coordinator::run(&ds, &spec.solver, spec.p, &spec.machine, spec.algo),
+        None => {
+            let mut session = Session::build(&ds, spec.topology)?;
+            session.solve(&spec.solve)
+        }
     }
 }
 
@@ -60,14 +63,15 @@ pub fn execute_spec(spec: &RunSpec) -> Result<SolverOutput> {
 pub fn cmd_run(argv: &[String]) -> Result<()> {
     let parsed = ArgSpec::run_flags().parse(argv)?;
     let spec = spec_from_args(&parsed)?;
-    spec.solver.validate()?;
+    spec.topology.validate()?;
+    spec.solve.validate()?;
     let out = execute_spec(&spec)?;
     let report = RunReport {
         dataset: spec.dataset.clone(),
-        p: spec.p,
-        k: spec.solver.k,
-        b: spec.solver.b,
-        machine: spec.machine.name.to_string(),
+        p: spec.topology.p,
+        k: spec.solve.k,
+        b: spec.solve.b,
+        machine: spec.topology.machine.name.to_string(),
         output: out,
     };
     if parsed.has("json") {
@@ -76,8 +80,8 @@ pub fn cmd_run(argv: &[String]) -> Result<()> {
         let o = &report.output;
         println!("{}: dataset={} P={} k={} b={}", o.algorithm, report.dataset, report.p, report.k, report.b);
         println!(
-            "  iterations={} objective={:.6e} rel_error={:.3e}",
-            o.iterations, o.final_objective, o.final_rel_error
+            "  iterations={} objective={:.6e} rel_error={:.3e} converged={}",
+            o.iterations, o.final_objective, o.final_rel_error, o.converged
         );
         println!(
             "  modeled={:.4}s wall={:.3}s collective_rounds={}",
@@ -111,19 +115,27 @@ pub fn cmd_sweep(argv: &[String]) -> Result<()> {
     ]);
     let parsed = flags.parse(argv)?;
     let base = spec_from_args(&parsed)?;
-    let p_list = parsed.get_usize_list("p-list")?.unwrap_or_else(|| vec![base.p]);
+    let p_list = parsed.get_usize_list("p-list")?.unwrap_or_else(|| vec![base.topology.p]);
     let k_list = parsed.get_usize_list("k-list")?.unwrap_or_else(|| vec![1, 8, 32]);
+    // One dataset load and (if requested) one artifact-engine load for
+    // the whole grid; one session per P amortizes sharding, cluster
+    // spin-up and the Lipschitz estimate across every k.
+    let ds = registry::load_preset(&base.dataset, base.scale_n, base.solve.seed)?;
+    let engine = match &base.artifacts {
+        Some(dir) => Some(PjrtEngine::load(std::path::Path::new(dir))?),
+        None => None,
+    };
+    let backend = engine.as_ref().map(PjrtGramBackend::new);
     let mut table = SpeedupTable::new(&base.dataset);
     for &p in &p_list {
-        let mut classical = base.clone();
-        classical.p = p;
-        classical.solver = classical.solver.with_k(1);
-        let baseline = execute_spec(&classical)?;
+        let topology = base.topology.with_p(p);
+        let mut session = match &backend {
+            Some(b) => Session::build_with_backend(&ds, topology, b)?,
+            None => Session::build(&ds, topology)?,
+        };
+        let baseline = session.solve(&base.solve.clone().with_k(1))?;
         for &k in &k_list {
-            let mut ca = base.clone();
-            ca.p = p;
-            ca.solver = ca.solver.with_k(k);
-            let out = execute_spec(&ca)?;
+            let out = session.solve(&base.solve.clone().with_k(k))?;
             table.push(SpeedupCell {
                 p,
                 k,

@@ -1,11 +1,18 @@
 //! Typed run specification assembled from a config file and/or CLI flags.
+//!
+//! Mirrors the session API's plan/solve split: a [`RunSpec`] carries a
+//! plan-time [`Topology`] (p, machine, allreduce, partition) and a
+//! solve-time [`SolveSpec`] (algorithm, λ, b, k, …), so the CLI can
+//! build one [`crate::session::Session`] and run any number of solves
+//! against it (see `cli::commands::cmd_sweep`).
 
 use crate::cluster::shard::PartitionStrategy;
 use crate::comm::collectives::AllReduceAlgo;
 use crate::comm::costmodel::MachineModel;
 use crate::config::parse::{parse_toml, TomlValue};
 use crate::error::{CaError, Result};
-use crate::solvers::traits::{AlgoKind, SolverConfig, Stopping};
+use crate::session::{SolveSpec, Topology};
+use crate::solvers::traits::{AlgoKind, Stopping};
 use std::collections::BTreeMap;
 
 /// A fully resolved run request.
@@ -15,14 +22,10 @@ pub struct RunSpec {
     pub dataset: String,
     /// Scale-down cap on n (None = full preset size).
     pub scale_n: Option<usize>,
-    /// Processor count.
-    pub p: usize,
-    /// Algorithm.
-    pub algo: AlgoKind,
-    /// Solver configuration.
-    pub solver: SolverConfig,
-    /// Machine model.
-    pub machine: MachineModel,
+    /// Plan-time topology (p, machine, allreduce, partition).
+    pub topology: Topology,
+    /// Solve-time request (algorithm, λ, b, k, q, stopping, seed, …).
+    pub solve: SolveSpec,
     /// Artifact directory for the PJRT backend (None = native backend).
     pub artifacts: Option<String>,
 }
@@ -32,10 +35,8 @@ impl Default for RunSpec {
         RunSpec {
             dataset: "smoke".into(),
             scale_n: Some(2_000),
-            p: 4,
-            algo: AlgoKind::Sfista,
-            solver: SolverConfig::default(),
-            machine: MachineModel::comet(),
+            topology: Topology::new(4),
+            solve: SolveSpec::default(),
             artifacts: None,
         }
     }
@@ -68,9 +69,9 @@ impl RunSpec {
                 let v = value.as_usize().ok_or_else(|| bad("integer"))?;
                 self.scale_n = if v == 0 { None } else { Some(v) };
             }
-            "p" => self.p = value.as_usize().ok_or_else(|| bad("integer"))?.max(1),
+            "p" => self.topology.p = value.as_usize().ok_or_else(|| bad("integer"))?.max(1),
             "algo" => {
-                self.algo = match value.as_str().ok_or_else(|| bad("string"))? {
+                self.solve.algo = match value.as_str().ok_or_else(|| bad("string"))? {
                     "sfista" | "ca-sfista" => AlgoKind::Sfista,
                     "spnm" | "ca-spnm" => AlgoKind::Spnm,
                     other => {
@@ -84,7 +85,7 @@ impl RunSpec {
                 self.artifacts = Some(value.as_str().ok_or_else(|| bad("string"))?.into())
             }
             "machine" => {
-                self.machine = match value.as_str().ok_or_else(|| bad("string"))? {
+                self.topology.machine = match value.as_str().ok_or_else(|| bad("string"))? {
                     "comet" => MachineModel::comet(),
                     "ethernet" => MachineModel::ethernet(),
                     "zero-latency" => MachineModel::zero_latency(),
@@ -92,31 +93,31 @@ impl RunSpec {
                 }
             }
             "solver.lambda" | "lambda" => {
-                self.solver.lambda = value.as_f64().ok_or_else(|| bad("number"))?
+                self.solve.lambda = value.as_f64().ok_or_else(|| bad("number"))?
             }
-            "solver.b" | "b" => self.solver.b = value.as_f64().ok_or_else(|| bad("number"))?,
+            "solver.b" | "b" => self.solve.b = value.as_f64().ok_or_else(|| bad("number"))?,
             "solver.k" | "k" => {
-                self.solver.k = value.as_usize().ok_or_else(|| bad("integer"))?
+                self.solve.k = value.as_usize().ok_or_else(|| bad("integer"))?
             }
             "solver.q" | "q" => {
-                self.solver.q = value.as_usize().ok_or_else(|| bad("integer"))?
+                self.solve.q = value.as_usize().ok_or_else(|| bad("integer"))?
             }
             "solver.iters" | "iters" => {
-                self.solver.stopping =
+                self.solve.stopping =
                     Stopping::MaxIters(value.as_usize().ok_or_else(|| bad("integer"))?)
             }
             "solver.seed" | "seed" => {
-                self.solver.seed = value.as_usize().ok_or_else(|| bad("integer"))? as u64
+                self.solve.seed = value.as_usize().ok_or_else(|| bad("integer"))? as u64
             }
             "solver.record_every" | "record_every" => {
-                self.solver.record_every = value.as_usize().ok_or_else(|| bad("integer"))?
+                self.solve.record_every = value.as_usize().ok_or_else(|| bad("integer"))?
             }
             "solver.allreduce" | "allreduce" => {
-                self.solver.allreduce =
+                self.topology.allreduce =
                     AllReduceAlgo::parse(value.as_str().ok_or_else(|| bad("string"))?)?
             }
             "solver.partition" | "partition" => {
-                self.solver.partition = match value.as_str().ok_or_else(|| bad("string"))? {
+                self.topology.partition = match value.as_str().ok_or_else(|| bad("string"))? {
                     "contiguous" => PartitionStrategy::Contiguous,
                     "greedy" => PartitionStrategy::Greedy,
                     other => {
@@ -158,16 +159,17 @@ seed = 9
         .unwrap();
         assert_eq!(spec.dataset, "covtype");
         assert_eq!(spec.scale_n, Some(20_000));
-        assert_eq!(spec.p, 64);
-        assert_eq!(spec.algo, AlgoKind::Spnm);
-        assert_eq!(spec.solver.k, 32);
-        assert_eq!(spec.solver.q, 4);
-        assert_eq!(spec.solver.b, 0.01);
-        assert_eq!(spec.solver.stopping.cap(), 100);
-        assert_eq!(spec.machine.name, "ethernet");
-        assert_eq!(spec.solver.allreduce, AllReduceAlgo::Ring);
-        assert_eq!(spec.solver.partition, PartitionStrategy::Greedy);
-        spec.solver.validate().unwrap();
+        assert_eq!(spec.topology.p, 64);
+        assert_eq!(spec.solve.algo, AlgoKind::Spnm);
+        assert_eq!(spec.solve.k, 32);
+        assert_eq!(spec.solve.q, 4);
+        assert_eq!(spec.solve.b, 0.01);
+        assert_eq!(spec.solve.stopping.cap(), 100);
+        assert_eq!(spec.topology.machine.name, "ethernet");
+        assert_eq!(spec.topology.allreduce, AllReduceAlgo::Ring);
+        assert_eq!(spec.topology.partition, PartitionStrategy::Greedy);
+        spec.solve.validate().unwrap();
+        spec.topology.validate().unwrap();
     }
 
     #[test]

@@ -1,22 +1,22 @@
-//! The run loop: sharding → schedule → k-step blocks → output.
+//! Legacy run entry points — thin shims over a fresh single-use
+//! [`crate::session::Session`] — plus the one-time Lipschitz estimate
+//! the session caches.
+//!
+//! The run loop itself lives in
+//! [`crate::session::Session::solve_observed`]; these free functions
+//! exist so that pre-session callers (and the pinned equivalence suite)
+//! keep working bit-identically: one call builds one plan, runs one
+//! solve, and drops the plan.
 
-use crate::cluster::engine::SimCluster;
-use crate::cluster::shard::ShardedDataset;
 use crate::comm::costmodel::MachineModel;
 use crate::comm::trace::{CostTrace, Phase};
 use crate::datasets::Dataset;
-use crate::error::{CaError, Result};
+use crate::error::Result;
 use crate::matrix::dense::DenseMatrix;
 use crate::matrix::ops::full_gram_csc;
-use crate::prox::objective::{relative_solution_error, LassoObjective};
 use crate::runtime::backend::{GramBackend, NativeGramBackend};
-use crate::sampling::SampleSchedule;
-use crate::solvers::traits::{
-    AlgoKind, HistoryPoint, SolverConfig, SolverOutput, StepPolicy, Stopping,
-};
-
-use super::kstep::compute_gram_stack;
-use super::state::IterState;
+use crate::session::{Session, SolveSpec, Topology};
+use crate::solvers::traits::{AlgoKind, SolverConfig, SolverOutput};
 
 /// Estimate the Lipschitz constant `L̂ = λ_max(XXᵀ/n)` by power iteration
 /// on the full Gram matrix (one-time setup; charged to [`Phase::Setup`]).
@@ -48,7 +48,10 @@ pub fn run(
 }
 
 /// Run a distributed solver with an explicit Gram backend (native or
-/// PJRT artifact-based).
+/// PJRT artifact-based). Builds a fresh single-use
+/// [`Session`] and runs one solve against it — callers that
+/// solve the same dataset more than once should hold a session
+/// themselves and amortize the setup.
 pub fn run_with_backend(
     ds: &Dataset,
     cfg: &SolverConfig,
@@ -58,109 +61,22 @@ pub fn run_with_backend(
     backend: &dyn GramBackend,
 ) -> Result<SolverOutput> {
     cfg.validate()?;
-    let wall_start = std::time::Instant::now();
-    let d = ds.d();
-    if d == 0 || ds.n() == 0 {
-        return Err(CaError::Dataset("empty dataset".into()));
-    }
-    let mut trace = CostTrace::new();
-    let cluster = SimCluster::new(p, *machine)?;
-    let sharded = ShardedDataset::new(ds, p, cfg.partition)?;
-    let schedule = SampleSchedule::new(ds.n(), cfg.b, cfg.seed, cfg.sampling);
-
-    // Step size.
-    let t_step = match cfg.step {
-        StepPolicy::Fixed(t) => t,
-        StepPolicy::InverseLipschitz { scale } => {
-            let l = estimate_lipschitz(ds, cfg.seed, machine, &mut trace)?;
-            if l <= 0.0 {
-                1.0
-            } else {
-                scale / l
-            }
-        }
+    let topology = Topology {
+        p,
+        machine: *machine,
+        allreduce: cfg.allreduce,
+        partition: cfg.partition,
     };
-
-    let objective = LassoObjective::new(cfg.lambda);
-    let w_ref: Option<&[f64]> = match (&cfg.stopping, &cfg.w_op) {
-        (Stopping::RelError { w_op, .. }, _) => Some(w_op.as_slice()),
-        (_, Some(w)) => Some(w.as_slice()),
-        _ => None,
-    };
-
-    let cap = cfg.stopping.cap();
-    let mut state = IterState::new(vec![0.0; d]);
-    let mut history: Vec<HistoryPoint> = Vec::new();
-    let mut converged = false;
-    let mut t0 = 0usize;
-
-    'outer: while t0 < cap {
-        let k_eff = cfg.k.min(cap - t0);
-        let stack = compute_gram_stack(
-            &sharded, &schedule, t0, k_eff, &cluster, backend, cfg.allreduce, &mut trace,
-        )?;
-        for j in 0..k_eff {
-            let (flops, phase) = match algo {
-                AlgoKind::Sfista => (
-                    state.fista_step(&stack, j, t_step, cfg.lambda, cfg.gradient_at)?,
-                    Phase::Update,
-                ),
-                AlgoKind::Spnm => {
-                    (state.spnm_step(&stack, j, t_step, cfg.lambda, cfg.q)?, Phase::InnerSolve)
-                }
-            };
-            cluster.charge_replicated_flops(flops, phase, &mut trace);
-            if state.w.iter().any(|v| !v.is_finite()) {
-                return Err(CaError::Solver(format!(
-                    "{} diverged at iteration {} (step {t_step:.3e}); try a smaller step",
-                    algo.display(cfg.k),
-                    state.iter
-                )));
-            }
-            let gi = state.iter;
-            if cfg.record_every > 0 && (gi % cfg.record_every == 0 || gi == cap) {
-                let obj = objective.value(&ds.x, &ds.y, &state.w)?;
-                let rel = w_ref
-                    .map(|w_op| relative_solution_error(&state.w, w_op))
-                    .unwrap_or(f64::NAN);
-                history.push(HistoryPoint {
-                    iter: gi,
-                    objective: obj,
-                    rel_error: rel,
-                    modeled_seconds: trace.total_steady().seconds,
-                });
-            }
-            if let Stopping::RelError { tol, w_op, .. } = &cfg.stopping {
-                if relative_solution_error(&state.w, w_op) <= *tol {
-                    converged = true;
-                    break 'outer;
-                }
-            }
-        }
-        t0 += k_eff;
-    }
-
-    let final_objective = objective.value(&ds.x, &ds.y, &state.w)?;
-    let final_rel_error =
-        w_ref.map(|w_op| relative_solution_error(&state.w, w_op)).unwrap_or(f64::NAN);
-    let _ = converged;
-    Ok(SolverOutput {
-        algorithm: algo.display(cfg.k),
-        iterations: state.iter,
-        w: state.w,
-        final_objective,
-        final_rel_error,
-        modeled_seconds: trace.total_steady().seconds,
-        wall_seconds: wall_start.elapsed().as_secs_f64(),
-        trace,
-        history,
-    })
+    let mut session = Session::build_with_backend(ds, topology, backend)?;
+    session.solve(&SolveSpec::from_config(cfg, algo))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::datasets::synthetic::{generate, SyntheticSpec};
+    use crate::prox::objective::LassoObjective;
+    use crate::solvers::traits::Stopping;
 
     fn ds() -> Dataset {
         generate(
@@ -240,6 +156,8 @@ mod tests {
         let out = run(&ds, &cfg, 2, &MachineModel::comet(), AlgoKind::Sfista).unwrap();
         assert!(out.iterations < 400, "stopped at {}", out.iterations);
         assert!(out.final_rel_error <= 0.5);
+        assert!(out.converged, "tolerance hit must be reported");
+        assert!(!long.converged, "MaxIters runs never report convergence");
     }
 
     #[test]

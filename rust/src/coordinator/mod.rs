@@ -16,8 +16,10 @@
 //!    applies the k FISTA (or SPNM inner-loop) updates locally from the
 //!    reduced stack — no further communication.
 //!
-//! The classical algorithms are the same engine at k = 1. [`driver`]
-//! assembles the full run loop and produces [`crate::solvers::SolverOutput`].
+//! The classical algorithms are the same engine at k = 1. The run loop
+//! lives in [`crate::session::Session`] (plan-once / solve-many);
+//! [`driver`] keeps the legacy free functions as bit-identical shims
+//! over a fresh single-use session.
 
 pub mod driver;
 pub mod kstep;

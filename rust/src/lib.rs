@@ -12,7 +12,16 @@
 //!   min_w  (1/2n)‖Xᵀw − y‖² + λ‖w‖₁ ,       X ∈ R^{d×n}
 //! ```
 //!
-//! together with every substrate the paper depends on:
+//! The public entry point is the plan-once / solve-many [`session`] API:
+//! [`session::Session::build`] does the one-time work (sharding, cluster
+//! spin-up, cached Lipschitz estimate) and [`session::Session::solve`]
+//! runs any algorithm / k / b / λ / seed against the prepared plan, with
+//! warm starts for regularization-path sweeps and streaming
+//! [`session::Observer`]s for live convergence. The legacy free
+//! functions ([`coordinator::run`] and friends) survive as bit-identical
+//! shims over a fresh single-use session.
+//!
+//! Everything rests on the substrate the paper depends on:
 //!
 //! * a **shared-nothing simulated cluster** ([`cluster`]) that executes the
 //!   per-worker numerics exactly on real threads while charging modeled
@@ -46,6 +55,7 @@ pub mod metrics;
 pub mod prox;
 pub mod runtime;
 pub mod sampling;
+pub mod session;
 pub mod solvers;
 pub mod util;
 
@@ -60,6 +70,7 @@ pub mod prelude {
     pub use crate::error::{CaError, Result};
     pub use crate::matrix::csc::CscMatrix;
     pub use crate::matrix::dense::DenseMatrix;
-    pub use crate::solvers::traits::{SolverConfig, SolverOutput, Stopping};
+    pub use crate::session::{Observer, Session, SolveSpec, Topology};
+    pub use crate::solvers::traits::{AlgoKind, SolverConfig, SolverOutput, Stopping};
     pub use crate::util::rng::Rng;
 }

@@ -149,6 +149,7 @@ mod tests {
             iterations: 5,
             final_objective: 0.5,
             final_rel_error: 0.1,
+            converged: false,
             modeled_seconds: 2.5,
             wall_seconds: 0.01,
             trace: Default::default(),

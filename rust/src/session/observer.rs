@@ -1,0 +1,147 @@
+//! Streaming convergence observers.
+//!
+//! The legacy API only exposed convergence *post hoc*: set
+//! `record_every`, run to completion, then read `SolverOutput::history`.
+//! An [`Observer`] receives the same [`HistoryPoint`]s live — plus a
+//! [`BlockEvent`] after every k-step communication round — and can
+//! request early stop from either callback, which the run loop honours
+//! at the next check.
+
+use crate::solvers::traits::{HistoryPoint, SolverOutput};
+
+/// What an observer callback tells the run loop to do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Signal {
+    /// Keep iterating.
+    Continue,
+    /// Stop after the current update; the output reports
+    /// `converged = false` unless the tolerance was already met.
+    Stop,
+}
+
+/// Progress snapshot emitted after each k-step block (i.e. after each
+/// all-reduce round and the replicated updates it fed) — including the
+/// final, possibly partial block of a run that stops mid-block, so the
+/// stream always accounts for every collective round that executed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockEvent {
+    /// Global iteration index of the block's first update (0-based).
+    pub t0: usize,
+    /// Updates actually applied in this block — normally
+    /// `min(k, cap − t0)`, fewer when the run stopped mid-block.
+    pub k_eff: usize,
+    /// Total iterations completed so far.
+    pub iterations: usize,
+    /// Collective rounds performed so far.
+    pub collective_rounds: u64,
+    /// Modeled steady-state seconds elapsed so far (Setup excluded).
+    pub modeled_seconds: f64,
+}
+
+/// Streaming hooks into a [`crate::session::Session`] solve. All methods
+/// have default no-op implementations, so an observer implements only
+/// what it needs.
+pub trait Observer {
+    /// Called after each k-step block, including the final (possibly
+    /// partial) block of a run that stops mid-block. The returned
+    /// signal is ignored when the run is already stopping.
+    fn on_block(&mut self, _event: &BlockEvent) -> Signal {
+        Signal::Continue
+    }
+
+    /// Called at the `record_every` cadence with the same point that is
+    /// appended to `SolverOutput::history`.
+    fn on_record(&mut self, _point: &HistoryPoint) -> Signal {
+        Signal::Continue
+    }
+
+    /// Called once with the final output, before `solve` returns it.
+    fn on_done(&mut self, _output: &SolverOutput) {}
+}
+
+/// The do-nothing observer behind [`crate::session::Session::solve`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopObserver;
+
+impl Observer for NoopObserver {}
+
+/// An observer that collects every event — the simplest way to assert
+/// streaming behaviour in tests, and a reasonable building block for
+/// live dashboards.
+#[derive(Clone, Debug, Default)]
+pub struct CollectingObserver {
+    /// Every block event, in order.
+    pub blocks: Vec<BlockEvent>,
+    /// Every recorded history point, in order.
+    pub records: Vec<HistoryPoint>,
+    /// Whether `on_done` fired.
+    pub done: bool,
+    /// Stop after this many blocks (`None` = never request a stop).
+    pub stop_after_blocks: Option<usize>,
+}
+
+impl CollectingObserver {
+    /// Collect everything, never request a stop.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Collect everything and request a stop after `n` blocks.
+    pub fn stop_after(n: usize) -> Self {
+        CollectingObserver { stop_after_blocks: Some(n), ..Self::default() }
+    }
+}
+
+impl Observer for CollectingObserver {
+    fn on_block(&mut self, event: &BlockEvent) -> Signal {
+        self.blocks.push(*event);
+        match self.stop_after_blocks {
+            Some(n) if self.blocks.len() >= n => Signal::Stop,
+            _ => Signal::Continue,
+        }
+    }
+
+    fn on_record(&mut self, point: &HistoryPoint) -> Signal {
+        self.records.push(*point);
+        Signal::Continue
+    }
+
+    fn on_done(&mut self, _output: &SolverOutput) {
+        self.done = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collecting_observer_stops_on_request() {
+        let mut obs = CollectingObserver::stop_after(2);
+        let ev = BlockEvent {
+            t0: 0,
+            k_eff: 4,
+            iterations: 4,
+            collective_rounds: 1,
+            modeled_seconds: 0.0,
+        };
+        assert_eq!(obs.on_block(&ev), Signal::Continue);
+        assert_eq!(obs.on_block(&ev), Signal::Stop);
+        assert_eq!(obs.blocks.len(), 2);
+    }
+
+    #[test]
+    fn defaults_are_noops() {
+        let mut obs = NoopObserver;
+        let ev = BlockEvent {
+            t0: 0,
+            k_eff: 1,
+            iterations: 1,
+            collective_rounds: 1,
+            modeled_seconds: 0.0,
+        };
+        assert_eq!(obs.on_block(&ev), Signal::Continue);
+        let h = HistoryPoint { iter: 1, objective: 0.0, rel_error: 0.0, modeled_seconds: 0.0 };
+        assert_eq!(obs.on_record(&h), Signal::Continue);
+    }
+}

@@ -1,0 +1,235 @@
+//! Solve-time configuration: everything that may change between two
+//! [`super::Session::solve`] calls on one prepared plan — algorithm, λ,
+//! sampling rate, k, stopping rule, seed, warm start. The plan-time
+//! counterpart is [`super::Topology`].
+
+use crate::error::Result;
+use crate::sampling::SamplingMode;
+use crate::solvers::traits::{AlgoKind, GradientAt, SolverConfig, StepPolicy, Stopping};
+
+/// One solve request against a prepared [`super::Session`].
+#[derive(Clone, Debug)]
+pub struct SolveSpec {
+    /// Which algorithm family to run (k from `k` below selects CA-k).
+    pub algo: AlgoKind,
+    /// L1 regularization weight λ.
+    pub lambda: f64,
+    /// Sampling rate b ∈ (0, 1]: each iteration samples m = ⌊b·n⌋ columns.
+    pub b: f64,
+    /// k-step parameter (1 = classical algorithm).
+    pub k: usize,
+    /// SPNM inner first-order iterations Q.
+    pub q: usize,
+    /// Stopping criterion.
+    pub stopping: Stopping,
+    /// Master seed for the sampling schedule (and the Lipschitz power
+    /// iteration, which the session caches per seed).
+    pub seed: u64,
+    /// Step-size policy.
+    pub step: StepPolicy,
+    /// Gradient evaluation point (paper-faithful vs textbook FISTA).
+    pub gradient_at: GradientAt,
+    /// Sampling mode.
+    pub sampling: SamplingMode,
+    /// Record a convergence history point every this many iterations
+    /// (0 = no history). Observer `on_record` fires at the same cadence.
+    pub record_every: usize,
+    /// Optional reference solution for history relative errors.
+    pub w_op: Option<Vec<f64>>,
+    /// Optional warm-start iterate (length d); `None` starts at w = 0
+    /// like the paper. The previous λ's solution is the canonical warm
+    /// start for a regularization-path sweep.
+    pub warm_start: Option<Vec<f64>>,
+}
+
+impl Default for SolveSpec {
+    fn default() -> Self {
+        // One source of truth for the field mapping: the legacy
+        // defaults routed through the same conversion the shims use.
+        SolveSpec::from_config(&SolverConfig::default(), AlgoKind::Sfista)
+    }
+}
+
+impl SolveSpec {
+    /// Build a spec from a legacy [`SolverConfig`] plus the algorithm the
+    /// legacy entry points took as a separate argument. The legacy
+    /// plan-time fields (`allreduce`, `partition`) live on
+    /// [`super::Topology`] and are ignored here.
+    pub fn from_config(cfg: &SolverConfig, algo: AlgoKind) -> Self {
+        SolveSpec {
+            algo,
+            lambda: cfg.lambda,
+            b: cfg.b,
+            k: cfg.k,
+            q: cfg.q,
+            stopping: cfg.stopping.clone(),
+            seed: cfg.seed,
+            step: cfg.step,
+            gradient_at: cfg.gradient_at,
+            sampling: cfg.sampling,
+            record_every: cfg.record_every,
+            w_op: cfg.w_op.clone(),
+            warm_start: None,
+        }
+    }
+
+    /// Set the algorithm family.
+    pub fn with_algo(mut self, algo: AlgoKind) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    /// Set λ.
+    pub fn with_lambda(mut self, lambda: f64) -> Self {
+        self.lambda = lambda;
+        self
+    }
+
+    /// Set the sampling rate b.
+    pub fn with_sample_fraction(mut self, b: f64) -> Self {
+        self.b = b;
+        self
+    }
+
+    /// Set the k-step parameter.
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    /// Set SPNM's inner iteration count Q.
+    pub fn with_q(mut self, q: usize) -> Self {
+        self.q = q;
+        self
+    }
+
+    /// Run for a fixed iteration count.
+    pub fn with_max_iters(mut self, t: usize) -> Self {
+        self.stopping = Stopping::MaxIters(t);
+        self
+    }
+
+    /// Run until `‖w − w_op‖/‖w_op‖ ≤ tol`, with a hard iteration cap.
+    pub fn with_rel_error(mut self, tol: f64, w_op: Vec<f64>, max_iters: usize) -> Self {
+        self.stopping = Stopping::RelError { tol, w_op, max_iters };
+        self
+    }
+
+    /// Set the master seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Record history every `every` iterations.
+    pub fn with_history(mut self, every: usize) -> Self {
+        self.record_every = every;
+        self
+    }
+
+    /// Set the step-size policy.
+    pub fn with_step(mut self, step: StepPolicy) -> Self {
+        self.step = step;
+        self
+    }
+
+    /// Set the gradient evaluation point.
+    pub fn with_gradient_at(mut self, gradient_at: GradientAt) -> Self {
+        self.gradient_at = gradient_at;
+        self
+    }
+
+    /// Set the sampling mode.
+    pub fn with_sampling(mut self, sampling: SamplingMode) -> Self {
+        self.sampling = sampling;
+        self
+    }
+
+    /// Seed the iterate at `w0` instead of zero (λ-sweep warm start).
+    pub fn warm_start(mut self, w0: &[f64]) -> Self {
+        self.warm_start = Some(w0.to_vec());
+        self
+    }
+
+    /// Validate parameter ranges (dimension checks against the dataset
+    /// happen at solve time, where d is known). Shares one set of range
+    /// rules with the legacy [`SolverConfig::validate`].
+    pub fn validate(&self) -> Result<()> {
+        crate::solvers::traits::validate_solver_params(
+            self.b, self.k, self.q, self.lambda, self.step,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chain_and_validate() {
+        let w = vec![1.0, 2.0];
+        let s = SolveSpec::default()
+            .with_algo(AlgoKind::Spnm)
+            .with_lambda(0.5)
+            .with_sample_fraction(0.2)
+            .with_k(8)
+            .with_q(3)
+            .with_max_iters(64)
+            .with_seed(7)
+            .with_history(4)
+            .warm_start(&w);
+        assert_eq!(s.algo, AlgoKind::Spnm);
+        assert_eq!(s.lambda, 0.5);
+        assert_eq!(s.k, 8);
+        assert_eq!(s.q, 3);
+        assert_eq!(s.stopping.cap(), 64);
+        assert_eq!(s.record_every, 4);
+        assert_eq!(s.warm_start.as_deref(), Some(w.as_slice()));
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        assert!(SolveSpec::default().with_sample_fraction(0.0).validate().is_err());
+        assert!(SolveSpec::default().with_sample_fraction(1.5).validate().is_err());
+        assert!(SolveSpec::default().with_k(0).validate().is_err());
+        assert!(SolveSpec::default().with_q(0).validate().is_err());
+        assert!(SolveSpec::default().with_lambda(-1.0).validate().is_err());
+        assert!(SolveSpec::default().with_step(StepPolicy::Fixed(0.0)).validate().is_err());
+    }
+
+    #[test]
+    fn from_config_carries_solve_time_fields() {
+        let cfg = SolverConfig::default()
+            .with_lambda(0.3)
+            .with_sample_fraction(0.25)
+            .with_k(16)
+            .with_q(2)
+            .with_max_iters(99)
+            .with_seed(11)
+            .with_history(3);
+        let s = SolveSpec::from_config(&cfg, AlgoKind::Spnm);
+        assert_eq!(s.algo, AlgoKind::Spnm);
+        assert_eq!(s.lambda, 0.3);
+        assert_eq!(s.b, 0.25);
+        assert_eq!(s.k, 16);
+        assert_eq!(s.q, 2);
+        assert_eq!(s.stopping.cap(), 99);
+        assert_eq!(s.seed, 11);
+        assert_eq!(s.record_every, 3);
+        assert!(s.warm_start.is_none());
+    }
+
+    #[test]
+    fn rel_error_builder() {
+        let s = SolveSpec::default().with_rel_error(0.1, vec![1.0], 500);
+        match &s.stopping {
+            Stopping::RelError { tol, w_op, max_iters } => {
+                assert_eq!(*tol, 0.1);
+                assert_eq!(w_op, &vec![1.0]);
+                assert_eq!(*max_iters, 500);
+            }
+            other => panic!("wrong stopping: {other:?}"),
+        }
+    }
+}

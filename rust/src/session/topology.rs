@@ -1,0 +1,104 @@
+//! Plan-time configuration: the shape of the cluster a [`super::Session`]
+//! is built for. Everything in a [`Topology`] is fixed at
+//! [`super::Session::build`] time — changing any of it requires a new
+//! plan (re-sharding, a new simulated cluster) — which is exactly why it
+//! is split out of the old monolithic
+//! [`crate::solvers::traits::SolverConfig`].
+
+use crate::cluster::shard::PartitionStrategy;
+use crate::comm::collectives::AllReduceAlgo;
+use crate::comm::costmodel::MachineModel;
+use crate::error::{CaError, Result};
+
+/// Plan-time parameters: processor count, machine model, collective
+/// algorithm and column-partitioning strategy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Topology {
+    /// Simulated processor count (the paper's P, up to 1024).
+    pub p: usize,
+    /// α-β-γ machine model used for time charging.
+    pub machine: MachineModel,
+    /// All-reduce algorithm for the k-step Gram-stack reduction.
+    pub allreduce: AllReduceAlgo,
+    /// Column partitioning strategy for sharding.
+    pub partition: PartitionStrategy,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology {
+            p: 1,
+            machine: MachineModel::comet(),
+            allreduce: AllReduceAlgo::RecursiveDoubling,
+            partition: PartitionStrategy::Contiguous,
+        }
+    }
+}
+
+impl Topology {
+    /// Topology with `p` processors and default machine/collective/partition.
+    pub fn new(p: usize) -> Self {
+        Topology { p, ..Default::default() }
+    }
+
+    /// Set the processor count.
+    pub fn with_p(mut self, p: usize) -> Self {
+        self.p = p;
+        self
+    }
+
+    /// Set the machine model.
+    pub fn with_machine(mut self, machine: MachineModel) -> Self {
+        self.machine = machine;
+        self
+    }
+
+    /// Set the all-reduce algorithm.
+    pub fn with_allreduce(mut self, allreduce: AllReduceAlgo) -> Self {
+        self.allreduce = allreduce;
+        self
+    }
+
+    /// Set the partition strategy.
+    pub fn with_partition(mut self, partition: PartitionStrategy) -> Self {
+        self.partition = partition;
+        self
+    }
+
+    /// Validate parameter ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.p == 0 {
+            return Err(CaError::Config("topology needs p ≥ 1 processors".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chain() {
+        let t = Topology::new(8)
+            .with_machine(MachineModel::ethernet())
+            .with_allreduce(AllReduceAlgo::Ring)
+            .with_partition(PartitionStrategy::Greedy);
+        assert_eq!(t.p, 8);
+        assert_eq!(t.machine.name, "ethernet");
+        assert_eq!(t.allreduce, AllReduceAlgo::Ring);
+        assert_eq!(t.partition, PartitionStrategy::Greedy);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn zero_p_rejected() {
+        assert!(Topology::new(0).validate().is_err());
+        assert!(Topology::default().with_p(0).validate().is_err());
+    }
+
+    #[test]
+    fn default_is_valid() {
+        Topology::default().validate().unwrap();
+    }
+}

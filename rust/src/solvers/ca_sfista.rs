@@ -11,6 +11,8 @@ use crate::error::Result;
 use crate::solvers::traits::{AlgoKind, SolverConfig, SolverOutput};
 
 /// Run CA-SFISTA with `cfg.k` unrolled steps per communication round.
+/// A thin shim over a fresh single-use [`crate::session::Session`];
+/// repeat callers should hold a session and amortize the setup.
 pub fn run_ca_sfista(
     ds: &Dataset,
     cfg: &SolverConfig,

@@ -9,7 +9,9 @@ use crate::error::Result;
 use crate::solvers::traits::{AlgoKind, SolverConfig, SolverOutput};
 
 /// Run CA-SPNM with `cfg.k` unrolled steps per communication round and
-/// `cfg.q` inner iterations.
+/// `cfg.q` inner iterations. A thin shim over a fresh single-use
+/// [`crate::session::Session`]; repeat callers should hold a session
+/// and amortize the setup.
 pub fn run_ca_spnm(
     ds: &Dataset,
     cfg: &SolverConfig,

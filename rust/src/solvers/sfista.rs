@@ -8,6 +8,8 @@ use crate::solvers::traits::{AlgoKind, SolverConfig, SolverOutput};
 
 /// Run classical SFISTA on `p` simulated processors. Any `cfg.k` is
 /// overridden to 1 (that is what makes it the classical algorithm).
+/// A thin shim over a fresh single-use [`crate::session::Session`];
+/// repeat callers should hold a session and amortize the setup.
 pub fn run_sfista(
     ds: &Dataset,
     cfg: &SolverConfig,

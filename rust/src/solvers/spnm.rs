@@ -8,6 +8,8 @@ use crate::error::Result;
 use crate::solvers::traits::{AlgoKind, SolverConfig, SolverOutput};
 
 /// Run classical SPNM on `p` simulated processors (forces k = 1).
+/// A thin shim over a fresh single-use [`crate::session::Session`];
+/// repeat callers should hold a session and amortize the setup.
 pub fn run_spnm(
     ds: &Dataset,
     cfg: &SolverConfig,

@@ -83,7 +83,13 @@ impl Stopping {
     }
 }
 
-/// Full solver configuration.
+/// Full solver configuration — the legacy monolithic form consumed by
+/// the [`crate::coordinator`] free functions. The session API splits it
+/// into plan-time [`crate::session::Topology`] (which absorbs
+/// `allreduce` and `partition`, plus P and the machine model) and
+/// solve-time [`crate::session::SolveSpec`] (everything else); the
+/// legacy entry points convert via
+/// [`crate::session::SolveSpec::from_config`].
 #[derive(Clone, Debug)]
 pub struct SolverConfig {
     /// L1 regularization weight λ.
@@ -180,25 +186,38 @@ impl SolverConfig {
 
     /// Validate parameter ranges.
     pub fn validate(&self) -> Result<()> {
-        if !(self.b > 0.0 && self.b <= 1.0) {
-            return Err(CaError::Config(format!("b must be in (0,1], got {}", self.b)));
-        }
-        if self.k == 0 {
-            return Err(CaError::Config("k must be ≥ 1".into()));
-        }
-        if self.q == 0 {
-            return Err(CaError::Config("q must be ≥ 1".into()));
-        }
-        if self.lambda < 0.0 {
-            return Err(CaError::Config(format!("λ must be ≥ 0, got {}", self.lambda)));
-        }
-        if let StepPolicy::Fixed(t) = self.step {
-            if t <= 0.0 {
-                return Err(CaError::Config(format!("step must be > 0, got {t}")));
-            }
-        }
-        Ok(())
+        validate_solver_params(self.b, self.k, self.q, self.lambda, self.step)
     }
+}
+
+/// Range checks shared by the legacy [`SolverConfig`] and the session
+/// [`crate::session::SolveSpec`] — one source of truth so the two entry
+/// points cannot drift apart.
+pub(crate) fn validate_solver_params(
+    b: f64,
+    k: usize,
+    q: usize,
+    lambda: f64,
+    step: StepPolicy,
+) -> Result<()> {
+    if !(b > 0.0 && b <= 1.0) {
+        return Err(CaError::Config(format!("b must be in (0,1], got {b}")));
+    }
+    if k == 0 {
+        return Err(CaError::Config("k must be ≥ 1".into()));
+    }
+    if q == 0 {
+        return Err(CaError::Config("q must be ≥ 1".into()));
+    }
+    if lambda < 0.0 {
+        return Err(CaError::Config(format!("λ must be ≥ 0, got {lambda}")));
+    }
+    if let StepPolicy::Fixed(t) = step {
+        if t <= 0.0 {
+            return Err(CaError::Config(format!("step must be > 0, got {t}")));
+        }
+    }
+    Ok(())
 }
 
 /// One convergence-history point.
@@ -227,6 +246,11 @@ pub struct SolverOutput {
     pub final_objective: f64,
     /// Final relative solution error (NaN without a reference).
     pub final_rel_error: f64,
+    /// Whether a [`Stopping::RelError`] tolerance was met (always
+    /// `false` under [`Stopping::MaxIters`] or an observer-requested
+    /// early stop) — distinguishes "hit tolerance" from "hit the
+    /// iteration cap".
+    pub converged: bool,
     /// Modeled α-β-γ seconds along the critical path.
     pub modeled_seconds: f64,
     /// Wall-clock seconds of the simulation itself.
@@ -245,6 +269,7 @@ impl SolverOutput {
             ("iterations", Json::Num(self.iterations as f64)),
             ("final_objective", Json::Num(self.final_objective)),
             ("final_rel_error", Json::Num(self.final_rel_error)),
+            ("converged", Json::Bool(self.converged)),
             ("modeled_seconds", Json::Num(self.modeled_seconds)),
             ("wall_seconds", Json::Num(self.wall_seconds)),
             ("trace", self.trace.to_json()),
@@ -318,6 +343,7 @@ mod tests {
             iterations: 10,
             final_objective: 1.0,
             final_rel_error: 0.5,
+            converged: true,
             modeled_seconds: 2.0,
             wall_seconds: 0.1,
             trace: Default::default(),
@@ -325,6 +351,7 @@ mod tests {
         };
         let j = out.to_json();
         assert_eq!(j.get("iterations").unwrap().as_usize(), Some(10));
+        assert_eq!(j.get("converged"), Some(&Json::Bool(true)));
         assert_eq!(j.get("history").unwrap().as_arr().unwrap().len(), 1);
     }
 }

@@ -2,6 +2,11 @@
 //! are **arithmetically identical** to the classical algorithms — same
 //! iterates, any k, both solvers — because randomized sampling lets the
 //! iterations unroll without changing the math.
+//!
+//! These tests run through the legacy free functions, which are now
+//! thin shims over a fresh single-use [`ca_prox::session::Session`] —
+//! so this suite also pins the shim path; `tests/session.rs` proves the
+//! shims bit-identical to direct session solves.
 
 use ca_prox::comm::collectives::AllReduceAlgo;
 use ca_prox::comm::costmodel::MachineModel;

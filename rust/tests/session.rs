@@ -1,0 +1,205 @@
+//! Session API contract: the legacy free functions are bit-identical
+//! shims over a fresh session, a multi-solve session never repeats the
+//! one-time setup, warm starts shorten λ-path solves, and observers
+//! stream exactly what the post-hoc history records.
+
+use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::comm::trace::Phase;
+use ca_prox::datasets::registry::load_preset;
+use ca_prox::datasets::synthetic::{generate, SyntheticSpec};
+use ca_prox::session::{CollectingObserver, Session, SolveSpec, Topology};
+use ca_prox::solvers::ca_sfista::run_ca_sfista;
+use ca_prox::solvers::ca_spnm::run_ca_spnm;
+use ca_prox::solvers::reference::solve_reference;
+use ca_prox::solvers::sfista::run_sfista;
+use ca_prox::solvers::spnm::run_spnm;
+use ca_prox::solvers::traits::{AlgoKind, HistoryPoint, SolverConfig, SolverOutput};
+
+/// Bit-level history equality: `rel_error` is NaN when no reference is
+/// configured, and the derived `PartialEq` would make NaN ≠ NaN, so
+/// every float is compared through `to_bits` (identical computations
+/// produce identical bit patterns).
+fn assert_history_bits_eq(a: &[HistoryPoint], b: &[HistoryPoint], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: history lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.iter, y.iter, "{ctx}: history iters differ");
+        assert_eq!(
+            x.objective.to_bits(),
+            y.objective.to_bits(),
+            "{ctx}: history objectives differ"
+        );
+        assert_eq!(
+            x.rel_error.to_bits(),
+            y.rel_error.to_bits(),
+            "{ctx}: history rel_errors differ"
+        );
+        assert_eq!(
+            x.modeled_seconds.to_bits(),
+            y.modeled_seconds.to_bits(),
+            "{ctx}: history modeled_seconds differ"
+        );
+    }
+}
+
+fn assert_bit_identical(a: &SolverOutput, b: &SolverOutput, ctx: &str) {
+    assert_eq!(a.w, b.w, "{ctx}: iterates differ");
+    assert_eq!(a.final_objective, b.final_objective, "{ctx}: objective differs");
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iteration counts differ");
+    assert_history_bits_eq(&a.history, &b.history, ctx);
+    assert_eq!(a.algorithm, b.algorithm, "{ctx}: display names differ");
+    assert_eq!(
+        a.trace.collective_rounds, b.trace.collective_rounds,
+        "{ctx}: collective rounds differ"
+    );
+}
+
+/// Session solves are bit-identical to the four legacy free functions.
+#[test]
+fn session_matches_legacy_entry_points_bitwise() {
+    let ds = load_preset("smoke", Some(400), 3).unwrap();
+    let machine = MachineModel::comet();
+    let cfg = SolverConfig::default()
+        .with_lambda(0.05)
+        .with_sample_fraction(0.3)
+        .with_k(4)
+        .with_q(3)
+        .with_max_iters(24)
+        .with_history(6)
+        .with_seed(9);
+    let p = 3;
+
+    // Legacy wrappers (classical variants force k = 1 internally).
+    let legacy: Vec<(&str, SolverOutput)> = vec![
+        ("run_sfista", run_sfista(&ds, &cfg, p, &machine).unwrap()),
+        ("run_ca_sfista", run_ca_sfista(&ds, &cfg, p, &machine).unwrap()),
+        ("run_spnm", run_spnm(&ds, &cfg, p, &machine).unwrap()),
+        ("run_ca_spnm", run_ca_spnm(&ds, &cfg, p, &machine).unwrap()),
+    ];
+
+    // The same four requests on one multi-solve session.
+    let mut session = Session::build(&ds, Topology::new(p)).unwrap();
+    let base = SolveSpec::from_config(&cfg, AlgoKind::Sfista);
+    let session_outs: Vec<SolverOutput> = vec![
+        session.solve(&base.clone().with_k(1)).unwrap(),
+        session.solve(&base.clone()).unwrap(),
+        session.solve(&base.clone().with_algo(AlgoKind::Spnm).with_k(1)).unwrap(),
+        session.solve(&base.clone().with_algo(AlgoKind::Spnm)).unwrap(),
+    ];
+
+    for ((name, l), s) in legacy.iter().zip(&session_outs) {
+        assert_bit_identical(s, l, name);
+    }
+    assert_eq!(session.solves(), 4);
+}
+
+/// The one-time setup (the 100-iteration power method on the full Gram)
+/// is charged to the first solve only; every later solve on the same
+/// session sees zero Setup-phase flops and identical iterates.
+#[test]
+fn repeat_solves_skip_setup() {
+    let ds = load_preset("smoke", Some(500), 5).unwrap();
+    let mut session = Session::build(&ds, Topology::new(4)).unwrap();
+    let spec = SolveSpec::default()
+        .with_lambda(0.05)
+        .with_sample_fraction(0.25)
+        .with_k(8)
+        .with_max_iters(32)
+        .with_seed(7);
+    let first = session.solve(&spec).unwrap();
+    assert!(
+        first.trace.phase(Phase::Setup).flops > 0.0,
+        "first solve must pay the Lipschitz estimate"
+    );
+    for lambda in [0.05, 0.02, 0.01] {
+        let again = session.solve(&spec.clone().with_lambda(lambda)).unwrap();
+        assert_eq!(
+            again.trace.phase(Phase::Setup).flops,
+            0.0,
+            "λ={lambda}: repeat solve must not re-run setup"
+        );
+    }
+    // Correctness is untouched by the cache: a same-λ repeat is
+    // bit-identical to the first solve.
+    let repeat = session.solve(&spec).unwrap();
+    assert_eq!(repeat.w, first.w);
+    assert_eq!(repeat.final_objective, first.final_objective);
+}
+
+/// Warm-starting a λ-step from the neighbouring λ's solution converges
+/// in fewer iterations than a cold start under `Stopping::RelError` —
+/// the regularization-path pattern the session API exists for.
+#[test]
+fn warm_start_beats_cold_start_on_lambda_step() {
+    let ds = generate(
+        &SyntheticSpec {
+            d: 8,
+            n: 400,
+            density: 1.0,
+            noise: 0.05,
+            model_sparsity: 0.5,
+            condition: 1.0,
+        },
+        21,
+    );
+    let mut session = Session::build(&ds, Topology::new(4)).unwrap();
+    // Previous point on the path: λ = 0.02, solved to steady state.
+    let previous = session
+        .solve(
+            &SolveSpec::default()
+                .with_lambda(0.02)
+                .with_sample_fraction(0.3)
+                .with_k(4)
+                .with_max_iters(300)
+                .with_seed(3),
+        )
+        .unwrap();
+    // Next point: λ = 0.01, run to a relative-error tolerance.
+    let (w_op, _) = solve_reference(&ds, 0.01, 1e-8, 100_000).unwrap();
+    let target = SolveSpec::default()
+        .with_lambda(0.01)
+        .with_sample_fraction(0.3)
+        .with_k(4)
+        .with_seed(3)
+        .with_rel_error(0.2, w_op, 3000);
+    let cold = session.solve(&target).unwrap();
+    let warm = session.solve(&target.clone().warm_start(&previous.w)).unwrap();
+    assert!(cold.converged, "cold start must reach the tolerance");
+    assert!(warm.converged, "warm start must reach the tolerance");
+    assert!(
+        warm.iterations < cold.iterations,
+        "warm start took {} iterations, cold start {}",
+        warm.iterations,
+        cold.iterations
+    );
+}
+
+/// `solve_observed` streams exactly the history the output records, and
+/// an observer-requested stop halts the run at the next block boundary.
+#[test]
+fn observers_stream_and_can_stop() {
+    let ds = load_preset("smoke", Some(400), 2).unwrap();
+    let mut session = Session::build(&ds, Topology::new(2)).unwrap();
+    let spec = SolveSpec::default()
+        .with_lambda(0.05)
+        .with_sample_fraction(0.3)
+        .with_k(8)
+        .with_max_iters(48)
+        .with_history(8)
+        .with_seed(11);
+
+    let mut obs = CollectingObserver::new();
+    let out = session.solve_observed(&spec, &mut obs).unwrap();
+    assert_history_bits_eq(&obs.records, &out.history, "streamed records must equal history");
+    assert_eq!(obs.blocks.len(), 6, "48 iterations / k=8 → 6 blocks");
+    assert!(obs.done);
+    assert!(
+        obs.blocks.windows(2).all(|w| w[0].iterations < w[1].iterations),
+        "block events must be monotone in iterations"
+    );
+
+    let mut stopper = CollectingObserver::stop_after(2);
+    let stopped = session.solve_observed(&spec, &mut stopper).unwrap();
+    assert_eq!(stopped.iterations, 16, "stop after 2 blocks of k=8");
+    assert!(!stopped.converged);
+    assert_eq!(stopped.trace.collective_rounds, 2);
+}

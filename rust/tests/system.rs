@@ -9,6 +9,7 @@ use ca_prox::coordinator;
 use ca_prox::datasets::registry::load_preset;
 use ca_prox::error::CaError;
 use ca_prox::runtime::backend::GramBackend;
+use ca_prox::session::Session;
 use ca_prox::solvers::traits::{AlgoKind, SolverConfig};
 
 /// `data/<name>` overrides the synthetic generator — the path real users
@@ -43,15 +44,17 @@ fn shipped_config_file_parses_and_runs() {
     .unwrap();
     let mut spec = RunSpec::from_toml(&text).unwrap();
     assert_eq!(spec.dataset, "covtype");
-    assert_eq!(spec.p, 128);
-    assert_eq!(spec.solver.k, 32);
-    spec.solver.validate().unwrap();
+    assert_eq!(spec.topology.p, 128);
+    assert_eq!(spec.solve.k, 32);
+    spec.solve.validate().unwrap();
+    spec.topology.validate().unwrap();
     // Shrink for test runtime, then actually execute it.
     spec.scale_n = Some(1000);
-    spec.p = 4;
-    spec.solver = spec.solver.clone().with_max_iters(8);
-    let ds = load_preset(&spec.dataset, spec.scale_n, spec.solver.seed).unwrap();
-    let out = coordinator::run(&ds, &spec.solver, spec.p, &spec.machine, spec.algo).unwrap();
+    spec.topology.p = 4;
+    spec.solve = spec.solve.clone().with_max_iters(8);
+    let ds = load_preset(&spec.dataset, spec.scale_n, spec.solve.seed).unwrap();
+    let mut session = Session::build(&ds, spec.topology).unwrap();
+    let out = session.solve(&spec.solve).unwrap();
     assert_eq!(out.iterations, 8);
 }
 
