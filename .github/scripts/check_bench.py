@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Validate `BENCH {json}` lines (schema v1) and bundle them into one file.
+
+Usage: check_bench.py OUT.json LOG [LOG ...]
+
+Every line starting with "BENCH " in the input logs must parse as JSON
+and carry the schema v1 keys emitted by `benchkit::Timing::to_json`
+(see EXPERIMENTS.md): schema == 1, name (str), n (int >= 0), and finite
+numbers median_s / mean_s / stddev_s / min_s. Each log must contribute
+at least one line. On success the collected objects are written to
+OUT.json as a JSON array (the per-PR perf-trajectory artifact); any
+malformed line fails the job with a pointer to it.
+"""
+
+import json
+import math
+import sys
+
+REQUIRED = {
+    "schema": int,
+    "name": str,
+    "n": int,
+    "median_s": (int, float),
+    "mean_s": (int, float),
+    "stddev_s": (int, float),
+    "min_s": (int, float),
+}
+
+
+def fail(msg):
+    print(f"check_bench: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def validate(obj, where):
+    for key, typ in REQUIRED.items():
+        if key not in obj:
+            fail(f"{where}: missing key '{key}': {obj}")
+        val = obj[key]
+        # bool is an int subclass in Python; a true/false n or schema is
+        # malformed output, not a count.
+        if isinstance(val, bool) or not isinstance(val, typ):
+            fail(f"{where}: key '{key}' has wrong type {type(val).__name__}: {obj}")
+    if obj["schema"] != 1:
+        fail(f"{where}: unsupported schema {obj['schema']} (expected 1)")
+    if obj["n"] < 0:
+        fail(f"{where}: negative sample count: {obj}")
+    for key in ("median_s", "mean_s", "stddev_s", "min_s"):
+        if not math.isfinite(obj[key]):
+            fail(f"{where}: non-finite {key}: {obj}")
+
+
+def main(argv):
+    if len(argv) < 3:
+        fail("usage: check_bench.py OUT.json LOG [LOG ...]")
+    out_path, logs = argv[1], argv[2:]
+    collected = []
+    for path in logs:
+        per_file = 0
+        with open(path, encoding="utf-8") as fh:
+            for lineno, line in enumerate(fh, 1):
+                if not line.startswith("BENCH "):
+                    continue
+                where = f"{path}:{lineno}"
+                try:
+                    obj = json.loads(line[len("BENCH "):])
+                except json.JSONDecodeError as e:
+                    fail(f"{where}: unparseable BENCH line ({e}): {line.rstrip()}")
+                if not isinstance(obj, dict):
+                    fail(f"{where}: BENCH payload is not an object: {line.rstrip()}")
+                validate(obj, where)
+                obj["source"] = path
+                collected.append(obj)
+                per_file += 1
+        if per_file == 0:
+            fail(f"{path}: no BENCH lines found (bench ran without emitting?)")
+        print(f"check_bench: {path}: {per_file} BENCH line(s) OK")
+    with open(out_path, "w", encoding="utf-8") as fh:
+        json.dump(collected, fh, indent=2)
+        fh.write("\n")
+    print(f"check_bench: wrote {len(collected)} entries to {out_path}")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

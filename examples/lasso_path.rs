@@ -3,9 +3,12 @@
 //! §II motivates (subset selection + regression in one solver).
 //!
 //! This is the workload the session API exists for: one
-//! [`Session`] plans the cluster once (sharding, Lipschitz estimate),
+//! [`Grid`] plans the cluster once (sharding, Lipschitz estimate),
 //! then every λ-step reuses the plan, warm-starts from the previous
-//! solution, and pulls its ground truth from the per-λ reference cache.
+//! solution, and pulls its ground truth from the shared per-(λ, budget)
+//! reference cache. (The path is sequential by nature — each λ
+//! warm-starts from the last — so it runs on one session rather than
+//! the parallel sweep executor.)
 //!
 //! ```bash
 //! cargo run --release --example lasso_path
@@ -13,8 +16,9 @@
 
 use ca_prox::comm::trace::Phase;
 use ca_prox::datasets::registry::load_preset;
+use ca_prox::grid::Grid;
 use ca_prox::prox::objective::{relative_solution_error, sparsity};
-use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::session::{SolveSpec, Topology};
 use ca_prox::solvers::traits::AlgoKind;
 
 fn main() -> ca_prox::Result<()> {
@@ -26,11 +30,13 @@ fn main() -> ca_prox::Result<()> {
         "lambda", "nonzeros", "objective", "rel_err", "iters", "setup flops"
     );
 
-    // Plan once for a simulated 16-node cluster.
-    let mut session = Session::build(&ds, Topology::new(16))?;
+    // Plan once for a simulated 16-node cluster, on a grid whose cache
+    // any further topology could share.
+    let grid = Grid::new(&ds);
+    let mut session = grid.session(Topology::new(16))?;
     let mut warm: Option<Vec<f64>> = None;
     for &lambda in &[0.5, 0.2, 0.1, 0.05, 0.01, 0.001] {
-        let w_op = session.reference_solution(lambda, 1e-8, 100_000)?.to_vec();
+        let w_op = session.reference_solution(lambda, 1e-8, 100_000)?;
         let mut spec = SolveSpec::default()
             .with_algo(AlgoKind::Spnm)
             .with_lambda(lambda)
@@ -56,9 +62,13 @@ fn main() -> ca_prox::Result<()> {
         warm = Some(out.w);
     }
     println!("\nlarger λ → sparser model (subset selection); smaller λ → better fit");
+    let stats = grid.cache_stats();
     println!(
-        "one plan served {} solves — only the first paid the setup (power method + sharding)",
-        session.solves()
+        "one plan served {} solves — setup paid once (lipschitz computes={}, \
+         reference solves={}, all shared through the grid's plan cache)",
+        session.solves(),
+        stats.lipschitz_computes,
+        stats.reference_computes
     );
     Ok(())
 }

@@ -8,18 +8,24 @@
 //!  D. sampling with vs without replacement;
 //!  E. machine model sensitivity — on a zero-latency fabric the CA
 //!     advantage disappears (negative control).
+//!
+//! Every session here hangs off one [`Grid`], so the whole study pays
+//! the Lipschitz setup once no matter how many (P, collective, machine)
+//! variants it spins up.
 
 use ca_prox::benchkit::{header, table};
 use ca_prox::cluster::shard::{PartitionStrategy, ShardedDataset};
 use ca_prox::comm::collectives::AllReduceAlgo;
 use ca_prox::comm::costmodel::MachineModel;
 use ca_prox::datasets::registry::load_preset;
+use ca_prox::grid::Grid;
 use ca_prox::sampling::SamplingMode;
-use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::session::{SolveSpec, Topology};
 
 fn main() {
     header("Ablations", "design-choice studies backing DESIGN.md");
     let ds = load_preset("covtype", Some(20_000), 42).unwrap();
+    let grid = Grid::new(&ds);
     let base = SolveSpec::default()
         .with_lambda(0.01)
         .with_sample_fraction(0.05)
@@ -27,15 +33,15 @@ fn main() {
         .with_max_iters(64)
         .with_seed(7);
 
-    // ---- A: collective algorithm (plan-time → one session each) ----
+    // ---- A: collective algorithm (plan-time → one session each, all on
+    // the shared grid cache) ----
     println!("\n[A] all-reduce algorithm (CA-SFISTA k=32, modeled seconds)");
     let mut rows = Vec::new();
     for &p in &[8usize, 64, 512] {
         let mut cells = Vec::new();
-        for algo in [AllReduceAlgo::BinomialTree, AllReduceAlgo::RecursiveDoubling, AllReduceAlgo::Ring]
-        {
-            let mut session =
-                Session::build(&ds, Topology::new(p).with_allreduce(algo)).unwrap();
+        use AllReduceAlgo::{BinomialTree, RecursiveDoubling, Ring};
+        for algo in [BinomialTree, RecursiveDoubling, Ring] {
+            let mut session = grid.session(Topology::new(p).with_allreduce(algo)).unwrap();
             let out = session.solve(&base).unwrap();
             cells.push(format!("{:.5}", out.modeled_seconds));
         }
@@ -46,11 +52,16 @@ fn main() {
         table(&["tree".into(), "recursive-doubling".into(), "ring".into()], &rows)
     );
     println!("ring pays 2(P−1) latency per round: hopeless at large P even with k-stepping");
+    // Nine sessions, one Lipschitz estimate; the three collectives at
+    // each P also share one shard layout.
+    let stats = grid.cache_stats();
+    assert_eq!(stats.lipschitz_computes, 1, "collective choice must not re-pay setup");
+    assert_eq!(stats.shard_builds, 3, "one layout per P, shared by the collectives");
 
     // ---- B: gradient evaluation point (solve-time → shared session) ----
     println!("\n[B] gradient point: paper-literal (stale iterate) vs textbook (momentum point)");
     use ca_prox::solvers::traits::GradientAt;
-    let mut session8 = Session::build(&ds, Topology::new(8)).unwrap();
+    let mut session8 = grid.session(Topology::new(8)).unwrap();
     let mut rows = Vec::new();
     for (label, ga, iters) in [
         ("textbook,  T=3000", GradientAt::Momentum, 3000usize),
@@ -107,8 +118,7 @@ fn main() {
     println!("\n[E] machine sensitivity: CA speedup at P=256, k=32");
     let mut rows = Vec::new();
     for m in [MachineModel::comet(), MachineModel::ethernet(), MachineModel::zero_latency()] {
-        let mut session =
-            Session::build(&ds, Topology::new(256).with_machine(m)).unwrap();
+        let mut session = grid.session(Topology::new(256).with_machine(m)).unwrap();
         let c = session.solve(&base.clone().with_k(1)).unwrap();
         let ca = session.solve(&base.clone()).unwrap();
         rows.push((
@@ -124,5 +134,8 @@ fn main() {
     );
     println!("without latency there is nothing to avoid — the CA advantage is a latency effect");
 
-    println!("\nablations OK");
+    // The three machine variants share P=256's single shard layout.
+    let stats = grid.cache_stats();
+    assert_eq!(stats.lipschitz_computes, 1, "the whole study paid setup once");
+    println!("\nablations OK (lipschitz computed once, {} shard layouts)", stats.shard_builds);
 }

@@ -9,39 +9,34 @@
 
 use ca_prox::benchkit::header;
 use ca_prox::datasets::registry::{load_preset, preset};
-use ca_prox::metrics::report::{SpeedupCell, SpeedupTable};
-use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::grid::{Grid, SweepSpec};
+use ca_prox::session::{SolveSpec, Topology};
 use ca_prox::solvers::traits::AlgoKind;
 
 /// One dataset's (P, k) sweep; shared with fig5 via copy — the sweep is
 /// the experiment definition, kept inline so each figure is standalone.
-/// One session per P: the baseline and every k share one plan.
+/// One [`Grid`] per dataset: every (P, k) cell shares one plan cache, so
+/// the whole grid pays the Lipschitz setup exactly once.
 fn sweep(algo: AlgoKind, name: &str, scale: Option<usize>, b: f64, ps: &[usize], ks: &[usize]) {
     let ds = load_preset(name, scale, 42).unwrap();
     let lambda = preset(name).unwrap().lambda;
     let iters = 64;
-    let mut tbl = SpeedupTable::new(&format!("{name} (b={b}, T={iters})"));
-    for &p in ps {
-        let spec = SolveSpec::default()
-            .with_algo(algo)
-            .with_lambda(lambda)
-            .with_sample_fraction(b)
-            .with_q(5)
-            .with_max_iters(iters)
-            .with_seed(7);
-        let mut session = Session::build(&ds, Topology::new(p)).unwrap();
-        let base = session.solve(&spec.clone().with_k(1)).unwrap();
-        for &k in ks {
-            let ca = session.solve(&spec.clone().with_k(k)).unwrap();
-            tbl.push(SpeedupCell {
-                p,
-                k,
-                baseline_seconds: base.modeled_seconds,
-                ca_seconds: ca.modeled_seconds,
-            });
-        }
-    }
+    let base = SolveSpec::default()
+        .with_algo(algo)
+        .with_lambda(lambda)
+        .with_sample_fraction(b)
+        .with_q(5)
+        .with_max_iters(iters)
+        .with_seed(7);
+    let grid = Grid::new(&ds);
+    let spec = SweepSpec::new(ps.iter().map(|&p| Topology::new(p)).collect(), base)
+        .with_ks(ks.to_vec())
+        .with_baseline_k(1);
+    let result = grid.sweep(&spec).unwrap();
+    let tbl = result.speedup_table(&format!("{name} (b={b}, T={iters})"), 1);
     println!("{}", tbl.render());
+    let stats = grid.cache_stats();
+    assert_eq!(stats.lipschitz_computes, 1, "{name}: one Lipschitz estimate per grid");
     // Shape: speedup non-decreasing in k at the largest P, and > 1 there.
     let pmax = *ps.last().unwrap();
     let at_pmax: Vec<f64> =

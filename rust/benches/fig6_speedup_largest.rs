@@ -6,7 +6,8 @@
 
 use ca_prox::benchkit::{header, table};
 use ca_prox::datasets::registry::{load_preset, preset};
-use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::grid::{Grid, SweepSpec};
+use ca_prox::session::{SolveSpec, Topology};
 use ca_prox::solvers::traits::AlgoKind;
 
 fn main() {
@@ -23,9 +24,11 @@ fn main() {
     ] {
         let ds = load_preset(name, scale, 42).unwrap();
         let lambda = preset(name).unwrap().lambda;
-        // One session per dataset: all 14 (algo, k) runs share one plan.
-        let mut session = Session::build(&ds, Topology::new(p)).unwrap();
-        let spec = SolveSpec::default()
+        // One Grid per dataset: the two algorithms' sweeps (14 cells)
+        // share one plan cache — sharding and the Lipschitz estimate are
+        // paid exactly once.
+        let grid = Grid::new(&ds);
+        let base = SolveSpec::default()
             .with_lambda(lambda)
             .with_sample_fraction(b)
             .with_q(5)
@@ -34,17 +37,31 @@ fn main() {
         let mut rows = Vec::new();
         let mut last_fista = 0.0;
         for algo in [AlgoKind::Sfista, AlgoKind::Spnm] {
-            let base = session.solve(&spec.clone().with_algo(algo).with_k(1)).unwrap();
-            let mut cells = Vec::new();
-            for &k in &ks {
-                let ca = session.solve(&spec.clone().with_algo(algo).with_k(k)).unwrap();
-                cells.push(format!("{:.2}x", base.modeled_seconds / ca.modeled_seconds));
-            }
+            let spec = SweepSpec::new(
+                vec![Topology::new(p)],
+                base.clone().with_algo(algo),
+            )
+            .with_ks(ks.to_vec())
+            .with_baseline_k(1);
+            let result = grid.sweep(&spec).unwrap();
+            let baseline = result.find(p, 1, b, lambda).unwrap().output.modeled_seconds;
+            let cells: Vec<String> = ks
+                .iter()
+                .map(|&k| {
+                    let ca = result.find(p, k, b, lambda).unwrap().output.modeled_seconds;
+                    format!("{:.2}x", baseline / ca)
+                })
+                .collect();
             if algo == AlgoKind::Sfista {
-                last_fista = base.modeled_seconds;
+                last_fista = baseline;
             }
-            rows.push((format!("CA-{:?}", algo), cells));
+            rows.push((format!("CA-{algo:?}"), cells));
         }
+        assert_eq!(
+            grid.cache_stats().lipschitz_computes,
+            1,
+            "{name}: both algorithms share one Lipschitz estimate"
+        );
         println!("--- {name} at P={p} (T={iters}, SFISTA baseline {last_fista:.4}s) ---");
         println!(
             "{}",

@@ -12,7 +12,8 @@ use ca_prox::benchkit::{header, table};
 use ca_prox::comm::costmodel::MachineModel;
 use ca_prox::comm::trace::Phase;
 use ca_prox::datasets::registry::{load_preset, preset};
-use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::grid::{Grid, SweepSpec};
+use ca_prox::session::{SolveSpec, Topology};
 use ca_prox::solvers::traits::AlgoKind;
 
 fn main() {
@@ -42,35 +43,42 @@ fn main() {
         let machine = MachineModel::custom(gamma_eff, comet.alpha, comet.beta);
         let ds = load_preset(name, scale, 42).unwrap();
         let lambda = preset(name).unwrap().lambda;
-        let spec = SolveSpec::default()
+        let base = SolveSpec::default()
             .with_lambda(lambda)
             .with_sample_fraction(b)
             .with_q(5)
             .with_max_iters(100)
             .with_seed(7);
         println!("--- {name} (b={b}) ---");
+        // One Grid per dataset: every (P, algo, k) cell shares the plan
+        // cache, so the whole figure charges the Lipschitz setup once.
+        let grid = Grid::new(&ds);
+        let topologies: Vec<Topology> =
+            ps.iter().map(|&p| Topology::new(p).with_machine(machine)).collect();
+        let mut by_algo = Vec::new();
+        for algo in [AlgoKind::Sfista, AlgoKind::Spnm] {
+            let spec = SweepSpec::new(topologies.clone(), base.clone().with_algo(algo))
+                .with_ks(vec![1, k]);
+            by_algo.push(grid.sweep(&spec).unwrap());
+        }
+        assert_eq!(grid.cache_stats().lipschitz_computes, 1, "{name}: one setup per figure");
         let mut rows = Vec::new();
         let mut ca_fista_times = Vec::new();
         let mut classical_fista_times = Vec::new();
         for &p in &ps {
-            // One session per (dataset, P): the four (algo, k) runs
-            // share one plan and one Lipschitz estimate.
-            let mut session =
-                Session::build(&ds, Topology::new(p).with_machine(machine)).unwrap();
             let mut cells = Vec::new();
-            for (algo, kk) in [
-                (AlgoKind::Sfista, 1usize),
-                (AlgoKind::Sfista, k),
-                (AlgoKind::Spnm, 1),
-                (AlgoKind::Spnm, k),
-            ] {
-                let out = session.solve(&spec.clone().with_algo(algo).with_k(kk)).unwrap();
-                cells.push(format!("{:.5}", out.modeled_seconds));
-                if algo == AlgoKind::Sfista {
+            for (sweep_idx, kk) in [(0usize, 1usize), (0, k), (1, 1), (1, k)] {
+                let cell = by_algo[sweep_idx].find(p, kk, b, lambda).unwrap();
+                cells.push(format!("{:.5}", cell.output.modeled_seconds));
+                if sweep_idx == 0 {
                     if kk == 1 {
-                        classical_fista_times.push(out.modeled_seconds);
+                        classical_fista_times.push(cell.output.modeled_seconds);
                     } else {
-                        ca_fista_times.push((p, out.modeled_seconds, out.trace.phase(Phase::Collective)));
+                        ca_fista_times.push((
+                            p,
+                            cell.output.modeled_seconds,
+                            cell.output.trace.phase(Phase::Collective),
+                        ));
                     }
                 }
             }
@@ -91,7 +99,7 @@ fn main() {
             // Bandwidth-bound check at P = 1024: words·β exceeds msgs·α
             // for the CA variant — the effect the paper added this point
             // to show.
-            let (_, _, coll) = &ca_fista_times.last().unwrap().clone();
+            let (_, _, coll) = ca_fista_times.last().unwrap();
             let bw = machine.beta * coll.words;
             let lat = machine.alpha * coll.messages;
             println!(

@@ -12,6 +12,7 @@ use ca_prox::comm::costmodel::MachineModel;
 use ca_prox::comm::trace::CostTrace;
 use ca_prox::coordinator::state::IterState;
 use ca_prox::datasets::registry::load_preset;
+use ca_prox::grid::{Grid, SweepSpec};
 use ca_prox::matrix::dense::DenseMatrix;
 use ca_prox::matrix::gemm;
 use ca_prox::matrix::ops::{
@@ -24,7 +25,45 @@ use ca_prox::solvers::traits::{AlgoKind, GradientAt, SolverConfig};
 use ca_prox::util::rng::Rng;
 use std::path::Path;
 
+/// CI smoke slice (`cargo bench --bench hotpath -- --quick`): one tiny
+/// kernel timing plus one Grid sweep cell, each leaving a `BENCH {json}`
+/// line — enough for the bench-smoke job to validate the schema and
+/// collect a per-PR artifact in seconds instead of minutes.
+fn quick_mode() {
+    header("hot path microbenchmarks (quick)", "CI smoke: one kernel + one grid sweep");
+    let ds = load_preset("smoke", Some(600), 42).unwrap();
+    let d = ds.d();
+    let mut rng = Rng::new(1);
+    let idx: Vec<usize> = rng.sample_without_replacement(ds.n(), 128);
+    let inv_m = 1.0 / idx.len() as f64;
+    let mut g = vec![0.0; d * d];
+    let mut r = vec![0.0; d];
+    let t = bench("gram/native-csc (quick)", 1, 5, || {
+        g.iter_mut().for_each(|x| *x = 0.0);
+        r.iter_mut().for_each(|x| *x = 0.0);
+        sampled_gram_csc(&ds.x, &ds.y, &idx, inv_m, &mut g, &mut r).unwrap();
+    });
+    emit(&t);
+    let spec = SolveSpec::default()
+        .with_lambda(0.05)
+        .with_sample_fraction(0.5)
+        .with_k(4)
+        .with_max_iters(8)
+        .with_seed(1);
+    let t = bench("sweep/lasso-grid (quick)", 1, 3, || {
+        let grid = Grid::new(&ds);
+        let sweep = SweepSpec::new(vec![Topology::new(2)], spec.clone());
+        grid.sweep(&sweep).unwrap();
+    });
+    emit(&t);
+    println!("\nhotpath quick OK");
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "--quick") {
+        quick_mode();
+        return;
+    }
     header("hot path microbenchmarks", "real wall time (release build)");
     println!("gemm kernel: {}", gemm::select_kernel().name());
     let ds = load_preset("covtype", Some(50_000), 42).unwrap();
@@ -201,9 +240,29 @@ fn main() {
             }
         });
         emit(&t_session);
+        // The Grid executor runs the same 6 λ-cells on the shared plan
+        // cache with a thread per core and no warm starts (cells are
+        // independent); at fixed T the per-iteration work is
+        // iterate-independent, so the delta vs `lasso-session` measures
+        // the parallel executor, and vs `lasso-legacy` the full
+        // amortization + parallelism win.
+        let t_grid = bench("sweep/lasso-grid (6 λ, shared cache, parallel cells)", 1, 5, || {
+            let grid = Grid::new(&ds);
+            let sweep = SweepSpec::new(
+                vec![Topology::new(p)],
+                SolveSpec::from_config(&mk_cfg(0.5), AlgoKind::Sfista),
+            )
+            .with_lambdas(lambdas.to_vec());
+            grid.sweep(&sweep).unwrap();
+        });
+        emit(&t_grid);
         println!(
             "sweep/session-vs-legacy speedup (6 λ on covtype 50k): {:.2}x",
             t_legacy.median() / t_session.median()
+        );
+        println!(
+            "sweep/grid-vs-legacy speedup (6 λ on covtype 50k): {:.2}x",
+            t_legacy.median() / t_grid.median()
         );
     }
     println!("\nhotpath OK");

@@ -81,7 +81,9 @@ fn main() {
         "{}",
         table(&["msgs/iter".into(), "log2(P)".into()], &rows)
     );
-    println!("fit msgs/iter = a + b·log2(P): slope={slope:.3} r²={r2:.6} (predict slope=1, r²=1)\n");
+    println!(
+        "fit msgs/iter = a + b·log2(P): slope={slope:.3} r²={r2:.6} (predict slope=1, r²=1)\n"
+    );
     assert!((slope - 1.0).abs() < 1e-9 && r2 > 0.999999);
 
     // ---- F(b): flops linear in sampling rate ----

@@ -114,7 +114,11 @@ impl ArgSpec {
             Flag { name: "seed", takes_value: true, help: "master seed" },
             Flag { name: "machine", takes_value: true, help: "comet|ethernet|zero-latency" },
             Flag { name: "allreduce", takes_value: true, help: "tree|rd|ring" },
-            Flag { name: "artifacts", takes_value: true, help: "artifact dir (enables PJRT backend)" },
+            Flag {
+                name: "artifacts",
+                takes_value: true,
+                help: "artifact dir (enables PJRT backend)",
+            },
             Flag { name: "record-every", takes_value: true, help: "history interval" },
             Flag { name: "json", takes_value: false, help: "emit JSON report" },
         ])

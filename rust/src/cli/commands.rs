@@ -5,7 +5,8 @@ use crate::config::parse::TomlValue;
 use crate::config::spec::RunSpec;
 use crate::datasets::registry;
 use crate::error::Result;
-use crate::metrics::report::{RunReport, SpeedupCell, SpeedupTable};
+use crate::grid::{BenchEmitter, Grid, NoopSweepObserver, SweepObserver, SweepSpec};
+use crate::metrics::report::RunReport;
 use crate::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
 use crate::session::Session;
 use crate::solvers::traits::SolverOutput;
@@ -78,7 +79,10 @@ pub fn cmd_run(argv: &[String]) -> Result<()> {
         println!("{}", report.to_json().to_string_pretty());
     } else {
         let o = &report.output;
-        println!("{}: dataset={} P={} k={} b={}", o.algorithm, report.dataset, report.p, report.k, report.b);
+        println!(
+            "{}: dataset={} P={} k={} b={}",
+            o.algorithm, report.dataset, report.p, report.k, report.b
+        );
         println!(
             "  iterations={} objective={:.6e} rel_error={:.3e} converged={}",
             o.iterations, o.final_objective, o.final_rel_error, o.converged
@@ -94,11 +98,16 @@ pub fn cmd_run(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// `ca-prox sweep` — (P, k) grid → speedup table (the shape of Figs. 4–6).
+/// `ca-prox sweep` — a (P, k, b, λ) grid on the [`Grid`] engine: one
+/// shared plan cache for every topology, cells run on a scoped thread
+/// pool, speedup table(s) per (b, λ) group (the shape of Figs. 4–6).
 pub fn cmd_sweep(argv: &[String]) -> Result<()> {
     let flags = ArgSpec::new(vec![
         Flag { name: "p-list", takes_value: true, help: "comma-separated P values" },
         Flag { name: "k-list", takes_value: true, help: "comma-separated k values" },
+        Flag { name: "b-list", takes_value: true, help: "comma-separated sampling rates" },
+        Flag { name: "lambda-list", takes_value: true, help: "comma-separated λ values" },
+        Flag { name: "threads", takes_value: true, help: "sweep worker threads (0 = auto)" },
         Flag { name: "config", takes_value: true, help: "TOML config file" },
         Flag { name: "dataset", takes_value: true, help: "preset name" },
         Flag { name: "scale-n", takes_value: true, help: "cap sample count" },
@@ -111,41 +120,66 @@ pub fn cmd_sweep(argv: &[String]) -> Result<()> {
         Flag { name: "machine", takes_value: true, help: "machine model" },
         Flag { name: "allreduce", takes_value: true, help: "collective algorithm" },
         Flag { name: "artifacts", takes_value: true, help: "artifact dir" },
+        Flag { name: "bench", takes_value: false, help: "emit a BENCH line per cell" },
         Flag { name: "json", takes_value: false, help: "emit JSON" },
     ]);
     let parsed = flags.parse(argv)?;
     let base = spec_from_args(&parsed)?;
     let p_list = parsed.get_usize_list("p-list")?.unwrap_or_else(|| vec![base.topology.p]);
     let k_list = parsed.get_usize_list("k-list")?.unwrap_or_else(|| vec![1, 8, 32]);
+    let b_list = parsed.get_f64_list("b-list")?.unwrap_or_else(|| vec![base.solve.b]);
+    let l_list = parsed.get_f64_list("lambda-list")?.unwrap_or_else(|| vec![base.solve.lambda]);
+    let threads = parsed.get_usize("threads")?.unwrap_or(0);
     // One dataset load and (if requested) one artifact-engine load for
-    // the whole grid; one session per P amortizes sharding, cluster
-    // spin-up and the Lipschitz estimate across every k.
+    // the whole grid; the Grid's shared plan cache amortizes sharding
+    // and the Lipschitz estimate across every (P, k, b, λ) cell.
     let ds = registry::load_preset(&base.dataset, base.scale_n, base.solve.seed)?;
     let engine = match &base.artifacts {
         Some(dir) => Some(PjrtEngine::load(std::path::Path::new(dir))?),
         None => None,
     };
     let backend = engine.as_ref().map(PjrtGramBackend::new);
-    let mut table = SpeedupTable::new(&base.dataset);
-    for &p in &p_list {
-        let topology = base.topology.with_p(p);
-        let mut session = match &backend {
-            Some(b) => Session::build_with_backend(&ds, topology, b)?,
-            None => Session::build(&ds, topology)?,
-        };
-        let baseline = session.solve(&base.solve.clone().with_k(1))?;
-        for &k in &k_list {
-            let out = session.solve(&base.solve.clone().with_k(k))?;
-            table.push(SpeedupCell {
-                p,
-                k,
-                baseline_seconds: baseline.modeled_seconds,
-                ca_seconds: out.modeled_seconds,
-            });
+    let grid = match &backend {
+        Some(b) => Grid::with_backend(&ds, b),
+        None => Grid::new(&ds),
+    };
+    let sweep = SweepSpec::new(
+        p_list.iter().map(|&p| base.topology.with_p(p)).collect(),
+        base.solve.clone(),
+    )
+    .with_ks(k_list)
+    .with_bs(b_list.clone())
+    .with_lambdas(l_list.clone())
+    .with_baseline_k(1)
+    .with_threads(threads);
+    let bench_emitter;
+    let observer: &dyn SweepObserver = if parsed.has("bench") {
+        bench_emitter = BenchEmitter::new(&format!("sweep/{}", base.dataset));
+        &bench_emitter
+    } else {
+        &NoopSweepObserver
+    };
+    let result = grid.sweep_observed(&sweep, observer)?;
+    // One (P, k) speedup table per (b, λ) group.
+    for &lambda in &l_list {
+        for &b in &b_list {
+            let label = format!("{} (b={b}, λ={lambda})", base.dataset);
+            println!("{}", result.speedup_table_for(&label, 1, b, lambda).render());
         }
     }
-    println!("{}", table.render());
-    println!("{}", table.to_csv());
+    println!("{}", result.to_csv());
+    let stats = grid.cache_stats();
+    println!(
+        "grid: {} cells on {} threads in {:.3}s wall; setup charged once \
+         (lipschitz computes={}, hits={}; shard builds={}, hits={})",
+        result.cells.len(),
+        result.threads,
+        result.wall_seconds,
+        stats.lipschitz_computes,
+        stats.lipschitz_hits,
+        stats.shard_builds,
+        stats.shard_hits
+    );
     Ok(())
 }
 
@@ -245,6 +279,15 @@ mod tests {
     fn run_json_smoke() {
         cmd_run(&sv(&[
             "--dataset", "smoke", "--scale-n", "200", "--p", "1", "--iters", "4", "--json",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn sweep_smoke_on_grid() {
+        cmd_sweep(&sv(&[
+            "--dataset", "smoke", "--scale-n", "300", "--p-list", "1,2", "--k-list", "4",
+            "--iters", "8", "--b", "0.5", "--threads", "2", "--bench",
         ]))
         .unwrap();
     }

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! ca-prox run      [--config FILE] [--dataset NAME] [--p N] [--k N] ...
-//! ca-prox sweep    --dataset NAME --p-list 1,2,4 --k-list 1,8,32 ...
+//! ca-prox sweep    --dataset NAME --p-list 1,2,4 --k-list 1,8,32 [--b-list ..] [--lambda-list ..] ...
 //! ca-prox datagen  --dataset NAME --scale-n N --out FILE
 //! ca-prox info     [--artifacts DIR]
 //! ca-prox help
@@ -49,7 +49,7 @@ pub fn help_text() -> String {
         "ca-prox — communication-avoiding proximal methods (CA-SFISTA / CA-SPNM)\n\n\
          USAGE: ca-prox <command> [flags]\n\nCOMMANDS:\n\
          \x20 run      run one solver configuration and print a report\n\
-         \x20 sweep    run a (P, k) grid and print a speedup table\n\
+         \x20 sweep    run a (P, k, b, λ) grid on the shared-plan Grid engine\n\
          \x20 datagen  generate a synthetic dataset file (LIBSVM format)\n\
          \x20 info     print presets, machine models and artifact status\n\
          \x20 help     this message\n\nRUN FLAGS:\n",

@@ -6,7 +6,10 @@ use crate::matrix::csc::CscMatrix;
 use crate::matrix::partition::{contiguous_by_nnz, greedy_by_nnz, ColumnPartition};
 
 /// Partitioning strategy for distributing columns.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// Ordered/hashable so it can key the shard-layout map in
+/// [`crate::grid::PlanCache`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum PartitionStrategy {
     /// Contiguous ranges balanced by nnz (MPI-scatter style).
     Contiguous,
@@ -87,7 +90,17 @@ mod tests {
     use crate::datasets::synthetic::{generate, SyntheticSpec};
 
     fn small_ds() -> Dataset {
-        generate(&SyntheticSpec { d: 6, n: 40, density: 0.5, noise: 0.01, model_sparsity: 0.5, condition: 1.0 }, 3)
+        generate(
+            &SyntheticSpec {
+                d: 6,
+                n: 40,
+                density: 0.5,
+                noise: 0.01,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
+            3,
+        )
     }
 
     #[test]

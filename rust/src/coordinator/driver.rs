@@ -80,7 +80,14 @@ mod tests {
 
     fn ds() -> Dataset {
         generate(
-            &SyntheticSpec { d: 8, n: 200, density: 1.0, noise: 0.05, model_sparsity: 0.5, condition: 1.0 },
+            &SyntheticSpec {
+                d: 8,
+                n: 200,
+                density: 1.0,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
             21,
         )
     }
@@ -149,8 +156,14 @@ mod tests {
         let ds = ds();
         let mut cfg = base_cfg();
         // Reference = solution from a long run.
-        let long = run(&ds, &cfg.clone().with_max_iters(400), 1, &MachineModel::comet(), AlgoKind::Sfista)
-            .unwrap();
+        let long = run(
+            &ds,
+            &cfg.clone().with_max_iters(400),
+            1,
+            &MachineModel::comet(),
+            AlgoKind::Sfista,
+        )
+        .unwrap();
         cfg.stopping =
             Stopping::RelError { tol: 0.5, w_op: long.w.clone(), max_iters: 400 };
         let out = run(&ds, &cfg, 2, &MachineModel::comet(), AlgoKind::Sfista).unwrap();

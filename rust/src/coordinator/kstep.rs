@@ -109,7 +109,14 @@ mod tests {
 
     fn setup(p: usize) -> (crate::datasets::Dataset, ShardedDataset, SimCluster) {
         let ds = generate(
-            &SyntheticSpec { d: 7, n: 60, density: 0.7, noise: 0.05, model_sparsity: 0.5, condition: 1.0 },
+            &SyntheticSpec {
+                d: 7,
+                n: 60,
+                density: 0.7,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
             11,
         );
         let sh = ShardedDataset::new(&ds, p, PartitionStrategy::Contiguous).unwrap();

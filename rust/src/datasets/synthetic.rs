@@ -111,7 +111,14 @@ mod tests {
 
     #[test]
     fn deterministic_generation() {
-        let spec = SyntheticSpec { d: 10, n: 50, density: 0.3, noise: 0.1, model_sparsity: 0.4, condition: 1.0 };
+        let spec = SyntheticSpec {
+            d: 10,
+            n: 50,
+            density: 0.3,
+            noise: 0.1,
+            model_sparsity: 0.4,
+            condition: 1.0,
+        };
         let a = generate(&spec, 7);
         let b = generate(&spec, 7);
         assert_eq!(a.x, b.x);
@@ -122,7 +129,14 @@ mod tests {
 
     #[test]
     fn density_approximately_honored() {
-        let spec = SyntheticSpec { d: 20, n: 2000, density: 0.25, noise: 0.0, model_sparsity: 0.5, condition: 1.0 };
+        let spec = SyntheticSpec {
+            d: 20,
+            n: 2000,
+            density: 0.25,
+            noise: 0.0,
+            model_sparsity: 0.5,
+            condition: 1.0,
+        };
         let ds = generate(&spec, 1);
         let dens = ds.density();
         assert!((dens - 0.25).abs() < 0.02, "density {dens}");
@@ -130,7 +144,14 @@ mod tests {
 
     #[test]
     fn dense_spec_fills_fully() {
-        let spec = SyntheticSpec { d: 8, n: 100, density: 1.0, noise: 0.0, model_sparsity: 1.0, condition: 1.0 };
+        let spec = SyntheticSpec {
+            d: 8,
+            n: 100,
+            density: 1.0,
+            noise: 0.0,
+            model_sparsity: 1.0,
+            condition: 1.0,
+        };
         let ds = generate(&spec, 1);
         // Gaussians are almost surely nonzero.
         assert_eq!(ds.x.nnz(), 8 * 100);
@@ -138,7 +159,14 @@ mod tests {
 
     #[test]
     fn labels_follow_planted_model_when_noiseless() {
-        let spec = SyntheticSpec { d: 6, n: 30, density: 1.0, noise: 0.0, model_sparsity: 0.5, condition: 1.0 };
+        let spec = SyntheticSpec {
+            d: 6,
+            n: 30,
+            density: 1.0,
+            noise: 0.0,
+            model_sparsity: 0.5,
+            condition: 1.0,
+        };
         let ds = generate(&spec, 3);
         let w_star = planted_model(&spec, 3);
         let pred = ds.x.matvec_t(&w_star).unwrap();
@@ -149,7 +177,14 @@ mod tests {
 
     #[test]
     fn planted_model_matches_generate_seeding() {
-        let spec = SyntheticSpec { d: 12, n: 5, density: 0.5, noise: 0.0, model_sparsity: 0.25, condition: 1.0 };
+        let spec = SyntheticSpec {
+            d: 12,
+            n: 5,
+            density: 0.5,
+            noise: 0.0,
+            model_sparsity: 0.25,
+            condition: 1.0,
+        };
         let w = planted_model(&spec, 9);
         assert_eq!(w.len(), 12);
         let nz = w.iter().filter(|&&v| v != 0.0).count();

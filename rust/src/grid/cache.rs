@@ -1,0 +1,304 @@
+//! The dataset-level plan cache shared by every [`crate::session::Session`]
+//! a [`super::Grid`] builds.
+//!
+//! Everything in here depends only on the **dataset** (plus a key that
+//! names the request), never on the topology a session was planned for:
+//!
+//! * the Lipschitz estimate `L̂ = λ_max(XXᵀ/n)` is keyed by the power
+//!   iteration's `seed` — it is computed from the full (unsharded) Gram,
+//!   so P, machine model and collective algorithm cannot change it;
+//! * reference solutions are keyed by `(λ bit pattern, max_iters)` with
+//!   a tolerance-aware rule *within* each key (see
+//!   [`PlanCache::reference_solution`]);
+//! * shard layouts are keyed by `(p, partition strategy)` — two
+//!   topologies that differ only in machine model or all-reduce
+//!   algorithm share one [`ShardedDataset`].
+//!
+//! Each map sits behind its own [`Mutex`] and values are handed out as
+//! [`Arc`] clones, so any number of sessions (including sessions running
+//! on different threads of a [`super::Grid::sweep`]) share one copy of
+//! the expensive state. Reference/shard misses are computed **while
+//! holding the lock** (serializing the first touch of a key but making
+//! the compute trivially exactly-once); the Lipschitz estimate —
+//! the one the sweep pre-warm runs for many seeds concurrently — is
+//! computed **outside** the lock with a double-checked insert, so
+//! distinct seeds estimate in parallel while a same-seed race still
+//! charges (and counts, per [`CacheStats`]) exactly one compute: the
+//! loser's duplicate work is discarded uncharged.
+
+use crate::cluster::shard::{PartitionStrategy, ShardedDataset};
+use crate::comm::costmodel::MachineModel;
+use crate::comm::trace::CostTrace;
+use crate::coordinator::driver::estimate_lipschitz;
+use crate::datasets::Dataset;
+use crate::error::Result;
+use crate::solvers::reference::solve_reference;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Snapshot of the cache's hit/compute counters — the observable that
+/// lets tests assert "Setup work ran exactly once per key" without
+/// inspecting traces.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lipschitz estimates computed (one full-Gram build + power method each).
+    pub lipschitz_computes: u64,
+    /// Lipschitz requests served from the cache.
+    pub lipschitz_hits: u64,
+    /// Reference solutions computed (one FISTA+restart run each).
+    pub reference_computes: u64,
+    /// Reference requests served from the cache.
+    pub reference_hits: u64,
+    /// Shard layouts built (one column gather over the dataset each).
+    pub shard_builds: u64,
+    /// Shard-layout requests served from the cache.
+    pub shard_hits: u64,
+}
+
+/// Dataset-level caches for the one-time work a solve plan needs.
+///
+/// A standalone [`crate::session::Session`] owns a private `PlanCache`
+/// (preserving the PR 2 per-session semantics bit-for-bit); a
+/// [`super::Grid`] shares one across every session it builds.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    /// seed → L̂. The estimate is deterministic per (dataset, seed).
+    lipschitz: Mutex<BTreeMap<u64, f64>>,
+    /// (λ bits, max_iters) → (certified tolerance, solution). The
+    /// certified tolerance is the *requested* tol when the solver
+    /// returned before the cap, +∞ when it exhausted the cap.
+    references: Mutex<BTreeMap<(u64, usize), (f64, Arc<Vec<f64>>)>>,
+    /// (p, partition) → shard layout.
+    shards: Mutex<BTreeMap<(usize, PartitionStrategy), Arc<ShardedDataset>>>,
+    lipschitz_computes: AtomicU64,
+    lipschitz_hits: AtomicU64,
+    reference_computes: AtomicU64,
+    reference_hits: AtomicU64,
+    shard_builds: AtomicU64,
+    shard_hits: AtomicU64,
+}
+
+/// Recover the guard from a poisoned mutex: the maps only ever hold
+/// fully-inserted entries (no partial writes survive a panic), so the
+/// data is still consistent and the safe move is to keep serving it.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+impl PlanCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            lipschitz_computes: self.lipschitz_computes.load(Ordering::Relaxed),
+            lipschitz_hits: self.lipschitz_hits.load(Ordering::Relaxed),
+            reference_computes: self.reference_computes.load(Ordering::Relaxed),
+            reference_hits: self.reference_hits.load(Ordering::Relaxed),
+            shard_builds: self.shard_builds.load(Ordering::Relaxed),
+            shard_hits: self.shard_hits.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Cached Lipschitz estimate for `seed`, computing — and charging the
+    /// Setup-phase cost to `trace`, exactly like the pre-grid session —
+    /// only on first use. Later requests (any topology, any machine
+    /// model: L̂ is computed from the full Gram and is
+    /// topology-independent) charge nothing.
+    pub fn lipschitz(
+        &self,
+        ds: &Dataset,
+        seed: u64,
+        machine: &MachineModel,
+        trace: &mut CostTrace,
+    ) -> Result<f64> {
+        if let Some(&l) = lock(&self.lipschitz).get(&seed) {
+            self.lipschitz_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(l);
+        }
+        // Compute outside the lock so distinct seeds can estimate
+        // concurrently (the sweep pre-warm does exactly that). The cost
+        // lands in a local trace that is merged into the caller's only
+        // if this thread wins the same-seed insert race, so Setup is
+        // charged — and counted — exactly once per (dataset, seed); a
+        // racing loser's duplicate work is discarded uncharged. Merging
+        // into the caller keeps bit-identical charging: every call site
+        // reaches here with an empty Setup phase.
+        let mut local = CostTrace::new();
+        let l = estimate_lipschitz(ds, seed, machine, &mut local)?;
+        let mut map = lock(&self.lipschitz);
+        if let Some(&cached) = map.get(&seed) {
+            self.lipschitz_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(cached);
+        }
+        map.insert(seed, l);
+        self.lipschitz_computes.fetch_add(1, Ordering::Relaxed);
+        trace.merge(&local);
+        Ok(l)
+    }
+
+    /// High-accuracy reference solution for `lambda`, cached per
+    /// **(λ, max_iters)** with a tolerance-aware rule within each key:
+    ///
+    /// * a cached solution is served only when it was certified at least
+    ///   as tightly as the requested `tol`;
+    /// * a tighter-tol request re-solves, and if the re-solve exhausts
+    ///   the cap (uncertified) it neither evicts a certified entry nor
+    ///   is ever served later — the certified entry is returned instead
+    ///   (at the same `max_iters` a re-solve cannot do better than the
+    ///   budget allows, so the best certified iterate is the answer);
+    /// * `max_iters` is part of the key, so a solution certified under a
+    ///   *small* budget can never mask a request made under a different
+    ///   budget — the PR 2 cache keyed by λ alone would happily serve a
+    ///   loosely-certified answer to a tighter request whose own re-solve
+    ///   got capped, with no way for the caller to notice.
+    pub fn reference_solution(
+        &self,
+        ds: &Dataset,
+        lambda: f64,
+        tol: f64,
+        max_iters: usize,
+    ) -> Result<Arc<Vec<f64>>> {
+        let key = (lambda.to_bits(), max_iters);
+        let mut map = lock(&self.references);
+        let stale = match map.get(&key) {
+            Some((cached_tol, _)) => *cached_tol > tol,
+            None => true,
+        };
+        if stale {
+            let (w_op, iters) = solve_reference(ds, lambda, tol, max_iters)?;
+            self.reference_computes.fetch_add(1, Ordering::Relaxed);
+            // Only a strictly-early return proves the gradient-mapping
+            // tolerance was met; convergence exactly at the cap is
+            // indistinguishable from exhaustion and treated as
+            // uncertified (worst case a redundant future re-solve).
+            let achieved = if iters < max_iters { tol } else { f64::INFINITY };
+            let better_cached = matches!(
+                map.get(&key),
+                Some((cached_tol, _)) if *cached_tol <= achieved
+            );
+            if !better_cached {
+                map.insert(key, (achieved, Arc::new(w_op)));
+            }
+        } else {
+            self.reference_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(Arc::clone(&map[&key].1))
+    }
+
+    /// Cached shard layout for `(p, strategy)`. Partitioning is
+    /// deterministic, so two topologies with the same processor count and
+    /// partition strategy (any machine model / collective) share one
+    /// layout.
+    pub fn sharded(
+        &self,
+        ds: &Dataset,
+        p: usize,
+        strategy: PartitionStrategy,
+    ) -> Result<Arc<ShardedDataset>> {
+        let key = (p, strategy);
+        let mut map = lock(&self.shards);
+        if let Some(sh) = map.get(&key) {
+            self.shard_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(sh));
+        }
+        let sh = Arc::new(ShardedDataset::new(ds, p, strategy)?);
+        map.insert(key, Arc::clone(&sh));
+        self.shard_builds.fetch_add(1, Ordering::Relaxed);
+        Ok(sh)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::trace::Phase;
+    use crate::datasets::synthetic::{generate, SyntheticSpec};
+
+    fn ds() -> Dataset {
+        generate(
+            &SyntheticSpec {
+                d: 6,
+                n: 80,
+                density: 1.0,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
+            5,
+        )
+    }
+
+    #[test]
+    fn lipschitz_computed_once_per_seed() {
+        let ds = ds();
+        let cache = PlanCache::new();
+        let machine = MachineModel::comet();
+        let mut t1 = CostTrace::new();
+        let l1 = cache.lipschitz(&ds, 3, &machine, &mut t1).unwrap();
+        assert!(t1.phase(Phase::Setup).flops > 0.0);
+        let mut t2 = CostTrace::new();
+        let l2 = cache.lipschitz(&ds, 3, &machine, &mut t2).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(t2.phase(Phase::Setup).flops, 0.0, "hit must charge nothing");
+        let mut t3 = CostTrace::new();
+        cache.lipschitz(&ds, 4, &machine, &mut t3).unwrap();
+        assert!(t3.phase(Phase::Setup).flops > 0.0, "new seed recomputes");
+        let s = cache.stats();
+        assert_eq!(s.lipschitz_computes, 2);
+        assert_eq!(s.lipschitz_hits, 1);
+    }
+
+    #[test]
+    fn shard_layout_shared_per_p_and_strategy() {
+        let ds = ds();
+        let cache = PlanCache::new();
+        let a = cache.sharded(&ds, 4, PartitionStrategy::Contiguous).unwrap();
+        let b = cache.sharded(&ds, 4, PartitionStrategy::Contiguous).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same key must share one layout");
+        let c = cache.sharded(&ds, 4, PartitionStrategy::Greedy).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "strategy is part of the key");
+        let d = cache.sharded(&ds, 2, PartitionStrategy::Contiguous).unwrap();
+        assert_eq!(d.p(), 2);
+        let s = cache.stats();
+        assert_eq!(s.shard_builds, 3);
+        assert_eq!(s.shard_hits, 1);
+    }
+
+    #[test]
+    fn reference_key_includes_max_iters() {
+        let ds = ds();
+        let cache = PlanCache::new();
+        let certified = cache.reference_solution(&ds, 0.05, 1e-6, 50_000).unwrap();
+        assert!(certified.iter().any(|&v| v != 0.0));
+        // Looser tol at the same budget: cache hit.
+        let looser = cache.reference_solution(&ds, 0.05, 1e-3, 50_000).unwrap();
+        assert!(Arc::ptr_eq(&certified, &looser));
+        // A different budget is a different key: the zero-budget request
+        // returns its own capped (all-zero) iterate instead of being
+        // masked by the certified answer from another budget.
+        let capped = cache.reference_solution(&ds, 0.05, 1e-12, 0).unwrap();
+        assert!(capped.iter().all(|&v| v == 0.0));
+        let s = cache.stats();
+        assert_eq!(s.reference_computes, 2);
+        assert_eq!(s.reference_hits, 1);
+    }
+
+    #[test]
+    fn uncertified_resolve_keeps_certified_entry() {
+        let ds = ds();
+        let cache = PlanCache::new();
+        // A very loose tolerance certifies within a tiny budget.
+        let loose = cache.reference_solution(&ds, 0.05, 1e3, 30).unwrap();
+        // A tighter request at the same budget re-solves; the re-solve
+        // cannot certify 1e-12 in 30 iterations, so the certified entry
+        // is kept and returned.
+        let tight = cache.reference_solution(&ds, 0.05, 1e-12, 30).unwrap();
+        assert!(Arc::ptr_eq(&loose, &tight));
+        assert_eq!(cache.stats().reference_computes, 2);
+    }
+}

@@ -1,0 +1,183 @@
+//! Grid engine: one shared plan for an entire (P, k, b, λ) sweep.
+//!
+//! The paper's headline results (Figs. 4–7) are grids over processor
+//! count, k-step depth, sampling rate and regularization. A
+//! [`crate::session::Session`] already amortizes the one-time work
+//! *within* one topology, but a P-sweep builds one session per P and so
+//! re-pays the O(d²·n) full-Gram Lipschitz setup at every grid point —
+//! even though L̂ depends only on (dataset, seed). A [`Grid`] closes that
+//! gap:
+//!
+//! ```text
+//! let grid = Grid::new(&ds);
+//! let mut s8  = grid.session(Topology::new(8))?;   // pays Setup once…
+//! let mut s64 = grid.session(Topology::new(64))?;  // …this one pays zero
+//! ```
+//!
+//! Every session built through [`Grid::session`] shares one
+//! [`PlanCache`] (via [`std::sync::Arc`]): seed-keyed Lipschitz
+//! estimates, tolerance-aware per-(λ, max_iters) reference solutions,
+//! and shard layouts keyed by (p, partition) so topologies that differ
+//! only in machine model or collective algorithm share one
+//! [`crate::cluster::shard::ShardedDataset`]. A full sweep therefore
+//! charges Setup flops exactly once per (dataset, seed) — asserted in
+//! `rust/tests/grid.rs`.
+//!
+//! On top of the shared plan, [`Grid::sweep`] expands a [`SweepSpec`]'s
+//! cartesian grid and runs the cells on a scoped thread pool with
+//! deterministic per-cell seeding and ordered result collection; outputs
+//! are bit-identical to running each cell on its own freshly-built
+//! session, sequentially (same test file). See [`sweep`] for the
+//! executor.
+
+pub mod cache;
+pub mod sweep;
+
+pub use cache::{CacheStats, PlanCache};
+pub use sweep::{BenchEmitter, NoopSweepObserver, SweepCell, SweepObserver, SweepResult, SweepSpec};
+
+use crate::datasets::Dataset;
+use crate::error::Result;
+use crate::runtime::backend::{GramBackend, NativeGramBackend};
+use crate::session::{Session, Topology};
+use std::sync::Arc;
+
+static NATIVE_BACKEND: NativeGramBackend = NativeGramBackend;
+
+/// A dataset plus the plan cache shared by every session built on it.
+///
+/// Cheap to construct — nothing is computed until a session (or the
+/// sweep executor) first needs it.
+pub struct Grid<'a> {
+    ds: &'a Dataset,
+    backend: &'a dyn GramBackend,
+    cache: Arc<PlanCache>,
+}
+
+impl<'a> Grid<'a> {
+    /// Grid over `ds` with the native Gram backend.
+    pub fn new(ds: &'a Dataset) -> Self {
+        Self::with_backend(ds, &NATIVE_BACKEND)
+    }
+
+    /// Grid with an explicit Gram backend (native or PJRT
+    /// artifact-based); all sessions built through [`Grid::session`]
+    /// inherit it.
+    pub fn with_backend(ds: &'a Dataset, backend: &'a dyn GramBackend) -> Self {
+        Grid { ds, backend, cache: Arc::new(PlanCache::new()) }
+    }
+
+    /// The dataset this grid plans for.
+    pub fn dataset(&self) -> &Dataset {
+        self.ds
+    }
+
+    /// Hit/compute counters of the shared plan cache.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Build a session for `topology` that shares this grid's plan
+    /// cache: its Lipschitz estimates, reference solutions and (when
+    /// `(p, partition)` matches) shard layout are common property of
+    /// every session on the grid.
+    pub fn session(&self, topology: Topology) -> Result<Session<'a>> {
+        Session::build_with_cache(self.ds, topology, self.backend, Arc::clone(&self.cache))
+    }
+
+    /// Shared-cache access to the high-accuracy reference solution —
+    /// identical to [`Session::reference_solution`] but usable without
+    /// building a session first.
+    pub fn reference_solution(
+        &self,
+        lambda: f64,
+        tol: f64,
+        max_iters: usize,
+    ) -> Result<Arc<Vec<f64>>> {
+        self.cache.reference_solution(self.ds, lambda, tol, max_iters)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::costmodel::MachineModel;
+    use crate::comm::trace::Phase;
+    use crate::datasets::synthetic::{generate, SyntheticSpec};
+    use crate::session::SolveSpec;
+
+    fn ds() -> Dataset {
+        generate(
+            &SyntheticSpec {
+                d: 8,
+                n: 200,
+                density: 1.0,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
+            21,
+        )
+    }
+
+    fn spec() -> SolveSpec {
+        SolveSpec::default()
+            .with_lambda(0.01)
+            .with_sample_fraction(0.5)
+            .with_max_iters(24)
+            .with_seed(3)
+    }
+
+    #[test]
+    fn sessions_share_setup_across_topologies() {
+        let ds = ds();
+        let grid = Grid::new(&ds);
+        let mut a = grid.session(Topology::new(2)).unwrap();
+        let first = a.solve(&spec()).unwrap();
+        assert!(first.trace.phase(Phase::Setup).flops > 0.0);
+        // A different topology on the same grid pays nothing.
+        let mut b = grid.session(Topology::new(4)).unwrap();
+        let second = b.solve(&spec()).unwrap();
+        assert_eq!(second.trace.phase(Phase::Setup).flops, 0.0);
+        let stats = grid.cache_stats();
+        assert_eq!(stats.lipschitz_computes, 1);
+        assert_eq!(stats.lipschitz_hits, 1);
+    }
+
+    #[test]
+    fn grid_sessions_match_standalone_sessions_bitwise() {
+        let ds = ds();
+        let grid = Grid::new(&ds);
+        for p in [1usize, 3] {
+            let mut shared = grid.session(Topology::new(p)).unwrap();
+            let mut standalone = Session::build(&ds, Topology::new(p)).unwrap();
+            let a = shared.solve(&spec().with_k(4)).unwrap();
+            let b = standalone.solve(&spec().with_k(4)).unwrap();
+            assert_eq!(a.w, b.w, "P={p}");
+            assert_eq!(a.final_objective.to_bits(), b.final_objective.to_bits());
+            assert_eq!(a.trace.collective_rounds, b.trace.collective_rounds);
+        }
+    }
+
+    #[test]
+    fn shard_layout_shared_when_only_machine_differs() {
+        let ds = ds();
+        let grid = Grid::new(&ds);
+        let _a = grid.session(Topology::new(4)).unwrap();
+        let _b = grid.session(Topology::new(4).with_machine(MachineModel::ethernet())).unwrap();
+        let stats = grid.cache_stats();
+        assert_eq!(stats.shard_builds, 1, "machine model is not part of the layout key");
+        assert_eq!(stats.shard_hits, 1);
+    }
+
+    #[test]
+    fn grid_reference_matches_session_reference() {
+        let ds = ds();
+        let grid = Grid::new(&ds);
+        let via_grid = grid.reference_solution(0.05, 1e-6, 50_000).unwrap();
+        let session = grid.session(Topology::new(1)).unwrap();
+        let via_session = session.reference_solution(0.05, 1e-6, 50_000).unwrap();
+        assert!(Arc::ptr_eq(&via_grid, &via_session), "one cache, one solution");
+        assert_eq!(grid.cache_stats().reference_computes, 1);
+    }
+}

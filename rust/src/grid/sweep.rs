@@ -1,0 +1,678 @@
+//! Parallel (P, k, b, λ) sweep executor on top of a shared plan.
+//!
+//! A [`SweepSpec`] names the grid axes (topologies × λ × b × k) plus a
+//! template [`SolveSpec`] for everything else. [`crate::grid::Grid::sweep`]
+//! expands the cartesian grid in a fixed row-major order (topology
+//! outermost, k innermost), pre-warms the shared [`super::PlanCache`] —
+//! charging the one-time Lipschitz/shard work exactly once, to the
+//! sweep's own Setup trace — and then runs the cells on a scoped thread
+//! pool (crossbeam, the same machinery [`crate::cluster::engine`] uses).
+//!
+//! Three properties the tests in `rust/tests/grid.rs` pin:
+//!
+//! * **Determinism.** Each cell's seed is a pure function of its grid
+//!   index (`base.seed + seed_stride · index`), never of thread
+//!   scheduling, and results are collected into expansion order.
+//! * **Bit-equality.** Because the cache is pre-warmed, every cell's
+//!   trace sees zero Setup-phase flops no matter which thread ran it
+//!   first, and each cell's output is bit-identical to solving the same
+//!   spec on a freshly-built standalone session.
+//! * **Amortization.** The whole sweep charges Setup flops once per
+//!   (dataset, seed) — in [`SweepResult::setup`] — instead of once per
+//!   grid point.
+
+use crate::benchkit::{emit, Timing};
+use crate::comm::trace::CostTrace;
+use crate::error::{CaError, Result};
+use crate::grid::Grid;
+use crate::metrics::report::{SpeedupCell, SpeedupTable};
+use crate::session::{Session, SolveSpec, Topology};
+use crate::solvers::traits::{validate_solver_params, SolverOutput, StepPolicy};
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One grid axis set + the solve template shared by every cell.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Topologies to plan (the P axis; machine/collective/partition
+    /// variants are welcome — layouts are shared where `(p, partition)`
+    /// agree).
+    pub topologies: Vec<Topology>,
+    /// k-step values.
+    pub ks: Vec<usize>,
+    /// Sampling rates b.
+    pub bs: Vec<f64>,
+    /// Regularization weights λ.
+    pub lambdas: Vec<f64>,
+    /// Template for everything the axes don't cover (algo, q, stopping,
+    /// step policy, seed, …). Its λ/b/k are overridden per cell.
+    pub base: SolveSpec,
+    /// If set, this k is prepended to `ks` when absent so every
+    /// (topology, b, λ) group contains a classical baseline;
+    /// [`SweepResult::speedup_table`] keys off it.
+    pub baseline_k: Option<usize>,
+    /// Per-cell seed = `base.seed + seed_stride · cell_index` (wrapping).
+    /// 0 (default) runs every cell on the master seed, the figure-bench
+    /// protocol; non-zero gives independent sampling per cell.
+    pub seed_stride: u64,
+    /// Worker threads (0 = one per available core, capped by the cell
+    /// count). 1 is fully sequential — bit-identical to any other value.
+    pub threads: usize,
+}
+
+impl SweepSpec {
+    /// Sweep over `topologies` with all other axes defaulting to the
+    /// template's own λ/b/k (a 1×1×1 grid per topology until widened).
+    pub fn new(topologies: Vec<Topology>, base: SolveSpec) -> Self {
+        SweepSpec {
+            topologies,
+            ks: vec![base.k],
+            bs: vec![base.b],
+            lambdas: vec![base.lambda],
+            base,
+            baseline_k: None,
+            seed_stride: 0,
+            threads: 0,
+        }
+    }
+
+    /// Set the k axis.
+    pub fn with_ks(mut self, ks: Vec<usize>) -> Self {
+        self.ks = ks;
+        self
+    }
+
+    /// Set the b axis.
+    pub fn with_bs(mut self, bs: Vec<f64>) -> Self {
+        self.bs = bs;
+        self
+    }
+
+    /// Set the λ axis.
+    pub fn with_lambdas(mut self, lambdas: Vec<f64>) -> Self {
+        self.lambdas = lambdas;
+        self
+    }
+
+    /// Ensure a classical baseline at `k` in every (topology, b, λ) group.
+    pub fn with_baseline_k(mut self, k: usize) -> Self {
+        self.baseline_k = Some(k);
+        self
+    }
+
+    /// Set the per-cell seed stride.
+    pub fn with_seed_stride(mut self, stride: u64) -> Self {
+        self.seed_stride = stride;
+        self
+    }
+
+    /// Set the worker thread count (0 = auto).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// The k axis with the baseline (if any) prepended when absent.
+    fn effective_ks(&self) -> Vec<usize> {
+        match self.baseline_k {
+            Some(k0) if !self.ks.contains(&k0) => {
+                let mut ks = Vec::with_capacity(self.ks.len() + 1);
+                ks.push(k0);
+                ks.extend_from_slice(&self.ks);
+                ks
+            }
+            _ => self.ks.clone(),
+        }
+    }
+
+    /// Validate the axes (cells re-validate their full spec at solve
+    /// time; this catches empty/out-of-range axes before any thread
+    /// spawns).
+    pub fn validate(&self) -> Result<()> {
+        if self.topologies.is_empty() {
+            return Err(CaError::Config("sweep needs at least one topology".into()));
+        }
+        for t in &self.topologies {
+            t.validate()?;
+        }
+        // ks may be empty when a baseline_k stands in for it.
+        if self.effective_ks().is_empty() || self.bs.is_empty() || self.lambdas.is_empty() {
+            return Err(CaError::Config("sweep axes (ks, bs, lambdas) must be non-empty".into()));
+        }
+        for &k in &self.effective_ks() {
+            for &b in &self.bs {
+                for &lambda in &self.lambdas {
+                    validate_solver_params(b, k, self.base.q, lambda, self.base.step)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the cartesian grid in deterministic row-major order:
+    /// topology outermost, then λ, then b, then k (baseline first).
+    fn expand(&self) -> Vec<CellPoint> {
+        let ks = self.effective_ks();
+        let mut points = Vec::with_capacity(
+            self.topologies.len() * self.lambdas.len() * self.bs.len() * ks.len(),
+        );
+        let mut index = 0usize;
+        for (topo, _) in self.topologies.iter().enumerate() {
+            for &lambda in &self.lambdas {
+                for &b in &self.bs {
+                    for &k in &ks {
+                        let seed = self
+                            .base
+                            .seed
+                            .wrapping_add(self.seed_stride.wrapping_mul(index as u64));
+                        points.push(CellPoint { index, topo, lambda, b, k, seed });
+                        index += 1;
+                    }
+                }
+            }
+        }
+        points
+    }
+}
+
+/// One expanded grid coordinate (pre-solve).
+#[derive(Clone, Copy, Debug)]
+struct CellPoint {
+    index: usize,
+    topo: usize,
+    lambda: f64,
+    b: f64,
+    k: usize,
+    seed: u64,
+}
+
+/// One solved grid cell: its coordinates plus the full solver output.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    /// Position in expansion order (stable across runs and thread counts).
+    pub index: usize,
+    /// Index into [`SweepSpec::topologies`].
+    pub topology_index: usize,
+    /// Processor count of the cell's topology.
+    pub p: usize,
+    /// k-step value.
+    pub k: usize,
+    /// Sampling rate.
+    pub b: f64,
+    /// Regularization weight.
+    pub lambda: f64,
+    /// The seed this cell actually ran with.
+    pub seed: u64,
+    /// Full solver output (iterates, trace, history).
+    pub output: SolverOutput,
+}
+
+/// Streaming hook for sweep progress. Fired from worker threads in
+/// completion order (not expansion order), so implementations must be
+/// `Sync`; the final [`SweepResult`] is always in expansion order
+/// regardless.
+pub trait SweepObserver: Sync {
+    /// Called once per cell as it completes.
+    fn on_cell(&self, _cell: &SweepCell) {}
+}
+
+/// The do-nothing observer behind [`Grid::sweep`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopSweepObserver;
+
+impl SweepObserver for NoopSweepObserver {}
+
+/// Emits one machine-readable `BENCH {json}` line per cell (schema v1
+/// via [`crate::benchkit::Timing::to_json`], one sample = the cell's
+/// modeled seconds) — the per-cell trajectory the CI bench-smoke job
+/// validates.
+#[derive(Clone, Debug)]
+pub struct BenchEmitter {
+    /// Prefix for the BENCH name, e.g. `sweep/covtype`.
+    pub prefix: String,
+}
+
+impl BenchEmitter {
+    /// Emitter with the given name prefix.
+    pub fn new(prefix: &str) -> Self {
+        BenchEmitter { prefix: prefix.to_string() }
+    }
+}
+
+impl SweepObserver for BenchEmitter {
+    fn on_cell(&self, cell: &SweepCell) {
+        let name = format!(
+            "{}/P={} k={} b={} lambda={} seed={}",
+            self.prefix, cell.p, cell.k, cell.b, cell.lambda, cell.seed
+        );
+        emit(&Timing { name, samples: vec![cell.output.modeled_seconds] });
+    }
+}
+
+/// All cells of a sweep (expansion order) plus the grid-level one-time
+/// costs.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    /// Solved cells in expansion order.
+    pub cells: Vec<SweepCell>,
+    /// One-time Setup work charged to the grid (Lipschitz estimates for
+    /// every distinct seed; shard layouts carry no modeled flops).
+    /// Per-cell traces contain zero Setup flops.
+    pub setup: CostTrace,
+    /// Worker threads actually used.
+    pub threads: usize,
+    /// Wall-clock seconds for the whole sweep.
+    pub wall_seconds: f64,
+}
+
+impl SweepResult {
+    /// The cell at `(p, k, b, λ)` (first match in expansion order;
+    /// floats compared by bit pattern).
+    pub fn find(&self, p: usize, k: usize, b: f64, lambda: f64) -> Option<&SweepCell> {
+        self.cells.iter().find(|c| {
+            c.p == p
+                && c.k == k
+                && c.b.to_bits() == b.to_bits()
+                && c.lambda.to_bits() == lambda.to_bits()
+        })
+    }
+
+    /// Speedup table over (P, k): every non-baseline cell is paired with
+    /// the baseline-k cell of the same (topology, b, λ) group — the
+    /// table the fig4–fig6 benches used to assemble by hand. Meaningful
+    /// as a 2-D table when the sweep has one (b, λ) pair; with more, use
+    /// [`SweepResult::speedup_table_for`] per group.
+    pub fn speedup_table(&self, dataset: &str, baseline_k: usize) -> SpeedupTable {
+        self.speedup_table_filtered(dataset, baseline_k, None)
+    }
+
+    /// [`SweepResult::speedup_table`] restricted to one (b, λ) group —
+    /// per-group tables without cloning any cell.
+    pub fn speedup_table_for(
+        &self,
+        dataset: &str,
+        baseline_k: usize,
+        b: f64,
+        lambda: f64,
+    ) -> SpeedupTable {
+        self.speedup_table_filtered(dataset, baseline_k, Some((b.to_bits(), lambda.to_bits())))
+    }
+
+    fn speedup_table_filtered(
+        &self,
+        dataset: &str,
+        baseline_k: usize,
+        group: Option<(u64, u64)>,
+    ) -> SpeedupTable {
+        let mut tbl = SpeedupTable::new(dataset);
+        for c in &self.cells {
+            if c.k == baseline_k {
+                continue;
+            }
+            if let Some((b_bits, l_bits)) = group {
+                if c.b.to_bits() != b_bits || c.lambda.to_bits() != l_bits {
+                    continue;
+                }
+            }
+            let base = self.cells.iter().find(|x| {
+                x.topology_index == c.topology_index
+                    && x.k == baseline_k
+                    && x.b.to_bits() == c.b.to_bits()
+                    && x.lambda.to_bits() == c.lambda.to_bits()
+            });
+            if let Some(base) = base {
+                tbl.push(SpeedupCell {
+                    p: c.p,
+                    k: c.k,
+                    baseline_seconds: base.output.modeled_seconds,
+                    ca_seconds: c.output.modeled_seconds,
+                });
+            }
+        }
+        tbl
+    }
+
+    /// CSV of every cell
+    /// (`p,k,b,lambda,seed,iterations,converged,modeled_seconds`).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("p,k,b,lambda,seed,iterations,converged,modeled_seconds\n");
+        for c in &self.cells {
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{},{},{},{:.9e}",
+                c.p,
+                c.k,
+                c.b,
+                c.lambda,
+                c.seed,
+                c.output.iterations,
+                c.output.converged,
+                c.output.modeled_seconds
+            );
+        }
+        s
+    }
+}
+
+impl<'a> Grid<'a> {
+    /// Run a full sweep; see [`Grid::sweep_observed`].
+    pub fn sweep(&self, spec: &SweepSpec) -> Result<SweepResult> {
+        self.sweep_observed(spec, &NoopSweepObserver)
+    }
+
+    /// Expand `spec`'s grid, pre-warm the shared plan cache (charging
+    /// the one-time work to the returned [`SweepResult::setup`] trace),
+    /// and solve every cell on a scoped thread pool. Results come back
+    /// in expansion order and are bit-identical to solving each cell on
+    /// its own standalone session, in any order, with any thread count.
+    pub fn sweep_observed(
+        &self,
+        spec: &SweepSpec,
+        observer: &dyn SweepObserver,
+    ) -> Result<SweepResult> {
+        spec.validate()?;
+        let wall_start = std::time::Instant::now();
+        let points = spec.expand();
+        let n = points.len();
+        let threads = if spec.threads == 0 {
+            std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+        } else {
+            spec.threads
+        }
+        .min(n)
+        .max(1);
+        let mut setup = CostTrace::new();
+
+        // Pre-warm: shard layouts for every distinct (p, partition) and
+        // the Lipschitz estimate for every distinct seed (only when the
+        // step policy needs one). Doing this up front — rather than
+        // letting the first cell that races to each key pay for it —
+        // keeps every per-cell trace free of Setup flops independent of
+        // scheduling. Flop counts are machine-independent; the setup
+        // trace's modeled seconds use the first topology's machine.
+        let mut layouts = BTreeSet::new();
+        for t in &spec.topologies {
+            if layouts.insert((t.p, t.partition)) {
+                self.cache.sharded(self.ds, t.p, t.partition)?;
+            }
+        }
+        if matches!(spec.base.step, StepPolicy::InverseLipschitz { .. }) {
+            // Sorted distinct seeds; per-seed traces are merged back in
+            // this order, so `setup` is deterministic no matter how the
+            // estimates are scheduled.
+            let seeds: Vec<u64> =
+                points.iter().map(|c| c.seed).collect::<BTreeSet<u64>>().into_iter().collect();
+            let machine = spec.topologies[0].machine;
+            if threads <= 1 || seeds.len() <= 1 {
+                for &seed in &seeds {
+                    self.cache.lipschitz(self.ds, seed, &machine, &mut setup)?;
+                }
+            } else {
+                // A seed-stride sweep has one distinct seed per cell;
+                // estimating them serially would idle the pool through
+                // the dominant O(d²·n) setup, so the pre-warm uses the
+                // same worker pattern as the cells themselves.
+                let slots: Vec<Mutex<Option<Result<CostTrace>>>> =
+                    seeds.iter().map(|_| Mutex::new(None)).collect();
+                let next = AtomicUsize::new(0);
+                crossbeam_utils::thread::scope(|scope| {
+                    for _ in 0..threads.min(seeds.len()) {
+                        scope.spawn(|_| loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= seeds.len() {
+                                break;
+                            }
+                            let mut local = CostTrace::new();
+                            let res = self
+                                .cache
+                                .lipschitz(self.ds, seeds[i], &machine, &mut local)
+                                .map(|_| local);
+                            *slots[i].lock().unwrap() = Some(res);
+                        });
+                    }
+                })
+                .map_err(|_| CaError::Cluster("lipschitz pre-warm thread panicked".into()))?;
+                for (i, slot) in slots.into_iter().enumerate() {
+                    match slot.into_inner().unwrap() {
+                        Some(Ok(local)) => setup.merge(&local),
+                        Some(Err(e)) => return Err(e),
+                        None => {
+                            return Err(CaError::Cluster(format!(
+                                "lipschitz pre-warm missed seed index {i}"
+                            )))
+                        }
+                    }
+                }
+            }
+        }
+
+        let slots: Vec<Mutex<Option<Result<SweepCell>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let run_cell = |sessions: &mut BTreeMap<usize, Session<'a>>,
+                        point: &CellPoint|
+         -> Result<SweepCell> {
+            let session = match sessions.entry(point.topo) {
+                std::collections::btree_map::Entry::Occupied(e) => e.into_mut(),
+                std::collections::btree_map::Entry::Vacant(e) => {
+                    e.insert(self.session(spec.topologies[point.topo])?)
+                }
+            };
+            let solve = spec
+                .base
+                .clone()
+                .with_lambda(point.lambda)
+                .with_sample_fraction(point.b)
+                .with_k(point.k)
+                .with_seed(point.seed);
+            let output = session.solve(&solve)?;
+            Ok(SweepCell {
+                index: point.index,
+                topology_index: point.topo,
+                p: spec.topologies[point.topo].p,
+                k: point.k,
+                b: point.b,
+                lambda: point.lambda,
+                seed: point.seed,
+                output,
+            })
+        };
+
+        if threads <= 1 {
+            let mut sessions = BTreeMap::new();
+            for point in &points {
+                let res = run_cell(&mut sessions, point);
+                if let Ok(cell) = &res {
+                    observer.on_cell(cell);
+                }
+                *slots[point.index].lock().unwrap() = Some(res);
+            }
+        } else {
+            let next = AtomicUsize::new(0);
+            crossbeam_utils::thread::scope(|scope| {
+                for _ in 0..threads {
+                    scope.spawn(|_| {
+                        let mut sessions = BTreeMap::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            let res = run_cell(&mut sessions, &points[i]);
+                            if let Ok(cell) = &res {
+                                observer.on_cell(cell);
+                            }
+                            *slots[i].lock().unwrap() = Some(res);
+                        }
+                    });
+                }
+            })
+            .map_err(|_| CaError::Cluster("sweep worker thread panicked".into()))?;
+        }
+
+        let mut cells = Vec::with_capacity(n);
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot.into_inner().unwrap() {
+                Some(Ok(cell)) => cells.push(cell),
+                Some(Err(e)) => return Err(e),
+                None => {
+                    return Err(CaError::Cluster(format!("sweep cell {i} produced no output")))
+                }
+            }
+        }
+        Ok(SweepResult {
+            cells,
+            setup,
+            threads,
+            wall_seconds: wall_start.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synthetic::{generate, SyntheticSpec};
+    use crate::datasets::Dataset;
+    use crate::solvers::traits::AlgoKind;
+
+    fn ds() -> Dataset {
+        generate(
+            &SyntheticSpec {
+                d: 8,
+                n: 200,
+                density: 1.0,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
+            21,
+        )
+    }
+
+    fn base() -> SolveSpec {
+        SolveSpec::default()
+            .with_lambda(0.01)
+            .with_sample_fraction(0.5)
+            .with_max_iters(16)
+            .with_seed(3)
+    }
+
+    #[test]
+    fn expansion_order_is_row_major_with_baseline_first() {
+        let spec = SweepSpec::new(vec![Topology::new(1), Topology::new(2)], base())
+            .with_ks(vec![4, 8])
+            .with_lambdas(vec![0.1, 0.01])
+            .with_baseline_k(1)
+            .with_seed_stride(10);
+        let points = spec.expand();
+        assert_eq!(points.len(), 2 * 2 * 3);
+        assert_eq!(points[0].k, 1, "baseline k prepended");
+        assert_eq!(points[1].k, 4);
+        assert_eq!(points[0].lambda, 0.1);
+        assert_eq!(points[3].lambda, 0.01, "λ advances after the k axis");
+        assert_eq!(points[6].topo, 1, "topology outermost");
+        for (i, pt) in points.iter().enumerate() {
+            assert_eq!(pt.index, i);
+            assert_eq!(pt.seed, 3 + 10 * i as u64, "seed is a pure function of index");
+        }
+    }
+
+    #[test]
+    fn sweep_collects_in_order_and_shares_setup() {
+        let ds = ds();
+        let grid = Grid::new(&ds);
+        let spec = SweepSpec::new(vec![Topology::new(1), Topology::new(2)], base())
+            .with_ks(vec![2, 4])
+            .with_threads(2);
+        let result = grid.sweep(&spec).unwrap();
+        assert_eq!(result.cells.len(), 4);
+        for (i, c) in result.cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+            assert_eq!(
+                c.output.trace.phase(crate::comm::trace::Phase::Setup).flops,
+                0.0,
+                "cell {i}: setup charged to the grid, not the cell"
+            );
+        }
+        assert!(result.setup.phase(crate::comm::trace::Phase::Setup).flops > 0.0);
+        assert_eq!(grid.cache_stats().lipschitz_computes, 1);
+    }
+
+    #[test]
+    fn speedup_table_pairs_baseline_per_group() {
+        let ds = ds();
+        let grid = Grid::new(&ds);
+        let spec = SweepSpec::new(vec![Topology::new(2), Topology::new(4)], base())
+            .with_ks(vec![4])
+            .with_baseline_k(1);
+        let result = grid.sweep(&spec).unwrap();
+        let tbl = result.speedup_table("synthetic", 1);
+        assert_eq!(tbl.cells.len(), 2, "one non-baseline cell per topology");
+        for cell in &tbl.cells {
+            assert_eq!(cell.k, 4);
+            assert!(cell.baseline_seconds > 0.0);
+            assert!(cell.speedup() > 1.0, "k=4 must beat k=1 at P={}", cell.p);
+        }
+        assert!(result.to_csv().lines().count() == 1 + result.cells.len());
+        assert!(result.find(4, 4, 0.5, 0.01).is_some());
+        assert!(result.find(3, 4, 0.5, 0.01).is_none());
+        // The per-group variant matches the full table on the only group
+        // present, and is empty for a group that never ran.
+        let group = result.speedup_table_for("synthetic", 1, 0.5, 0.01);
+        assert_eq!(group.cells.len(), tbl.cells.len());
+        assert!(result.speedup_table_for("synthetic", 1, 0.25, 0.01).cells.is_empty());
+    }
+
+    #[test]
+    fn empty_axes_rejected() {
+        assert!(SweepSpec::new(vec![], base()).validate().is_err());
+        let spec = SweepSpec::new(vec![Topology::new(1)], base()).with_ks(vec![]);
+        assert!(spec.validate().is_err());
+        // …but an empty ks axis is fine when the baseline stands in.
+        let spec = SweepSpec::new(vec![Topology::new(1)], base())
+            .with_ks(vec![])
+            .with_baseline_k(1);
+        spec.validate().unwrap();
+        assert_eq!(spec.expand().len(), 1);
+        let spec = SweepSpec::new(vec![Topology::new(1)], base()).with_bs(vec![2.0]);
+        assert!(spec.validate().is_err());
+        let spec = SweepSpec::new(vec![Topology::new(0)], base());
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn observer_sees_every_cell() {
+        use std::sync::Mutex as StdMutex;
+        struct Counter(StdMutex<Vec<usize>>);
+        impl SweepObserver for Counter {
+            fn on_cell(&self, cell: &SweepCell) {
+                self.0.lock().unwrap().push(cell.index);
+            }
+        }
+        let ds = ds();
+        let grid = Grid::new(&ds);
+        let spec = SweepSpec::new(vec![Topology::new(1)], base())
+            .with_ks(vec![1, 2, 4])
+            .with_threads(3);
+        let counter = Counter(StdMutex::new(Vec::new()));
+        let result = grid.sweep_observed(&spec, &counter).unwrap();
+        let mut seen = counter.0.into_inner().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2]);
+        assert_eq!(result.threads, 3);
+    }
+
+    #[test]
+    fn spnm_cells_run_too() {
+        let ds = ds();
+        let grid = Grid::new(&ds);
+        let spec =
+            SweepSpec::new(vec![Topology::new(2)], base().with_algo(AlgoKind::Spnm).with_q(2))
+                .with_ks(vec![1, 4]);
+        let result = grid.sweep(&spec).unwrap();
+        assert_eq!(result.cells.len(), 2);
+        assert!(result.cells[1].output.algorithm.contains("CA-SPNM"));
+    }
+}

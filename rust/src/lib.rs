@@ -17,9 +17,15 @@
 //! spin-up, cached Lipschitz estimate) and [`session::Session::solve`]
 //! runs any algorithm / k / b / λ / seed against the prepared plan, with
 //! warm starts for regularization-path sweeps and streaming
-//! [`session::Observer`]s for live convergence. The legacy free
-//! functions ([`coordinator::run`] and friends) survive as bit-identical
-//! shims over a fresh single-use session.
+//! [`session::Observer`]s for live convergence. For whole parameter
+//! grids — the shape of the paper's Figs. 4–7 — the [`grid`] engine
+//! shares one [`grid::PlanCache`] across every topology
+//! ([`grid::Grid::session`]) and runs the expanded (P, k, b, λ) grid on
+//! a scoped thread pool ([`grid::Grid::sweep`]) with deterministic
+//! per-cell seeding, so a full sweep pays the one-time setup exactly
+//! once per (dataset, seed). The legacy free functions
+//! ([`coordinator::run`] and friends) survive as bit-identical shims
+//! over a fresh single-use session.
 //!
 //! Everything rests on the substrate the paper depends on:
 //!
@@ -50,6 +56,7 @@ pub mod config;
 pub mod coordinator;
 pub mod datasets;
 pub mod error;
+pub mod grid;
 pub mod matrix;
 pub mod metrics;
 pub mod prox;
@@ -68,6 +75,7 @@ pub mod prelude {
     pub use crate::comm::trace::CostTrace;
     pub use crate::datasets::Dataset;
     pub use crate::error::{CaError, Result};
+    pub use crate::grid::{Grid, PlanCache, SweepResult, SweepSpec};
     pub use crate::matrix::csc::CscMatrix;
     pub use crate::matrix::dense::DenseMatrix;
     pub use crate::session::{Observer, Session, SolveSpec, Topology};

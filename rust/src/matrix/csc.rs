@@ -228,8 +228,9 @@ mod tests {
 
     #[test]
     fn duplicates_sum_and_zeros_drop() {
-        let m = CscMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (0, 0, 2.0), (1, 1, 5.0), (1, 1, -5.0)])
-            .unwrap();
+        let m =
+            CscMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (0, 0, 2.0), (1, 1, 5.0), (1, 1, -5.0)])
+                .unwrap();
         assert_eq!(m.nnz(), 1);
         assert_eq!(m.to_dense().get(0, 0), 3.0);
         assert_eq!(m.to_dense().get(1, 1), 0.0);
@@ -243,7 +244,8 @@ mod tests {
 
     #[test]
     fn dense_roundtrip() {
-        let d = DenseMatrix::from_fn(4, 5, |r, c| if (r + c) % 3 == 0 { (r + 1) as f64 } else { 0.0 });
+        let d =
+            DenseMatrix::from_fn(4, 5, |r, c| if (r + c) % 3 == 0 { (r + 1) as f64 } else { 0.0 });
         let s = CscMatrix::from_dense(&d);
         assert_eq!(s.to_dense(), d);
     }

@@ -91,7 +91,12 @@ impl Kernel for ScalarKernel {
             c32 += a3 * b2;
             c33 += a3 * b3;
         }
-        let acc = [[c00, c01, c02, c03], [c10, c11, c12, c13], [c20, c21, c22, c23], [c30, c31, c32, c33]];
+        let acc = [
+            [c00, c01, c02, c03],
+            [c10, c11, c12, c13],
+            [c20, c21, c22, c23],
+            [c30, c31, c32, c33],
+        ];
         for (i, row) in acc.iter().enumerate() {
             let out = &mut c[i * ldc..i * ldc + 4];
             for j in 0..4 {

@@ -178,7 +178,8 @@ pub fn syrk_acc(d: usize, k_dim: usize, alpha: f64, a: &[f64], c: &mut [f64]) {
 /// [`syrk_acc`] with an explicit kernel (tests / A-B benches).
 pub fn syrk_with(kern: &dyn Kernel, d: usize, k_dim: usize, alpha: f64, a: &[f64], c: &mut [f64]) {
     assert!(c.len() >= d * d, "syrk: C must be d×d");
-    blocked(kern, d, d, k_dim, alpha, a, k_dim, BOperand::TransposedA { a, lda: k_dim }, c, d, true);
+    let b = BOperand::TransposedA { a, lda: k_dim };
+    blocked(kern, d, d, k_dim, alpha, a, k_dim, b, c, d, true);
     for i in 0..d {
         for j in (i + 1)..d {
             c[j * d + i] = c[i * d + j];

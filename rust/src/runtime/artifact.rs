@@ -117,7 +117,14 @@ impl ArtifactManifest {
                 .and_then(Json::as_str)
                 .ok_or_else(|| CaError::Artifact("entry missing file".into()))?
                 .to_string();
-            entries.push(ArtifactEntry { kind, d: get("d"), m: get("m"), k: get("k"), q: get("q"), file });
+            entries.push(ArtifactEntry {
+                kind,
+                d: get("d"),
+                m: get("m"),
+                k: get("k"),
+                q: get("q"),
+                file,
+            });
         }
         Ok(ArtifactManifest { dir: dir.to_path_buf(), entries })
     }

@@ -57,7 +57,14 @@ mod tests {
     #[test]
     fn native_backend_matches_direct_kernel() {
         let ds = generate(
-            &SyntheticSpec { d: 5, n: 30, density: 0.6, noise: 0.0, model_sparsity: 0.5, condition: 1.0 },
+            &SyntheticSpec {
+                d: 5,
+                n: 30,
+                density: 0.6,
+                noise: 0.0,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
             1,
         );
         let sh = ShardedDataset::new(&ds, 2, PartitionStrategy::Contiguous).unwrap();

@@ -19,10 +19,16 @@
 //!   machine model, all-reduce algorithm, partition strategy.
 //! * **Solve time** ([`SolveSpec`], per [`Session::solve`]): algorithm,
 //!   λ, b, k, q, stopping, seed, step policy, warm start.
-//! * **Caches**: the Lipschitz estimate (keyed by seed; its Setup-phase
-//!   flops are charged only to the first solve that needs it) and
-//!   reference solutions (keyed by λ, see
-//!   [`Session::reference_solution`]).
+//! * **Caches**: all dataset-level state lives in a
+//!   [`crate::grid::PlanCache`] — the Lipschitz estimate (keyed by seed;
+//!   its Setup-phase flops are charged only to the first solve that
+//!   needs it), reference solutions (keyed by (λ, max_iters), see
+//!   [`Session::reference_solution`]) and the shard layout (keyed by
+//!   (p, partition)). A standalone session owns a private cache, so its
+//!   behaviour matches the original per-session caches bit-for-bit; a
+//!   [`crate::grid::Grid`] shares one cache across every session it
+//!   builds, amortizing the one-time work across a whole (P, k, b, λ)
+//!   sweep.
 //! * **Streaming**: [`Session::solve_observed`] drives an [`Observer`]
 //!   with live per-block and per-record events, replacing post-hoc
 //!   `record_every` polling; observers can request early stop.
@@ -42,17 +48,16 @@ pub use topology::Topology;
 use crate::cluster::engine::SimCluster;
 use crate::cluster::shard::ShardedDataset;
 use crate::comm::trace::{CostTrace, Phase};
-use crate::coordinator::driver::estimate_lipschitz;
 use crate::coordinator::kstep::compute_gram_stack;
 use crate::coordinator::state::IterState;
 use crate::datasets::Dataset;
 use crate::error::{CaError, Result};
+use crate::grid::{CacheStats, PlanCache};
 use crate::prox::objective::{relative_solution_error, LassoObjective};
 use crate::runtime::backend::{GramBackend, NativeGramBackend};
 use crate::sampling::SampleSchedule;
-use crate::solvers::reference::solve_reference;
 use crate::solvers::traits::{AlgoKind, HistoryPoint, SolverOutput, StepPolicy, Stopping};
-use std::collections::BTreeMap;
+use std::sync::Arc;
 
 static NATIVE_BACKEND: NativeGramBackend = NativeGramBackend;
 
@@ -63,13 +68,12 @@ pub struct Session<'a> {
     topology: Topology,
     backend: &'a dyn GramBackend,
     cluster: SimCluster,
-    sharded: ShardedDataset,
-    /// seed → L̂ = λ_max(XXᵀ/n). The power iteration is seeded from the
-    /// solve seed, so caching per seed keeps session solves bit-identical
-    /// to the legacy per-run estimation.
-    lipschitz_cache: BTreeMap<u64, f64>,
-    /// λ (bit pattern) → (tolerance it was solved to, reference solution).
-    reference_cache: BTreeMap<u64, (f64, Vec<f64>)>,
+    sharded: Arc<ShardedDataset>,
+    /// Dataset-level caches (Lipschitz estimates, reference solutions,
+    /// shard layouts). Private to this session unless it was built
+    /// through a [`crate::grid::Grid`], which shares one cache across
+    /// every session on the grid.
+    cache: Arc<PlanCache>,
     solves: usize,
 }
 
@@ -87,22 +91,27 @@ impl<'a> Session<'a> {
         topology: Topology,
         backend: &'a dyn GramBackend,
     ) -> Result<Self> {
+        Self::build_with_cache(ds, topology, backend, Arc::new(PlanCache::new()))
+    }
+
+    /// [`Session::build_with_backend`] against an explicit (usually
+    /// shared) [`PlanCache`] — the constructor behind
+    /// [`crate::grid::Grid::session`]. The shard layout is pulled from
+    /// (or inserted into) the cache, so sessions whose topologies agree
+    /// on `(p, partition)` share one [`ShardedDataset`].
+    pub fn build_with_cache(
+        ds: &'a Dataset,
+        topology: Topology,
+        backend: &'a dyn GramBackend,
+        cache: Arc<PlanCache>,
+    ) -> Result<Self> {
         topology.validate()?;
         if ds.d() == 0 || ds.n() == 0 {
             return Err(CaError::Dataset("empty dataset".into()));
         }
         let cluster = SimCluster::new(topology.p, topology.machine)?;
-        let sharded = ShardedDataset::new(ds, topology.p, topology.partition)?;
-        Ok(Session {
-            ds,
-            topology,
-            backend,
-            cluster,
-            sharded,
-            lipschitz_cache: BTreeMap::new(),
-            reference_cache: BTreeMap::new(),
-            solves: 0,
-        })
+        let sharded = cache.sharded(ds, topology.p, topology.partition)?;
+        Ok(Session { ds, topology, backend, cluster, sharded, cache, solves: 0 })
     }
 
     /// The dataset this session was planned for.
@@ -125,59 +134,36 @@ impl<'a> Session<'a> {
         self.solves
     }
 
+    /// Hit/compute counters of the plan cache behind this session (a
+    /// grid-shared cache reports grid-wide totals).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
     /// Cached Lipschitz estimate for `seed`, computing (and charging its
-    /// Setup-phase cost to `trace`) only on first use.
+    /// Setup-phase cost to `trace`) only on first use anywhere on the
+    /// plan cache.
     fn lipschitz(&mut self, seed: u64, trace: &mut CostTrace) -> Result<f64> {
-        if let Some(&l) = self.lipschitz_cache.get(&seed) {
-            return Ok(l);
-        }
-        let l = estimate_lipschitz(self.ds, seed, &self.topology.machine, trace)?;
-        self.lipschitz_cache.insert(seed, l);
-        Ok(l)
+        self.cache.lipschitz(self.ds, seed, &self.topology.machine, trace)
     }
 
     /// High-accuracy reference solution `w_op` for `lambda`, cached per
-    /// λ. A cached solution is reused only when it is known to have been
-    /// solved at least as tightly as the requested `tol`; asking for a
-    /// tighter tolerance re-runs the FISTA+restart reference solver. A
-    /// run that exhausts `max_iters` without certifying its tolerance is
-    /// cached as achieving nothing — it is re-solved on any future
-    /// request and can never evict a better-certified solution — so the
-    /// method always returns the best iterate the session has produced
-    /// for this λ (certified to `tol` whenever the iteration caps given
-    /// so far allowed it).
+    /// **(λ, max_iters)**. Within a key the cache is tolerance-aware: a
+    /// solution is served only when it was certified at least as tightly
+    /// as the requested `tol`, a tighter request re-runs the
+    /// FISTA+restart reference solver, and an uncertified (capped)
+    /// re-solve never evicts a certified entry. Keying by `max_iters`
+    /// means a request made under a different iteration budget always
+    /// gets its own honestly-labelled solve instead of an answer
+    /// certified under some other budget (see
+    /// [`PlanCache::reference_solution`]).
     pub fn reference_solution(
-        &mut self,
+        &self,
         lambda: f64,
         tol: f64,
         max_iters: usize,
-    ) -> Result<&[f64]> {
-        let key = lambda.to_bits();
-        let stale = match self.reference_cache.get(&key) {
-            Some((cached_tol, _)) => *cached_tol > tol,
-            None => true,
-        };
-        if stale {
-            let (w_op, iters) = solve_reference(self.ds, lambda, tol, max_iters)?;
-            // solve_reference returns the capped iterate without error
-            // when max_iters runs out; only a strictly-early return
-            // proves the gradient-mapping tolerance was met. A solve
-            // that converges exactly on the final allowed iteration is
-            // indistinguishable from cap exhaustion and is conservatively
-            // treated as uncertified — the cost is at worst a redundant
-            // re-solve, never a wrong ground truth.
-            let achieved = if iters < max_iters { tol } else { f64::INFINITY };
-            // Keep whichever entry is better certified — an uncertified
-            // re-solve must not replace a converged solution.
-            let better_cached = matches!(
-                self.reference_cache.get(&key),
-                Some((cached_tol, _)) if *cached_tol <= achieved
-            );
-            if !better_cached {
-                self.reference_cache.insert(key, (achieved, w_op));
-            }
-        }
-        Ok(self.reference_cache[&key].1.as_slice())
+    ) -> Result<Arc<Vec<f64>>> {
+        self.cache.reference_solution(self.ds, lambda, tol, max_iters)
     }
 
     /// Run one solve against the prepared plan.
@@ -429,32 +415,37 @@ mod tests {
     }
 
     #[test]
-    fn reference_solution_cached_per_lambda() {
+    fn reference_solution_cached_per_lambda_and_budget() {
         let ds = ds();
-        let mut session = Session::build(&ds, Topology::new(1)).unwrap();
+        let session = Session::build(&ds, Topology::new(1)).unwrap();
         let first = session.reference_solution(0.05, 1e-6, 50_000).unwrap().to_vec();
         assert!(first.iter().any(|&v| v != 0.0));
-        // An equal-or-looser request is a cache hit — with max_iters = 0
-        // a real re-run would return the all-zero starting vector.
-        let looser = session.reference_solution(0.05, 1e-3, 0).unwrap().to_vec();
+        // An equal-or-looser request at the same budget is a cache hit.
+        let looser = session.reference_solution(0.05, 1e-3, 50_000).unwrap().to_vec();
         assert_eq!(first, looser);
-        // A tighter request re-solves, but a capped (uncertified) re-run
-        // must not evict the converged solution already cached.
-        let tighter = session.reference_solution(0.05, 1e-12, 0).unwrap().to_vec();
-        assert_eq!(tighter, first);
+        assert_eq!(session.cache_stats().reference_computes, 1);
+        // A different budget is a different key: the zero-budget request
+        // returns its own capped (all-zero) iterate instead of being
+        // silently masked by the solution certified under another budget.
+        let capped = session.reference_solution(0.05, 1e-12, 0).unwrap();
+        assert!(capped.iter().all(|&v| v == 0.0));
+        assert_eq!(session.cache_stats().reference_computes, 2);
     }
 
     #[test]
     fn uncertified_reference_is_not_trusted_later() {
         let ds = ds();
-        let mut session = Session::build(&ds, Topology::new(1)).unwrap();
+        let session = Session::build(&ds, Topology::new(1)).unwrap();
         // max_iters = 0 exhausts the cap immediately: the all-zero
         // iterate is returned but cached as achieving nothing.
-        let capped = session.reference_solution(0.05, 1e-6, 0).unwrap().to_vec();
+        let capped = session.reference_solution(0.05, 1e-6, 0).unwrap();
         assert!(capped.iter().all(|&v| v == 0.0));
-        // The same request with a real budget re-solves instead of
-        // serving the uncertified zero vector from the cache.
-        let real = session.reference_solution(0.05, 1e-6, 50_000).unwrap().to_vec();
+        // The same request re-solves instead of serving the uncertified
+        // zero vector from the cache.
+        session.reference_solution(0.05, 1e-6, 0).unwrap();
+        assert_eq!(session.cache_stats().reference_computes, 2);
+        // A real budget is its own key and produces the real solution.
+        let real = session.reference_solution(0.05, 1e-6, 50_000).unwrap();
         assert!(real.iter().any(|&v| v != 0.0));
     }
 

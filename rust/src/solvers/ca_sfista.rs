@@ -33,7 +33,14 @@ mod tests {
     #[test]
     fn arithmetically_equal_to_classical() {
         let ds = generate(
-            &SyntheticSpec { d: 6, n: 100, density: 0.8, noise: 0.05, model_sparsity: 0.5, condition: 1.0 },
+            &SyntheticSpec {
+                d: 6,
+                n: 100,
+                density: 0.8,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
             4,
         );
         let cfg = SolverConfig::default()
@@ -58,7 +65,14 @@ mod tests {
     fn latency_drops_by_k_bandwidth_unchanged() {
         use crate::comm::trace::Phase;
         let ds = generate(
-            &SyntheticSpec { d: 6, n: 100, density: 0.8, noise: 0.05, model_sparsity: 0.5, condition: 1.0 },
+            &SyntheticSpec {
+                d: 6,
+                n: 100,
+                density: 0.8,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
             4,
         );
         let cfg = SolverConfig::default().with_sample_fraction(0.3).with_max_iters(32);

@@ -30,7 +30,14 @@ mod tests {
     #[test]
     fn arithmetically_equal_to_classical_spnm() {
         let ds = generate(
-            &SyntheticSpec { d: 6, n: 90, density: 0.7, noise: 0.05, model_sparsity: 0.5, condition: 1.0 },
+            &SyntheticSpec {
+                d: 6,
+                n: 90,
+                density: 0.7,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
             8,
         );
         let cfg = SolverConfig::default()
@@ -53,7 +60,14 @@ mod tests {
         // With warm start the inner solver continues from w; the sequence
         // should reach a lower objective than a single outer step could.
         let ds = generate(
-            &SyntheticSpec { d: 8, n: 200, density: 1.0, noise: 0.02, model_sparsity: 0.4, condition: 1.0 },
+            &SyntheticSpec {
+                d: 8,
+                n: 200,
+                density: 1.0,
+                noise: 0.02,
+                model_sparsity: 0.4,
+                condition: 1.0,
+            },
             10,
         );
         let cfg =

@@ -45,7 +45,14 @@ mod tests {
     #[test]
     fn fista_beats_ista_at_equal_iterations() {
         let ds = generate(
-            &SyntheticSpec { d: 10, n: 300, density: 1.0, noise: 0.05, model_sparsity: 0.4, condition: 1.0 },
+            &SyntheticSpec {
+                d: 10,
+                n: 300,
+                density: 1.0,
+                noise: 0.05,
+                model_sparsity: 0.4,
+                condition: 1.0,
+            },
             13,
         );
         let l = lipschitz_constant(&ds).unwrap();
@@ -64,7 +71,14 @@ mod tests {
     #[test]
     fn fista_converges_on_wellconditioned_problem() {
         let ds = generate(
-            &SyntheticSpec { d: 5, n: 200, density: 1.0, noise: 0.0, model_sparsity: 1.0, condition: 1.0 },
+            &SyntheticSpec {
+                d: 5,
+                n: 200,
+                density: 1.0,
+                noise: 0.0,
+                model_sparsity: 1.0,
+                condition: 1.0,
+            },
             3,
         );
         let l = lipschitz_constant(&ds).unwrap();

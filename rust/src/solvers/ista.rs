@@ -42,7 +42,14 @@ mod tests {
     #[test]
     fn ista_monotonically_decreases_objective() {
         let ds = generate(
-            &SyntheticSpec { d: 6, n: 120, density: 1.0, noise: 0.05, model_sparsity: 0.5, condition: 1.0 },
+            &SyntheticSpec {
+                d: 6,
+                n: 120,
+                density: 1.0,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
             5,
         );
         let l = lipschitz_constant(&ds).unwrap();
@@ -55,7 +62,14 @@ mod tests {
     #[test]
     fn large_lambda_gives_zero_solution() {
         let ds = generate(
-            &SyntheticSpec { d: 4, n: 50, density: 1.0, noise: 0.0, model_sparsity: 0.5, condition: 1.0 },
+            &SyntheticSpec {
+                d: 4,
+                n: 50,
+                density: 1.0,
+                noise: 0.0,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
             9,
         );
         let l = lipschitz_constant(&ds).unwrap();

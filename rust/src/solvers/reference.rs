@@ -80,7 +80,14 @@ mod tests {
 
     fn ds() -> Dataset {
         generate(
-            &SyntheticSpec { d: 8, n: 400, density: 1.0, noise: 0.01, model_sparsity: 0.4, condition: 1.0 },
+            &SyntheticSpec {
+                d: 8,
+                n: 400,
+                density: 1.0,
+                noise: 0.01,
+                model_sparsity: 0.4,
+                condition: 1.0,
+            },
             17,
         )
     }
@@ -108,8 +115,14 @@ mod tests {
 
     #[test]
     fn reference_recovers_planted_support_at_small_lambda() {
-        let spec =
-            SyntheticSpec { d: 8, n: 400, density: 1.0, noise: 0.01, model_sparsity: 0.4, condition: 1.0 };
+        let spec = SyntheticSpec {
+            d: 8,
+            n: 400,
+            density: 1.0,
+            noise: 0.01,
+            model_sparsity: 0.4,
+            condition: 1.0,
+        };
         let ds = generate(&spec, 17);
         let w_star = planted_model(&spec, 17);
         let (w_op, _) = solve_reference(&ds, 1e-3, 1e-8, 20_000).unwrap();

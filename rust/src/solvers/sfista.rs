@@ -28,7 +28,14 @@ mod tests {
     #[test]
     fn k_forced_to_one() {
         let ds = generate(
-            &SyntheticSpec { d: 5, n: 80, density: 1.0, noise: 0.05, model_sparsity: 0.5, condition: 1.0 },
+            &SyntheticSpec {
+                d: 5,
+                n: 80,
+                density: 1.0,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
             2,
         );
         let cfg = SolverConfig::default()

@@ -28,7 +28,14 @@ mod tests {
     #[test]
     fn spnm_runs_and_charges_inner_solve() {
         let ds = generate(
-            &SyntheticSpec { d: 5, n: 80, density: 1.0, noise: 0.05, model_sparsity: 0.5, condition: 1.0 },
+            &SyntheticSpec {
+                d: 5,
+                n: 80,
+                density: 1.0,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
             2,
         );
         let cfg = SolverConfig::default().with_sample_fraction(0.5).with_max_iters(10).with_q(4);

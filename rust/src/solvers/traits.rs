@@ -347,7 +347,12 @@ mod tests {
             modeled_seconds: 2.0,
             wall_seconds: 0.1,
             trace: Default::default(),
-            history: vec![HistoryPoint { iter: 0, objective: 2.0, rel_error: 1.0, modeled_seconds: 0.0 }],
+            history: vec![HistoryPoint {
+                iter: 0,
+                objective: 2.0,
+                rel_error: 1.0,
+                modeled_seconds: 0.0,
+            }],
         };
         let j = out.to_json();
         assert_eq!(j.get("iterations").unwrap().as_usize(), Some(10));

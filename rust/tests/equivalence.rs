@@ -71,7 +71,14 @@ fn ca_spnm_equals_classical_across_k() {
 #[test]
 fn equivalence_holds_on_sparse_data() {
     let ds = generate(
-        &SyntheticSpec { d: 20, n: 400, density: 0.15, noise: 0.05, model_sparsity: 0.3, condition: 1.0 },
+        &SyntheticSpec {
+            d: 20,
+            n: 400,
+            density: 0.15,
+            noise: 0.05,
+            model_sparsity: 0.3,
+            condition: 1.0,
+        },
         77,
     );
     let machine = MachineModel::comet();

@@ -1,0 +1,261 @@
+//! Grid engine contract (ISSUE 3 acceptance criteria):
+//!
+//! * a multi-topology sweep charges Lipschitz/reference Setup work
+//!   exactly once per (dataset, seed) — the whole point of the shared
+//!   [`PlanCache`];
+//! * sweep outputs are bit-identical to running every cell sequentially
+//!   on its own freshly-built, cache-free session;
+//! * per-cell seeding is a pure function of the cell's grid index, so it
+//!   is deterministic under any thread-pool size;
+//! * the reference-solution cache keys by (λ, max_iters) and never
+//!   serves an answer certified under a different iteration budget.
+
+use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::comm::trace::Phase;
+use ca_prox::datasets::registry::load_preset;
+use ca_prox::grid::{Grid, SweepSpec};
+use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::solvers::traits::{AlgoKind, SolverOutput};
+
+fn base_spec() -> SolveSpec {
+    SolveSpec::default()
+        .with_lambda(0.05)
+        .with_sample_fraction(0.3)
+        .with_k(4)
+        .with_max_iters(24)
+        .with_seed(9)
+        .with_history(6)
+}
+
+fn assert_outputs_bit_identical(a: &SolverOutput, b: &SolverOutput, ctx: &str) {
+    assert_eq!(a.w, b.w, "{ctx}: iterates differ");
+    assert_eq!(
+        a.final_objective.to_bits(),
+        b.final_objective.to_bits(),
+        "{ctx}: objectives differ"
+    );
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iteration counts differ");
+    assert_eq!(a.algorithm, b.algorithm, "{ctx}: display names differ");
+    assert_eq!(
+        a.trace.collective_rounds, b.trace.collective_rounds,
+        "{ctx}: collective rounds differ"
+    );
+    assert_eq!(
+        a.modeled_seconds.to_bits(),
+        b.modeled_seconds.to_bits(),
+        "{ctx}: modeled steady-state seconds differ"
+    );
+    assert_eq!(a.history.len(), b.history.len(), "{ctx}: history lengths differ");
+    for (x, y) in a.history.iter().zip(&b.history) {
+        assert_eq!(x.iter, y.iter, "{ctx}: history iters differ");
+        assert_eq!(x.objective.to_bits(), y.objective.to_bits(), "{ctx}: history objectives");
+        assert_eq!(
+            x.modeled_seconds.to_bits(),
+            y.modeled_seconds.to_bits(),
+            "{ctx}: history modeled_seconds"
+        );
+    }
+}
+
+/// The acceptance-criterion grid: 3 topologies × 2 λ (×2 k with the
+/// baseline) charges Lipschitz Setup flops exactly once, in the sweep's
+/// own setup trace; every per-cell trace carries zero Setup flops; and
+/// every cell is bit-identical to a fresh standalone session solving the
+/// same spec.
+#[test]
+fn three_topology_two_lambda_sweep_pays_setup_once_and_matches_sequential() {
+    let ds = load_preset("smoke", Some(400), 3).unwrap();
+    let grid = Grid::new(&ds);
+    let topologies = vec![
+        Topology::new(1),
+        Topology::new(2),
+        Topology::new(4).with_machine(MachineModel::ethernet()),
+    ];
+    let spec = SweepSpec::new(topologies.clone(), base_spec())
+        .with_ks(vec![4])
+        .with_lambdas(vec![0.05, 0.01])
+        .with_baseline_k(1)
+        .with_threads(4);
+    let result = grid.sweep(&spec).unwrap();
+    assert_eq!(result.cells.len(), 3 * 2 * 2);
+
+    // Setup charged exactly once per (dataset, seed): one compute, in
+    // the grid-level trace, zero in every cell.
+    let stats = grid.cache_stats();
+    assert_eq!(stats.lipschitz_computes, 1, "one seed → one Lipschitz estimate");
+    assert!(result.setup.phase(Phase::Setup).flops > 0.0, "grid trace carries the setup");
+    for cell in &result.cells {
+        assert_eq!(
+            cell.output.trace.phase(Phase::Setup).flops,
+            0.0,
+            "cell {} must not re-pay setup",
+            cell.index
+        );
+    }
+    // The grid-level charge equals what a single standalone session
+    // charges its first solve — once, not once per topology.
+    let mut standalone = Session::build(&ds, Topology::new(1)).unwrap();
+    let first = standalone.solve(&base_spec()).unwrap();
+    assert_eq!(
+        result.setup.phase(Phase::Setup).flops,
+        first.trace.phase(Phase::Setup).flops,
+        "grid setup == one session's setup"
+    );
+
+    // Bit-equality vs sequential per-session execution, in expansion
+    // order: fresh session per cell, no sharing at all.
+    for cell in &result.cells {
+        let mut session = Session::build(&ds, topologies[cell.topology_index]).unwrap();
+        let sequential = session
+            .solve(
+                &base_spec()
+                    .with_lambda(cell.lambda)
+                    .with_sample_fraction(cell.b)
+                    .with_k(cell.k)
+                    .with_seed(cell.seed),
+            )
+            .unwrap();
+        assert_outputs_bit_identical(
+            &cell.output,
+            &sequential,
+            &format!("cell {} (P={} k={} λ={})", cell.index, cell.p, cell.k, cell.lambda),
+        );
+    }
+}
+
+/// Two sessions built through one grid share the plan: the second
+/// topology sees zero Setup flops, and layouts are reused when
+/// (p, partition) match even if the machine model differs.
+#[test]
+fn plan_cache_shared_across_topologies() {
+    let ds = load_preset("smoke", Some(400), 5).unwrap();
+    let grid = Grid::new(&ds);
+    let mut a = grid.session(Topology::new(2)).unwrap();
+    let first = a.solve(&base_spec()).unwrap();
+    assert!(first.trace.phase(Phase::Setup).flops > 0.0, "first solve pays");
+    let mut b = grid.session(Topology::new(5)).unwrap();
+    let second = b.solve(&base_spec()).unwrap();
+    assert_eq!(second.trace.phase(Phase::Setup).flops, 0.0, "second topology rides free");
+    // Same (p, partition), different machine → one shard layout.
+    let _c = grid.session(Topology::new(5).with_machine(MachineModel::zero_latency())).unwrap();
+    let stats = grid.cache_stats();
+    assert_eq!(stats.lipschitz_computes, 1);
+    assert_eq!(stats.lipschitz_hits, 1);
+    assert_eq!(stats.shard_builds, 2, "P=2 and P=5");
+    assert_eq!(stats.shard_hits, 1, "the machine variant reused P=5's layout");
+    // A distinct seed is new setup work — once, again.
+    let third = a.solve(&base_spec().with_seed(77)).unwrap();
+    assert!(third.trace.phase(Phase::Setup).flops > 0.0);
+    let fourth = b.solve(&base_spec().with_seed(77)).unwrap();
+    assert_eq!(fourth.trace.phase(Phase::Setup).flops, 0.0);
+    assert_eq!(grid.cache_stats().lipschitz_computes, 2, "exactly once per (dataset, seed)");
+}
+
+/// Per-cell seeds depend only on the cell's grid index; outputs are
+/// bit-identical between a sequential run (threads = 1) and a parallel
+/// run (threads = 4), and across repeated parallel runs.
+#[test]
+fn per_cell_seeding_is_deterministic_under_the_thread_pool() {
+    let ds = load_preset("smoke", Some(400), 3).unwrap();
+    let make = |threads: usize| {
+        SweepSpec::new(vec![Topology::new(1), Topology::new(3)], base_spec())
+            .with_ks(vec![1, 4, 8])
+            .with_seed_stride(1000)
+            .with_threads(threads)
+    };
+    let grid = Grid::new(&ds);
+    let sequential = grid.sweep(&make(1)).unwrap();
+    // A fresh grid for the parallel run: no shared state between the two.
+    let parallel = Grid::new(&ds).sweep(&make(4)).unwrap();
+    let repeat = Grid::new(&ds).sweep(&make(4)).unwrap();
+    assert_eq!(sequential.cells.len(), 6);
+    for ((s, p), r) in sequential.cells.iter().zip(&parallel.cells).zip(&repeat.cells) {
+        assert_eq!(s.index, p.index);
+        assert_eq!(s.seed, 9 + 1000 * s.index as u64, "seed is index-determined");
+        assert_eq!(p.seed, s.seed, "thread count cannot change seeds");
+        assert_eq!(r.seed, s.seed);
+        assert_outputs_bit_identical(&p.output, &s.output, &format!("cell {}", s.index));
+        assert_outputs_bit_identical(&r.output, &s.output, &format!("repeat cell {}", s.index));
+    }
+    // The stride produced distinct seeds, so setup ran once per seed —
+    // still shared across both topologies.
+    assert_eq!(grid.cache_stats().lipschitz_computes, 6, "six seeds in the sequential run");
+}
+
+/// Reference solutions: certified-at-a-small-budget answers must not
+/// mask requests made under a different budget (the PR 2 cache keyed by
+/// λ alone did exactly that), and the grid exposes the same cache the
+/// sessions use.
+#[test]
+fn reference_cache_keys_by_lambda_and_budget() {
+    let ds = load_preset("smoke", Some(300), 3).unwrap();
+    let grid = Grid::new(&ds);
+    let session = grid.session(Topology::new(1)).unwrap();
+    // Certify λ = 0.05 to 1e-6 under a generous budget.
+    let certified = session.reference_solution(0.05, 1e-6, 50_000).unwrap();
+    assert!(certified.iter().any(|&v| v != 0.0));
+    // Same budget, looser tol: cache hit (tolerance-aware rule).
+    let looser = session.reference_solution(0.05, 1e-3, 50_000).unwrap();
+    assert_eq!(&*certified, &*looser);
+    assert_eq!(grid.cache_stats().reference_computes, 1);
+    // Different budget: own key, own (here: capped, all-zero) solve —
+    // NOT the certified answer from the other budget.
+    let capped = session.reference_solution(0.05, 1e-12, 0).unwrap();
+    assert!(capped.iter().all(|&v| v == 0.0));
+    assert_eq!(grid.cache_stats().reference_computes, 2);
+    // The grid-level accessor shares the same cache: no recompute.
+    let via_grid = grid.reference_solution(0.05, 1e-6, 50_000).unwrap();
+    assert_eq!(&*via_grid, &*certified);
+    assert_eq!(grid.cache_stats().reference_computes, 2);
+    assert_eq!(grid.cache_stats().reference_hits, 2);
+}
+
+/// The executor's speedup table reproduces what the figure benches used
+/// to hand-roll: per-(topology, b, λ) baselines, CA cells paired
+/// against them.
+#[test]
+fn sweep_speedup_table_matches_manual_pairing() {
+    let ds = load_preset("smoke", Some(400), 3).unwrap();
+    let grid = Grid::new(&ds);
+    let spec = SweepSpec::new(vec![Topology::new(2), Topology::new(4)], base_spec())
+        .with_ks(vec![4, 8])
+        .with_baseline_k(1)
+        .with_threads(2);
+    let result = grid.sweep(&spec).unwrap();
+    let tbl = result.speedup_table("smoke", 1);
+    assert_eq!(tbl.cells.len(), 4, "2 topologies × 2 non-baseline k");
+    for cell in &tbl.cells {
+        let baseline = result.find(cell.p, 1, 0.3, 0.05).unwrap();
+        let ca = result.find(cell.p, cell.k, 0.3, 0.05).unwrap();
+        assert_eq!(cell.baseline_seconds, baseline.output.modeled_seconds);
+        assert_eq!(cell.ca_seconds, ca.output.modeled_seconds);
+        assert!(
+            cell.speedup() > 1.0,
+            "k={} at P={} must beat the classical baseline",
+            cell.k,
+            cell.p
+        );
+    }
+}
+
+/// SPNM sweeps run through the same executor (algo comes from the
+/// template), and a failing cell surfaces as an error instead of a
+/// panic.
+#[test]
+fn sweep_covers_spnm_and_propagates_errors() {
+    let ds = load_preset("smoke", Some(300), 3).unwrap();
+    let grid = Grid::new(&ds);
+    let spec = SweepSpec::new(
+        vec![Topology::new(2)],
+        base_spec().with_algo(AlgoKind::Spnm).with_q(2),
+    )
+    .with_ks(vec![1, 4]);
+    let result = grid.sweep(&spec).unwrap();
+    assert_eq!(result.cells.len(), 2);
+    assert!(result.cells[1].output.algorithm.contains("CA-SPNM"));
+    // Invalid axis values fail validation up front.
+    let bad = SweepSpec::new(vec![Topology::new(2)], base_spec()).with_bs(vec![0.0]);
+    assert!(grid.sweep(&bad).is_err());
+    let empty = SweepSpec::new(vec![Topology::new(2)], base_spec()).with_ks(vec![]);
+    assert!(grid.sweep(&empty).is_err());
+}

@@ -161,7 +161,8 @@ fn modeled_time_decomposition_is_consistent() {
     let machine = MachineModel::comet();
     let out = run(&ds, 8, 8, 0.3, 32);
     let t = out.trace.total_steady();
-    let reconstructed = machine.gamma * t.flops + machine.alpha * t.messages + machine.beta * t.words;
+    let reconstructed =
+        machine.gamma * t.flops + machine.alpha * t.messages + machine.beta * t.words;
     let rel = (reconstructed - t.seconds).abs() / t.seconds;
     assert!(rel < 1e-9, "decomposition off by {rel}");
 }
