@@ -1,15 +1,18 @@
 #!/usr/bin/env python3
 """Validate `BENCH {json}` lines (schema v1) and bundle them into one file.
 
-Usage: check_bench.py OUT.json LOG [LOG ...]
+Usage: check_bench.py OUT.json LOG [LOG ...] [--require PREFIX ...]
 
 Every line starting with "BENCH " in the input logs must parse as JSON
 and carry the schema v1 keys emitted by `benchkit::Timing::to_json`
 (see EXPERIMENTS.md): schema == 1, name (str), n (int >= 0), and finite
 numbers median_s / mean_s / stddev_s / min_s. Each log must contribute
-at least one line. On success the collected objects are written to
-OUT.json as a JSON array (the per-PR perf-trajectory artifact); any
-malformed line fails the job with a pointer to it.
+at least one line. Each --require PREFIX (repeatable) asserts that at
+least one collected line's name starts with PREFIX — the serve-smoke
+job uses this to prove the serve/cold-boot + serve/warm-boot pair
+actually ran. On success the collected objects are written to OUT.json
+as a JSON array (the per-PR perf-trajectory artifact); any malformed
+line fails the job with a pointer to it.
 """
 
 import json
@@ -51,9 +54,17 @@ def validate(obj, where):
 
 
 def main(argv):
-    if len(argv) < 3:
-        fail("usage: check_bench.py OUT.json LOG [LOG ...]")
-    out_path, logs = argv[1], argv[2:]
+    args = argv[1:]
+    required = []
+    while "--require" in args:
+        i = args.index("--require")
+        if i + 1 >= len(args):
+            fail("--require needs a prefix")
+        required.append(args[i + 1])
+        del args[i : i + 2]
+    if len(args) < 2:
+        fail("usage: check_bench.py OUT.json LOG [LOG ...] [--require PREFIX ...]")
+    out_path, logs = args[0], args[1:]
     collected = []
     for path in logs:
         per_file = 0
@@ -75,6 +86,10 @@ def main(argv):
         if per_file == 0:
             fail(f"{path}: no BENCH lines found (bench ran without emitting?)")
         print(f"check_bench: {path}: {per_file} BENCH line(s) OK")
+    for prefix in required:
+        if not any(obj["name"].startswith(prefix) for obj in collected):
+            fail(f"no BENCH line named '{prefix}*' (required bench did not run)")
+        print(f"check_bench: required '{prefix}*' present")
     with open(out_path, "w", encoding="utf-8") as fh:
         json.dump(collected, fh, indent=2)
         fh.write("\n")

@@ -1,0 +1,106 @@
+#!/usr/bin/env python3
+"""Validate `ca-prox serve` JSON-lines responses (serve proto schema v1).
+
+Usage: check_serve.py LOG [--expect-jobs N] [--min-persisted-hits N]
+
+Every non-empty line of LOG must parse as a JSON object with
+schema == 1 and a known event kind (the serve responses all go to
+stdout; human chatter goes to stderr and never reaches the log).
+
+  --expect-jobs N         exactly N `done` events, N `queued` events,
+                          and zero `failed`/`error` events
+  --min-persisted-hits N  the last `stats` event must report at least N
+                          persisted hits summed over its datasets — the
+                          warm-boot proof the CI serve-smoke step keys on
+"""
+
+import json
+import sys
+
+KNOWN_EVENTS = {
+    "queued",
+    "started",
+    "block",
+    "record",
+    "done",
+    "failed",
+    "drained",
+    "stats",
+    "error",
+    "pong",
+    "bye",
+}
+
+
+def fail(msg):
+    print(f"check_serve: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main(argv):
+    args = argv[1:]
+    expect_jobs = None
+    min_persisted = None
+    while len(args) > 1:
+        if args[-2] == "--expect-jobs":
+            expect_jobs = int(args[-1])
+            args = args[:-2]
+        elif args[-2] == "--min-persisted-hits":
+            min_persisted = int(args[-1])
+            args = args[:-2]
+        else:
+            break
+    if len(args) != 1:
+        fail("usage: check_serve.py LOG [--expect-jobs N] [--min-persisted-hits N]")
+    path = args[0]
+    counts = {}
+    last_stats = None
+    total = 0
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            where = f"{path}:{lineno}"
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(f"{where}: unparseable response line ({e}): {line}")
+            if not isinstance(obj, dict):
+                fail(f"{where}: response is not an object: {line}")
+            if obj.get("schema") != 1:
+                fail(f"{where}: bad or missing schema: {line}")
+            event = obj.get("event")
+            if event not in KNOWN_EVENTS:
+                fail(f"{where}: unknown event '{event}': {line}")
+            counts[event] = counts.get(event, 0) + 1
+            if event == "stats":
+                last_stats = obj
+            total += 1
+    if total == 0:
+        fail(f"{path}: no response lines found")
+    for bad in ("failed", "error"):
+        if counts.get(bad, 0):
+            fail(f"{path}: {counts[bad]} '{bad}' event(s) in the log")
+    if expect_jobs is not None:
+        for kind in ("queued", "done"):
+            got = counts.get(kind, 0)
+            if got != expect_jobs:
+                fail(f"{path}: expected {expect_jobs} '{kind}' events, got {got}")
+    if min_persisted is not None:
+        if last_stats is None:
+            fail(f"{path}: --min-persisted-hits given but no stats event in the log")
+        hits = sum(
+            d.get("persisted_hits", 0) for d in last_stats.get("datasets", [])
+        )
+        if hits < min_persisted:
+            fail(
+                f"{path}: persisted_hits = {hits} < {min_persisted} "
+                "(warm boot did not serve the persisted plan)"
+            )
+        print(f"check_serve: {path}: persisted_hits = {hits} >= {min_persisted}")
+    print(f"check_serve: {path}: {total} response line(s) OK ({counts})")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

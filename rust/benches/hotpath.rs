@@ -18,12 +18,63 @@ use ca_prox::matrix::gemm;
 use ca_prox::matrix::ops::{
     sampled_gram_csc, sampled_gram_dense, sampled_gram_dense_naive, GramStack,
 };
+use ca_prox::datasets::Dataset;
 use ca_prox::runtime::backend::{GramBackend, NativeGramBackend};
 use ca_prox::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
+use ca_prox::serve::{ServeClient, ServerConfig, SolveRequest};
 use ca_prox::session::{Session, SolveSpec, Topology};
 use ca_prox::solvers::traits::{AlgoKind, GradientAt, SolverConfig};
 use ca_prox::util::rng::Rng;
 use std::path::Path;
+
+/// The `serve/cold-boot` vs `serve/warm-boot` hotpath pair
+/// (EXPERIMENTS.md): each boot starts a fresh in-process serve server,
+/// registers `ds`, runs a 3-job mixed-λ batch and shuts down. Cold
+/// boots wipe the plan store first (every boot pays the O(d²·n)
+/// Lipschitz setup); warm boots reuse the store the previous boot
+/// persisted (setup hydrates from disk) — the wall-time delta is the
+/// cross-process amortization win the serve engine exists for.
+fn serve_boot_pair(ds: &Dataset, tag: &str, reps: usize, spec: &SolveSpec) {
+    let store_dir = std::env::temp_dir()
+        .join(format!("ca_prox_serve_bench_{}_{tag}", std::process::id()));
+    let run_batch = || {
+        let client = ServeClient::start(
+            ServerConfig::default().with_threads(2).with_store(&store_dir),
+        )
+        .unwrap();
+        let id = client.register(ds.clone()).unwrap();
+        let tickets: Vec<_> = [0.1, 0.05, 0.02]
+            .iter()
+            .map(|&lambda| {
+                let job =
+                    SolveRequest::new(&id, Topology::new(2), spec.clone().with_lambda(lambda));
+                client.submit(job).unwrap()
+            })
+            .collect();
+        for t in &tickets {
+            t.wait().unwrap();
+        }
+        client.shutdown().unwrap();
+    };
+    let t_cold = bench(&format!("serve/cold-boot ({tag}, 3 jobs, empty store)"), 0, reps, || {
+        std::fs::remove_dir_all(&store_dir).ok();
+        run_batch();
+    });
+    emit(&t_cold);
+    // The last cold rep left the store populated; warm boots hydrate it.
+    let t_warm = bench(
+        &format!("serve/warm-boot ({tag}, 3 jobs, hydrated store)"),
+        1,
+        reps,
+        run_batch,
+    );
+    emit(&t_warm);
+    println!(
+        "serve/warm-vs-cold boot speedup ({tag}): {:.2}x",
+        t_cold.median() / t_warm.median()
+    );
+    std::fs::remove_dir_all(&store_dir).ok();
+}
 
 /// CI smoke slice (`cargo bench --bench hotpath -- --quick`): one tiny
 /// kernel timing plus one Grid sweep cell, each leaving a `BENCH {json}`
@@ -56,6 +107,7 @@ fn quick_mode() {
         grid.sweep(&sweep).unwrap();
     });
     emit(&t);
+    serve_boot_pair(&ds, "quick", 2, &spec.clone().with_max_iters(8));
     println!("\nhotpath quick OK");
 }
 
@@ -264,6 +316,16 @@ fn main() {
             "sweep/grid-vs-legacy speedup (6 λ on covtype 50k): {:.2}x",
             t_legacy.median() / t_grid.median()
         );
+    }
+
+    // ---- serve engine: cold vs warm boot (wall) ----
+    {
+        let spec = SolveSpec::default()
+            .with_sample_fraction(0.05)
+            .with_k(16)
+            .with_max_iters(32)
+            .with_seed(1);
+        serve_boot_pair(&ds, "covtype-50k", 3, &spec);
     }
     println!("\nhotpath OK");
 }

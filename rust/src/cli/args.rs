@@ -98,6 +98,14 @@ impl ArgSpec {
         ArgSpec { flags }
     }
 
+    /// This spec plus additional flags — for commands that embed the
+    /// run set and add their own (`submit` adds `--socket`/`--warm-tag`
+    /// on top of [`ArgSpec::run_flags`]).
+    pub fn with_flags(mut self, more: Vec<Flag>) -> ArgSpec {
+        self.flags.extend(more);
+        self
+    }
+
     /// The shared flags of `run` (also embedded in `sweep`).
     pub fn run_flags() -> ArgSpec {
         ArgSpec::new(vec![

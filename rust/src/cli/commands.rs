@@ -4,12 +4,19 @@ use crate::cli::args::{ArgSpec, Flag, ParsedArgs};
 use crate::config::parse::TomlValue;
 use crate::config::spec::RunSpec;
 use crate::datasets::registry;
-use crate::error::Result;
-use crate::grid::{BenchEmitter, Grid, NoopSweepObserver, SweepObserver, SweepSpec};
+use crate::error::{CaError, Result};
+use crate::grid::{BenchEmitter, Grid, NoopSweepObserver, PlanCache, SweepObserver, SweepSpec};
 use crate::metrics::report::RunReport;
+use crate::runtime::artifact::{default_artifacts_root, plancache_root};
 use crate::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
+use crate::serve::proto::{serve_loop, submit_to_json, SubmitCmd};
+use crate::serve::server::{DatasetRef, Server, ServerConfig};
+use crate::serve::store::PlanStore;
 use crate::session::Session;
 use crate::solvers::traits::SolverOutput;
+use crate::util::json::Json;
+use std::io::{BufRead, Write};
+use std::sync::Arc;
 
 /// Build a [`RunSpec`] from `--config` + flag overrides.
 fn spec_from_args(p: &ParsedArgs) -> Result<RunSpec> {
@@ -107,7 +114,17 @@ pub fn cmd_sweep(argv: &[String]) -> Result<()> {
         Flag { name: "k-list", takes_value: true, help: "comma-separated k values" },
         Flag { name: "b-list", takes_value: true, help: "comma-separated sampling rates" },
         Flag { name: "lambda-list", takes_value: true, help: "comma-separated λ values" },
-        Flag { name: "threads", takes_value: true, help: "sweep worker threads (0 = auto)" },
+        Flag { name: "threads", takes_value: true, help: "sweep worker threads (omit for auto)" },
+        Flag {
+            name: "warm-start-lambda",
+            takes_value: false,
+            help: "chain warm starts along λ per (topology, b) group",
+        },
+        Flag {
+            name: "store",
+            takes_value: true,
+            help: "plan-store dir: hydrate before the sweep, persist after",
+        },
         Flag { name: "config", takes_value: true, help: "TOML config file" },
         Flag { name: "dataset", takes_value: true, help: "preset name" },
         Flag { name: "scale-n", takes_value: true, help: "cap sample count" },
@@ -129,29 +146,45 @@ pub fn cmd_sweep(argv: &[String]) -> Result<()> {
     let k_list = parsed.get_usize_list("k-list")?.unwrap_or_else(|| vec![1, 8, 32]);
     let b_list = parsed.get_f64_list("b-list")?.unwrap_or_else(|| vec![base.solve.b]);
     let l_list = parsed.get_f64_list("lambda-list")?.unwrap_or_else(|| vec![base.solve.lambda]);
-    let threads = parsed.get_usize("threads")?.unwrap_or(0);
     // One dataset load and (if requested) one artifact-engine load for
     // the whole grid; the Grid's shared plan cache amortizes sharding
-    // and the Lipschitz estimate across every (P, k, b, λ) cell.
+    // and the Lipschitz estimate across every (P, k, b, λ) cell, and
+    // --store stretches that across *invocations* through the
+    // fingerprint-keyed plan store.
     let ds = registry::load_preset(&base.dataset, base.scale_n, base.solve.seed)?;
+    let store = parsed.get("store").map(PlanStore::new);
+    let cache = Arc::new(PlanCache::new());
+    if let Some(store) = &store {
+        let report = store.hydrate(&ds, &cache)?;
+        if let Some(reason) = &report.rejected {
+            eprintln!("plan store rejected (recomputing): {reason}");
+        } else if report.total() > 0 {
+            println!("hydrated {} plan entries from {}", report.total(), store.root().display());
+        }
+    }
     let engine = match &base.artifacts {
         Some(dir) => Some(PjrtEngine::load(std::path::Path::new(dir))?),
         None => None,
     };
     let backend = engine.as_ref().map(PjrtGramBackend::new);
     let grid = match &backend {
-        Some(b) => Grid::with_backend(&ds, b),
-        None => Grid::new(&ds),
+        Some(b) => Grid::with_backend_and_cache(&ds, b, Arc::clone(&cache)),
+        None => Grid::with_cache(&ds, Arc::clone(&cache)),
     };
-    let sweep = SweepSpec::new(
+    let mut sweep = SweepSpec::new(
         p_list.iter().map(|&p| base.topology.with_p(p)).collect(),
         base.solve.clone(),
     )
     .with_ks(k_list)
     .with_bs(b_list.clone())
     .with_lambdas(l_list.clone())
-    .with_baseline_k(1)
-    .with_threads(threads);
+    .with_baseline_k(1);
+    if let Some(threads) = parsed.get_usize("threads")? {
+        sweep = sweep.with_threads(threads);
+    }
+    if parsed.has("warm-start-lambda") {
+        sweep = sweep.with_warm_start_along_lambda();
+    }
     let bench_emitter;
     let observer: &dyn SweepObserver = if parsed.has("bench") {
         bench_emitter = BenchEmitter::new(&format!("sweep/{}", base.dataset));
@@ -168,18 +201,135 @@ pub fn cmd_sweep(argv: &[String]) -> Result<()> {
         }
     }
     println!("{}", result.to_csv());
+    if let Some(store) = &store {
+        let written = store.save(&ds, &cache)?;
+        println!("persisted {written} plan entries to {}", store.root().display());
+    }
     let stats = grid.cache_stats();
     println!(
         "grid: {} cells on {} threads in {:.3}s wall; setup charged once \
-         (lipschitz computes={}, hits={}; shard builds={}, hits={})",
+         (lipschitz computes={}, hits={}; shard builds={}, hits={}; \
+         persisted hits={}, store writes={})",
         result.cells.len(),
         result.threads,
         result.wall_seconds,
         stats.lipschitz_computes,
         stats.lipschitz_hits,
         stats.shard_builds,
-        stats.shard_hits
+        stats.shard_hits,
+        stats.persisted_hits,
+        stats.store_writes
     );
+    Ok(())
+}
+
+/// `ca-prox serve` — the resident solve service on a JSON-lines
+/// transport: stdin/stdout by default (one request per line, responses
+/// streamed back), or a TCP socket with `--socket HOST:PORT`. Plans
+/// persist under the fingerprint-keyed store (default
+/// `artifacts/plancache`, `--store none` disables), so a rebooted
+/// server skips the setup for every dataset it has seen.
+pub fn cmd_serve(argv: &[String]) -> Result<()> {
+    let flags = ArgSpec::new(vec![
+        Flag {
+            name: "store",
+            takes_value: true,
+            help: "plan-store dir (default artifacts/plancache; 'none' disables)",
+        },
+        Flag { name: "threads", takes_value: true, help: "worker threads (omit for auto)" },
+        Flag { name: "queue", takes_value: true, help: "work-queue capacity (default 64)" },
+        Flag {
+            name: "socket",
+            takes_value: true,
+            help: "listen on HOST:PORT instead of stdin/stdout",
+        },
+    ]);
+    let parsed = flags.parse(argv)?;
+    let mut config = ServerConfig::default();
+    match parsed.get("store") {
+        Some("none") => {}
+        Some(dir) => config = config.with_store(dir),
+        None => config = config.with_store(plancache_root(&default_artifacts_root())),
+    }
+    if let Some(threads) = parsed.get_usize("threads")? {
+        config = config.with_threads(threads);
+    }
+    if let Some(queue) = parsed.get_usize("queue")? {
+        config = config.with_queue_cap(queue);
+    }
+    let server = Server::new(config)?;
+    match parsed.get("socket") {
+        None => {
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            let mut reader = stdin.lock();
+            let mut writer = stdout.lock();
+            serve_loop(&server, &mut reader, &mut writer)?;
+        }
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr)?;
+            eprintln!("ca-prox serve: listening on {addr} ({} workers)", server.threads());
+            loop {
+                let (stream, peer) = listener.accept()?;
+                eprintln!("ca-prox serve: connection from {peer}");
+                let mut reader = std::io::BufReader::new(stream.try_clone()?);
+                let mut writer = stream;
+                match serve_loop(&server, &mut reader, &mut writer) {
+                    Ok(true) => break, // shutdown op
+                    Ok(false) => continue, // client hung up; keep serving
+                    Err(e) => {
+                        eprintln!("ca-prox serve: connection error: {e}");
+                        continue;
+                    }
+                }
+            }
+        }
+    }
+    server.shutdown()
+}
+
+/// `ca-prox submit` — send one solve to a running `ca-prox serve
+/// --socket` server and stream its responses. Reuses the `run` flag set
+/// for the job itself, plus `--socket` (required), `--gen-seed` and
+/// `--warm-tag`.
+pub fn cmd_submit(argv: &[String]) -> Result<()> {
+    let flags = ArgSpec::run_flags().with_flags(vec![
+        Flag { name: "socket", takes_value: true, help: "server address HOST:PORT (required)" },
+        Flag { name: "gen-seed", takes_value: true, help: "synthetic generator seed" },
+        Flag { name: "warm-tag", takes_value: true, help: "warm-start pool tag" },
+    ]);
+    let parsed = flags.parse(argv)?;
+    let socket = parsed
+        .get("socket")
+        .ok_or_else(|| CaError::Config("submit needs --socket HOST:PORT".into()))?;
+    let spec = spec_from_args(&parsed)?;
+    let gen_seed = parsed.get_usize("gen-seed")?.unwrap_or(42) as u64;
+    let cmd = SubmitCmd {
+        dataset: DatasetRef { name: spec.dataset.clone(), scale_n: spec.scale_n, gen_seed },
+        topology: spec.topology,
+        solve: spec.solve.clone(),
+        warm_tag: parsed.get("warm-tag").map(String::from),
+    };
+    let stream = std::net::TcpStream::connect(socket)?;
+    let mut writer = stream.try_clone()?;
+    writeln!(writer, "{}", submit_to_json(&cmd).to_string_compact())?;
+    writeln!(writer, "{{\"schema\":1,\"op\":\"drain\"}}")?;
+    writer.flush()?;
+    let reader = std::io::BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        println!("{line}");
+        let event = crate::util::json::parse(&line)
+            .ok()
+            .and_then(|v| v.get("event").and_then(Json::as_str).map(String::from));
+        match event.as_deref() {
+            Some("drained") => break,
+            Some("error") | Some("failed") => {
+                return Err(CaError::Config(format!("server rejected the job: {line}")))
+            }
+            _ => {}
+        }
+    }
     Ok(())
 }
 
@@ -313,5 +463,53 @@ mod tests {
     fn bad_flags_error() {
         assert!(cmd_run(&sv(&["--nope"])).is_err());
         assert!(cmd_run(&sv(&["--dataset", "doesnotexist", "--iters", "1"])).is_err());
+    }
+
+    #[test]
+    fn sweep_rejects_zero_threads() {
+        let err = cmd_sweep(&sv(&[
+            "--dataset", "smoke", "--scale-n", "200", "--p-list", "1", "--k-list", "2",
+            "--iters", "4", "--threads", "0",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("≥ 1"), "{err}");
+    }
+
+    #[test]
+    fn sweep_store_persists_and_rehydrates() {
+        let dir = std::env::temp_dir()
+            .join(format!("ca_prox_sweep_store_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let args = sv(&[
+            "--dataset", "smoke", "--scale-n", "300", "--p-list", "1,2", "--k-list", "2",
+            "--iters", "8", "--b", "0.5", "--threads", "2", "--store",
+            dir.to_str().unwrap(),
+        ]);
+        cmd_sweep(&args).unwrap();
+        // One plan file exists under a fingerprint directory…
+        let entries: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(entries.len(), 1);
+        assert!(entries[0].as_ref().unwrap().path().join("plan.json").is_file());
+        // …and the second invocation hydrates from it without error.
+        cmd_sweep(&args).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_warm_start_lambda_flag_accepted() {
+        cmd_sweep(&sv(&[
+            "--dataset", "smoke", "--scale-n", "200", "--p-list", "1", "--k-list", "2",
+            "--lambda-list", "0.1,0.05", "--iters", "8", "--b", "0.5", "--threads", "1",
+            "--warm-start-lambda",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn serve_rejects_zero_threads_and_submit_needs_socket() {
+        let err = cmd_serve(&sv(&["--threads", "0", "--store", "none"])).unwrap_err();
+        assert!(err.to_string().contains("≥ 1"), "{err}");
+        let err = cmd_submit(&sv(&["--dataset", "smoke"])).unwrap_err();
+        assert!(err.to_string().contains("--socket"), "{err}");
     }
 }

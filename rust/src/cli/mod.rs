@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! ca-prox run      [--config FILE] [--dataset NAME] [--p N] [--k N] ...
-//! ca-prox sweep    --dataset NAME --p-list 1,2,4 --k-list 1,8,32 [--b-list ..] [--lambda-list ..] ...
+//! ca-prox sweep    --dataset NAME --p-list 1,2,4 --k-list 1,8,32 [--store DIR] ...
+//! ca-prox serve    [--store DIR|none] [--threads N] [--socket HOST:PORT]
+//! ca-prox submit   --socket HOST:PORT [--dataset NAME] [--lambda X] ...
 //! ca-prox datagen  --dataset NAME --scale-n N --out FILE
 //! ca-prox info     [--artifacts DIR]
 //! ca-prox help
@@ -30,6 +32,8 @@ fn dispatch(argv: &[String]) -> crate::error::Result<()> {
     match cmd {
         "run" => commands::cmd_run(rest),
         "sweep" => commands::cmd_sweep(rest),
+        "serve" => commands::cmd_serve(rest),
+        "submit" => commands::cmd_submit(rest),
         "datagen" => commands::cmd_datagen(rest),
         "info" => commands::cmd_info(rest),
         "help" | "--help" | "-h" => {
@@ -50,6 +54,8 @@ pub fn help_text() -> String {
          USAGE: ca-prox <command> [flags]\n\nCOMMANDS:\n\
          \x20 run      run one solver configuration and print a report\n\
          \x20 sweep    run a (P, k, b, λ) grid on the shared-plan Grid engine\n\
+         \x20 serve    long-running solve service (JSON lines on stdin/stdout or --socket)\n\
+         \x20 submit   send one job to a running serve --socket server\n\
          \x20 datagen  generate a synthetic dataset file (LIBSVM format)\n\
          \x20 info     print presets, machine models and artifact status\n\
          \x20 help     this message\n\nRUN FLAGS:\n",
@@ -75,7 +81,7 @@ mod tests {
     #[test]
     fn help_mentions_all_commands() {
         let h = help_text();
-        for cmd in ["run", "sweep", "datagen", "info"] {
+        for cmd in ["run", "sweep", "serve", "submit", "datagen", "info"] {
             assert!(h.contains(cmd));
         }
     }

@@ -13,6 +13,23 @@ use crate::error::{CaError, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// The one validation path for every user-facing worker-thread count:
+/// `None` means "one thread per available core", an explicit `0` is a
+/// configuration error (it used to be silently clamped to 1 here while
+/// the grid treated it as "auto" and the serve engine rejected it — three
+/// different answers to the same flag). [`SimCluster::with_threads`],
+/// [`crate::grid::SweepSpec::validate`] and
+/// [`crate::serve::Server::new`] all route through this.
+pub fn resolve_threads(requested: Option<usize>) -> Result<usize> {
+    match requested {
+        Some(0) => Err(CaError::Config(
+            "thread count must be ≥ 1 (omit the flag for one thread per core)".into(),
+        )),
+        Some(t) => Ok(t),
+        None => Ok(std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)),
+    }
+}
+
 /// A simulated cluster: P logical workers on up to `threads` real threads.
 #[derive(Clone, Debug)]
 pub struct SimCluster {
@@ -36,10 +53,12 @@ impl SimCluster {
 
     /// Override the real thread count (1 = fully sequential, deterministic
     /// scheduling; results are identical either way since workers share
-    /// nothing).
-    pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = threads.max(1);
-        self
+    /// nothing). `0` is rejected through [`resolve_threads`] — it used to
+    /// be silently clamped to 1, hiding config mistakes the other thread
+    /// flags reported.
+    pub fn with_threads(mut self, threads: usize) -> Result<Self> {
+        self.threads = resolve_threads(Some(threads))?;
+        Ok(self)
     }
 
     /// Run `f(worker_id) -> (output, flops)` on every logical worker.
@@ -193,7 +212,7 @@ mod tests {
     fn sequential_and_parallel_agree() {
         let machine = MachineModel::comet();
         let run = |threads: usize| {
-            let cluster = SimCluster::new(16, machine).unwrap().with_threads(threads);
+            let cluster = SimCluster::new(16, machine).unwrap().with_threads(threads).unwrap();
             let mut trace = CostTrace::new();
             let out = cluster
                 .map_workers(
@@ -215,7 +234,7 @@ mod tests {
 
     #[test]
     fn worker_error_propagates() {
-        let cluster = SimCluster::new(4, MachineModel::comet()).unwrap().with_threads(1);
+        let cluster = SimCluster::new(4, MachineModel::comet()).unwrap().with_threads(1).unwrap();
         let mut trace = CostTrace::new();
         let r: Result<Vec<u32>> = cluster.map_workers(
             |w| {
@@ -234,6 +253,23 @@ mod tests {
     #[test]
     fn zero_workers_rejected() {
         assert!(SimCluster::new(0, MachineModel::comet()).is_err());
+    }
+
+    #[test]
+    fn zero_threads_rejected_not_clamped() {
+        let err = SimCluster::new(2, MachineModel::comet())
+            .unwrap()
+            .with_threads(0)
+            .unwrap_err();
+        assert!(matches!(err, CaError::Config(_)), "{err}");
+        assert!(err.to_string().contains("≥ 1"), "{err}");
+    }
+
+    #[test]
+    fn resolve_threads_is_the_shared_path() {
+        assert!(resolve_threads(Some(0)).is_err());
+        assert_eq!(resolve_threads(Some(3)).unwrap(), 3);
+        assert!(resolve_threads(None).unwrap() >= 1);
     }
 
     #[test]

@@ -54,6 +54,32 @@ pub struct CacheStats {
     pub shard_builds: u64,
     /// Shard-layout requests served from the cache.
     pub shard_hits: u64,
+    /// Hits served from an entry hydrated out of a
+    /// [`crate::serve::PlanStore`] (a subset of the hit counters above):
+    /// work another process paid for and this one skipped.
+    pub persisted_hits: u64,
+    /// Times this cache's contents were persisted to a
+    /// [`crate::serve::PlanStore`].
+    pub store_writes: u64,
+}
+
+/// A cached Lipschitz estimate plus its provenance.
+#[derive(Clone, Copy, Debug)]
+struct LipEntry {
+    value: f64,
+    /// True when the entry came from a [`crate::serve::PlanStore`]
+    /// (hydrated) rather than being computed by this process.
+    persisted: bool,
+}
+
+/// A cached reference solution plus its provenance. The certified
+/// tolerance is the *requested* tol when the solver returned before the
+/// cap, +∞ when it exhausted the cap.
+#[derive(Clone, Debug)]
+struct RefEntry {
+    tol: f64,
+    w: Arc<Vec<f64>>,
+    persisted: bool,
 }
 
 /// Dataset-level caches for the one-time work a solve plan needs.
@@ -64,11 +90,9 @@ pub struct CacheStats {
 #[derive(Debug, Default)]
 pub struct PlanCache {
     /// seed → L̂. The estimate is deterministic per (dataset, seed).
-    lipschitz: Mutex<BTreeMap<u64, f64>>,
-    /// (λ bits, max_iters) → (certified tolerance, solution). The
-    /// certified tolerance is the *requested* tol when the solver
-    /// returned before the cap, +∞ when it exhausted the cap.
-    references: Mutex<BTreeMap<(u64, usize), (f64, Arc<Vec<f64>>)>>,
+    lipschitz: Mutex<BTreeMap<u64, LipEntry>>,
+    /// (λ bits, max_iters) → certified tolerance + solution.
+    references: Mutex<BTreeMap<(u64, usize), RefEntry>>,
     /// (p, partition) → shard layout.
     shards: Mutex<BTreeMap<(usize, PartitionStrategy), Arc<ShardedDataset>>>,
     lipschitz_computes: AtomicU64,
@@ -77,6 +101,17 @@ pub struct PlanCache {
     reference_hits: AtomicU64,
     shard_builds: AtomicU64,
     shard_hits: AtomicU64,
+    persisted_hits: AtomicU64,
+    store_writes: AtomicU64,
+    /// Bumped on every state mutation (computed inserts, hydrated
+    /// inserts, shard builds); compared against `saved_epoch` so
+    /// [`crate::serve::PlanStore::save`] can skip rewriting a file that
+    /// already reflects this cache.
+    epoch: AtomicU64,
+    /// The `epoch` value the last completed store write captured.
+    /// Both start at 0, so a brand-new empty cache counts as "already
+    /// saved" — the store still writes when no file exists yet.
+    saved_epoch: AtomicU64,
 }
 
 /// Recover the guard from a poisoned mutex: the maps only ever hold
@@ -101,6 +136,8 @@ impl PlanCache {
             reference_hits: self.reference_hits.load(Ordering::Relaxed),
             shard_builds: self.shard_builds.load(Ordering::Relaxed),
             shard_hits: self.shard_hits.load(Ordering::Relaxed),
+            persisted_hits: self.persisted_hits.load(Ordering::Relaxed),
+            store_writes: self.store_writes.load(Ordering::Relaxed),
         }
     }
 
@@ -116,9 +153,12 @@ impl PlanCache {
         machine: &MachineModel,
         trace: &mut CostTrace,
     ) -> Result<f64> {
-        if let Some(&l) = lock(&self.lipschitz).get(&seed) {
+        if let Some(&e) = lock(&self.lipschitz).get(&seed) {
             self.lipschitz_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(l);
+            if e.persisted {
+                self.persisted_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            return Ok(e.value);
         }
         // Compute outside the lock so distinct seeds can estimate
         // concurrently (the sweep pre-warm does exactly that). The cost
@@ -133,10 +173,14 @@ impl PlanCache {
         let mut map = lock(&self.lipschitz);
         if let Some(&cached) = map.get(&seed) {
             self.lipschitz_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(cached);
+            if cached.persisted {
+                self.persisted_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            return Ok(cached.value);
         }
-        map.insert(seed, l);
+        map.insert(seed, LipEntry { value: l, persisted: false });
         self.lipschitz_computes.fetch_add(1, Ordering::Relaxed);
+        self.bump_epoch();
         trace.merge(&local);
         Ok(l)
     }
@@ -166,7 +210,7 @@ impl PlanCache {
         let key = (lambda.to_bits(), max_iters);
         let mut map = lock(&self.references);
         let stale = match map.get(&key) {
-            Some((cached_tol, _)) => *cached_tol > tol,
+            Some(entry) => entry.tol > tol,
             None => true,
         };
         if stale {
@@ -179,15 +223,19 @@ impl PlanCache {
             let achieved = if iters < max_iters { tol } else { f64::INFINITY };
             let better_cached = matches!(
                 map.get(&key),
-                Some((cached_tol, _)) if *cached_tol <= achieved
+                Some(entry) if entry.tol <= achieved
             );
             if !better_cached {
-                map.insert(key, (achieved, Arc::new(w_op)));
+                map.insert(key, RefEntry { tol: achieved, w: Arc::new(w_op), persisted: false });
+                self.bump_epoch();
             }
         } else {
             self.reference_hits.fetch_add(1, Ordering::Relaxed);
+            if map[&key].persisted {
+                self.persisted_hits.fetch_add(1, Ordering::Relaxed);
+            }
         }
-        Ok(Arc::clone(&map[&key].1))
+        Ok(Arc::clone(&map[&key].w))
     }
 
     /// Cached shard layout for `(p, strategy)`. Partitioning is
@@ -209,7 +257,105 @@ impl PlanCache {
         let sh = Arc::new(ShardedDataset::new(ds, p, strategy)?);
         map.insert(key, Arc::clone(&sh));
         self.shard_builds.fetch_add(1, Ordering::Relaxed);
+        self.bump_epoch();
         Ok(sh)
+    }
+
+    // ---- persistence hooks (used by `crate::serve::PlanStore`) ----
+    //
+    // Hydration inserts entries *marked persisted* and never overwrites
+    // anything this process computed itself; serving a hydrated entry
+    // later counts a `persisted_hit` on top of the ordinary hit counter,
+    // which is the observable the serve tests key off ("the second boot
+    // paid zero Setup"). Export snapshots are taken under the same locks
+    // the compute paths use, so a persisted file only ever contains
+    // fully-inserted entries.
+
+    /// Insert a Lipschitz estimate loaded from a plan store. Returns
+    /// `true` when inserted (the seed was absent), `false` when a
+    /// computed or previously-hydrated entry already holds the key.
+    pub fn hydrate_lipschitz(&self, seed: u64, value: f64) -> bool {
+        let mut map = lock(&self.lipschitz);
+        match map.entry(seed) {
+            std::collections::btree_map::Entry::Occupied(_) => false,
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(LipEntry { value, persisted: true });
+                self.bump_epoch();
+                true
+            }
+        }
+    }
+
+    /// Insert a certified reference solution loaded from a plan store.
+    /// `tol` is the certified tolerance recorded at save time (never
+    /// +∞ — uncertified entries are not persisted). Returns `true` when
+    /// inserted.
+    pub fn hydrate_reference(
+        &self,
+        lambda_bits: u64,
+        max_iters: usize,
+        tol: f64,
+        w: Vec<f64>,
+    ) -> bool {
+        let mut map = lock(&self.references);
+        match map.entry((lambda_bits, max_iters)) {
+            std::collections::btree_map::Entry::Occupied(_) => false,
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(RefEntry { tol, w: Arc::new(w), persisted: true });
+                self.bump_epoch();
+                true
+            }
+        }
+    }
+
+    /// Snapshot of every Lipschitz entry as `(seed, L̂)`, hydrated or
+    /// computed — the estimate is deterministic per (dataset, seed), so
+    /// re-persisting a hydrated entry is idempotent.
+    pub fn export_lipschitz(&self) -> Vec<(u64, f64)> {
+        lock(&self.lipschitz).iter().map(|(&seed, e)| (seed, e.value)).collect()
+    }
+
+    /// Snapshot of every **certified** reference solution as
+    /// `(λ bits, max_iters, certified tol, w)`. Uncertified (capped)
+    /// entries are skipped: their tolerance is +∞, so a load could never
+    /// serve them anyway — persisting them would be dead weight.
+    pub fn export_references(&self) -> Vec<(u64, usize, f64, Arc<Vec<f64>>)> {
+        lock(&self.references)
+            .iter()
+            .filter(|(_, e)| e.tol.is_finite())
+            .map(|(&(l, m), e)| (l, m, e.tol, Arc::clone(&e.w)))
+            .collect()
+    }
+
+    /// Snapshot of the shard-layout keys `(p, partition)` in use.
+    /// Layouts themselves are deterministic recomputations, so the store
+    /// persists only the keys and rebuilds on hydrate.
+    pub fn export_shard_keys(&self) -> Vec<(usize, PartitionStrategy)> {
+        lock(&self.shards).keys().copied().collect()
+    }
+
+    fn bump_epoch(&self) {
+        self.epoch.fetch_add(1, Ordering::Release);
+    }
+
+    /// Current mutation epoch (see the `epoch` field).
+    pub(crate) fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// The epoch captured by the last completed store write.
+    pub(crate) fn saved_epoch(&self) -> u64 {
+        self.saved_epoch.load(Ordering::Acquire)
+    }
+
+    /// Record a completed persist of this cache's contents at `epoch`
+    /// (called by [`crate::serve::PlanStore::save`]). The counter is
+    /// bumped before the epoch is published, so any thread that
+    /// observes `saved_epoch() == epoch` also observes the write in
+    /// `store_writes`.
+    pub(crate) fn note_saved(&self, epoch: u64) {
+        self.store_writes.fetch_add(1, Ordering::Relaxed);
+        self.saved_epoch.store(epoch, Ordering::Release);
     }
 }
 
@@ -286,6 +432,54 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.reference_computes, 2);
         assert_eq!(s.reference_hits, 1);
+    }
+
+    #[test]
+    fn hydrated_entries_count_persisted_hits_and_never_overwrite() {
+        let ds = ds();
+        let cache = PlanCache::new();
+        let machine = MachineModel::comet();
+        // Compute seed 3 locally, then try to hydrate over it: refused.
+        let mut t = CostTrace::new();
+        let computed = cache.lipschitz(&ds, 3, &machine, &mut t).unwrap();
+        assert!(!cache.hydrate_lipschitz(3, computed + 1.0));
+        let mut t2 = CostTrace::new();
+        let again = cache.lipschitz(&ds, 3, &machine, &mut t2).unwrap();
+        assert_eq!(again.to_bits(), computed.to_bits(), "computed entry kept");
+        assert_eq!(cache.stats().persisted_hits, 0, "computed hits are not persisted hits");
+        // Hydrate a fresh seed: served without any compute, counted as a
+        // persisted hit, and charged zero Setup flops.
+        assert!(cache.hydrate_lipschitz(9, 2.5));
+        let mut t3 = CostTrace::new();
+        let served = cache.lipschitz(&ds, 9, &machine, &mut t3).unwrap();
+        assert_eq!(served.to_bits(), 2.5f64.to_bits());
+        assert_eq!(t3.phase(Phase::Setup).flops, 0.0);
+        let s = cache.stats();
+        assert_eq!(s.lipschitz_computes, 1);
+        assert_eq!(s.persisted_hits, 1);
+        // Hydrated references are served the same way (tolerance-aware).
+        assert!(cache.hydrate_reference(0.05f64.to_bits(), 100, 1e-6, vec![1.0; 6]));
+        let w = cache.reference_solution(&ds, 0.05, 1e-3, 100).unwrap();
+        assert!(w.iter().all(|&v| v == 1.0));
+        assert_eq!(cache.stats().persisted_hits, 2);
+        assert_eq!(cache.stats().reference_computes, 0);
+        // A tighter request than the certified tol still re-solves.
+        cache.reference_solution(&ds, 0.05, 1e-9, 100).unwrap();
+        assert_eq!(cache.stats().reference_computes, 1);
+    }
+
+    #[test]
+    fn export_skips_uncertified_references() {
+        let ds = ds();
+        let cache = PlanCache::new();
+        cache.reference_solution(&ds, 0.05, 1e3, 30).unwrap(); // certifies
+        cache.reference_solution(&ds, 0.07, 1e-12, 0).unwrap(); // capped
+        let refs = cache.export_references();
+        assert_eq!(refs.len(), 1);
+        assert_eq!(refs[0].0, 0.05f64.to_bits());
+        assert!(refs[0].2.is_finite());
+        cache.sharded(&ds, 3, PartitionStrategy::Greedy).unwrap();
+        assert_eq!(cache.export_shard_keys(), vec![(3, PartitionStrategy::Greedy)]);
     }
 
     #[test]

@@ -64,12 +64,37 @@ impl<'a> Grid<'a> {
     /// artifact-based); all sessions built through [`Grid::session`]
     /// inherit it.
     pub fn with_backend(ds: &'a Dataset, backend: &'a dyn GramBackend) -> Self {
-        Grid { ds, backend, cache: Arc::new(PlanCache::new()) }
+        Self::with_backend_and_cache(ds, backend, Arc::new(PlanCache::new()))
+    }
+
+    /// [`Grid::with_backend_and_cache`] with the native backend.
+    pub fn with_cache(ds: &'a Dataset, cache: Arc<PlanCache>) -> Self {
+        Self::with_backend_and_cache(ds, &NATIVE_BACKEND, cache)
+    }
+
+    /// Grid around an explicit (possibly pre-hydrated) plan cache — the
+    /// constructor behind `ca-prox sweep --store`, where a
+    /// [`crate::serve::PlanStore`] hydrates the cache before the sweep
+    /// and persists it afterwards, so repeated CLI invocations skip the
+    /// O(d²·n) setup entirely.
+    pub fn with_backend_and_cache(
+        ds: &'a Dataset,
+        backend: &'a dyn GramBackend,
+        cache: Arc<PlanCache>,
+    ) -> Self {
+        Grid { ds, backend, cache }
     }
 
     /// The dataset this grid plans for.
     pub fn dataset(&self) -> &Dataset {
         self.ds
+    }
+
+    /// The shared plan cache (hand it to
+    /// [`crate::serve::PlanStore::save`] to persist the sweep's one-time
+    /// work).
+    pub fn cache(&self) -> &Arc<PlanCache> {
+        &self.cache
     }
 
     /// Hit/compute counters of the shared plan cache.

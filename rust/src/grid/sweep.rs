@@ -22,6 +22,7 @@
 //!   grid point.
 
 use crate::benchkit::{emit, Timing};
+use crate::cluster::engine::resolve_threads;
 use crate::comm::trace::CostTrace;
 use crate::error::{CaError, Result};
 use crate::grid::Grid;
@@ -57,9 +58,24 @@ pub struct SweepSpec {
     /// 0 (default) runs every cell on the master seed, the figure-bench
     /// protocol; non-zero gives independent sampling per cell.
     pub seed_stride: u64,
-    /// Worker threads (0 = one per available core, capped by the cell
-    /// count). 1 is fully sequential — bit-identical to any other value.
-    pub threads: usize,
+    /// Worker threads (`None` = one per available core, capped by the
+    /// cell count; an explicit 0 is a config error — validated through
+    /// [`crate::cluster::engine::resolve_threads`], the same path every
+    /// thread flag uses). 1 is fully sequential — bit-identical to any
+    /// other value.
+    pub threads: Option<usize>,
+    /// Opt-in (default off): order each (topology, b) group by λ
+    /// **descending** — the homotopy direction, large λ (sparse) first —
+    /// and thread warm starts sequentially within the group: each cell
+    /// starts from the group's most recent solution with the same k
+    /// (falling back to the template's warm start, then zero). Groups
+    /// still run in parallel, results stay in expansion order, and
+    /// outputs are deterministic for any thread count (groups are
+    /// independent, chains sequential). The trade is explicit: cells are
+    /// **no longer bit-identical** to independent cold-started solves —
+    /// fewer iterations to a given tolerance in exchange for cell
+    /// independence (pinned in `rust/tests/grid.rs`).
+    pub warm_start_along_lambda: bool,
 }
 
 impl SweepSpec {
@@ -74,7 +90,8 @@ impl SweepSpec {
             base,
             baseline_k: None,
             seed_stride: 0,
-            threads: 0,
+            threads: None,
+            warm_start_along_lambda: false,
         }
     }
 
@@ -108,9 +125,17 @@ impl SweepSpec {
         self
     }
 
-    /// Set the worker thread count (0 = auto).
+    /// Set an explicit worker thread count (omit for one per core;
+    /// 0 is rejected at [`SweepSpec::validate`]).
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = threads;
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Opt in to λ-ordered warm-start chaining per (topology, b) group —
+    /// see [`SweepSpec::warm_start_along_lambda`].
+    pub fn with_warm_start_along_lambda(mut self) -> Self {
+        self.warm_start_along_lambda = true;
         self
     }
 
@@ -141,6 +166,7 @@ impl SweepSpec {
         if self.effective_ks().is_empty() || self.bs.is_empty() || self.lambdas.is_empty() {
             return Err(CaError::Config("sweep axes (ks, bs, lambdas) must be non-empty".into()));
         }
+        resolve_threads(self.threads)?;
         for &k in &self.effective_ks() {
             for &b in &self.bs {
                 for &lambda in &self.lambdas {
@@ -376,13 +402,7 @@ impl<'a> Grid<'a> {
         let wall_start = std::time::Instant::now();
         let points = spec.expand();
         let n = points.len();
-        let threads = if spec.threads == 0 {
-            std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
-        } else {
-            spec.threads
-        }
-        .min(n)
-        .max(1);
+        let threads = resolve_threads(spec.threads)?.min(n).max(1);
         let mut setup = CostTrace::new();
 
         // Pre-warm: shard layouts for every distinct (p, partition) and
@@ -448,6 +468,16 @@ impl<'a> Grid<'a> {
             }
         }
 
+        if spec.warm_start_along_lambda {
+            let cells = self.run_warm_chained(spec, observer, &points, threads)?;
+            return Ok(SweepResult {
+                cells,
+                setup,
+                threads,
+                wall_seconds: wall_start.elapsed().as_secs_f64(),
+            });
+        }
+
         let slots: Vec<Mutex<Option<Result<SweepCell>>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
         let run_cell = |sessions: &mut BTreeMap<usize, Session<'a>>,
@@ -511,16 +541,7 @@ impl<'a> Grid<'a> {
             .map_err(|_| CaError::Cluster("sweep worker thread panicked".into()))?;
         }
 
-        let mut cells = Vec::with_capacity(n);
-        for (i, slot) in slots.into_iter().enumerate() {
-            match slot.into_inner().unwrap() {
-                Some(Ok(cell)) => cells.push(cell),
-                Some(Err(e)) => return Err(e),
-                None => {
-                    return Err(CaError::Cluster(format!("sweep cell {i} produced no output")))
-                }
-            }
-        }
+        let cells = collect_slots(slots)?;
         Ok(SweepResult {
             cells,
             setup,
@@ -528,6 +549,110 @@ impl<'a> Grid<'a> {
             wall_seconds: wall_start.elapsed().as_secs_f64(),
         })
     }
+
+    /// The [`SweepSpec::warm_start_along_lambda`] executor: the unit of
+    /// scheduling is a (topology, b) group rather than a cell. Within a
+    /// group, cells run sequentially in (λ descending, expansion-order)
+    /// order and each cell warm-starts from the group's most recent
+    /// solution with the same k; groups run concurrently on the pool.
+    fn run_warm_chained(
+        &self,
+        spec: &SweepSpec,
+        observer: &dyn SweepObserver,
+        points: &[CellPoint],
+        threads: usize,
+    ) -> Result<Vec<SweepCell>> {
+        let mut grouped: BTreeMap<(usize, u64), Vec<usize>> = BTreeMap::new();
+        for (i, pt) in points.iter().enumerate() {
+            grouped.entry((pt.topo, pt.b.to_bits())).or_default().push(i);
+        }
+        let mut groups: Vec<Vec<usize>> = grouped.into_values().collect();
+        for idxs in &mut groups {
+            idxs.sort_by(|&a, &b| {
+                points[b]
+                    .lambda
+                    .partial_cmp(&points[a].lambda)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| points[a].index.cmp(&points[b].index))
+            });
+        }
+        let slots: Vec<Mutex<Option<Result<SweepCell>>>> =
+            points.iter().map(|_| Mutex::new(None)).collect();
+        let run_group = |idxs: &[usize]| {
+            let mut session: Option<Session<'a>> = None;
+            // k → most recent solution in this group's λ chain.
+            let mut warm: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+            for &i in idxs {
+                let point = &points[i];
+                let res = (|| -> Result<SweepCell> {
+                    if session.is_none() {
+                        session = Some(self.session(spec.topologies[point.topo])?);
+                    }
+                    let session = session.as_mut().expect("session built above");
+                    let mut solve = spec
+                        .base
+                        .clone()
+                        .with_lambda(point.lambda)
+                        .with_sample_fraction(point.b)
+                        .with_k(point.k)
+                        .with_seed(point.seed);
+                    if let Some(w) = warm.get(&point.k) {
+                        solve = solve.warm_start(w);
+                    }
+                    let output = session.solve(&solve)?;
+                    warm.insert(point.k, output.w.clone());
+                    Ok(SweepCell {
+                        index: point.index,
+                        topology_index: point.topo,
+                        p: spec.topologies[point.topo].p,
+                        k: point.k,
+                        b: point.b,
+                        lambda: point.lambda,
+                        seed: point.seed,
+                        output,
+                    })
+                })();
+                if let Ok(cell) = &res {
+                    observer.on_cell(cell);
+                }
+                *slots[i].lock().unwrap() = Some(res);
+            }
+        };
+        if threads <= 1 || groups.len() <= 1 {
+            for idxs in &groups {
+                run_group(idxs);
+            }
+        } else {
+            let next = AtomicUsize::new(0);
+            crossbeam_utils::thread::scope(|scope| {
+                for _ in 0..threads.min(groups.len()) {
+                    scope.spawn(|_| loop {
+                        let g = next.fetch_add(1, Ordering::Relaxed);
+                        if g >= groups.len() {
+                            break;
+                        }
+                        run_group(&groups[g]);
+                    });
+                }
+            })
+            .map_err(|_| CaError::Cluster("sweep worker thread panicked".into()))?;
+        }
+        collect_slots(slots)
+    }
+}
+
+/// Drain the per-cell result slots into expansion order, surfacing the
+/// first error.
+fn collect_slots(slots: Vec<Mutex<Option<Result<SweepCell>>>>) -> Result<Vec<SweepCell>> {
+    let mut cells = Vec::with_capacity(slots.len());
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot.into_inner().unwrap() {
+            Some(Ok(cell)) => cells.push(cell),
+            Some(Err(e)) => return Err(e),
+            None => return Err(CaError::Cluster(format!("sweep cell {i} produced no output"))),
+        }
+    }
+    Ok(cells)
 }
 
 #[cfg(test)]
@@ -623,6 +748,56 @@ mod tests {
         let group = result.speedup_table_for("synthetic", 1, 0.5, 0.01);
         assert_eq!(group.cells.len(), tbl.cells.len());
         assert!(result.speedup_table_for("synthetic", 1, 0.25, 0.01).cells.is_empty());
+    }
+
+    #[test]
+    fn warm_start_along_lambda_chains_per_group() {
+        let ds = ds();
+        let grid = Grid::new(&ds);
+        // λ list deliberately ascending: the chain must reorder to
+        // descending (homotopy direction) regardless of axis order.
+        let spec = SweepSpec::new(vec![Topology::new(2)], base().with_k(2))
+            .with_lambdas(vec![0.02, 0.1])
+            .with_threads(1);
+        let cold = grid.sweep(&spec).unwrap();
+        let warm = grid.sweep(&spec.clone().with_warm_start_along_lambda()).unwrap();
+        assert_eq!(warm.cells.len(), 2);
+        // Results stay in expansion order (λ=0.02 first)…
+        assert_eq!(warm.cells[0].lambda, 0.02);
+        assert_eq!(warm.cells[1].lambda, 0.1);
+        // …but the chain ran λ=0.1 first: that cell is bit-identical to
+        // its cold-started self, while λ=0.02 warm-started from it.
+        assert_eq!(warm.cells[1].output.w, cold.cells[1].output.w);
+        let mut session = Session::build(&ds, Topology::new(2)).unwrap();
+        let manual = session
+            .solve(
+                &base()
+                    .with_k(2)
+                    .with_lambda(0.02)
+                    .warm_start(&cold.cells[1].output.w),
+            )
+            .unwrap();
+        assert_eq!(warm.cells[0].output.w, manual.w);
+        assert_ne!(
+            warm.cells[0].output.w, cold.cells[0].output.w,
+            "warm start must actually change the trajectory"
+        );
+        // Deterministic for any thread count: groups are independent,
+        // chains sequential.
+        let par = grid
+            .sweep(&spec.with_warm_start_along_lambda().with_threads(4))
+            .unwrap();
+        for (a, b) in par.cells.iter().zip(&warm.cells) {
+            assert_eq!(a.output.w, b.output.w);
+        }
+    }
+
+    #[test]
+    fn zero_threads_rejected_at_validate() {
+        let zero = SweepSpec::new(vec![Topology::new(1)], base()).with_threads(0);
+        let err = zero.validate().unwrap_err();
+        assert!(err.to_string().contains("≥ 1"), "{err}");
+        assert!(SweepSpec::new(vec![Topology::new(1)], base()).validate().is_ok());
     }
 
     #[test]

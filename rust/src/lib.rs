@@ -23,7 +23,14 @@
 //! ([`grid::Grid::session`]) and runs the expanded (P, k, b, λ) grid on
 //! a scoped thread pool ([`grid::Grid::sweep`]) with deterministic
 //! per-cell seeding, so a full sweep pays the one-time setup exactly
-//! once per (dataset, seed). The legacy free functions
+//! once per (dataset, seed). For long-running multi-dataset traffic the
+//! [`serve`] engine goes one level further: a resident [`serve::Server`]
+//! keyed by content [`serve::Fingerprint`] runs jobs from a bounded
+//! queue on a worker pool, streams [`serve::JobEvent`]s, and persists
+//! every plan cache through a [`serve::PlanStore`] under
+//! `artifacts/plancache/` — so even a *restart* skips the O(d²·n)
+//! setup for data it has seen before (`ca-prox serve` / `ca-prox
+//! submit` speak its JSON-lines protocol). The legacy free functions
 //! ([`coordinator::run`] and friends) survive as bit-identical shims
 //! over a fresh single-use session.
 //!
@@ -62,6 +69,7 @@ pub mod metrics;
 pub mod prox;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod session;
 pub mod solvers;
 pub mod util;
@@ -78,6 +86,9 @@ pub mod prelude {
     pub use crate::grid::{Grid, PlanCache, SweepResult, SweepSpec};
     pub use crate::matrix::csc::CscMatrix;
     pub use crate::matrix::dense::DenseMatrix;
+    pub use crate::serve::{
+        Fingerprint, PlanStore, ServeClient, Server, ServerConfig, SolveRequest,
+    };
     pub use crate::session::{Observer, Session, SolveSpec, Topology};
     pub use crate::solvers::traits::{AlgoKind, SolverConfig, SolverOutput, Stopping};
     pub use crate::util::rng::Rng;

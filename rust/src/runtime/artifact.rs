@@ -24,6 +24,22 @@ use crate::error::{CaError, Result};
 use crate::util::json::{parse, Json};
 use std::path::{Path, PathBuf};
 
+/// Conventional artifacts root (`artifacts/` under the working
+/// directory) — one spelling shared by the AOT manifest loader
+/// (`ca-prox info`, the PJRT backend) and the serve engine's plan
+/// store, so every subsystem's on-disk state lives under one
+/// operator-visible directory.
+pub fn default_artifacts_root() -> PathBuf {
+    PathBuf::from("artifacts")
+}
+
+/// Conventional plan-store root under an artifacts directory:
+/// `<artifacts>/plancache/<fingerprint>/plan.json` (see
+/// [`crate::serve::PlanStore`]).
+pub fn plancache_root(artifacts: &Path) -> PathBuf {
+    artifacts.join("plancache")
+}
+
 /// Kinds of compiled computations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ArtifactKind {
@@ -224,6 +240,13 @@ mod tests {
             p
         )
         .is_err());
+    }
+
+    #[test]
+    fn dir_conventions_compose() {
+        let root = default_artifacts_root();
+        assert_eq!(root, PathBuf::from("artifacts"));
+        assert_eq!(plancache_root(&root), PathBuf::from("artifacts/plancache"));
     }
 
     #[test]

@@ -1,0 +1,101 @@
+//! In-process client for a [`Server`].
+//!
+//! Tests, benches and embedders talk to the serve engine through a
+//! [`ServeClient`] instead of the JSON-lines transport: same registry,
+//! same queue, same workers, no serialization on the path. The
+//! line-protocol front-ends ([`crate::serve::proto`], `ca-prox serve`)
+//! are a thin shell over exactly this API, so anything pinned against
+//! the client holds for the wire protocol too.
+
+use crate::datasets::Dataset;
+use crate::error::Result;
+use crate::grid::CacheStats;
+use crate::serve::server::{DatasetRef, JobTicket, Server, ServerConfig, SolveRequest};
+use crate::session::{SolveSpec, Topology};
+use crate::solvers::traits::SolverOutput;
+
+/// A client owning its server. For a shared server, use [`Server`]
+/// directly (its submit/register methods take `&self`).
+pub struct ServeClient {
+    server: Server,
+}
+
+impl ServeClient {
+    /// Start a server with `config` and wrap it.
+    pub fn start(config: ServerConfig) -> Result<Self> {
+        Ok(ServeClient { server: Server::new(config)? })
+    }
+
+    /// The wrapped server.
+    pub fn server(&self) -> &Server {
+        &self.server
+    }
+
+    /// Register a dataset by value; returns its id.
+    pub fn register(&self, ds: Dataset) -> Result<String> {
+        self.server.register_dataset(ds)
+    }
+
+    /// Register a dataset by preset ref; returns its id.
+    pub fn register_ref(&self, r: &DatasetRef) -> Result<String> {
+        self.server.register_ref(r)
+    }
+
+    /// Enqueue a job; the ticket streams its events.
+    pub fn submit(&self, req: SolveRequest) -> Result<JobTicket> {
+        self.server.submit(req)
+    }
+
+    /// Submit a cold-start job and block for its output.
+    pub fn solve(
+        &self,
+        dataset_id: &str,
+        topology: Topology,
+        spec: &SolveSpec,
+    ) -> Result<SolverOutput> {
+        self.submit(SolveRequest::new(dataset_id, topology, spec.clone()))?.wait()
+    }
+
+    /// Cache statistics of one registered dataset.
+    pub fn dataset_stats(&self, id: &str) -> Option<CacheStats> {
+        self.server.dataset_stats(id)
+    }
+
+    /// Drain the queue and stop the workers.
+    pub fn shutdown(self) -> Result<()> {
+        self.server.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synthetic::{generate, SyntheticSpec};
+
+    #[test]
+    fn client_solve_round_trip() {
+        let client = ServeClient::start(ServerConfig::default().with_threads(1)).unwrap();
+        let ds = generate(
+            &SyntheticSpec {
+                d: 6,
+                n: 120,
+                density: 1.0,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
+            5,
+        );
+        let id = client.register(ds).unwrap();
+        let spec = SolveSpec::default()
+            .with_lambda(0.05)
+            .with_sample_fraction(0.5)
+            .with_max_iters(8)
+            .with_seed(2);
+        let out = client.solve(&id, Topology::new(1), &spec).unwrap();
+        assert_eq!(out.iterations, 8);
+        let stats = client.dataset_stats(&id).unwrap();
+        assert_eq!(stats.lipschitz_computes, 1);
+        client.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,128 @@
+//! Content fingerprints for datasets.
+//!
+//! The plan store keys everything by *what the data is*, never by where
+//! it came from: a [`Fingerprint`] combines the dataset shape (d, n,
+//! nnz) with a streamed 64-bit FNV-1a hash over the column structure,
+//! the value bit patterns and the labels. Two loads of the same bytes —
+//! different path, different process, different day — agree; flipping a
+//! single bit anywhere in X or y changes the hash, so a stale cache
+//! directory can never be served against new data (pinned in
+//! `rust/tests/serve.rs`).
+
+use crate::datasets::Dataset;
+use std::fmt;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Identity of a dataset's contents: shape plus a 64-bit content hash.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Fingerprint {
+    /// Feature count d.
+    pub d: usize,
+    /// Sample count n.
+    pub n: usize,
+    /// Streamed FNV-1a hash of the column data and labels.
+    pub hash: u64,
+}
+
+/// Streaming FNV-1a accumulator over little-endian u64 words.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(FNV_OFFSET)
+    }
+
+    fn word(&mut self, w: u64) {
+        for byte in w.to_le_bytes() {
+            self.0 ^= byte as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+}
+
+impl Fingerprint {
+    /// Fingerprint a dataset by streaming over its contents — O(n + nnz)
+    /// time, O(1) extra space, no copy of the data.
+    pub fn of(ds: &Dataset) -> Fingerprint {
+        let mut h = Fnv::new();
+        h.word(ds.d() as u64);
+        h.word(ds.n() as u64);
+        h.word(ds.x.nnz() as u64);
+        for c in 0..ds.n() {
+            let (rows, values) = ds.x.col(c);
+            // The per-column length delimits the streams, so moving an
+            // entry between columns changes the hash even when the flat
+            // rowidx/values sequences are unchanged.
+            h.word(rows.len() as u64);
+            for &r in rows {
+                h.word(r as u64);
+            }
+            for &v in values {
+                h.word(v.to_bits());
+            }
+        }
+        for &y in &ds.y {
+            h.word(y.to_bits());
+        }
+        Fingerprint { d: ds.d(), n: ds.n(), hash: h.0 }
+    }
+}
+
+impl fmt::Display for Fingerprint {
+    /// Stable directory-name form, e.g. `d54-n581012-1a2b3c4d5e6f7081`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "d{}-n{}-{:016x}", self.d, self.n, self.hash)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synthetic::{generate, SyntheticSpec};
+
+    fn ds(seed: u64) -> Dataset {
+        generate(
+            &SyntheticSpec {
+                d: 6,
+                n: 40,
+                density: 0.5,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn identical_content_agrees_different_content_differs() {
+        let a = Fingerprint::of(&ds(7));
+        let b = Fingerprint::of(&ds(7));
+        assert_eq!(a, b);
+        let c = Fingerprint::of(&ds(8));
+        assert_ne!(a.hash, c.hash, "different generator seed must change the hash");
+    }
+
+    #[test]
+    fn single_value_flip_changes_hash() {
+        let base = ds(7);
+        let a = Fingerprint::of(&base);
+        let mut y2 = base.y.clone();
+        y2[0] += 1e-12;
+        let tampered = Dataset { name: base.name.clone(), x: base.x.clone(), y: y2 };
+        let b = Fingerprint::of(&tampered);
+        assert_eq!(a.d, b.d);
+        assert_eq!(a.n, b.n);
+        assert_ne!(a.hash, b.hash);
+    }
+
+    #[test]
+    fn display_is_directory_safe_and_stable() {
+        let fp = Fingerprint { d: 54, n: 581_012, hash: 0x1a2b_3c4d_5e6f_7081 };
+        let s = fp.to_string();
+        assert_eq!(s, "d54-n581012-1a2b3c4d5e6f7081");
+        assert!(s.chars().all(|c| c.is_ascii_alphanumeric() || c == '-'));
+    }
+}

@@ -1,0 +1,57 @@
+//! Serve engine: a long-running multi-dataset solve service with a
+//! persistent, fingerprint-keyed plan cache.
+//!
+//! The paper's argument is amortization — pay a fixed setup cost once,
+//! spread it over k iterations. [`crate::session`] lifted that across
+//! solves within one plan, [`crate::grid`] across a whole parameter
+//! sweep within one process. This module lifts it one level further:
+//! across **requests, processes and restarts**.
+//!
+//! ```text
+//!            JSON-lines (stdin/stdout or TCP)      in-process
+//!                `ca-prox serve` / `submit`       ServeClient
+//!                          │                           │
+//!                          └────────── serve::proto ───┘
+//!                                        │
+//!                                 serve::Server
+//!                          registry: fingerprint → dataset
+//!                          bounded queue → worker pool
+//!                                        │
+//!                      Session (per job) ── Arc<PlanCache> (per dataset)
+//!                                        │         ↕ hydrate / save
+//!                                 serve::PlanStore
+//!                        artifacts/plancache/<fingerprint>/plan.json
+//! ```
+//!
+//! * [`fingerprint`] — content identity: shape + streamed 64-bit hash,
+//!   so caches key on *what the data is*, never on a path.
+//! * [`store`] — validated, atomic, bit-exact persistence of Lipschitz
+//!   estimates, certified reference solutions and shard-layout keys;
+//!   stale or tampered files are rejected wholesale and recomputed.
+//! * [`server`] — the resident service: dataset registry, bounded work
+//!   queue, deterministic jobs, streamed [`server::JobEvent`]s reusing
+//!   the [`crate::session::Observer`] machinery, warm-start pools for
+//!   λ-path traffic.
+//! * [`proto`] + [`client`] — the schema-versioned JSON-lines protocol
+//!   behind `ca-prox serve` / `ca-prox submit`, and the in-process
+//!   client the tests and benches drive.
+//!
+//! `rust/tests/serve.rs` pins the contract: concurrent submits are
+//! bit-identical to fresh standalone sessions, a warm boot against the
+//! same bytes pays zero Lipschitz computes (≥ 1 `persisted_hits`), and
+//! changed bytes under the same name get a new fingerprint and a full
+//! recompute.
+
+pub mod client;
+pub mod fingerprint;
+pub mod proto;
+pub mod server;
+pub mod store;
+
+pub use client::ServeClient;
+pub use fingerprint::Fingerprint;
+pub use proto::{parse_request, serve_loop, Request, SubmitCmd, PROTO_SCHEMA};
+pub use server::{
+    DatasetRef, JobEvent, JobEventKind, JobId, JobTicket, Server, ServerConfig, SolveRequest,
+};
+pub use store::{HydrateReport, PlanStore, STORE_SCHEMA};

@@ -1,0 +1,495 @@
+//! JSON-lines request/response protocol (schema v1) for the serve
+//! engine, plus the blocking loop behind `ca-prox serve`.
+//!
+//! One request per line in, one response object per line out — the
+//! same shape as the `BENCH {json}` convention, and schema-versioned
+//! the same way so tooling can reject lines it doesn't understand
+//! (`.github/scripts/check_serve.py` does exactly that in CI).
+//!
+//! ```text
+//! → {"schema":1,"op":"submit","dataset":{"name":"smoke","scale_n":400},
+//!    "topology":{"p":2},"solve":{"k":4,"b":0.5,"lambda":0.05,"iters":8,"seed":3}}
+//! ← {"schema":1,"event":"queued","job":1,"dataset":"d12-n400-…"}
+//! → {"schema":1,"op":"drain"}
+//! ← {"schema":1,"event":"started","job":1}
+//! ← {"schema":1,"event":"block","job":1,"t0":0,"k_eff":4,…}
+//! ← {"schema":1,"event":"done","job":1,"output":{…}}
+//! ← {"schema":1,"event":"drained","jobs":1}
+//! → {"schema":1,"op":"stats"}
+//! ← {"schema":1,"event":"stats","datasets":[{"fingerprint":…,"persisted_hits":…}]}
+//! → {"schema":1,"op":"shutdown"}
+//! ← {"schema":1,"event":"bye"}
+//! ```
+//!
+//! Submit is asynchronous (the response is `queued`; jobs run on the
+//! worker pool immediately) and `drain` blocks until every job
+//! submitted on this connection finished, replaying each job's full
+//! event stream in job order — deterministic output for a pipe, full
+//! concurrency underneath. Topology/solve fields reuse the config
+//! system's key set ([`crate::config::spec::RunSpec::apply_kv`]), so
+//! the CLI, TOML configs and the wire protocol can never drift apart.
+
+use crate::config::parse::TomlValue;
+use crate::config::spec::RunSpec;
+use crate::error::{CaError, Result};
+use crate::grid::CacheStats;
+use crate::serve::server::{DatasetRef, JobEvent, JobEventKind, Server, SolveRequest};
+use crate::session::{SolveSpec, Topology};
+use crate::solvers::traits::AlgoKind;
+use crate::util::json::{parse, Json};
+use std::io::{BufRead, Write};
+
+/// Protocol schema version (requests and responses).
+pub const PROTO_SCHEMA: usize = 1;
+
+const TOPOLOGY_KEYS: [&str; 4] = ["p", "machine", "allreduce", "partition"];
+const SOLVE_KEYS: [&str; 8] = ["algo", "k", "q", "b", "lambda", "iters", "seed", "record_every"];
+
+/// One parsed request line.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Liveness check → `pong`.
+    Ping,
+    /// Enqueue a solve → `queued`.
+    Submit(Box<SubmitCmd>),
+    /// Block until every job submitted on this connection finished,
+    /// replaying their event streams → `drained`.
+    Drain,
+    /// Per-dataset cache statistics → `stats`.
+    Stats,
+    /// Stop the serve loop → `bye`.
+    Shutdown,
+}
+
+/// Payload of a `submit` request.
+#[derive(Clone, Debug)]
+pub struct SubmitCmd {
+    /// Which dataset to solve on (resolved + registered server-side).
+    pub dataset: DatasetRef,
+    /// Plan-time topology.
+    pub topology: Topology,
+    /// Solve-time request.
+    pub solve: SolveSpec,
+    /// Optional warm-start pool tag.
+    pub warm_tag: Option<String>,
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let root = parse(line)?;
+    match root.get("schema").and_then(Json::as_usize) {
+        Some(PROTO_SCHEMA) => {}
+        Some(v) => {
+            return Err(CaError::Config(format!(
+                "unsupported serve schema {v} (expected {PROTO_SCHEMA})"
+            )))
+        }
+        None => return Err(CaError::Config("request missing schema".into())),
+    }
+    match root.get("op").and_then(Json::as_str) {
+        Some("ping") => Ok(Request::Ping),
+        Some("drain") => Ok(Request::Drain),
+        Some("stats") => Ok(Request::Stats),
+        Some("shutdown") => Ok(Request::Shutdown),
+        Some("submit") => Ok(Request::Submit(Box::new(parse_submit(&root)?))),
+        Some(other) => Err(CaError::Config(format!("unknown op '{other}'"))),
+        None => Err(CaError::Config("request missing op".into())),
+    }
+}
+
+fn parse_submit(root: &Json) -> Result<SubmitCmd> {
+    let ds_obj = root
+        .get("dataset")
+        .ok_or_else(|| CaError::Config("submit missing dataset".into()))?;
+    let name = ds_obj
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| CaError::Config("dataset missing name".into()))?;
+    let mut dataset = DatasetRef::new(name);
+    dataset.scale_n = ds_obj.get("scale_n").and_then(Json::as_usize);
+    if let Some(seed) = ds_obj.get("gen_seed").and_then(Json::as_usize) {
+        dataset.gen_seed = seed as u64;
+    }
+    // Reuse the config system's key application for topology + solve so
+    // names, ranges and error messages match the CLI and TOML configs.
+    let mut spec = RunSpec::default();
+    if let Some(v) = root.get("topology") {
+        apply_section(&mut spec, v, "topology", &TOPOLOGY_KEYS)?;
+    }
+    if let Some(v) = root.get("solve") {
+        apply_section(&mut spec, v, "solve", &SOLVE_KEYS)?;
+    }
+    let warm_tag = match root.get("warm_tag") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(_) => return Err(CaError::Config("warm_tag must be a string".into())),
+    };
+    Ok(SubmitCmd { dataset, topology: spec.topology, solve: spec.solve, warm_tag })
+}
+
+fn apply_section(spec: &mut RunSpec, v: &Json, section: &str, allowed: &[&str]) -> Result<()> {
+    let Json::Obj(map) = v else {
+        return Err(CaError::Config(format!("{section} must be an object")));
+    };
+    for (key, value) in map {
+        if !allowed.contains(&key.as_str()) {
+            return Err(CaError::Config(format!("unknown {section} key '{key}'")));
+        }
+        let tv = match value {
+            Json::Num(x) => TomlValue::Num(*x),
+            Json::Str(s) => TomlValue::Str(s.clone()),
+            _ => {
+                return Err(CaError::Config(format!(
+                    "{section}.{key} must be a number or string"
+                )))
+            }
+        };
+        spec.apply_kv(key, &tv)?;
+    }
+    Ok(())
+}
+
+/// Serialize a [`SubmitCmd`] back to its request line (used by
+/// `ca-prox submit` and by the round-trip tests). Only protocol-visible
+/// fields are carried: warm starts travel as tags, never as vectors.
+pub fn submit_to_json(cmd: &SubmitCmd) -> Json {
+    let mut dataset = vec![("name", Json::Str(cmd.dataset.name.clone()))];
+    if let Some(n) = cmd.dataset.scale_n {
+        dataset.push(("scale_n", Json::Num(n as f64)));
+    }
+    dataset.push(("gen_seed", Json::Num(cmd.dataset.gen_seed as f64)));
+    let topology = vec![
+        ("p", Json::Num(cmd.topology.p as f64)),
+        ("machine", Json::Str(cmd.topology.machine.name.to_string())),
+        ("allreduce", Json::Str(allreduce_wire_name(cmd).into())),
+        ("partition", Json::Str(partition_wire_name(cmd).into())),
+    ];
+    let solve = vec![
+        (
+            "algo",
+            Json::Str(
+                match cmd.solve.algo {
+                    AlgoKind::Sfista => "sfista",
+                    AlgoKind::Spnm => "spnm",
+                }
+                .into(),
+            ),
+        ),
+        ("k", Json::Num(cmd.solve.k as f64)),
+        ("q", Json::Num(cmd.solve.q as f64)),
+        ("b", Json::Num(cmd.solve.b)),
+        ("lambda", Json::Num(cmd.solve.lambda)),
+        ("iters", Json::Num(cmd.solve.stopping.cap() as f64)),
+        ("seed", Json::Num(cmd.solve.seed as f64)),
+        ("record_every", Json::Num(cmd.solve.record_every as f64)),
+    ];
+    let mut pairs = vec![
+        ("schema", Json::Num(PROTO_SCHEMA as f64)),
+        ("op", Json::Str("submit".into())),
+        ("dataset", Json::obj(dataset)),
+        ("topology", Json::obj(topology)),
+        ("solve", Json::obj(solve)),
+    ];
+    if let Some(tag) = &cmd.warm_tag {
+        pairs.push(("warm_tag", Json::Str(tag.clone())));
+    }
+    Json::obj(pairs)
+}
+
+fn allreduce_wire_name(cmd: &SubmitCmd) -> &'static str {
+    use crate::comm::collectives::AllReduceAlgo;
+    // `AllReduceAlgo::parse` accepts these (its `name()` form
+    // "binomial-tree" would not round-trip).
+    match cmd.topology.allreduce {
+        AllReduceAlgo::BinomialTree => "tree",
+        AllReduceAlgo::RecursiveDoubling => "rd",
+        AllReduceAlgo::Ring => "ring",
+    }
+}
+
+fn partition_wire_name(cmd: &SubmitCmd) -> &'static str {
+    use crate::cluster::shard::PartitionStrategy;
+    match cmd.topology.partition {
+        PartitionStrategy::Contiguous => "contiguous",
+        PartitionStrategy::Greedy => "greedy",
+    }
+}
+
+// ---- response lines ----
+
+fn response(event: &str, mut extra: Vec<(&str, Json)>) -> String {
+    let mut pairs = vec![
+        ("schema", Json::Num(PROTO_SCHEMA as f64)),
+        ("event", Json::Str(event.into())),
+    ];
+    pairs.append(&mut extra);
+    Json::obj(pairs).to_string_compact()
+}
+
+/// `queued` acknowledgement for a submit.
+pub fn queued_line(job: u64, dataset_id: &str) -> String {
+    response(
+        "queued",
+        vec![("job", Json::Num(job as f64)), ("dataset", Json::Str(dataset_id.into()))],
+    )
+}
+
+/// One job event as a response line.
+pub fn event_line(ev: &JobEvent) -> String {
+    let job = ("job", Json::Num(ev.job as f64));
+    match &ev.kind {
+        JobEventKind::Started => response("started", vec![job]),
+        JobEventKind::Block(b) => response(
+            "block",
+            vec![
+                job,
+                ("t0", Json::Num(b.t0 as f64)),
+                ("k_eff", Json::Num(b.k_eff as f64)),
+                ("iterations", Json::Num(b.iterations as f64)),
+                ("collective_rounds", Json::Num(b.collective_rounds as f64)),
+                ("modeled_seconds", Json::Num(b.modeled_seconds)),
+            ],
+        ),
+        JobEventKind::Record(h) => response(
+            "record",
+            vec![
+                job,
+                ("iter", Json::Num(h.iter as f64)),
+                ("objective", Json::Num(h.objective)),
+                ("rel_error", Json::Num(h.rel_error)),
+                ("modeled_seconds", Json::Num(h.modeled_seconds)),
+            ],
+        ),
+        JobEventKind::Done(out) => response("done", vec![job, ("output", out.to_json())]),
+        JobEventKind::Failed(msg) => {
+            response("failed", vec![job, ("message", Json::Str(msg.clone()))])
+        }
+    }
+}
+
+/// `drained` terminator after replaying all pending jobs.
+pub fn drained_line(jobs: usize) -> String {
+    response("drained", vec![("jobs", Json::Num(jobs as f64))])
+}
+
+/// Per-dataset cache statistics (every [`CacheStats`] counter,
+/// including `persisted_hits` / `store_writes` — the CI serve-smoke
+/// asserts on these).
+pub fn stats_line(stats: &[(String, CacheStats)]) -> String {
+    let datasets = stats
+        .iter()
+        .map(|(fp, s)| {
+            Json::obj(vec![
+                ("fingerprint", Json::Str(fp.clone())),
+                ("lipschitz_computes", Json::Num(s.lipschitz_computes as f64)),
+                ("lipschitz_hits", Json::Num(s.lipschitz_hits as f64)),
+                ("reference_computes", Json::Num(s.reference_computes as f64)),
+                ("reference_hits", Json::Num(s.reference_hits as f64)),
+                ("shard_builds", Json::Num(s.shard_builds as f64)),
+                ("shard_hits", Json::Num(s.shard_hits as f64)),
+                ("persisted_hits", Json::Num(s.persisted_hits as f64)),
+                ("store_writes", Json::Num(s.store_writes as f64)),
+            ])
+        })
+        .collect();
+    response("stats", vec![("datasets", Json::Arr(datasets))])
+}
+
+/// Error response (the loop keeps serving after one).
+pub fn error_line(message: &str) -> String {
+    response("error", vec![("message", Json::Str(message.into()))])
+}
+
+/// `ping` response.
+pub fn pong_line() -> String {
+    response("pong", vec![])
+}
+
+/// `shutdown` acknowledgement.
+pub fn bye_line() -> String {
+    response("bye", vec![])
+}
+
+/// Drive one connection: read request lines, write response lines.
+/// Returns `true` when a `shutdown` op ended the session (the caller
+/// should stop accepting), `false` on EOF.
+pub fn serve_loop<R: BufRead, W: Write>(
+    server: &Server,
+    reader: &mut R,
+    writer: &mut W,
+) -> Result<bool> {
+    let mut pending: Vec<crate::serve::server::JobTicket> = Vec::new();
+    for line in reader.lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match parse_request(trimmed) {
+            Err(e) => writeln!(writer, "{}", error_line(&e.to_string()))?,
+            Ok(Request::Ping) => writeln!(writer, "{}", pong_line())?,
+            Ok(Request::Stats) => writeln!(writer, "{}", stats_line(&server.stats()))?,
+            Ok(Request::Shutdown) => {
+                writeln!(writer, "{}", bye_line())?;
+                writer.flush()?;
+                return Ok(true);
+            }
+            Ok(Request::Drain) => {
+                let jobs = pending.len();
+                for ticket in pending.drain(..) {
+                    // Failures are reported through the job's own
+                    // `failed` event; the drain itself never errors.
+                    let _ = ticket.wait();
+                    for ev in ticket.events() {
+                        writeln!(writer, "{}", event_line(&ev))?;
+                    }
+                }
+                writeln!(writer, "{}", drained_line(jobs))?;
+            }
+            Ok(Request::Submit(cmd)) => {
+                let queued = server.register_ref(&cmd.dataset).and_then(|id| {
+                    let mut req = SolveRequest::new(&id, cmd.topology, cmd.solve.clone());
+                    req.warm_tag = cmd.warm_tag.clone();
+                    server.submit(req).map(|t| (t, id))
+                });
+                match queued {
+                    Ok((ticket, id)) => {
+                        writeln!(writer, "{}", queued_line(ticket.id(), &id))?;
+                        pending.push(ticket);
+                    }
+                    Err(e) => writeln!(writer, "{}", error_line(&e.to_string()))?,
+                }
+            }
+        }
+        writer.flush()?;
+    }
+    // EOF: finish whatever was submitted so a pipe without an explicit
+    // drain still completes its work before the process exits.
+    for ticket in pending.drain(..) {
+        let _ = ticket.wait();
+    }
+    Ok(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::server::ServerConfig;
+
+    #[test]
+    fn parse_rejects_bad_envelopes() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request("{}").is_err());
+        assert!(parse_request(r#"{"schema":2,"op":"ping"}"#).is_err());
+        assert!(parse_request(r#"{"schema":1}"#).is_err());
+        assert!(parse_request(r#"{"schema":1,"op":"frobnicate"}"#).is_err());
+        assert!(matches!(
+            parse_request(r#"{"schema":1,"op":"ping"}"#).unwrap(),
+            Request::Ping
+        ));
+    }
+
+    #[test]
+    fn parse_submit_applies_topology_and_solve() {
+        let line = r#"{"schema":1,"op":"submit",
+            "dataset":{"name":"smoke","scale_n":300,"gen_seed":7},
+            "topology":{"p":8,"machine":"ethernet","allreduce":"ring","partition":"greedy"},
+            "solve":{"algo":"spnm","k":4,"q":2,"b":0.25,"lambda":0.3,"iters":12,"seed":9},
+            "warm_tag":"path"}"#;
+        let Request::Submit(cmd) = parse_request(line).unwrap() else {
+            panic!("wrong request kind")
+        };
+        assert_eq!(cmd.dataset, DatasetRef::new("smoke").with_scale_n(300).with_gen_seed(7));
+        assert_eq!(cmd.topology.p, 8);
+        assert_eq!(cmd.topology.machine.name, "ethernet");
+        assert_eq!(cmd.solve.algo, AlgoKind::Spnm);
+        assert_eq!(cmd.solve.k, 4);
+        assert_eq!(cmd.solve.b, 0.25);
+        assert_eq!(cmd.solve.stopping.cap(), 12);
+        assert_eq!(cmd.solve.seed, 9);
+        assert_eq!(cmd.warm_tag.as_deref(), Some("path"));
+        // Unknown keys and misplaced keys are rejected.
+        assert!(parse_request(
+            r#"{"schema":1,"op":"submit","dataset":{"name":"smoke"},"topology":{"k":4}}"#
+        )
+        .is_err());
+        assert!(parse_request(
+            r#"{"schema":1,"op":"submit","dataset":{"name":"smoke"},"solve":{"nope":1}}"#
+        )
+        .is_err());
+        assert!(parse_request(r#"{"schema":1,"op":"submit"}"#).is_err());
+    }
+
+    #[test]
+    fn submit_round_trips_through_json() {
+        let line = r#"{"schema":1,"op":"submit",
+            "dataset":{"name":"smoke","scale_n":300,"gen_seed":7},
+            "topology":{"p":8,"machine":"ethernet","allreduce":"tree","partition":"greedy"},
+            "solve":{"algo":"spnm","k":4,"q":2,"b":0.25,"lambda":0.3,"iters":12,"seed":9}}"#;
+        let Request::Submit(cmd) = parse_request(line).unwrap() else {
+            panic!("wrong request kind")
+        };
+        let re_encoded = submit_to_json(&cmd).to_string_compact();
+        let Request::Submit(cmd2) = parse_request(&re_encoded).unwrap() else {
+            panic!("re-encoded line must parse")
+        };
+        assert_eq!(cmd2.dataset, cmd.dataset);
+        assert_eq!(cmd2.topology.p, cmd.topology.p);
+        assert_eq!(cmd2.topology.allreduce, cmd.topology.allreduce);
+        assert_eq!(cmd2.topology.partition, cmd.topology.partition);
+        assert_eq!(cmd2.solve.algo, cmd.solve.algo);
+        assert_eq!(cmd2.solve.lambda.to_bits(), cmd.solve.lambda.to_bits());
+        assert_eq!(cmd2.solve.stopping.cap(), cmd.solve.stopping.cap());
+    }
+
+    #[test]
+    fn serve_loop_runs_a_batch_on_a_pipe() {
+        let server = Server::new(ServerConfig::default().with_threads(2)).unwrap();
+        let input = concat!(
+            r#"{"schema":1,"op":"ping"}"#,
+            "\n",
+            r#"{"schema":1,"op":"submit","dataset":{"name":"smoke","scale_n":200},"#,
+            r#""topology":{"p":1},"solve":{"k":2,"b":0.5,"lambda":0.05,"iters":4,"seed":1}}"#,
+            "\n",
+            r#"{"schema":1,"op":"submit","dataset":{"name":"smoke","scale_n":200},"#,
+            r#""topology":{"p":1},"solve":{"k":2,"b":0.5,"lambda":0.1,"iters":4,"seed":1}}"#,
+            "\n",
+            "this is not json\n",
+            r#"{"schema":1,"op":"drain"}"#,
+            "\n",
+            r#"{"schema":1,"op":"stats"}"#,
+            "\n",
+            r#"{"schema":1,"op":"shutdown"}"#,
+            "\n",
+        );
+        let mut out = Vec::new();
+        let ended = serve_loop(&server, &mut std::io::Cursor::new(input), &mut out).unwrap();
+        assert!(ended, "shutdown op must end the loop");
+        server.shutdown().unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let events: Vec<Json> = text
+            .lines()
+            .map(|l| parse(l).unwrap_or_else(|e| panic!("unparseable response {l}: {e}")))
+            .collect();
+        let kinds: Vec<&str> =
+            events.iter().map(|e| e.get("event").unwrap().as_str().unwrap()).collect();
+        assert_eq!(kinds.iter().filter(|k| **k == "queued").count(), 2);
+        assert_eq!(kinds.iter().filter(|k| **k == "done").count(), 2);
+        assert_eq!(kinds.iter().filter(|k| **k == "error").count(), 1);
+        assert_eq!(kinds.first(), Some(&"pong"));
+        assert_eq!(kinds.last(), Some(&"bye"));
+        // Every response carries the schema tag.
+        for e in &events {
+            assert_eq!(e.get("schema").and_then(Json::as_usize), Some(PROTO_SCHEMA));
+        }
+        // Stats cover exactly one dataset (both jobs shared the bytes)
+        // and its setup ran once.
+        let stats = events.iter().find(|e| e.get("event").unwrap().as_str() == Some("stats"));
+        let datasets = stats.unwrap().get("datasets").unwrap().as_arr().unwrap();
+        assert_eq!(datasets.len(), 1);
+        assert_eq!(
+            datasets[0].get("lipschitz_computes").and_then(Json::as_usize),
+            Some(1)
+        );
+    }
+}

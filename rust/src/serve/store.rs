@@ -1,0 +1,559 @@
+//! Cross-process persistence for [`crate::grid::PlanCache`] contents.
+//!
+//! A [`PlanStore`] serializes the one-time work a plan needs — Lipschitz
+//! estimates, certified reference solutions and shard-layout keys —
+//! under `<root>/<fingerprint>/plan.json`, keyed by the dataset's
+//! [`super::Fingerprint`] so a process that boots against the same bytes
+//! can skip the O(d²·n) setup entirely, and a process that boots against
+//! *different* bytes can never be poisoned by someone else's numbers.
+//!
+//! Trust model: nothing in a store file is taken on faith.
+//!
+//! * the embedded fingerprint must equal the fingerprint recomputed
+//!   from the live dataset — a stale directory (data changed under the
+//!   same path) is rejected wholesale;
+//! * every entry is validated (hex bit patterns, vector lengths against
+//!   the live `d`, partition names) before *anything* hydrates — a
+//!   truncated or hand-edited file is rejected wholesale, never
+//!   partially served;
+//! * rejection is silent-but-reported ([`HydrateReport::rejected`]):
+//!   the caller recomputes, exactly as if the file never existed.
+//!
+//! Floats round-trip as hexadecimal u64 bit patterns (JSON numbers are
+//! f64 and would lose NaN payloads and signed zeros; bit patterns are
+//! exact), so a hydrated cache is bit-identical to the cache that was
+//! saved — pinned by a property test in `rust/tests/serve.rs`.
+
+use crate::cluster::shard::PartitionStrategy;
+use crate::datasets::Dataset;
+use crate::error::{CaError, Result};
+use crate::grid::PlanCache;
+use crate::serve::fingerprint::Fingerprint;
+use crate::util::json::{parse, Json};
+use std::path::{Path, PathBuf};
+
+/// Store-file schema version (bumped on incompatible layout changes;
+/// unknown versions are rejected and recomputed, like any bad file).
+pub const STORE_SCHEMA: usize = 1;
+
+/// Disambiguates temp-file names when several threads of one process
+/// save concurrently (the process id covers cross-process savers).
+static TMP_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// What a [`PlanStore::hydrate`] call actually loaded.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HydrateReport {
+    /// Lipschitz estimates inserted.
+    pub lipschitz: usize,
+    /// Reference solutions inserted.
+    pub references: usize,
+    /// Shard layouts rebuilt.
+    pub shards: usize,
+    /// Why the store file was rejected (`None` = clean load or no file).
+    /// A rejected file hydrates nothing — the caller recomputes.
+    pub rejected: Option<String>,
+}
+
+impl HydrateReport {
+    /// Total entries hydrated.
+    pub fn total(&self) -> usize {
+        self.lipschitz + self.references + self.shards
+    }
+}
+
+/// A directory of fingerprint-keyed plan files.
+#[derive(Clone, Debug)]
+pub struct PlanStore {
+    root: PathBuf,
+}
+
+/// Validated in-memory form of a store file, parsed completely before
+/// any of it touches a cache.
+struct Parsed {
+    lipschitz: Vec<(u64, f64)>,
+    references: Vec<(u64, usize, f64, Vec<f64>)>,
+    shards: Vec<(usize, PartitionStrategy)>,
+}
+
+fn hex64(bits: u64) -> Json {
+    Json::Str(format!("{bits:016x}"))
+}
+
+fn parse_hex64(v: Option<&Json>, what: &str) -> std::result::Result<u64, String> {
+    v.and_then(Json::as_str)
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| format!("bad or missing {what}"))
+}
+
+fn partition_name(s: PartitionStrategy) -> &'static str {
+    match s {
+        PartitionStrategy::Contiguous => "contiguous",
+        PartitionStrategy::Greedy => "greedy",
+    }
+}
+
+fn parse_partition(name: &str) -> std::result::Result<PartitionStrategy, String> {
+    match name {
+        "contiguous" => Ok(PartitionStrategy::Contiguous),
+        "greedy" => Ok(PartitionStrategy::Greedy),
+        other => Err(format!("unknown partition '{other}'")),
+    }
+}
+
+impl PlanStore {
+    /// Store rooted at `root` (conventionally
+    /// `artifacts/plancache`, see
+    /// [`crate::runtime::artifact::plancache_root`]). Nothing touches
+    /// the filesystem until [`PlanStore::save`] / [`PlanStore::hydrate`].
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        PlanStore { root: root.into() }
+    }
+
+    /// The store's root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Directory holding `ds`'s plan file.
+    pub fn dir_for(&self, fp: &Fingerprint) -> PathBuf {
+        self.root.join(fp.to_string())
+    }
+
+    /// Path of `ds`'s plan file.
+    pub fn plan_path(&self, fp: &Fingerprint) -> PathBuf {
+        self.dir_for(fp).join("plan.json")
+    }
+
+    /// Persist `cache`'s exportable contents keyed by `ds`'s
+    /// fingerprint. The write is atomic (uniquely-named temp file +
+    /// rename), so concurrent savers — two workers finishing jobs on
+    /// one dataset, or two processes sharing a store — each publish a
+    /// complete file and readers never see a torn one. A save whose
+    /// cache has not changed since the last completed save (and whose
+    /// file already exists) is skipped, returning 0 without touching
+    /// the disk or the `store_writes` counter; otherwise returns the
+    /// number of entries written.
+    pub fn save(&self, ds: &Dataset, cache: &PlanCache) -> Result<usize> {
+        let fp = Fingerprint::of(ds);
+        // Snapshot the epoch *before* exporting: a mutation that lands
+        // mid-export may or may not be in the file, but it leaves
+        // `epoch > saved_epoch`, so the next save re-writes it.
+        let epoch = cache.epoch();
+        if cache.saved_epoch() == epoch && self.plan_path(&fp).is_file() {
+            return Ok(0);
+        }
+        let lip = cache.export_lipschitz();
+        let refs = cache.export_references();
+        let shards = cache.export_shard_keys();
+        let entries = lip.len() + refs.len() + shards.len();
+        let doc = Json::obj(vec![
+            ("schema", Json::Num(STORE_SCHEMA as f64)),
+            ("fingerprint", Json::Str(fp.to_string())),
+            (
+                "lipschitz",
+                Json::Arr(
+                    lip.iter()
+                        .map(|&(seed, l)| {
+                            Json::obj(vec![("seed", hex64(seed)), ("l_bits", hex64(l.to_bits()))])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "references",
+                Json::Arr(
+                    refs.iter()
+                        .map(|(lambda_bits, max_iters, tol, w)| {
+                            Json::obj(vec![
+                                ("lambda_bits", hex64(*lambda_bits)),
+                                ("max_iters", Json::Num(*max_iters as f64)),
+                                ("tol_bits", hex64(tol.to_bits())),
+                                (
+                                    "w_bits",
+                                    Json::Arr(w.iter().map(|v| hex64(v.to_bits())).collect()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "shards",
+                Json::Arr(
+                    shards
+                        .iter()
+                        .map(|&(p, strategy)| {
+                            Json::obj(vec![
+                                ("p", Json::Num(p as f64)),
+                                ("partition", Json::Str(partition_name(strategy).into())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let dir = self.dir_for(&fp);
+        std::fs::create_dir_all(&dir)?;
+        // Unique temp name per write: a shared `plan.json.tmp` would
+        // let two concurrent savers interleave into one file and
+        // publish it torn.
+        let tmp = dir.join(format!(
+            "plan.json.tmp.{}.{}",
+            std::process::id(),
+            TMP_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, doc.to_string_pretty())?;
+        if let Err(e) = std::fs::rename(&tmp, self.plan_path(&fp)) {
+            std::fs::remove_file(&tmp).ok();
+            return Err(CaError::Io(e));
+        }
+        cache.note_saved(epoch);
+        Ok(entries)
+    }
+
+    /// Load `ds`'s plan file (if any) into `cache`. Missing files and
+    /// rejected files are both non-errors — the report says what
+    /// happened and the caller's compute paths fill the gaps; `Err` is
+    /// reserved for live-dataset failures (a shard rebuild failing).
+    pub fn hydrate(&self, ds: &Dataset, cache: &PlanCache) -> Result<HydrateReport> {
+        let fp = Fingerprint::of(ds);
+        let path = self.plan_path(&fp);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(HydrateReport::default())
+            }
+            Err(e) => {
+                return Ok(HydrateReport {
+                    rejected: Some(format!("unreadable {}: {e}", path.display())),
+                    ..Default::default()
+                })
+            }
+        };
+        match Self::parse_and_validate(&text, &fp, ds.d()) {
+            Ok(parsed) => {
+                let mut report = HydrateReport::default();
+                for &(seed, l) in &parsed.lipschitz {
+                    if cache.hydrate_lipschitz(seed, l) {
+                        report.lipschitz += 1;
+                    }
+                }
+                for (lambda_bits, max_iters, tol, w) in parsed.references {
+                    if cache.hydrate_reference(lambda_bits, max_iters, tol, w) {
+                        report.references += 1;
+                    }
+                }
+                // Layouts are deterministic recomputations from the live
+                // dataset — rebuilding here moves the column gather to
+                // boot time so the first request doesn't pay it.
+                for &(p, strategy) in &parsed.shards {
+                    cache.sharded(ds, p, strategy)?;
+                    report.shards += 1;
+                }
+                Ok(report)
+            }
+            Err(reason) => Ok(HydrateReport {
+                rejected: Some(format!("{}: {reason}", path.display())),
+                ..Default::default()
+            }),
+        }
+    }
+
+    /// Parse + validate a complete store file against the live dataset's
+    /// fingerprint and dimension. All-or-nothing: the first invalid
+    /// entry rejects the whole file.
+    fn parse_and_validate(
+        text: &str,
+        fp: &Fingerprint,
+        d: usize,
+    ) -> std::result::Result<Parsed, String> {
+        let root = parse(text).map_err(|e| format!("unparseable ({e})"))?;
+        match root.get("schema").and_then(Json::as_usize) {
+            Some(STORE_SCHEMA) => {}
+            Some(v) => return Err(format!("unsupported store schema {v}")),
+            None => return Err("missing schema".into()),
+        }
+        let stored_fp = root
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "missing fingerprint".to_string())?;
+        if stored_fp != fp.to_string() {
+            return Err(format!(
+                "stale fingerprint: file says {stored_fp}, dataset is {fp}"
+            ));
+        }
+        let arr = |key: &str| {
+            root.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("missing {key} array"))
+        };
+        let mut lipschitz = Vec::new();
+        for e in arr("lipschitz")? {
+            let seed = parse_hex64(e.get("seed"), "lipschitz seed")?;
+            let l = f64::from_bits(parse_hex64(e.get("l_bits"), "lipschitz l_bits")?);
+            // A NaN/∞/negative L̂ would poison every step size computed
+            // from it while still reporting jobs as successful — the
+            // one malformation worse than a rejected file.
+            if !l.is_finite() || l < 0.0 {
+                return Err("non-finite or negative lipschitz l_bits".into());
+            }
+            lipschitz.push((seed, l));
+        }
+        let mut references = Vec::new();
+        for e in arr("references")? {
+            let lambda_bits = parse_hex64(e.get("lambda_bits"), "reference lambda_bits")?;
+            let max_iters = e
+                .get("max_iters")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| "bad or missing reference max_iters".to_string())?;
+            let tol = f64::from_bits(parse_hex64(e.get("tol_bits"), "reference tol_bits")?);
+            if !tol.is_finite() {
+                return Err("non-finite reference tol_bits (uncertified, never persisted)".into());
+            }
+            let w_json = e
+                .get("w_bits")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| "missing reference w_bits".to_string())?;
+            if w_json.len() != d {
+                return Err(format!(
+                    "reference solution has {} entries, dataset has d = {d}",
+                    w_json.len()
+                ));
+            }
+            let mut w = Vec::with_capacity(d);
+            for v in w_json {
+                let x = f64::from_bits(parse_hex64(Some(v), "reference w_bits entry")?);
+                if !x.is_finite() {
+                    return Err("non-finite reference w_bits entry".into());
+                }
+                w.push(x);
+            }
+            references.push((lambda_bits, max_iters, tol, w));
+        }
+        let mut shards = Vec::new();
+        for e in arr("shards")? {
+            let p = e
+                .get("p")
+                .and_then(Json::as_usize)
+                .filter(|&p| p >= 1)
+                .ok_or_else(|| "bad or missing shard p".to_string())?;
+            let strategy = parse_partition(
+                e.get("partition")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "missing shard partition".to_string())?,
+            )?;
+            shards.push((p, strategy));
+        }
+        Ok(Parsed { lipschitz, references, shards })
+    }
+
+    /// Remove `ds`'s plan directory, if present (used by tests and by
+    /// operators resetting a poisoned cache).
+    pub fn evict(&self, ds: &Dataset) -> Result<bool> {
+        let dir = self.dir_for(&Fingerprint::of(ds));
+        match std::fs::remove_dir_all(&dir) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(CaError::Io(e)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::costmodel::MachineModel;
+    use crate::comm::trace::CostTrace;
+    use crate::datasets::synthetic::{generate, SyntheticSpec};
+
+    fn ds(seed: u64) -> Dataset {
+        generate(
+            &SyntheticSpec {
+                d: 6,
+                n: 60,
+                density: 1.0,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
+            seed,
+        )
+    }
+
+    fn tmp_store(tag: &str) -> PlanStore {
+        let dir = std::env::temp_dir()
+            .join(format!("ca_prox_store_test_{}_{tag}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        PlanStore::new(dir)
+    }
+
+    #[test]
+    fn missing_file_hydrates_nothing_without_error() {
+        let ds = ds(1);
+        let store = tmp_store("missing");
+        let cache = PlanCache::new();
+        let report = store.hydrate(&ds, &cache).unwrap();
+        assert_eq!(report, HydrateReport::default());
+    }
+
+    #[test]
+    fn save_then_hydrate_round_trips_bitwise() {
+        let ds = ds(2);
+        let store = tmp_store("roundtrip");
+        let cache = PlanCache::new();
+        let machine = MachineModel::comet();
+        let mut trace = CostTrace::new();
+        let l = cache.lipschitz(&ds, 3, &machine, &mut trace).unwrap();
+        let w = cache.reference_solution(&ds, 0.05, 1e-6, 50_000).unwrap();
+        cache.sharded(&ds, 4, PartitionStrategy::Contiguous).unwrap();
+        let written = store.save(&ds, &cache).unwrap();
+        assert_eq!(written, 3);
+        assert_eq!(cache.stats().store_writes, 1);
+
+        let fresh = PlanCache::new();
+        let report = store.hydrate(&ds, &fresh).unwrap();
+        assert_eq!(report.rejected, None);
+        assert_eq!((report.lipschitz, report.references, report.shards), (1, 1, 1));
+        let mut t2 = CostTrace::new();
+        let l2 = fresh.lipschitz(&ds, 3, &machine, &mut t2).unwrap();
+        assert_eq!(l2.to_bits(), l.to_bits());
+        let w2 = fresh.reference_solution(&ds, 0.05, 1e-6, 50_000).unwrap();
+        assert_eq!(
+            w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            w2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let s = fresh.stats();
+        assert_eq!(s.lipschitz_computes, 0);
+        assert_eq!(s.reference_computes, 0);
+        assert_eq!(s.persisted_hits, 2);
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn stale_fingerprint_rejected_wholesale() {
+        let old = ds(3);
+        let store = tmp_store("stale");
+        let cache = PlanCache::new();
+        let machine = MachineModel::comet();
+        let mut trace = CostTrace::new();
+        cache.lipschitz(&old, 3, &machine, &mut trace).unwrap();
+        store.save(&old, &cache).unwrap();
+        // Same shape, different bytes: copy the old plan file under the
+        // new dataset's fingerprint directory, simulating "the data
+        // changed under the same path".
+        let new = ds(4);
+        let new_dir = store.dir_for(&Fingerprint::of(&new));
+        std::fs::create_dir_all(&new_dir).unwrap();
+        std::fs::copy(store.plan_path(&Fingerprint::of(&old)), new_dir.join("plan.json"))
+            .unwrap();
+        let fresh = PlanCache::new();
+        let report = store.hydrate(&new, &fresh).unwrap();
+        assert_eq!(report.total(), 0);
+        let reason = report.rejected.expect("stale file must be rejected");
+        assert!(reason.contains("stale fingerprint"), "{reason}");
+        // The compute path still works — nothing was poisoned.
+        let mut t = CostTrace::new();
+        fresh.lipschitz(&new, 3, &machine, &mut t).unwrap();
+        assert_eq!(fresh.stats().lipschitz_computes, 1);
+        assert_eq!(fresh.stats().persisted_hits, 0);
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn truncated_and_tampered_files_rejected() {
+        let ds = ds(5);
+        let store = tmp_store("truncated");
+        let cache = PlanCache::new();
+        let machine = MachineModel::comet();
+        let mut trace = CostTrace::new();
+        cache.lipschitz(&ds, 3, &machine, &mut trace).unwrap();
+        cache.reference_solution(&ds, 0.05, 1e-6, 50_000).unwrap();
+        store.save(&ds, &cache).unwrap();
+        let path = store.plan_path(&Fingerprint::of(&ds));
+        let full = std::fs::read_to_string(&path).unwrap();
+        // Truncation → parse error → rejected.
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let fresh = PlanCache::new();
+        let report = store.hydrate(&ds, &fresh).unwrap();
+        assert_eq!(report.total(), 0);
+        assert!(report.rejected.is_some());
+        // A wrong-length reference vector (valid JSON, tampered
+        // payload) → rejected wholesale, including the valid entries.
+        let tampered = full.replace("\"max_iters\": 50000", "\"max_iters\": 49999");
+        // (key change keeps JSON valid; now truncate one w_bits entry)
+        let tampered = {
+            let start = tampered.find("\"w_bits\"").unwrap();
+            let open = tampered[start..].find('[').unwrap() + start;
+            let close = tampered[open..].find(']').unwrap() + open;
+            let first_end = tampered[open..].find(',').map(|i| i + open).unwrap_or(close);
+            format!("{}{}", &tampered[..open + 1], &tampered[first_end + 1..])
+        };
+        std::fs::write(&path, tampered).unwrap();
+        let fresh2 = PlanCache::new();
+        let report2 = store.hydrate(&ds, &fresh2).unwrap();
+        assert_eq!(report2.total(), 0, "partially valid file must hydrate nothing");
+        assert!(report2.rejected.unwrap().contains("entries"));
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn unchanged_cache_save_is_skipped() {
+        let ds = ds(7);
+        let store = tmp_store("skip");
+        let cache = PlanCache::new();
+        let machine = MachineModel::comet();
+        let mut t = CostTrace::new();
+        cache.lipschitz(&ds, 3, &machine, &mut t).unwrap();
+        assert!(store.save(&ds, &cache).unwrap() > 0);
+        // Nothing changed since the last save: skipped, not re-counted.
+        assert_eq!(store.save(&ds, &cache).unwrap(), 0);
+        assert_eq!(cache.stats().store_writes, 1);
+        // A new mutation re-arms the write.
+        cache.lipschitz(&ds, 4, &machine, &mut t).unwrap();
+        assert!(store.save(&ds, &cache).unwrap() > 0);
+        assert_eq!(cache.stats().store_writes, 2);
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn non_finite_hydrated_values_rejected() {
+        let ds = ds(8);
+        let store = tmp_store("nonfinite");
+        let cache = PlanCache::new();
+        let machine = MachineModel::comet();
+        let mut t = CostTrace::new();
+        cache.lipschitz(&ds, 3, &machine, &mut t).unwrap();
+        store.save(&ds, &cache).unwrap();
+        let path = store.plan_path(&Fingerprint::of(&ds));
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Overwrite the stored L̂ bit pattern with NaN: valid hex, valid
+        // JSON — but hydrating it would poison every step size, so the
+        // file must be rejected like any other tampering.
+        let marker = "\"l_bits\": \"";
+        let start = text.find(marker).unwrap() + marker.len();
+        let tampered =
+            format!("{}{}{}", &text[..start], "7ff8000000000000", &text[start + 16..]);
+        std::fs::write(&path, tampered).unwrap();
+        let fresh = PlanCache::new();
+        let report = store.hydrate(&ds, &fresh).unwrap();
+        assert_eq!(report.total(), 0);
+        assert!(report.rejected.unwrap().contains("lipschitz"));
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn unsupported_schema_rejected() {
+        let ds = ds(6);
+        let store = tmp_store("schema");
+        let cache = PlanCache::new();
+        store.save(&ds, &cache).unwrap();
+        let path = store.plan_path(&Fingerprint::of(&ds));
+        let text = std::fs::read_to_string(&path)
+            .unwrap()
+            .replace("\"schema\": 1", "\"schema\": 2");
+        std::fs::write(&path, text).unwrap();
+        let report = store.hydrate(&ds, &PlanCache::new()).unwrap();
+        assert!(report.rejected.unwrap().contains("schema"));
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+}

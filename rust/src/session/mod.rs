@@ -31,7 +31,10 @@
 //!   sweep.
 //! * **Streaming**: [`Session::solve_observed`] drives an [`Observer`]
 //!   with live per-block and per-record events, replacing post-hoc
-//!   `record_every` polling; observers can request early stop.
+//!   `record_every` polling; observers can request early stop. The
+//!   serve engine forwards exactly these callbacks to its subscribers
+//!   as [`crate::serve::JobEvent`]s — one streaming contract from a
+//!   single solve up to a resident service.
 //!
 //! The legacy free functions survive as thin shims over a fresh
 //! single-use session, so their outputs are bit-identical
@@ -138,6 +141,14 @@ impl<'a> Session<'a> {
     /// grid-shared cache reports grid-wide totals).
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// The plan cache behind this session — hand it to
+    /// [`crate::serve::PlanStore::save`] to persist a sequential
+    /// session's one-time work (λ-path scripts like
+    /// `examples/lasso_path.rs`) the same way the serve engine does.
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.cache
     }
 
     /// Cached Lipschitz estimate for `seed`, computing (and charging its

@@ -95,7 +95,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity literal; `null` keeps the
+                    // document parseable (a bare `{x}` would print "NaN"
+                    // and break every consumer).
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -398,6 +403,16 @@ mod tests {
     fn integers_serialized_without_fraction() {
         assert_eq!(Json::Num(54.0).to_string_compact(), "54");
         assert_eq!(Json::Num(0.5).to_string_compact(), "0.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = Json::obj(vec![("x", Json::Num(v))]).to_string_compact();
+            assert_eq!(doc, r#"{"x":null}"#);
+            // The emitted document always re-parses.
+            assert_eq!(parse(&doc).unwrap().get("x"), Some(&Json::Null));
+        }
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! Serve-engine acceptance pins (ISSUE 4):
+//!
+//! (a) N concurrent submits through the in-process client are
+//!     bit-identical to fresh standalone [`Session`] solves with the
+//!     same seeds — the service adds *zero* numerical surface;
+//! (b) restarting a [`Server`] against the same dataset + store
+//!     directory pays `lipschitz_computes == 0` and serves ≥ 1
+//!     `persisted_hits` for previously seen (fingerprint, seed) pairs,
+//!     with bit-identical outputs;
+//! (c) a dataset whose bytes changed under the same name gets a new
+//!     fingerprint and a full recompute — a stale store entry is never
+//!     served;
+//! plus a property test that a persisted [`PlanCache`] round-trips
+//! bit-identically (L̂ bit patterns, reference-solution vectors) and
+//! that truncated files are rejected and recomputed.
+
+use ca_prox::datasets::synthetic::{generate, SyntheticSpec};
+use ca_prox::datasets::Dataset;
+use ca_prox::grid::PlanCache;
+use ca_prox::serve::{
+    Fingerprint, PlanStore, ServeClient, Server, ServerConfig, SolveRequest,
+};
+use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::util::prop::prop_check;
+use std::path::PathBuf;
+
+fn dataset(gen_seed: u64) -> Dataset {
+    generate(
+        &SyntheticSpec {
+            d: 8,
+            n: 240,
+            density: 1.0,
+            noise: 0.05,
+            model_sparsity: 0.5,
+            condition: 1.0,
+        },
+        gen_seed,
+    )
+}
+
+fn spec(lambda: f64, seed: u64) -> SolveSpec {
+    SolveSpec::default()
+        .with_lambda(lambda)
+        .with_sample_fraction(0.5)
+        .with_k(4)
+        .with_max_iters(24)
+        .with_seed(seed)
+        .with_history(4)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ca_prox_serve_{}_{tag}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn concurrent_submits_match_standalone_sessions_bitwise() {
+    let client = ServeClient::start(ServerConfig::default().with_threads(4)).unwrap();
+    let id = client.register(dataset(21)).unwrap();
+    let jobs: Vec<(f64, u64)> =
+        vec![(0.1, 3), (0.05, 3), (0.02, 3), (0.1, 4), (0.05, 4), (0.02, 4)];
+    // Submit everything up front so the jobs genuinely overlap on the
+    // worker pool, then wait for all of them.
+    let tickets: Vec<_> = jobs
+        .iter()
+        .map(|&(lambda, seed)| {
+            client
+                .submit(SolveRequest::new(&id, Topology::new(2), spec(lambda, seed)))
+                .unwrap()
+        })
+        .collect();
+    let outputs: Vec<_> = tickets.iter().map(|t| t.wait().unwrap()).collect();
+    let ds = dataset(21);
+    for ((lambda, seed), out) in jobs.iter().zip(&outputs) {
+        let mut standalone = Session::build(&ds, Topology::new(2)).unwrap();
+        let expect = standalone.solve(&spec(*lambda, *seed)).unwrap();
+        assert_eq!(out.w, expect.w, "λ={lambda} seed={seed}");
+        assert_eq!(out.final_objective.to_bits(), expect.final_objective.to_bits());
+        assert_eq!(out.iterations, expect.iterations);
+        assert_eq!(out.history.len(), expect.history.len());
+        for (a, b) in out.history.iter().zip(&expect.history) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+            assert_eq!(a.rel_error.to_bits(), b.rel_error.to_bits());
+            assert_eq!(a.modeled_seconds.to_bits(), b.modeled_seconds.to_bits());
+        }
+    }
+    // Setup ran once per seed on the shared cache, not once per job.
+    let stats = client.dataset_stats(&id).unwrap();
+    assert_eq!(stats.lipschitz_computes, 2, "two distinct seeds");
+    assert_eq!(stats.lipschitz_hits, 4);
+    client.shutdown().unwrap();
+}
+
+#[test]
+fn warm_boot_pays_zero_setup_and_serves_persisted_hits() {
+    let store_dir = tmp_dir("warm_boot");
+    let boot = |expect_cold: bool| -> (Vec<Vec<f64>>, ca_prox::grid::CacheStats) {
+        let server =
+            Server::new(ServerConfig::default().with_threads(2).with_store(&store_dir)).unwrap();
+        let id = server.register_dataset(dataset(21)).unwrap();
+        let tickets: Vec<_> = [(0.1, 3), (0.05, 3)]
+            .iter()
+            .map(|&(lambda, seed)| {
+                server
+                    .submit(SolveRequest::new(&id, Topology::new(2), spec(lambda, seed)))
+                    .unwrap()
+            })
+            .collect();
+        let ws: Vec<Vec<f64>> = tickets.iter().map(|t| t.wait().unwrap().w).collect();
+        // The workers also persist after each job, but asynchronously
+        // relative to the ticket resolving; persist explicitly so the
+        // store_writes assertion below is race-free.
+        server.persist_all().unwrap();
+        let stats = server.dataset_stats(&id).unwrap();
+        if expect_cold {
+            assert_eq!(stats.lipschitz_computes, 1);
+            assert_eq!(stats.persisted_hits, 0);
+            assert!(stats.store_writes >= 1, "jobs persist the plan");
+        }
+        server.shutdown().unwrap();
+        (ws, stats)
+    };
+    let (cold_ws, _) = boot(true);
+    // Second boot, same bytes, same store: zero Lipschitz computes, the
+    // hydrated entry served instead — and identical iterates, proving
+    // the round-trip preserved L̂ to the bit (the step size feeds every
+    // update).
+    let (warm_ws, warm_stats) = boot(false);
+    assert_eq!(warm_stats.lipschitz_computes, 0, "restart must skip the setup");
+    assert!(warm_stats.persisted_hits >= 1, "stats: {warm_stats:?}");
+    assert_eq!(cold_ws, warm_ws);
+    std::fs::remove_dir_all(&store_dir).ok();
+}
+
+#[test]
+fn changed_bytes_get_new_fingerprint_and_full_recompute() {
+    let store_dir = tmp_dir("changed_bytes");
+    let run = |gen_seed: u64| -> (String, ca_prox::grid::CacheStats) {
+        let server =
+            Server::new(ServerConfig::default().with_threads(1).with_store(&store_dir)).unwrap();
+        // Same logical name ("smoke"-style reuse of a path), different
+        // bytes when gen_seed differs.
+        let id = server.register_dataset(dataset(gen_seed)).unwrap();
+        server
+            .submit(SolveRequest::new(&id, Topology::new(1), spec(0.05, 3)))
+            .unwrap()
+            .wait()
+            .unwrap();
+        let stats = server.dataset_stats(&id).unwrap();
+        server.shutdown().unwrap();
+        (id, stats)
+    };
+    let (id_v1, _) = run(21);
+    // Same bytes again: warm.
+    let (id_v1_again, stats_again) = run(21);
+    assert_eq!(id_v1, id_v1_again);
+    assert_eq!(stats_again.lipschitz_computes, 0);
+    assert!(stats_again.persisted_hits >= 1);
+    // Changed bytes: new fingerprint, nothing served from the store.
+    let (id_v2, stats_v2) = run(22);
+    assert_ne!(id_v1, id_v2, "changed bytes must change the fingerprint");
+    assert_eq!(stats_v2.lipschitz_computes, 1, "full recompute");
+    assert_eq!(stats_v2.persisted_hits, 0, "stale plans never served");
+    // And the two fingerprints coexist in the store.
+    assert!(PlanStore::new(&store_dir).root().join(&id_v1).join("plan.json").is_file());
+    assert!(PlanStore::new(&store_dir).root().join(&id_v2).join("plan.json").is_file());
+    std::fs::remove_dir_all(&store_dir).ok();
+}
+
+#[test]
+fn persisted_cache_round_trips_bit_identically_prop() {
+    let store_dir = tmp_dir("prop_roundtrip");
+    let mut case = 0u64;
+    prop_check("plan store round-trip is bit-exact", 8, |g| {
+        case += 1;
+        let ds = generate(
+            &SyntheticSpec {
+                d: g.usize_in(2, 6),
+                n: g.usize_in(20, 60),
+                density: g.f64_in(0.4, 1.0),
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
+            g.usize_in(1, 1_000_000) as u64,
+        );
+        let store = PlanStore::new(store_dir.join(format!("case{case}")));
+        let cache = PlanCache::new();
+        let machine = ca_prox::comm::costmodel::MachineModel::comet();
+        let n_seeds = g.usize_in(1, 3);
+        let mut seeds = Vec::new();
+        for _ in 0..n_seeds {
+            let seed = g.usize_in(0, 1000) as u64;
+            let mut trace = ca_prox::comm::trace::CostTrace::new();
+            cache.lipschitz(&ds, seed, &machine, &mut trace).map_err(|e| e.to_string())?;
+            seeds.push(seed);
+        }
+        let lambda = g.f64_in(0.01, 0.5);
+        cache
+            .reference_solution(&ds, lambda, 1e-2, 20_000)
+            .map_err(|e| e.to_string())?;
+        store.save(&ds, &cache).map_err(|e| e.to_string())?;
+
+        let fresh = PlanCache::new();
+        let report = store.hydrate(&ds, &fresh).map_err(|e| e.to_string())?;
+        if let Some(reason) = report.rejected {
+            return Err(format!("clean file rejected: {reason}"));
+        }
+        // Exported bit patterns agree exactly.
+        let a = cache.export_lipschitz();
+        let b = fresh.export_lipschitz();
+        if a.len() != b.len() {
+            return Err(format!("lipschitz count {} vs {}", a.len(), b.len()));
+        }
+        for ((s1, l1), (s2, l2)) in a.iter().zip(&b) {
+            if s1 != s2 || l1.to_bits() != l2.to_bits() {
+                return Err(format!("L̂ mismatch: seed {s1}/{s2}, {l1:e} vs {l2:e}"));
+            }
+        }
+        let ra = cache.export_references();
+        let rb = fresh.export_references();
+        if ra.len() != rb.len() {
+            return Err(format!("reference count {} vs {}", ra.len(), rb.len()));
+        }
+        for ((k1, m1, t1, w1), (k2, m2, t2, w2)) in ra.iter().zip(&rb) {
+            if k1 != k2 || m1 != m2 || t1.to_bits() != t2.to_bits() {
+                return Err("reference key/tol mismatch".into());
+            }
+            if w1.len() != w2.len()
+                || w1.iter().zip(w2.iter()).any(|(x, y)| x.to_bits() != y.to_bits())
+            {
+                return Err("reference vector bits differ after round-trip".into());
+            }
+        }
+        // Truncate the file: rejected, nothing hydrated, recompute works.
+        let path = store.plan_path(&Fingerprint::of(&ds));
+        let text = std::fs::read_to_string(&path).map_err(|e| e.to_string())?;
+        std::fs::write(&path, &text[..text.len() / 3]).map_err(|e| e.to_string())?;
+        let after = PlanCache::new();
+        let report = store.hydrate(&ds, &after).map_err(|e| e.to_string())?;
+        if report.rejected.is_none() || report.total() != 0 {
+            return Err("truncated file must be rejected wholesale".into());
+        }
+        let mut trace = ca_prox::comm::trace::CostTrace::new();
+        after
+            .lipschitz(&ds, seeds[0], &machine, &mut trace)
+            .map_err(|e| e.to_string())?;
+        if after.stats().lipschitz_computes != 1 || after.stats().persisted_hits != 0 {
+            return Err("rejected file must force a recompute".into());
+        }
+        Ok(())
+    });
+    std::fs::remove_dir_all(&store_dir).ok();
+}
