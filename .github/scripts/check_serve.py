@@ -2,16 +2,32 @@
 """Validate `ca-prox serve` JSON-lines responses (serve proto schema v1).
 
 Usage: check_serve.py LOG [--expect-jobs N] [--min-persisted-hits N]
+                          [--min-warm-spill-hits N]
+                          [--max-lipschitz-computes N] [--fleet]
 
 Every non-empty line of LOG must parse as a JSON object with
 schema == 1 and a known event kind (the serve responses all go to
 stdout; human chatter goes to stderr and never reaches the log).
 
-  --expect-jobs N         exactly N `done` events, N `queued` events,
-                          and zero `failed`/`error` events
-  --min-persisted-hits N  the last `stats` event must report at least N
-                          persisted hits summed over its datasets — the
-                          warm-boot proof the CI serve-smoke step keys on
+  --expect-jobs N           exactly N `done` events, N `queued` events,
+                            and zero `failed`/`error` events
+  --min-persisted-hits N    the last `stats` event must report at least
+                            N persisted hits summed over its datasets —
+                            the warm-boot proof the CI serve-smoke step
+                            keys on
+  --min-warm-spill-hits N   same, for warm starts served out of spilled
+                            `warm/<tag>/<λ>.json` files
+  --max-lipschitz-computes N  the last `stats` event must report at
+                            most N Lipschitz computes summed over its
+                            datasets (0 = all setup was hydrated)
+  --fleet                   this log is the SECOND server of a fleet
+                            pair sharing one store: shorthand for
+                            `--min-persisted-hits 1
+                            --min-warm-spill-hits 1
+                            --max-lipschitz-computes 0` — it booted on
+                            the first server's plan (paying zero
+                            setup) and warm-started from its spilled
+                            solutions
 """
 
 import json
@@ -39,8 +55,13 @@ def fail(msg):
 
 def main(argv):
     args = argv[1:]
+    fleet = "--fleet" in args
+    if fleet:
+        args.remove("--fleet")
     expect_jobs = None
     min_persisted = None
+    min_warm_spill = None
+    max_lipschitz = None
     while len(args) > 1:
         if args[-2] == "--expect-jobs":
             expect_jobs = int(args[-1])
@@ -48,10 +69,24 @@ def main(argv):
         elif args[-2] == "--min-persisted-hits":
             min_persisted = int(args[-1])
             args = args[:-2]
+        elif args[-2] == "--min-warm-spill-hits":
+            min_warm_spill = int(args[-1])
+            args = args[:-2]
+        elif args[-2] == "--max-lipschitz-computes":
+            max_lipschitz = int(args[-1])
+            args = args[:-2]
         else:
             break
+    if fleet:
+        min_persisted = max(min_persisted or 0, 1)
+        min_warm_spill = max(min_warm_spill or 0, 1)
+        if max_lipschitz is None:
+            max_lipschitz = 0
     if len(args) != 1:
-        fail("usage: check_serve.py LOG [--expect-jobs N] [--min-persisted-hits N]")
+        fail(
+            "usage: check_serve.py LOG [--expect-jobs N] [--min-persisted-hits N] "
+            "[--min-warm-spill-hits N] [--max-lipschitz-computes N] [--fleet]"
+        )
     path = args[0]
     counts = {}
     last_stats = None
@@ -87,18 +122,36 @@ def main(argv):
             got = counts.get(kind, 0)
             if got != expect_jobs:
                 fail(f"{path}: expected {expect_jobs} '{kind}' events, got {got}")
-    if min_persisted is not None:
+
+    def stats_sum(key):
         if last_stats is None:
-            fail(f"{path}: --min-persisted-hits given but no stats event in the log")
-        hits = sum(
-            d.get("persisted_hits", 0) for d in last_stats.get("datasets", [])
-        )
+            fail(f"{path}: a stats threshold was given but no stats event is in the log")
+        return sum(d.get(key, 0) for d in last_stats.get("datasets", []))
+
+    if min_persisted is not None:
+        hits = stats_sum("persisted_hits")
         if hits < min_persisted:
             fail(
                 f"{path}: persisted_hits = {hits} < {min_persisted} "
                 "(warm boot did not serve the persisted plan)"
             )
         print(f"check_serve: {path}: persisted_hits = {hits} >= {min_persisted}")
+    if min_warm_spill is not None:
+        hits = stats_sum("warm_spill_hits")
+        if hits < min_warm_spill:
+            fail(
+                f"{path}: warm_spill_hits = {hits} < {min_warm_spill} "
+                "(no warm start came off the spilled tier)"
+            )
+        print(f"check_serve: {path}: warm_spill_hits = {hits} >= {min_warm_spill}")
+    if max_lipschitz is not None:
+        computes = stats_sum("lipschitz_computes")
+        if computes > max_lipschitz:
+            fail(
+                f"{path}: lipschitz_computes = {computes} > {max_lipschitz} "
+                "(the boot re-paid setup the store should have hydrated)"
+            )
+        print(f"check_serve: {path}: lipschitz_computes = {computes} <= {max_lipschitz}")
     print(f"check_serve: {path}: {total} response line(s) OK ({counts})")
 
 

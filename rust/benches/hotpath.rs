@@ -21,7 +21,7 @@ use ca_prox::matrix::ops::{
 use ca_prox::datasets::Dataset;
 use ca_prox::runtime::backend::{GramBackend, NativeGramBackend};
 use ca_prox::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
-use ca_prox::serve::{ServeClient, ServerConfig, SolveRequest};
+use ca_prox::serve::{ServeClient, Server, ServerConfig, SolveRequest};
 use ca_prox::session::{Session, SolveSpec, Topology};
 use ca_prox::solvers::traits::{AlgoKind, GradientAt, SolverConfig};
 use ca_prox::util::rng::Rng;
@@ -76,6 +76,68 @@ fn serve_boot_pair(ds: &Dataset, tag: &str, reps: usize, spec: &SolveSpec) {
     std::fs::remove_dir_all(&store_dir).ok();
 }
 
+/// The `serve/fleet-cold` vs `serve/fleet-warm` hotpath pair
+/// (EXPERIMENTS.md): two *different* servers sharing one store. Each
+/// boot runs a 3-job λ-path under one warm tag with a tight warm-pool
+/// bound (`--warm-pool-max 1`), so completed solutions spill to
+/// `warm/<tag>/` as they are evicted and at shutdown. The cold boot
+/// (writer `a`) starts from a wiped store and pays the full setup; the
+/// warm boot (writer `b`) hydrates writer `a`'s plan AND warm-starts
+/// from its spilled solutions — the wall-time delta is the fleet-level
+/// amortization win the lease + spill tier exists for.
+fn serve_fleet_pair(ds: &Dataset, tag: &str, reps: usize, spec: &SolveSpec) {
+    let store_dir = std::env::temp_dir()
+        .join(format!("ca_prox_fleet_bench_{}_{tag}", std::process::id()));
+    let run_batch = |writer: &str| {
+        let server = Server::new(
+            ServerConfig::default()
+                .with_threads(1)
+                .with_store(&store_dir)
+                .with_warm_pool_max(1)
+                .with_writer_id(writer),
+        )
+        .unwrap();
+        let id = server.register_dataset(ds.clone()).unwrap();
+        let tickets: Vec<_> = [0.1, 0.05, 0.02]
+            .iter()
+            .map(|&lambda| {
+                let job =
+                    SolveRequest::new(&id, Topology::new(2), spec.clone().with_lambda(lambda))
+                        .with_warm_tag("path");
+                server.submit(job).unwrap()
+            })
+            .collect();
+        for t in &tickets {
+            t.wait().unwrap();
+        }
+        server.shutdown().unwrap();
+    };
+    let t_cold = bench(
+        &format!("serve/fleet-cold ({tag}, writer a, empty store)"),
+        0,
+        reps,
+        || {
+            std::fs::remove_dir_all(&store_dir).ok();
+            run_batch("a");
+        },
+    );
+    emit(&t_cold);
+    // The last cold rep left writer a's plan + spilled warm tier behind;
+    // writer b inherits both.
+    let t_warm = bench(
+        &format!("serve/fleet-warm ({tag}, writer b, shared store)"),
+        1,
+        reps,
+        || run_batch("b"),
+    );
+    emit(&t_warm);
+    println!(
+        "serve/fleet warm-vs-cold speedup ({tag}): {:.2}x",
+        t_cold.median() / t_warm.median()
+    );
+    std::fs::remove_dir_all(&store_dir).ok();
+}
+
 /// CI smoke slice (`cargo bench --bench hotpath -- --quick`): one tiny
 /// kernel timing plus one Grid sweep cell, each leaving a `BENCH {json}`
 /// line — enough for the bench-smoke job to validate the schema and
@@ -108,6 +170,7 @@ fn quick_mode() {
     });
     emit(&t);
     serve_boot_pair(&ds, "quick", 2, &spec.clone().with_max_iters(8));
+    serve_fleet_pair(&ds, "quick", 2, &spec.with_max_iters(8));
     println!("\nhotpath quick OK");
 }
 
@@ -318,7 +381,7 @@ fn main() {
         );
     }
 
-    // ---- serve engine: cold vs warm boot (wall) ----
+    // ---- serve engine: cold vs warm boot, single-node and fleet ----
     {
         let spec = SolveSpec::default()
             .with_sample_fraction(0.05)
@@ -326,6 +389,7 @@ fn main() {
             .with_max_iters(32)
             .with_seed(1);
         serve_boot_pair(&ds, "covtype-50k", 3, &spec);
+        serve_fleet_pair(&ds, "covtype-50k", 3, &spec);
     }
     println!("\nhotpath OK");
 }

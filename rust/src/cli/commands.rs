@@ -239,6 +239,16 @@ pub fn cmd_serve(argv: &[String]) -> Result<()> {
         Flag { name: "threads", takes_value: true, help: "worker threads (omit for auto)" },
         Flag { name: "queue", takes_value: true, help: "work-queue capacity (default 64)" },
         Flag {
+            name: "writer-id",
+            takes_value: true,
+            help: "fleet writer identity for store lease files (default pid-derived)",
+        },
+        Flag {
+            name: "warm-pool-max",
+            takes_value: true,
+            help: "per-tag warm-pool LRU bound, ≥ 1 (default 16; evictions spill to the store)",
+        },
+        Flag {
             name: "socket",
             takes_value: true,
             help: "listen on HOST:PORT instead of stdin/stdout",
@@ -256,6 +266,12 @@ pub fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     if let Some(queue) = parsed.get_usize("queue")? {
         config = config.with_queue_cap(queue);
+    }
+    if let Some(writer) = parsed.get("writer-id") {
+        config = config.with_writer_id(writer);
+    }
+    if let Some(max_entries) = parsed.get_usize("warm-pool-max")? {
+        config = config.with_warm_pool_max(max_entries);
     }
     let server = Server::new(config)?;
     match parsed.get("socket") {
@@ -511,5 +527,15 @@ mod tests {
         assert!(err.to_string().contains("≥ 1"), "{err}");
         let err = cmd_submit(&sv(&["--dataset", "smoke"])).unwrap_err();
         assert!(err.to_string().contains("--socket"), "{err}");
+    }
+
+    #[test]
+    fn serve_rejects_bad_fleet_flags() {
+        let err =
+            cmd_serve(&sv(&["--warm-pool-max", "0", "--store", "none"])).unwrap_err();
+        assert!(err.to_string().contains("warm-pool"), "{err}");
+        let err =
+            cmd_serve(&sv(&["--writer-id", "../escape", "--store", "none"])).unwrap_err();
+        assert!(err.to_string().contains("writer id"), "{err}");
     }
 }

@@ -4,6 +4,7 @@
 //! ca-prox run      [--config FILE] [--dataset NAME] [--p N] [--k N] ...
 //! ca-prox sweep    --dataset NAME --p-list 1,2,4 --k-list 1,8,32 [--store DIR] ...
 //! ca-prox serve    [--store DIR|none] [--threads N] [--socket HOST:PORT]
+//!                  [--writer-id ID] [--warm-pool-max N]
 //! ca-prox submit   --socket HOST:PORT [--dataset NAME] [--lambda X] ...
 //! ca-prox datagen  --dataset NAME --scale-n N --out FILE
 //! ca-prox info     [--artifacts DIR]

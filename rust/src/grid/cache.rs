@@ -61,6 +61,13 @@ pub struct CacheStats {
     /// Times this cache's contents were persisted to a
     /// [`crate::serve::PlanStore`].
     pub store_writes: u64,
+    /// Warm-start pool entries evicted by the serve engine's LRU bound
+    /// (spilled to the store when one is configured, dropped otherwise).
+    pub warm_evictions: u64,
+    /// Warm starts served out of a spilled `warm/<tag>/<λ>.json` file
+    /// rather than the in-memory pool — work this server (or another in
+    /// the fleet) computed earlier and recovered from the store.
+    pub warm_spill_hits: u64,
 }
 
 /// A cached Lipschitz estimate plus its provenance.
@@ -103,6 +110,8 @@ pub struct PlanCache {
     shard_hits: AtomicU64,
     persisted_hits: AtomicU64,
     store_writes: AtomicU64,
+    warm_evictions: AtomicU64,
+    warm_spill_hits: AtomicU64,
     /// Bumped on every state mutation (computed inserts, hydrated
     /// inserts, shard builds); compared against `saved_epoch` so
     /// [`crate::serve::PlanStore::save`] can skip rewriting a file that
@@ -138,7 +147,23 @@ impl PlanCache {
             shard_hits: self.shard_hits.load(Ordering::Relaxed),
             persisted_hits: self.persisted_hits.load(Ordering::Relaxed),
             store_writes: self.store_writes.load(Ordering::Relaxed),
+            warm_evictions: self.warm_evictions.load(Ordering::Relaxed),
+            warm_spill_hits: self.warm_spill_hits.load(Ordering::Relaxed),
         }
+    }
+
+    /// Count a warm-pool eviction (serve-engine LRU bound). Warm pools
+    /// are serve-level state, but their counters live here so one
+    /// [`CacheStats`] snapshot covers everything a dataset's plan paid
+    /// for and skipped; they never bump the persistence epoch (warm
+    /// vectors are not part of `plan.json`).
+    pub fn note_warm_eviction(&self) {
+        self.warm_evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a warm start served from a spilled warm file.
+    pub fn note_warm_spill_hit(&self) {
+        self.warm_spill_hits.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Cached Lipschitz estimate for `seed`, computing — and charging the

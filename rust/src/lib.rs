@@ -30,7 +30,11 @@
 //! every plan cache through a [`serve::PlanStore`] under
 //! `artifacts/plancache/` — so even a *restart* skips the O(d²·n)
 //! setup for data it has seen before (`ca-prox serve` / `ca-prox
-//! submit` speak its JSON-lines protocol). The legacy free functions
+//! submit` speak its JSON-lines protocol). A whole *fleet* of servers
+//! can share one store ([`serve::fleet`]): saves are leased with
+//! monotonic generations, files are checksummed, and LRU-bounded
+//! warm-start pools spill evicted solutions to the store so one
+//! server warm-starts from another's work. The legacy free functions
 //! ([`coordinator::run`] and friends) survive as bit-identical shims
 //! over a fresh single-use session.
 //!
@@ -87,7 +91,7 @@ pub mod prelude {
     pub use crate::matrix::csc::CscMatrix;
     pub use crate::matrix::dense::DenseMatrix;
     pub use crate::serve::{
-        Fingerprint, PlanStore, ServeClient, Server, ServerConfig, SolveRequest,
+        Fingerprint, PlanStore, ServeClient, Server, ServerConfig, SolveRequest, WriterId,
     };
     pub use crate::session::{Observer, Session, SolveSpec, Topology};
     pub use crate::solvers::traits::{AlgoKind, SolverConfig, SolverOutput, Stopping};

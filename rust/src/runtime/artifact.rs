@@ -40,6 +40,15 @@ pub fn plancache_root(artifacts: &Path) -> PathBuf {
     artifacts.join("plancache")
 }
 
+/// Conventional spilled-warm-start directory under one fingerprint's
+/// plan directory: `<plan dir>/warm/<tag>/<λ-bits>.json` (see
+/// [`crate::serve::PlanStore::spill_warm`]). `tag` must already be
+/// validated ([`crate::serve::fleet::validate_pool_tag`]) — this is a
+/// pure path composition.
+pub fn warmpool_dir(plan_dir: &Path, tag: &str) -> PathBuf {
+    plan_dir.join("warm").join(tag)
+}
+
 /// Kinds of compiled computations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ArtifactKind {
@@ -247,6 +256,10 @@ mod tests {
         let root = default_artifacts_root();
         assert_eq!(root, PathBuf::from("artifacts"));
         assert_eq!(plancache_root(&root), PathBuf::from("artifacts/plancache"));
+        assert_eq!(
+            warmpool_dir(&plancache_root(&root).join("d54-n100-abc"), "path"),
+            PathBuf::from("artifacts/plancache/d54-n100-abc/warm/path")
+        );
     }
 
     #[test]

@@ -61,6 +61,18 @@ impl ServeClient {
         self.server.dataset_stats(id)
     }
 
+    /// In-memory warm-pool occupancy of one registered dataset (spilled
+    /// entries live in the plan store, not here).
+    pub fn warm_occupancy(&self, id: &str) -> Option<usize> {
+        self.server.warm_occupancy(id)
+    }
+
+    /// Persist every dataset's plan and spill still-dirty warm entries
+    /// now (also happens per job and at shutdown).
+    pub fn persist_all(&self) -> Result<usize> {
+        self.server.persist_all()
+    }
+
     /// Drain the queue and stop the workers.
     pub fn shutdown(self) -> Result<()> {
         self.server.shutdown()

@@ -26,19 +26,34 @@ pub struct Fingerprint {
     pub hash: u64,
 }
 
-/// Streaming FNV-1a accumulator over little-endian u64 words.
-struct Fnv(u64);
+/// Streaming FNV-1a accumulator over little-endian u64 words. Shared
+/// with the plan store, which uses the same hash for the content
+/// checksums embedded in `plan.json` and spilled warm-start files.
+pub(crate) struct Fnv(u64);
 
 impl Fnv {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Fnv(FNV_OFFSET)
     }
 
-    fn word(&mut self, w: u64) {
+    pub(crate) fn word(&mut self, w: u64) {
         for byte in w.to_le_bytes() {
             self.0 ^= byte as u64;
             self.0 = self.0.wrapping_mul(FNV_PRIME);
         }
+    }
+
+    /// Hash a string as its length followed by its bytes, so two
+    /// adjacent strings can never alias each other's boundaries.
+    pub(crate) fn str(&mut self, s: &str) {
+        self.word(s.len() as u64);
+        for b in s.bytes() {
+            self.word(b as u64);
+        }
+    }
+
+    pub(crate) fn finish(&self) -> u64 {
+        self.0
     }
 }
 
@@ -66,7 +81,7 @@ impl Fingerprint {
         for &y in &ds.y {
             h.word(y.to_bits());
         }
-        Fingerprint { d: ds.d(), n: ds.n(), hash: h.0 }
+        Fingerprint { d: ds.d(), n: ds.n(), hash: h.finish() }
     }
 }
 

@@ -1,0 +1,278 @@
+//! Fleet coordination: lease files for multi-server plan stores.
+//!
+//! Several [`crate::serve::Server`]s — same host or a shared
+//! filesystem — can point at one [`crate::serve::PlanStore`] directory.
+//! Every value the store holds is a deterministic function of the
+//! dataset fingerprint, so writers never need to agree on *content*;
+//! what they need is a way to tell a *superseded* file from the current
+//! one without wall clocks (which differ across machines and would make
+//! replays non-deterministic). That is the lease protocol:
+//!
+//! * before publishing `plan.json`, a writer publishes
+//!   `lease.<writer_id>` (atomic temp + rename) carrying the
+//!   **generation** it is about to write — `1 + max(plan generation,
+//!   every lease generation)`, so generations are monotonic across the
+//!   fleet;
+//! * the plan file embeds its generation, and readers re-validate after
+//!   load: a lease newer than the loaded plan means another writer's
+//!   publish raced the read, so the reader re-reads (bounded retries —
+//!   never a block: plan content is deterministic, so accepting the
+//!   older complete file is always safe);
+//! * a lease whose generation is **≤** the published plan generation is
+//!   *expired* — its write has landed or been superseded. Expiry is by
+//!   generation, never by wall clock, so the same sequence of events
+//!   always resolves the same way; strictly-older leases are garbage
+//!   collected opportunistically by later writers.
+//!
+//! Leases are advisory (a malformed lease file is skipped, never
+//! fatal): correctness comes from the store's atomic renames and
+//! validate-everything loads; leases only decide *which complete file*
+//! a reader settles on and keep writer races observable.
+
+use crate::error::{CaError, Result};
+use crate::util::json::{parse, Json};
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lease-file schema version.
+pub const LEASE_SCHEMA: usize = 1;
+
+/// Lease files are `lease.<writer_id>` inside a fingerprint directory.
+const LEASE_PREFIX: &str = "lease.";
+
+/// Disambiguates temp names when several threads of one process write
+/// concurrently (the process id covers cross-process writers).
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Atomically publish `doc` at `path`: compact write to a unique
+/// dot-prefixed temp file in `dir` (so directory scans never see it as
+/// a lease or a warm file), then rename into place. The temp file is
+/// removed on either failure. One helper carries the pattern for plan
+/// files, spilled warm vectors and leases alike.
+pub(crate) fn atomic_write_json(
+    dir: &Path,
+    kind: &str,
+    path: &Path,
+    doc: &Json,
+) -> Result<()> {
+    let tmp = dir.join(format!(
+        ".tmp.{kind}.{}.{}",
+        std::process::id(),
+        TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    if let Err(e) = std::fs::write(&tmp, doc.to_string_compact()) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(CaError::Io(e));
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(CaError::Io(e));
+    }
+    Ok(())
+}
+
+/// Shared character rule for anything that becomes a store path
+/// component (writer ids, warm-pool tags): ASCII alphanumerics plus
+/// `._-`, not starting with a dot (no hidden files, no `.`/`..`
+/// traversal), length 1–64.
+fn validate_path_component(what: &str, s: &str) -> Result<()> {
+    if s.is_empty() || s.len() > 64 {
+        return Err(CaError::Config(format!("{what} must be 1–64 characters, got {}", s.len())));
+    }
+    if s.starts_with('.') {
+        return Err(CaError::Config(format!("{what} must not start with '.': '{s}'")));
+    }
+    let ok = |c: &char| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-');
+    if let Some(c) = s.chars().find(|c| !ok(c)) {
+        return Err(CaError::Config(format!(
+            "{what} may only contain [A-Za-z0-9._-], got '{c}' in '{s}'"
+        )));
+    }
+    Ok(())
+}
+
+/// Validate a warm-start pool tag for use as a store directory name
+/// (`warm/<tag>/<λ-bits>.json`). Tags arrive over the wire, so this is
+/// the line between "pool name" and "path traversal".
+pub fn validate_pool_tag(tag: &str) -> Result<()> {
+    validate_path_component("warm-pool tag", tag)
+}
+
+/// A fleet writer's identity — the `<writer_id>` in `lease.<writer_id>`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WriterId(String);
+
+impl WriterId {
+    /// Validated writer id (same character rules as pool tags).
+    pub fn new(id: &str) -> Result<WriterId> {
+        validate_path_component("writer id", id)?;
+        Ok(WriterId(id.to_string()))
+    }
+
+    /// Default per-process identity. Two stores in one process share it,
+    /// which is safe (they race through atomic renames like any two
+    /// writers); pass an explicit id when the fleet needs stable names.
+    pub fn for_process() -> WriterId {
+        WriterId(format!("pid{}", std::process::id()))
+    }
+
+    /// The id string.
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl fmt::Display for WriterId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// One writer's published lease.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lease {
+    /// Who published it.
+    pub writer: String,
+    /// The plan generation the writer claimed.
+    pub generation: u64,
+}
+
+/// Path of `writer`'s lease file inside a fingerprint directory.
+pub fn lease_path(dir: &Path, writer: &WriterId) -> PathBuf {
+    dir.join(format!("{LEASE_PREFIX}{writer}"))
+}
+
+/// Read every lease in `dir`, skipping malformed or in-flight files
+/// (leases are advisory — a file another writer is mid-publishing is
+/// simply not there yet). A missing directory scans as empty.
+pub fn scan_leases(dir: &Path) -> Vec<Lease> {
+    let Ok(entries) = std::fs::read_dir(dir) else { return Vec::new() };
+    let mut leases = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if name.starts_with('.') || !name.starts_with(LEASE_PREFIX) {
+            continue;
+        }
+        let Ok(text) = std::fs::read_to_string(entry.path()) else { continue };
+        let Ok(root) = parse(&text) else { continue };
+        if root.get("schema").and_then(Json::as_usize) != Some(LEASE_SCHEMA) {
+            continue;
+        }
+        let (Some(writer), Some(generation)) = (
+            root.get("writer").and_then(Json::as_str),
+            root.get("generation").and_then(Json::as_usize),
+        ) else {
+            continue;
+        };
+        leases.push(Lease { writer: writer.to_string(), generation: generation as u64 });
+    }
+    // read_dir order is platform-dependent; keep scans deterministic.
+    leases.sort_by(|a, b| a.writer.cmp(&b.writer));
+    leases
+}
+
+/// Highest generation any lease in `leases` claims (0 when empty).
+pub fn max_generation(leases: &[Lease]) -> u64 {
+    leases.iter().map(|l| l.generation).max().unwrap_or(0)
+}
+
+/// Atomically publish `writer`'s claim on `generation` (temp file +
+/// rename, like every store write).
+pub fn publish_lease(dir: &Path, writer: &WriterId, generation: u64) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let doc = Json::obj(vec![
+        ("schema", Json::Num(LEASE_SCHEMA as f64)),
+        ("writer", Json::Str(writer.as_str().to_string())),
+        ("generation", Json::Num(generation as f64)),
+    ]);
+    atomic_write_json(dir, &format!("lease.{writer}"), &lease_path(dir, writer), &doc)
+}
+
+/// Remove leases whose generation is strictly below `plan_generation` —
+/// they are expired (their write landed or was superseded), by the
+/// generation rule, never by wall clock. Best-effort hygiene: a remove
+/// that loses a race with a re-publish is harmless (the new lease file
+/// replaced the old inode atomically).
+pub fn gc_stale_leases(dir: &Path, plan_generation: u64) {
+    for lease in scan_leases(dir) {
+        if lease.generation < plan_generation {
+            if let Ok(writer) = WriterId::new(&lease.writer) {
+                std::fs::remove_file(lease_path(dir, &writer)).ok();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ca_prox_fleet_{}_{tag}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn writer_ids_and_tags_are_path_safe() {
+        for good in ["a", "w0", "ci-runner_3", "node.7", "pid12345"] {
+            WriterId::new(good).unwrap();
+            validate_pool_tag(good).unwrap();
+        }
+        for bad in ["", ".", "..", ".hidden", "a/b", "a\\b", "sp ace", "λ", &"x".repeat(65)] {
+            assert!(WriterId::new(bad).is_err(), "'{bad}' must be rejected");
+            assert!(validate_pool_tag(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn publish_scan_round_trip_and_max() {
+        let dir = tmp("roundtrip");
+        assert!(scan_leases(&dir).is_empty(), "missing dir scans empty");
+        let a = WriterId::new("a").unwrap();
+        let b = WriterId::new("b").unwrap();
+        publish_lease(&dir, &a, 1).unwrap();
+        publish_lease(&dir, &b, 3).unwrap();
+        // Re-publishing replaces the writer's own lease.
+        publish_lease(&dir, &a, 2).unwrap();
+        let leases = scan_leases(&dir);
+        assert_eq!(
+            leases,
+            vec![
+                Lease { writer: "a".into(), generation: 2 },
+                Lease { writer: "b".into(), generation: 3 },
+            ]
+        );
+        assert_eq!(max_generation(&leases), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_leases_are_skipped_not_fatal() {
+        let dir = tmp("malformed");
+        let a = WriterId::new("a").unwrap();
+        publish_lease(&dir, &a, 5).unwrap();
+        std::fs::write(dir.join("lease.broken"), "not json").unwrap();
+        std::fs::write(dir.join("lease.wrongschema"), r#"{"schema":9,"writer":"w","generation":1}"#)
+            .unwrap();
+        std::fs::write(dir.join("plan.json"), "{}").unwrap(); // not a lease
+        let leases = scan_leases(&dir);
+        assert_eq!(leases, vec![Lease { writer: "a".into(), generation: 5 }]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_expires_by_generation_only() {
+        let dir = tmp("gc");
+        let a = WriterId::new("a").unwrap();
+        let b = WriterId::new("b").unwrap();
+        publish_lease(&dir, &a, 1).unwrap();
+        publish_lease(&dir, &b, 2).unwrap();
+        gc_stale_leases(&dir, 2);
+        // Generation 1 < 2 expired; generation 2 == plan generation kept.
+        assert_eq!(scan_leases(&dir), vec![Lease { writer: "b".into(), generation: 2 }]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

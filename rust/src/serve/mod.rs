@@ -25,33 +25,47 @@
 //!
 //! * [`fingerprint`] — content identity: shape + streamed 64-bit hash,
 //!   so caches key on *what the data is*, never on a path.
-//! * [`store`] — validated, atomic, bit-exact persistence of Lipschitz
-//!   estimates, certified reference solutions and shard-layout keys;
-//!   stale or tampered files are rejected wholesale and recomputed.
+//! * [`store`] — validated, atomic, bit-exact, checksummed persistence
+//!   of Lipschitz estimates, certified reference solutions,
+//!   shard-layout keys and spilled warm starts; stale or tampered files
+//!   are rejected wholesale and recomputed.
+//! * [`fleet`] — lease files with monotonic generations, so any number
+//!   of servers (same host or a shared filesystem) share one store:
+//!   writers race through atomic renames, readers re-validate the
+//!   loaded generation, stale leases expire by generation — never wall
+//!   clock, so replays stay deterministic.
 //! * [`server`] — the resident service: dataset registry, bounded work
 //!   queue, deterministic jobs, streamed [`server::JobEvent`]s reusing
-//!   the [`crate::session::Observer`] machinery, warm-start pools for
-//!   λ-path traffic.
+//!   the [`crate::session::Observer`] machinery, and LRU-bounded
+//!   warm-start pools for λ-path traffic that spill evictions to the
+//!   store — a pool miss falls through to disk, so a second server
+//!   warm-starts from solutions the first one computed.
 //! * [`proto`] + [`client`] — the schema-versioned JSON-lines protocol
 //!   behind `ca-prox serve` / `ca-prox submit`, and the in-process
 //!   client the tests and benches drive.
 //!
 //! `rust/tests/serve.rs` pins the contract: concurrent submits are
 //! bit-identical to fresh standalone sessions, a warm boot against the
-//! same bytes pays zero Lipschitz computes (≥ 1 `persisted_hits`), and
+//! same bytes pays zero Lipschitz computes (≥ 1 `persisted_hits`),
 //! changed bytes under the same name get a new fingerprint and a full
-//! recompute.
+//! recompute, concurrent leased writers never tear the shared plan
+//! file, any one-byte corruption of a plan or warm file is rejected
+//! wholesale, and a second server on a shared store warm-starts from
+//! the first one's spilled solutions (`warm_spill_hits ≥ 1`).
 
 pub mod client;
 pub mod fingerprint;
+pub mod fleet;
 pub mod proto;
 pub mod server;
 pub mod store;
 
 pub use client::ServeClient;
 pub use fingerprint::Fingerprint;
+pub use fleet::{validate_pool_tag, Lease, WriterId, LEASE_SCHEMA};
 pub use proto::{parse_request, serve_loop, Request, SubmitCmd, PROTO_SCHEMA};
 pub use server::{
     DatasetRef, JobEvent, JobEventKind, JobId, JobTicket, Server, ServerConfig, SolveRequest,
+    DEFAULT_WARM_POOL_MAX,
 };
-pub use store::{HydrateReport, PlanStore, STORE_SCHEMA};
+pub use store::{HydrateReport, PlanStore, WarmLoad, STORE_SCHEMA, WARM_SCHEMA};

@@ -273,12 +273,13 @@ pub fn drained_line(jobs: usize) -> String {
 }
 
 /// Per-dataset cache statistics (every [`CacheStats`] counter,
-/// including `persisted_hits` / `store_writes` — the CI serve-smoke
-/// asserts on these).
-pub fn stats_line(stats: &[(String, CacheStats)]) -> String {
+/// including `persisted_hits` / `store_writes` and the fleet's warm
+/// counters — the CI serve-smoke and fleet-smoke steps assert on
+/// these) plus the in-memory warm-pool occupancy.
+pub fn stats_line(stats: &[(String, CacheStats, usize)]) -> String {
     let datasets = stats
         .iter()
-        .map(|(fp, s)| {
+        .map(|(fp, s, warm_entries)| {
             Json::obj(vec![
                 ("fingerprint", Json::Str(fp.clone())),
                 ("lipschitz_computes", Json::Num(s.lipschitz_computes as f64)),
@@ -289,6 +290,9 @@ pub fn stats_line(stats: &[(String, CacheStats)]) -> String {
                 ("shard_hits", Json::Num(s.shard_hits as f64)),
                 ("persisted_hits", Json::Num(s.persisted_hits as f64)),
                 ("store_writes", Json::Num(s.store_writes as f64)),
+                ("warm_evictions", Json::Num(s.warm_evictions as f64)),
+                ("warm_spill_hits", Json::Num(s.warm_spill_hits as f64)),
+                ("warm_pool_entries", Json::Num(*warm_entries as f64)),
             ])
         })
         .collect();

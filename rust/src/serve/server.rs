@@ -20,10 +20,23 @@
 //! independence for fewer iterations, like
 //! [`crate::grid::SweepSpec::warm_start_along_lambda`].
 //!
+//! Warm pools are **bounded**: each (tag) pool keeps at most
+//! [`ServerConfig::warm_pool_max_entries`] solutions in memory
+//! (default [`DEFAULT_WARM_POOL_MAX`]), LRU-evicting beyond that. When
+//! a plan store is configured, evicted vectors are spilled to
+//! `warm/<tag>/<λ-bits>.json` and a pool miss falls through to the
+//! store — so the bound changes *where* a solution lives, never
+//! *whether* it is available, and a second server on the same store
+//! warm-starts from solutions the first one computed (the fleet story;
+//! counted by `CacheStats::warm_spill_hits`). Without a store, evicted
+//! entries are simply dropped (a cold start, same as before the pool
+//! learned that λ).
+//!
 //! Shutdown is a graceful drain: queued jobs complete, workers then
 //! exit, and every dataset's cache has been persisted after each
 //! completed job (so even a killed process loses at most the in-flight
-//! job's contribution).
+//! job's contribution); the final drain also spills any still-dirty
+//! warm-pool entries so the fleet inherits them.
 
 use crate::cluster::engine::resolve_threads;
 use crate::datasets::{registry, Dataset};
@@ -31,7 +44,8 @@ use crate::error::{CaError, Result};
 use crate::grid::{CacheStats, PlanCache};
 use crate::runtime::backend::NativeGramBackend;
 use crate::serve::fingerprint::Fingerprint;
-use crate::serve::store::PlanStore;
+use crate::serve::fleet::{validate_pool_tag, WriterId};
+use crate::serve::store::{PlanStore, WarmLoad};
 use crate::session::{BlockEvent, Observer, Session, Signal, SolveSpec, Topology};
 use crate::solvers::traits::{HistoryPoint, SolverOutput};
 use std::collections::{BTreeMap, VecDeque};
@@ -225,6 +239,16 @@ impl Observer for EventForwarder<'_> {
     }
 }
 
+/// One in-memory warm-pool entry.
+struct WarmEntry {
+    w: Arc<Vec<f64>>,
+    /// LRU clock tick of the last insert or lookup.
+    last_used: u64,
+    /// True until the vector has been spilled to the store (entries
+    /// loaded *from* a spill start clean — the file already holds them).
+    dirty: bool,
+}
+
 /// One registered dataset: the data, its fingerprint, the plan cache
 /// every job on it shares, and the warm-start pools.
 struct DatasetEntry {
@@ -233,27 +257,190 @@ struct DatasetEntry {
     cache: Arc<PlanCache>,
     /// tag → (λ bits → completed solution). λ ≥ 0, so the bit order of
     /// the keys is the numeric order.
-    warm: Mutex<BTreeMap<String, BTreeMap<u64, Arc<Vec<f64>>>>>,
+    warm: Mutex<BTreeMap<String, BTreeMap<u64, WarmEntry>>>,
+    /// Monotonic LRU clock for the warm pools (ticks under the pool
+    /// lock, so last_used values are unique).
+    warm_clock: AtomicU64,
 }
 
 impl DatasetEntry {
-    fn nearest_warm(&self, tag: &str, lambda: f64) -> Option<Arc<Vec<f64>>> {
-        let warm = lock(&self.warm);
-        let pool = warm.get(tag)?;
-        pool.iter()
-            .min_by(|a, b| {
-                let da = (f64::from_bits(*a.0) - lambda).abs();
-                let db = (f64::from_bits(*b.0) - lambda).abs();
-                da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
-            })
-            .map(|(_, w)| Arc::clone(w))
+    fn tick(&self) -> u64 {
+        self.warm_clock.fetch_add(1, Ordering::Relaxed)
     }
 
-    fn note_warm(&self, tag: &str, lambda: f64, w: &[f64]) {
-        lock(&self.warm)
-            .entry(tag.to_string())
-            .or_default()
-            .insert(lambda.to_bits(), Arc::new(w.to_vec()));
+    /// Enforce one pool's LRU bound under the pool lock, returning the
+    /// still-dirty victims for the caller to spill *outside* the lock
+    /// (clean victims are already on disk, and holding the pool mutex
+    /// across file writes would serialize every tagged job on this
+    /// dataset behind disk latency). Evictions are counted here whether
+    /// or not a store exists; without one the caller simply drops the
+    /// victims — a later request is a cold start.
+    fn evict_overflow(
+        &self,
+        pool: &mut BTreeMap<u64, WarmEntry>,
+        max_entries: usize,
+    ) -> Vec<(u64, Arc<Vec<f64>>)> {
+        let mut dirty = Vec::new();
+        while pool.len() > max_entries {
+            let victim = pool
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&bits, _)| bits)
+                .expect("non-empty pool has an LRU victim");
+            let entry = pool.remove(&victim).expect("victim key came from the pool");
+            self.cache.note_warm_eviction();
+            if entry.dirty {
+                dirty.push((victim, entry.w));
+            }
+        }
+        dirty
+    }
+
+    /// Spill evicted-but-dirty entries (outside the pool lock).
+    fn spill_victims(
+        &self,
+        tag: &str,
+        store: Option<&PlanStore>,
+        victims: Vec<(u64, Arc<Vec<f64>>)>,
+    ) {
+        let Some(store) = store else { return };
+        for (bits, w) in victims {
+            if let Err(e) = store.spill_warm(&self.fingerprint, tag, bits, &w) {
+                log::warn!("warm spill failed for {}: {e}", self.fingerprint);
+            }
+        }
+    }
+
+    /// The completed tagged solution with the nearest λ, looking at the
+    /// union of the in-memory pool and the spilled files (when a store
+    /// is configured) — the LRU bound moves entries between the two
+    /// tiers but never shrinks the candidate set. Candidates are ranked
+    /// by (|λ − λ_c|, λ bits): fully deterministic, memory preferred on
+    /// an exact-λ overlap (same content, no I/O). A corrupt spill file
+    /// is skipped (next-nearest candidate is tried) and counts nothing.
+    /// All file I/O — the tier listing, candidate loads, victim spills —
+    /// happens outside the pool lock; the lock only guards map state.
+    fn nearest_warm(
+        &self,
+        tag: &str,
+        lambda: f64,
+        max_entries: usize,
+        store: Option<&PlanStore>,
+    ) -> Option<Arc<Vec<f64>>> {
+        let disk_bits: Vec<u64> =
+            store.map(|s| s.list_warm(&self.fingerprint, tag)).unwrap_or_default();
+        // Snapshot + rank the candidate set under the lock.
+        let ranked: Vec<(u64, bool)> = {
+            let mut warm = lock(&self.warm);
+            let pool = warm.entry(tag.to_string()).or_default();
+            // bits → available in memory? (disk first, memory overwrites)
+            let mut candidates: BTreeMap<u64, bool> =
+                disk_bits.into_iter().map(|b| (b, false)).collect();
+            for &bits in pool.keys() {
+                candidates.insert(bits, true);
+            }
+            let mut ranked: Vec<(f64, u64, bool)> = candidates
+                .into_iter()
+                .map(|(bits, in_mem)| ((f64::from_bits(bits) - lambda).abs(), bits, in_mem))
+                .collect();
+            ranked.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+            });
+            ranked.into_iter().map(|(_, bits, in_mem)| (bits, in_mem)).collect()
+        };
+        for (bits, in_mem) in ranked {
+            if in_mem {
+                let mut warm = lock(&self.warm);
+                let pool = warm.entry(tag.to_string()).or_default();
+                if let Some(entry) = pool.get_mut(&bits) {
+                    entry.last_used = self.tick();
+                    return Some(Arc::clone(&entry.w));
+                }
+                // Evicted since the snapshot (concurrent tagged job):
+                // if it was dirty it is on disk now — fall through.
+                if store.is_none() {
+                    continue;
+                }
+            }
+            let Some(store) = store else { continue };
+            match store.load_warm(&self.fingerprint, self.ds.d(), tag, bits) {
+                WarmLoad::Loaded(w) => {
+                    self.cache.note_warm_spill_hit();
+                    let w = Arc::new(w);
+                    // Promote into the pool (clean: the file already
+                    // holds it) so repeat lookups stay off the disk;
+                    // the promotion itself respects the bound.
+                    let victims = {
+                        let mut warm = lock(&self.warm);
+                        let pool = warm.entry(tag.to_string()).or_default();
+                        let tick = self.tick();
+                        pool.insert(
+                            bits,
+                            WarmEntry { w: Arc::clone(&w), last_used: tick, dirty: false },
+                        );
+                        self.evict_overflow(pool, max_entries)
+                    };
+                    self.spill_victims(tag, Some(store), victims);
+                    return Some(w);
+                }
+                WarmLoad::Rejected(reason) => {
+                    log::warn!("spilled warm start rejected for {}: {reason}", self.fingerprint);
+                }
+                WarmLoad::Missing => {}
+            }
+        }
+        None
+    }
+
+    /// Record a completed tagged solution and enforce the pool's LRU
+    /// bound (victim spills happen after the lock is released).
+    fn note_warm(
+        &self,
+        tag: &str,
+        lambda: f64,
+        w: &[f64],
+        max_entries: usize,
+        store: Option<&PlanStore>,
+    ) {
+        let victims = {
+            let mut warm = lock(&self.warm);
+            let pool = warm.entry(tag.to_string()).or_default();
+            let tick = self.tick();
+            pool.insert(
+                lambda.to_bits(),
+                WarmEntry { w: Arc::new(w.to_vec()), last_used: tick, dirty: true },
+            );
+            self.evict_overflow(pool, max_entries)
+        };
+        self.spill_victims(tag, store, victims);
+    }
+
+    /// Spill every still-dirty pool entry (shutdown / `persist_all`),
+    /// so a later boot — this server's or another's — inherits the full
+    /// warm tier. Returns the number of vectors written.
+    fn spill_dirty(&self, store: &PlanStore) -> usize {
+        let mut warm = lock(&self.warm);
+        let mut written = 0;
+        for (tag, pool) in warm.iter_mut() {
+            for (&bits, entry) in pool.iter_mut() {
+                if !entry.dirty {
+                    continue;
+                }
+                match store.spill_warm(&self.fingerprint, tag, bits, &entry.w) {
+                    Ok(()) => {
+                        entry.dirty = false;
+                        written += 1;
+                    }
+                    Err(e) => log::warn!("warm spill failed for {}: {e}", self.fingerprint),
+                }
+            }
+        }
+        written
+    }
+
+    /// In-memory warm-pool occupancy across every tag.
+    fn warm_entries(&self) -> usize {
+        lock(&self.warm).values().map(BTreeMap::len).sum()
     }
 }
 
@@ -265,6 +452,12 @@ struct Job {
     warm_tag: Option<String>,
     state: Arc<JobState>,
 }
+
+/// Default in-memory bound of each (tag) warm pool — finite, so a
+/// long-running server with heavy λ-path traffic can never grow without
+/// bound (the ROADMAP follow-on this closes); large enough that small
+/// sweeps stay entirely in memory.
+pub const DEFAULT_WARM_POOL_MAX: usize = 16;
 
 /// Server construction parameters.
 #[derive(Clone, Debug)]
@@ -278,11 +471,25 @@ pub struct ServerConfig {
     /// Plan-store root for cross-process persistence (None = in-memory
     /// only).
     pub store: Option<PathBuf>,
+    /// In-memory LRU bound of each (tag) warm pool, ≥ 1 (default
+    /// [`DEFAULT_WARM_POOL_MAX`]; use `usize::MAX` to approximate
+    /// unbounded). Evictions spill to the store when one is configured.
+    pub warm_pool_max_entries: usize,
+    /// Fleet writer identity for the store's lease files (None = the
+    /// pid-derived default, see
+    /// [`crate::serve::fleet::WriterId::for_process`]).
+    pub writer_id: Option<String>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { threads: None, queue_cap: 64, store: None }
+        ServerConfig {
+            threads: None,
+            queue_cap: 64,
+            store: None,
+            warm_pool_max_entries: DEFAULT_WARM_POOL_MAX,
+            writer_id: None,
+        }
     }
 }
 
@@ -304,6 +511,18 @@ impl ServerConfig {
         self.store = Some(root.into());
         self
     }
+
+    /// Set the per-tag warm-pool LRU bound (≥ 1).
+    pub fn with_warm_pool_max(mut self, max_entries: usize) -> Self {
+        self.warm_pool_max_entries = max_entries;
+        self
+    }
+
+    /// Set the fleet writer identity (validated at [`Server::new`]).
+    pub fn with_writer_id(mut self, id: &str) -> Self {
+        self.writer_id = Some(id.to_string());
+        self
+    }
 }
 
 struct ServerInner {
@@ -315,6 +534,7 @@ struct ServerInner {
     queue_cap: usize,
     datasets: Mutex<BTreeMap<String, Arc<DatasetEntry>>>,
     store: Option<PlanStore>,
+    warm_pool_max: usize,
     shutdown: AtomicBool,
     next_job: AtomicU64,
 }
@@ -333,13 +553,25 @@ impl Server {
         if config.queue_cap == 0 {
             return Err(CaError::Config("serve queue capacity must be ≥ 1".into()));
         }
+        if config.warm_pool_max_entries == 0 {
+            return Err(CaError::Config(
+                "serve warm-pool bound must be ≥ 1 (warm tags are opt-in per job; \
+                 omit the tag instead of bounding the pool to zero)"
+                    .into(),
+            ));
+        }
+        let writer = match &config.writer_id {
+            Some(id) => WriterId::new(id)?,
+            None => WriterId::for_process(),
+        };
         let inner = Arc::new(ServerInner {
             queue: Mutex::new(VecDeque::new()),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
             queue_cap: config.queue_cap,
             datasets: Mutex::new(BTreeMap::new()),
-            store: config.store.map(PlanStore::new),
+            store: config.store.map(|root| PlanStore::new(root).with_writer(writer)),
+            warm_pool_max: config.warm_pool_max_entries,
             shutdown: AtomicBool::new(false),
             next_job: AtomicU64::new(0),
         });
@@ -379,6 +611,7 @@ impl Server {
             fingerprint,
             cache: Arc::new(PlanCache::new()),
             warm: Mutex::new(BTreeMap::new()),
+            warm_clock: AtomicU64::new(0),
         });
         if let Some(store) = &self.inner.store {
             let report = store.hydrate(&entry.ds, &entry.cache)?;
@@ -404,6 +637,11 @@ impl Server {
     pub fn submit(&self, req: SolveRequest) -> Result<JobTicket> {
         req.topology.validate()?;
         req.spec.validate()?;
+        if let Some(tag) = &req.warm_tag {
+            // Tags name store directories (`warm/<tag>/…`), so they are
+            // validated like any other path component.
+            validate_pool_tag(tag)?;
+        }
         let entry = lock(&self.inner.datasets)
             .get(&req.dataset_id)
             .cloned()
@@ -443,12 +681,19 @@ impl Server {
         lock(&self.inner.datasets).get(id).map(|e| e.cache.stats())
     }
 
-    /// Cache statistics of every registered dataset, in id order.
-    pub fn stats(&self) -> Vec<(String, CacheStats)> {
+    /// Cache statistics plus in-memory warm-pool occupancy of every
+    /// registered dataset, in id order.
+    pub fn stats(&self) -> Vec<(String, CacheStats, usize)> {
         lock(&self.inner.datasets)
             .iter()
-            .map(|(k, e)| (k.clone(), e.cache.stats()))
+            .map(|(k, e)| (k.clone(), e.cache.stats(), e.warm_entries()))
             .collect()
+    }
+
+    /// In-memory warm-pool occupancy (entries across every tag) of one
+    /// registered dataset. Spilled entries live in the store, not here.
+    pub fn warm_occupancy(&self, id: &str) -> Option<usize> {
+        lock(&self.inner.datasets).get(id).map(|e| e.warm_entries())
     }
 
     /// The fingerprint of a registered dataset.
@@ -457,8 +702,11 @@ impl Server {
     }
 
     /// Persist every registered dataset's cache to the plan store now
-    /// (workers also persist after each completed job). Returns the
-    /// total entries written; 0 when no store is configured.
+    /// (workers also persist after each completed job) and spill every
+    /// still-dirty warm-pool entry, so another server on the same store
+    /// can hydrate the plans *and* warm-start from this one's
+    /// solutions. Returns the total entries written (plan entries +
+    /// warm vectors); 0 when no store is configured.
     pub fn persist_all(&self) -> Result<usize> {
         let Some(store) = &self.inner.store else { return Ok(0) };
         let entries: Vec<Arc<DatasetEntry>> =
@@ -466,12 +714,14 @@ impl Server {
         let mut total = 0;
         for e in entries {
             total += store.save(&e.ds, &e.cache)?;
+            total += e.spill_dirty(store);
         }
         Ok(total)
     }
 
     /// Graceful drain: queued jobs complete, workers exit, caches are
-    /// persisted. Dropping the server does the same.
+    /// persisted and warm pools spilled. Dropping the server does the
+    /// same.
     pub fn shutdown(mut self) -> Result<()> {
         self.join_workers()
     }
@@ -483,6 +733,14 @@ impl Server {
         let mut panicked = false;
         for handle in self.workers.drain(..) {
             panicked |= handle.join().is_err();
+        }
+        // Final persist after the workers are gone (no in-flight jobs):
+        // plans are usually already saved per-job, but the warm pools
+        // spill here so the fleet inherits them. Idempotent — a second
+        // call (shutdown then Drop) finds nothing dirty. Failure must
+        // not mask a worker panic or fail an otherwise clean drain.
+        if let Err(e) = self.persist_all() {
+            log::warn!("final persist on shutdown failed: {e}");
         }
         if panicked {
             return Err(CaError::Cluster("a serve worker panicked".into()));
@@ -516,10 +774,16 @@ fn next_job(inner: &ServerInner) -> Option<Job> {
 fn worker_loop(inner: &ServerInner) {
     while let Some(job) = next_job(inner) {
         job.state.push(JobEvent { job: job.id, kind: JobEventKind::Started });
-        match run_job(&job) {
+        match run_job(&job, inner) {
             Ok(out) => {
                 if let Some(tag) = &job.warm_tag {
-                    job.entry.note_warm(tag, job.spec.lambda, &out.w);
+                    job.entry.note_warm(
+                        tag,
+                        job.spec.lambda,
+                        &out.w,
+                        inner.warm_pool_max,
+                        inner.store.as_ref(),
+                    );
                 }
                 job.state.push(JobEvent { job: job.id, kind: JobEventKind::Done(Box::new(out)) });
             }
@@ -540,7 +804,7 @@ fn worker_loop(inner: &ServerInner) {
     }
 }
 
-fn run_job(job: &Job) -> Result<SolverOutput> {
+fn run_job(job: &Job, inner: &ServerInner) -> Result<SolverOutput> {
     let mut session = Session::build_with_cache(
         &job.entry.ds,
         job.topology,
@@ -550,7 +814,12 @@ fn run_job(job: &Job) -> Result<SolverOutput> {
     let mut spec = job.spec.clone();
     if spec.warm_start.is_none() {
         if let Some(tag) = &job.warm_tag {
-            if let Some(w) = job.entry.nearest_warm(tag, spec.lambda) {
+            if let Some(w) = job.entry.nearest_warm(
+                tag,
+                spec.lambda,
+                inner.warm_pool_max,
+                inner.store.as_ref(),
+            ) {
                 spec.warm_start = Some((*w).clone());
             }
         }
@@ -663,5 +932,74 @@ mod tests {
     fn zero_threads_and_zero_queue_rejected() {
         assert!(Server::new(ServerConfig::default().with_threads(0)).is_err());
         assert!(Server::new(ServerConfig::default().with_queue_cap(0)).is_err());
+        assert!(Server::new(ServerConfig::default().with_warm_pool_max(0)).is_err());
+        assert!(Server::new(ServerConfig::default().with_writer_id("../escape")).is_err());
+    }
+
+    #[test]
+    fn traversal_shaped_warm_tags_rejected_at_submit() {
+        let server = Server::new(ServerConfig::default().with_threads(1)).unwrap();
+        let id = server.register_dataset(ds()).unwrap();
+        let req = SolveRequest::new(&id, Topology::new(1), spec(0.05)).with_warm_tag("../../x");
+        assert!(server.submit(req).is_err());
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn warm_pool_lru_evicts_and_spills_to_store() {
+        let store_dir = std::env::temp_dir()
+            .join(format!("ca_prox_server_warm_lru_{}", std::process::id()));
+        std::fs::remove_dir_all(&store_dir).ok();
+        // One worker, bound 1: jobs run in submit order, every insert
+        // beyond the first evicts-and-spills the previous λ.
+        let server = Server::new(
+            ServerConfig::default()
+                .with_threads(1)
+                .with_store(&store_dir)
+                .with_warm_pool_max(1),
+        )
+        .unwrap();
+        let id = server.register_dataset(ds()).unwrap();
+        for lambda in [0.1, 0.05, 0.09] {
+            server
+                .submit(
+                    SolveRequest::new(&id, Topology::new(1), spec(lambda)).with_warm_tag("path"),
+                )
+                .unwrap()
+                .wait()
+                .unwrap();
+        }
+        assert_eq!(server.warm_occupancy(&id), Some(1), "bound holds");
+        let (_, stats, occupancy) = server.stats().into_iter().next().unwrap();
+        assert_eq!(occupancy, 1);
+        assert!(stats.warm_evictions >= 2, "stats: {stats:?}");
+        // λ=0.09's nearest candidate is the *evicted* 0.1 (|Δ|=0.01, vs
+        // 0.04 for the in-memory 0.05) → the warm start came off disk.
+        assert!(stats.warm_spill_hits >= 1, "stats: {stats:?}");
+        server.shutdown().unwrap();
+        std::fs::remove_dir_all(&store_dir).ok();
+    }
+
+    #[test]
+    fn warm_pool_eviction_without_store_drops_entries() {
+        let server = Server::new(
+            ServerConfig::default().with_threads(1).with_warm_pool_max(1),
+        )
+        .unwrap();
+        let id = server.register_dataset(ds()).unwrap();
+        for lambda in [0.1, 0.05] {
+            server
+                .submit(
+                    SolveRequest::new(&id, Topology::new(1), spec(lambda)).with_warm_tag("path"),
+                )
+                .unwrap()
+                .wait()
+                .unwrap();
+        }
+        let (_, stats, occupancy) = server.stats().into_iter().next().unwrap();
+        assert_eq!(occupancy, 1);
+        assert_eq!(stats.warm_evictions, 1);
+        assert_eq!(stats.warm_spill_hits, 0, "no store, nothing to fall through to");
+        server.shutdown().unwrap();
     }
 }

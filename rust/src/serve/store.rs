@@ -1,4 +1,5 @@
-//! Cross-process persistence for [`crate::grid::PlanCache`] contents.
+//! Cross-process persistence for [`crate::grid::PlanCache`] contents,
+//! shared safely by a whole fleet of writers.
 //!
 //! A [`PlanStore`] serializes the one-time work a plan needs — Lipschitz
 //! estimates, certified reference solutions and shard-layout keys —
@@ -7,38 +8,66 @@
 //! can skip the O(d²·n) setup entirely, and a process that boots against
 //! *different* bytes can never be poisoned by someone else's numbers.
 //!
+//! Fleet sharing ([`super::fleet`]): every save is **leased** — the
+//! writer publishes `lease.<writer_id>` claiming the next generation
+//! before renaming the plan file into place, and readers re-validate the
+//! loaded generation against the lease files so a read that raced a
+//! publish settles on the newest complete file (bounded retries, never a
+//! block — plan content is deterministic per fingerprint, so an older
+//! complete file is always safe to serve). Stale leases expire by
+//! generation, never wall clock.
+//!
 //! Trust model: nothing in a store file is taken on faith.
 //!
 //! * the embedded fingerprint must equal the fingerprint recomputed
 //!   from the live dataset — a stale directory (data changed under the
 //!   same path) is rejected wholesale;
 //! * every entry is validated (hex bit patterns, vector lengths against
-//!   the live `d`, partition names) before *anything* hydrates — a
-//!   truncated or hand-edited file is rejected wholesale, never
-//!   partially served;
+//!   the live `d`, partition names) before *anything* hydrates, and the
+//!   whole payload must match its embedded FNV-1a **checksum** — so not
+//!   just truncation but *any* single-byte corruption (files are written
+//!   compact: every byte is significant) is rejected wholesale, never
+//!   partially served (pinned by a fault-injection property test in
+//!   `rust/tests/serve.rs`);
 //! * rejection is silent-but-reported ([`HydrateReport::rejected`]):
 //!   the caller recomputes, exactly as if the file never existed.
 //!
 //! Floats round-trip as hexadecimal u64 bit patterns (JSON numbers are
 //! f64 and would lose NaN payloads and signed zeros; bit patterns are
 //! exact), so a hydrated cache is bit-identical to the cache that was
-//! saved — pinned by a property test in `rust/tests/serve.rs`.
+//! saved.
+//!
+//! The store also holds the serve engine's **spilled warm starts**:
+//! `<fingerprint>/warm/<tag>/<λ-bits>.json`, one completed solution per
+//! (pool tag, λ), written when the in-memory warm pool's LRU bound
+//! evicts an entry (and at shutdown), read back when a pool miss falls
+//! through to disk — the fleet's unit of shared warm work. Same
+//! discipline as the plan file: atomic rename, hex bit patterns,
+//! validate-everything-plus-checksum, corrupt files rejected wholesale.
 
 use crate::cluster::shard::PartitionStrategy;
 use crate::datasets::Dataset;
 use crate::error::{CaError, Result};
 use crate::grid::PlanCache;
-use crate::serve::fingerprint::Fingerprint;
+use crate::runtime::artifact::warmpool_dir;
+use crate::serve::fingerprint::{Fingerprint, Fnv};
+use crate::serve::fleet::{
+    self, atomic_write_json, gc_stale_leases, max_generation, publish_lease, scan_leases,
+    WriterId,
+};
 use crate::util::json::{parse, Json};
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 
 /// Store-file schema version (bumped on incompatible layout changes;
 /// unknown versions are rejected and recomputed, like any bad file).
-pub const STORE_SCHEMA: usize = 1;
+/// v2 added the fleet fields — `writer`, `generation`, `checksum` — and
+/// switched to compact serialization so every byte is checksummed
+/// content.
+pub const STORE_SCHEMA: usize = 2;
 
-/// Disambiguates temp-file names when several threads of one process
-/// save concurrently (the process id covers cross-process savers).
-static TMP_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+/// Spilled-warm-start schema version.
+pub const WARM_SCHEMA: usize = 1;
 
 /// What a [`PlanStore::hydrate`] call actually loaded.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -49,6 +78,8 @@ pub struct HydrateReport {
     pub references: usize,
     /// Shard layouts rebuilt.
     pub shards: usize,
+    /// Fleet generation of the accepted plan file (0 = no file).
+    pub generation: u64,
     /// Why the store file was rejected (`None` = clean load or no file).
     /// A rejected file hydrates nothing — the caller recomputes.
     pub rejected: Option<String>,
@@ -61,15 +92,30 @@ impl HydrateReport {
     }
 }
 
-/// A directory of fingerprint-keyed plan files.
+/// Outcome of loading one spilled warm-start vector.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WarmLoad {
+    /// No spill file for this (tag, λ).
+    Missing,
+    /// A file exists but failed validation (corrupt, stale fingerprint,
+    /// wrong length, bad checksum) — treated as a miss, never served.
+    Rejected(String),
+    /// The validated vector, bit-identical to what was spilled.
+    Loaded(Vec<f64>),
+}
+
+/// A directory of fingerprint-keyed plan files (and spilled warm
+/// starts), safely shareable between any number of leased writers.
 #[derive(Clone, Debug)]
 pub struct PlanStore {
     root: PathBuf,
+    writer: WriterId,
 }
 
 /// Validated in-memory form of a store file, parsed completely before
 /// any of it touches a cache.
 struct Parsed {
+    generation: u64,
     lipschitz: Vec<(u64, f64)>,
     references: Vec<(u64, usize, f64, Vec<f64>)>,
     shards: Vec<(usize, PartitionStrategy)>,
@@ -79,8 +125,16 @@ fn hex64(bits: u64) -> Json {
     Json::Str(format!("{bits:016x}"))
 }
 
+/// Strict inverse of [`hex64`]: exactly 16 *lowercase* hex digits — the
+/// one spelling the writer emits. `from_str_radix` alone would also
+/// accept uppercase, making `a → A` a one-byte mutation that parses to
+/// the same value and slips past the checksum; canonical-form-only
+/// parsing keeps "every byte is load-bearing" literally true.
 fn parse_hex64(v: Option<&Json>, what: &str) -> std::result::Result<u64, String> {
     v.and_then(Json::as_str)
+        .filter(|s| {
+            s.len() == 16 && s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+        })
         .and_then(|s| u64::from_str_radix(s, 16).ok())
         .ok_or_else(|| format!("bad or missing {what}"))
 }
@@ -100,13 +154,78 @@ fn parse_partition(name: &str) -> std::result::Result<PartitionStrategy, String>
     }
 }
 
+/// Checksum of a plan file's semantic payload (everything except the
+/// checksum itself), in field order. Computed from *values*, not bytes,
+/// so the writer and the validator can never disagree about formatting —
+/// and every value-changing corruption is caught even when the mutated
+/// file still parses.
+fn checksum_plan(
+    fingerprint: &str,
+    writer: &str,
+    generation: u64,
+    lipschitz: &[(u64, f64)],
+    references: &[(u64, usize, f64, &[f64])],
+    shards: &[(usize, PartitionStrategy)],
+) -> u64 {
+    let mut h = Fnv::new();
+    h.str(fingerprint);
+    h.str(writer);
+    h.word(generation);
+    h.word(lipschitz.len() as u64);
+    for &(seed, l) in lipschitz {
+        h.word(seed);
+        h.word(l.to_bits());
+    }
+    h.word(references.len() as u64);
+    for &(lambda_bits, max_iters, tol, w) in references {
+        h.word(lambda_bits);
+        h.word(max_iters as u64);
+        h.word(tol.to_bits());
+        h.word(w.len() as u64);
+        for v in w {
+            h.word(v.to_bits());
+        }
+    }
+    h.word(shards.len() as u64);
+    for &(p, strategy) in shards {
+        h.word(p as u64);
+        h.str(partition_name(strategy));
+    }
+    h.finish()
+}
+
+/// Checksum of a spilled warm vector's payload.
+fn checksum_warm(fingerprint: &str, tag: &str, lambda_bits: u64, w: &[f64]) -> u64 {
+    let mut h = Fnv::new();
+    h.str(fingerprint);
+    h.str(tag);
+    h.word(lambda_bits);
+    h.word(w.len() as u64);
+    for v in w {
+        h.word(v.to_bits());
+    }
+    h.finish()
+}
+
 impl PlanStore {
-    /// Store rooted at `root` (conventionally
-    /// `artifacts/plancache`, see
-    /// [`crate::runtime::artifact::plancache_root`]). Nothing touches
-    /// the filesystem until [`PlanStore::save`] / [`PlanStore::hydrate`].
+    /// Store rooted at `root` (conventionally `artifacts/plancache`, see
+    /// [`crate::runtime::artifact::plancache_root`]) with the default
+    /// per-process writer identity. Nothing touches the filesystem until
+    /// [`PlanStore::save`] / [`PlanStore::hydrate`].
     pub fn new(root: impl Into<PathBuf>) -> Self {
-        PlanStore { root: root.into() }
+        PlanStore { root: root.into(), writer: WriterId::for_process() }
+    }
+
+    /// Use an explicit fleet writer identity for lease files (see
+    /// [`crate::serve::fleet`]); the default is pid-derived.
+    pub fn with_writer(mut self, writer: WriterId) -> Self {
+        self.writer = writer;
+        self
+    }
+
+    /// This store's writer identity.
+    pub fn writer(&self) -> &WriterId {
+        &self.writer
     }
 
     /// The store's root directory.
@@ -124,31 +243,114 @@ impl PlanStore {
         self.dir_for(fp).join("plan.json")
     }
 
+    /// Best-effort read of the (generation, writer) stamp a plan file
+    /// carries (`None` when missing or unreadable).
+    fn read_stamp(path: &Path) -> Option<(u64, String)> {
+        let root = parse(&std::fs::read_to_string(path).ok()?).ok()?;
+        let generation = root.get("generation").and_then(Json::as_usize)? as u64;
+        let writer = root.get("writer").and_then(Json::as_str)?.to_string();
+        Some((generation, writer))
+    }
+
     /// Persist `cache`'s exportable contents keyed by `ds`'s
-    /// fingerprint. The write is atomic (uniquely-named temp file +
-    /// rename), so concurrent savers — two workers finishing jobs on
-    /// one dataset, or two processes sharing a store — each publish a
-    /// complete file and readers never see a torn one. A save whose
-    /// cache has not changed since the last completed save (and whose
-    /// file already exists) is skipped, returning 0 without touching
-    /// the disk or the `store_writes` counter; otherwise returns the
-    /// number of entries written.
+    /// fingerprint, as a **leased, merging** write:
+    ///
+    /// * the current on-disk plan (if valid) is merged into the export —
+    ///   union of Lipschitz seeds, references (tighter certified
+    ///   tolerance wins per (λ, max_iters)) and shard keys — so fleet
+    ///   writers *accumulate* each other's one-time work instead of
+    ///   last-rename-wins erasing it;
+    /// * the claimed generation (`1 + max(plan, leases)`) is published
+    ///   to `lease.<writer_id>` first, then the plan file is renamed
+    ///   into place atomically — concurrent savers each publish a
+    ///   complete file and readers never see a torn one;
+    /// * the epoch is marked saved only if this writer's file is still
+    ///   the live one afterwards — a save that lost a rename race
+    ///   leaves the epoch dirty, so the next save re-merges and
+    ///   re-publishes;
+    /// * conversely, a clean-epoch save is skipped only while the live
+    ///   file is **this writer's own** — if another writer's file is
+    ///   live, it may have been merged from a read that predates our
+    ///   last rename, so the save reconciles (re-merges and
+    ///   re-publishes) even though our cache is unchanged. Together
+    ///   these make the union converge across any graceful lifecycle:
+    ///   every writer's shutdown persist re-publishes anything a racing
+    ///   overwrite dropped. (Two *concurrent* handles sharing one
+    ///   writer id — e.g. the pid-derived default inside one process —
+    ///   weaken this reconciliation; give fleet members distinct ids.)
+    ///
+    /// A skipped save returns 0 without touching the disk or the
+    /// `store_writes` counter; otherwise returns the number of entries
+    /// written.
     pub fn save(&self, ds: &Dataset, cache: &PlanCache) -> Result<usize> {
         let fp = Fingerprint::of(ds);
         // Snapshot the epoch *before* exporting: a mutation that lands
         // mid-export may or may not be in the file, but it leaves
         // `epoch > saved_epoch`, so the next save re-writes it.
         let epoch = cache.epoch();
-        if cache.saved_epoch() == epoch && self.plan_path(&fp).is_file() {
+        if cache.saved_epoch() == epoch
+            && Self::read_stamp(&self.plan_path(&fp))
+                .is_some_and(|(_, w)| w == self.writer.as_str())
+        {
             return Ok(0);
         }
-        let lip = cache.export_lipschitz();
-        let refs = cache.export_references();
-        let shards = cache.export_shard_keys();
+        let dir = self.dir_for(&fp);
+        std::fs::create_dir_all(&dir)?;
+        // Another writer's entries, to merge (a missing/corrupt/stale
+        // file merges nothing — its content is recomputable anyway).
+        let disk = std::fs::read_to_string(self.plan_path(&fp))
+            .ok()
+            .and_then(|t| Self::parse_and_validate(&t, &fp, ds.d()).ok());
+        // Claim the next generation across the fleet and publish the
+        // lease *before* the plan file, so any reader that loads the
+        // old plan can observe that a newer one is landing.
+        let disk_generation = disk.as_ref().map_or(0, |p| p.generation);
+        let generation = disk_generation.max(max_generation(&scan_leases(&dir))) + 1;
+        publish_lease(&dir, &self.writer, generation)?;
+
+        let mut lip: BTreeMap<u64, f64> = disk
+            .as_ref()
+            .map(|p| p.lipschitz.iter().copied().collect())
+            .unwrap_or_default();
+        lip.extend(cache.export_lipschitz());
+        let mut refs: BTreeMap<(u64, usize), (f64, Vec<f64>)> = BTreeMap::new();
+        if let Some(p) = &disk {
+            for (lambda_bits, max_iters, tol, w) in &p.references {
+                refs.insert((*lambda_bits, *max_iters), (*tol, w.clone()));
+            }
+        }
+        for (lambda_bits, max_iters, tol, w) in cache.export_references() {
+            // The more tightly certified solution wins; ours on a tie
+            // (bit-identical anyway: references are deterministic per
+            // (dataset, λ, tol, budget)).
+            let keep_disk = matches!(
+                refs.get(&(lambda_bits, max_iters)),
+                Some((disk_tol, _)) if *disk_tol < tol
+            );
+            if !keep_disk {
+                refs.insert((lambda_bits, max_iters), (tol, w.to_vec()));
+            }
+        }
+        let mut shards: BTreeSet<(usize, PartitionStrategy)> =
+            disk.map(|p| p.shards.into_iter().collect()).unwrap_or_default();
+        shards.extend(cache.export_shard_keys());
+
+        let lip: Vec<(u64, f64)> = lip.into_iter().collect();
+        let refs: Vec<(u64, usize, f64, Vec<f64>)> =
+            refs.into_iter().map(|((l, m), (t, w))| (l, m, t, w)).collect();
+        let shards: Vec<(usize, PartitionStrategy)> = shards.into_iter().collect();
         let entries = lip.len() + refs.len() + shards.len();
+        let fp_str = fp.to_string();
+        let ref_views: Vec<(u64, usize, f64, &[f64])> =
+            refs.iter().map(|(l, m, t, w)| (*l, *m, *t, w.as_slice())).collect();
+        let checksum =
+            checksum_plan(&fp_str, self.writer.as_str(), generation, &lip, &ref_views, &shards);
         let doc = Json::obj(vec![
             ("schema", Json::Num(STORE_SCHEMA as f64)),
-            ("fingerprint", Json::Str(fp.to_string())),
+            ("fingerprint", Json::Str(fp_str)),
+            ("writer", Json::Str(self.writer.as_str().to_string())),
+            ("generation", Json::Num(generation as f64)),
+            ("checksum", hex64(checksum)),
             (
                 "lipschitz",
                 Json::Arr(
@@ -192,22 +394,22 @@ impl PlanStore {
                 ),
             ),
         ]);
-        let dir = self.dir_for(&fp);
-        std::fs::create_dir_all(&dir)?;
-        // Unique temp name per write: a shared `plan.json.tmp` would
-        // let two concurrent savers interleave into one file and
-        // publish it torn.
-        let tmp = dir.join(format!(
-            "plan.json.tmp.{}.{}",
-            std::process::id(),
-            TMP_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
-        ));
-        std::fs::write(&tmp, doc.to_string_pretty())?;
-        if let Err(e) = std::fs::rename(&tmp, self.plan_path(&fp)) {
-            std::fs::remove_file(&tmp).ok();
-            return Err(CaError::Io(e));
+        // Atomic + compact: concurrent savers each publish a complete
+        // file, and every byte of it is checksummed content.
+        atomic_write_json(&dir, "plan.json", &self.plan_path(&fp), &doc)?;
+        // Leases strictly below the generation just published are
+        // expired — by generation, never wall clock.
+        gc_stale_leases(&dir, generation);
+        // Mark the epoch saved only if our rename is still the live
+        // file (generation collisions are possible under races, so the
+        // writer is part of the stamp). Losing the race leaves the
+        // epoch dirty: the next save re-merges the winner's content
+        // with ours and re-publishes, so the union always converges.
+        if Self::read_stamp(&self.plan_path(&fp))
+            .is_some_and(|(g, w)| g == generation && w == self.writer.as_str())
+        {
+            cache.note_saved(epoch);
         }
-        cache.note_saved(epoch);
         Ok(entries)
     }
 
@@ -215,53 +417,78 @@ impl PlanStore {
     /// rejected files are both non-errors — the report says what
     /// happened and the caller's compute paths fill the gaps; `Err` is
     /// reserved for live-dataset failures (a shard rebuild failing).
+    ///
+    /// After a successful parse the loaded generation is re-validated
+    /// against the lease files: a newer lease means a concurrent
+    /// publish raced this read, so the read retries (bounded) to settle
+    /// on the newest complete file. It never waits for an in-flight
+    /// writer — an older complete file is always safe, because plan
+    /// content is deterministic per fingerprint.
     pub fn hydrate(&self, ds: &Dataset, cache: &PlanCache) -> Result<HydrateReport> {
+        const ATTEMPTS: usize = 3;
         let fp = Fingerprint::of(ds);
+        let dir = self.dir_for(&fp);
         let path = self.plan_path(&fp);
-        let text = match std::fs::read_to_string(&path) {
-            Ok(t) => t,
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-                return Ok(HydrateReport::default())
-            }
-            Err(e) => {
-                return Ok(HydrateReport {
-                    rejected: Some(format!("unreadable {}: {e}", path.display())),
-                    ..Default::default()
-                })
-            }
-        };
-        match Self::parse_and_validate(&text, &fp, ds.d()) {
-            Ok(parsed) => {
-                let mut report = HydrateReport::default();
-                for &(seed, l) in &parsed.lipschitz {
-                    if cache.hydrate_lipschitz(seed, l) {
-                        report.lipschitz += 1;
+        let mut rejected = None;
+        for attempt in 0..ATTEMPTS {
+            let retry_left = attempt + 1 < ATTEMPTS;
+            let text = match std::fs::read_to_string(&path) {
+                Ok(t) => t,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    return Ok(HydrateReport::default())
+                }
+                Err(e) => {
+                    rejected = Some(format!("unreadable {}: {e}", path.display()));
+                    if retry_left && max_generation(&scan_leases(&dir)) > 0 {
+                        continue;
                     }
+                    break;
                 }
-                for (lambda_bits, max_iters, tol, w) in parsed.references {
-                    if cache.hydrate_reference(lambda_bits, max_iters, tol, w) {
-                        report.references += 1;
+            };
+            match Self::parse_and_validate(&text, &fp, ds.d()) {
+                Ok(parsed) => {
+                    if parsed.generation < max_generation(&scan_leases(&dir)) && retry_left {
+                        continue;
                     }
+                    let mut report =
+                        HydrateReport { generation: parsed.generation, ..Default::default() };
+                    for &(seed, l) in &parsed.lipschitz {
+                        if cache.hydrate_lipschitz(seed, l) {
+                            report.lipschitz += 1;
+                        }
+                    }
+                    for (lambda_bits, max_iters, tol, w) in parsed.references {
+                        if cache.hydrate_reference(lambda_bits, max_iters, tol, w) {
+                            report.references += 1;
+                        }
+                    }
+                    // Layouts are deterministic recomputations from the
+                    // live dataset — rebuilding here moves the column
+                    // gather to boot time so the first request doesn't
+                    // pay it.
+                    for &(p, strategy) in &parsed.shards {
+                        cache.sharded(ds, p, strategy)?;
+                        report.shards += 1;
+                    }
+                    return Ok(report);
                 }
-                // Layouts are deterministic recomputations from the live
-                // dataset — rebuilding here moves the column gather to
-                // boot time so the first request doesn't pay it.
-                for &(p, strategy) in &parsed.shards {
-                    cache.sharded(ds, p, strategy)?;
-                    report.shards += 1;
+                Err(reason) => {
+                    rejected = Some(format!("{}: {reason}", path.display()));
+                    // A lease means a writer exists; the corrupt read may
+                    // have been superseded by a clean publish — re-read.
+                    if retry_left && max_generation(&scan_leases(&dir)) > 0 {
+                        continue;
+                    }
+                    break;
                 }
-                Ok(report)
             }
-            Err(reason) => Ok(HydrateReport {
-                rejected: Some(format!("{}: {reason}", path.display())),
-                ..Default::default()
-            }),
         }
+        Ok(HydrateReport { rejected, ..Default::default() })
     }
 
     /// Parse + validate a complete store file against the live dataset's
-    /// fingerprint and dimension. All-or-nothing: the first invalid
-    /// entry rejects the whole file.
+    /// fingerprint and dimension, then against its embedded checksum.
+    /// All-or-nothing: the first invalid entry rejects the whole file.
     fn parse_and_validate(
         text: &str,
         fp: &Fingerprint,
@@ -278,10 +505,17 @@ impl PlanStore {
             .and_then(Json::as_str)
             .ok_or_else(|| "missing fingerprint".to_string())?;
         if stored_fp != fp.to_string() {
-            return Err(format!(
-                "stale fingerprint: file says {stored_fp}, dataset is {fp}"
-            ));
+            return Err(format!("stale fingerprint: file says {stored_fp}, dataset is {fp}"));
         }
+        let writer = root
+            .get("writer")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "missing writer".to_string())?;
+        let generation = root
+            .get("generation")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| "bad or missing generation".to_string())? as u64;
+        let stored_checksum = parse_hex64(root.get("checksum"), "checksum")?;
         let arr = |key: &str| {
             root.get(key)
                 .and_then(Json::as_arr)
@@ -344,11 +578,162 @@ impl PlanStore {
             )?;
             shards.push((p, strategy));
         }
-        Ok(Parsed { lipschitz, references, shards })
+        let ref_views: Vec<(u64, usize, f64, &[f64])> =
+            references.iter().map(|(l, m, t, w)| (*l, *m, *t, w.as_slice())).collect();
+        let computed =
+            checksum_plan(stored_fp, writer, generation, &lipschitz, &ref_views, &shards);
+        if computed != stored_checksum {
+            return Err(format!(
+                "checksum mismatch: file says {stored_checksum:016x}, payload hashes to \
+                 {computed:016x}"
+            ));
+        }
+        Ok(Parsed { generation, lipschitz, references, shards })
     }
 
-    /// Remove `ds`'s plan directory, if present (used by tests and by
-    /// operators resetting a poisoned cache).
+    // ---- spilled warm starts ----
+
+    /// Directory of `tag`'s spilled warm vectors for `fp`
+    /// (`<fingerprint>/warm/<tag>/`, see
+    /// [`crate::runtime::artifact::warmpool_dir`]).
+    pub fn warm_dir(&self, fp: &Fingerprint, tag: &str) -> PathBuf {
+        warmpool_dir(&self.dir_for(fp), tag)
+    }
+
+    /// Path of one spilled warm vector (`<λ-bits as 16 hex digits>.json`).
+    pub fn warm_path(&self, fp: &Fingerprint, tag: &str, lambda_bits: u64) -> PathBuf {
+        self.warm_dir(fp, tag).join(format!("{lambda_bits:016x}.json"))
+    }
+
+    /// Atomically spill one completed warm-start solution. Overwrites
+    /// any previous spill for the same (tag, λ) — last completed
+    /// solution wins, exactly like the in-memory pool.
+    pub fn spill_warm(
+        &self,
+        fp: &Fingerprint,
+        tag: &str,
+        lambda_bits: u64,
+        w: &[f64],
+    ) -> Result<()> {
+        fleet::validate_pool_tag(tag)?;
+        let dir = self.warm_dir(fp, tag);
+        std::fs::create_dir_all(&dir)?;
+        let fp_str = fp.to_string();
+        let doc = Json::obj(vec![
+            ("schema", Json::Num(WARM_SCHEMA as f64)),
+            ("fingerprint", Json::Str(fp_str.clone())),
+            ("tag", Json::Str(tag.to_string())),
+            ("lambda_bits", hex64(lambda_bits)),
+            ("checksum", hex64(checksum_warm(&fp_str, tag, lambda_bits, w))),
+            ("w_bits", Json::Arr(w.iter().map(|v| hex64(v.to_bits())).collect())),
+        ]);
+        atomic_write_json(&dir, "warm", &self.warm_path(fp, tag, lambda_bits), &doc)
+    }
+
+    /// Load one spilled warm vector, validating everything (schema,
+    /// fingerprint, tag, λ bits against the file name, length against
+    /// the live `d`, finiteness, checksum) before serving a single
+    /// float. Corruption is a [`WarmLoad::Rejected`] miss, never an
+    /// error and never a partial vector.
+    pub fn load_warm(&self, fp: &Fingerprint, d: usize, tag: &str, lambda_bits: u64) -> WarmLoad {
+        if let Err(e) = fleet::validate_pool_tag(tag) {
+            return WarmLoad::Rejected(e.to_string());
+        }
+        let path = self.warm_path(fp, tag, lambda_bits);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return WarmLoad::Missing,
+            Err(e) => return WarmLoad::Rejected(format!("unreadable {}: {e}", path.display())),
+        };
+        match Self::parse_warm(&text, fp, d, tag, lambda_bits) {
+            Ok(w) => WarmLoad::Loaded(w),
+            Err(reason) => WarmLoad::Rejected(format!("{}: {reason}", path.display())),
+        }
+    }
+
+    fn parse_warm(
+        text: &str,
+        fp: &Fingerprint,
+        d: usize,
+        tag: &str,
+        lambda_bits: u64,
+    ) -> std::result::Result<Vec<f64>, String> {
+        let root = parse(text).map_err(|e| format!("unparseable ({e})"))?;
+        match root.get("schema").and_then(Json::as_usize) {
+            Some(WARM_SCHEMA) => {}
+            Some(v) => return Err(format!("unsupported warm schema {v}")),
+            None => return Err("missing schema".into()),
+        }
+        let stored_fp = root
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "missing fingerprint".to_string())?;
+        if stored_fp != fp.to_string() {
+            return Err(format!("stale fingerprint: file says {stored_fp}, dataset is {fp}"));
+        }
+        match root.get("tag").and_then(Json::as_str) {
+            Some(t) if t == tag => {}
+            Some(t) => return Err(format!("tag mismatch: file says '{t}', pool is '{tag}'")),
+            None => return Err("missing tag".into()),
+        }
+        let stored_lambda = parse_hex64(root.get("lambda_bits"), "lambda_bits")?;
+        if stored_lambda != lambda_bits {
+            return Err("lambda_bits does not match the file name".into());
+        }
+        let stored_checksum = parse_hex64(root.get("checksum"), "checksum")?;
+        let w_json = root
+            .get("w_bits")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "missing w_bits".to_string())?;
+        if w_json.len() != d {
+            return Err(format!("warm vector has {} entries, dataset has d = {d}", w_json.len()));
+        }
+        let mut w = Vec::with_capacity(d);
+        for v in w_json {
+            let x = f64::from_bits(parse_hex64(Some(v), "w_bits entry")?);
+            if !x.is_finite() {
+                return Err("non-finite w_bits entry".into());
+            }
+            w.push(x);
+        }
+        let computed = checksum_warm(stored_fp, tag, lambda_bits, &w);
+        if computed != stored_checksum {
+            return Err(format!(
+                "checksum mismatch: file says {stored_checksum:016x}, payload hashes to \
+                 {computed:016x}"
+            ));
+        }
+        Ok(w)
+    }
+
+    /// λ bit patterns of every spilled warm vector under (fp, tag), in
+    /// ascending bit order (λ ≥ 0, so that is numeric order). File
+    /// contents are *not* validated here — [`PlanStore::load_warm`]
+    /// does that when a candidate is actually chosen.
+    pub fn list_warm(&self, fp: &Fingerprint, tag: &str) -> Vec<u64> {
+        if fleet::validate_pool_tag(tag).is_err() {
+            return Vec::new();
+        }
+        let Ok(entries) = std::fs::read_dir(self.warm_dir(fp, tag)) else { return Vec::new() };
+        let mut bits: Vec<u64> = entries
+            .flatten()
+            .filter_map(|e| {
+                let name = e.file_name();
+                let name = name.to_str()?;
+                let hex = name.strip_suffix(".json")?;
+                if hex.len() != 16 {
+                    return None;
+                }
+                u64::from_str_radix(hex, 16).ok()
+            })
+            .collect();
+        bits.sort_unstable();
+        bits
+    }
+
+    /// Remove `ds`'s plan directory, if present — plan file, leases and
+    /// spilled warm vectors (used by tests and by operators resetting a
+    /// poisoned cache).
     pub fn evict(&self, ds: &Dataset) -> Result<bool> {
         let dir = self.dir_for(&Fingerprint::of(ds));
         match std::fs::remove_dir_all(&dir) {
@@ -365,6 +750,7 @@ mod tests {
     use crate::comm::costmodel::MachineModel;
     use crate::comm::trace::CostTrace;
     use crate::datasets::synthetic::{generate, SyntheticSpec};
+    use crate::serve::fleet::lease_path;
 
     fn ds(seed: u64) -> Dataset {
         generate(
@@ -413,6 +799,7 @@ mod tests {
         let fresh = PlanCache::new();
         let report = store.hydrate(&ds, &fresh).unwrap();
         assert_eq!(report.rejected, None);
+        assert_eq!(report.generation, 1, "first leased save claims generation 1");
         assert_eq!((report.lipschitz, report.references, report.shards), (1, 1, 1));
         let mut t2 = CostTrace::new();
         let l2 = fresh.lipschitz(&ds, 3, &machine, &mut t2).unwrap();
@@ -427,6 +814,92 @@ mod tests {
         assert_eq!(s.reference_computes, 0);
         assert_eq!(s.persisted_hits, 2);
         std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn leased_saves_bump_generations_and_gc_expired_leases() {
+        let ds = ds(9);
+        let shared_root = tmp_store("leases").root().to_path_buf();
+        let a = PlanStore::new(&shared_root).with_writer(WriterId::new("a").unwrap());
+        let b = PlanStore::new(&shared_root).with_writer(WriterId::new("b").unwrap());
+        let machine = MachineModel::comet();
+
+        let cache_a = PlanCache::new();
+        let mut t = CostTrace::new();
+        cache_a.lipschitz(&ds, 3, &machine, &mut t).unwrap();
+        a.save(&ds, &cache_a).unwrap();
+        let dir = a.dir_for(&Fingerprint::of(&ds));
+        assert!(lease_path(&dir, a.writer()).is_file());
+
+        // A second writer supersedes generation 1 with generation 2 and
+        // garbage-collects the expired lease.
+        let cache_b = PlanCache::new();
+        b.hydrate(&ds, &cache_b).unwrap();
+        let mut t2 = CostTrace::new();
+        cache_b.lipschitz(&ds, 4, &machine, &mut t2).unwrap();
+        b.save(&ds, &cache_b).unwrap();
+        assert!(!lease_path(&dir, a.writer()).is_file(), "expired lease must be collected");
+        assert!(lease_path(&dir, b.writer()).is_file());
+
+        let fresh = PlanCache::new();
+        let report = b.hydrate(&ds, &fresh).unwrap();
+        assert_eq!(report.rejected, None);
+        assert_eq!(report.generation, 2);
+        // b hydrated a's seed before computing its own, so the final
+        // plan carries both — the fleet accumulates, it doesn't churn.
+        assert_eq!(report.lipschitz, 2);
+
+        // A third writer that never hydrated must STILL accumulate:
+        // save() merges the on-disk plan into its export, so a writer
+        // that only knows seed 5 cannot erase seeds 3 and 4.
+        let c = PlanStore::new(&shared_root).with_writer(WriterId::new("c").unwrap());
+        let cache_c = PlanCache::new();
+        let mut t3 = CostTrace::new();
+        cache_c.lipschitz(&ds, 5, &machine, &mut t3).unwrap();
+        c.save(&ds, &cache_c).unwrap();
+        let fresh2 = PlanCache::new();
+        let report2 = c.hydrate(&ds, &fresh2).unwrap();
+        assert_eq!(report2.rejected, None);
+        assert_eq!(report2.generation, 3);
+        assert_eq!(report2.lipschitz, 3, "c's save must merge a's and b's seeds, not drop them");
+        std::fs::remove_dir_all(&shared_root).ok();
+    }
+
+    #[test]
+    fn clean_epoch_save_reconciles_when_another_writers_file_is_live() {
+        let ds = ds(12);
+        let shared_root = tmp_store("reconcile").root().to_path_buf();
+        let a = PlanStore::new(&shared_root).with_writer(WriterId::new("a").unwrap());
+        let machine = MachineModel::comet();
+        let cache_a = PlanCache::new();
+        let mut t = CostTrace::new();
+        cache_a.lipschitz(&ds, 3, &machine, &mut t).unwrap();
+        assert!(a.save(&ds, &cache_a).unwrap() > 0);
+        // Clean epoch + our own file live → genuinely nothing to do.
+        assert_eq!(a.save(&ds, &cache_a).unwrap(), 0);
+        // Simulate a racing writer whose merge was based on a read
+        // taken *before* a's rename: build b's plan against a separate
+        // root (so it never saw seed 3) and copy it over a's file.
+        let b_root = tmp_store("reconcile_b").root().to_path_buf();
+        let b = PlanStore::new(&b_root).with_writer(WriterId::new("b").unwrap());
+        let cache_b = PlanCache::new();
+        let mut t2 = CostTrace::new();
+        cache_b.lipschitz(&ds, 4, &machine, &mut t2).unwrap();
+        b.save(&ds, &cache_b).unwrap();
+        let fp = Fingerprint::of(&ds);
+        std::fs::copy(b.plan_path(&fp), a.plan_path(&fp)).unwrap();
+        // a's cache is unchanged, but the live file is b's and lacks
+        // seed 3 — the save must reconcile instead of skipping, and the
+        // result must carry BOTH writers' entries.
+        assert!(a.save(&ds, &cache_a).unwrap() >= 2, "reconciling save must not be skipped");
+        let fresh = PlanCache::new();
+        let report = a.hydrate(&ds, &fresh).unwrap();
+        assert_eq!(report.rejected, None);
+        assert_eq!(report.lipschitz, 2, "seed 3 restored alongside b's seed 4");
+        // And now that a's own file is live again, the skip returns.
+        assert_eq!(a.save(&ds, &cache_a).unwrap(), 0);
+        std::fs::remove_dir_all(&shared_root).ok();
+        std::fs::remove_dir_all(&b_root).ok();
     }
 
     #[test]
@@ -477,22 +950,33 @@ mod tests {
         let report = store.hydrate(&ds, &fresh).unwrap();
         assert_eq!(report.total(), 0);
         assert!(report.rejected.is_some());
-        // A wrong-length reference vector (valid JSON, tampered
-        // payload) → rejected wholesale, including the valid entries.
-        let tampered = full.replace("\"max_iters\": 50000", "\"max_iters\": 49999");
-        // (key change keeps JSON valid; now truncate one w_bits entry)
+        // A wrong-length reference vector (valid JSON, one w_bits entry
+        // removed) → rejected wholesale, including the valid entries.
         let tampered = {
-            let start = tampered.find("\"w_bits\"").unwrap();
-            let open = tampered[start..].find('[').unwrap() + start;
-            let close = tampered[open..].find(']').unwrap() + open;
-            let first_end = tampered[open..].find(',').map(|i| i + open).unwrap_or(close);
-            format!("{}{}", &tampered[..open + 1], &tampered[first_end + 1..])
+            let start = full.find("\"w_bits\"").unwrap();
+            let open = full[start..].find('[').unwrap() + start;
+            let close = full[open..].find(']').unwrap() + open;
+            let first_end = full[open..].find(',').map(|i| i + open).unwrap_or(close);
+            format!("{}{}", &full[..open + 1], &full[first_end + 1..])
         };
         std::fs::write(&path, tampered).unwrap();
         let fresh2 = PlanCache::new();
         let report2 = store.hydrate(&ds, &fresh2).unwrap();
         assert_eq!(report2.total(), 0, "partially valid file must hydrate nothing");
         assert!(report2.rejected.unwrap().contains("entries"));
+        // A value flip that keeps the JSON perfectly well-formed (one
+        // hex digit of one w_bits entry) → caught by the checksum.
+        let marker = "\"w_bits\":[\"";
+        let start = full.find(marker).unwrap() + marker.len();
+        let old = full.as_bytes()[start] as char;
+        let new = if old == '0' { '1' } else { '0' };
+        let mut flipped = full.clone();
+        flipped.replace_range(start..start + 1, &new.to_string());
+        std::fs::write(&path, flipped).unwrap();
+        let fresh3 = PlanCache::new();
+        let report3 = store.hydrate(&ds, &fresh3).unwrap();
+        assert_eq!(report3.total(), 0);
+        assert!(report3.rejected.unwrap().contains("checksum"));
         std::fs::remove_dir_all(store.root()).ok();
     }
 
@@ -508,10 +992,12 @@ mod tests {
         // Nothing changed since the last save: skipped, not re-counted.
         assert_eq!(store.save(&ds, &cache).unwrap(), 0);
         assert_eq!(cache.stats().store_writes, 1);
-        // A new mutation re-arms the write.
+        // A new mutation re-arms the write (and bumps the generation).
         cache.lipschitz(&ds, 4, &machine, &mut t).unwrap();
         assert!(store.save(&ds, &cache).unwrap() > 0);
         assert_eq!(cache.stats().store_writes, 2);
+        let report = store.hydrate(&ds, &PlanCache::new()).unwrap();
+        assert_eq!(report.generation, 2);
         std::fs::remove_dir_all(store.root()).ok();
     }
 
@@ -528,8 +1014,9 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         // Overwrite the stored L̂ bit pattern with NaN: valid hex, valid
         // JSON — but hydrating it would poison every step size, so the
-        // file must be rejected like any other tampering.
-        let marker = "\"l_bits\": \"";
+        // file must be rejected like any other tampering (the structural
+        // check fires before the checksum even gets a say).
+        let marker = "\"l_bits\":\"";
         let start = text.find(marker).unwrap() + marker.len();
         let tampered =
             format!("{}{}{}", &text[..start], "7ff8000000000000", &text[start + 16..]);
@@ -550,10 +1037,52 @@ mod tests {
         let path = store.plan_path(&Fingerprint::of(&ds));
         let text = std::fs::read_to_string(&path)
             .unwrap()
-            .replace("\"schema\": 1", "\"schema\": 2");
+            .replace("\"schema\":2", "\"schema\":3");
         std::fs::write(&path, text).unwrap();
         let report = store.hydrate(&ds, &PlanCache::new()).unwrap();
         assert!(report.rejected.unwrap().contains("schema"));
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn warm_spill_round_trips_and_rejects_corruption() {
+        let ds = ds(10);
+        let store = tmp_store("warm");
+        let fp = Fingerprint::of(&ds);
+        let lambda_bits = 0.05f64.to_bits();
+        let w: Vec<f64> = (0..ds.d()).map(|i| (i as f64) * 0.25 - 0.5).collect();
+        assert_eq!(store.load_warm(&fp, ds.d(), "path", lambda_bits), WarmLoad::Missing);
+        store.spill_warm(&fp, "path", lambda_bits, &w).unwrap();
+        assert_eq!(store.list_warm(&fp, "path"), vec![lambda_bits]);
+        match store.load_warm(&fp, ds.d(), "path", lambda_bits) {
+            WarmLoad::Loaded(back) => assert_eq!(
+                w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                back.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            ),
+            other => panic!("clean spill must load, got {other:?}"),
+        }
+        // Wrong tag and wrong λ are misses, not cross-served entries.
+        assert_eq!(store.load_warm(&fp, ds.d(), "other", lambda_bits), WarmLoad::Missing);
+        // Flip one hex digit of the payload: checksum mismatch.
+        let path = store.warm_path(&fp, "path", lambda_bits);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let marker = "\"w_bits\":[\"";
+        let start = text.find(marker).unwrap() + marker.len();
+        let old = text.as_bytes()[start] as char;
+        let new = if old == '0' { '1' } else { '0' };
+        let mut flipped = text.clone();
+        flipped.replace_range(start..start + 1, &new.to_string());
+        std::fs::write(&path, flipped).unwrap();
+        match store.load_warm(&fp, ds.d(), "path", lambda_bits) {
+            WarmLoad::Rejected(reason) => assert!(reason.contains("checksum"), "{reason}"),
+            other => panic!("corrupt spill must be rejected, got {other:?}"),
+        }
+        // Traversal-shaped tags never touch the filesystem.
+        assert!(matches!(
+            store.load_warm(&fp, ds.d(), "../escape", lambda_bits),
+            WarmLoad::Rejected(_)
+        ));
+        assert!(store.spill_warm(&fp, "../escape", lambda_bits, &w).is_err());
         std::fs::remove_dir_all(store.root()).ok();
     }
 }

@@ -77,6 +77,21 @@ impl Gen {
         self.log.push(format!("choose(idx={i})"));
         &xs[i]
     }
+
+    /// Fault injection: overwrite one byte of `bytes` at a sampled
+    /// offset with a guaranteed-different value (a non-zero wrapping
+    /// delta). Returns the mutated offset; the offset and delta are
+    /// logged so a failing case replays exactly.
+    pub fn mutate_byte(&mut self, bytes: &mut [u8]) -> usize {
+        assert!(!bytes.is_empty(), "cannot mutate an empty buffer");
+        let offset = self.rng.next_below(bytes.len());
+        let delta = 1 + self.rng.next_below(255) as u8;
+        let old = bytes[offset];
+        bytes[offset] = old.wrapping_add(delta);
+        self.log
+            .push(format!("mutate_byte(offset={offset}, {:#04x}->{:#04x})", old, bytes[offset]));
+        offset
+    }
 }
 
 /// Run `cases` random cases of a property. Panics on the first failure
@@ -130,6 +145,23 @@ mod tests {
             } else {
                 Ok(())
             }
+        });
+    }
+
+    #[test]
+    fn mutate_byte_always_changes_exactly_one_byte() {
+        prop_check("mutate_byte changes one byte", 100, |g| {
+            let original: Vec<u8> = (0..g.usize_in(1, 64)).map(|i| (i * 7) as u8).collect();
+            let mut mutated = original.clone();
+            let offset = g.mutate_byte(&mut mutated);
+            if mutated[offset] == original[offset] {
+                return Err("mutated byte equals the original".into());
+            }
+            let diffs = original.iter().zip(&mutated).filter(|(a, b)| a != b).count();
+            if diffs != 1 {
+                return Err(format!("{diffs} bytes changed, expected exactly 1"));
+            }
+            Ok(())
         });
     }
 

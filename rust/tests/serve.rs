@@ -13,12 +13,34 @@
 //! plus a property test that a persisted [`PlanCache`] round-trips
 //! bit-identically (L̂ bit patterns, reference-solution vectors) and
 //! that truncated files are rejected and recomputed.
+//!
+//! Fleet-engine acceptance pins (ISSUE 5):
+//!
+//! (d) N concurrent leased writers — each its own [`Server`] +
+//!     [`PlanStore`] handle on one directory, racing `persist_all` —
+//!     never tear the shared plan file: every subsequent load hydrates
+//!     a complete, bit-exact plan, and every racing job's output is
+//!     bit-identical to a standalone session;
+//! (e) fault injection: mutating or truncating ONE byte of a persisted
+//!     `plan.json` or a spilled warm vector, at a property-sampled
+//!     offset, rejects the file wholesale (the files are compact and
+//!     checksummed, so every byte is load-bearing) — the caches
+//!     recompute and record zero `persisted_hits` from the corrupt
+//!     file;
+//! (f) the warm-pool LRU bound is transparent when a store is
+//!     configured: `warm_pool_max_entries = 1` vs unbounded produce
+//!     bit-identical iterates for the same job sequence, with evicted
+//!     entries recovered through `warm_spill_hits`;
+//! (g) a second server on the first one's store boots with
+//!     `lipschitz_computes == 0` AND warm-starts from the first's
+//!     spilled solutions (`warm_spill_hits ≥ 1`), bit-identical to a
+//!     standalone session fed the same warm start explicitly.
 
 use ca_prox::datasets::synthetic::{generate, SyntheticSpec};
 use ca_prox::datasets::Dataset;
 use ca_prox::grid::PlanCache;
 use ca_prox::serve::{
-    Fingerprint, PlanStore, ServeClient, Server, ServerConfig, SolveRequest,
+    Fingerprint, PlanStore, ServeClient, Server, ServerConfig, SolveRequest, WarmLoad, WriterId,
 };
 use ca_prox::session::{Session, SolveSpec, Topology};
 use ca_prox::util::prop::prop_check;
@@ -252,5 +274,273 @@ fn persisted_cache_round_trips_bit_identically_prop() {
         }
         Ok(())
     });
+    std::fs::remove_dir_all(&store_dir).ok();
+}
+
+#[test]
+fn concurrent_leased_writers_never_tear_the_shared_plan() {
+    let store_dir = tmp_dir("fleet_stress");
+    let lambdas = [0.1, 0.05, 0.02, 0.01];
+    // N threads, each driving its OWN Server (and therefore its own
+    // PlanStore handle) against one directory: every job triggers a
+    // leased save, and shutdown races persist_all across all writers.
+    let outputs: Vec<ca_prox::solvers::traits::SolverOutput> = std::thread::scope(|scope| {
+        let handles: Vec<_> = lambdas
+            .iter()
+            .enumerate()
+            .map(|(i, &lambda)| {
+                let store_dir = &store_dir;
+                scope.spawn(move || {
+                    let server = Server::new(
+                        ServerConfig::default()
+                            .with_threads(1)
+                            .with_store(store_dir)
+                            .with_writer_id(&format!("w{i}")),
+                    )
+                    .unwrap();
+                    let id = server.register_dataset(dataset(21)).unwrap();
+                    let out = server
+                        .submit(SolveRequest::new(&id, Topology::new(2), spec(lambda, 3)))
+                        .unwrap()
+                        .wait()
+                        .unwrap();
+                    server.persist_all().unwrap();
+                    server.shutdown().unwrap();
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // Racing the store adds zero numerical surface to any writer.
+    let ds = dataset(21);
+    for (&lambda, out) in lambdas.iter().zip(&outputs) {
+        let mut standalone = Session::build(&ds, Topology::new(2)).unwrap();
+        let expect = standalone.solve(&spec(lambda, 3)).unwrap();
+        assert_eq!(out.w, expect.w, "λ={lambda}");
+        assert_eq!(out.final_objective.to_bits(), expect.final_objective.to_bits());
+    }
+    // Every subsequent load hydrates a complete, bit-exact plan — never
+    // a torn or partially merged file.
+    let store = PlanStore::new(&store_dir);
+    let fresh = PlanCache::new();
+    let report = store.hydrate(&ds, &fresh).unwrap();
+    assert_eq!(report.rejected, None, "racing writers must always leave a valid file");
+    assert!(report.generation >= 1, "leased saves carry generations");
+    assert!(report.lipschitz >= 1, "every writer used seed 3, so every save carried L̂(3)");
+    let machine = ca_prox::comm::costmodel::MachineModel::comet();
+    let reference = PlanCache::new();
+    let mut t = ca_prox::comm::trace::CostTrace::new();
+    let expect_l = reference.lipschitz(&ds, 3, &machine, &mut t).unwrap();
+    let mut t2 = ca_prox::comm::trace::CostTrace::new();
+    let got_l = fresh.lipschitz(&ds, 3, &machine, &mut t2).unwrap();
+    assert_eq!(got_l.to_bits(), expect_l.to_bits(), "hydrated L̂ is bit-exact");
+    assert_eq!(fresh.stats().lipschitz_computes, 0);
+    assert!(fresh.stats().persisted_hits >= 1);
+    // And a post-race boot is a warm boot with bit-identical solves.
+    let server = Server::new(
+        ServerConfig::default().with_threads(1).with_store(&store_dir).with_writer_id("post"),
+    )
+    .unwrap();
+    let id = server.register_dataset(dataset(21)).unwrap();
+    let out = server
+        .submit(SolveRequest::new(&id, Topology::new(2), spec(0.05, 3)))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(server.dataset_stats(&id).unwrap().lipschitz_computes, 0);
+    let mut standalone = Session::build(&ds, Topology::new(2)).unwrap();
+    let expect = standalone.solve(&spec(0.05, 3)).unwrap();
+    assert_eq!(out.w, expect.w);
+    server.shutdown().unwrap();
+    std::fs::remove_dir_all(&store_dir).ok();
+}
+
+#[test]
+fn one_byte_corruption_rejects_plan_and_warm_files_prop() {
+    let store_root = tmp_dir("fault_injection");
+    let mut case = 0u64;
+    let machine = ca_prox::comm::costmodel::MachineModel::comet();
+    prop_check("one-byte corruption is rejected wholesale", 10, |g| {
+        case += 1;
+        let ds = generate(
+            &SyntheticSpec {
+                d: g.usize_in(2, 6),
+                n: g.usize_in(20, 50),
+                density: 1.0,
+                noise: 0.05,
+                model_sparsity: 0.5,
+                condition: 1.0,
+            },
+            g.usize_in(1, 100_000) as u64,
+        );
+        let store = PlanStore::new(store_root.join(format!("case{case}")))
+            .with_writer(WriterId::new("prop").map_err(|e| e.to_string())?);
+        let cache = PlanCache::new();
+        let seed = g.usize_in(0, 100) as u64;
+        let mut trace = ca_prox::comm::trace::CostTrace::new();
+        cache.lipschitz(&ds, seed, &machine, &mut trace).map_err(|e| e.to_string())?;
+        cache
+            .reference_solution(&ds, g.f64_in(0.01, 0.5), 1e-2, 20_000)
+            .map_err(|e| e.to_string())?;
+        store.save(&ds, &cache).map_err(|e| e.to_string())?;
+        let fp = Fingerprint::of(&ds);
+
+        // --- plan.json: one mutated byte (or truncation) at a sampled
+        // offset must reject the file wholesale ---
+        let path = store.plan_path(&fp);
+        let mut bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+        if g.bool(0.5) {
+            g.mutate_byte(&mut bytes);
+        } else {
+            let keep = g.usize_in(0, bytes.len() - 1);
+            bytes.truncate(keep);
+        }
+        std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+        let fresh = PlanCache::new();
+        let report = store.hydrate(&ds, &fresh).map_err(|e| e.to_string())?;
+        if report.rejected.is_none() || report.total() != 0 {
+            return Err(format!("corrupt plan accepted: {report:?}"));
+        }
+        // The compute path recovers, and nothing from the corrupt file
+        // ever counts as persisted.
+        let mut t = ca_prox::comm::trace::CostTrace::new();
+        fresh.lipschitz(&ds, seed, &machine, &mut t).map_err(|e| e.to_string())?;
+        let s = fresh.stats();
+        if s.lipschitz_computes != 1 || s.persisted_hits != 0 {
+            return Err(format!("corrupt plan leaked into the cache: {s:?}"));
+        }
+
+        // --- spilled warm vector: same discipline ---
+        let lambda_bits = g.f64_in(0.01, 0.5).to_bits();
+        let w = g.vec_f64(ds.d(), -1.0, 1.0);
+        store.spill_warm(&fp, "pool", lambda_bits, &w).map_err(|e| e.to_string())?;
+        match store.load_warm(&fp, ds.d(), "pool", lambda_bits) {
+            WarmLoad::Loaded(back) => {
+                if back.len() != w.len()
+                    || back.iter().zip(&w).any(|(a, b)| a.to_bits() != b.to_bits())
+                {
+                    return Err("clean warm file did not round-trip bit-exactly".into());
+                }
+            }
+            other => return Err(format!("clean warm file must load, got {other:?}")),
+        }
+        let wpath = store.warm_path(&fp, "pool", lambda_bits);
+        let mut wbytes = std::fs::read(&wpath).map_err(|e| e.to_string())?;
+        if g.bool(0.5) {
+            g.mutate_byte(&mut wbytes);
+        } else {
+            let keep = g.usize_in(0, wbytes.len() - 1);
+            wbytes.truncate(keep);
+        }
+        std::fs::write(&wpath, &wbytes).map_err(|e| e.to_string())?;
+        match store.load_warm(&fp, ds.d(), "pool", lambda_bits) {
+            WarmLoad::Rejected(_) => Ok(()),
+            other => Err(format!("corrupt warm file must be rejected, got {other:?}")),
+        }
+    });
+    std::fs::remove_dir_all(&store_root).ok();
+}
+
+#[test]
+fn warm_pool_lru_bound_is_transparent_with_a_store() {
+    // The λ order forces bound-1 evictions AND makes an evicted λ the
+    // nearest candidate later, so the spilled tier is actually used.
+    let lambdas = [0.1, 0.08, 0.12, 0.05, 0.11];
+    let run = |bound: usize, tag: &str| -> (Vec<Vec<u64>>, ca_prox::grid::CacheStats) {
+        let store_dir = tmp_dir(tag);
+        let server = Server::new(
+            ServerConfig::default()
+                .with_threads(1)
+                .with_store(&store_dir)
+                .with_warm_pool_max(bound)
+                .with_writer_id("w"),
+        )
+        .unwrap();
+        let id = server.register_dataset(dataset(21)).unwrap();
+        let ws: Vec<Vec<u64>> = lambdas
+            .iter()
+            .map(|&lambda| {
+                let out = server
+                    .submit(
+                        SolveRequest::new(&id, Topology::new(1), spec(lambda, 3))
+                            .with_warm_tag("path"),
+                    )
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                out.w.iter().map(|v| v.to_bits()).collect()
+            })
+            .collect();
+        let stats = server.dataset_stats(&id).unwrap();
+        server.shutdown().unwrap();
+        std::fs::remove_dir_all(&store_dir).ok();
+        (ws, stats)
+    };
+    let (bounded, bounded_stats) = run(1, "lru_bound1");
+    let (unbounded, unbounded_stats) = run(usize::MAX, "lru_unbounded");
+    // Eviction moves entries to the store, never out of reach: the
+    // bound must not change a single bit of any iterate.
+    for (i, (a, b)) in bounded.iter().zip(&unbounded).enumerate() {
+        assert_eq!(a, b, "λ={} (job {i}) diverged under the LRU bound", lambdas[i]);
+    }
+    assert!(bounded_stats.warm_evictions >= 1, "stats: {bounded_stats:?}");
+    assert!(
+        bounded_stats.warm_spill_hits >= 1,
+        "evicted entries must be recovered through spill hits: {bounded_stats:?}"
+    );
+    assert_eq!(unbounded_stats.warm_evictions, 0);
+    assert_eq!(unbounded_stats.warm_spill_hits, 0);
+}
+
+#[test]
+fn second_server_warm_starts_from_first_servers_spilled_solutions() {
+    let store_dir = tmp_dir("fleet_accept");
+    let boot = |writer: &str| {
+        Server::new(
+            ServerConfig::default()
+                .with_threads(1)
+                .with_store(&store_dir)
+                .with_warm_pool_max(1)
+                .with_writer_id(writer),
+        )
+        .unwrap()
+    };
+    let a = boot("a");
+    let id = a.register_dataset(dataset(21)).unwrap();
+    let submit = |server: &Server, id: &str, lambda: f64| {
+        server
+            .submit(SolveRequest::new(id, Topology::new(1), spec(lambda, 3)).with_warm_tag("path"))
+            .unwrap()
+            .wait()
+            .unwrap()
+    };
+    let a1 = submit(&a, &id, 0.1);
+    let a2 = submit(&a, &id, 0.05);
+    a.shutdown().unwrap(); // spills the still-dirty 0.05 solution
+
+    let b = boot("b");
+    let id_b = b.register_dataset(dataset(21)).unwrap();
+    assert_eq!(id, id_b, "same bytes, same fleet identity");
+    let out = submit(&b, &id_b, 0.04);
+    let stats = b.dataset_stats(&id_b).unwrap();
+    assert_eq!(stats.lipschitz_computes, 0, "B boots on A's persisted setup");
+    assert!(stats.persisted_hits >= 1, "stats: {stats:?}");
+    assert!(stats.warm_spill_hits >= 1, "B must warm-start from A's spill: {stats:?}");
+    b.shutdown().unwrap();
+
+    // Bit-identical to standalone sessions fed the same warm starts
+    // explicitly — the fleet tier adds zero numerical surface.
+    let ds = dataset(21);
+    let mut session = Session::build(&ds, Topology::new(1)).unwrap();
+    let manual_1 = session.solve(&spec(0.1, 3)).unwrap();
+    assert_eq!(a1.w, manual_1.w);
+    let manual_2 = session.solve(&spec(0.05, 3).warm_start(&manual_1.w)).unwrap();
+    assert_eq!(a2.w, manual_2.w);
+    // B's nearest λ to 0.04 among A's spills {0.1, 0.05} is 0.05.
+    let manual_b = session.solve(&spec(0.04, 3).warm_start(&manual_2.w)).unwrap();
+    assert_eq!(out.w, manual_b.w);
+    let cold = session.solve(&spec(0.04, 3)).unwrap();
+    assert_ne!(out.w, cold.w, "the spilled warm start must actually change the trajectory");
     std::fs::remove_dir_all(&store_dir).ok();
 }
