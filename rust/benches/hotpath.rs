@@ -18,6 +18,7 @@ use ca_prox::matrix::gemm;
 use ca_prox::matrix::ops::{
     sampled_gram_csc, sampled_gram_dense, sampled_gram_dense_naive, GramStack,
 };
+use ca_prox::matrix::vecmath::{best_arch_vecmath, ScalarVecMath, VecMath};
 use ca_prox::datasets::Dataset;
 use ca_prox::runtime::backend::{GramBackend, NativeGramBackend};
 use ca_prox::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
@@ -138,6 +139,101 @@ fn serve_fleet_pair(ds: &Dataset, tag: &str, reps: usize, spec: &SolveSpec) {
     std::fs::remove_dir_all(&store_dir).ok();
 }
 
+/// The `gram/generic-vs-arch` and `elementwise/scalar-vs-simd` hotpath
+/// pairs (EXPERIMENTS.md; CI requires both via `check_bench.py
+/// --require`): the portable generic GEMM kernel vs the runtime-detected
+/// arch microkernel (AVX2/NEON) on the SYRK Gram tile, and the scalar
+/// elementwise impl vs the detected SIMD impl on the fused prox step +
+/// objective reductions. On hosts with no arch kernel both sides run the
+/// portable impl (labelled so), so the pair is always emitted and the
+/// speedup degrades to ~1x instead of the job failing.
+fn simd_pairs(reps: usize) {
+    // ---- gram/generic-vs-arch: packed SYRK through each microkernel ----
+    let (d, m) = (96usize, 512usize);
+    let mut prng = Rng::new(3);
+    let a: Vec<f64> = (0..d * m).map(|_| prng.next_gaussian()).collect();
+    let mut c = vec![0.0; d * d];
+    let generic = gemm::GenericSimdKernel;
+    let t_gen = bench(
+        &format!("gram/generic-vs-arch/generic (syrk d={d}, m={m})"),
+        2,
+        reps,
+        || {
+            c.iter_mut().for_each(|x| *x = 0.0);
+            gemm::syrk_with(&generic, d, m, 1.0, &a, &mut c);
+        },
+    );
+    emit(&t_gen);
+    let arch: &dyn gemm::Kernel = match gemm::best_arch_kernel() {
+        Some(k) => k,
+        None => &generic,
+    };
+    let arch_label = match gemm::best_arch_kernel() {
+        Some(k) => k.name(),
+        None => "generic; no arch kernel on host",
+    };
+    let t_arch = bench(
+        &format!("gram/generic-vs-arch/arch (syrk d={d}, m={m}, {arch_label})"),
+        2,
+        reps,
+        || {
+            c.iter_mut().for_each(|x| *x = 0.0);
+            gemm::syrk_with(arch, d, m, 1.0, &a, &mut c);
+        },
+    );
+    emit(&t_arch);
+    println!(
+        "gram/generic-vs-arch speedup ({arch_label}): {:.2}x",
+        t_gen.median() / t_arch.median()
+    );
+
+    // ---- elementwise/scalar-vs-simd: per-iteration O(d) hot path ----
+    // One rep = the elementwise work of a solver iteration at d = 4096:
+    // momentum extrapolation, fused prox step, and the objective/error
+    // reductions, repeated to get out of timer noise.
+    let n = 4096usize;
+    let w: Vec<f64> = (0..n).map(|_| prng.next_gaussian()).collect();
+    let w_prev: Vec<f64> = (0..n).map(|_| prng.next_gaussian()).collect();
+    let grad: Vec<f64> = (0..n).map(|_| prng.next_gaussian()).collect();
+    let mut v = vec![0.0; n];
+    let scalar_vm = ScalarVecMath;
+    let mut sink = 0.0f64;
+    let mut run = |vm: &dyn VecMath| {
+        for _ in 0..64 {
+            vm.momentum(&w, &w_prev, 0.7, &mut v);
+            vm.prox_step(&mut v, &grad, 0.1, 0.01);
+            sink += vm.sum_abs(&v) + vm.sum_sq_diff(&v, &w);
+        }
+    };
+    let t_scalar = bench(
+        &format!("elementwise/scalar-vs-simd/scalar (d={n}, 64 iters)"),
+        2,
+        reps,
+        || run(&scalar_vm),
+    );
+    emit(&t_scalar);
+    let simd: &dyn VecMath = match best_arch_vecmath() {
+        Some(vm) => vm,
+        None => &scalar_vm,
+    };
+    let simd_label = match best_arch_vecmath() {
+        Some(vm) => vm.name(),
+        None => "scalar; no SIMD impl on host",
+    };
+    let t_simd = bench(
+        &format!("elementwise/scalar-vs-simd/simd (d={n}, 64 iters, {simd_label})"),
+        2,
+        reps,
+        || run(simd),
+    );
+    emit(&t_simd);
+    assert!(sink.is_finite());
+    println!(
+        "elementwise/scalar-vs-simd speedup ({simd_label}): {:.2}x",
+        t_scalar.median() / t_simd.median()
+    );
+}
+
 /// CI smoke slice (`cargo bench --bench hotpath -- --quick`): one tiny
 /// kernel timing plus one Grid sweep cell, each leaving a `BENCH {json}`
 /// line — enough for the bench-smoke job to validate the schema and
@@ -171,6 +267,7 @@ fn quick_mode() {
     emit(&t);
     serve_boot_pair(&ds, "quick", 2, &spec.clone().with_max_iters(8));
     serve_fleet_pair(&ds, "quick", 2, &spec.with_max_iters(8));
+    simd_pairs(5);
     println!("\nhotpath quick OK");
 }
 
@@ -181,6 +278,7 @@ fn main() {
     }
     header("hot path microbenchmarks", "real wall time (release build)");
     println!("gemm kernel: {}", gemm::select_kernel().name());
+    simd_pairs(20);
     let ds = load_preset("covtype", Some(50_000), 42).unwrap();
     let d = ds.d();
     let dense = ds.x.to_dense();

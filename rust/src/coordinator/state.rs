@@ -8,7 +8,7 @@
 
 use crate::error::Result;
 use crate::matrix::ops::GramStack;
-use crate::prox::soft_threshold::soft_threshold_scalar;
+use crate::matrix::vecmath;
 use crate::solvers::traits::GradientAt;
 
 /// Replicated iterate state shared by SFISTA and SPNM updates.
@@ -68,23 +68,21 @@ impl IterState {
         self.iter += 1;
         let mu = Self::momentum_coeff(self.iter);
 
-        // Momentum point v into scratch.
-        for i in 0..d {
-            self.scratch[i] = self.w[i] + mu * (self.w[i] - self.w_prev[i]);
-        }
+        // Momentum point v into scratch (vectorized elementwise layer).
+        vecmath::momentum(&self.w, &self.w_prev, mu, &mut self.scratch);
         // Gradient at the configured point, on the blocked GEMV driver.
         let point: &[f64] = match grad_at {
             GradientAt::Iterate => &self.w,
             GradientAt::Momentum => &self.scratch,
         };
         stack.gradient_into(j, point, &mut self.grad)?;
-        // w_new = S_{λt}(v − t·∇f); rotate iterates.
+        // w_new = S_{λt}(v − t·∇f) as one fused prox step; rotate
+        // iterates first so w_prev holds the pre-update iterate.
         std::mem::swap(&mut self.w_prev, &mut self.w);
-        for i in 0..d {
-            // note: w_prev now holds the pre-update iterate
-            self.w[i] = soft_threshold_scalar(self.scratch[i] - t * self.grad[i], lambda * t);
-        }
-        // 2d² (gradient) + 3d (momentum) + 3d (prox & subtract)
+        self.w.copy_from_slice(&self.scratch);
+        vecmath::prox_step(&mut self.w, &self.grad, t, lambda * t);
+        // 2d² (gradient) + 3d (momentum) + 3d (prox & subtract) — the
+        // analytic count is independent of the vecmath/kernel selection.
         Ok((2 * d * d + 6 * d) as u64)
     }
 
@@ -105,10 +103,8 @@ impl IterState {
         self.scratch.copy_from_slice(&self.w);
         for _ in 0..q_iters {
             stack.gradient_into(j, &self.scratch, &mut self.grad)?;
-            for i in 0..d {
-                self.scratch[i] =
-                    soft_threshold_scalar(self.scratch[i] - t * self.grad[i], lambda * t);
-            }
+            // z ← S_{λt}(z − t·∇f): fused in-place prox step.
+            vecmath::prox_step(&mut self.scratch, &self.grad, t, lambda * t);
         }
         std::mem::swap(&mut self.w_prev, &mut self.w);
         self.w.copy_from_slice(&self.scratch);

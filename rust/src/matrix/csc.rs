@@ -147,16 +147,26 @@ impl CscMatrix {
     }
 
     /// y = X·v where v is indexed by columns (length n): `y[r] = Σ_c X[r,c]·v[c]`.
+    /// Allocates; the per-iteration solver loops use [`Self::matvec_into`].
     pub fn matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
-        if v.len() != self.cols {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(v, &mut y)?;
+        Ok(y)
+    }
+
+    /// Non-allocating `y = X·v` into a caller-provided length-d buffer
+    /// (overwritten, not accumulated).
+    pub fn matvec_into(&self, v: &[f64], y: &mut [f64]) -> Result<()> {
+        if v.len() != self.cols || y.len() != self.rows {
             return Err(CaError::Shape(format!(
-                "csc matvec: X is {}x{}, v has {}",
+                "csc matvec: X is {}x{}, v has {}, y has {}",
                 self.rows,
                 self.cols,
-                v.len()
+                v.len(),
+                y.len()
             )));
         }
-        let mut y = vec![0.0; self.rows];
+        y.fill(0.0);
         for c in 0..self.cols {
             let vc = v[c];
             if vc == 0.0 {
@@ -167,29 +177,38 @@ impl CscMatrix {
                 y[r] += x * vc;
             }
         }
-        Ok(y)
+        Ok(())
     }
 
     /// y = Xᵀ·w (w length d, result length n): `y[c] = Σ_r X[r,c]·w[r]`.
+    /// Allocates; the per-iteration solver loops use [`Self::matvec_t_into`].
     pub fn matvec_t(&self, w: &[f64]) -> Result<Vec<f64>> {
-        if w.len() != self.rows {
+        let mut y = vec![0.0; self.cols];
+        self.matvec_t_into(w, &mut y)?;
+        Ok(y)
+    }
+
+    /// Non-allocating `y = Xᵀ·w` into a caller-provided length-n buffer
+    /// (overwritten, not accumulated).
+    pub fn matvec_t_into(&self, w: &[f64], y: &mut [f64]) -> Result<()> {
+        if w.len() != self.rows || y.len() != self.cols {
             return Err(CaError::Shape(format!(
-                "csc matvec_t: X is {}x{}, w has {}",
+                "csc matvec_t: X is {}x{}, w has {}, y has {}",
                 self.rows,
                 self.cols,
-                w.len()
+                w.len(),
+                y.len()
             )));
         }
-        let mut y = vec![0.0; self.cols];
-        for c in 0..self.cols {
+        for (c, slot) in y.iter_mut().enumerate() {
             let (ri, vs) = self.col(c);
             let mut acc = 0.0;
             for (&r, &x) in ri.iter().zip(vs) {
                 acc += x * w[r];
             }
-            y[c] = acc;
+            *slot = acc;
         }
-        Ok(y)
+        Ok(())
     }
 
     /// Per-column squared norms, ‖x_c‖².

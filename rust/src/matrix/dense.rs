@@ -246,26 +246,10 @@ impl DenseMatrix {
     }
 }
 
-/// Dot product.
+/// Dot product (runs on the selected [`crate::matrix::vecmath`] impl).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: keeps the FP pipelines busy and gives
-    // deterministic (fixed-order) reassociation.
-    let mut acc = [0.0f64; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc[0] += a[j] * b[j];
-        acc[1] += a[j + 1] * b[j + 1];
-        acc[2] += a[j + 2] * b[j + 2];
-        acc[3] += a[j + 3] * b[j + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for j in chunks * 4..a.len() {
-        s += a[j] * b[j];
-    }
-    s
+    crate::matrix::vecmath::dot(a, b)
 }
 
 /// Euclidean norm.
@@ -274,10 +258,10 @@ pub fn norm2(a: &[f64]) -> f64 {
     dot(a, a).sqrt()
 }
 
-/// L1 norm.
+/// L1 norm (runs on the selected [`crate::matrix::vecmath`] impl).
 #[inline]
 pub fn norm1(a: &[f64]) -> f64 {
-    a.iter().map(|x| x.abs()).sum()
+    crate::matrix::vecmath::sum_abs(a)
 }
 
 /// Normalize a vector in place (no-op on zero vectors).
@@ -290,13 +274,10 @@ pub fn normalize(a: &mut [f64]) {
     }
 }
 
-/// y += alpha·x.
+/// y += alpha·x (runs on the selected [`crate::matrix::vecmath`] impl).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    crate::matrix::vecmath::axpy(alpha, x, y)
 }
 
 /// Elementwise: out = a - b.

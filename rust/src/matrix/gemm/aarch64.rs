@@ -1,0 +1,125 @@
+//! NEON microkernel for aarch64 (DESIGN.md §Kernel layer, arch-kernel
+//! extension contract).
+//!
+//! 8×4 double-precision tile on 2-lane `f64x2` vectors: four row vectors
+//! cover the packed A micro-column, each of the 4 packed B values is
+//! broadcast, and the 4×4 = 16 vector accumulators stay resident across
+//! the `kc` loop — comfortably inside the 32 NEON `q` registers. FMA
+//! (`vfmaq_f64`) changes rounding vs the scalar/generic kernels, so
+//! cross-kernel agreement is pinned by tolerance oracles while each
+//! kernel stays bit-deterministic on its own.
+//!
+//! NEON is architecturally mandatory on aarch64, but the kernel still
+//! goes through the same construction-proves-support gate as AVX2
+//! ([`NeonKernel::detect`]) so the selection layer treats every arch
+//! kernel uniformly.
+
+use super::kernel::Kernel;
+
+/// 8×4 NEON microkernel. Only obtainable via [`NeonKernel::detect`].
+#[derive(Clone, Copy, Debug)]
+pub struct NeonKernel {
+    _proof: (),
+}
+
+static NEON: NeonKernel = NeonKernel { _proof: () };
+
+impl NeonKernel {
+    /// Runtime feature gate (always true on aarch64 std targets, kept
+    /// for uniformity with the AVX2 kernel's contract).
+    pub fn detect() -> Option<&'static NeonKernel> {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            Some(&NEON)
+        } else {
+            None
+        }
+    }
+}
+
+impl Kernel for NeonKernel {
+    fn mr(&self) -> usize {
+        8
+    }
+
+    fn nr(&self) -> usize {
+        4
+    }
+
+    fn name(&self) -> &'static str {
+        "neon-8x4"
+    }
+
+    fn micro(&self, kc: usize, a: &[f64], b: &[f64], c: &mut [f64], ldc: usize) {
+        debug_assert!(a.len() >= kc * 8 && b.len() >= kc * 4);
+        debug_assert!(ldc >= 4 && c.len() >= 7 * ldc + 4);
+        // SAFETY: `detect()` proved NEON, and the slice bounds consumed
+        // by the raw loads are asserted above (and guaranteed by the
+        // `blocked` driver's contract).
+        unsafe { micro_8x4(kc, a, b, c, ldc) }
+    }
+}
+
+/// `C_tile += Ap·Bp` on 8×4 with vectors along the row (M) dimension.
+///
+/// # Safety
+/// Requires NEON at runtime and `a.len() ≥ 8·kc`, `b.len() ≥ 4·kc`.
+/// The C write-back uses checked slice indexing.
+#[target_feature(enable = "neon")]
+unsafe fn micro_8x4(kc: usize, a: &[f64], b: &[f64], c: &mut [f64], ldc: usize) {
+    use std::arch::aarch64::*;
+    let mut acc = [[vdupq_n_f64(0.0); 4]; 4];
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    for p in 0..kc {
+        let a0 = vld1q_f64(ap.add(p * 8));
+        let a1 = vld1q_f64(ap.add(p * 8 + 2));
+        let a2 = vld1q_f64(ap.add(p * 8 + 4));
+        let a3 = vld1q_f64(ap.add(p * 8 + 6));
+        for j in 0..4 {
+            let bj = vdupq_n_f64(*bp.add(p * 4 + j));
+            acc[0][j] = vfmaq_f64(acc[0][j], a0, bj);
+            acc[1][j] = vfmaq_f64(acc[1][j], a1, bj);
+            acc[2][j] = vfmaq_f64(acc[2][j], a2, bj);
+            acc[3][j] = vfmaq_f64(acc[3][j], a3, bj);
+        }
+    }
+    // acc[h][j] lane l is the (row 2h+l, col j) partial sum.
+    for (h, quarter) in acc.iter().enumerate() {
+        for (j, &v) in quarter.iter().enumerate() {
+            c[(2 * h) * ldc + j] += vgetq_lane_f64::<0>(v);
+            c[(2 * h + 1) * ldc + j] += vgetq_lane_f64::<1>(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_is_consistent_and_tile_matches_oracle() {
+        let Some(k) = NeonKernel::detect() else {
+            return;
+        };
+        assert_eq!((k.mr(), k.nr()), (8, 4));
+        for kc in [0usize, 1, 5, 19] {
+            let a: Vec<f64> = (0..kc * 8).map(|i| (i as f64 * 0.41).sin()).collect();
+            let b: Vec<f64> = (0..kc * 4).map(|i| (i as f64 * 0.17).cos()).collect();
+            let mut c = vec![0.5; 8 * 4];
+            k.micro(kc, &a, &b, &mut c, 4);
+            for i in 0..8 {
+                for j in 0..4 {
+                    let mut s = 0.5;
+                    for p in 0..kc {
+                        s += a[p * 8 + i] * b[p * 4 + j];
+                    }
+                    assert!(
+                        (c[i * 4 + j] - s).abs() <= 1e-12 * (1.0 + s.abs()),
+                        "kc={kc} ({i},{j}): {} vs {s}",
+                        c[i * 4 + j]
+                    );
+                }
+            }
+        }
+    }
+}

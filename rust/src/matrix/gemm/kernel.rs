@@ -8,8 +8,10 @@
 //! accumulator lives in registers, the compiler can keep the FP units
 //! saturated — this is where all the Gram flops are spent.
 //!
-//! Two portable implementations are provided and selected at runtime
-//! (`CA_PROX_GEMM_KERNEL=scalar|generic` overrides the default):
+//! Two portable implementations plus runtime-feature-detected
+//! arch-specific kernels are selected at runtime
+//! (`CA_PROX_GEMM_KERNEL=scalar|generic|avx2|neon|auto` overrides the
+//! default, which is `auto`):
 //!
 //! * [`ScalarKernel`] — 4×4 tile, fully unrolled scalar accumulators.
 //!   The conservative baseline; correct on any target.
@@ -18,9 +20,16 @@
 //!   trip counts, bounds-check-free array-ref indexing). On SIMD
 //!   targets this compiles to packed FMAs without any `unsafe` or
 //!   arch-specific intrinsics.
+//! * [`super::x86_64::Avx2Kernel`] (x86_64) — 8×6 AVX2+FMA intrinsics,
+//!   gated on `is_x86_feature_detected!("avx2") && ("fma")`.
+//! * [`super::aarch64::NeonKernel`] (aarch64) — 8×4 NEON intrinsics.
 //!
-//! Arch-specific kernels (AVX2 / NEON) plug into the same [`Kernel`]
-//! seam; see DESIGN.md for the extension contract.
+//! Pinning an arch kernel the host cannot run (`avx2` on a non-AVX2
+//! box, or any arch name on the wrong target) degrades gracefully: the
+//! selector logs a warning and falls back to the best available kernel
+//! — it never hands out a kernel whose `detect()` did not pass, so the
+//! `unsafe` intrinsic paths are unreachable without hardware proof.
+//! See DESIGN.md §Kernel layer for the extension contract as built.
 
 use std::sync::OnceLock;
 
@@ -150,24 +159,92 @@ impl Kernel for GenericSimdKernel {
 static SCALAR: ScalarKernel = ScalarKernel;
 static GENERIC: GenericSimdKernel = GenericSimdKernel;
 
+/// The best arch-specific kernel the host supports, if any. This is the
+/// `auto` target and the arch side of the `gram/generic-vs-arch` bench
+/// pair; `None` on targets without a supported arch kernel.
+pub fn best_arch_kernel() -> Option<&'static dyn Kernel> {
+    #[cfg(target_arch = "x86_64")]
+    if let Some(k) = super::x86_64::Avx2Kernel::detect() {
+        return Some(k);
+    }
+    #[cfg(target_arch = "aarch64")]
+    if let Some(k) = super::aarch64::NeonKernel::detect() {
+        return Some(k);
+    }
+    None
+}
+
+/// What `auto` resolves to: the best detected arch kernel, else the
+/// portable generic kernel.
+fn auto_kernel() -> &'static dyn Kernel {
+    best_arch_kernel().unwrap_or(&GENERIC)
+}
+
+/// Resolve an explicit `CA_PROX_GEMM_KERNEL` pin. `None` means the pin
+/// names a kernel this host cannot run (missing CPU feature or wrong
+/// architecture) or an unknown name — both fall back to `auto` with a
+/// warning rather than erroring, so a pinned config stays portable.
+fn kernel_by_pin(pin: &str) -> Option<&'static dyn Kernel> {
+    match pin {
+        "scalar" => Some(&SCALAR),
+        "generic" => Some(&GENERIC),
+        "auto" => Some(auto_kernel()),
+        "avx2" => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                super::x86_64::Avx2Kernel::detect().map(|k| k as &'static dyn Kernel)
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                None
+            }
+        }
+        "neon" => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                super::aarch64::NeonKernel::detect().map(|k| k as &'static dyn Kernel)
+            }
+            #[cfg(not(target_arch = "aarch64"))]
+            {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
 /// Runtime kernel selection (cached after the first call).
 ///
-/// Default is the generic SIMD-friendly kernel — it at worst matches the
-/// scalar kernel and vectorizes on every mainstream target. Set
-/// `CA_PROX_GEMM_KERNEL=scalar` (or `generic`) to pin a kernel for A/B
-/// comparisons; unknown values fall back to the default.
+/// Default (`auto`, also the fallback for unset/unknown values) is the
+/// best runtime-detected arch kernel, else the generic SIMD-friendly
+/// kernel. Set `CA_PROX_GEMM_KERNEL=scalar|generic|avx2|neon|auto` to
+/// pin a kernel for A/B comparisons; a pin the host cannot honor logs a
+/// warning and falls back to `auto` (never UB — arch kernels are only
+/// handed out when their feature detection passed).
 pub fn select_kernel() -> &'static dyn Kernel {
     static CHOICE: OnceLock<&'static dyn Kernel> = OnceLock::new();
-    *CHOICE.get_or_init(|| match std::env::var("CA_PROX_GEMM_KERNEL").as_deref() {
-        Ok("scalar") => &SCALAR,
-        _ => &GENERIC,
+    *CHOICE.get_or_init(|| match std::env::var("CA_PROX_GEMM_KERNEL") {
+        Ok(pin) => kernel_by_pin(&pin).unwrap_or_else(|| {
+            log::warn!("CA_PROX_GEMM_KERNEL={pin} unavailable on this host; using auto");
+            auto_kernel()
+        }),
+        Err(_) => auto_kernel(),
     })
 }
 
-/// All built-in kernels — used by the property tests and benches to
-/// exercise every implementation regardless of the runtime default.
-pub fn all_kernels() -> [&'static dyn Kernel; 2] {
-    [&SCALAR, &GENERIC]
+/// All kernels runnable on this host (portable kernels plus every arch
+/// kernel whose feature detection passed) — used by the property tests
+/// and benches to exercise every implementation regardless of the
+/// runtime default.
+pub fn all_kernels() -> &'static [&'static dyn Kernel] {
+    static ALL: OnceLock<Vec<&'static dyn Kernel>> = OnceLock::new();
+    ALL.get_or_init(|| {
+        let mut v: Vec<&'static dyn Kernel> = vec![&SCALAR, &GENERIC];
+        if let Some(k) = best_arch_kernel() {
+            v.push(k);
+        }
+        v
+    })
 }
 
 #[cfg(test)]
@@ -189,7 +266,7 @@ mod tests {
 
     #[test]
     fn microkernels_match_oracle_and_accumulate() {
-        for kern in all_kernels() {
+        for &kern in all_kernels() {
             let (mr, nr) = (kern.mr(), kern.nr());
             for kc in [0usize, 1, 3, 17] {
                 let a: Vec<f64> = (0..kc * mr).map(|i| (i as f64 * 0.7).sin()).collect();
@@ -198,8 +275,10 @@ mod tests {
                 kern.micro(kc, &a, &b, &mut c, nr);
                 let expect = oracle(kc, mr, nr, &a, &b);
                 for (got, want) in c.iter().zip(&expect) {
+                    // Tolerance oracle, not bit-equality: the FMA
+                    // kernels legitimately round differently.
                     assert!(
-                        (got - (want + 1.0)).abs() < 1e-12,
+                        (got - (want + 1.0)).abs() < 1e-10 * (1.0 + want.abs()),
                         "{}: {got} vs {}",
                         kern.name(),
                         want + 1.0
@@ -214,5 +293,41 @@ mod tests {
         let k = select_kernel();
         assert_eq!(k.name(), select_kernel().name());
         assert!(all_kernels().iter().any(|c| c.name() == k.name()));
+    }
+
+    #[test]
+    fn pin_resolution_and_graceful_fallback() {
+        assert_eq!(kernel_by_pin("scalar").unwrap().name(), "scalar-4x4");
+        assert_eq!(kernel_by_pin("generic").unwrap().name(), "generic-simd-8x4");
+        // Unknown names resolve to nothing; the selector then warns and
+        // falls back to auto instead of erroring.
+        assert!(kernel_by_pin("bogus").is_none());
+        let auto = kernel_by_pin("auto").unwrap();
+        assert!(all_kernels().iter().any(|c| c.name() == auto.name()));
+        // An arch pin either resolves to a feature-detected kernel (and
+        // then appears in all_kernels) or is None — there is no path
+        // that hands out an undetected intrinsic kernel.
+        for pin in ["avx2", "neon"] {
+            if let Some(k) = kernel_by_pin(pin) {
+                assert!(all_kernels().iter().any(|c| c.name() == k.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn microkernels_are_bit_deterministic_per_kernel() {
+        for &kern in all_kernels() {
+            let (mr, nr) = (kern.mr(), kern.nr());
+            let kc = 23usize;
+            let a: Vec<f64> = (0..kc * mr).map(|i| (i as f64 * 0.9).sin()).collect();
+            let b: Vec<f64> = (0..kc * nr).map(|i| (i as f64 * 0.4).cos()).collect();
+            let mut c1 = vec![0.0; mr * nr];
+            let mut c2 = vec![0.0; mr * nr];
+            kern.micro(kc, &a, &b, &mut c1, nr);
+            kern.micro(kc, &a, &b, &mut c2, nr);
+            for (x, y) in c1.iter().zip(&c2) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{} not deterministic", kern.name());
+            }
+        }
     }
 }

@@ -16,10 +16,16 @@
 //! α-β-γ cost traces are identical whichever execution regime or kernel
 //! runs — see `sampled_gram_dense` / `sampled_gram_csc`.
 
+#[cfg(target_arch = "aarch64")]
+pub mod aarch64;
 pub mod kernel;
 pub mod pack;
+#[cfg(target_arch = "x86_64")]
+pub mod x86_64;
 
-pub use kernel::{all_kernels, select_kernel, GenericSimdKernel, Kernel, ScalarKernel};
+pub use kernel::{
+    all_kernels, best_arch_kernel, select_kernel, GenericSimdKernel, Kernel, ScalarKernel,
+};
 
 /// Depth (k-dimension) cache block: one packed A micro-panel of
 /// `MR×KC` f64s stays resident in L1 while it is reused across the
@@ -278,7 +284,7 @@ mod tests {
             let mut expect = g.vec_gauss(m * n); // nonzero prior: += semantics
             let base = expect.clone();
             gemm_oracle(m, n, k, alpha, &a, &b, &mut expect);
-            for kern in all_kernels() {
+            for &kern in all_kernels() {
                 let mut got = base.clone();
                 gemm_with(kern, m, n, k, alpha, &a, k, &b, n, &mut got, n);
                 for (x, y) in got.iter().zip(&expect) {
@@ -309,7 +315,7 @@ mod tests {
             }
             let mut expect = vec![0.0; d * d];
             gemm_oracle(d, d, k, alpha, &a, &at, &mut expect);
-            for kern in all_kernels() {
+            for &kern in all_kernels() {
                 let mut got = vec![0.0; d * d];
                 syrk_with(kern, d, k, alpha, &a, &mut got);
                 for i in 0..d {

@@ -1,0 +1,133 @@
+//! AVX2/FMA microkernel for x86_64 (DESIGN.md §Kernel layer, arch-kernel
+//! extension contract).
+//!
+//! Classic Haswell-era 8×6 double-precision tile: the packed A
+//! micro-column (8 contiguous f64 per k-step) is loaded as two 4-lane
+//! `ymm` vectors, each of the 6 packed B values is broadcast, and the
+//! 2×6 = 12 vector accumulators stay resident in registers for the whole
+//! `kc` loop — 12 accumulators + 2 A loads + 1 broadcast fits the 16
+//! `ymm` registers with room to spare. FMA contracts each multiply-add,
+//! which legitimately changes rounding vs the scalar/generic kernels:
+//! cross-kernel agreement is pinned by tolerance oracles, while each
+//! kernel on its own stays bit-deterministic (fixed lane assignment and
+//! accumulation order).
+//!
+//! Construction proves support: the only way to obtain the kernel is
+//! [`Avx2Kernel::detect`], which gates on `is_x86_feature_detected!` for
+//! both `avx2` and `fma`, so the `unsafe` `#[target_feature]` entry
+//! point is never reached on hardware that lacks the instructions.
+
+use super::kernel::Kernel;
+
+/// 8×6 AVX2+FMA microkernel. Only obtainable via [`Avx2Kernel::detect`].
+#[derive(Clone, Copy, Debug)]
+pub struct Avx2Kernel {
+    _proof: (),
+}
+
+static AVX2: Avx2Kernel = Avx2Kernel { _proof: () };
+
+impl Avx2Kernel {
+    /// Runtime feature gate: returns the kernel only when the CPU
+    /// reports both AVX2 and FMA. This is the safety proof for the
+    /// `#[target_feature]` microkernel below.
+    pub fn detect() -> Option<&'static Avx2Kernel> {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            Some(&AVX2)
+        } else {
+            None
+        }
+    }
+}
+
+impl Kernel for Avx2Kernel {
+    fn mr(&self) -> usize {
+        8
+    }
+
+    fn nr(&self) -> usize {
+        6
+    }
+
+    fn name(&self) -> &'static str {
+        "avx2-8x6"
+    }
+
+    fn micro(&self, kc: usize, a: &[f64], b: &[f64], c: &mut [f64], ldc: usize) {
+        debug_assert!(a.len() >= kc * 8 && b.len() >= kc * 6);
+        debug_assert!(ldc >= 6 && c.len() >= 7 * ldc + 6);
+        // SAFETY: this value only exists if `detect()` proved AVX2+FMA,
+        // and the slice bounds consumed by the raw loads are asserted
+        // above (and guaranteed by the `blocked` driver's contract).
+        unsafe { micro_8x6(kc, a, b, c, ldc) }
+    }
+}
+
+/// `C_tile += Ap·Bp` on 8×6 with vectors along the row (M) dimension.
+///
+/// # Safety
+/// Requires AVX2+FMA at runtime and `a.len() ≥ 8·kc`, `b.len() ≥ 6·kc`.
+/// The C write-back uses checked slice indexing, so `c`/`ldc` errors
+/// panic rather than corrupt memory.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn micro_8x6(kc: usize, a: &[f64], b: &[f64], c: &mut [f64], ldc: usize) {
+    use std::arch::x86_64::*;
+    let mut acc = [[_mm256_setzero_pd(); 6]; 2];
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    for p in 0..kc {
+        let a0 = _mm256_loadu_pd(ap.add(p * 8));
+        let a1 = _mm256_loadu_pd(ap.add(p * 8 + 4));
+        for j in 0..6 {
+            let bj = _mm256_set1_pd(*bp.add(p * 6 + j));
+            acc[0][j] = _mm256_fmadd_pd(a0, bj, acc[0][j]);
+            acc[1][j] = _mm256_fmadd_pd(a1, bj, acc[1][j]);
+        }
+    }
+    // acc[h][j] lane l is the (row 4h+l, col j) partial sum; the tile is
+    // row-major in C, so the write-back is a strided scalar scatter —
+    // O(MR·NR) against the O(kc·MR·NR) compute above.
+    let mut lanes = [0.0f64; 4];
+    for (h, half) in acc.iter().enumerate() {
+        for (j, v) in half.iter().enumerate() {
+            _mm256_storeu_pd(lanes.as_mut_ptr(), *v);
+            for (l, &x) in lanes.iter().enumerate() {
+                c[(4 * h + l) * ldc + j] += x;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_is_consistent_and_tile_matches_oracle() {
+        let Some(k) = Avx2Kernel::detect() else {
+            // Non-AVX2 host: nothing to run, and that is the graceful
+            // degradation the selection layer relies on.
+            return;
+        };
+        assert_eq!((k.mr(), k.nr()), (8, 6));
+        for kc in [0usize, 1, 5, 19] {
+            let a: Vec<f64> = (0..kc * 8).map(|i| (i as f64 * 0.41).sin()).collect();
+            let b: Vec<f64> = (0..kc * 6).map(|i| (i as f64 * 0.17).cos()).collect();
+            let mut c = vec![0.5; 8 * 6];
+            k.micro(kc, &a, &b, &mut c, 6);
+            for i in 0..8 {
+                for j in 0..6 {
+                    let mut s = 0.5;
+                    for p in 0..kc {
+                        s += a[p * 8 + i] * b[p * 6 + j];
+                    }
+                    assert!(
+                        (c[i * 6 + j] - s).abs() <= 1e-12 * (1.0 + s.abs()),
+                        "kc={kc} ({i},{j}): {} vs {s}",
+                        c[i * 6 + j]
+                    );
+                }
+            }
+        }
+    }
+}

@@ -17,7 +17,9 @@
 //! is the natural layout for column sampling); [`ops`] implements the
 //! sampled Gram products with exact flop counting; [`partition`]
 //! implements the nnz-balanced column partitioning assumed in §III of
-//! the paper.
+//! the paper; [`vecmath`] is the runtime-dispatched vectorized
+//! elementwise layer (soft-threshold, prox/momentum steps, reductions)
+//! the solvers' per-iteration O(d) hot paths ride on.
 
 pub mod csc;
 pub mod csr;
@@ -25,3 +27,4 @@ pub mod dense;
 pub mod gemm;
 pub mod ops;
 pub mod partition;
+pub mod vecmath;

@@ -1,0 +1,839 @@
+//! Vectorized elementwise math — the per-iteration scalar hot paths of
+//! the solvers behind the same dispatch shape as the GEMM kernel layer
+//! (trait + runtime feature detection + env pin).
+//!
+//! Every iteration of every λ runs soft-threshold, momentum/AXPY vector
+//! steps and a couple of reductions (objective, relative error) over
+//! length-d vectors. Individually each is O(d) against the O(d²)
+//! gradient, but they are numerous, branchy in scalar form, and — before
+//! this layer — several allocated per call. [`VecMath`] collects them as
+//! non-allocating slice kernels with three implementations:
+//!
+//! * [`ScalarVecMath`] — the reference: straight loops with the exact
+//!   formulations the solvers used inline (4-way unrolled reductions,
+//!   separate multiply/add), so pinning `CA_PROX_VECMATH=scalar`
+//!   reproduces the historical numerics bit-for-bit.
+//! * `Avx2VecMath` (x86_64) — AVX2+FMA intrinsics, 4 lanes of f64.
+//! * `NeonVecMath` (aarch64) — NEON intrinsics, 2 lanes of f64.
+//!
+//! Selection: [`select_vecmath`] resolves once (cached) from
+//! `CA_PROX_VECMATH=scalar|avx2|neon|auto`; unknown or unsupported pins
+//! warn and fall back to `auto` (best detected). The free functions at
+//! the bottom are what solvers call — they dispatch through the cached
+//! selection.
+//!
+//! Determinism contract (same as the GEMM kernels): each implementation
+//! is bit-deterministic — fixed lane assignment, fixed accumulation
+//! order, no data-dependent reassociation — while *cross*-implementation
+//! agreement is tolerance-based because FMA contraction and vector-width
+//! reassociation legitimately change rounding. Soft-threshold is the
+//! exception: the branch-free `max(x−λ,0) − max(−x−λ,0)` form used by
+//! the SIMD paths agrees bit-for-bit with the scalar branches for every
+//! finite input and λ ≥ 0 (including ±λ, ±0.0), maps NaN to 0 exactly
+//! like the scalar branches, and passes ±∞ through.
+//!
+//! None of this touches flop accounting: `CostTrace` counts are analytic
+//! (charged from operand shapes by the callers), so they are identical
+//! across every kernel/vecmath selection by construction.
+
+use std::sync::OnceLock;
+
+/// Scalar soft threshold — the branch reference shared by the scalar
+/// implementation and the SIMD remainder tails.
+#[inline]
+fn st_scalar(x: f64, lt: f64) -> f64 {
+    if x > lt {
+        x - lt
+    } else if x < -lt {
+        x + lt
+    } else {
+        0.0
+    }
+}
+
+/// Vectorized elementwise kernels. Object-safe so callers dispatch on a
+/// runtime-selected `&'static dyn VecMath`, mirroring [`crate::matrix::gemm::Kernel`].
+pub trait VecMath: Sync {
+    /// Implementation name for logs, bench labels and tests.
+    fn name(&self) -> &'static str;
+
+    /// `out[i] = S_lt(x[i])` — soft threshold at level `lt ≥ 0`.
+    fn soft_threshold(&self, x: &[f64], lt: f64, out: &mut [f64]);
+
+    /// In-place proximal-gradient step: `z[i] = S_lt(z[i] − t·g[i])` —
+    /// the fused inner update of ISTA/FISTA/SFISTA/SPNM.
+    fn prox_step(&self, z: &mut [f64], g: &[f64], t: f64, lt: f64);
+
+    /// Momentum extrapolation: `out[i] = w[i] + mu·(w[i] − w_prev[i])`.
+    fn momentum(&self, w: &[f64], w_prev: &[f64], mu: f64, out: &mut [f64]);
+
+    /// `y[i] += alpha·x[i]`.
+    fn axpy(&self, alpha: f64, x: &[f64], y: &mut [f64]);
+
+    /// Dot product with a fixed (deterministic) accumulation order.
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64;
+
+    /// `Σ |a[i]|` (the λ‖w‖₁ term of the objective).
+    fn sum_abs(&self, a: &[f64]) -> f64;
+
+    /// `Σ (a[i] − b[i])²` — the relative-error numerator without the
+    /// intermediate difference vector.
+    fn sum_sq_diff(&self, a: &[f64], b: &[f64]) -> f64;
+}
+
+/// Portable reference implementation (exact historical formulations).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScalarVecMath;
+
+impl VecMath for ScalarVecMath {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn soft_threshold(&self, x: &[f64], lt: f64, out: &mut [f64]) {
+        debug_assert_eq!(x.len(), out.len());
+        for (o, &v) in out.iter_mut().zip(x) {
+            *o = st_scalar(v, lt);
+        }
+    }
+
+    fn prox_step(&self, z: &mut [f64], g: &[f64], t: f64, lt: f64) {
+        debug_assert_eq!(z.len(), g.len());
+        for (zi, &gi) in z.iter_mut().zip(g) {
+            *zi = st_scalar(*zi - t * gi, lt);
+        }
+    }
+
+    fn momentum(&self, w: &[f64], w_prev: &[f64], mu: f64, out: &mut [f64]) {
+        debug_assert!(w.len() == w_prev.len() && w.len() == out.len());
+        for i in 0..w.len() {
+            out[i] = w[i] + mu * (w[i] - w_prev[i]);
+        }
+    }
+
+    fn axpy(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        // 4-way unrolled accumulation: keeps the FP pipelines busy and
+        // gives deterministic (fixed-order) reassociation.
+        let mut acc = [0.0f64; 4];
+        let chunks = a.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            acc[0] += a[j] * b[j];
+            acc[1] += a[j + 1] * b[j + 1];
+            acc[2] += a[j + 2] * b[j + 2];
+            acc[3] += a[j + 3] * b[j + 3];
+        }
+        let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+        for j in chunks * 4..a.len() {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    fn sum_abs(&self, a: &[f64]) -> f64 {
+        a.iter().map(|x| x.abs()).sum()
+    }
+
+    fn sum_sq_diff(&self, a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = [0.0f64; 4];
+        let chunks = a.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            let d0 = a[j] - b[j];
+            let d1 = a[j + 1] - b[j + 1];
+            let d2 = a[j + 2] - b[j + 2];
+            let d3 = a[j + 3] - b[j + 3];
+            acc[0] += d0 * d0;
+            acc[1] += d1 * d1;
+            acc[2] += d2 * d2;
+            acc[3] += d3 * d3;
+        }
+        let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+        for j in chunks * 4..a.len() {
+            let d = a[j] - b[j];
+            s += d * d;
+        }
+        s
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2+FMA elementwise kernels. Every public entry is reached only
+    //! through [`Avx2VecMath::detect`], which proves the features.
+    use super::{st_scalar, VecMath};
+
+    /// AVX2+FMA implementation. Only obtainable via [`Avx2VecMath::detect`].
+    #[derive(Clone, Copy, Debug)]
+    pub struct Avx2VecMath {
+        _proof: (),
+    }
+
+    static AVX2: Avx2VecMath = Avx2VecMath { _proof: () };
+
+    impl Avx2VecMath {
+        /// Runtime feature gate — the safety proof for the
+        /// `#[target_feature]` bodies below.
+        pub fn detect() -> Option<&'static Avx2VecMath> {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                Some(&AVX2)
+            } else {
+                None
+            }
+        }
+    }
+
+    impl VecMath for Avx2VecMath {
+        fn name(&self) -> &'static str {
+            "avx2"
+        }
+
+        fn soft_threshold(&self, x: &[f64], lt: f64, out: &mut [f64]) {
+            debug_assert_eq!(x.len(), out.len());
+            // SAFETY: detect() proved AVX2+FMA; lengths checked above.
+            unsafe { st_avx2(x, lt, out) }
+        }
+
+        fn prox_step(&self, z: &mut [f64], g: &[f64], t: f64, lt: f64) {
+            debug_assert_eq!(z.len(), g.len());
+            // SAFETY: detect() proved AVX2+FMA; lengths checked above.
+            unsafe { prox_step_avx2(z, g, t, lt) }
+        }
+
+        fn momentum(&self, w: &[f64], w_prev: &[f64], mu: f64, out: &mut [f64]) {
+            debug_assert!(w.len() == w_prev.len() && w.len() == out.len());
+            // SAFETY: detect() proved AVX2+FMA; lengths checked above.
+            unsafe { momentum_avx2(w, w_prev, mu, out) }
+        }
+
+        fn axpy(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+            debug_assert_eq!(x.len(), y.len());
+            // SAFETY: detect() proved AVX2+FMA; lengths checked above.
+            unsafe { axpy_avx2(alpha, x, y) }
+        }
+
+        fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+            debug_assert_eq!(a.len(), b.len());
+            // SAFETY: detect() proved AVX2+FMA; lengths checked above.
+            unsafe { dot_avx2(a, b) }
+        }
+
+        fn sum_abs(&self, a: &[f64]) -> f64 {
+            // SAFETY: detect() proved AVX2+FMA.
+            unsafe { sum_abs_avx2(a) }
+        }
+
+        fn sum_sq_diff(&self, a: &[f64], b: &[f64]) -> f64 {
+            debug_assert_eq!(a.len(), b.len());
+            // SAFETY: detect() proved AVX2+FMA; lengths checked above.
+            unsafe { sum_sq_diff_avx2(a, b) }
+        }
+    }
+
+    /// Branch-free soft threshold: `max(x−λ,0) − max(−x−λ,0)`. For
+    /// λ ≥ 0 the two terms are mutually exclusive, and `MAXPD` returns
+    /// its second operand on NaN, so the result matches the scalar
+    /// branches bit-for-bit on finite inputs and maps NaN → 0.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA at runtime and `x.len() == out.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn st_avx2(x: &[f64], lt: f64, out: &mut [f64]) {
+        use std::arch::x86_64::*;
+        let n = x.len();
+        let vl = _mm256_set1_pd(lt);
+        let zero = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v = _mm256_loadu_pd(x.as_ptr().add(i));
+            let pos = _mm256_max_pd(_mm256_sub_pd(v, vl), zero);
+            let neg = _mm256_max_pd(_mm256_sub_pd(_mm256_sub_pd(zero, v), vl), zero);
+            _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_sub_pd(pos, neg));
+            i += 4;
+        }
+        while i < n {
+            out[i] = st_scalar(x[i], lt);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA at runtime and `z.len() == g.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn prox_step_avx2(z: &mut [f64], g: &[f64], t: f64, lt: f64) {
+        use std::arch::x86_64::*;
+        let n = z.len();
+        let vt = _mm256_set1_pd(t);
+        let vl = _mm256_set1_pd(lt);
+        let zero = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let zv = _mm256_loadu_pd(z.as_ptr().add(i));
+            let gv = _mm256_loadu_pd(g.as_ptr().add(i));
+            // v = z − t·g, contracted to one FMA.
+            let v = _mm256_fnmadd_pd(vt, gv, zv);
+            let pos = _mm256_max_pd(_mm256_sub_pd(v, vl), zero);
+            let neg = _mm256_max_pd(_mm256_sub_pd(_mm256_sub_pd(zero, v), vl), zero);
+            _mm256_storeu_pd(z.as_mut_ptr().add(i), _mm256_sub_pd(pos, neg));
+            i += 4;
+        }
+        while i < n {
+            z[i] = st_scalar(z[i] - t * g[i], lt);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA at runtime and equal slice lengths.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn momentum_avx2(w: &[f64], w_prev: &[f64], mu: f64, out: &mut [f64]) {
+        use std::arch::x86_64::*;
+        let n = w.len();
+        let vmu = _mm256_set1_pd(mu);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let wv = _mm256_loadu_pd(w.as_ptr().add(i));
+            let pv = _mm256_loadu_pd(w_prev.as_ptr().add(i));
+            let r = _mm256_fmadd_pd(vmu, _mm256_sub_pd(wv, pv), wv);
+            _mm256_storeu_pd(out.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        while i < n {
+            out[i] = w[i] + mu * (w[i] - w_prev[i]);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA at runtime and `x.len() == y.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) {
+        use std::arch::x86_64::*;
+        let n = x.len();
+        let va = _mm256_set1_pd(alpha);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let xv = _mm256_loadu_pd(x.as_ptr().add(i));
+            let yv = _mm256_loadu_pd(y.as_ptr().add(i));
+            _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_fmadd_pd(va, xv, yv));
+            i += 4;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    /// Horizontal sum in fixed lane order (0+1+2+3).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: std::arch::x86_64::__m256d) -> f64 {
+        use std::arch::x86_64::*;
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), v);
+        (lanes[0] + lanes[1]) + (lanes[2] + lanes[3])
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA at runtime and `a.len() == b.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+        use std::arch::x86_64::*;
+        let n = a.len();
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let a0 = _mm256_loadu_pd(a.as_ptr().add(i));
+            let b0 = _mm256_loadu_pd(b.as_ptr().add(i));
+            acc0 = _mm256_fmadd_pd(a0, b0, acc0);
+            let a1 = _mm256_loadu_pd(a.as_ptr().add(i + 4));
+            let b1 = _mm256_loadu_pd(b.as_ptr().add(i + 4));
+            acc1 = _mm256_fmadd_pd(a1, b1, acc1);
+            i += 8;
+        }
+        if i + 4 <= n {
+            let a0 = _mm256_loadu_pd(a.as_ptr().add(i));
+            let b0 = _mm256_loadu_pd(b.as_ptr().add(i));
+            acc0 = _mm256_fmadd_pd(a0, b0, acc0);
+            i += 4;
+        }
+        let mut s = hsum(_mm256_add_pd(acc0, acc1));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA at runtime.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn sum_abs_avx2(a: &[f64]) -> f64 {
+        use std::arch::x86_64::*;
+        let n = a.len();
+        let sign = _mm256_set1_pd(-0.0);
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v = _mm256_loadu_pd(a.as_ptr().add(i));
+            acc = _mm256_add_pd(acc, _mm256_andnot_pd(sign, v));
+            i += 4;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += a[i].abs();
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA at runtime and `a.len() == b.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn sum_sq_diff_avx2(a: &[f64], b: &[f64]) -> f64 {
+        use std::arch::x86_64::*;
+        let n = a.len();
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let av = _mm256_loadu_pd(a.as_ptr().add(i));
+            let bv = _mm256_loadu_pd(b.as_ptr().add(i));
+            let d = _mm256_sub_pd(av, bv);
+            acc = _mm256_fmadd_pd(d, d, acc);
+            i += 4;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            let d = a[i] - b[i];
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON elementwise kernels, 2-lane f64. Reached only through
+    //! [`NeonVecMath::detect`]. Soft-threshold uses `vmaxnmq_f64`
+    //! (FMAXNM) so NaN handling matches the scalar branches (NaN → 0)
+    //! instead of FMAX's NaN propagation.
+    use super::{st_scalar, VecMath};
+
+    /// NEON implementation. Only obtainable via [`NeonVecMath::detect`].
+    #[derive(Clone, Copy, Debug)]
+    pub struct NeonVecMath {
+        _proof: (),
+    }
+
+    static NEON: NeonVecMath = NeonVecMath { _proof: () };
+
+    impl NeonVecMath {
+        /// Runtime feature gate (always true on aarch64 std targets).
+        pub fn detect() -> Option<&'static NeonVecMath> {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                Some(&NEON)
+            } else {
+                None
+            }
+        }
+    }
+
+    impl VecMath for NeonVecMath {
+        fn name(&self) -> &'static str {
+            "neon"
+        }
+
+        fn soft_threshold(&self, x: &[f64], lt: f64, out: &mut [f64]) {
+            debug_assert_eq!(x.len(), out.len());
+            // SAFETY: detect() proved NEON; lengths checked above.
+            unsafe { st_neon(x, lt, out) }
+        }
+
+        fn prox_step(&self, z: &mut [f64], g: &[f64], t: f64, lt: f64) {
+            debug_assert_eq!(z.len(), g.len());
+            // SAFETY: detect() proved NEON; lengths checked above.
+            unsafe { prox_step_neon(z, g, t, lt) }
+        }
+
+        fn momentum(&self, w: &[f64], w_prev: &[f64], mu: f64, out: &mut [f64]) {
+            debug_assert!(w.len() == w_prev.len() && w.len() == out.len());
+            // SAFETY: detect() proved NEON; lengths checked above.
+            unsafe { momentum_neon(w, w_prev, mu, out) }
+        }
+
+        fn axpy(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+            debug_assert_eq!(x.len(), y.len());
+            // SAFETY: detect() proved NEON; lengths checked above.
+            unsafe { axpy_neon(alpha, x, y) }
+        }
+
+        fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+            debug_assert_eq!(a.len(), b.len());
+            // SAFETY: detect() proved NEON; lengths checked above.
+            unsafe { dot_neon(a, b) }
+        }
+
+        fn sum_abs(&self, a: &[f64]) -> f64 {
+            // SAFETY: detect() proved NEON.
+            unsafe { sum_abs_neon(a) }
+        }
+
+        fn sum_sq_diff(&self, a: &[f64], b: &[f64]) -> f64 {
+            debug_assert_eq!(a.len(), b.len());
+            // SAFETY: detect() proved NEON; lengths checked above.
+            unsafe { sum_sq_diff_neon(a, b) }
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON at runtime and `x.len() == out.len()`.
+    #[target_feature(enable = "neon")]
+    unsafe fn st_neon(x: &[f64], lt: f64, out: &mut [f64]) {
+        use std::arch::aarch64::*;
+        let n = x.len();
+        let vl = vdupq_n_f64(lt);
+        let zero = vdupq_n_f64(0.0);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let v = vld1q_f64(x.as_ptr().add(i));
+            let pos = vmaxnmq_f64(vsubq_f64(v, vl), zero);
+            let neg = vmaxnmq_f64(vsubq_f64(vsubq_f64(zero, v), vl), zero);
+            vst1q_f64(out.as_mut_ptr().add(i), vsubq_f64(pos, neg));
+            i += 2;
+        }
+        while i < n {
+            out[i] = st_scalar(x[i], lt);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON at runtime and `z.len() == g.len()`.
+    #[target_feature(enable = "neon")]
+    unsafe fn prox_step_neon(z: &mut [f64], g: &[f64], t: f64, lt: f64) {
+        use std::arch::aarch64::*;
+        let n = z.len();
+        let vt = vdupq_n_f64(t);
+        let vl = vdupq_n_f64(lt);
+        let zero = vdupq_n_f64(0.0);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let zv = vld1q_f64(z.as_ptr().add(i));
+            let gv = vld1q_f64(g.as_ptr().add(i));
+            // v = z − t·g (fused multiply-subtract).
+            let v = vfmsq_f64(zv, vt, gv);
+            let pos = vmaxnmq_f64(vsubq_f64(v, vl), zero);
+            let neg = vmaxnmq_f64(vsubq_f64(vsubq_f64(zero, v), vl), zero);
+            vst1q_f64(z.as_mut_ptr().add(i), vsubq_f64(pos, neg));
+            i += 2;
+        }
+        while i < n {
+            z[i] = st_scalar(z[i] - t * g[i], lt);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON at runtime and equal slice lengths.
+    #[target_feature(enable = "neon")]
+    unsafe fn momentum_neon(w: &[f64], w_prev: &[f64], mu: f64, out: &mut [f64]) {
+        use std::arch::aarch64::*;
+        let n = w.len();
+        let vmu = vdupq_n_f64(mu);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let wv = vld1q_f64(w.as_ptr().add(i));
+            let pv = vld1q_f64(w_prev.as_ptr().add(i));
+            let r = vfmaq_f64(wv, vmu, vsubq_f64(wv, pv));
+            vst1q_f64(out.as_mut_ptr().add(i), r);
+            i += 2;
+        }
+        while i < n {
+            out[i] = w[i] + mu * (w[i] - w_prev[i]);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON at runtime and `x.len() == y.len()`.
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy_neon(alpha: f64, x: &[f64], y: &mut [f64]) {
+        use std::arch::aarch64::*;
+        let n = x.len();
+        let va = vdupq_n_f64(alpha);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let xv = vld1q_f64(x.as_ptr().add(i));
+            let yv = vld1q_f64(y.as_ptr().add(i));
+            vst1q_f64(y.as_mut_ptr().add(i), vfmaq_f64(yv, va, xv));
+            i += 2;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON at runtime and `a.len() == b.len()`.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_neon(a: &[f64], b: &[f64]) -> f64 {
+        use std::arch::aarch64::*;
+        let n = a.len();
+        let mut acc0 = vdupq_n_f64(0.0);
+        let mut acc1 = vdupq_n_f64(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            acc0 = vfmaq_f64(acc0, vld1q_f64(a.as_ptr().add(i)), vld1q_f64(b.as_ptr().add(i)));
+            acc1 = vfmaq_f64(
+                acc1,
+                vld1q_f64(a.as_ptr().add(i + 2)),
+                vld1q_f64(b.as_ptr().add(i + 2)),
+            );
+            i += 4;
+        }
+        if i + 2 <= n {
+            acc0 = vfmaq_f64(acc0, vld1q_f64(a.as_ptr().add(i)), vld1q_f64(b.as_ptr().add(i)));
+            i += 2;
+        }
+        let acc = vaddq_f64(acc0, acc1);
+        let mut s = vgetq_lane_f64::<0>(acc) + vgetq_lane_f64::<1>(acc);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires NEON at runtime.
+    #[target_feature(enable = "neon")]
+    unsafe fn sum_abs_neon(a: &[f64]) -> f64 {
+        use std::arch::aarch64::*;
+        let n = a.len();
+        let mut acc = vdupq_n_f64(0.0);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            acc = vaddq_f64(acc, vabsq_f64(vld1q_f64(a.as_ptr().add(i))));
+            i += 2;
+        }
+        let mut s = vgetq_lane_f64::<0>(acc) + vgetq_lane_f64::<1>(acc);
+        while i < n {
+            s += a[i].abs();
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires NEON at runtime and `a.len() == b.len()`.
+    #[target_feature(enable = "neon")]
+    unsafe fn sum_sq_diff_neon(a: &[f64], b: &[f64]) -> f64 {
+        use std::arch::aarch64::*;
+        let n = a.len();
+        let mut acc = vdupq_n_f64(0.0);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let d = vsubq_f64(vld1q_f64(a.as_ptr().add(i)), vld1q_f64(b.as_ptr().add(i)));
+            acc = vfmaq_f64(acc, d, d);
+            i += 2;
+        }
+        let mut s = vgetq_lane_f64::<0>(acc) + vgetq_lane_f64::<1>(acc);
+        while i < n {
+            let d = a[i] - b[i];
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+}
+
+static SCALAR_VM: ScalarVecMath = ScalarVecMath;
+
+/// The best arch-specific implementation the host supports, if any —
+/// the `auto` target and the SIMD side of the
+/// `elementwise/scalar-vs-simd` bench pair.
+pub fn best_arch_vecmath() -> Option<&'static dyn VecMath> {
+    #[cfg(target_arch = "x86_64")]
+    if let Some(v) = avx2::Avx2VecMath::detect() {
+        return Some(v);
+    }
+    #[cfg(target_arch = "aarch64")]
+    if let Some(v) = neon::NeonVecMath::detect() {
+        return Some(v);
+    }
+    None
+}
+
+fn auto_vecmath() -> &'static dyn VecMath {
+    best_arch_vecmath().unwrap_or(&SCALAR_VM)
+}
+
+/// Resolve an explicit `CA_PROX_VECMATH` pin; `None` for unsupported or
+/// unknown names (the selector falls back to `auto` with a warning).
+fn vecmath_by_pin(pin: &str) -> Option<&'static dyn VecMath> {
+    match pin {
+        "scalar" => Some(&SCALAR_VM),
+        "auto" => Some(auto_vecmath()),
+        "avx2" => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                avx2::Avx2VecMath::detect().map(|v| v as &'static dyn VecMath)
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                None
+            }
+        }
+        "neon" => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                neon::NeonVecMath::detect().map(|v| v as &'static dyn VecMath)
+            }
+            #[cfg(not(target_arch = "aarch64"))]
+            {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Runtime implementation selection (cached after the first call),
+/// mirroring [`crate::matrix::gemm::select_kernel`]: default is `auto`
+/// (best detected); `CA_PROX_VECMATH=scalar|avx2|neon|auto` pins an
+/// implementation, and a pin the host cannot honor logs a warning and
+/// falls back to `auto`.
+pub fn select_vecmath() -> &'static dyn VecMath {
+    static CHOICE: OnceLock<&'static dyn VecMath> = OnceLock::new();
+    *CHOICE.get_or_init(|| match std::env::var("CA_PROX_VECMATH") {
+        Ok(pin) => vecmath_by_pin(&pin).unwrap_or_else(|| {
+            log::warn!("CA_PROX_VECMATH={pin} unavailable on this host; using auto");
+            auto_vecmath()
+        }),
+        Err(_) => auto_vecmath(),
+    })
+}
+
+/// All implementations runnable on this host — for tests and benches.
+pub fn all_vecmaths() -> &'static [&'static dyn VecMath] {
+    static ALL: OnceLock<Vec<&'static dyn VecMath>> = OnceLock::new();
+    ALL.get_or_init(|| {
+        let mut v: Vec<&'static dyn VecMath> = vec![&SCALAR_VM];
+        if let Some(a) = best_arch_vecmath() {
+            v.push(a);
+        }
+        v
+    })
+}
+
+// ---- dispatching free functions (what the solvers call) ----
+
+/// `out[i] = S_lt(x[i])` on the selected implementation.
+pub fn soft_threshold(x: &[f64], lt: f64, out: &mut [f64]) {
+    assert_eq!(x.len(), out.len(), "vecmath::soft_threshold: length mismatch");
+    select_vecmath().soft_threshold(x, lt, out);
+}
+
+/// In-place `z[i] = S_lt(z[i] − t·g[i])` on the selected implementation.
+pub fn prox_step(z: &mut [f64], g: &[f64], t: f64, lt: f64) {
+    assert_eq!(z.len(), g.len(), "vecmath::prox_step: length mismatch");
+    select_vecmath().prox_step(z, g, t, lt);
+}
+
+/// `out[i] = w[i] + mu·(w[i] − w_prev[i])` on the selected implementation.
+pub fn momentum(w: &[f64], w_prev: &[f64], mu: f64, out: &mut [f64]) {
+    assert!(
+        w.len() == w_prev.len() && w.len() == out.len(),
+        "vecmath::momentum: length mismatch"
+    );
+    select_vecmath().momentum(w, w_prev, mu, out);
+}
+
+/// `y[i] += alpha·x[i]` on the selected implementation.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len(), "vecmath::axpy: length mismatch");
+    select_vecmath().axpy(alpha, x, y);
+}
+
+/// Dot product on the selected implementation.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "vecmath::dot: length mismatch");
+    select_vecmath().dot(a, b)
+}
+
+/// `Σ |a[i]|` on the selected implementation.
+pub fn sum_abs(a: &[f64]) -> f64 {
+    select_vecmath().sum_abs(a)
+}
+
+/// `Σ (a[i] − b[i])²` on the selected implementation.
+pub fn sum_sq_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "vecmath::sum_sq_diff: length mismatch");
+    select_vecmath().sum_sq_diff(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_is_stable_and_listed() {
+        let v = select_vecmath();
+        assert_eq!(v.name(), select_vecmath().name());
+        assert!(all_vecmaths().iter().any(|c| c.name() == v.name()));
+    }
+
+    #[test]
+    fn pin_resolution_and_graceful_fallback() {
+        assert_eq!(vecmath_by_pin("scalar").unwrap().name(), "scalar");
+        assert!(vecmath_by_pin("bogus").is_none());
+        let auto = vecmath_by_pin("auto").unwrap();
+        assert!(all_vecmaths().iter().any(|c| c.name() == auto.name()));
+        for pin in ["avx2", "neon"] {
+            if let Some(v) = vecmath_by_pin(pin) {
+                assert!(all_vecmaths().iter().any(|c| c.name() == v.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_soft_threshold_cases() {
+        let vm = &SCALAR_VM;
+        let x = [2.0, -2.0, 0.3, -0.3, 0.5, -0.5, 0.0, -0.0];
+        let mut out = [f64::NAN; 8];
+        vm.soft_threshold(&x, 0.5, &mut out);
+        assert_eq!(out, [1.5, -1.5, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn every_impl_is_deterministic() {
+        for vm in all_vecmaths() {
+            let n = 37usize; // odd: exercises every remainder tail
+            let a: Vec<f64> = (0..n).map(|i| (i as f64 * 0.71).sin()).collect();
+            let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).cos()).collect();
+            for _ in 0..2 {
+                let d1 = vm.dot(&a, &b);
+                let d2 = vm.dot(&a, &b);
+                assert_eq!(d1.to_bits(), d2.to_bits(), "{} dot", vm.name());
+            }
+            let mut o1 = vec![0.0; n];
+            let mut o2 = vec![0.0; n];
+            vm.soft_threshold(&a, 0.3, &mut o1);
+            vm.soft_threshold(&a, 0.3, &mut o2);
+            for (x, y) in o1.iter().zip(&o2) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{} soft_threshold", vm.name());
+            }
+        }
+    }
+}

@@ -9,7 +9,8 @@
 
 use crate::error::Result;
 use crate::matrix::csc::CscMatrix;
-use crate::matrix::dense::{norm1, norm2, sub};
+use crate::matrix::dense::{norm1, norm2};
+use crate::matrix::vecmath;
 
 /// LASSO problem objective over a CSC data matrix.
 #[derive(Clone, Debug)]
@@ -24,37 +25,83 @@ impl LassoObjective {
         LassoObjective { lambda }
     }
 
-    /// Smooth part `f(w) = (1/2n)‖Xᵀw − y‖²`.
+    /// Smooth part `f(w) = (1/2n)‖Xᵀw − y‖²` (allocates; per-iteration
+    /// callers use [`Self::smooth_with`] with a reused residual buffer).
     pub fn smooth(&self, x: &CscMatrix, y: &[f64], w: &[f64]) -> Result<f64> {
-        let n = x.cols().max(1) as f64;
-        let resid = sub(&x.matvec_t(w)?, y);
-        Ok(0.5 / n * resid.iter().map(|r| r * r).sum::<f64>())
+        let mut resid = vec![0.0; x.cols()];
+        self.smooth_with(x, y, w, &mut resid)
     }
 
-    /// Full objective `F(w) = f(w) + λ‖w‖₁`.
+    /// Non-allocating smooth part: `resid` is a length-n scratch buffer
+    /// that is overwritten with `Xᵀw` along the way.
+    pub fn smooth_with(
+        &self,
+        x: &CscMatrix,
+        y: &[f64],
+        w: &[f64],
+        resid: &mut [f64],
+    ) -> Result<f64> {
+        let n = x.cols().max(1) as f64;
+        x.matvec_t_into(w, resid)?;
+        Ok(0.5 / n * vecmath::sum_sq_diff(resid, y))
+    }
+
+    /// Full objective `F(w) = f(w) + λ‖w‖₁` (allocates; per-iteration
+    /// callers use [`Self::value_with`]).
     pub fn value(&self, x: &CscMatrix, y: &[f64], w: &[f64]) -> Result<f64> {
         Ok(self.smooth(x, y, w)? + self.lambda * norm1(w))
     }
 
-    /// Exact full-batch gradient `∇f(w) = (1/n)(XXᵀw − Xy)`.
+    /// Non-allocating full objective with a caller-provided length-n
+    /// scratch buffer.
+    pub fn value_with(
+        &self,
+        x: &CscMatrix,
+        y: &[f64],
+        w: &[f64],
+        resid: &mut [f64],
+    ) -> Result<f64> {
+        Ok(self.smooth_with(x, y, w, resid)? + self.lambda * vecmath::sum_abs(w))
+    }
+
+    /// Exact full-batch gradient `∇f(w) = (1/n)(XXᵀw − Xy)` (allocates;
+    /// per-iteration callers use [`Self::gradient_into`]).
     pub fn gradient(&self, x: &CscMatrix, y: &[f64], w: &[f64]) -> Result<Vec<f64>> {
+        let mut resid = vec![0.0; x.cols()];
+        let mut g = vec![0.0; x.rows()];
+        self.gradient_into(x, y, w, &mut resid, &mut g)?;
+        Ok(g)
+    }
+
+    /// Non-allocating exact gradient: `resid` (length n) and `g`
+    /// (length d) are caller-provided buffers, both overwritten. This is
+    /// the form the solvers call every iteration.
+    pub fn gradient_into(
+        &self,
+        x: &CscMatrix,
+        y: &[f64],
+        w: &[f64],
+        resid: &mut [f64],
+        g: &mut [f64],
+    ) -> Result<()> {
         let n = x.cols().max(1) as f64;
-        let xtw = x.matvec_t(w)?;
-        let resid = sub(&xtw, y);
-        let mut g = x.matvec(&resid)?;
+        x.matvec_t_into(w, resid)?;
+        vecmath::axpy(-1.0, y, resid);
+        x.matvec_into(resid, g)?;
         for v in g.iter_mut() {
             *v /= n;
         }
-        Ok(g)
+        Ok(())
     }
 }
 
 /// Relative solution error `‖w − w_op‖ / ‖w_op‖` (paper §V-A).
-/// Falls back to the absolute error when `‖w_op‖ = 0`.
+/// Falls back to the absolute error when `‖w_op‖ = 0`. Non-allocating:
+/// the difference norm is a fused [`vecmath::sum_sq_diff`] reduction.
 pub fn relative_solution_error(w: &[f64], w_op: &[f64]) -> f64 {
     debug_assert_eq!(w.len(), w_op.len());
     let denom = norm2(w_op);
-    let num = norm2(&sub(w, w_op));
+    let num = vecmath::sum_sq_diff(w, w_op).sqrt();
     if denom > 0.0 {
         num / denom
     } else {

@@ -21,18 +21,18 @@ pub fn soft_threshold_scalar(x: f64, lambda: f64) -> f64 {
     }
 }
 
-/// Vector soft threshold (allocates).
+/// Vector soft threshold (allocates; hot loops use
+/// [`soft_threshold_into`] or the fused [`crate::matrix::vecmath::prox_step`]).
 pub fn soft_threshold(x: &[f64], lambda: f64) -> Vec<f64> {
-    x.iter().map(|&v| soft_threshold_scalar(v, lambda)).collect()
+    let mut out = vec![0.0; x.len()];
+    soft_threshold_into(x, lambda, &mut out);
+    out
 }
 
-/// In-place: `out[i] = S_λ(x[i])`. `x` and `out` may alias via split
-/// borrows at the call site; lengths must match.
+/// Non-allocating `out[i] = S_λ(x[i])`, dispatched to the selected
+/// [`crate::matrix::vecmath`] implementation; lengths must match.
 pub fn soft_threshold_into(x: &[f64], lambda: f64, out: &mut [f64]) {
-    debug_assert_eq!(x.len(), out.len());
-    for (o, &v) in out.iter_mut().zip(x) {
-        *o = soft_threshold_scalar(v, lambda);
-    }
+    crate::matrix::vecmath::soft_threshold(x, lambda, out);
 }
 
 #[cfg(test)]

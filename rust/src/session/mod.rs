@@ -241,6 +241,9 @@ impl<'a> Session<'a> {
         let mut history: Vec<HistoryPoint> = Vec::new();
         let mut converged = false;
         let mut t0 = 0usize;
+        // Length-n residual scratch shared by every objective evaluation
+        // in the loop (record cadence + final) — no per-record allocation.
+        let mut resid = vec![0.0; self.ds.x.cols()];
 
         while t0 < cap {
             let k_eff = spec.k.min(cap - t0);
@@ -291,7 +294,7 @@ impl<'a> Session<'a> {
                 };
                 let mut stop_requested = false;
                 if record_now {
-                    let obj = objective.value(&self.ds.x, &self.ds.y, &state.w)?;
+                    let obj = objective.value_with(&self.ds.x, &self.ds.y, &state.w, &mut resid)?;
                     let point = HistoryPoint {
                         iter: gi,
                         objective: obj,
@@ -329,7 +332,7 @@ impl<'a> Session<'a> {
             }
         }
 
-        let final_objective = objective.value(&self.ds.x, &self.ds.y, &state.w)?;
+        let final_objective = objective.value_with(&self.ds.x, &self.ds.y, &state.w, &mut resid)?;
         let final_rel_error = w_ref
             .map(|w_op| relative_solution_error(&state.w, w_op))
             .unwrap_or(f64::NAN);

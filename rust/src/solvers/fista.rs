@@ -5,8 +5,8 @@
 
 use crate::datasets::Dataset;
 use crate::error::Result;
+use crate::matrix::vecmath;
 use crate::prox::objective::LassoObjective;
-use crate::prox::soft_threshold::soft_threshold_scalar;
 use crate::solvers::ista::BatchOutput;
 
 /// Run batch FISTA for `iters` iterations with step `t = 1/L`.
@@ -16,21 +16,21 @@ pub fn fista(ds: &Dataset, lambda: f64, t: f64, iters: usize) -> Result<BatchOut
     let mut w = vec![0.0; d];
     let mut w_prev = vec![0.0; d];
     let mut v = vec![0.0; d];
+    let mut g = vec![0.0; d];
+    let mut resid = vec![0.0; ds.x.cols()];
     let mut theta = 1.0f64;
     let mut objectives = Vec::with_capacity(iters);
     for _ in 0..iters {
-        let g = obj.gradient(&ds.x, &ds.y, &v)?;
+        obj.gradient_into(&ds.x, &ds.y, &v, &mut resid, &mut g)?;
         w_prev.copy_from_slice(&w);
-        for i in 0..d {
-            w[i] = soft_threshold_scalar(v[i] - t * g[i], lambda * t);
-        }
+        // w = S_{λt}(v − t·∇f(v)) as one fused in-place prox step.
+        w.copy_from_slice(&v);
+        vecmath::prox_step(&mut w, &g, t, lambda * t);
         let theta_next = 0.5 * (1.0 + (1.0 + 4.0 * theta * theta).sqrt());
         let mu = (theta - 1.0) / theta_next;
-        for i in 0..d {
-            v[i] = w[i] + mu * (w[i] - w_prev[i]);
-        }
+        vecmath::momentum(&w, &w_prev, mu, &mut v);
         theta = theta_next;
-        objectives.push(obj.value(&ds.x, &ds.y, &w)?);
+        objectives.push(obj.value_with(&ds.x, &ds.y, &w, &mut resid)?);
     }
     Ok(BatchOutput { w, iterations: iters, objectives })
 }

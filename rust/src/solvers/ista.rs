@@ -3,8 +3,8 @@
 
 use crate::datasets::Dataset;
 use crate::error::Result;
+use crate::matrix::vecmath;
 use crate::prox::objective::LassoObjective;
-use crate::prox::soft_threshold::soft_threshold_scalar;
 
 /// Result of a serial batch solve.
 #[derive(Clone, Debug)]
@@ -22,13 +22,15 @@ pub struct BatchOutput {
 pub fn ista(ds: &Dataset, lambda: f64, t: f64, iters: usize) -> Result<BatchOutput> {
     let obj = LassoObjective::new(lambda);
     let mut w = vec![0.0; ds.d()];
+    // Per-iteration buffers, allocated once: gradient (d) and residual
+    // scratch (n) shared by the gradient and objective evaluations.
+    let mut g = vec![0.0; ds.d()];
+    let mut resid = vec![0.0; ds.x.cols()];
     let mut objectives = Vec::with_capacity(iters);
     for _ in 0..iters {
-        let g = obj.gradient(&ds.x, &ds.y, &w)?;
-        for i in 0..w.len() {
-            w[i] = soft_threshold_scalar(w[i] - t * g[i], lambda * t);
-        }
-        objectives.push(obj.value(&ds.x, &ds.y, &w)?);
+        obj.gradient_into(&ds.x, &ds.y, &w, &mut resid, &mut g)?;
+        vecmath::prox_step(&mut w, &g, t, lambda * t);
+        objectives.push(obj.value_with(&ds.x, &ds.y, &w, &mut resid)?);
     }
     Ok(BatchOutput { w, iterations: iters, objectives })
 }

@@ -9,11 +9,10 @@
 
 use crate::datasets::Dataset;
 use crate::error::Result;
-use crate::matrix::dense::{norm2, sub};
-use crate::matrix::ops::full_gram_csc;
 use crate::matrix::dense::DenseMatrix;
+use crate::matrix::ops::full_gram_csc;
+use crate::matrix::vecmath;
 use crate::prox::objective::LassoObjective;
-use crate::prox::soft_threshold::soft_threshold_scalar;
 
 /// Estimate `L = λ_max(XXᵀ/n)` by power iteration.
 pub fn lipschitz_constant(ds: &Dataset) -> Result<f64> {
@@ -42,20 +41,22 @@ pub fn solve_reference(
     let mut w = vec![0.0; d];
     let mut w_prev = vec![0.0; d];
     let mut v = w.clone();
+    let mut g = vec![0.0; d];
+    let mut resid = vec![0.0; ds.x.cols()];
     let mut theta = 1.0f64;
     let mut f_prev = f64::INFINITY;
     for it in 1..=max_iters {
-        let g = obj.gradient(&ds.x, &ds.y, &v)?;
+        obj.gradient_into(&ds.x, &ds.y, &v, &mut resid, &mut g)?;
         w_prev.copy_from_slice(&w);
-        for i in 0..d {
-            w[i] = soft_threshold_scalar(v[i] - t * g[i], lambda * t);
-        }
+        // w = S_{λt}(v − t·∇f(v)) as one fused in-place prox step.
+        w.copy_from_slice(&v);
+        vecmath::prox_step(&mut w, &g, t, lambda * t);
         // Gradient mapping at v: (v − w)/t where w = prox(v − t∇f(v)).
-        let gmap = norm2(&sub(&v, &w)) / t;
+        let gmap = vecmath::sum_sq_diff(&v, &w).sqrt() / t;
         if gmap <= tol {
             return Ok((w, it));
         }
-        let f_now = obj.value(&ds.x, &ds.y, &w)?;
+        let f_now = obj.value_with(&ds.x, &ds.y, &w, &mut resid)?;
         if f_now > f_prev {
             // Adaptive restart: kill momentum.
             theta = 1.0;
@@ -63,9 +64,7 @@ pub fn solve_reference(
         } else {
             let theta_next = 0.5 * (1.0 + (1.0 + 4.0 * theta * theta).sqrt());
             let mu = (theta - 1.0) / theta_next;
-            for i in 0..d {
-                v[i] = w[i] + mu * (w[i] - w_prev[i]);
-            }
+            vecmath::momentum(&w, &w_prev, mu, &mut v);
             theta = theta_next;
         }
         f_prev = f_now;

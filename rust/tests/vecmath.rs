@@ -1,0 +1,251 @@
+//! Vectorized elementwise layer vs the scalar reference: every impl in
+//! `all_vecmaths()` (scalar + any detected AVX2/NEON) across sampled
+//! lengths including remainder tails shorter than a vector width,
+//! boundary values (±λ, ±0.0, non-finite), per-impl bit-determinism,
+//! and the flop-accounting invariant that makes `CostTrace` independent
+//! of the kernel/vecmath selection (CI re-runs this suite with
+//! `CA_PROX_GEMM_KERNEL`/`CA_PROX_VECMATH` pinned to `scalar` and
+//! `auto`, which is what turns these analytic assertions into a
+//! cross-selection bit-identity proof).
+
+use ca_prox::comm::trace::Phase;
+use ca_prox::coordinator::state::IterState;
+use ca_prox::datasets::synthetic::{generate, SyntheticSpec};
+use ca_prox::matrix::ops::GramStack;
+use ca_prox::matrix::vecmath::{all_vecmaths, select_vecmath, ScalarVecMath, VecMath};
+use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::solvers::traits::{AlgoKind, GradientAt, SolverConfig};
+use ca_prox::util::prop::prop_check;
+
+static SCALAR: ScalarVecMath = ScalarVecMath;
+
+fn approx(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Lengths that exercise the empty case, every sub-vector-width tail
+/// (AVX2 is 4 f64 lanes, NEON 2), and multi-register bodies.
+const LENGTHS: [usize; 8] = [0, 1, 2, 3, 5, 8, 17, 67];
+
+/// Every implementation agrees with the scalar reference on every
+/// operation, at every tail length. Reductions and FMA-contracted
+/// updates are compared with a tight tolerance (reassociation and
+/// contraction legitimately change the last bits); soft-threshold must
+/// match bit-for-bit on finite inputs.
+#[test]
+fn prop_all_impls_match_scalar_reference() {
+    prop_check("vecmath impls == scalar reference", 30, |g| {
+        let n = *g.choose(&LENGTHS) + g.usize_in(0, 3);
+        let x = g.vec_gauss(n);
+        let y = g.vec_gauss(n);
+        let lt = g.f64_in(0.0, 1.5);
+        let alpha = g.f64_in(-2.0, 2.0);
+        let t = g.f64_in(0.0, 1.0);
+        let mu = g.f64_in(0.0, 1.0);
+        let mut want_st = vec![0.0; n];
+        SCALAR.soft_threshold(&x, lt, &mut want_st);
+        for vm in all_vecmaths() {
+            let mut got = vec![0.0; n];
+            vm.soft_threshold(&x, lt, &mut got);
+            for (a, b) in got.iter().zip(&want_st) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("{} soft_threshold: {a} vs {b}", vm.name()));
+                }
+            }
+            let mut zs = x.clone();
+            SCALAR.prox_step(&mut zs, &y, t, lt);
+            let mut zv = x.clone();
+            vm.prox_step(&mut zv, &y, t, lt);
+            for (a, b) in zv.iter().zip(&zs) {
+                if !approx(*a, *b, 1e-12) {
+                    return Err(format!("{} prox_step: {a} vs {b}", vm.name()));
+                }
+            }
+            let mut ms = vec![0.0; n];
+            SCALAR.momentum(&x, &y, mu, &mut ms);
+            let mut mv = vec![0.0; n];
+            vm.momentum(&x, &y, mu, &mut mv);
+            for (a, b) in mv.iter().zip(&ms) {
+                if !approx(*a, *b, 1e-12) {
+                    return Err(format!("{} momentum: {a} vs {b}", vm.name()));
+                }
+            }
+            let mut ys = y.clone();
+            SCALAR.axpy(alpha, &x, &mut ys);
+            let mut yv = y.clone();
+            vm.axpy(alpha, &x, &mut yv);
+            for (a, b) in yv.iter().zip(&ys) {
+                if !approx(*a, *b, 1e-12) {
+                    return Err(format!("{} axpy: {a} vs {b}", vm.name()));
+                }
+            }
+            for (op, got, want) in [
+                ("dot", vm.dot(&x, &y), SCALAR.dot(&x, &y)),
+                ("sum_abs", vm.sum_abs(&x), SCALAR.sum_abs(&x)),
+                ("sum_sq_diff", vm.sum_sq_diff(&x, &y), SCALAR.sum_sq_diff(&x, &y)),
+            ] {
+                if !approx(got, want, 1e-12) {
+                    return Err(format!("{} {op}: {got} vs {want}", vm.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Boundary semantics every implementation must share bit-for-bit with
+/// the scalar branches: the dead zone (|x| ≤ λ, including ±λ and ±0.0)
+/// maps to +0.0, NaN maps to +0.0, and ±∞ pass through.
+#[test]
+fn soft_threshold_boundary_values() {
+    let lt = 0.75;
+    let eps = f64::EPSILON;
+    let x = [
+        lt,
+        -lt,
+        lt * (1.0 + eps),
+        -lt * (1.0 + eps),
+        0.0,
+        -0.0,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        f64::NAN,
+        2.5,
+        -2.5,
+    ];
+    for vm in all_vecmaths() {
+        let mut out = vec![f64::NAN; x.len()];
+        vm.soft_threshold(&x, lt, &mut out);
+        let name = vm.name();
+        assert_eq!(out[0].to_bits(), 0.0f64.to_bits(), "{name}: S(λ)");
+        assert_eq!(out[1].to_bits(), 0.0f64.to_bits(), "{name}: S(−λ)");
+        assert!(out[2] > 0.0, "{name}: just above λ must shrink, not zero");
+        assert!(out[3] < 0.0, "{name}: just below −λ must shrink, not zero");
+        assert_eq!(out[4].to_bits(), 0.0f64.to_bits(), "{name}: S(0)");
+        assert_eq!(out[5].to_bits(), 0.0f64.to_bits(), "{name}: S(−0)");
+        assert_eq!(out[6], f64::INFINITY, "{name}: S(∞)");
+        assert_eq!(out[7], f64::NEG_INFINITY, "{name}: S(−∞)");
+        assert_eq!(out[8].to_bits(), 0.0f64.to_bits(), "{name}: S(NaN)");
+        assert_eq!(out[9], 2.5 - lt, "{name}: shrink positive");
+        assert_eq!(out[10], -(2.5 - lt), "{name}: shrink negative");
+    }
+}
+
+/// `prox_step` is the fused form of `soft_threshold(z − t·g)`: on the
+/// scalar impl the two must agree bit-for-bit; on FMA impls within the
+/// contraction tolerance.
+#[test]
+fn prop_prox_step_is_fused_soft_threshold() {
+    prop_check("prox_step == soft_threshold ∘ gradient-step", 30, |g| {
+        let n = *g.choose(&LENGTHS);
+        let z = g.vec_gauss(n);
+        let grad = g.vec_gauss(n);
+        let t = g.f64_in(0.0, 1.0);
+        let lt = g.f64_in(0.0, 1.0);
+        for vm in all_vecmaths() {
+            let stepped: Vec<f64> = z.iter().zip(&grad).map(|(zi, gi)| zi - t * gi).collect();
+            let mut want = vec![0.0; n];
+            vm.soft_threshold(&stepped, lt, &mut want);
+            let mut got = z.clone();
+            vm.prox_step(&mut got, &grad, t, lt);
+            for (a, b) in got.iter().zip(&want) {
+                let ok = if vm.name() == "scalar" {
+                    a.to_bits() == b.to_bits()
+                } else {
+                    approx(*a, *b, 1e-12)
+                };
+                if !ok {
+                    return Err(format!("{}: {a} vs {b}", vm.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Same impl + same inputs → same bits, for every impl and every
+/// operation (the per-selection determinism half of the contract).
+#[test]
+fn every_impl_is_bit_deterministic() {
+    for vm in all_vecmaths() {
+        for n in LENGTHS {
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.713).sin() * 3.0).collect();
+            let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.291).cos() * 2.0).collect();
+            assert_eq!(vm.dot(&x, &y).to_bits(), vm.dot(&x, &y).to_bits());
+            assert_eq!(vm.sum_abs(&x).to_bits(), vm.sum_abs(&x).to_bits());
+            assert_eq!(vm.sum_sq_diff(&x, &y).to_bits(), vm.sum_sq_diff(&x, &y).to_bits());
+            let run = |which: usize| {
+                let mut z = x.clone();
+                vm.prox_step(&mut z, &y, 0.37, 0.21);
+                let mut o = vec![0.0; n];
+                vm.momentum(&z, &y, 0.66, &mut o);
+                (z, o, which)
+            };
+            let (z1, o1, _) = run(1);
+            let (z2, o2, _) = run(2);
+            for (a, b) in z1.iter().zip(&z2).chain(o1.iter().zip(&o2)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} n={n}", vm.name());
+            }
+        }
+    }
+}
+
+/// The selected impl is one of the listed impls and stable across calls.
+#[test]
+fn selection_is_listed_and_stable() {
+    let v = select_vecmath();
+    assert_eq!(v.name(), select_vecmath().name());
+    assert!(all_vecmaths().iter().any(|c| c.name() == v.name()));
+}
+
+/// Flop accounting is analytic — charged from operand shapes, never
+/// measured from the kernel/vecmath that executed. The per-step returns
+/// pin the formulas, and a full session solve pins the phase totals:
+/// `Update = T·(2d² + 6d)` for SFISTA. CI runs this same test with the
+/// selection env vars pinned to `scalar` and to `auto`, so these exact
+/// equalities prove the counts are bit-identical across selections.
+#[test]
+fn flop_accounting_is_analytic_across_selections() {
+    // Per-step formulas at several shapes.
+    for d in [1usize, 3, 8, 33] {
+        let mut st = GramStack::zeros(d, 1);
+        let (g, r) = st.block_mut(0);
+        for i in 0..d {
+            g[i * d + i] = 1.0;
+            r[i] = 0.5;
+        }
+        let mut state = IterState::new(vec![0.0; d]);
+        let f = state.fista_step(&st, 0, 0.1, 0.01, GradientAt::Iterate).unwrap();
+        assert_eq!(f, (2 * d * d + 6 * d) as u64);
+        for q in [1usize, 4] {
+            let f = state.spnm_step(&st, 0, 0.1, 0.01, q).unwrap();
+            assert_eq!(f, (q * (2 * d * d + 4 * d)) as u64);
+        }
+    }
+
+    // Phase total over a whole session solve.
+    let ds = generate(
+        &SyntheticSpec {
+            d: 10,
+            n: 80,
+            density: 0.6,
+            noise: 0.05,
+            model_sparsity: 0.5,
+            condition: 1.0,
+        },
+        7,
+    );
+    let iters = 12usize;
+    let cfg = SolverConfig::default()
+        .with_lambda(0.05)
+        .with_sample_fraction(0.4)
+        .with_k(3)
+        .with_max_iters(iters)
+        .with_seed(11);
+    let mut session = Session::build(&ds, Topology::new(2)).unwrap();
+    let out = session.solve(&SolveSpec::from_config(&cfg, AlgoKind::Sfista)).unwrap();
+    assert_eq!(out.iterations, iters);
+    let d = ds.d();
+    let want = (iters * (2 * d * d + 6 * d)) as f64;
+    assert_eq!(out.trace.phase(Phase::Update).flops.to_bits(), want.to_bits());
+}
