@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Assert the out-of-core bit-rule through the real CLI binary.
+
+Two modes, both comparing a text-loaded (in-RAM) run against the same
+run reading through an ingested `.cacs` column store:
+
+  check_ingest.py --json  run_text.json  run_store.json
+      Deep-compare two `ca-prox run --json` reports. Every key named
+      `wall_seconds` is dropped recursively first (wall time is the one
+      legitimately nondeterministic field); everything else — iterates,
+      objectives, modeled times, trace counters — must match exactly.
+
+  check_ingest.py --csv   sweep_text.log  sweep_store.log
+      Extract the deterministic CSV block (`p,k,b,lambda,...` header
+      plus its rows) from two `ca-prox sweep` logs and require identical
+      bytes.
+
+Exits nonzero with a diff summary on any mismatch.
+"""
+
+import json
+import sys
+
+CSV_HEADER = "p,k,b,lambda,seed,iterations,converged,modeled_seconds"
+
+
+def strip_wall(node):
+    if isinstance(node, dict):
+        return {k: strip_wall(v) for k, v in node.items() if k != "wall_seconds"}
+    if isinstance(node, list):
+        return [strip_wall(v) for v in node]
+    return node
+
+
+def diff(a, b, path=""):
+    """Yield human-readable paths where a and b disagree."""
+    if type(a) is not type(b):
+        yield f"{path or '/'}: type {type(a).__name__} vs {type(b).__name__}"
+        return
+    if isinstance(a, dict):
+        for k in sorted(set(a) | set(b)):
+            if k not in a:
+                yield f"{path}/{k}: only in store run"
+            elif k not in b:
+                yield f"{path}/{k}: only in text run"
+            else:
+                yield from diff(a[k], b[k], f"{path}/{k}")
+    elif isinstance(a, list):
+        if len(a) != len(b):
+            yield f"{path}: length {len(a)} vs {len(b)}"
+        for i, (x, y) in enumerate(zip(a, b)):
+            yield from diff(x, y, f"{path}[{i}]")
+    elif a != b:
+        yield f"{path or '/'}: {a!r} vs {b!r}"
+
+
+def csv_block(text, name):
+    lines = text.splitlines()
+    try:
+        start = lines.index(CSV_HEADER)
+    except ValueError:
+        sys.exit(f"check_ingest: no CSV block (header '{CSV_HEADER}') in {name}")
+    block = [CSV_HEADER]
+    for line in lines[start + 1 :]:
+        parts = line.split(",")
+        if len(parts) != len(CSV_HEADER.split(",")):
+            break
+        block.append(line)
+    if len(block) < 2:
+        sys.exit(f"check_ingest: CSV block in {name} has no rows")
+    return "\n".join(block)
+
+
+def main():
+    if len(sys.argv) != 4 or sys.argv[1] not in ("--json", "--csv"):
+        sys.exit(f"usage: {sys.argv[0]} --json|--csv <text-run> <store-run>")
+    mode, a_path, b_path = sys.argv[1:]
+    with open(a_path) as f:
+        a_raw = f.read()
+    with open(b_path) as f:
+        b_raw = f.read()
+
+    if mode == "--json":
+        a = strip_wall(json.loads(a_raw))
+        b = strip_wall(json.loads(b_raw))
+        mismatches = list(diff(a, b))
+        if mismatches:
+            for m in mismatches[:20]:
+                print(f"check_ingest: MISMATCH {m}", file=sys.stderr)
+            sys.exit(f"check_ingest: {len(mismatches)} field(s) differ between "
+                     f"{a_path} and {b_path} (wall_seconds already ignored)")
+        print(f"check_ingest OK: {a_path} == {b_path} (ignoring wall_seconds)")
+    else:
+        a = csv_block(a_raw, a_path)
+        b = csv_block(b_raw, b_path)
+        if a != b:
+            for la, lb in zip(a.splitlines(), b.splitlines()):
+                if la != lb:
+                    print(f"check_ingest: CSV row differs:\n  text : {la}\n  store: {lb}",
+                          file=sys.stderr)
+            sys.exit(f"check_ingest: sweep CSV from {b_path} is not bit-equal to {a_path}")
+        rows = len(a.splitlines()) - 1
+        print(f"check_ingest OK: {rows} sweep cells bit-equal across text and store loads")
+
+
+if __name__ == "__main__":
+    main()

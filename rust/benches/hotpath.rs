@@ -16,7 +16,7 @@ use ca_prox::grid::{Grid, SweepSpec};
 use ca_prox::matrix::dense::DenseMatrix;
 use ca_prox::matrix::gemm;
 use ca_prox::matrix::ops::{
-    sampled_gram_csc, sampled_gram_dense, sampled_gram_dense_naive, GramStack,
+    sampled_gram_dense, sampled_gram_dense_naive, sampled_gram_src, GramStack,
 };
 use ca_prox::matrix::vecmath::{best_arch_vecmath, ScalarVecMath, VecMath};
 use ca_prox::datasets::Dataset;
@@ -25,6 +25,7 @@ use ca_prox::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
 use ca_prox::serve::{ServeClient, Server, ServerConfig, SolveRequest};
 use ca_prox::session::{Session, SolveSpec, Topology};
 use ca_prox::solvers::traits::{AlgoKind, GradientAt, SolverConfig};
+use ca_prox::store::{ColStore, ColStoreWriter};
 use ca_prox::util::rng::Rng;
 use std::path::Path;
 
@@ -234,6 +235,53 @@ fn simd_pairs(reps: usize) {
     );
 }
 
+/// The `gram/inmem-vs-mapped` hotpath pair (EXPERIMENTS.md; CI requires
+/// it via `check_bench.py --require`): the sampled-Gram kernel reading
+/// the same dataset through the in-RAM CSC source vs the mmap-backed
+/// column store. The kernel is generic over the `ColumnRead` seam, so
+/// both runs execute the same arithmetic in the same order — the pair
+/// measures pure storage-seam overhead, and the two results are
+/// asserted bitwise identical before the speedup line prints.
+fn inmem_vs_mapped_pair(ds: &Dataset, tag: &str, reps: usize, m: usize) {
+    let dir = std::env::temp_dir()
+        .join(format!("ca_prox_bench_store_{}_{tag}.cacs", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut w = ColStoreWriter::create(&dir, "bench", 0).unwrap();
+    for c in 0..ds.n() {
+        let (ri, vs) = ds.x.col(c).unwrap();
+        w.push_col(ri, vs, ds.y[c]).unwrap();
+    }
+    w.finish(ds.d()).unwrap();
+    let mapped = ColStore::open_dataset(&dir).unwrap();
+    let d = ds.d();
+    let mut rng = Rng::new(5);
+    let idx = rng.sample_without_replacement(ds.n(), m);
+    let inv_m = 1.0 / m as f64;
+    let (mut g_mem, mut r_mem) = (vec![0.0; d * d], vec![0.0; d]);
+    let (mut g_map, mut r_map) = (vec![0.0; d * d], vec![0.0; d]);
+    let t_mem = bench(&format!("gram/inmem-vs-mapped/inmem ({tag}, m={m})"), 1, reps, || {
+        g_mem.iter_mut().for_each(|x| *x = 0.0);
+        r_mem.iter_mut().for_each(|x| *x = 0.0);
+        sampled_gram_src(&ds.x, &ds.y, &idx, inv_m, &mut g_mem, &mut r_mem).unwrap();
+    });
+    emit(&t_mem);
+    let t_map = bench(&format!("gram/inmem-vs-mapped/mapped ({tag}, m={m})"), 1, reps, || {
+        g_map.iter_mut().for_each(|x| *x = 0.0);
+        r_map.iter_mut().for_each(|x| *x = 0.0);
+        sampled_gram_src(&mapped.x, &mapped.y, &idx, inv_m, &mut g_map, &mut r_map).unwrap();
+    });
+    emit(&t_map);
+    let bits_equal =
+        |a: &[f64], b: &[f64]| a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
+    assert!(bits_equal(&g_mem, &g_map), "mapped G must be bit-identical to in-RAM G");
+    assert!(bits_equal(&r_mem, &r_map), "mapped R must be bit-identical to in-RAM R");
+    println!(
+        "gram/inmem-vs-mapped overhead ({tag}): {:.2}x",
+        t_map.median() / t_mem.median()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// CI smoke slice (`cargo bench --bench hotpath -- --quick`): one tiny
 /// kernel timing plus one Grid sweep cell, each leaving a `BENCH {json}`
 /// line — enough for the bench-smoke job to validate the schema and
@@ -250,7 +298,7 @@ fn quick_mode() {
     let t = bench("gram/native-csc (quick)", 1, 5, || {
         g.iter_mut().for_each(|x| *x = 0.0);
         r.iter_mut().for_each(|x| *x = 0.0);
-        sampled_gram_csc(&ds.x, &ds.y, &idx, inv_m, &mut g, &mut r).unwrap();
+        sampled_gram_src(&ds.x, &ds.y, &idx, inv_m, &mut g, &mut r).unwrap();
     });
     emit(&t);
     let spec = SolveSpec::default()
@@ -268,6 +316,7 @@ fn quick_mode() {
     serve_boot_pair(&ds, "quick", 2, &spec.clone().with_max_iters(8));
     serve_fleet_pair(&ds, "quick", 2, &spec.with_max_iters(8));
     simd_pairs(5);
+    inmem_vs_mapped_pair(&ds, "quick", 5, 128);
     println!("\nhotpath quick OK");
 }
 
@@ -281,7 +330,7 @@ fn main() {
     simd_pairs(20);
     let ds = load_preset("covtype", Some(50_000), 42).unwrap();
     let d = ds.d();
-    let dense = ds.x.to_dense();
+    let dense = ds.x.to_dense().unwrap();
     let mut rng = Rng::new(1);
     let idx: Vec<usize> = rng.sample_without_replacement(ds.n(), 2048);
     let inv_m = 1.0 / idx.len() as f64;
@@ -292,7 +341,7 @@ fn main() {
     let t = bench("gram/native-csc (d=54, m=2048, 22% nnz)", 3, 20, || {
         g.iter_mut().for_each(|x| *x = 0.0);
         r.iter_mut().for_each(|x| *x = 0.0);
-        sampled_gram_csc(&ds.x, &ds.y, &idx, inv_m, &mut g, &mut r).unwrap();
+        sampled_gram_src(&ds.x, &ds.y, &idx, inv_m, &mut g, &mut r).unwrap();
     });
     emit(&t);
     let t_naive = bench("gram/naive-dense (d=54, m=2048)", 3, 20, || {
@@ -311,6 +360,7 @@ fn main() {
         "gram/packed-vs-naive speedup (d=54): {:.2}x",
         t_naive.median() / t_packed.median()
     );
+    inmem_vs_mapped_pair(&ds, "covtype-50k", 10, 2048);
 
     // Wide-feature panel: d = 256 stresses the MC/NC tiling rather than
     // the single-block d = 54 case.

@@ -3,7 +3,7 @@
 use crate::cli::args::{ArgSpec, Flag, ParsedArgs};
 use crate::config::parse::TomlValue;
 use crate::config::spec::RunSpec;
-use crate::datasets::registry;
+use crate::datasets::{libsvm, registry};
 use crate::error::{CaError, Result};
 use crate::grid::{BenchEmitter, Grid, NoopSweepObserver, PlanCache, SweepObserver, SweepSpec};
 use crate::metrics::report::RunReport;
@@ -14,6 +14,7 @@ use crate::serve::server::{DatasetRef, Server, ServerConfig};
 use crate::serve::store::PlanStore;
 use crate::session::Session;
 use crate::solvers::traits::SolverOutput;
+use crate::store::{ColStoreWriter, STORE_DIR_SUFFIX};
 use crate::util::json::Json;
 use std::io::{BufRead, Write};
 use std::sync::Arc;
@@ -369,7 +370,7 @@ pub fn cmd_datagen(argv: &[String]) -> Result<()> {
     let mut text = String::new();
     for c in 0..ds.n() {
         text.push_str(&format!("{}", ds.y[c]));
-        let (ri, vs) = ds.x.col(c);
+        let (ri, vs) = ds.x.col(c)?;
         for (&r, &v) in ri.iter().zip(vs) {
             text.push_str(&format!(" {}:{}", r + 1, v));
         }
@@ -380,6 +381,62 @@ pub fn cmd_datagen(argv: &[String]) -> Result<()> {
     }
     std::fs::write(&out_path, text)?;
     println!("wrote {} samples (d={}) to {out_path}", ds.n(), ds.d());
+    Ok(())
+}
+
+/// `ca-prox ingest` — convert a LIBSVM file (`.gz` transparently) into
+/// an on-disk chunked column store in **one streaming pass**: peak
+/// memory is O(chunk + labels), never O(file). The sealed store is what
+/// [`registry::load_preset`] prefers over the text variants, and solves
+/// read it mmap-backed without re-parsing.
+pub fn cmd_ingest(argv: &[String]) -> Result<()> {
+    let flags = ArgSpec::new(vec![
+        Flag { name: "input", takes_value: true, help: "LIBSVM file to ingest (.gz ok)" },
+        Flag { name: "name", takes_value: true, help: "dataset name (default: input stem)" },
+        Flag { name: "d-hint", takes_value: true, help: "force feature dimension (0 = infer)" },
+        Flag { name: "chunk-cols", takes_value: true, help: "columns per chunk (0 = default)" },
+        Flag { name: "out", takes_value: true, help: "output dir (default data/<name>.cacs)" },
+    ]);
+    let parsed = flags.parse(argv)?;
+    let input = parsed
+        .get("input")
+        .ok_or_else(|| CaError::Config("ingest needs --input FILE".into()))?;
+    let input = std::path::Path::new(input);
+    let name = match parsed.get("name") {
+        Some(n) => n.to_string(),
+        None => {
+            let stem = input
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "dataset".into());
+            // "foo.txt.gz" stems to "foo.txt" — peel the inner extension.
+            stem.strip_suffix(".txt").unwrap_or(&stem).to_string()
+        }
+    };
+    let d_hint = parsed.get_usize("d-hint")?.unwrap_or(0);
+    let chunk_cols = parsed.get_usize("chunk-cols")?.unwrap_or(0);
+    let out = parsed
+        .get("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from(format!("data/{name}{STORE_DIR_SUFFIX}")));
+    let mut writer = ColStoreWriter::create(&out, &name, chunk_cols)?;
+    let file = std::fs::File::open(input)?;
+    let d_max = if input.extension().map(|e| e == "gz").unwrap_or(false) {
+        let gz = flate2::read::GzDecoder::new(std::io::BufReader::new(file));
+        libsvm::parse_reader(&name, std::io::BufReader::new(gz), &mut writer)?
+    } else {
+        libsvm::parse_reader(&name, std::io::BufReader::new(file), &mut writer)?
+    };
+    let d = libsvm::resolve_d(&name, writer.cols(), d_max, d_hint)?;
+    let manifest = writer.finish(d)?;
+    println!(
+        "ingested {} samples (d={}, nnz={}, {} chunks) into {}",
+        manifest.n,
+        manifest.d,
+        manifest.nnz,
+        manifest.chunks.len(),
+        out.display()
+    );
     Ok(())
 }
 
@@ -473,6 +530,35 @@ mod tests {
         let ds = crate::datasets::libsvm::load_file(&out, 0).unwrap();
         assert_eq!(ds.n(), 50);
         std::fs::remove_file(&out).ok();
+    }
+
+    #[test]
+    fn ingest_roundtrip_matches_text_load() {
+        let dir = std::env::temp_dir().join(format!("ca_prox_ingest_cmd_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let txt = dir.join("toy.txt");
+        let store = dir.join("toy.cacs");
+        cmd_datagen(&sv(&[
+            "--dataset", "smoke", "--scale-n", "40", "--out", txt.to_str().unwrap(),
+        ]))
+        .unwrap();
+        cmd_ingest(&sv(&[
+            "--input", txt.to_str().unwrap(), "--chunk-cols", "7", "--out",
+            store.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let in_mem = crate::datasets::libsvm::load_file(&txt, 0).unwrap();
+        let mapped = crate::store::ColStore::open_dataset(&store).unwrap();
+        assert!(mapped.x.is_mapped());
+        assert_eq!(mapped.y, in_mem.y);
+        assert_eq!((mapped.d(), mapped.n()), (in_mem.d(), in_mem.n()));
+        assert_eq!(mapped.x.nnz(), in_mem.x.nnz());
+        for c in 0..in_mem.n() {
+            assert_eq!(mapped.x.col(c).unwrap(), in_mem.x.col(c).unwrap());
+        }
+        assert!(cmd_ingest(&sv(&["--name", "x"])).is_err(), "missing --input must error");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

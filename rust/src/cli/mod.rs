@@ -7,6 +7,7 @@
 //!                  [--writer-id ID] [--warm-pool-max N]
 //! ca-prox submit   --socket HOST:PORT [--dataset NAME] [--lambda X] ...
 //! ca-prox datagen  --dataset NAME --scale-n N --out FILE
+//! ca-prox ingest   --input FILE [--name NAME] [--d-hint D] [--chunk-cols N] [--out DIR]
 //! ca-prox info     [--artifacts DIR]
 //! ca-prox help
 //! ```
@@ -36,6 +37,7 @@ fn dispatch(argv: &[String]) -> crate::error::Result<()> {
         "serve" => commands::cmd_serve(rest),
         "submit" => commands::cmd_submit(rest),
         "datagen" => commands::cmd_datagen(rest),
+        "ingest" => commands::cmd_ingest(rest),
         "info" => commands::cmd_info(rest),
         "help" | "--help" | "-h" => {
             print!("{}", help_text());
@@ -58,6 +60,7 @@ pub fn help_text() -> String {
          \x20 serve    long-running solve service (JSON lines on stdin/stdout or --socket)\n\
          \x20 submit   send one job to a running serve --socket server\n\
          \x20 datagen  generate a synthetic dataset file (LIBSVM format)\n\
+         \x20 ingest   convert a LIBSVM file to an on-disk column store (one streaming pass)\n\
          \x20 info     print presets, machine models and artifact status\n\
          \x20 help     this message\n\nRUN FLAGS:\n",
     );
@@ -82,7 +85,7 @@ mod tests {
     #[test]
     fn help_mentions_all_commands() {
         let h = help_text();
-        for cmd in ["run", "sweep", "serve", "submit", "datagen", "info"] {
+        for cmd in ["run", "sweep", "serve", "submit", "datagen", "ingest", "info"] {
             assert!(h.contains(cmd));
         }
     }

@@ -1,9 +1,21 @@
 //! Column shards: each worker's private slice of the dataset.
+//!
+//! A shard's matrix lives behind [`ShardData`]: in-RAM shards
+//! materialize their column submatrix (the historical behavior, bit-for
+//! bit); mapped shards keep a shared handle to the column store plus
+//! their global column list, so partitioning an out-of-core dataset
+//! never copies the matrix — every worker reads its panels straight
+//! from the shared mapping.
 
-use crate::datasets::Dataset;
-use crate::error::Result;
+use crate::datasets::{DataSource, Dataset};
+use crate::error::{CaError, Result};
+use crate::matrix::colread::ColumnRead;
 use crate::matrix::csc::CscMatrix;
-use crate::matrix::partition::{contiguous_by_nnz, greedy_by_nnz, ColumnPartition};
+use crate::matrix::partition::{
+    contiguous_by_nnz_weights, greedy_by_nnz_weights, ColumnPartition,
+};
+use crate::store::ColStore;
+use std::sync::Arc;
 
 /// Partitioning strategy for distributing columns.
 ///
@@ -17,13 +29,113 @@ pub enum PartitionStrategy {
     Greedy,
 }
 
+/// Where a worker's columns live: materialized in RAM, or a view into
+/// the shared mapped store (local column index → global column).
+#[derive(Clone, Debug)]
+pub enum ShardData {
+    /// Materialized local submatrix (d × n_local).
+    InMem(CscMatrix),
+    /// Zero-copy view into a shared column store.
+    Mapped {
+        /// Shared mapped store (one mapping for all shards).
+        store: Arc<ColStore>,
+        /// Local column index → global column in the store.
+        cols: Vec<usize>,
+        /// Total nnz of the local columns (from the manifest).
+        nnz: usize,
+    },
+}
+
+impl ShardData {
+    /// Feature count d.
+    pub fn rows(&self) -> usize {
+        match self {
+            ShardData::InMem(m) => m.rows(),
+            ShardData::Mapped { store, .. } => store.rows(),
+        }
+    }
+
+    /// Local column count n_local.
+    pub fn cols(&self) -> usize {
+        match self {
+            ShardData::InMem(m) => m.cols(),
+            ShardData::Mapped { cols, .. } => cols.len(),
+        }
+    }
+
+    /// Local stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        match self {
+            ShardData::InMem(m) => m.nnz(),
+            ShardData::Mapped { nnz, .. } => *nnz,
+        }
+    }
+
+    /// `(row indices, values)` of local column `c`.
+    pub fn col(&self, c: usize) -> Result<(&[usize], &[f64])> {
+        if c >= self.cols() {
+            return Err(CaError::Shape(format!("column {c} out of {}", self.cols())));
+        }
+        match self {
+            ShardData::InMem(m) => Ok(m.col(c)),
+            ShardData::Mapped { store, cols, .. } => store.col(cols[c]),
+        }
+    }
+
+    /// nnz of local column `c`.
+    pub fn col_nnz(&self, c: usize) -> Result<usize> {
+        if c >= self.cols() {
+            return Err(CaError::Shape(format!("column {c} out of {}", self.cols())));
+        }
+        match self {
+            ShardData::InMem(m) => Ok(m.col_nnz(c)),
+            ShardData::Mapped { store, cols, .. } => store.col_nnz(cols[c]),
+        }
+    }
+
+    /// True when this shard reads from the mapped store.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, ShardData::Mapped { .. })
+    }
+}
+
+impl ColumnRead for ShardData {
+    fn rows(&self) -> usize {
+        ShardData::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        ShardData::cols(self)
+    }
+
+    fn nnz(&self) -> usize {
+        ShardData::nnz(self)
+    }
+
+    fn col_nnz(&self, c: usize) -> Result<usize> {
+        ShardData::col_nnz(self, c)
+    }
+
+    fn col(&self, c: usize) -> Result<(&[usize], &[f64])> {
+        ShardData::col(self, c)
+    }
+
+    fn prefetch_cols(&self, local: &[usize]) {
+        if let ShardData::Mapped { store, cols, .. } = self {
+            let global: Vec<usize> =
+                local.iter().filter(|&&c| c < cols.len()).map(|&c| cols[c]).collect();
+            store.prefetch_cols(&global);
+        }
+    }
+}
+
 /// One worker's private data: its columns of X and entries of y.
 #[derive(Clone, Debug)]
 pub struct WorkerShard {
     /// Worker id.
     pub worker: usize,
-    /// Local column submatrix (d × n_local).
-    pub x: CscMatrix,
+    /// Local column data (d × n_local), in RAM or a mapped view.
+    pub x: ShardData,
     /// Labels for the local columns (n_local).
     pub y: Vec<f64>,
     /// Map local column index → global column index.
@@ -47,11 +159,18 @@ pub struct ShardedDataset {
 }
 
 impl ShardedDataset {
-    /// Partition a dataset over `p` workers.
+    /// Partition a dataset over `p` workers. Both storage backends feed
+    /// the same weight-slice partitioners, so the column → worker
+    /// assignment is identical whether the dataset is resident or
+    /// mapped; only the shard representation differs.
     pub fn new(ds: &Dataset, p: usize, strategy: PartitionStrategy) -> Result<Self> {
+        let weights: Vec<usize> = match &ds.x {
+            DataSource::InMem(m) => (0..m.cols()).map(|c| m.col_nnz(c)).collect(),
+            DataSource::Mapped(s) => s.col_nnz_all()?,
+        };
         let part: ColumnPartition = match strategy {
-            PartitionStrategy::Contiguous => contiguous_by_nnz(&ds.x, p),
-            PartitionStrategy::Greedy => greedy_by_nnz(&ds.x, p),
+            PartitionStrategy::Contiguous => contiguous_by_nnz_weights(&weights, p),
+            PartitionStrategy::Greedy => greedy_by_nnz_weights(&weights, p),
         };
         let n = ds.x.cols();
         let mut local_index = vec![0usize; n];
@@ -60,7 +179,14 @@ impl ShardedDataset {
             for (li, &c) in members.iter().enumerate() {
                 local_index[c] = li;
             }
-            let x = ds.x.gather_cols(members);
+            let x = match &ds.x {
+                DataSource::InMem(m) => ShardData::InMem(m.gather_cols(members)),
+                DataSource::Mapped(s) => ShardData::Mapped {
+                    store: s.clone(),
+                    cols: members.clone(),
+                    nnz: members.iter().map(|&c| weights[c]).sum(),
+                },
+            };
             let y: Vec<f64> = members.iter().map(|&c| ds.y[c]).collect();
             shards.push(WorkerShard { worker: w, x, y, global_cols: members.clone() });
         }
@@ -117,8 +243,8 @@ mod tests {
                     assert_eq!(sh.owner[gc], shard.worker);
                     assert_eq!(sh.local_index[gc], li);
                     assert_eq!(shard.y[li], ds.y[gc]);
-                    let (ri_l, vs_l) = shard.x.col(li);
-                    let (ri_g, vs_g) = ds.x.col(gc);
+                    let (ri_l, vs_l) = shard.x.col(li).unwrap();
+                    let (ri_g, vs_g) = ds.x.col(gc).unwrap();
                     assert_eq!(ri_l, ri_g);
                     assert_eq!(vs_l, vs_g);
                 }
@@ -139,5 +265,39 @@ mod tests {
         let ds = small_ds();
         let sh = ShardedDataset::new(&ds, 5, PartitionStrategy::Greedy).unwrap();
         assert!(sh.imbalance() < 1.6, "imbalance {}", sh.imbalance());
+    }
+
+    /// A mapped dataset shards without copying the matrix: same
+    /// assignment, same column bytes, every shard a view.
+    #[test]
+    fn mapped_dataset_shards_as_views() {
+        use crate::store::{ColStore, ColStoreWriter};
+        let in_mem = small_ds();
+        let dir = std::env::temp_dir()
+            .join(format!("ca_prox_shard_{}.cacs", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut w = ColStoreWriter::create(&dir, "toy", 7).unwrap();
+        let m = in_mem.x.as_csc().unwrap();
+        for c in 0..m.cols() {
+            let (ri, vs) = m.col(c);
+            w.push_col(ri, vs, in_mem.y[c]).unwrap();
+        }
+        w.finish(m.rows()).unwrap();
+        let mapped = ColStore::open_dataset(&dir).unwrap();
+        for strategy in [PartitionStrategy::Contiguous, PartitionStrategy::Greedy] {
+            let a = ShardedDataset::new(&in_mem, 3, strategy).unwrap();
+            let b = ShardedDataset::new(&mapped, 3, strategy).unwrap();
+            assert_eq!(a.owner, b.owner, "assignment must not depend on backend");
+            for (sa, sb) in a.shards.iter().zip(&b.shards) {
+                assert!(!sa.x.is_mapped() && sb.x.is_mapped());
+                assert_eq!((sa.x.cols(), sa.x.nnz()), (sb.x.cols(), sb.x.nnz()));
+                assert_eq!(sa.y, sb.y);
+                for li in 0..sa.x.cols() {
+                    assert_eq!(sa.x.col(li).unwrap(), sb.x.col(li).unwrap());
+                }
+                sb.x.prefetch_cols(&[0]); // harmless madvise sweep
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -13,7 +13,7 @@ use crate::comm::trace::{CostTrace, Phase};
 use crate::datasets::Dataset;
 use crate::error::Result;
 use crate::matrix::dense::DenseMatrix;
-use crate::matrix::ops::full_gram_csc;
+use crate::matrix::ops::full_gram_src;
 use crate::runtime::backend::{GramBackend, NativeGramBackend};
 use crate::session::{Session, SolveSpec, Topology};
 use crate::solvers::traits::{AlgoKind, SolverConfig, SolverOutput};
@@ -27,7 +27,7 @@ pub fn estimate_lipschitz(
     trace: &mut CostTrace,
 ) -> Result<f64> {
     let d = ds.d();
-    let (gram, flops) = full_gram_csc(&ds.x, &ds.y)?;
+    let (gram, flops) = full_gram_src(&ds.x, &ds.y)?;
     trace.charge_flops(Phase::Setup, flops as f64, machine);
     let gm = DenseMatrix::from_vec(d, d, gram.g().to_vec())?;
     let iters = 100;
@@ -186,11 +186,7 @@ mod tests {
     #[test]
     fn empty_dataset_rejected() {
         use crate::matrix::csc::CscMatrix;
-        let empty = Dataset {
-            name: "e".into(),
-            x: CscMatrix::from_triplets(0, 0, &[]).unwrap(),
-            y: vec![],
-        };
+        let empty = Dataset::in_mem("e", CscMatrix::from_triplets(0, 0, &[]).unwrap(), vec![]);
         assert!(run(&empty, &base_cfg(), 1, &MachineModel::comet(), AlgoKind::Sfista).is_err());
     }
 }

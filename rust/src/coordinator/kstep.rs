@@ -103,7 +103,7 @@ mod tests {
     use crate::cluster::shard::PartitionStrategy;
     use crate::comm::costmodel::MachineModel;
     use crate::datasets::synthetic::{generate, SyntheticSpec};
-    use crate::matrix::ops::sampled_gram_csc;
+    use crate::matrix::ops::sampled_gram_src;
     use crate::runtime::backend::NativeGramBackend;
     use crate::sampling::SamplingMode;
 
@@ -149,7 +149,7 @@ mod tests {
             let idx = schedule.sample(10 + j);
             let mut g = vec![0.0; d * d];
             let mut r = vec![0.0; d];
-            sampled_gram_csc(&ds.x, &ds.y, &idx, inv_m, &mut g, &mut r).unwrap();
+            sampled_gram_src(&ds.x, &ds.y, &idx, inv_m, &mut g, &mut r).unwrap();
             let (gs, rs) = stack.block(j);
             for (a, b) in gs.iter().zip(&g) {
                 assert!((a - b).abs() < 1e-10, "G block {j}: {a} vs {b}");

@@ -9,15 +9,149 @@
 //! Indices are 1-based and strictly increasing within a line. Comments
 //! start with `#`. Gzip-compressed files (`.gz`) are decompressed
 //! transparently via `flate2`.
+//!
+//! Two entry shapes share one per-line tokenizer:
+//!
+//! * [`parse_str`] — the original whole-text parser, kept verbatim as
+//!   the bit-oracle the streaming path is pinned against;
+//! * [`parse_reader`] — a streaming `BufRead` pass that hands each
+//!   sample's column to a [`ColumnSink`] as it is parsed, so peak
+//!   memory is O(line + sink state), never O(file). [`load_file`]
+//!   streams into an in-RAM CSC builder; `ca_prox ingest` streams into
+//!   a [`crate::store::ColStoreWriter`], converting libsvm →
+//!   column store in one pass without ever materializing the matrix.
 
 use crate::datasets::Dataset;
 use crate::error::{CaError, Result};
-use crate::matrix::csc::CscMatrix;
-use std::io::{BufReader, Read};
+use crate::matrix::csc::{CscBuilder, CscMatrix};
+use crate::store::{ColStoreWriter, STORE_DIR_SUFFIX};
+use std::io::{BufRead, BufReader};
 use std::path::Path;
 
+/// Receives one parsed sample at a time from [`parse_reader`]: `rows`
+/// are 0-based feature indices (strictly increasing, zeros already
+/// dropped), `vals` the matching nonzero values, `label` the sample's y.
+pub trait ColumnSink {
+    /// Accept the next sample (column of X plus its label).
+    fn push(&mut self, rows: &[usize], vals: &[f64], label: f64) -> Result<()>;
+}
+
+impl ColumnSink for ColStoreWriter {
+    fn push(&mut self, rows: &[usize], vals: &[f64], label: f64) -> Result<()> {
+        ColStoreWriter::push_col(self, rows, vals, label)
+    }
+}
+
+/// In-RAM sink: appends columns to a [`CscBuilder`] — the streaming
+/// loader's back end.
+struct CscSink {
+    builder: CscBuilder,
+    y: Vec<f64>,
+}
+
+impl ColumnSink for CscSink {
+    fn push(&mut self, rows: &[usize], vals: &[f64], label: f64) -> Result<()> {
+        self.builder.push_col(rows, vals)?;
+        self.y.push(label);
+        Ok(())
+    }
+}
+
+/// Tokenize one raw line (1-based `lineno`, for error messages) into
+/// `rows`/`vals` (cleared first; zeros dropped). Returns the label, or
+/// `None` for blank/comment lines. `d_max` tracks the highest 1-based
+/// index seen — including dropped zero entries, matching [`parse_str`].
+fn parse_line(
+    name: &str,
+    lineno: usize,
+    raw: &str,
+    rows: &mut Vec<usize>,
+    vals: &mut Vec<f64>,
+    d_max: &mut usize,
+) -> Result<Option<f64>> {
+    let line = raw.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    rows.clear();
+    vals.clear();
+    let mut parts = line.split_whitespace();
+    let label =
+        parts.next().ok_or_else(|| CaError::Dataset(format!("{name}:{lineno}: empty line")))?;
+    let label: f64 = label
+        .parse()
+        .map_err(|_| CaError::Dataset(format!("{name}:{lineno}: bad label '{label}'")))?;
+    let mut prev_idx = 0usize;
+    for feat in parts {
+        let (idx, val) = feat
+            .split_once(':')
+            .ok_or_else(|| CaError::Dataset(format!("{name}:{lineno}: bad feature '{feat}'")))?;
+        let idx: usize = idx
+            .parse()
+            .map_err(|_| CaError::Dataset(format!("{name}:{lineno}: bad index '{idx}'")))?;
+        let val: f64 = val
+            .parse()
+            .map_err(|_| CaError::Dataset(format!("{name}:{lineno}: bad value '{val}'")))?;
+        if idx == 0 {
+            return Err(CaError::Dataset(format!("{name}:{lineno}: LIBSVM indices are 1-based")));
+        }
+        if idx <= prev_idx {
+            return Err(CaError::Dataset(format!(
+                "{name}:{lineno}: indices must be strictly increasing"
+            )));
+        }
+        prev_idx = idx;
+        *d_max = (*d_max).max(idx);
+        if val != 0.0 {
+            rows.push(idx - 1);
+            vals.push(val);
+        }
+    }
+    Ok(Some(label))
+}
+
+/// Stream LIBSVM text from `reader` into `sink`, one sample at a time.
+/// Returns the highest 1-based feature index seen (0 if none) — feed it
+/// to [`resolve_d`] with the caller's `d_hint`.
+pub fn parse_reader<R: BufRead, S: ColumnSink>(
+    name: &str,
+    reader: R,
+    sink: &mut S,
+) -> Result<usize> {
+    let mut d_max = 0usize;
+    let mut rows: Vec<usize> = Vec::new();
+    let mut vals: Vec<f64> = Vec::new();
+    for (lineno, raw) in reader.lines().enumerate() {
+        let raw = raw?;
+        if let Some(label) = parse_line(name, lineno + 1, &raw, &mut rows, &mut vals, &mut d_max)? {
+            sink.push(&rows, &vals, label)?;
+        }
+    }
+    Ok(d_max)
+}
+
+/// Resolve the feature dimension from what the data showed (`d_max`,
+/// counting dropped-zero indices) and the caller's `d_hint` (0 = infer)
+/// — same rules and error strings as [`parse_str`].
+pub fn resolve_d(name: &str, n: usize, d_max: usize, d_hint: usize) -> Result<usize> {
+    if n == 0 {
+        return Err(CaError::Dataset(format!("{name}: no samples")));
+    }
+    if d_hint > 0 {
+        if d_max > d_hint {
+            return Err(CaError::Dataset(format!(
+                "{name}: feature index {d_max} exceeds d_hint {d_hint}"
+            )));
+        }
+        Ok(d_hint)
+    } else {
+        Ok(d_max)
+    }
+}
+
 /// Parse LIBSVM text. `d_hint` forces the feature dimension (0 = infer
-/// from the max index seen).
+/// from the max index seen). Whole-text oracle: the streaming path
+/// ([`parse_reader`] + [`CscSink`]) must build a bit-identical dataset.
 pub fn parse_str(name: &str, text: &str, d_hint: usize) -> Result<Dataset> {
     let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
     let mut y: Vec<f64> = Vec::new();
@@ -67,45 +201,45 @@ pub fn parse_str(name: &str, text: &str, d_hint: usize) -> Result<Dataset> {
         }
     }
     let n = y.len();
-    if n == 0 {
-        return Err(CaError::Dataset(format!("{name}: no samples")));
-    }
-    let d = if d_hint > 0 {
-        if d_max > d_hint {
-            return Err(CaError::Dataset(format!(
-                "{name}: feature index {d_max} exceeds d_hint {d_hint}"
-            )));
-        }
-        d_hint
-    } else {
-        d_max
-    };
+    let d = resolve_d(name, n, d_max, d_hint)?;
     let x = CscMatrix::from_triplets(d, n, &triplets)?;
-    Ok(Dataset { name: name.to_string(), x, y })
+    Ok(Dataset::in_mem(name, x, y))
 }
 
-/// Load a LIBSVM file, transparently gunzipping `.gz`.
+/// Load a LIBSVM file in one streaming pass (peak memory O(line) plus
+/// the growing CSC arrays), transparently gunzipping `.gz`.
 pub fn load_file(path: &Path, d_hint: usize) -> Result<Dataset> {
     let name = path
         .file_stem()
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_else(|| "dataset".into());
     let file = std::fs::File::open(path)?;
-    let mut text = String::new();
-    if path.extension().map(|e| e == "gz").unwrap_or(false) {
-        let mut gz = flate2::read::GzDecoder::new(BufReader::new(file));
-        gz.read_to_string(&mut text)?;
+    let mut sink = CscSink { builder: CscBuilder::new(0, 0), y: Vec::new() };
+    let d_max = if path.extension().map(|e| e == "gz").unwrap_or(false) {
+        let gz = flate2::read::GzDecoder::new(BufReader::new(file));
+        parse_reader(&name, BufReader::new(gz), &mut sink)?
     } else {
-        let mut reader = BufReader::new(file);
-        reader.read_to_string(&mut text)?;
-    }
-    parse_str(&name, &text, d_hint)
+        parse_reader(&name, BufReader::new(file), &mut sink)?
+    };
+    let d = resolve_d(&name, sink.y.len(), d_max, d_hint)?;
+    let x = sink.builder.finish(d)?;
+    Ok(Dataset::in_mem(name, x, sink.y))
 }
 
-/// Look for `data/<name>` (or `.txt` / `.libsvm` / `.gz` variants) from
-/// the repo root; returns the first that exists.
+/// Look for `data/<name>` from the repo root. A sealed column store
+/// (`data/<name>.cacs/` with a manifest) is preferred over every text
+/// variant; then the plain / `.txt` / `.libsvm` / gz candidates in
+/// order. Returns the first that exists.
 pub fn find_local_file(name: &str) -> Option<std::path::PathBuf> {
-    let base = std::path::Path::new("data");
+    find_local_file_in(std::path::Path::new("data"), name)
+}
+
+/// [`find_local_file`] with an explicit base directory (testable form).
+pub fn find_local_file_in(base: &Path, name: &str) -> Option<std::path::PathBuf> {
+    let store = base.join(format!("{name}{STORE_DIR_SUFFIX}"));
+    if store.join("manifest.json").is_file() {
+        return Some(store);
+    }
     for cand in [
         format!("{name}"),
         format!("{name}.txt"),
@@ -124,30 +258,20 @@ pub fn find_local_file(name: &str) -> Option<std::path::PathBuf> {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    const SAMPLE: &str = "\
-1.5 1:0.5 3:2.0
--1 2:1.0   # trailing comment
-# full comment line
-
-0 1:−0
-2.25 1:1 2:2 3:3
-";
+    use std::io::Cursor;
 
     #[test]
     fn parses_basic_file() {
-        // Note: line '0 1:−0' has a unicode minus — invalid value, so make a clean test here.
         let text = "1.5 1:0.5 3:2.0\n-1 2:1.0 # c\n\n2.25 1:1 2:2 3:3\n";
         let ds = parse_str("toy", text, 0).unwrap();
         assert_eq!(ds.n(), 3);
         assert_eq!(ds.d(), 3);
         assert_eq!(ds.y, vec![1.5, -1.0, 2.25]);
-        let dense = ds.x.to_dense();
+        let dense = ds.x.to_dense().unwrap();
         assert_eq!(dense.get(0, 0), 0.5);
         assert_eq!(dense.get(2, 0), 2.0);
         assert_eq!(dense.get(1, 1), 1.0);
         assert_eq!(dense.get(2, 2), 3.0);
-        let _ = SAMPLE;
     }
 
     #[test]
@@ -165,12 +289,36 @@ mod tests {
         assert!(parse_str("t", "1 5\n", 0).is_err(), "missing colon");
         assert!(parse_str("t", "", 0).is_err(), "empty");
         assert!(parse_str("t", "1 1:x\n", 0).is_err(), "bad value");
+        // '−' below is U+2212 (unicode minus), not an ASCII hyphen:
+        // f64::parse must reject it, streaming and oracle alike.
+        assert!(parse_str("t", "0 1:−0\n", 0).is_err(), "unicode minus");
+        let mut sink = CscSink { builder: CscBuilder::new(0, 0), y: Vec::new() };
+        assert!(parse_reader("t", Cursor::new("0 1:−0\n"), &mut sink).is_err());
     }
 
     #[test]
     fn explicit_zero_values_dropped() {
         let ds = parse_str("t", "1 1:0 2:3\n", 0).unwrap();
         assert_eq!(ds.x.nnz(), 1);
+        // The dropped index still counts toward the inferred dimension.
+        let ds = parse_str("t", "1 1:1 7:0\n", 0).unwrap();
+        assert_eq!(ds.d(), 7);
+    }
+
+    /// The streaming path must reproduce the oracle bit-for-bit: same
+    /// CSC structure, same values, same y, same inferred d.
+    #[test]
+    fn streaming_matches_parse_str_oracle() {
+        let text = "1.5 1:0.5 3:2.0 9:0\n-1 2:1.0 # c\n# full comment\n\n2.25 1:1 2:2 3:3\n0.5\n";
+        for d_hint in [0usize, 12] {
+            let oracle = parse_str("toy", text, d_hint).unwrap();
+            let mut sink = CscSink { builder: CscBuilder::new(0, 0), y: Vec::new() };
+            let d_max = parse_reader("toy", Cursor::new(text), &mut sink).unwrap();
+            let d = resolve_d("toy", sink.y.len(), d_max, d_hint).unwrap();
+            let x = sink.builder.finish(d).unwrap();
+            assert_eq!(Some(&x), oracle.x.as_csc(), "d_hint={d_hint}");
+            assert_eq!(sink.y, oracle.y);
+        }
     }
 
     #[test]
@@ -187,7 +335,26 @@ mod tests {
         gz.finish().unwrap();
         let ds = load_file(&path, 0).unwrap();
         assert_eq!(ds.n(), 2);
-        assert_eq!(ds.x.to_dense().get(0, 0), 2.5);
+        assert_eq!(ds.x.to_dense().unwrap().get(0, 0), 2.5);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn store_dir_preferred_over_text_variants() {
+        let base =
+            std::env::temp_dir().join(format!("ca_prox_resolve_{}", std::process::id()));
+        std::fs::remove_dir_all(&base).ok();
+        std::fs::create_dir_all(&base).unwrap();
+        std::fs::write(base.join("toy.txt"), "1 1:1\n").unwrap();
+        assert_eq!(find_local_file_in(&base, "toy"), Some(base.join("toy.txt")));
+        // A bare .cacs directory without a manifest must NOT win.
+        std::fs::create_dir_all(base.join("toy.cacs")).unwrap();
+        assert_eq!(find_local_file_in(&base, "toy"), Some(base.join("toy.txt")));
+        let mut w = ColStoreWriter::create(&base.join("toy.cacs"), "toy", 0).unwrap();
+        ColumnSink::push(&mut w, &[0], &[1.0], 1.0).unwrap();
+        w.finish(0).unwrap();
+        assert_eq!(find_local_file_in(&base, "toy"), Some(base.join("toy.cacs")));
+        assert_eq!(find_local_file_in(&base, "missing"), None);
+        std::fs::remove_dir_all(&base).ok();
     }
 }

@@ -14,12 +14,215 @@
 //! offline environment (DESIGN.md §2); [`registry`] resolves preset names
 //! to whichever source is available and supports scaling n down for
 //! laptop-sized runs.
+//!
+//! A dataset's matrix lives behind [`DataSource`]: either a fully
+//! resident [`CscMatrix`] (`InMem`) or an mmap-backed
+//! [`crate::store::ColStore`] (`Mapped`, the out-of-core path produced
+//! by `ca_prox ingest`). Both variants serve the
+//! [`ColumnRead`] seam the Gram/matvec kernels read through, and both
+//! must solve **bit-identically** — pinned by `rust/tests/colstore.rs`.
 
 pub mod libsvm;
 pub mod registry;
 pub mod synthetic;
 
+use crate::error::{CaError, Result};
+use crate::matrix::colread::{self, ColumnRead};
 use crate::matrix::csc::CscMatrix;
+use crate::matrix::dense::DenseMatrix;
+use crate::store::ColStore;
+use std::sync::Arc;
+
+/// Where a dataset's `X` actually lives.
+///
+/// `InMem` routes every access through the [`CscMatrix`] inherent
+/// methods — existing in-RAM solves are literally unchanged. `Mapped`
+/// reads columns zero-copy out of the mapped chunks, validating each
+/// chunk on first touch; any access can therefore surface a
+/// corrupt-store dataset error, which is why the column accessors are
+/// fallible on this type even though the in-RAM arm cannot fail.
+#[derive(Clone, Debug)]
+pub enum DataSource {
+    /// Fully resident CSC matrix.
+    InMem(CscMatrix),
+    /// mmap-backed column store (shared: shards clone the handle).
+    Mapped(Arc<ColStore>),
+}
+
+impl DataSource {
+    /// Feature count d.
+    pub fn rows(&self) -> usize {
+        match self {
+            DataSource::InMem(m) => m.rows(),
+            DataSource::Mapped(s) => s.rows(),
+        }
+    }
+
+    /// Sample count n.
+    pub fn cols(&self) -> usize {
+        match self {
+            DataSource::InMem(m) => m.cols(),
+            DataSource::Mapped(s) => s.cols(),
+        }
+    }
+
+    /// Total stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        match self {
+            DataSource::InMem(m) => m.nnz(),
+            DataSource::Mapped(s) => s.nnz(),
+        }
+    }
+
+    /// Density in [0,1].
+    pub fn density(&self) -> f64 {
+        match self {
+            DataSource::InMem(m) => m.density(),
+            DataSource::Mapped(s) => ColumnRead::density(s.as_ref()),
+        }
+    }
+
+    /// The in-RAM matrix, when this source is resident.
+    pub fn as_csc(&self) -> Option<&CscMatrix> {
+        match self {
+            DataSource::InMem(m) => Some(m),
+            DataSource::Mapped(_) => None,
+        }
+    }
+
+    /// True when backed by the mmap-backed column store.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, DataSource::Mapped(_))
+    }
+
+    /// nnz of one column.
+    pub fn col_nnz(&self, c: usize) -> Result<usize> {
+        match self {
+            DataSource::InMem(m) => {
+                if c >= m.cols() {
+                    return Err(CaError::Shape(format!("column {c} out of {}", m.cols())));
+                }
+                Ok(m.col_nnz(c))
+            }
+            DataSource::Mapped(s) => s.col_nnz(c),
+        }
+    }
+
+    /// `(row indices, values)` of one column.
+    pub fn col(&self, c: usize) -> Result<(&[usize], &[f64])> {
+        match self {
+            DataSource::InMem(m) => {
+                if c >= m.cols() {
+                    return Err(CaError::Shape(format!("column {c} out of {}", m.cols())));
+                }
+                Ok(m.col(c))
+            }
+            DataSource::Mapped(s) => s.col(c),
+        }
+    }
+
+    /// Hint that `cols` are about to be read (madvise sweep when mapped).
+    pub fn prefetch_cols(&self, cols: &[usize]) {
+        if let DataSource::Mapped(s) = self {
+            s.prefetch_cols(cols);
+        }
+    }
+
+    /// `y = X·v` (allocating).
+    pub fn matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
+        match self {
+            DataSource::InMem(m) => m.matvec(v),
+            DataSource::Mapped(s) => {
+                let mut y = vec![0.0; s.rows()];
+                colread::matvec_into(s.as_ref(), v, &mut y)?;
+                Ok(y)
+            }
+        }
+    }
+
+    /// Non-allocating `y = X·v` (y length d, overwritten).
+    pub fn matvec_into(&self, v: &[f64], y: &mut [f64]) -> Result<()> {
+        match self {
+            DataSource::InMem(m) => m.matvec_into(v, y),
+            DataSource::Mapped(s) => colread::matvec_into(s.as_ref(), v, y),
+        }
+    }
+
+    /// `y = Xᵀ·w` (allocating).
+    pub fn matvec_t(&self, w: &[f64]) -> Result<Vec<f64>> {
+        match self {
+            DataSource::InMem(m) => m.matvec_t(w),
+            DataSource::Mapped(s) => {
+                let mut y = vec![0.0; s.cols()];
+                colread::matvec_t_into(s.as_ref(), w, &mut y)?;
+                Ok(y)
+            }
+        }
+    }
+
+    /// Non-allocating `y = Xᵀ·w` (y length n, overwritten).
+    pub fn matvec_t_into(&self, w: &[f64], y: &mut [f64]) -> Result<()> {
+        match self {
+            DataSource::InMem(m) => m.matvec_t_into(w, y),
+            DataSource::Mapped(s) => colread::matvec_t_into(s.as_ref(), w, y),
+        }
+    }
+
+    /// Materialize a column subset as an in-RAM [`CscMatrix`] (columns
+    /// reindexed in the order given) — scale-n truncation and shard
+    /// materialization.
+    pub fn gather_cols(&self, idx: &[usize]) -> Result<CscMatrix> {
+        match self {
+            DataSource::InMem(m) => {
+                for &c in idx {
+                    if c >= m.cols() {
+                        return Err(CaError::Shape(format!("column {c} out of {}", m.cols())));
+                    }
+                }
+                Ok(m.gather_cols(idx))
+            }
+            DataSource::Mapped(s) => s.gather_cols(idx),
+        }
+    }
+
+    /// Fully materialize as a dense matrix (tests/benches only — defeats
+    /// the out-of-core point for mapped stores).
+    pub fn to_dense(&self) -> Result<DenseMatrix> {
+        match self {
+            DataSource::InMem(m) => Ok(m.to_dense()),
+            DataSource::Mapped(s) => {
+                let all: Vec<usize> = (0..s.cols()).collect();
+                Ok(s.gather_cols(&all)?.to_dense())
+            }
+        }
+    }
+}
+
+impl ColumnRead for DataSource {
+    fn rows(&self) -> usize {
+        DataSource::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        DataSource::cols(self)
+    }
+
+    fn nnz(&self) -> usize {
+        DataSource::nnz(self)
+    }
+
+    fn col_nnz(&self, c: usize) -> Result<usize> {
+        DataSource::col_nnz(self, c)
+    }
+
+    fn col(&self, c: usize) -> Result<(&[usize], &[f64])> {
+        DataSource::col(self, c)
+    }
+
+    fn prefetch_cols(&self, cols: &[usize]) {
+        DataSource::prefetch_cols(self, cols)
+    }
+}
 
 /// A regression dataset: `X ∈ R^{d×n}` (rows = features, columns =
 /// samples, the paper's layout) and labels `y ∈ R^n`.
@@ -27,13 +230,19 @@ use crate::matrix::csc::CscMatrix;
 pub struct Dataset {
     /// Name (for reports).
     pub name: String,
-    /// Data matrix, d × n.
-    pub x: CscMatrix,
+    /// Data matrix, d × n, in RAM or mapped from a column store.
+    pub x: DataSource,
     /// Labels, length n.
     pub y: Vec<f64>,
 }
 
 impl Dataset {
+    /// Wrap an in-RAM matrix — the constructor every resident loader
+    /// and generator uses.
+    pub fn in_mem(name: impl Into<String>, x: CscMatrix, y: Vec<f64>) -> Dataset {
+        Dataset { name: name.into(), x: DataSource::InMem(x), y }
+    }
+
     /// Feature count d.
     pub fn d(&self) -> usize {
         self.x.rows()
@@ -58,9 +267,24 @@ mod tests {
     #[test]
     fn dataset_accessors() {
         let x = CscMatrix::from_dense(&DenseMatrix::from_fn(3, 5, |r, c| (r + c) as f64));
-        let ds = Dataset { name: "t".into(), x, y: vec![0.0; 5] };
+        let ds = Dataset::in_mem("t", x, vec![0.0; 5]);
         assert_eq!(ds.d(), 3);
         assert_eq!(ds.n(), 5);
         assert!(ds.density() > 0.8);
+        assert!(ds.x.as_csc().is_some());
+        assert!(!ds.x.is_mapped());
+    }
+
+    #[test]
+    fn in_mem_source_guards_out_of_range_columns() {
+        let x = CscMatrix::from_dense(&DenseMatrix::from_fn(2, 3, |r, c| (r * 3 + c) as f64));
+        let src = DataSource::InMem(x);
+        assert!(src.col(2).is_ok());
+        assert!(src.col(3).is_err());
+        assert!(src.col_nnz(3).is_err());
+        assert!(src.gather_cols(&[0, 3]).is_err());
+        src.prefetch_cols(&[0, 1]); // no-op in RAM
+        let d = src.to_dense().unwrap();
+        assert_eq!((d.rows(), d.cols()), (2, 3));
     }
 }

@@ -1,12 +1,16 @@
 //! Named dataset presets matching the paper's Table II, with optional
 //! down-scaling of n for laptop-sized runs.
 //!
-//! Resolution order per preset: a real LIBSVM file under `data/` if one
-//! exists, otherwise the matched synthetic generator (DESIGN.md §2).
+//! Resolution order per preset: an ingested column store
+//! (`data/<name>.cacs/`) wins first — it opens mmap-backed with no
+//! parse cost; then a real LIBSVM file under `data/`; otherwise the
+//! matched synthetic generator (DESIGN.md §2).
 
 use crate::datasets::synthetic::{generate, SyntheticSpec};
 use crate::datasets::{libsvm, Dataset};
 use crate::error::{CaError, Result};
+use crate::store::ColStore;
+use std::path::Path;
 
 /// One preset row of the paper's Table II.
 #[derive(Clone, Copy, Debug)]
@@ -43,27 +47,42 @@ pub fn preset(name: &str) -> Result<Preset> {
         })
 }
 
+/// Load a local dataset: a `.cacs` directory opens as a mapped column
+/// store (its recorded d must equal the preset's), anything else parses
+/// as LIBSVM with `d` as the hint. Truncation to `n` samples (the
+/// scale-n laptop path) materializes the kept columns in RAM.
+fn load_local(path: &Path, d: usize, n: usize) -> Result<Dataset> {
+    let mut ds = if path.is_dir() {
+        let ds = ColStore::open_dataset(path)?;
+        if ds.d() != d {
+            let (name, have) = (ds.name.clone(), ds.d());
+            return Err(CaError::Dataset(format!(
+                "column store '{name}' has d={have}, preset expects d={d}"
+            )));
+        }
+        ds
+    } else {
+        libsvm::load_file(path, d)?
+    };
+    if ds.n() > n {
+        let keep: Vec<usize> = (0..n).collect();
+        ds = Dataset::in_mem(ds.name.clone(), ds.x.gather_cols(&keep)?, ds.y[..n].to_vec());
+    }
+    Ok(ds)
+}
+
 /// Load a preset dataset. `scale_n` caps the sample count (None = the
 /// paper's full n); `seed` drives the synthetic generator.
 ///
-/// If `data/<name>*` exists it is parsed as LIBSVM (truncated to
-/// `scale_n` samples); otherwise a synthetic problem with matched
-/// (d, density) is generated.
+/// If `data/<name>.cacs/` or `data/<name>*` exists it is used
+/// (truncated to `scale_n` samples); otherwise a synthetic problem with
+/// matched (d, density) is generated.
 pub fn load_preset(name: &str, scale_n: Option<usize>, seed: u64) -> Result<Dataset> {
     let p = preset(name)?;
     let n = scale_n.map(|s| s.min(p.n)).unwrap_or(p.n).max(1);
     if let Some(path) = libsvm::find_local_file(name) {
         log::info!("loading {name} from {}", path.display());
-        let mut ds = libsvm::load_file(&path, p.d)?;
-        if ds.n() > n {
-            let keep: Vec<usize> = (0..n).collect();
-            ds = Dataset {
-                name: ds.name.clone(),
-                x: ds.x.gather_cols(&keep),
-                y: ds.y[..n].to_vec(),
-            };
-        }
-        return Ok(ds);
+        return load_local(&path, p.d, n);
     }
     let spec = SyntheticSpec {
         d: p.d,
@@ -118,5 +137,35 @@ mod tests {
         let a = load_preset("smoke", Some(100), 5).unwrap();
         let b = load_preset("smoke", Some(100), 5).unwrap();
         assert_eq!(a.y, b.y);
+    }
+
+    /// Resolution order: a sealed `.cacs` store beats the text variant,
+    /// opens `Mapped`, enforces the preset d, and the scale-n
+    /// truncation path rematerializes in RAM.
+    #[test]
+    fn store_resolution_and_local_load() {
+        use crate::store::ColStoreWriter;
+        let base = std::env::temp_dir().join(format!("ca_prox_registry_{}", std::process::id()));
+        std::fs::remove_dir_all(&base).ok();
+        std::fs::create_dir_all(&base).unwrap();
+        std::fs::write(base.join("toy.txt"), "1 1:1\n-1 2:2\n0.5 1:3\n").unwrap();
+        let store_dir = base.join("toy.cacs");
+        let mut w = ColStoreWriter::create(&store_dir, "toy", 2).unwrap();
+        w.push_col(&[0], &[1.0], 1.0).unwrap();
+        w.push_col(&[1], &[2.0], -1.0).unwrap();
+        w.push_col(&[0], &[3.0], 0.5).unwrap();
+        w.finish(2).unwrap();
+        let found = libsvm::find_local_file_in(&base, "toy").unwrap();
+        assert_eq!(found, store_dir, "store must win over toy.txt");
+        let ds = load_local(&found, 2, 3).unwrap();
+        assert!(ds.x.is_mapped(), "full-n load stays mapped");
+        assert_eq!((ds.d(), ds.n()), (2, 3));
+        assert_eq!(ds.y, vec![1.0, -1.0, 0.5]);
+        assert!(load_local(&found, 5, 3).is_err(), "preset d mismatch must reject");
+        let cut = load_local(&found, 2, 2).unwrap();
+        assert!(!cut.x.is_mapped(), "truncation materializes in RAM");
+        assert_eq!(cut.n(), 2);
+        assert_eq!(cut.y, vec![1.0, -1.0]);
+        std::fs::remove_dir_all(&base).ok();
     }
 }

@@ -88,7 +88,7 @@ pub fn generate(spec: &SyntheticSpec, seed: u64) -> Dataset {
         y.push(dot + spec.noise * rng.next_gaussian());
     }
     let x = CscMatrix::from_triplets(spec.d, spec.n, &triplets).expect("in-bounds");
-    Dataset { name: format!("synthetic-d{}-n{}", spec.d, spec.n), x, y }
+    Dataset::in_mem(format!("synthetic-d{}-n{}", spec.d, spec.n), x, y)
 }
 
 /// The planted model used by [`generate`] for a given spec/seed — exposed
@@ -121,7 +121,7 @@ mod tests {
         };
         let a = generate(&spec, 7);
         let b = generate(&spec, 7);
-        assert_eq!(a.x, b.x);
+        assert_eq!(a.x.as_csc().unwrap(), b.x.as_csc().unwrap());
         assert_eq!(a.y, b.y);
         let c = generate(&spec, 8);
         assert_ne!(a.y, c.y);

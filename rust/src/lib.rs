@@ -76,6 +76,7 @@ pub mod sampling;
 pub mod serve;
 pub mod session;
 pub mod solvers;
+pub mod store;
 pub mod util;
 
 pub use error::{CaError, Result};
@@ -85,7 +86,7 @@ pub mod prelude {
     pub use crate::cluster::engine::SimCluster;
     pub use crate::comm::costmodel::MachineModel;
     pub use crate::comm::trace::CostTrace;
-    pub use crate::datasets::Dataset;
+    pub use crate::datasets::{DataSource, Dataset};
     pub use crate::error::{CaError, Result};
     pub use crate::grid::{Grid, PlanCache, SweepResult, SweepSpec};
     pub use crate::matrix::csc::CscMatrix;
@@ -95,5 +96,6 @@ pub mod prelude {
     };
     pub use crate::session::{Observer, Session, SolveSpec, Topology};
     pub use crate::solvers::traits::{AlgoKind, SolverConfig, SolverOutput, Stopping};
+    pub use crate::store::{ColStore, ColStoreWriter};
     pub use crate::util::rng::Rng;
 }

@@ -1,0 +1,160 @@
+//! Source-independent column access — the seam between the sampled-Gram
+//! /matvec kernels and where the matrix actually lives.
+//!
+//! [`ColumnRead`] is the one API both storage kinds serve: the in-RAM
+//! [`CscMatrix`] (infallible column slices, wrapped in `Ok`) and the
+//! mmap-backed `ColStore` (fallible: a column touch validates its chunk
+//! and can surface a corrupt-store dataset error). Kernels written
+//! against this trait — `sampled_gram_src`, the generic matvecs below —
+//! execute the *same* arithmetic in the *same* order for every source,
+//! which is what makes the `InMem` vs `Mapped` bit-identity rule hold
+//! by construction rather than by coincidence.
+//!
+//! `prefetch_cols` is the shard-aware prefetch hook: a no-op for in-RAM
+//! data, an `madvise(WILLNEED)` sweep over the owning chunks for mapped
+//! data. Callers issue it once per sampled block before gathering.
+
+use crate::error::{CaError, Result};
+use crate::matrix::csc::CscMatrix;
+
+/// Column-range read access to a d×n sparse matrix.
+pub trait ColumnRead {
+    /// Number of rows (features, d).
+    fn rows(&self) -> usize;
+    /// Number of columns (samples, n).
+    fn cols(&self) -> usize;
+    /// Total stored non-zeros.
+    fn nnz(&self) -> usize;
+    /// nnz of one column.
+    fn col_nnz(&self, c: usize) -> Result<usize>;
+    /// `(row indices, values)` of one column.
+    fn col(&self, c: usize) -> Result<(&[usize], &[f64])>;
+    /// Hint that `cols` are about to be read (default: no-op).
+    fn prefetch_cols(&self, _cols: &[usize]) {}
+
+    /// Density in [0,1].
+    fn density(&self) -> f64 {
+        if self.rows() * self.cols() == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows() * self.cols()) as f64
+    }
+}
+
+impl ColumnRead for CscMatrix {
+    fn rows(&self) -> usize {
+        CscMatrix::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        CscMatrix::cols(self)
+    }
+
+    fn nnz(&self) -> usize {
+        CscMatrix::nnz(self)
+    }
+
+    fn col_nnz(&self, c: usize) -> Result<usize> {
+        Ok(CscMatrix::col_nnz(self, c))
+    }
+
+    fn col(&self, c: usize) -> Result<(&[usize], &[f64])> {
+        Ok(CscMatrix::col(self, c))
+    }
+}
+
+/// Non-allocating `y = X·v` (y length d, overwritten). Same loop, same
+/// order as [`CscMatrix::matvec_into`] — bit-identical for any source.
+pub fn matvec_into<C: ColumnRead + ?Sized>(x: &C, v: &[f64], y: &mut [f64]) -> Result<()> {
+    if v.len() != x.cols() || y.len() != x.rows() {
+        return Err(CaError::Shape(format!(
+            "matvec: X is {}x{}, v has {}, y has {}",
+            x.rows(),
+            x.cols(),
+            v.len(),
+            y.len()
+        )));
+    }
+    y.fill(0.0);
+    for c in 0..x.cols() {
+        let vc = v[c];
+        if vc == 0.0 {
+            continue;
+        }
+        let (ri, vs) = x.col(c)?;
+        for (&r, &xv) in ri.iter().zip(vs) {
+            y[r] += xv * vc;
+        }
+    }
+    Ok(())
+}
+
+/// Non-allocating `y = Xᵀ·w` (y length n, overwritten). Same loop, same
+/// order as [`CscMatrix::matvec_t_into`] — bit-identical for any source.
+pub fn matvec_t_into<C: ColumnRead + ?Sized>(x: &C, w: &[f64], y: &mut [f64]) -> Result<()> {
+    if w.len() != x.rows() || y.len() != x.cols() {
+        return Err(CaError::Shape(format!(
+            "matvec_t: X is {}x{}, w has {}, y has {}",
+            x.rows(),
+            x.cols(),
+            w.len(),
+            y.len()
+        )));
+    }
+    for (c, slot) in y.iter_mut().enumerate() {
+        let (ri, vs) = x.col(c)?;
+        let mut acc = 0.0;
+        for (&r, &xv) in ri.iter().zip(vs) {
+            acc += xv * w[r];
+        }
+        *slot = acc;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::dense::DenseMatrix;
+
+    fn sample() -> CscMatrix {
+        CscMatrix::from_dense(
+            &DenseMatrix::from_fn(4, 6, |r, c| {
+                if (r * 5 + c) % 3 == 0 {
+                    (r + 1) as f64 * 0.5 - c as f64
+                } else {
+                    0.0
+                }
+            }),
+        )
+    }
+
+    #[test]
+    fn generic_matvecs_bit_match_inherent_csc() {
+        let m = sample();
+        let v: Vec<f64> = (0..6).map(|i| (i as f64) - 2.5).collect();
+        let w: Vec<f64> = (0..4).map(|i| 0.3 * (i as f64) - 0.7).collect();
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        matvec_into(&m, &v, &mut a).unwrap();
+        m.matvec_into(&v, &mut b).unwrap();
+        assert_eq!(a, b, "generic matvec must be bit-identical to CSC");
+        let mut a = vec![0.0; 6];
+        let mut b = vec![0.0; 6];
+        matvec_t_into(&m, &w, &mut a).unwrap();
+        m.matvec_t_into(&w, &mut b).unwrap();
+        assert_eq!(a, b, "generic matvec_t must be bit-identical to CSC");
+    }
+
+    #[test]
+    fn shape_errors_match_infallible_trait_contract() {
+        let m = sample();
+        assert!(matvec_into(&m, &[1.0], &mut [0.0; 4]).is_err());
+        assert!(matvec_t_into(&m, &[1.0], &mut [0.0; 6]).is_err());
+        assert_eq!(ColumnRead::col_nnz(&m, 0).unwrap(), CscMatrix::col_nnz(&m, 0));
+        let got = ColumnRead::col(&m, 1).unwrap();
+        assert_eq!(got, CscMatrix::col(&m, 1));
+        assert!((ColumnRead::density(&m) - m.density()).abs() < 1e-15);
+        m.prefetch_cols(&[0, 1]); // default no-op
+    }
+}

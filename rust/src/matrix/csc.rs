@@ -222,6 +222,76 @@ impl CscMatrix {
     }
 }
 
+/// Append-only CSC assembly for streaming producers (the libsvm line
+/// parser, column-store gathers): columns arrive left to right with
+/// already-sorted rows, so no triplet sort/dedup pass is needed and
+/// values land bit-exactly as given (zeros included — dropping them is
+/// the producer's business).
+#[derive(Clone, Debug)]
+pub struct CscBuilder {
+    colptr: Vec<usize>,
+    rowidx: Vec<usize>,
+    values: Vec<f64>,
+    max_row: usize,
+}
+
+impl CscBuilder {
+    /// Builder with capacity hints (either may be 0).
+    pub fn new(cols_hint: usize, nnz_hint: usize) -> Self {
+        let mut colptr = Vec::with_capacity(cols_hint + 1);
+        colptr.push(0);
+        CscBuilder {
+            colptr,
+            rowidx: Vec::with_capacity(nnz_hint),
+            values: Vec::with_capacity(nnz_hint),
+            max_row: 0,
+        }
+    }
+
+    /// Columns appended so far.
+    pub fn cols(&self) -> usize {
+        self.colptr.len() - 1
+    }
+
+    /// Append one column; rows must be strictly increasing.
+    pub fn push_col(&mut self, rows: &[usize], vals: &[f64]) -> Result<()> {
+        if rows.len() != vals.len() {
+            let (r, v) = (rows.len(), vals.len());
+            return Err(CaError::Shape(format!("column has {r} rows but {v} values")));
+        }
+        let mut prev: Option<usize> = None;
+        for &r in rows {
+            if prev.is_some_and(|p| r <= p) {
+                return Err(CaError::Shape("column rows must be strictly increasing".into()));
+            }
+            prev = Some(r);
+        }
+        self.rowidx.extend_from_slice(rows);
+        self.values.extend_from_slice(vals);
+        if let Some(&last) = rows.last() {
+            self.max_row = self.max_row.max(last + 1);
+        }
+        self.colptr.push(self.rowidx.len());
+        Ok(())
+    }
+
+    /// Tightest row count that can hold the appended data.
+    pub fn min_rows(&self) -> usize {
+        self.max_row
+    }
+
+    /// Seal into a [`CscMatrix`] with `rows` rows (≥ every appended row
+    /// index; pass [`CscBuilder::min_rows`] for the tight fit).
+    pub fn finish(self, rows: usize) -> Result<CscMatrix> {
+        if self.max_row > rows {
+            let seen = self.max_row;
+            return Err(CaError::Shape(format!("row index {seen} does not fit {rows} rows")));
+        }
+        let cols = self.colptr.len() - 1;
+        Ok(CscMatrix { rows, cols, colptr: self.colptr, rowidx: self.rowidx, values: self.values })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -19,8 +19,11 @@
 //! implements the nnz-balanced column partitioning assumed in §III of
 //! the paper; [`vecmath`] is the runtime-dispatched vectorized
 //! elementwise layer (soft-threshold, prox/momentum steps, reductions)
-//! the solvers' per-iteration O(d) hot paths ride on.
+//! the solvers' per-iteration O(d) hot paths ride on; [`colread`] is
+//! the source-independent column-access seam those kernels read
+//! through, serving both in-RAM CSC and the mmap-backed column store.
 
+pub mod colread;
 pub mod csc;
 pub mod csr;
 pub mod dense;

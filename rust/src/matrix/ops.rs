@@ -26,6 +26,7 @@
 //! switches. `tests/gemm_kernels.rs` pins this.
 
 use crate::error::{CaError, Result};
+use crate::matrix::colread::ColumnRead;
 use crate::matrix::csc::CscMatrix;
 use crate::matrix::dense::DenseMatrix;
 use crate::matrix::gemm;
@@ -318,7 +319,11 @@ pub fn sampled_gram_dense_naive(
     Ok(flops)
 }
 
-/// Accumulate the sampled Gram contribution of a **CSC sparse** shard.
+/// Accumulate the sampled Gram contribution of a **column-sparse**
+/// shard read through the [`ColumnRead`] seam — the one kernel body
+/// shared by the in-RAM CSC path and the mmap-backed column store,
+/// which is what makes the `InMem` vs `Mapped` bit-identity rule hold
+/// by construction.
 ///
 /// Three execution regimes, selected per call from the sampled panel's
 /// structure (the reported flop count is regime-independent — it is the
@@ -338,8 +343,14 @@ pub fn sampled_gram_dense_naive(
 ///    sample amortizes the `d²/2` mirror ([`MIRROR_WORK_FACTOR`]).
 /// 3. **Scatter, double-write** — tiny samples where the mirror would
 ///    dominate the `O(Σ nnz²)` work.
-pub fn sampled_gram_csc(
-    x: &CscMatrix,
+///
+/// Regime selection depends only on `(d, s, panel nnz)` — never on the
+/// storage backend — so both sources run the same arithmetic in the
+/// same order. After validating `idx`, the kernel issues one
+/// `prefetch_cols` hint (an madvise sweep for mapped stores, a no-op
+/// in RAM) before touching column data.
+pub fn sampled_gram_src<C: ColumnRead + ?Sized>(
+    x: &C,
     y: &[f64],
     idx: &[usize],
     inv_m: f64,
@@ -361,12 +372,13 @@ pub fn sampled_gram_csc(
     if idx.is_empty() {
         return Ok(0);
     }
+    x.prefetch_cols(idx);
     let s = idx.len();
     // Analytic flop count — the same in every regime (see module docs).
     let mut flops = 0u64;
     let mut nnz_panel = 0u64;
     for &c in idx {
-        let nz = x.col_nnz(c) as u64;
+        let nz = x.col_nnz(c)? as u64;
         nnz_panel += nz;
         flops += nz * (nz + 1) + 2 * nz;
     }
@@ -379,7 +391,7 @@ pub fn sampled_gram_csc(
     {
         let mut panel = vec![0.0f64; d * s];
         for (t, &c) in idx.iter().enumerate() {
-            let (ri, vs) = x.col(c);
+            let (ri, vs) = x.col(c)?;
             for (&i, &v) in ri.iter().zip(vs) {
                 panel[i * s + t] = v;
             }
@@ -393,7 +405,7 @@ pub fn sampled_gram_csc(
     // Regimes 2/3: scatter over the stored nonzeros only.
     let mirror = s * MIRROR_WORK_FACTOR >= d;
     for &c in idx {
-        let (ri, vs) = x.col(c);
+        let (ri, vs) = x.col(c)?;
         let nnz = ri.len();
         for a in 0..nnz {
             let ia = ri[a];
@@ -428,17 +440,34 @@ pub fn sampled_gram_csc(
     Ok(flops)
 }
 
-/// Full-batch Gram (all columns, scale 1/n) — used by the batch baselines
-/// and the reference solver. Returns (GramBlock, flops).
-pub fn full_gram_csc(x: &CscMatrix, y: &[f64]) -> Result<(GramBlock, u64)> {
+/// CSC entry point — a thin wrapper over [`sampled_gram_src`] kept for
+/// the many in-RAM call sites and the pinned regression tests.
+pub fn sampled_gram_csc(
+    x: &CscMatrix,
+    y: &[f64],
+    idx: &[usize],
+    inv_m: f64,
+    g: &mut [f64],
+    r: &mut [f64],
+) -> Result<u64> {
+    sampled_gram_src(x, y, idx, inv_m, g, r)
+}
+
+/// Full-batch Gram (all columns, scale 1/n) over any [`ColumnRead`]
+/// source — used by the batch baselines and the reference solver.
+/// Returns (GramBlock, flops).
+pub fn full_gram_src<C: ColumnRead + ?Sized>(x: &C, y: &[f64]) -> Result<(GramBlock, u64)> {
     let idx: Vec<usize> = (0..x.cols()).collect();
     let mut blk = GramBlock::zeros(x.rows());
     let inv_n = 1.0 / x.cols().max(1) as f64;
-    let d = x.rows();
     let (g, r) = blk.parts_mut();
-    let flops = sampled_gram_csc(x, y, &idx, inv_n, g, r)?;
-    let _ = d;
+    let flops = sampled_gram_src(x, y, &idx, inv_n, g, r)?;
     Ok((blk, flops))
+}
+
+/// CSC entry point for [`full_gram_src`].
+pub fn full_gram_csc(x: &CscMatrix, y: &[f64]) -> Result<(GramBlock, u64)> {
+    full_gram_src(x, y)
 }
 
 #[cfg(test)]

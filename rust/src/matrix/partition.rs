@@ -53,14 +53,15 @@ impl ColumnPartition {
     }
 }
 
-/// Split columns into `p` contiguous ranges with approximately equal nnz.
-///
-/// Walks columns left to right, cutting when the running nnz reaches the
-/// ideal per-part share. Every part is non-empty when `n ≥ p`.
-pub fn contiguous_by_nnz(x: &CscMatrix, p: usize) -> ColumnPartition {
-    let n = x.cols();
+/// Weight-slice form of [`contiguous_by_nnz`]: `w[c]` is column c's nnz.
+/// This is the one implementation both storage backends use — an in-RAM
+/// matrix hands over its column pointers, a mapped column store its
+/// manifest-derived per-column counts — so a dataset partitions
+/// identically wherever it lives.
+pub fn contiguous_by_nnz_weights(w: &[usize], p: usize) -> ColumnPartition {
+    let n = w.len();
     assert!(p >= 1);
-    let total: usize = (0..n).map(|c| x.col_nnz(c)).sum();
+    let total: usize = w.iter().sum();
     let mut owner = vec![0usize; n];
     if p == 1 || n == 0 {
         return ColumnPartition::from_owner(p, owner);
@@ -79,18 +80,27 @@ pub fn contiguous_by_nnz(x: &CscMatrix, p: usize) -> ColumnPartition {
             part += 1;
         }
         owner[c] = part;
-        acc += x.col_nnz(c);
+        acc += w[c];
     }
     ColumnPartition::from_owner(p, owner)
 }
 
-/// Greedy longest-processing-time assignment: sort columns by nnz
-/// descending, place each on the currently lightest part.
-pub fn greedy_by_nnz(x: &CscMatrix, p: usize) -> ColumnPartition {
-    let n = x.cols();
+/// Split columns into `p` contiguous ranges with approximately equal nnz.
+///
+/// Walks columns left to right, cutting when the running nnz reaches the
+/// ideal per-part share. Every part is non-empty when `n ≥ p`.
+pub fn contiguous_by_nnz(x: &CscMatrix, p: usize) -> ColumnPartition {
+    let w: Vec<usize> = (0..x.cols()).map(|c| x.col_nnz(c)).collect();
+    contiguous_by_nnz_weights(&w, p)
+}
+
+/// Weight-slice form of [`greedy_by_nnz`] (see
+/// [`contiguous_by_nnz_weights`] for why the weights are a slice).
+pub fn greedy_by_nnz_weights(w: &[usize], p: usize) -> ColumnPartition {
+    let n = w.len();
     assert!(p >= 1);
     let mut cols: Vec<usize> = (0..n).collect();
-    cols.sort_by_key(|&c| std::cmp::Reverse(x.col_nnz(c).max(1)));
+    cols.sort_by_key(|&c| std::cmp::Reverse(w[c].max(1)));
     let mut load = vec![0usize; p];
     let mut count = vec![0usize; p];
     let mut owner = vec![0usize; n];
@@ -104,10 +114,17 @@ pub fn greedy_by_nnz(x: &CscMatrix, p: usize) -> ColumnPartition {
             }
         }
         owner[c] = best;
-        load[best] += x.col_nnz(c).max(1);
+        load[best] += w[c].max(1);
         count[best] += 1;
     }
     ColumnPartition::from_owner(p, owner)
+}
+
+/// Greedy longest-processing-time assignment: sort columns by nnz
+/// descending, place each on the currently lightest part.
+pub fn greedy_by_nnz(x: &CscMatrix, p: usize) -> ColumnPartition {
+    let w: Vec<usize> = (0..x.cols()).map(|c| x.col_nnz(c)).collect();
+    greedy_by_nnz_weights(&w, p)
 }
 
 #[cfg(test)]

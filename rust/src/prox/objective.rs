@@ -8,11 +8,16 @@
 //! where `w_op` comes from the high-accuracy reference solver.
 
 use crate::error::Result;
-use crate::matrix::csc::CscMatrix;
+use crate::matrix::colread::{self, ColumnRead};
 use crate::matrix::dense::{norm1, norm2};
 use crate::matrix::vecmath;
 
-/// LASSO problem objective over a CSC data matrix.
+/// LASSO problem objective over any column-sparse data matrix.
+///
+/// Every method is generic over [`ColumnRead`], so the batch solvers
+/// evaluate the same arithmetic whether `X` is a resident
+/// [`crate::matrix::csc::CscMatrix`], a [`crate::datasets::DataSource`],
+/// or an mmap-backed store — one code path, bit-identical results.
 #[derive(Clone, Debug)]
 pub struct LassoObjective {
     /// λ regularization weight.
@@ -27,36 +32,36 @@ impl LassoObjective {
 
     /// Smooth part `f(w) = (1/2n)‖Xᵀw − y‖²` (allocates; per-iteration
     /// callers use [`Self::smooth_with`] with a reused residual buffer).
-    pub fn smooth(&self, x: &CscMatrix, y: &[f64], w: &[f64]) -> Result<f64> {
+    pub fn smooth<C: ColumnRead + ?Sized>(&self, x: &C, y: &[f64], w: &[f64]) -> Result<f64> {
         let mut resid = vec![0.0; x.cols()];
         self.smooth_with(x, y, w, &mut resid)
     }
 
     /// Non-allocating smooth part: `resid` is a length-n scratch buffer
     /// that is overwritten with `Xᵀw` along the way.
-    pub fn smooth_with(
+    pub fn smooth_with<C: ColumnRead + ?Sized>(
         &self,
-        x: &CscMatrix,
+        x: &C,
         y: &[f64],
         w: &[f64],
         resid: &mut [f64],
     ) -> Result<f64> {
         let n = x.cols().max(1) as f64;
-        x.matvec_t_into(w, resid)?;
+        colread::matvec_t_into(x, w, resid)?;
         Ok(0.5 / n * vecmath::sum_sq_diff(resid, y))
     }
 
     /// Full objective `F(w) = f(w) + λ‖w‖₁` (allocates; per-iteration
     /// callers use [`Self::value_with`]).
-    pub fn value(&self, x: &CscMatrix, y: &[f64], w: &[f64]) -> Result<f64> {
+    pub fn value<C: ColumnRead + ?Sized>(&self, x: &C, y: &[f64], w: &[f64]) -> Result<f64> {
         Ok(self.smooth(x, y, w)? + self.lambda * norm1(w))
     }
 
     /// Non-allocating full objective with a caller-provided length-n
     /// scratch buffer.
-    pub fn value_with(
+    pub fn value_with<C: ColumnRead + ?Sized>(
         &self,
-        x: &CscMatrix,
+        x: &C,
         y: &[f64],
         w: &[f64],
         resid: &mut [f64],
@@ -66,7 +71,12 @@ impl LassoObjective {
 
     /// Exact full-batch gradient `∇f(w) = (1/n)(XXᵀw − Xy)` (allocates;
     /// per-iteration callers use [`Self::gradient_into`]).
-    pub fn gradient(&self, x: &CscMatrix, y: &[f64], w: &[f64]) -> Result<Vec<f64>> {
+    pub fn gradient<C: ColumnRead + ?Sized>(
+        &self,
+        x: &C,
+        y: &[f64],
+        w: &[f64],
+    ) -> Result<Vec<f64>> {
         let mut resid = vec![0.0; x.cols()];
         let mut g = vec![0.0; x.rows()];
         self.gradient_into(x, y, w, &mut resid, &mut g)?;
@@ -76,18 +86,18 @@ impl LassoObjective {
     /// Non-allocating exact gradient: `resid` (length n) and `g`
     /// (length d) are caller-provided buffers, both overwritten. This is
     /// the form the solvers call every iteration.
-    pub fn gradient_into(
+    pub fn gradient_into<C: ColumnRead + ?Sized>(
         &self,
-        x: &CscMatrix,
+        x: &C,
         y: &[f64],
         w: &[f64],
         resid: &mut [f64],
         g: &mut [f64],
     ) -> Result<()> {
         let n = x.cols().max(1) as f64;
-        x.matvec_t_into(w, resid)?;
+        colread::matvec_t_into(x, w, resid)?;
         vecmath::axpy(-1.0, y, resid);
-        x.matvec_into(resid, g)?;
+        colread::matvec_into(x, resid, g)?;
         for v in g.iter_mut() {
             *v /= n;
         }
@@ -117,6 +127,7 @@ pub fn sparsity(w: &[f64]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::matrix::csc::CscMatrix;
     use crate::matrix::dense::DenseMatrix;
 
     fn toy() -> (CscMatrix, Vec<f64>) {

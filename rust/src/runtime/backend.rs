@@ -40,7 +40,7 @@ impl GramBackend for NativeGramBackend {
         g: &mut [f64],
         r: &mut [f64],
     ) -> Result<u64> {
-        crate::matrix::ops::sampled_gram_csc(&shard.x, &shard.y, idx_local, inv_m, g, r)
+        crate::matrix::ops::sampled_gram_src(&shard.x, &shard.y, idx_local, inv_m, g, r)
     }
 
     fn name(&self) -> &'static str {
@@ -77,7 +77,7 @@ mod tests {
         let mut g2 = vec![0.0; 25];
         let mut r2 = vec![0.0; 5];
         let f2 =
-            crate::matrix::ops::sampled_gram_csc(&shard.x, &shard.y, &idx, 0.25, &mut g2, &mut r2)
+            crate::matrix::ops::sampled_gram_src(&shard.x, &shard.y, &idx, 0.25, &mut g2, &mut r2)
                 .unwrap();
         assert_eq!(f1, f2);
         assert_eq!(g1, g2);

@@ -232,7 +232,7 @@ impl GramBackend for PjrtGramBackend<'_> {
             xs.iter_mut().for_each(|v| *v = 0.0);
             ys.iter_mut().for_each(|v| *v = 0.0);
             for (slot, &c) in chunk.iter().enumerate() {
-                let (ri, vs) = shard.x.col(c);
+                let (ri, vs) = shard.x.col(c)?;
                 for (&row, &v) in ri.iter().zip(vs) {
                     xs[row * m_chunk + slot] = v as f32;
                 }

@@ -10,6 +10,7 @@
 //! `rust/tests/serve.rs`).
 
 use crate::datasets::Dataset;
+use crate::error::Result;
 use std::fmt;
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
@@ -59,14 +60,18 @@ impl Fnv {
 
 impl Fingerprint {
     /// Fingerprint a dataset by streaming over its contents — O(n + nnz)
-    /// time, O(1) extra space, no copy of the data.
-    pub fn of(ds: &Dataset) -> Fingerprint {
+    /// time, O(1) extra space, no copy of the data. Reads columns
+    /// through the [`crate::datasets::DataSource`] seam, so an
+    /// mmap-backed store hashes to exactly the same value as the in-RAM
+    /// load of the same data (a corrupt store surfaces as the dataset
+    /// error instead of a wrong fingerprint — hence the `Result`).
+    pub fn of(ds: &Dataset) -> Result<Fingerprint> {
         let mut h = Fnv::new();
         h.word(ds.d() as u64);
         h.word(ds.n() as u64);
         h.word(ds.x.nnz() as u64);
         for c in 0..ds.n() {
-            let (rows, values) = ds.x.col(c);
+            let (rows, values) = ds.x.col(c)?;
             // The per-column length delimits the streams, so moving an
             // entry between columns changes the hash even when the flat
             // rowidx/values sequences are unchanged.
@@ -81,7 +86,7 @@ impl Fingerprint {
         for &y in &ds.y {
             h.word(y.to_bits());
         }
-        Fingerprint { d: ds.d(), n: ds.n(), hash: h.finish() }
+        Ok(Fingerprint { d: ds.d(), n: ds.n(), hash: h.finish() })
     }
 }
 
@@ -113,21 +118,21 @@ mod tests {
 
     #[test]
     fn identical_content_agrees_different_content_differs() {
-        let a = Fingerprint::of(&ds(7));
-        let b = Fingerprint::of(&ds(7));
+        let a = Fingerprint::of(&ds(7)).unwrap();
+        let b = Fingerprint::of(&ds(7)).unwrap();
         assert_eq!(a, b);
-        let c = Fingerprint::of(&ds(8));
+        let c = Fingerprint::of(&ds(8)).unwrap();
         assert_ne!(a.hash, c.hash, "different generator seed must change the hash");
     }
 
     #[test]
     fn single_value_flip_changes_hash() {
         let base = ds(7);
-        let a = Fingerprint::of(&base);
+        let a = Fingerprint::of(&base).unwrap();
         let mut y2 = base.y.clone();
         y2[0] += 1e-12;
         let tampered = Dataset { name: base.name.clone(), x: base.x.clone(), y: y2 };
-        let b = Fingerprint::of(&tampered);
+        let b = Fingerprint::of(&tampered).unwrap();
         assert_eq!(a.d, b.d);
         assert_eq!(a.n, b.n);
         assert_ne!(a.hash, b.hash);

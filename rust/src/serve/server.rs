@@ -595,7 +595,7 @@ impl Server {
     /// hydrates the dataset's cache from disk (a stale or tampered file
     /// hydrates nothing — see [`PlanStore::hydrate`]).
     pub fn register_dataset(&self, ds: Dataset) -> Result<String> {
-        let fingerprint = Fingerprint::of(&ds);
+        let fingerprint = Fingerprint::of(&ds)?;
         let key = fingerprint.to_string();
         if lock(&self.inner.datasets).contains_key(&key) {
             return Ok(key);

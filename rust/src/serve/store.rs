@@ -283,7 +283,7 @@ impl PlanStore {
     /// `store_writes` counter; otherwise returns the number of entries
     /// written.
     pub fn save(&self, ds: &Dataset, cache: &PlanCache) -> Result<usize> {
-        let fp = Fingerprint::of(ds);
+        let fp = Fingerprint::of(ds)?;
         // Snapshot the epoch *before* exporting: a mutation that lands
         // mid-export may or may not be in the file, but it leaves
         // `epoch > saved_epoch`, so the next save re-writes it.
@@ -426,7 +426,7 @@ impl PlanStore {
     /// content is deterministic per fingerprint.
     pub fn hydrate(&self, ds: &Dataset, cache: &PlanCache) -> Result<HydrateReport> {
         const ATTEMPTS: usize = 3;
-        let fp = Fingerprint::of(ds);
+        let fp = Fingerprint::of(ds)?;
         let dir = self.dir_for(&fp);
         let path = self.plan_path(&fp);
         let mut rejected = None;
@@ -735,7 +735,7 @@ impl PlanStore {
     /// spilled warm vectors (used by tests and by operators resetting a
     /// poisoned cache).
     pub fn evict(&self, ds: &Dataset) -> Result<bool> {
-        let dir = self.dir_for(&Fingerprint::of(ds));
+        let dir = self.dir_for(&Fingerprint::of(ds)?);
         match std::fs::remove_dir_all(&dir) {
             Ok(()) => Ok(true),
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
@@ -828,7 +828,7 @@ mod tests {
         let mut t = CostTrace::new();
         cache_a.lipschitz(&ds, 3, &machine, &mut t).unwrap();
         a.save(&ds, &cache_a).unwrap();
-        let dir = a.dir_for(&Fingerprint::of(&ds));
+        let dir = a.dir_for(&Fingerprint::of(&ds).unwrap());
         assert!(lease_path(&dir, a.writer()).is_file());
 
         // A second writer supersedes generation 1 with generation 2 and
@@ -886,7 +886,7 @@ mod tests {
         let mut t2 = CostTrace::new();
         cache_b.lipschitz(&ds, 4, &machine, &mut t2).unwrap();
         b.save(&ds, &cache_b).unwrap();
-        let fp = Fingerprint::of(&ds);
+        let fp = Fingerprint::of(&ds).unwrap();
         std::fs::copy(b.plan_path(&fp), a.plan_path(&fp)).unwrap();
         // a's cache is unchanged, but the live file is b's and lacks
         // seed 3 — the save must reconcile instead of skipping, and the
@@ -915,9 +915,9 @@ mod tests {
         // new dataset's fingerprint directory, simulating "the data
         // changed under the same path".
         let new = ds(4);
-        let new_dir = store.dir_for(&Fingerprint::of(&new));
+        let new_dir = store.dir_for(&Fingerprint::of(&new).unwrap());
         std::fs::create_dir_all(&new_dir).unwrap();
-        std::fs::copy(store.plan_path(&Fingerprint::of(&old)), new_dir.join("plan.json"))
+        std::fs::copy(store.plan_path(&Fingerprint::of(&old).unwrap()), new_dir.join("plan.json"))
             .unwrap();
         let fresh = PlanCache::new();
         let report = store.hydrate(&new, &fresh).unwrap();
@@ -942,7 +942,7 @@ mod tests {
         cache.lipschitz(&ds, 3, &machine, &mut trace).unwrap();
         cache.reference_solution(&ds, 0.05, 1e-6, 50_000).unwrap();
         store.save(&ds, &cache).unwrap();
-        let path = store.plan_path(&Fingerprint::of(&ds));
+        let path = store.plan_path(&Fingerprint::of(&ds).unwrap());
         let full = std::fs::read_to_string(&path).unwrap();
         // Truncation → parse error → rejected.
         std::fs::write(&path, &full[..full.len() / 2]).unwrap();
@@ -1010,7 +1010,7 @@ mod tests {
         let mut t = CostTrace::new();
         cache.lipschitz(&ds, 3, &machine, &mut t).unwrap();
         store.save(&ds, &cache).unwrap();
-        let path = store.plan_path(&Fingerprint::of(&ds));
+        let path = store.plan_path(&Fingerprint::of(&ds).unwrap());
         let text = std::fs::read_to_string(&path).unwrap();
         // Overwrite the stored L̂ bit pattern with NaN: valid hex, valid
         // JSON — but hydrating it would poison every step size, so the
@@ -1034,7 +1034,7 @@ mod tests {
         let store = tmp_store("schema");
         let cache = PlanCache::new();
         store.save(&ds, &cache).unwrap();
-        let path = store.plan_path(&Fingerprint::of(&ds));
+        let path = store.plan_path(&Fingerprint::of(&ds).unwrap());
         let text = std::fs::read_to_string(&path)
             .unwrap()
             .replace("\"schema\":2", "\"schema\":3");
@@ -1048,7 +1048,7 @@ mod tests {
     fn warm_spill_round_trips_and_rejects_corruption() {
         let ds = ds(10);
         let store = tmp_store("warm");
-        let fp = Fingerprint::of(&ds);
+        let fp = Fingerprint::of(&ds).unwrap();
         let lambda_bits = 0.05f64.to_bits();
         let w: Vec<f64> = (0..ds.d()).map(|i| (i as f64) * 0.25 - 0.5).collect();
         assert_eq!(store.load_warm(&fp, ds.d(), "path", lambda_bits), WarmLoad::Missing);

@@ -474,11 +474,7 @@ mod tests {
     #[test]
     fn empty_dataset_rejected_at_build() {
         use crate::matrix::csc::CscMatrix;
-        let empty = Dataset {
-            name: "e".into(),
-            x: CscMatrix::from_triplets(0, 0, &[]).unwrap(),
-            y: vec![],
-        };
+        let empty = Dataset::in_mem("e", CscMatrix::from_triplets(0, 0, &[]).unwrap(), vec![]);
         assert!(Session::build(&empty, Topology::new(1)).is_err());
     }
 

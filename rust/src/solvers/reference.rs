@@ -10,14 +10,14 @@
 use crate::datasets::Dataset;
 use crate::error::Result;
 use crate::matrix::dense::DenseMatrix;
-use crate::matrix::ops::full_gram_csc;
+use crate::matrix::ops::full_gram_src;
 use crate::matrix::vecmath;
 use crate::prox::objective::LassoObjective;
 
 /// Estimate `L = λ_max(XXᵀ/n)` by power iteration.
 pub fn lipschitz_constant(ds: &Dataset) -> Result<f64> {
     let d = ds.d();
-    let (gram, _) = full_gram_csc(&ds.x, &ds.y)?;
+    let (gram, _) = full_gram_src(&ds.x, &ds.y)?;
     let gm = DenseMatrix::from_vec(d, d, gram.g().to_vec())?;
     let l = gm.power_iteration_sym(200, 0x0CA_5EED)?;
     Ok(if l > 0.0 { l } else { 1.0 })

@@ -1,0 +1,312 @@
+//! The `.cacs` on-disk format: schema-versioned manifest + chunk layout.
+//!
+//! A store is a directory `<name>.cacs/` with three files:
+//!
+//! ```text
+//!   manifest.json   schema, shape, chunking, per-chunk metadata
+//!   columns.bin     the CSC payload, fixed-size column-range chunks
+//!   labels.bin      n little-endian f64 bit patterns
+//! ```
+//!
+//! `columns.bin` is a sequence of chunks, every word a little-endian
+//! u64, 8-byte aligned by construction:
+//!
+//! ```text
+//!   [CHUNK_MAGIC, ncols, nnz, checksum]        4-word header
+//!   colptr[0..=ncols]                          local cumulative nnz
+//!   rowidx[0..nnz]                             row indices (u64)
+//!   values[0..nnz]                             f64 bit patterns
+//! ```
+//!
+//! The checksum is FNV-1a (the same [`Fnv`] the plan store uses) over
+//! every colptr/rowidx/value word of the chunk, stored both in-band and
+//! in the manifest — a chunk is only served after both agree with the
+//! recomputed sum and every structural invariant holds, and the
+//! manifest cross-checks shape totals so truncation or reordering of
+//! `columns.bin` is caught wholesale. u64 checksums round-trip through
+//! JSON as exactly 16 lowercase hex digits (JSON numbers are f64 and
+//! cannot hold them) — the plan-store idiom.
+
+use crate::error::{CaError, Result};
+use crate::serve::fingerprint::Fnv;
+use crate::util::json::Json;
+
+/// Manifest schema version.
+pub const COLSTORE_SCHEMA: usize = 1;
+/// First word of every chunk ("CACS" tag + format version).
+pub const CHUNK_MAGIC: u64 = 0x5343_4143_0000_0001;
+/// Header words per chunk: magic, ncols, nnz, checksum.
+pub const CHUNK_HEADER_WORDS: usize = 4;
+/// Default columns per chunk for `ca_prox ingest`.
+pub const DEFAULT_CHUNK_COLS: usize = 4096;
+/// Directory suffix for store directories (`data/<name>.cacs/`).
+pub const STORE_DIR_SUFFIX: &str = ".cacs";
+
+/// Total words one chunk occupies in `columns.bin`.
+pub fn chunk_span_words(ncols: usize, nnz: usize) -> usize {
+    CHUNK_HEADER_WORDS + (ncols + 1) + 2 * nnz
+}
+
+/// FNV-1a over a word slice — the chunk/label checksum.
+pub fn checksum_words(words: &[u64]) -> u64 {
+    let mut h = Fnv::new();
+    for &w in words {
+        h.word(w);
+    }
+    h.finish()
+}
+
+fn hex64(bits: u64) -> Json {
+    Json::Str(format!("{bits:016x}"))
+}
+
+fn bad_field(what: &str) -> CaError {
+    CaError::Dataset(format!("column store manifest: bad or missing {what}"))
+}
+
+/// Strict inverse of [`hex64`]: exactly 16 lowercase hex digits, the
+/// one spelling the writer emits (same canonical-form-only rule as the
+/// plan store — `A` for `a` is a one-byte mutation that must not parse).
+fn parse_hex64(v: Option<&Json>, what: &str) -> Result<u64> {
+    v.and_then(Json::as_str)
+        .filter(|s| {
+            s.len() == 16 && s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+        })
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| bad_field(what))
+}
+
+fn parse_usize(v: Option<&Json>, what: &str) -> Result<usize> {
+    v.and_then(Json::as_usize).ok_or_else(|| bad_field(what))
+}
+
+/// Manifest record for one chunk of `columns.bin`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkMeta {
+    /// Word offset of the chunk header in `columns.bin`.
+    pub offset: usize,
+    /// Columns in this chunk (== `chunk_cols` except a ragged tail).
+    pub ncols: usize,
+    /// Non-zeros in this chunk.
+    pub nnz: usize,
+    /// FNV-1a over the chunk's colptr/rowidx/value words.
+    pub checksum: u64,
+}
+
+/// The validated contents of `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Dataset name (becomes [`crate::datasets::Dataset::name`]).
+    pub name: String,
+    /// Feature count d.
+    pub d: usize,
+    /// Sample count n.
+    pub n: usize,
+    /// Total non-zeros.
+    pub nnz: usize,
+    /// Columns per chunk (every chunk but the last is exactly this).
+    pub chunk_cols: usize,
+    /// FNV-1a over the `labels.bin` words.
+    pub labels_checksum: u64,
+    /// Per-chunk metadata, in file order.
+    pub chunks: Vec<ChunkMeta>,
+}
+
+impl Manifest {
+    /// Chunk index holding column `c` (chunks are fixed column ranges).
+    #[inline]
+    pub fn chunk_of_col(&self, c: usize) -> usize {
+        c / self.chunk_cols
+    }
+
+    /// First (global) column of chunk `k`.
+    #[inline]
+    pub fn chunk_base(&self, k: usize) -> usize {
+        k * self.chunk_cols
+    }
+
+    /// Total words `columns.bin` must contain.
+    pub fn total_words(&self) -> usize {
+        self.chunks.last().map_or(0, |c| c.offset + chunk_span_words(c.ncols, c.nnz))
+    }
+
+    /// Structural validation: shape totals, chunk sizing, contiguous
+    /// offsets. Content checksums are verified lazily per chunk.
+    pub fn validate(&self) -> Result<()> {
+        let bad = |msg: String| Err(CaError::Dataset(format!("column store manifest: {msg}")));
+        if self.d == 0 || self.n == 0 {
+            return bad(format!("empty shape {}x{}", self.d, self.n));
+        }
+        if self.chunk_cols == 0 {
+            return bad("chunk_cols must be ≥ 1".into());
+        }
+        let expect = self.n.div_ceil(self.chunk_cols);
+        if self.chunks.len() != expect {
+            return bad(format!("{} chunks listed, {expect} expected", self.chunks.len()));
+        }
+        let mut cols = 0usize;
+        let mut nnz = 0usize;
+        let mut offset = 0usize;
+        for (k, ch) in self.chunks.iter().enumerate() {
+            let last = k + 1 == self.chunks.len();
+            let full = self.chunk_cols;
+            if ch.ncols == 0 || ch.ncols > full || (!last && ch.ncols != full) {
+                return bad(format!("chunk {k} has {} cols of {full}", ch.ncols));
+            }
+            if ch.offset != offset {
+                return bad(format!("chunk {k} offset {} (expected {offset})", ch.offset));
+            }
+            offset += chunk_span_words(ch.ncols, ch.nnz);
+            cols += ch.ncols;
+            nnz += ch.nnz;
+        }
+        if cols != self.n || nnz != self.nnz {
+            let (en, ez) = (self.n, self.nnz);
+            return bad(format!("chunk totals {cols}/{nnz} disagree with n={en} nnz={ez}"));
+        }
+        Ok(())
+    }
+
+    /// Serialize (compact, schema-versioned).
+    pub fn to_json(&self) -> Json {
+        let chunks = self
+            .chunks
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("offset", Json::Num(c.offset as f64)),
+                    ("ncols", Json::Num(c.ncols as f64)),
+                    ("nnz", Json::Num(c.nnz as f64)),
+                    ("checksum", hex64(c.checksum)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Num(COLSTORE_SCHEMA as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("d", Json::Num(self.d as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("nnz", Json::Num(self.nnz as f64)),
+            ("chunk_cols", Json::Num(self.chunk_cols as f64)),
+            ("labels_checksum", hex64(self.labels_checksum)),
+            ("chunks", Json::Arr(chunks)),
+        ])
+    }
+
+    /// Parse + [`Manifest::validate`]. Any malformed field rejects the
+    /// whole manifest as a dataset error — never partially served.
+    pub fn from_json(doc: &Json) -> Result<Manifest> {
+        match doc.get("schema").and_then(Json::as_usize) {
+            Some(s) if s == COLSTORE_SCHEMA => {}
+            other => {
+                let msg = format!("column store manifest: unsupported schema {other:?}");
+                return Err(CaError::Dataset(msg));
+            }
+        }
+        let name = doc.get("name").and_then(Json::as_str).ok_or_else(|| bad_field("name"))?;
+        let d = parse_usize(doc.get("d"), "d")?;
+        let n = parse_usize(doc.get("n"), "n")?;
+        let nnz = parse_usize(doc.get("nnz"), "nnz")?;
+        let chunk_cols = parse_usize(doc.get("chunk_cols"), "chunk_cols")?;
+        let labels_checksum = parse_hex64(doc.get("labels_checksum"), "labels_checksum")?;
+        let entries = doc.get("chunks").and_then(Json::as_arr).ok_or_else(|| bad_field("chunks"))?;
+        let mut chunks = Vec::with_capacity(entries.len());
+        for (k, e) in entries.iter().enumerate() {
+            chunks.push(ChunkMeta {
+                offset: parse_usize(e.get("offset"), &format!("chunk {k} offset"))?,
+                ncols: parse_usize(e.get("ncols"), &format!("chunk {k} ncols"))?,
+                nnz: parse_usize(e.get("nnz"), &format!("chunk {k} nnz"))?,
+                checksum: parse_hex64(e.get("checksum"), &format!("chunk {k} checksum"))?,
+            });
+        }
+        let m = Manifest {
+            name: name.to_string(),
+            d,
+            n,
+            nnz,
+            chunk_cols,
+            labels_checksum,
+            chunks,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Manifest {
+        let w0 = chunk_span_words(2, 3);
+        let w1 = chunk_span_words(2, 2);
+        Manifest {
+            name: "toy".into(),
+            d: 3,
+            n: 5,
+            nnz: 6,
+            chunk_cols: 2,
+            labels_checksum: 0xdead_beef_0123_4567,
+            chunks: vec![
+                ChunkMeta { offset: 0, ncols: 2, nnz: 3, checksum: 1 },
+                ChunkMeta { offset: w0, ncols: 2, nnz: 2, checksum: 2 },
+                ChunkMeta { offset: w0 + w1, ncols: 1, nnz: 1, checksum: 3 },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let m = toy();
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.name, m.name);
+        assert_eq!((back.d, back.n, back.nnz, back.chunk_cols), (3, 5, 6, 2));
+        assert_eq!(back.labels_checksum, m.labels_checksum);
+        assert_eq!(back.chunks, m.chunks);
+        assert_eq!(back.total_words(), m.total_words());
+    }
+
+    #[test]
+    fn validate_rejects_structural_lies() {
+        let mut m = toy();
+        m.nnz = 7; // totals disagree
+        assert!(m.validate().is_err());
+        let mut m = toy();
+        m.chunks[1].offset += 1; // non-contiguous
+        assert!(m.validate().is_err());
+        let mut m = toy();
+        m.chunks[0].ncols = 1; // non-tail ragged chunk
+        assert!(m.validate().is_err());
+        let mut m = toy();
+        m.chunks.pop(); // chunk count vs n
+        assert!(m.validate().is_err());
+        let mut m = toy();
+        m.chunk_cols = 0;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_schema_and_bad_hex() {
+        let mut doc = toy().to_json();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("schema".into(), Json::Num(2.0));
+        }
+        assert!(Manifest::from_json(&doc).is_err());
+        let mut doc = toy().to_json();
+        if let Json::Obj(map) = &mut doc {
+            // Uppercase hex: same value, non-canonical spelling — rejected.
+            map.insert("labels_checksum".into(), Json::Str("DEADBEEF01234567".into()));
+        }
+        assert!(Manifest::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn chunk_geometry_helpers() {
+        let m = toy();
+        assert_eq!(m.chunk_of_col(0), 0);
+        assert_eq!(m.chunk_of_col(3), 1);
+        assert_eq!(m.chunk_of_col(4), 2);
+        assert_eq!(m.chunk_base(2), 4);
+        assert_eq!(chunk_span_words(2, 3), 4 + 3 + 6);
+    }
+}

@@ -1,0 +1,257 @@
+//! Read-only whole-file word mapping with a portable heap fallback.
+//!
+//! The mapped variant is a plain `mmap(2)` of the file (no new crate
+//! dependencies: the three syscalls the store needs are declared
+//! directly against libc, which std already links on unix). It exists
+//! only on 64-bit little-endian unix targets, where the on-disk
+//! little-endian u64 words can be read in place; everywhere else —
+//! and whenever the map itself fails — [`FileMap::open`] falls back to
+//! reading the file into a `Vec<u64>` with explicit `from_le_bytes`
+//! decoding, so the store works (without the out-of-core property) on
+//! any platform.
+//!
+//! Prefetch hints (`posix_madvise(..., WILLNEED)`) are advisory: errors
+//! are ignored and the heap fallback makes them a no-op, exactly the
+//! "madvise-style hinting behind a no-op fallback" contract.
+
+use crate::error::{CaError, Result};
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+#[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+    pub const POSIX_MADV_WILLNEED: i32 = 3;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+        pub fn posix_madvise(addr: *mut c_void, len: usize, advice: i32) -> i32;
+    }
+}
+
+/// An `mmap`ed byte range owned by a [`FileMap`]. Unmapped on drop.
+#[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+pub(crate) struct MmapRegion {
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the region is immutable (PROT_READ, MAP_PRIVATE) for its whole
+// lifetime and owned exclusively by the FileMap, so shared references to
+// its words are sound across threads.
+#[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+unsafe impl Send for MmapRegion {}
+#[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+unsafe impl Sync for MmapRegion {}
+
+#[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        // SAFETY: ptr/len are exactly what mmap returned.
+        unsafe {
+            sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+        }
+    }
+}
+
+/// A file exposed as little-endian u64 words: mapped in place where the
+/// platform allows, heap-decoded otherwise.
+pub(crate) enum FileMap {
+    #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+    Mapped(MmapRegion),
+    Heap(Vec<u64>),
+}
+
+impl FileMap {
+    /// Map (or read) `path`. The file length must be a multiple of 8.
+    pub(crate) fn open(path: &Path) -> Result<FileMap> {
+        #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+        {
+            if let Some(m) = try_mmap(path)? {
+                return Ok(FileMap::Mapped(m));
+            }
+        }
+        Ok(FileMap::Heap(heap_read(path)?))
+    }
+
+    /// The file contents as native u64 words (little-endian on disk).
+    pub(crate) fn words(&self) -> &[u64] {
+        match self {
+            #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+            FileMap::Mapped(m) => {
+                // SAFETY: mmap returns page-aligned memory (≥ 8-byte
+                // aligned), len was checked to be a multiple of 8 at
+                // open, and the region lives as long as self.
+                unsafe { std::slice::from_raw_parts(m.ptr as *const u64, m.len / 8) }
+            }
+            FileMap::Heap(v) => v,
+        }
+    }
+
+    /// True when the file is actually memory-mapped (tests/benches).
+    pub(crate) fn is_mapped(&self) -> bool {
+        match self {
+            #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+            FileMap::Mapped(_) => true,
+            FileMap::Heap(_) => false,
+        }
+    }
+
+    /// Advise the kernel that a word range is about to be read.
+    /// Best-effort: errors are ignored, and the heap variant (which has
+    /// no backing pages to fault) is a no-op.
+    pub(crate) fn advise_willneed(&self, word_off: usize, word_len: usize) {
+        match self {
+            #[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+            FileMap::Mapped(m) => {
+                let byte_off = word_off.saturating_mul(8);
+                let byte_len = word_len.saturating_mul(8);
+                if byte_len == 0 || byte_off.saturating_add(byte_len) > m.len {
+                    return;
+                }
+                // posix_madvise wants a page-aligned address; round the
+                // start down to a 4 KiB boundary (a divisor of every
+                // real page size we target — where it is not, the call
+                // fails EINVAL and is ignored, staying advisory).
+                let aligned = byte_off & !4095;
+                let len = byte_len + (byte_off - aligned);
+                // SAFETY: the range is inside the mapping.
+                unsafe {
+                    sys::posix_madvise(
+                        m.ptr.add(aligned) as *mut std::ffi::c_void,
+                        len,
+                        sys::POSIX_MADV_WILLNEED,
+                    );
+                }
+            }
+            FileMap::Heap(_) => {
+                // Keep the signature honest on targets where the mapped
+                // arm is compiled out.
+                let _ = (word_off, word_len);
+            }
+        }
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64", target_endian = "little"))]
+fn try_mmap(path: &Path) -> Result<Option<MmapRegion>> {
+    use std::os::unix::io::AsRawFd;
+    let file = File::open(path)?;
+    let len = file.metadata()?.len();
+    if len % 8 != 0 {
+        return Err(CaError::Dataset(format!(
+            "column store file '{}' length {len} is not a multiple of 8",
+            path.display()
+        )));
+    }
+    if len == 0 {
+        // mmap of length 0 is EINVAL; an empty file needs no map.
+        return Ok(None);
+    }
+    let len = len as usize;
+    // SAFETY: fd is valid for the duration of the call; a private
+    // read-only map of a regular file has no aliasing obligations. The
+    // fd may be closed after mmap returns — the mapping persists.
+    let ptr = unsafe {
+        sys::mmap(
+            std::ptr::null_mut(),
+            len,
+            sys::PROT_READ,
+            sys::MAP_PRIVATE,
+            file.as_raw_fd(),
+            0,
+        )
+    };
+    if ptr as usize == usize::MAX {
+        // MAP_FAILED: fall back to the heap path.
+        return Ok(None);
+    }
+    Ok(Some(MmapRegion { ptr: ptr as *const u8, len }))
+}
+
+/// Portable fallback: read the whole file and decode LE words.
+fn heap_read(path: &Path) -> Result<Vec<u64>> {
+    let mut file = File::open(path)?;
+    let mut bytes = Vec::new();
+    file.read_to_end(&mut bytes)?;
+    if bytes.len() % 8 != 0 {
+        return Err(CaError::Dataset(format!(
+            "column store file '{}' length {} is not a multiple of 8",
+            path.display(),
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().expect("chunks_exact(8)")))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str, words: &[u64]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("ca_prox_mmap_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let mut bytes = Vec::new();
+        for w in words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn roundtrips_words_and_prefetch_is_harmless() {
+        let words = [0u64, 1, u64::MAX, 0x0102_0304_0506_0708];
+        let path = tmpfile("rt", &words);
+        let map = FileMap::open(&path).unwrap();
+        assert_eq!(map.words(), &words);
+        map.advise_willneed(0, 4);
+        map.advise_willneed(2, 100); // out of range: ignored
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn heap_fallback_matches_map() {
+        let words = [7u64, 8, 9];
+        let path = tmpfile("heap", &words);
+        let heap = FileMap::Heap(heap_read(&path).unwrap());
+        let map = FileMap::open(&path).unwrap();
+        assert_eq!(heap.words(), map.words());
+        assert!(!heap.is_mapped());
+        heap.advise_willneed(0, 3); // no-op
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn ragged_length_rejected() {
+        let path = tmpfile("ragged", &[1u64]);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.push(0xFF);
+        std::fs::write(&path, bytes).unwrap();
+        assert!(FileMap::open(&path).is_err());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn empty_file_is_empty_words() {
+        let path = tmpfile("empty", &[]);
+        let map = FileMap::open(&path).unwrap();
+        assert!(map.words().is_empty());
+    }
+}

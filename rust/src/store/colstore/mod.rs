@@ -1,0 +1,439 @@
+//! mmap-backed chunked CSC column store (the `.cacs` format).
+//!
+//! The store serves the same column API as [`CscMatrix`] —
+//! `(row indices, values)` slices per column — but reads them straight
+//! out of a mapped file, chunk by chunk, so a dataset much larger than
+//! RAM solves with peak resident data bounded by the touched chunks and
+//! panel buffers. Trust model matches the plan store: nothing from disk
+//! is believed until verified. Every chunk is validated on first touch
+//! (magic + manifest agreement + FNV-1a checksum + full structural
+//! invariants: monotone colptr, strictly-increasing in-range rows), and
+//! a chunk that fails is rejected wholesale, forever — a corrupt store
+//! is a dataset error, never partially served data.
+//!
+//! Bit-rule: a solve through a [`ColStore`] must be bit-identical to
+//! the same solve on the in-RAM [`CscMatrix`] — both sources feed the
+//! same generic kernels via [`ColumnRead`], pinned by
+//! `rust/tests/colstore.rs`.
+
+mod format;
+mod mmap;
+mod writer;
+
+pub use format::{
+    checksum_words, chunk_span_words, ChunkMeta, Manifest, CHUNK_HEADER_WORDS, CHUNK_MAGIC,
+    COLSTORE_SCHEMA, DEFAULT_CHUNK_COLS, STORE_DIR_SUFFIX,
+};
+pub use writer::ColStoreWriter;
+
+use crate::error::{CaError, Result};
+use crate::matrix::colread::ColumnRead;
+use crate::matrix::csc::CscMatrix;
+use mmap::FileMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+const STATE_UNCHECKED: u8 = 0;
+const STATE_OK: u8 = 1;
+const STATE_BAD: u8 = 2;
+
+/// Reinterpret little-endian u64 words as row indices in place.
+#[cfg(target_pointer_width = "64")]
+#[inline]
+fn words_as_usize(w: &[u64]) -> &[usize] {
+    // SAFETY: usize and u64 have identical size and alignment on 64-bit
+    // targets (ColStore::open rejects everything else), values were
+    // validated < d ≤ usize::MAX, and the lifetime is inherited.
+    unsafe { std::slice::from_raw_parts(w.as_ptr() as *const usize, w.len()) }
+}
+
+#[cfg(not(target_pointer_width = "64"))]
+fn words_as_usize(_w: &[u64]) -> &[usize] {
+    unreachable!("ColStore::open rejects non-64-bit targets")
+}
+
+/// Reinterpret u64 bit patterns as f64 values in place (same size and
+/// alignment on every target; IEEE-754 byte layout == bit layout).
+#[inline]
+fn words_as_f64(w: &[u64]) -> &[f64] {
+    // SAFETY: u64 and f64 have identical size/alignment; every bit
+    // pattern is a valid f64.
+    unsafe { std::slice::from_raw_parts(w.as_ptr() as *const f64, w.len()) }
+}
+
+/// An open, lazily-validated column store.
+pub struct ColStore {
+    dir: PathBuf,
+    manifest: Manifest,
+    columns: FileMap,
+    labels: Vec<f64>,
+    state: Vec<AtomicU8>,
+}
+
+impl std::fmt::Debug for ColStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ColStore")
+            .field("dir", &self.dir)
+            .field("name", &self.manifest.name)
+            .field("d", &self.manifest.d)
+            .field("n", &self.manifest.n)
+            .field("nnz", &self.manifest.nnz)
+            .field("chunk_cols", &self.manifest.chunk_cols)
+            .finish()
+    }
+}
+
+/// One validated chunk's payload sections.
+struct ChunkView<'a> {
+    colptr: &'a [u64],
+    rowidx: &'a [u64],
+    values: &'a [u64],
+}
+
+impl ColStore {
+    /// Open `dir` (a `.cacs` directory): parse + validate the manifest,
+    /// map `columns.bin`, and load + checksum `labels.bin`. Chunk
+    /// contents are validated lazily on first touch.
+    pub fn open(dir: &Path) -> Result<ColStore> {
+        if std::mem::size_of::<usize>() != 8 {
+            return Err(CaError::Dataset("column store requires a 64-bit target".into()));
+        }
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let doc = crate::util::json::parse(&text)
+            .map_err(|e| CaError::Dataset(format!("column store manifest: {e}")))?;
+        let manifest = Manifest::from_json(&doc)?;
+        let columns = FileMap::open(&dir.join("columns.bin"))?;
+        if columns.words().len() != manifest.total_words() {
+            let (have, want) = (columns.words().len(), manifest.total_words());
+            return Err(CaError::Dataset(format!(
+                "column store 'columns.bin' has {have} words, manifest expects {want}"
+            )));
+        }
+        let label_bytes = std::fs::read(dir.join("labels.bin"))?;
+        if label_bytes.len() != 8 * manifest.n {
+            let (have, want) = (label_bytes.len(), 8 * manifest.n);
+            return Err(CaError::Dataset(format!(
+                "column store 'labels.bin' has {have} bytes, manifest expects {want}"
+            )));
+        }
+        let label_words: Vec<u64> = label_bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("chunks_exact(8)")))
+            .collect();
+        if checksum_words(&label_words) != manifest.labels_checksum {
+            return Err(CaError::Dataset("column store 'labels.bin' checksum mismatch".into()));
+        }
+        let labels = label_words.into_iter().map(f64::from_bits).collect();
+        let state = (0..manifest.chunks.len()).map(|_| AtomicU8::new(STATE_UNCHECKED)).collect();
+        Ok(ColStore { dir: dir.to_path_buf(), manifest, columns, labels, state })
+    }
+
+    /// Open `dir` as a [`crate::datasets::Dataset`] reading through the
+    /// `Mapped` source (labels are moved, not copied, into `y`).
+    pub fn open_dataset(dir: &Path) -> Result<crate::datasets::Dataset> {
+        let mut store = ColStore::open(dir)?;
+        let y = std::mem::take(&mut store.labels);
+        let name = store.manifest.name.clone();
+        let x = crate::datasets::DataSource::Mapped(std::sync::Arc::new(store));
+        Ok(crate::datasets::Dataset { name, x, y })
+    }
+
+    /// Dataset name recorded at ingest.
+    pub fn name(&self) -> &str {
+        &self.manifest.name
+    }
+
+    /// Feature count d.
+    pub fn rows(&self) -> usize {
+        self.manifest.d
+    }
+
+    /// Sample count n.
+    pub fn cols(&self) -> usize {
+        self.manifest.n
+    }
+
+    /// Total stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.manifest.nnz
+    }
+
+    /// Columns per chunk.
+    pub fn chunk_cols(&self) -> usize {
+        self.manifest.chunk_cols
+    }
+
+    /// Number of chunks.
+    pub fn num_chunks(&self) -> usize {
+        self.manifest.chunks.len()
+    }
+
+    /// Labels as loaded ([`ColStore::open_dataset`] moves them out).
+    pub fn labels(&self) -> &[f64] {
+        &self.labels
+    }
+
+    /// True when `columns.bin` is actually memory-mapped (as opposed to
+    /// the portable heap fallback).
+    pub fn is_mapped(&self) -> bool {
+        self.columns.is_mapped()
+    }
+
+    fn corrupt(&self, k: usize, reason: &str) -> CaError {
+        let name = &self.manifest.name;
+        CaError::Dataset(format!("column store '{name}': corrupt chunk {k}: {reason}"))
+    }
+
+    /// The chunk's sections, validated on first touch. A chunk that ever
+    /// failed validation stays rejected.
+    fn chunk(&self, k: usize) -> Result<ChunkView<'_>> {
+        let meta = self.manifest.chunks[k];
+        let span = &self.columns.words()[meta.offset..][..chunk_span_words(meta.ncols, meta.nnz)];
+        match self.state[k].load(Ordering::Acquire) {
+            STATE_OK => {}
+            STATE_BAD => return Err(self.corrupt(k, "previously rejected")),
+            _ => self.validate_chunk(k, &meta, span)?,
+        }
+        let payload = &span[CHUNK_HEADER_WORDS..];
+        Ok(ChunkView {
+            colptr: &payload[..meta.ncols + 1],
+            rowidx: &payload[meta.ncols + 1..meta.ncols + 1 + meta.nnz],
+            values: &payload[meta.ncols + 1 + meta.nnz..],
+        })
+    }
+
+    fn validate_chunk(&self, k: usize, meta: &ChunkMeta, span: &[u64]) -> Result<()> {
+        let fail = |reason: String| {
+            self.state[k].store(STATE_BAD, Ordering::Release);
+            Err(self.corrupt(k, &reason))
+        };
+        if span[0] != CHUNK_MAGIC {
+            return fail("bad magic".into());
+        }
+        if span[1] != meta.ncols as u64 || span[2] != meta.nnz as u64 {
+            return fail("header shape disagrees with manifest".into());
+        }
+        if span[3] != meta.checksum {
+            return fail("in-band checksum disagrees with manifest".into());
+        }
+        let payload = &span[CHUNK_HEADER_WORDS..];
+        if checksum_words(payload) != meta.checksum {
+            return fail("checksum mismatch".into());
+        }
+        let colptr = &payload[..meta.ncols + 1];
+        if colptr[0] != 0 || colptr[meta.ncols] != meta.nnz as u64 {
+            return fail("colptr endpoints disagree with shape".into());
+        }
+        for pair in colptr.windows(2) {
+            if pair[1] < pair[0] {
+                return fail("colptr not monotone".into());
+            }
+        }
+        let rowidx = &payload[meta.ncols + 1..meta.ncols + 1 + meta.nnz];
+        let d = self.manifest.d as u64;
+        for t in 0..meta.ncols {
+            let (lo, hi) = (colptr[t] as usize, colptr[t + 1] as usize);
+            let mut prev = None::<u64>;
+            for &r in &rowidx[lo..hi] {
+                if r >= d {
+                    return fail(format!("row {r} out of d={d}"));
+                }
+                if prev.is_some_and(|p| r <= p) {
+                    return fail("rows not strictly increasing".into());
+                }
+                prev = Some(r);
+            }
+        }
+        self.state[k].store(STATE_OK, Ordering::Release);
+        Ok(())
+    }
+
+    /// nnz of one column (validates the owning chunk on first touch).
+    pub fn col_nnz(&self, c: usize) -> Result<usize> {
+        if c >= self.manifest.n {
+            return Err(CaError::Shape(format!("column {c} out of {}", self.manifest.n)));
+        }
+        let k = self.manifest.chunk_of_col(c);
+        let local = c - self.manifest.chunk_base(k);
+        let ch = self.chunk(k)?;
+        Ok((ch.colptr[local + 1] - ch.colptr[local]) as usize)
+    }
+
+    /// `(row indices, values)` of one column, zero-copy out of the map.
+    pub fn col(&self, c: usize) -> Result<(&[usize], &[f64])> {
+        if c >= self.manifest.n {
+            return Err(CaError::Shape(format!("column {c} out of {}", self.manifest.n)));
+        }
+        let k = self.manifest.chunk_of_col(c);
+        let local = c - self.manifest.chunk_base(k);
+        let ch = self.chunk(k)?;
+        let (lo, hi) = (ch.colptr[local] as usize, ch.colptr[local + 1] as usize);
+        Ok((words_as_usize(&ch.rowidx[lo..hi]), words_as_f64(&ch.values[lo..hi])))
+    }
+
+    /// Per-column nnz for the whole store in one streaming pass
+    /// (validates every chunk — the partitioners' entry point).
+    pub fn col_nnz_all(&self) -> Result<Vec<usize>> {
+        let mut out = Vec::with_capacity(self.manifest.n);
+        for k in 0..self.num_chunks() {
+            let ch = self.chunk(k)?;
+            for pair in ch.colptr.windows(2) {
+                out.push((pair[1] - pair[0]) as usize);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Advise the OS that the chunks holding `cols` are about to be
+    /// read (no-op on the heap fallback) — the shard-aware prefetch the
+    /// panel gather issues before walking a sampled block.
+    pub fn prefetch_cols(&self, cols: &[usize]) {
+        let mut ks: Vec<usize> = cols
+            .iter()
+            .filter(|&&c| c < self.manifest.n)
+            .map(|&c| self.manifest.chunk_of_col(c))
+            .collect();
+        ks.sort_unstable();
+        ks.dedup();
+        for k in ks {
+            let m = &self.manifest.chunks[k];
+            self.columns.advise_willneed(m.offset, chunk_span_words(m.ncols, m.nnz));
+        }
+    }
+
+    /// Materialize a column subset as an in-RAM [`CscMatrix`] (columns
+    /// reindexed in the order given, duplicates allowed) — the scale-n
+    /// truncation and shard-materialization path.
+    pub fn gather_cols(&self, idx: &[usize]) -> Result<CscMatrix> {
+        let mut total = 0usize;
+        for &c in idx {
+            total += self.col_nnz(c)?;
+        }
+        let mut builder = crate::matrix::csc::CscBuilder::new(idx.len(), total);
+        for &c in idx {
+            let (ri, vs) = self.col(c)?;
+            builder.push_col(ri, vs)?;
+        }
+        builder.finish(self.manifest.d)
+    }
+}
+
+impl ColumnRead for ColStore {
+    fn rows(&self) -> usize {
+        self.manifest.d
+    }
+
+    fn cols(&self) -> usize {
+        self.manifest.n
+    }
+
+    fn nnz(&self) -> usize {
+        self.manifest.nnz
+    }
+
+    fn col_nnz(&self, c: usize) -> Result<usize> {
+        ColStore::col_nnz(self, c)
+    }
+
+    fn col(&self, c: usize) -> Result<(&[usize], &[f64])> {
+        ColStore::col(self, c)
+    }
+
+    fn prefetch_cols(&self, cols: &[usize]) {
+        ColStore::prefetch_cols(self, cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ca_prox_colstore_{}_{tag}.cacs", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn write_toy(dir: &Path, chunk_cols: usize) -> Manifest {
+        // d=4, n=5: columns ([0,2],[1],[],[0,1,3],[2]).
+        let mut w = ColStoreWriter::create(dir, "toy", chunk_cols).unwrap();
+        w.push_col(&[0, 2], &[1.0, -2.0], 0.1).unwrap();
+        w.push_col(&[1], &[3.5], 0.2).unwrap();
+        w.push_col(&[], &[], 0.3).unwrap();
+        w.push_col(&[0, 1, 3], &[4.0, 5.0, -6.0], 0.4).unwrap();
+        w.push_col(&[2], &[7.25], 0.5).unwrap();
+        w.finish(4).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_columns_and_labels() {
+        for chunk_cols in [1usize, 2, 3, 5, 100] {
+            let dir = tmpdir(&format!("rt{chunk_cols}"));
+            write_toy(&dir, chunk_cols);
+            let store = ColStore::open(&dir).unwrap();
+            assert_eq!((store.rows(), store.cols(), store.nnz()), (4, 5, 7));
+            assert_eq!(store.col(0).unwrap(), (&[0usize, 2][..], &[1.0, -2.0][..]));
+            assert_eq!(store.col(2).unwrap(), (&[][..], &[][..]));
+            assert_eq!(store.col(3).unwrap().1, &[4.0, 5.0, -6.0]);
+            assert_eq!(store.col_nnz(4).unwrap(), 1);
+            assert!(store.col(5).is_err());
+            assert_eq!(store.labels(), &[0.1, 0.2, 0.3, 0.4, 0.5]);
+            assert_eq!(store.col_nnz_all().unwrap(), vec![2, 1, 0, 3, 1]);
+            store.prefetch_cols(&[0, 3, 4]); // must be harmless
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn one_byte_chunk_corruption_rejected_forever() {
+        let dir = tmpdir("flip");
+        let m = write_toy(&dir, 2);
+        let path = dir.join("columns.bin");
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one bit inside the *second* chunk's payload.
+        let byte = 8 * (m.chunks[1].offset + CHUNK_HEADER_WORDS + 1) + 3;
+        bytes[byte] ^= 0x40;
+        std::fs::write(&path, bytes).unwrap();
+        let store = ColStore::open(&dir).unwrap();
+        // Untouched chunks still serve; the tampered one never does.
+        assert!(store.col(0).is_ok());
+        let err = store.col(2).unwrap_err().to_string();
+        assert!(err.contains("dataset error"), "{err}");
+        assert!(err.contains("corrupt chunk 1"), "{err}");
+        let again = store.col(3).unwrap_err().to_string();
+        assert!(again.contains("corrupt chunk 1"), "{again}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn label_and_manifest_tampering_rejected_at_open() {
+        let dir = tmpdir("labels");
+        write_toy(&dir, 2);
+        let lpath = dir.join("labels.bin");
+        let mut bytes = std::fs::read(&lpath).unwrap();
+        bytes[0] ^= 1;
+        std::fs::write(&lpath, bytes).unwrap();
+        assert!(ColStore::open(&dir).is_err(), "label flip must reject at open");
+
+        let dir2 = tmpdir("manifest");
+        write_toy(&dir2, 2);
+        let mpath = dir2.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, text.replace("\"nnz\":7", "\"nnz\":8")).unwrap();
+        assert!(ColStore::open(&dir2).is_err(), "manifest edit must reject at open");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir2).ok();
+    }
+
+    #[test]
+    fn truncated_columns_file_rejected_at_open() {
+        let dir = tmpdir("trunc");
+        write_toy(&dir, 2);
+        let path = dir.join("columns.bin");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(ColStore::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

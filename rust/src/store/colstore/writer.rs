@@ -1,0 +1,216 @@
+//! Streaming column-store writer: columns in, chunks out.
+//!
+//! [`ColStoreWriter`] accepts columns one at a time (the shape the
+//! streaming libsvm parser produces), buffers at most one chunk of
+//! them, and appends finished chunks to `columns.bin` as it goes — peak
+//! memory is O(chunk) plus the label vector, never O(file). `finish`
+//! seals the store: flushes the ragged tail chunk, writes `labels.bin`,
+//! and lands `manifest.json` last via the plan store's
+//! [`crate::serve::fleet::atomic_write_json`] temp+rename discipline,
+//! so a crashed ingest can never leave a manifest pointing at a
+//! half-written payload.
+
+use super::format::{
+    checksum_words, chunk_span_words, ChunkMeta, Manifest, CHUNK_MAGIC, DEFAULT_CHUNK_COLS,
+};
+use crate::error::{CaError, Result};
+use crate::serve::fleet::atomic_write_json;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// Incremental writer for one `.cacs` directory.
+pub struct ColStoreWriter {
+    dir: PathBuf,
+    name: String,
+    chunk_cols: usize,
+    out: BufWriter<File>,
+    // Current (unflushed) chunk, colptr always starts at [0].
+    colptr: Vec<u64>,
+    rowidx: Vec<u64>,
+    values: Vec<u64>,
+    chunks: Vec<ChunkMeta>,
+    words_written: usize,
+    labels: Vec<f64>,
+    total_nnz: usize,
+    d_seen: usize,
+}
+
+impl ColStoreWriter {
+    /// Create `dir` (and parents) and start writing. `chunk_cols = 0`
+    /// selects [`DEFAULT_CHUNK_COLS`]. An existing store at `dir` is
+    /// overwritten only once the new manifest lands atomically.
+    pub fn create(dir: &Path, name: &str, chunk_cols: usize) -> Result<ColStoreWriter> {
+        if name.is_empty() {
+            return Err(CaError::Dataset("column store name must be non-empty".into()));
+        }
+        let chunk_cols = if chunk_cols == 0 { DEFAULT_CHUNK_COLS } else { chunk_cols };
+        std::fs::create_dir_all(dir)?;
+        let out = BufWriter::new(File::create(dir.join("columns.bin"))?);
+        Ok(ColStoreWriter {
+            dir: dir.to_path_buf(),
+            name: name.to_string(),
+            chunk_cols,
+            out,
+            colptr: vec![0],
+            rowidx: Vec::new(),
+            values: Vec::new(),
+            chunks: Vec::new(),
+            words_written: 0,
+            labels: Vec::new(),
+            total_nnz: 0,
+            d_seen: 0,
+        })
+    }
+
+    /// Columns accepted so far.
+    pub fn cols(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Append one column (row indices strictly increasing, zeros welcome
+    /// to be pre-dropped by the caller — values are stored bit-exactly).
+    pub fn push_col(&mut self, rows: &[usize], vals: &[f64], label: f64) -> Result<()> {
+        if rows.len() != vals.len() {
+            let (r, v) = (rows.len(), vals.len());
+            return Err(CaError::Dataset(format!("column has {r} rows but {v} values")));
+        }
+        let mut prev: Option<usize> = None;
+        for &r in rows {
+            if prev.is_some_and(|p| r <= p) {
+                return Err(CaError::Dataset("column rows must be strictly increasing".into()));
+            }
+            prev = Some(r);
+        }
+        for &r in rows {
+            self.d_seen = self.d_seen.max(r + 1);
+            self.rowidx.push(r as u64);
+        }
+        for &v in vals {
+            self.values.push(v.to_bits());
+        }
+        self.colptr.push(self.rowidx.len() as u64);
+        self.labels.push(label);
+        self.total_nnz += rows.len();
+        if self.colptr.len() - 1 == self.chunk_cols {
+            self.flush_chunk()?;
+        }
+        Ok(())
+    }
+
+    fn flush_chunk(&mut self) -> Result<()> {
+        let ncols = self.colptr.len() - 1;
+        if ncols == 0 {
+            return Ok(());
+        }
+        let nnz = self.rowidx.len();
+        let mut checksum_input = Vec::with_capacity(self.colptr.len() + 2 * nnz);
+        checksum_input.extend_from_slice(&self.colptr);
+        checksum_input.extend_from_slice(&self.rowidx);
+        checksum_input.extend_from_slice(&self.values);
+        let checksum = checksum_words(&checksum_input);
+        let header = [CHUNK_MAGIC, ncols as u64, nnz as u64, checksum];
+        for &w in header.iter().chain(&checksum_input) {
+            self.out.write_all(&w.to_le_bytes())?;
+        }
+        self.chunks.push(ChunkMeta { offset: self.words_written, ncols, nnz, checksum });
+        self.words_written += chunk_span_words(ncols, nnz);
+        self.colptr.clear();
+        self.colptr.push(0);
+        self.rowidx.clear();
+        self.values.clear();
+        Ok(())
+    }
+
+    /// Seal the store with feature count `d` (pass 0 to infer the
+    /// tightest d from the data). Returns the manifest that landed.
+    pub fn finish(mut self, d: usize) -> Result<Manifest> {
+        self.flush_chunk()?;
+        let d = if d == 0 { self.d_seen } else { d };
+        if self.labels.is_empty() {
+            let name = &self.name;
+            return Err(CaError::Dataset(format!("column store '{name}': no columns")));
+        }
+        if self.d_seen > d {
+            let (name, seen) = (&self.name, self.d_seen);
+            return Err(CaError::Dataset(format!(
+                "column store '{name}': feature index {seen} exceeds d={d}"
+            )));
+        }
+        self.out.flush()?;
+        let label_words: Vec<u64> = self.labels.iter().map(|v| v.to_bits()).collect();
+        let mut bytes = Vec::with_capacity(8 * label_words.len());
+        for w in &label_words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        std::fs::write(self.dir.join("labels.bin"), bytes)?;
+        let manifest = Manifest {
+            name: self.name,
+            d,
+            n: self.labels.len(),
+            nnz: self.total_nnz,
+            chunk_cols: self.chunk_cols,
+            labels_checksum: checksum_words(&label_words),
+            chunks: self.chunks,
+        };
+        manifest.validate()?;
+        let path = self.dir.join("manifest.json");
+        atomic_write_json(&self.dir, "manifest", &path, &manifest.to_json())?;
+        Ok(manifest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("ca_prox_writer_{}_{tag}.cacs", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn writes_chunked_layout_with_ragged_tail() {
+        let dir = tmpdir("ragged");
+        let mut w = ColStoreWriter::create(&dir, "t", 2).unwrap();
+        w.push_col(&[0, 2], &[1.0, -2.0], 0.5).unwrap();
+        w.push_col(&[], &[], -1.0).unwrap();
+        w.push_col(&[1], &[3.0], 2.0).unwrap();
+        let m = w.finish(0).unwrap();
+        assert_eq!((m.d, m.n, m.nnz), (3, 3, 3));
+        assert_eq!(m.chunks.len(), 2);
+        assert_eq!(m.chunks[0].ncols, 2);
+        assert_eq!(m.chunks[1].ncols, 1);
+        assert!(dir.join("manifest.json").is_file());
+        assert!(dir.join("columns.bin").is_file());
+        assert!(dir.join("labels.bin").is_file());
+        let words = std::fs::metadata(dir.join("columns.bin")).unwrap().len() / 8;
+        assert_eq!(words as usize, m.total_words());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_unsorted_rows_and_empty_store() {
+        let dir = tmpdir("bad");
+        let mut w = ColStoreWriter::create(&dir, "t", 4).unwrap();
+        assert!(w.push_col(&[2, 1], &[1.0, 1.0], 0.0).is_err());
+        let w2 = ColStoreWriter::create(&dir, "t", 4).unwrap();
+        assert!(w2.finish(0).is_err(), "empty store must not seal");
+        assert!(!dir.join("manifest.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn d_hint_validated_at_finish() {
+        let dir = tmpdir("dhint");
+        let mut w = ColStoreWriter::create(&dir, "t", 4).unwrap();
+        w.push_col(&[5], &[1.0], 0.0).unwrap();
+        assert!(w.finish(3).is_err(), "d=3 cannot hold row 5");
+        let mut w = ColStoreWriter::create(&dir, "t", 4).unwrap();
+        w.push_col(&[5], &[1.0], 0.0).unwrap();
+        assert_eq!(w.finish(9).unwrap().d, 9, "padding d is allowed");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

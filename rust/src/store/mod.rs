@@ -1,0 +1,12 @@
+//! On-disk dataset storage (out-of-core column stores).
+//!
+//! [`colstore`] is the mmap-backed chunked CSC column store behind the
+//! [`crate::datasets::DataSource`] seam: ingest a libsvm file once with
+//! `ca_prox ingest`, then every solve/sweep/serve path reads sampled
+//! column panels straight from the mapping — bit-identical to the
+//! in-RAM path, with peak resident data bounded by chunk/panel buffers
+//! instead of the whole matrix.
+
+pub mod colstore;
+
+pub use colstore::{ColStore, ColStoreWriter, DEFAULT_CHUNK_COLS, STORE_DIR_SUFFIX};

@@ -1,0 +1,143 @@
+//! The column-store bit-rule, end to end: a solve that reads X through
+//! the mmap-backed [`ColStore`] must be **bit-identical** — iterates,
+//! history, cost trace — to the same solve on the in-RAM [`CscMatrix`],
+//! for every chunk geometry (ragged tail, one column per chunk, chunk
+//! boundaries splitting the sampled block). Both sources feed the same
+//! generic kernels through the `ColumnRead` seam, so equality here pins
+//! the seam itself, not a lucky tolerance. Plus: fingerprints agree
+//! across sources, and a corrupt chunk fails the whole solve as a
+//! dataset error — never a wrong answer.
+
+use ca_prox::comm::costmodel::MachineModel;
+use ca_prox::coordinator::run;
+use ca_prox::datasets::synthetic::{generate, SyntheticSpec};
+use ca_prox::datasets::Dataset;
+use ca_prox::serve::Fingerprint;
+use ca_prox::solvers::traits::{AlgoKind, SolverConfig, SolverOutput};
+use ca_prox::store::{ColStore, ColStoreWriter};
+use std::path::PathBuf;
+
+fn in_mem(seed: u64) -> Dataset {
+    generate(
+        &SyntheticSpec {
+            d: 9,
+            n: 60,
+            density: 0.4,
+            noise: 0.05,
+            model_sparsity: 0.5,
+            condition: 1.0,
+        },
+        seed,
+    )
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ca_prox_it_{}_{tag}.cacs", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Write `ds` into a fresh store with the given chunk geometry and open
+/// it back as a `Mapped` dataset.
+fn to_store(ds: &Dataset, chunk_cols: usize, tag: &str) -> (Dataset, PathBuf) {
+    let dir = tmpdir(tag);
+    let mut w = ColStoreWriter::create(&dir, &ds.name, chunk_cols).unwrap();
+    for c in 0..ds.n() {
+        let (ri, vs) = ds.x.col(c).unwrap();
+        w.push_col(ri, vs, ds.y[c]).unwrap();
+    }
+    w.finish(ds.d()).unwrap();
+    let mapped = ColStore::open_dataset(&dir).unwrap();
+    assert!(mapped.x.is_mapped());
+    (mapped, dir)
+}
+
+fn cfg() -> SolverConfig {
+    SolverConfig::default()
+        .with_lambda(0.02)
+        .with_sample_fraction(0.5)
+        .with_k(4)
+        .with_max_iters(24)
+        .with_history(4)
+        .with_seed(13)
+}
+
+fn assert_bit_identical(a: &SolverOutput, b: &SolverOutput, tag: &str) {
+    assert_eq!(a.w.len(), b.w.len(), "{tag}: w length");
+    for (i, (x, y)) in a.w.iter().zip(&b.w).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: w[{i}] {x} vs {y}");
+    }
+    assert_eq!(a.final_objective.to_bits(), b.final_objective.to_bits(), "{tag}: objective");
+    assert_eq!(a.iterations, b.iterations, "{tag}: iterations");
+    assert_eq!(a.history.len(), b.history.len(), "{tag}: history length");
+    for (ha, hb) in a.history.iter().zip(&b.history) {
+        assert_eq!(ha.objective.to_bits(), hb.objective.to_bits(), "{tag}: history objective");
+        assert_eq!(
+            ha.modeled_seconds.to_bits(),
+            hb.modeled_seconds.to_bits(),
+            "{tag}: history modeled time"
+        );
+    }
+    assert_eq!(a.trace.collective_rounds, b.trace.collective_rounds, "{tag}: rounds");
+    assert_eq!(a.modeled_seconds.to_bits(), b.modeled_seconds.to_bits(), "{tag}: modeled time");
+}
+
+/// The tentpole pin: same solve, both sources, every chunk geometry.
+/// chunk_cols = 1 puts every column in its own chunk; 7 leaves a ragged
+/// final chunk (60 = 8·7 + 4) with boundaries inside every sampled
+/// block; 60 and 4096 exercise the single-chunk case.
+#[test]
+fn mapped_solves_bit_identical_to_in_mem() {
+    let ds = in_mem(3);
+    let machine = MachineModel::comet();
+    for p in [1usize, 3] {
+        let baseline = run(&ds, &cfg(), p, &machine, AlgoKind::Sfista).unwrap();
+        for chunk_cols in [1usize, 7, 60, 4096] {
+            let tag = format!("sfista-p{p}-cc{chunk_cols}");
+            let (mapped, dir) = to_store(&ds, chunk_cols, &tag);
+            let out = run(&mapped, &cfg(), p, &machine, AlgoKind::Sfista).unwrap();
+            assert_bit_identical(&baseline, &out, &tag);
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+    // SPNM drives the dense-panel/gather path through the same seam.
+    let baseline = run(&ds, &cfg().with_q(4), 2, &machine, AlgoKind::Spnm).unwrap();
+    let (mapped, dir) = to_store(&ds, 7, "spnm");
+    let out = run(&mapped, &cfg().with_q(4), 2, &machine, AlgoKind::Spnm).unwrap();
+    assert_bit_identical(&baseline, &out, "spnm-p2-cc7");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A store fingerprint must equal the in-RAM fingerprint of the same
+/// bytes — the serve engine's plan reuse hinges on it.
+#[test]
+fn fingerprint_agrees_across_sources() {
+    let ds = in_mem(5);
+    let fp = Fingerprint::of(&ds).unwrap();
+    for chunk_cols in [1usize, 7, 4096] {
+        let (mapped, dir) = to_store(&ds, chunk_cols, &format!("fp{chunk_cols}"));
+        assert_eq!(fp, Fingerprint::of(&mapped).unwrap(), "chunk_cols={chunk_cols}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// One flipped byte anywhere in a touched chunk fails the *solve* as a
+/// dataset error — corruption can never yield a wrong answer.
+#[test]
+fn corrupt_chunk_fails_solve_wholesale() {
+    let ds = in_mem(9);
+    let (_, dir) = to_store(&ds, 7, "corrupt");
+    let path = dir.join("columns.bin");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&path, bytes).unwrap();
+    // Opening still succeeds (chunks validate lazily, on first touch)…
+    let mapped = ColStore::open_dataset(&dir).unwrap();
+    // …but any solve that touches the chunk dies with the dataset error.
+    let err = run(&mapped, &cfg(), 2, &MachineModel::comet(), AlgoKind::Sfista)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("corrupt chunk"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -257,7 +257,7 @@ fn persisted_cache_round_trips_bit_identically_prop() {
             }
         }
         // Truncate the file: rejected, nothing hydrated, recompute works.
-        let path = store.plan_path(&Fingerprint::of(&ds));
+        let path = store.plan_path(&Fingerprint::of(&ds).unwrap());
         let text = std::fs::read_to_string(&path).map_err(|e| e.to_string())?;
         std::fs::write(&path, &text[..text.len() / 3]).map_err(|e| e.to_string())?;
         let after = PlanCache::new();
@@ -384,7 +384,7 @@ fn one_byte_corruption_rejects_plan_and_warm_files_prop() {
             .reference_solution(&ds, g.f64_in(0.01, 0.5), 1e-2, 20_000)
             .map_err(|e| e.to_string())?;
         store.save(&ds, &cache).map_err(|e| e.to_string())?;
-        let fp = Fingerprint::of(&ds);
+        let fp = Fingerprint::of(&ds).unwrap();
 
         // --- plan.json: one mutated byte (or truncation) at a sampled
         // offset must reject the file wholesale ---
