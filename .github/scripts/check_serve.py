@@ -1,13 +1,19 @@
 #!/usr/bin/env python3
-"""Validate `ca-prox serve` JSON-lines responses (serve proto schema v1).
+"""Validate `ca-prox serve` JSON-lines responses (serve proto schema v2).
 
 Usage: check_serve.py LOG [--expect-jobs N] [--min-persisted-hits N]
                           [--min-warm-spill-hits N]
                           [--max-lipschitz-computes N] [--fleet]
+                          [--expect-shed N] [--max-queue-wait-ms N]
 
 Every non-empty line of LOG must parse as a JSON object with
-schema == 1 and a known event kind (the serve responses all go to
+schema == 2 and a known event kind (the serve responses all go to
 stdout; human chatter goes to stderr and never reaches the log).
+Every `error` event must carry a machine-readable string `code`;
+`over_quota` errors additionally must carry a numeric `retry_after_ms`
+backoff hint and are tolerated ONLY when `--expect-shed` says the log
+deliberately overran a quota — any other error (or any `failed`) is
+always fatal.
 
   --expect-jobs N           exactly N `done` events, N `queued` events,
                             and zero `failed`/`error` events
@@ -28,6 +34,12 @@ stdout; human chatter goes to stderr and never reaches the log).
                             the first server's plan (paying zero
                             setup) and warm-started from its spilled
                             solutions
+  --expect-shed N           the log deliberately overran a tenant
+                            quota: at least N `over_quota` error events
+                            (each with `retry_after_ms`), and the last
+                            `stats` event's `queue.shed` >= N
+  --max-queue-wait-ms N     the last `stats` event's `queue.max_wait_ms`
+                            must not exceed N — the tail-latency pin
 """
 
 import json
@@ -40,6 +52,7 @@ KNOWN_EVENTS = {
     "record",
     "done",
     "failed",
+    "deadline_exceeded",
     "drained",
     "stats",
     "error",
@@ -62,6 +75,8 @@ def main(argv):
     min_persisted = None
     min_warm_spill = None
     max_lipschitz = None
+    expect_shed = None
+    max_queue_wait_ms = None
     while len(args) > 1:
         if args[-2] == "--expect-jobs":
             expect_jobs = int(args[-1])
@@ -75,6 +90,12 @@ def main(argv):
         elif args[-2] == "--max-lipschitz-computes":
             max_lipschitz = int(args[-1])
             args = args[:-2]
+        elif args[-2] == "--expect-shed":
+            expect_shed = int(args[-1])
+            args = args[:-2]
+        elif args[-2] == "--max-queue-wait-ms":
+            max_queue_wait_ms = int(args[-1])
+            args = args[:-2]
         else:
             break
     if fleet:
@@ -85,11 +106,13 @@ def main(argv):
     if len(args) != 1:
         fail(
             "usage: check_serve.py LOG [--expect-jobs N] [--min-persisted-hits N] "
-            "[--min-warm-spill-hits N] [--max-lipschitz-computes N] [--fleet]"
+            "[--min-warm-spill-hits N] [--max-lipschitz-computes N] [--fleet] "
+            "[--expect-shed N] [--max-queue-wait-ms N]"
         )
     path = args[0]
     counts = {}
     last_stats = None
+    shed_errors = 0
     total = 0
     with open(path, encoding="utf-8") as fh:
         for lineno, line in enumerate(fh, 1):
@@ -103,20 +126,31 @@ def main(argv):
                 fail(f"{where}: unparseable response line ({e}): {line}")
             if not isinstance(obj, dict):
                 fail(f"{where}: response is not an object: {line}")
-            if obj.get("schema") != 1:
+            if obj.get("schema") != 2:
                 fail(f"{where}: bad or missing schema: {line}")
             event = obj.get("event")
             if event not in KNOWN_EVENTS:
                 fail(f"{where}: unknown event '{event}': {line}")
+            if event == "error":
+                code = obj.get("code")
+                if not isinstance(code, str):
+                    fail(f"{where}: error without a string code: {line}")
+                if code == "over_quota":
+                    if not isinstance(obj.get("retry_after_ms"), (int, float)):
+                        fail(f"{where}: over_quota without retry_after_ms: {line}")
+                    if expect_shed is None:
+                        fail(f"{where}: unexpected over_quota shed: {line}")
+                    shed_errors += 1
+                else:
+                    fail(f"{where}: '{code}' error event in the log: {line}")
             counts[event] = counts.get(event, 0) + 1
             if event == "stats":
                 last_stats = obj
             total += 1
     if total == 0:
         fail(f"{path}: no response lines found")
-    for bad in ("failed", "error"):
-        if counts.get(bad, 0):
-            fail(f"{path}: {counts[bad]} '{bad}' event(s) in the log")
+    if counts.get("failed", 0):
+        fail(f"{path}: {counts['failed']} 'failed' event(s) in the log")
     if expect_jobs is not None:
         for kind in ("queued", "done"):
             got = counts.get(kind, 0)
@@ -127,6 +161,14 @@ def main(argv):
         if last_stats is None:
             fail(f"{path}: a stats threshold was given but no stats event is in the log")
         return sum(d.get(key, 0) for d in last_stats.get("datasets", []))
+
+    def queue_field(key):
+        if last_stats is None:
+            fail(f"{path}: a queue threshold was given but no stats event is in the log")
+        queue = last_stats.get("queue")
+        if not isinstance(queue, dict) or key not in queue:
+            fail(f"{path}: last stats event has no queue.{key}")
+        return queue[key]
 
     if min_persisted is not None:
         hits = stats_sum("persisted_hits")
@@ -152,6 +194,27 @@ def main(argv):
                 "(the boot re-paid setup the store should have hydrated)"
             )
         print(f"check_serve: {path}: lipschitz_computes = {computes} <= {max_lipschitz}")
+    if expect_shed is not None:
+        if shed_errors < expect_shed:
+            fail(
+                f"{path}: {shed_errors} over_quota error(s) < {expect_shed} "
+                "(the over-quota burst was not shed)"
+            )
+        shed = queue_field("shed")
+        if shed < expect_shed:
+            fail(f"{path}: queue.shed = {shed} < {expect_shed}")
+        print(
+            f"check_serve: {path}: {shed_errors} over_quota error(s), "
+            f"queue.shed = {shed} >= {expect_shed}"
+        )
+    if max_queue_wait_ms is not None:
+        wait = queue_field("max_wait_ms")
+        if wait > max_queue_wait_ms:
+            fail(
+                f"{path}: queue.max_wait_ms = {wait} > {max_queue_wait_ms} "
+                "(tail latency regressed past the pin)"
+            )
+        print(f"check_serve: {path}: queue.max_wait_ms = {wait} <= {max_queue_wait_ms}")
     print(f"check_serve: {path}: {total} response line(s) OK ({counts})")
 
 

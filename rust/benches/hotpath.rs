@@ -22,7 +22,8 @@ use ca_prox::matrix::vecmath::{best_arch_vecmath, ScalarVecMath, VecMath};
 use ca_prox::datasets::Dataset;
 use ca_prox::runtime::backend::{GramBackend, NativeGramBackend};
 use ca_prox::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
-use ca_prox::serve::{ServeClient, Server, ServerConfig, SolveRequest};
+use ca_prox::error::CaError;
+use ca_prox::serve::{ServeClient, Server, ServerConfig, SolveRequest, TenantPolicy};
 use ca_prox::session::{Session, SolveSpec, Topology};
 use ca_prox::solvers::traits::{AlgoKind, GradientAt, SolverConfig};
 use ca_prox::store::{ColStore, ColStoreWriter};
@@ -91,14 +92,13 @@ fn serve_fleet_pair(ds: &Dataset, tag: &str, reps: usize, spec: &SolveSpec) {
     let store_dir = std::env::temp_dir()
         .join(format!("ca_prox_fleet_bench_{}_{tag}", std::process::id()));
     let run_batch = |writer: &str| {
-        let server = Server::new(
-            ServerConfig::default()
-                .with_threads(1)
-                .with_store(&store_dir)
-                .with_warm_pool_max(1)
-                .with_writer_id(writer),
-        )
-        .unwrap();
+        let server = ServerConfig::default()
+            .with_threads(1)
+            .with_store(&store_dir)
+            .with_warm_pool_max(1)
+            .with_writer_id(writer)
+            .build()
+            .unwrap();
         let id = server.register_dataset(ds.clone()).unwrap();
         let tickets: Vec<_> = [0.1, 0.05, 0.02]
             .iter()
@@ -138,6 +138,113 @@ fn serve_fleet_pair(ds: &Dataset, tag: &str, reps: usize, spec: &SolveSpec) {
         t_cold.median() / t_warm.median()
     );
     std::fs::remove_dir_all(&store_dir).ok();
+}
+
+/// The `serve/saturated-fifo` vs `serve/saturated-qos` hotpath pair
+/// (EXPERIMENTS.md; CI requires both via `check_bench.py --require`):
+/// mixed-traffic latency under saturation. Each rep floods the server
+/// with greedy traffic (3 clients × 8 jobs), then submits 3 light
+/// jobs and times ONLY the light jobs' completion — the latency a
+/// well-behaved tenant actually observes. The fifo server is one wide
+/// tenant (PR 4/5 behavior: strict submission order, nothing shed), so
+/// the light jobs wait behind the whole flood; the qos server gives
+/// each greedy client a tight quota and the light tenant weight 8, so
+/// over-quota greedy submits shed with `retry_after_ms` and the light
+/// jobs overtake the backlog. Asserted: the fifo run sheds nothing,
+/// the qos run sheds, and the qos light-job latency never exceeds
+/// fifo's.
+fn serve_saturation_pair(ds: &Dataset, tag: &str, reps: usize, spec: &SolveSpec) {
+    let flood = |server: &Server, id: &str, tenants: [&str; 3], shed: &mut usize| {
+        for tenant in tenants {
+            for i in 0..8u64 {
+                let job =
+                    SolveRequest::new(id, Topology::new(1), spec.clone().with_seed(10 + i))
+                        .with_tenant(tenant);
+                match server.submit(job) {
+                    Ok(_) => {}
+                    Err(CaError::Reject { .. }) => *shed += 1,
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+            }
+        }
+    };
+    let light_drain = |server: &Server, id: &str, tenant: &str| {
+        let tickets: Vec<_> = [0.1, 0.05, 0.02]
+            .iter()
+            .map(|&lambda| {
+                let job =
+                    SolveRequest::new(id, Topology::new(1), spec.clone().with_lambda(lambda))
+                        .with_tenant(tenant);
+                server.submit(job).unwrap()
+            })
+            .collect();
+        for t in &tickets {
+            t.wait().unwrap();
+        }
+    };
+    // FIFO baseline: every client shares ONE wide tenant — with equal
+    // priorities, DRR over a single queue is submission order, and the
+    // quotas are wide enough that nothing ever sheds. The light jobs
+    // pay for the whole flood. (This is what the queue looked like
+    // before admission control existed.)
+    let wide = TenantPolicy::default().with_max_queued(512).with_max_in_flight(512);
+    let fifo = ServerConfig::default()
+        .with_threads(2)
+        .with_queue_cap(512)
+        .with_tenant_default(wide)
+        .build()
+        .unwrap();
+    let fifo_id = fifo.register_dataset(ds.clone()).unwrap();
+    let mut fifo_shed = 0usize;
+    let t_fifo = bench(
+        &format!("serve/saturated-fifo ({tag}, 24-job flood, 3 light jobs)"),
+        0,
+        reps,
+        || {
+            flood(&fifo, &fifo_id, ["shared"; 3], &mut fifo_shed);
+            light_drain(&fifo, &fifo_id, "shared");
+        },
+    );
+    emit(&t_fifo);
+    fifo.shutdown().unwrap();
+    // QoS server: tight greedy quotas, heavy light weight.
+    let qos = ServerConfig::default()
+        .with_threads(2)
+        .with_tenant("g0", TenantPolicy::default().with_max_queued(4))
+        .with_tenant("g1", TenantPolicy::default().with_max_queued(4))
+        .with_tenant("g2", TenantPolicy::default().with_max_queued(4))
+        .with_tenant("light", TenantPolicy::default().with_weight(8))
+        .build()
+        .unwrap();
+    let qos_id = qos.register_dataset(ds.clone()).unwrap();
+    let mut qos_shed = 0usize;
+    let t_qos = bench(
+        &format!("serve/saturated-qos ({tag}, 24-job flood, 3 light jobs)"),
+        0,
+        reps,
+        || {
+            flood(&qos, &qos_id, ["g0", "g1", "g2"], &mut qos_shed);
+            light_drain(&qos, &qos_id, "light");
+        },
+    );
+    emit(&t_qos);
+    let q = qos.queue_stats();
+    assert_eq!(q.shed as usize, qos_shed, "every shed surfaced as a Reject");
+    qos.shutdown().unwrap(); // drains the leftover greedy backlog
+    assert_eq!(fifo_shed, 0, "the wide fifo tenant must never shed");
+    assert!(qos_shed >= 1, "tight quotas must shed under a 24-job flood");
+    assert!(
+        t_qos.median() <= t_fifo.median(),
+        "light-tenant latency under QoS ({:.6}s) must not exceed fifo ({:.6}s)",
+        t_qos.median(),
+        t_fifo.median()
+    );
+    println!(
+        "serve/saturated fifo-vs-qos light-job latency ({tag}): {:.2}x, qos shed {} of {} greedy submits",
+        t_fifo.median() / t_qos.median(),
+        qos_shed,
+        24 * reps
+    );
 }
 
 /// The `gram/generic-vs-arch` and `elementwise/scalar-vs-simd` hotpath
@@ -314,7 +421,9 @@ fn quick_mode() {
     });
     emit(&t);
     serve_boot_pair(&ds, "quick", 2, &spec.clone().with_max_iters(8));
-    serve_fleet_pair(&ds, "quick", 2, &spec.with_max_iters(8));
+    serve_fleet_pair(&ds, "quick", 2, &spec.clone().with_max_iters(8));
+    let small = load_preset("smoke", Some(300), 42).unwrap();
+    serve_saturation_pair(&small, "quick", 2, &spec.with_max_iters(8));
     simd_pairs(5);
     inmem_vs_mapped_pair(&ds, "quick", 5, 128);
     println!("\nhotpath quick OK");
@@ -529,7 +638,8 @@ fn main() {
         );
     }
 
-    // ---- serve engine: cold vs warm boot, single-node and fleet ----
+    // ---- serve engine: cold vs warm boot, single-node and fleet,
+    // and mixed-traffic latency under saturation ----
     {
         let spec = SolveSpec::default()
             .with_sample_fraction(0.05)
@@ -538,6 +648,8 @@ fn main() {
             .with_seed(1);
         serve_boot_pair(&ds, "covtype-50k", 3, &spec);
         serve_fleet_pair(&ds, "covtype-50k", 3, &spec);
+        let mixed = load_preset("smoke", Some(2000), 42).unwrap();
+        serve_saturation_pair(&mixed, "smoke-2k", 3, &spec.with_sample_fraction(0.5));
     }
     println!("\nhotpath OK");
 }

@@ -43,6 +43,18 @@ impl ParsedArgs {
         }
     }
 
+    /// Parse a value as i64 (for flags that accept negatives, like
+    /// `--priority`).
+    pub fn get_i64(&self, name: &str) -> Result<Option<i64>> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CaError::Config(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
     /// Parse a value as f64.
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
         match self.values.get(name) {
@@ -188,6 +200,7 @@ mod tests {
         let spec = ArgSpec::run_flags();
         let p = spec.parse(&sv(&["--p", "8", "--b", "0.1", "--json"])).unwrap();
         assert_eq!(p.get_usize("p").unwrap(), Some(8));
+        assert_eq!(p.get_i64("p").unwrap(), Some(8));
         assert_eq!(p.get_f64("b").unwrap(), Some(0.1));
         assert!(p.has("json"));
         assert!(!p.has("config"));
@@ -201,6 +214,10 @@ mod tests {
         assert!(spec.parse(&sv(&["--p"])).is_err());
         assert!(spec.parse(&sv(&["p", "8"])).is_err());
         assert!(spec.parse(&sv(&["--p", "x"])).unwrap().get_usize("p").is_err());
+        // get_i64 accepts negatives where get_usize must not.
+        let p = spec.parse(&sv(&["--k", "-3"])).unwrap();
+        assert_eq!(p.get_i64("k").unwrap(), Some(-3));
+        assert!(p.get_usize("k").is_err());
     }
 
     #[test]

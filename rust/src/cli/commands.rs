@@ -9,8 +9,8 @@ use crate::grid::{BenchEmitter, Grid, NoopSweepObserver, PlanCache, SweepObserve
 use crate::metrics::report::RunReport;
 use crate::runtime::artifact::{default_artifacts_root, plancache_root};
 use crate::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
-use crate::serve::proto::{serve_loop, submit_to_json, SubmitCmd};
-use crate::serve::server::{DatasetRef, Server, ServerConfig};
+use crate::serve::proto::{serve_loop, submit_to_json, SubmitCmd, PROTO_SCHEMA};
+use crate::serve::server::{DatasetRef, ServerConfig, TenantPolicy};
 use crate::serve::store::PlanStore;
 use crate::session::Session;
 use crate::solvers::traits::SolverOutput;
@@ -250,6 +250,21 @@ pub fn cmd_serve(argv: &[String]) -> Result<()> {
             help: "per-tag warm-pool LRU bound, ≥ 1 (default 16; evictions spill to the store)",
         },
         Flag {
+            name: "tenant-max-queued",
+            takes_value: true,
+            help: "per-tenant queued-job quota (default 32; over-quota submits shed)",
+        },
+        Flag {
+            name: "tenant-max-inflight",
+            takes_value: true,
+            help: "per-tenant concurrent-job cap (default 8)",
+        },
+        Flag {
+            name: "tenant-weights",
+            takes_value: true,
+            help: "per-tenant scheduler weights, e.g. 'ci=1,prod=8'",
+        },
+        Flag {
             name: "socket",
             takes_value: true,
             help: "listen on HOST:PORT instead of stdin/stdout",
@@ -274,7 +289,27 @@ pub fn cmd_serve(argv: &[String]) -> Result<()> {
     if let Some(max_entries) = parsed.get_usize("warm-pool-max")? {
         config = config.with_warm_pool_max(max_entries);
     }
-    let server = Server::new(config)?;
+    let mut default_policy = TenantPolicy::default();
+    if let Some(max_queued) = parsed.get_usize("tenant-max-queued")? {
+        default_policy = default_policy.with_max_queued(max_queued);
+    }
+    if let Some(max_in_flight) = parsed.get_usize("tenant-max-inflight")? {
+        default_policy = default_policy.with_max_in_flight(max_in_flight);
+    }
+    config = config.with_tenant_default(default_policy);
+    if let Some(weights) = parsed.get("tenant-weights") {
+        for entry in weights.split(',') {
+            let (name, weight) = entry.trim().split_once('=').ok_or_else(|| {
+                CaError::Config(format!("--tenant-weights: expected name=weight, got '{entry}'"))
+            })?;
+            let weight: u64 = weight.parse().map_err(|_| {
+                CaError::Config(format!("--tenant-weights: bad weight in '{entry}'"))
+            })?;
+            config = config.with_tenant(name, default_policy.with_weight(weight));
+        }
+    }
+    // All limits are cross-checked here, before any socket is bound.
+    let server = config.build()?;
     match parsed.get("socket") {
         None => {
             let stdin = std::io::stdin();
@@ -307,13 +342,21 @@ pub fn cmd_serve(argv: &[String]) -> Result<()> {
 
 /// `ca-prox submit` — send one solve to a running `ca-prox serve
 /// --socket` server and stream its responses. Reuses the `run` flag set
-/// for the job itself, plus `--socket` (required), `--gen-seed` and
-/// `--warm-tag`.
+/// for the job itself, plus `--socket` (required), `--gen-seed`,
+/// `--warm-tag` and the QoS fields `--tenant`, `--priority`,
+/// `--deadline-ms`.
 pub fn cmd_submit(argv: &[String]) -> Result<()> {
     let flags = ArgSpec::run_flags().with_flags(vec![
         Flag { name: "socket", takes_value: true, help: "server address HOST:PORT (required)" },
         Flag { name: "gen-seed", takes_value: true, help: "synthetic generator seed" },
         Flag { name: "warm-tag", takes_value: true, help: "warm-start pool tag" },
+        Flag { name: "tenant", takes_value: true, help: "tenant name (default: server default)" },
+        Flag { name: "priority", takes_value: true, help: "within-tenant priority (higher first)" },
+        Flag {
+            name: "deadline-ms",
+            takes_value: true,
+            help: "queue-wait deadline; expired jobs fail fast, never run",
+        },
     ]);
     let parsed = flags.parse(argv)?;
     let socket = parsed
@@ -326,11 +369,14 @@ pub fn cmd_submit(argv: &[String]) -> Result<()> {
         topology: spec.topology,
         solve: spec.solve.clone(),
         warm_tag: parsed.get("warm-tag").map(String::from),
+        tenant: parsed.get("tenant").map(String::from),
+        priority: parsed.get_i64("priority")?.unwrap_or(0),
+        deadline_ms: parsed.get_usize("deadline-ms")?.map(|ms| ms as u64),
     };
     let stream = std::net::TcpStream::connect(socket)?;
     let mut writer = stream.try_clone()?;
     writeln!(writer, "{}", submit_to_json(&cmd).to_string_compact())?;
-    writeln!(writer, "{{\"schema\":1,\"op\":\"drain\"}}")?;
+    writeln!(writer, "{{\"schema\":{PROTO_SCHEMA},\"op\":\"drain\"}}")?;
     writer.flush()?;
     let reader = std::io::BufReader::new(stream);
     for line in reader.lines() {
@@ -623,5 +669,42 @@ mod tests {
         let err =
             cmd_serve(&sv(&["--writer-id", "../escape", "--store", "none"])).unwrap_err();
         assert!(err.to_string().contains("writer id"), "{err}");
+    }
+
+    #[test]
+    fn serve_rejects_bad_tenant_flags() {
+        // Malformed weight list fails at flag parsing.
+        let err = cmd_serve(&sv(&["--tenant-weights", "noequals", "--store", "none"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("name=weight"), "{err}");
+        let err = cmd_serve(&sv(&["--tenant-weights", "t=fast", "--store", "none"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("bad weight"), "{err}");
+        // Cross-checks run in build(), before any socket is bound: the
+        // default per-tenant quota (32) cannot fit a 4-slot queue…
+        let err = cmd_serve(&sv(&["--queue", "4", "--store", "none"])).unwrap_err();
+        assert!(err.to_string().contains("queue cap"), "{err}");
+        // …and a zero weight is rejected wherever it comes from.
+        let err = cmd_serve(&sv(&[
+            "--queue", "64", "--tenant-weights", "t=0", "--store", "none",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("weight"), "{err}");
+    }
+
+    #[test]
+    fn submit_validates_qos_flags_before_connecting() {
+        // No server is listening on this socket; a bad flag must fail
+        // during parsing, before any connection attempt.
+        let err = cmd_submit(&sv(&[
+            "--socket", "127.0.0.1:9", "--dataset", "smoke", "--priority", "x",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("expected integer"), "{err}");
+        let err = cmd_submit(&sv(&[
+            "--socket", "127.0.0.1:9", "--dataset", "smoke", "--deadline-ms", "-5",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("expected integer"), "{err}");
     }
 }

@@ -19,7 +19,7 @@ use std::sync::Mutex;
 /// the grid treated it as "auto" and the serve engine rejected it — three
 /// different answers to the same flag). [`SimCluster::with_threads`],
 /// [`crate::grid::SweepSpec::validate`] and
-/// [`crate::serve::Server::new`] all route through this.
+/// [`crate::serve::ServerConfig::build`] all route through this.
 pub fn resolve_threads(requested: Option<usize>) -> Result<usize> {
     match requested {
         Some(0) => Err(CaError::Config(

@@ -33,6 +33,22 @@ pub enum CaError {
     #[error("solver error: {0}")]
     Solver(String),
 
+    /// Structured admission-control rejection from the serve engine:
+    /// the request was shed (`over_quota`) or expired
+    /// (`deadline_exceeded`) rather than failed. `retry_after_ms` is
+    /// the server's backoff hint — resubmitting after that long has a
+    /// reasonable chance of being admitted.
+    #[error("{code}: {msg} (retry after {retry_after_ms}ms)")]
+    Reject {
+        /// Machine-readable rejection class (`over_quota`,
+        /// `deadline_exceeded`).
+        code: String,
+        /// Suggested client backoff before resubmitting.
+        retry_after_ms: u64,
+        /// Human-readable detail.
+        msg: String,
+    },
+
     /// JSON / config parse failure.
     #[error("parse error at {pos}: {msg}")]
     Parse { pos: usize, msg: String },

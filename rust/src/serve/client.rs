@@ -10,7 +10,9 @@
 use crate::datasets::Dataset;
 use crate::error::Result;
 use crate::grid::CacheStats;
-use crate::serve::server::{DatasetRef, JobTicket, Server, ServerConfig, SolveRequest};
+use crate::serve::server::{
+    DatasetRef, JobTicket, QueueStats, Server, ServerConfig, ServerStats, SolveRequest,
+};
 use crate::session::{SolveSpec, Topology};
 use crate::solvers::traits::SolverOutput;
 
@@ -21,9 +23,10 @@ pub struct ServeClient {
 }
 
 impl ServeClient {
-    /// Start a server with `config` and wrap it.
+    /// Validate `config` and start its server
+    /// ([`ServerConfig::build`]), then wrap it.
     pub fn start(config: ServerConfig) -> Result<Self> {
-        Ok(ServeClient { server: Server::new(config)? })
+        Ok(ServeClient { server: config.build()? })
     }
 
     /// The wrapped server.
@@ -59,6 +62,16 @@ impl ServeClient {
     /// Cache statistics of one registered dataset.
     pub fn dataset_stats(&self, id: &str) -> Option<CacheStats> {
         self.server.dataset_stats(id)
+    }
+
+    /// Full server statistics: per-dataset caches + queue/tenant QoS.
+    pub fn stats(&self) -> ServerStats {
+        self.server.stats()
+    }
+
+    /// Scheduler statistics only (global + per-tenant).
+    pub fn queue_stats(&self) -> QueueStats {
+        self.server.queue_stats()
     }
 
     /// In-memory warm-pool occupancy of one registered dataset (spilled

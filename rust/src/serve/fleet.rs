@@ -99,6 +99,13 @@ pub fn validate_pool_tag(tag: &str) -> Result<()> {
     validate_path_component("warm-pool tag", tag)
 }
 
+/// Validate a tenant name. Tenants arrive over the wire and are
+/// candidates for per-tenant store/spill directories, so they follow
+/// the same path-component rule as pool tags and writer ids.
+pub fn validate_tenant(name: &str) -> Result<()> {
+    validate_path_component("tenant name", name)
+}
+
 /// A fleet writer's identity — the `<writer_id>` in `lease.<writer_id>`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct WriterId(String);
@@ -220,10 +227,12 @@ mod tests {
         for good in ["a", "w0", "ci-runner_3", "node.7", "pid12345"] {
             WriterId::new(good).unwrap();
             validate_pool_tag(good).unwrap();
+            validate_tenant(good).unwrap();
         }
         for bad in ["", ".", "..", ".hidden", "a/b", "a\\b", "sp ace", "λ", &"x".repeat(65)] {
             assert!(WriterId::new(bad).is_err(), "'{bad}' must be rejected");
             assert!(validate_pool_tag(bad).is_err(), "'{bad}' must be rejected");
+            assert!(validate_tenant(bad).is_err(), "'{bad}' must be rejected");
         }
     }
 

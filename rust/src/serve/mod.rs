@@ -15,7 +15,8 @@
 //!                                        │
 //!                                 serve::Server
 //!                          registry: fingerprint → dataset
-//!                          bounded queue → worker pool
+//!                   admission control → per-tenant queues
+//!                      weighted DRR scheduler → worker pool
 //!                                        │
 //!                      Session (per job) ── Arc<PlanCache> (per dataset)
 //!                                        │         ↕ hydrate / save
@@ -34,12 +35,15 @@
 //!   writers race through atomic renames, readers re-validate the
 //!   loaded generation, stale leases expire by generation — never wall
 //!   clock, so replays stay deterministic.
-//! * [`server`] — the resident service: dataset registry, bounded work
-//!   queue, deterministic jobs, streamed [`server::JobEvent`]s reusing
-//!   the [`crate::session::Observer`] machinery, and LRU-bounded
-//!   warm-start pools for λ-path traffic that spill evictions to the
-//!   store — a pool miss falls through to disk, so a second server
-//!   warm-starts from solutions the first one computed.
+//! * [`server`] — the resident service: dataset registry, per-tenant
+//!   admission control (quota-full submits shed with a
+//!   `retry_after_ms` hint instead of blocking), a weighted
+//!   deficit-round-robin scheduler with priorities and queue-wait
+//!   deadlines, deterministic jobs, streamed [`server::JobEvent`]s
+//!   reusing the [`crate::session::Observer`] machinery, and
+//!   LRU-bounded warm-start pools for λ-path traffic that spill
+//!   evictions to the store — a pool miss falls through to disk, so a
+//!   second server warm-starts from solutions the first one computed.
 //! * [`proto`] + [`client`] — the schema-versioned JSON-lines protocol
 //!   behind `ca-prox serve` / `ca-prox submit`, and the in-process
 //!   client the tests and benches drive.
@@ -51,7 +55,12 @@
 //! recompute, concurrent leased writers never tear the shared plan
 //! file, any one-byte corruption of a plan or warm file is rejected
 //! wholesale, and a second server on a shared store warm-starts from
-//! the first one's spilled solutions (`warm_spill_hits ≥ 1`).
+//! the first one's spilled solutions (`warm_spill_hits ≥ 1`). The QoS
+//! battery adds: over-quota submits shed with structured
+//! `over_quota`/`retry_after_ms` errors instead of blocking, expired
+//! deadlines never reach a worker, a light tenant is never starved by
+//! greedy ones — and scheduling may reorder or reject jobs but never
+//! changes any accepted job's bits.
 
 pub mod client;
 pub mod fingerprint;
@@ -62,10 +71,11 @@ pub mod store;
 
 pub use client::ServeClient;
 pub use fingerprint::Fingerprint;
-pub use fleet::{validate_pool_tag, Lease, WriterId, LEASE_SCHEMA};
+pub use fleet::{validate_pool_tag, validate_tenant, Lease, WriterId, LEASE_SCHEMA};
 pub use proto::{parse_request, serve_loop, Request, SubmitCmd, PROTO_SCHEMA};
 pub use server::{
-    DatasetRef, JobEvent, JobEventKind, JobId, JobTicket, Server, ServerConfig, SolveRequest,
-    DEFAULT_WARM_POOL_MAX,
+    DatasetRef, DatasetStats, JobEvent, JobEventKind, JobId, JobTicket, LatencyStats, QueueStats,
+    Server, ServerConfig, ServerStats, SolveRequest, TenantPolicy, TenantStats, DEFAULT_TENANT,
+    DEFAULT_TENANT_MAX_INFLIGHT, DEFAULT_TENANT_MAX_QUEUED, DEFAULT_WARM_POOL_MAX,
 };
 pub use store::{HydrateReport, PlanStore, WarmLoad, STORE_SCHEMA, WARM_SCHEMA};

@@ -1,4 +1,4 @@
-//! JSON-lines request/response protocol (schema v1) for the serve
+//! JSON-lines request/response protocol (schema v2) for the serve
 //! engine, plus the blocking loop behind `ca-prox serve`.
 //!
 //! One request per line in, one response object per line out — the
@@ -7,40 +7,52 @@
 //! (`.github/scripts/check_serve.py` does exactly that in CI).
 //!
 //! ```text
-//! → {"schema":1,"op":"submit","dataset":{"name":"smoke","scale_n":400},
-//!    "topology":{"p":2},"solve":{"k":4,"b":0.5,"lambda":0.05,"iters":8,"seed":3}}
-//! ← {"schema":1,"event":"queued","job":1,"dataset":"d12-n400-…"}
-//! → {"schema":1,"op":"drain"}
-//! ← {"schema":1,"event":"started","job":1}
-//! ← {"schema":1,"event":"block","job":1,"t0":0,"k_eff":4,…}
-//! ← {"schema":1,"event":"done","job":1,"output":{…}}
-//! ← {"schema":1,"event":"drained","jobs":1}
-//! → {"schema":1,"op":"stats"}
-//! ← {"schema":1,"event":"stats","datasets":[{"fingerprint":…,"persisted_hits":…}]}
-//! → {"schema":1,"op":"shutdown"}
-//! ← {"schema":1,"event":"bye"}
+//! → {"schema":2,"op":"submit","dataset":{"name":"smoke","scale_n":400},
+//!    "topology":{"p":2},"solve":{"k":4,"b":0.5,"lambda":0.05,"iters":8,"seed":3},
+//!    "tenant":"ci","priority":3,"deadline_ms":60000}
+//! ← {"schema":2,"event":"queued","job":1,"dataset":"d12-n400-…","tenant":"ci"}
+//! → {"schema":2,"op":"drain"}
+//! ← {"schema":2,"event":"started","job":1}
+//! ← {"schema":2,"event":"block","job":1,"t0":0,"k_eff":4,…}
+//! ← {"schema":2,"event":"done","job":1,"output":{…}}
+//! ← {"schema":2,"event":"drained","jobs":1}
+//! → {"schema":2,"op":"stats"}
+//! ← {"schema":2,"event":"stats","datasets":[…],"queue":{"depth":0,…,"tenants":[…]}}
+//! → {"schema":2,"op":"shutdown"}
+//! ← {"schema":2,"event":"bye"}
 //! ```
+//!
+//! Schema v2 (this PR) adds multi-tenant QoS to v1: `tenant`,
+//! `priority` and `deadline_ms` on submit, a `deadline_exceeded` job
+//! event, a structured `error` response (`code` +
+//! optional `retry_after_ms` — a shed submit answers
+//! `{"event":"error","code":"over_quota","retry_after_ms":…}` instead
+//! of blocking), and nested queue/tenant statistics.
 //!
 //! Submit is asynchronous (the response is `queued`; jobs run on the
 //! worker pool immediately) and `drain` blocks until every job
 //! submitted on this connection finished, replaying each job's full
 //! event stream in job order — deterministic output for a pipe, full
 //! concurrency underneath. Topology/solve fields reuse the config
-//! system's key set ([`crate::config::spec::RunSpec::apply_kv`]), so
-//! the CLI, TOML configs and the wire protocol can never drift apart.
+//! system's key set ([`crate::config::spec::RunSpec::apply_kv`]), and
+//! a parsed submit lowers into the in-process [`SolveRequest`] through
+//! [`SubmitCmd::into_request`] — one validation path, so the CLI, TOML
+//! configs and the wire protocol can never drift apart.
 
 use crate::config::parse::TomlValue;
 use crate::config::spec::RunSpec;
 use crate::error::{CaError, Result};
-use crate::grid::CacheStats;
-use crate::serve::server::{DatasetRef, JobEvent, JobEventKind, Server, SolveRequest};
+use crate::serve::server::{
+    DatasetRef, JobEvent, JobEventKind, LatencyStats, QueueStats, Server, ServerStats,
+    SolveRequest, TenantStats,
+};
 use crate::session::{SolveSpec, Topology};
 use crate::solvers::traits::AlgoKind;
 use crate::util::json::{parse, Json};
 use std::io::{BufRead, Write};
 
 /// Protocol schema version (requests and responses).
-pub const PROTO_SCHEMA: usize = 1;
+pub const PROTO_SCHEMA: usize = 2;
 
 const TOPOLOGY_KEYS: [&str; 4] = ["p", "machine", "allreduce", "partition"];
 const SOLVE_KEYS: [&str; 8] = ["algo", "k", "q", "b", "lambda", "iters", "seed", "record_every"];
@@ -50,18 +62,21 @@ const SOLVE_KEYS: [&str; 8] = ["algo", "k", "q", "b", "lambda", "iters", "seed",
 pub enum Request {
     /// Liveness check → `pong`.
     Ping,
-    /// Enqueue a solve → `queued`.
+    /// Enqueue a solve → `queued` (or a structured `error` when
+    /// admission control sheds it).
     Submit(Box<SubmitCmd>),
     /// Block until every job submitted on this connection finished,
     /// replaying their event streams → `drained`.
     Drain,
-    /// Per-dataset cache statistics → `stats`.
+    /// Dataset + queue/tenant statistics → `stats`.
     Stats,
     /// Stop the serve loop → `bye`.
     Shutdown,
 }
 
-/// Payload of a `submit` request.
+/// Payload of a `submit` request — a thin parse-level wrapper that
+/// lowers into the in-process [`SolveRequest`] via
+/// [`SubmitCmd::into_request`] once the dataset is registered.
 #[derive(Clone, Debug)]
 pub struct SubmitCmd {
     /// Which dataset to solve on (resolved + registered server-side).
@@ -72,6 +87,32 @@ pub struct SubmitCmd {
     pub solve: SolveSpec,
     /// Optional warm-start pool tag.
     pub warm_tag: Option<String>,
+    /// Optional tenant (None = the server's default tenant).
+    pub tenant: Option<String>,
+    /// Within-tenant priority (higher first; default 0).
+    pub priority: i64,
+    /// Optional queue-wait deadline, milliseconds.
+    pub deadline_ms: Option<u64>,
+}
+
+impl SubmitCmd {
+    /// Lower the parsed wire command into the in-process request.
+    /// `dataset_id` is the registered id the server resolved
+    /// [`SubmitCmd::dataset`] to. Runs [`SolveRequest::validate`] — the
+    /// single validation path shared with direct [`Server::submit`]
+    /// callers and the CLI, so every surface rejects the same requests
+    /// with the same messages.
+    pub fn into_request(self, dataset_id: &str) -> Result<SolveRequest> {
+        let mut req = SolveRequest::new(dataset_id, self.topology, self.solve);
+        req.warm_tag = self.warm_tag;
+        if let Some(tenant) = self.tenant {
+            req.tenant = tenant;
+        }
+        req.priority = self.priority;
+        req.deadline_ms = self.deadline_ms;
+        req.validate()?;
+        Ok(req)
+    }
 }
 
 /// Parse one request line.
@@ -94,6 +135,15 @@ pub fn parse_request(line: &str) -> Result<Request> {
         Some("submit") => Ok(Request::Submit(Box::new(parse_submit(&root)?))),
         Some(other) => Err(CaError::Config(format!("unknown op '{other}'"))),
         None => Err(CaError::Config("request missing op".into())),
+    }
+}
+
+/// A strictly integral number field (floats with a fraction and
+/// non-numbers are rejected, not truncated).
+fn int_field(v: &Json, name: &str) -> Result<i64> {
+    match v.as_f64() {
+        Some(x) if x.fract() == 0.0 && x.abs() <= 2f64.powi(53) => Ok(x as i64),
+        _ => Err(CaError::Config(format!("{name} must be an integer"))),
     }
 }
 
@@ -124,7 +174,34 @@ fn parse_submit(root: &Json) -> Result<SubmitCmd> {
         Some(Json::Str(s)) => Some(s.clone()),
         Some(_) => return Err(CaError::Config("warm_tag must be a string".into())),
     };
-    Ok(SubmitCmd { dataset, topology: spec.topology, solve: spec.solve, warm_tag })
+    let tenant = match root.get("tenant") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(_) => return Err(CaError::Config("tenant must be a string".into())),
+    };
+    let priority = match root.get("priority") {
+        None | Some(Json::Null) => 0,
+        Some(v) => int_field(v, "priority")?,
+    };
+    let deadline_ms = match root.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            let ms = int_field(v, "deadline_ms")?;
+            if ms < 0 {
+                return Err(CaError::Config("deadline_ms must be ≥ 0".into()));
+            }
+            Some(ms as u64)
+        }
+    };
+    Ok(SubmitCmd {
+        dataset,
+        topology: spec.topology,
+        solve: spec.solve,
+        warm_tag,
+        tenant,
+        priority,
+        deadline_ms,
+    })
 }
 
 fn apply_section(spec: &mut RunSpec, v: &Json, section: &str, allowed: &[&str]) -> Result<()> {
@@ -151,7 +228,9 @@ fn apply_section(spec: &mut RunSpec, v: &Json, section: &str, allowed: &[&str]) 
 
 /// Serialize a [`SubmitCmd`] back to its request line (used by
 /// `ca-prox submit` and by the round-trip tests). Only protocol-visible
-/// fields are carried: warm starts travel as tags, never as vectors.
+/// fields are carried: warm starts travel as tags, never as vectors,
+/// and defaulted QoS fields (tenant, priority 0, no deadline) are
+/// omitted.
 pub fn submit_to_json(cmd: &SubmitCmd) -> Json {
     let mut dataset = vec![("name", Json::Str(cmd.dataset.name.clone()))];
     if let Some(n) = cmd.dataset.scale_n {
@@ -193,6 +272,15 @@ pub fn submit_to_json(cmd: &SubmitCmd) -> Json {
     if let Some(tag) = &cmd.warm_tag {
         pairs.push(("warm_tag", Json::Str(tag.clone())));
     }
+    if let Some(tenant) = &cmd.tenant {
+        pairs.push(("tenant", Json::Str(tenant.clone())));
+    }
+    if cmd.priority != 0 {
+        pairs.push(("priority", Json::Num(cmd.priority as f64)));
+    }
+    if let Some(ms) = cmd.deadline_ms {
+        pairs.push(("deadline_ms", Json::Num(ms as f64)));
+    }
     Json::obj(pairs)
 }
 
@@ -227,10 +315,14 @@ fn response(event: &str, mut extra: Vec<(&str, Json)>) -> String {
 }
 
 /// `queued` acknowledgement for a submit.
-pub fn queued_line(job: u64, dataset_id: &str) -> String {
+pub fn queued_line(job: u64, dataset_id: &str, tenant: &str) -> String {
     response(
         "queued",
-        vec![("job", Json::Num(job as f64)), ("dataset", Json::Str(dataset_id.into()))],
+        vec![
+            ("job", Json::Num(job as f64)),
+            ("dataset", Json::Str(dataset_id.into())),
+            ("tenant", Json::Str(tenant.into())),
+        ],
     )
 }
 
@@ -264,6 +356,10 @@ pub fn event_line(ev: &JobEvent) -> String {
         JobEventKind::Failed(msg) => {
             response("failed", vec![job, ("message", Json::Str(msg.clone()))])
         }
+        JobEventKind::DeadlineExceeded { waited_ms } => response(
+            "deadline_exceeded",
+            vec![job, ("waited_ms", Json::Num(*waited_ms as f64))],
+        ),
     }
 }
 
@@ -272,16 +368,62 @@ pub fn drained_line(jobs: usize) -> String {
     response("drained", vec![("jobs", Json::Num(jobs as f64))])
 }
 
-/// Per-dataset cache statistics (every [`CacheStats`] counter,
-/// including `persisted_hits` / `store_writes` and the fleet's warm
-/// counters — the CI serve-smoke and fleet-smoke steps assert on
-/// these) plus the in-memory warm-pool occupancy.
-pub fn stats_line(stats: &[(String, CacheStats, usize)]) -> String {
+fn latency_pairs(prefix: &str, l: &LatencyStats) -> Vec<(String, Json)> {
+    vec![
+        (format!("mean_{prefix}_ms"), Json::Num(l.mean_ms())),
+        (format!("max_{prefix}_ms"), Json::Num(l.max_ms)),
+    ]
+}
+
+fn tenant_json(t: &TenantStats) -> Json {
+    let mut pairs = vec![
+        ("tenant".to_string(), Json::Str(t.tenant.clone())),
+        ("weight".to_string(), Json::Num(t.weight as f64)),
+        ("max_queued".to_string(), Json::Num(t.max_queued as f64)),
+        ("max_in_flight".to_string(), Json::Num(t.max_in_flight as f64)),
+        ("depth".to_string(), Json::Num(t.depth as f64)),
+        ("in_flight".to_string(), Json::Num(t.in_flight as f64)),
+        ("submitted".to_string(), Json::Num(t.submitted as f64)),
+        ("completed".to_string(), Json::Num(t.completed as f64)),
+        ("shed".to_string(), Json::Num(t.shed as f64)),
+        ("deadline_expired".to_string(), Json::Num(t.deadline_expired as f64)),
+    ];
+    pairs.extend(latency_pairs("wait", &t.wait));
+    pairs.extend(latency_pairs("service", &t.service));
+    Json::Obj(pairs.into_iter().collect())
+}
+
+fn queue_json(q: &QueueStats) -> Json {
+    let mut pairs = vec![
+        ("depth".to_string(), Json::Num(q.depth as f64)),
+        ("in_flight".to_string(), Json::Num(q.in_flight as f64)),
+        ("submitted".to_string(), Json::Num(q.submitted as f64)),
+        ("completed".to_string(), Json::Num(q.completed as f64)),
+        ("shed".to_string(), Json::Num(q.shed as f64)),
+        ("deadline_expired".to_string(), Json::Num(q.deadline_expired as f64)),
+    ];
+    pairs.extend(latency_pairs("wait", &q.wait));
+    pairs.extend(latency_pairs("service", &q.service));
+    pairs.push((
+        "tenants".to_string(),
+        Json::Arr(q.tenants.iter().map(tenant_json).collect()),
+    ));
+    Json::Obj(pairs.into_iter().collect())
+}
+
+/// Full server statistics: per-dataset cache counters (every
+/// `CacheStats` field, including `persisted_hits` / `store_writes` and
+/// the fleet's warm counters — the CI serve-smoke and fleet-smoke steps
+/// assert on these) plus the scheduler's global and per-tenant queue
+/// state.
+pub fn stats_line(stats: &ServerStats) -> String {
     let datasets = stats
+        .datasets
         .iter()
-        .map(|(fp, s, warm_entries)| {
+        .map(|d| {
+            let s = &d.cache;
             Json::obj(vec![
-                ("fingerprint", Json::Str(fp.clone())),
+                ("fingerprint", Json::Str(d.id.clone())),
                 ("lipschitz_computes", Json::Num(s.lipschitz_computes as f64)),
                 ("lipschitz_hits", Json::Num(s.lipschitz_hits as f64)),
                 ("reference_computes", Json::Num(s.reference_computes as f64)),
@@ -292,16 +434,40 @@ pub fn stats_line(stats: &[(String, CacheStats, usize)]) -> String {
                 ("store_writes", Json::Num(s.store_writes as f64)),
                 ("warm_evictions", Json::Num(s.warm_evictions as f64)),
                 ("warm_spill_hits", Json::Num(s.warm_spill_hits as f64)),
-                ("warm_pool_entries", Json::Num(*warm_entries as f64)),
+                ("warm_pool_entries", Json::Num(d.warm_pool_entries as f64)),
             ])
         })
         .collect();
-    response("stats", vec![("datasets", Json::Arr(datasets))])
+    response(
+        "stats",
+        vec![("datasets", Json::Arr(datasets)), ("queue", queue_json(&stats.queue))],
+    )
 }
 
-/// Error response (the loop keeps serving after one).
-pub fn error_line(message: &str) -> String {
-    response("error", vec![("message", Json::Str(message.into()))])
+/// Structured error response (the loop keeps serving after one).
+/// `code` is machine-readable (`over_quota`, `deadline_exceeded`,
+/// `bad_request`); `retry_after_ms` is attached when the server sheds
+/// load and suggests a backoff.
+pub fn error_line(code: &str, message: &str, retry_after_ms: Option<u64>) -> String {
+    let mut extra = vec![
+        ("code", Json::Str(code.into())),
+        ("message", Json::Str(message.into())),
+    ];
+    if let Some(ms) = retry_after_ms {
+        extra.push(("retry_after_ms", Json::Num(ms as f64)));
+    }
+    response("error", extra)
+}
+
+/// Map a [`CaError`] to its wire error line: structured rejections keep
+/// their code and backoff hint; everything else is a `bad_request`.
+fn error_line_for(e: &CaError) -> String {
+    match e {
+        CaError::Reject { code, retry_after_ms, msg } => {
+            error_line(code, msg, Some(*retry_after_ms))
+        }
+        other => error_line("bad_request", &other.to_string(), None),
+    }
 }
 
 /// `ping` response.
@@ -330,7 +496,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
             continue;
         }
         match parse_request(trimmed) {
-            Err(e) => writeln!(writer, "{}", error_line(&e.to_string()))?,
+            Err(e) => writeln!(writer, "{}", error_line_for(&e))?,
             Ok(Request::Ping) => writeln!(writer, "{}", pong_line())?,
             Ok(Request::Stats) => writeln!(writer, "{}", stats_line(&server.stats()))?,
             Ok(Request::Shutdown) => {
@@ -342,7 +508,8 @@ pub fn serve_loop<R: BufRead, W: Write>(
                 let jobs = pending.len();
                 for ticket in pending.drain(..) {
                     // Failures are reported through the job's own
-                    // `failed` event; the drain itself never errors.
+                    // `failed` / `deadline_exceeded` event; the drain
+                    // itself never errors.
                     let _ = ticket.wait();
                     for ev in ticket.events() {
                         writeln!(writer, "{}", event_line(&ev))?;
@@ -352,16 +519,16 @@ pub fn serve_loop<R: BufRead, W: Write>(
             }
             Ok(Request::Submit(cmd)) => {
                 let queued = server.register_ref(&cmd.dataset).and_then(|id| {
-                    let mut req = SolveRequest::new(&id, cmd.topology, cmd.solve.clone());
-                    req.warm_tag = cmd.warm_tag.clone();
-                    server.submit(req).map(|t| (t, id))
+                    let req = cmd.into_request(&id)?;
+                    let tenant = req.tenant.clone();
+                    server.submit(req).map(|t| (t, id, tenant))
                 });
                 match queued {
-                    Ok((ticket, id)) => {
-                        writeln!(writer, "{}", queued_line(ticket.id(), &id))?;
+                    Ok((ticket, id, tenant)) => {
+                        writeln!(writer, "{}", queued_line(ticket.id(), &id, &tenant))?;
                         pending.push(ticket);
                     }
-                    Err(e) => writeln!(writer, "{}", error_line(&e.to_string()))?,
+                    Err(e) => writeln!(writer, "{}", error_line_for(&e))?,
                 }
             }
         }
@@ -378,24 +545,24 @@ pub fn serve_loop<R: BufRead, W: Write>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::server::ServerConfig;
+    use crate::serve::server::{ServerConfig, TenantPolicy};
 
     #[test]
     fn parse_rejects_bad_envelopes() {
         assert!(parse_request("not json").is_err());
         assert!(parse_request("{}").is_err());
-        assert!(parse_request(r#"{"schema":2,"op":"ping"}"#).is_err());
-        assert!(parse_request(r#"{"schema":1}"#).is_err());
-        assert!(parse_request(r#"{"schema":1,"op":"frobnicate"}"#).is_err());
+        assert!(parse_request(r#"{"schema":1,"op":"ping"}"#).is_err(), "v1 is gone");
+        assert!(parse_request(r#"{"schema":2}"#).is_err());
+        assert!(parse_request(r#"{"schema":2,"op":"frobnicate"}"#).is_err());
         assert!(matches!(
-            parse_request(r#"{"schema":1,"op":"ping"}"#).unwrap(),
+            parse_request(r#"{"schema":2,"op":"ping"}"#).unwrap(),
             Request::Ping
         ));
     }
 
     #[test]
     fn parse_submit_applies_topology_and_solve() {
-        let line = r#"{"schema":1,"op":"submit",
+        let line = r#"{"schema":2,"op":"submit",
             "dataset":{"name":"smoke","scale_n":300,"gen_seed":7},
             "topology":{"p":8,"machine":"ethernet","allreduce":"ring","partition":"greedy"},
             "solve":{"algo":"spnm","k":4,"q":2,"b":0.25,"lambda":0.3,"iters":12,"seed":9},
@@ -412,24 +579,51 @@ mod tests {
         assert_eq!(cmd.solve.stopping.cap(), 12);
         assert_eq!(cmd.solve.seed, 9);
         assert_eq!(cmd.warm_tag.as_deref(), Some("path"));
+        // QoS fields default when absent.
+        assert_eq!(cmd.tenant, None);
+        assert_eq!(cmd.priority, 0);
+        assert_eq!(cmd.deadline_ms, None);
         // Unknown keys and misplaced keys are rejected.
         assert!(parse_request(
-            r#"{"schema":1,"op":"submit","dataset":{"name":"smoke"},"topology":{"k":4}}"#
+            r#"{"schema":2,"op":"submit","dataset":{"name":"smoke"},"topology":{"k":4}}"#
         )
         .is_err());
         assert!(parse_request(
-            r#"{"schema":1,"op":"submit","dataset":{"name":"smoke"},"solve":{"nope":1}}"#
+            r#"{"schema":2,"op":"submit","dataset":{"name":"smoke"},"solve":{"nope":1}}"#
         )
         .is_err());
-        assert!(parse_request(r#"{"schema":1,"op":"submit"}"#).is_err());
+        assert!(parse_request(r#"{"schema":2,"op":"submit"}"#).is_err());
+    }
+
+    #[test]
+    fn parse_submit_reads_qos_fields() {
+        let line = r#"{"schema":2,"op":"submit","dataset":{"name":"smoke"},
+            "tenant":"ci","priority":-2,"deadline_ms":1500}"#;
+        let Request::Submit(cmd) = parse_request(line).unwrap() else {
+            panic!("wrong request kind")
+        };
+        assert_eq!(cmd.tenant.as_deref(), Some("ci"));
+        assert_eq!(cmd.priority, -2);
+        assert_eq!(cmd.deadline_ms, Some(1500));
+        // Bad shapes are rejected: non-string tenant, fractional
+        // priority, negative deadline.
+        for bad in [
+            r#"{"schema":2,"op":"submit","dataset":{"name":"smoke"},"tenant":3}"#,
+            r#"{"schema":2,"op":"submit","dataset":{"name":"smoke"},"priority":1.5}"#,
+            r#"{"schema":2,"op":"submit","dataset":{"name":"smoke"},"deadline_ms":-1}"#,
+            r#"{"schema":2,"op":"submit","dataset":{"name":"smoke"},"deadline_ms":"soon"}"#,
+        ] {
+            assert!(parse_request(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]
     fn submit_round_trips_through_json() {
-        let line = r#"{"schema":1,"op":"submit",
+        let line = r#"{"schema":2,"op":"submit",
             "dataset":{"name":"smoke","scale_n":300,"gen_seed":7},
             "topology":{"p":8,"machine":"ethernet","allreduce":"tree","partition":"greedy"},
-            "solve":{"algo":"spnm","k":4,"q":2,"b":0.25,"lambda":0.3,"iters":12,"seed":9}}"#;
+            "solve":{"algo":"spnm","k":4,"q":2,"b":0.25,"lambda":0.3,"iters":12,"seed":9},
+            "tenant":"ci","priority":5,"deadline_ms":2000}"#;
         let Request::Submit(cmd) = parse_request(line).unwrap() else {
             panic!("wrong request kind")
         };
@@ -444,26 +638,42 @@ mod tests {
         assert_eq!(cmd2.solve.algo, cmd.solve.algo);
         assert_eq!(cmd2.solve.lambda.to_bits(), cmd.solve.lambda.to_bits());
         assert_eq!(cmd2.solve.stopping.cap(), cmd.solve.stopping.cap());
+        assert_eq!(cmd2.tenant, cmd.tenant);
+        assert_eq!(cmd2.priority, cmd.priority);
+        assert_eq!(cmd2.deadline_ms, cmd.deadline_ms);
+    }
+
+    #[test]
+    fn into_request_is_the_single_validation_path() {
+        let line = r#"{"schema":2,"op":"submit","dataset":{"name":"smoke"},
+            "tenant":"../escape"}"#;
+        let Request::Submit(cmd) = parse_request(line).unwrap() else {
+            panic!("wrong request kind")
+        };
+        // The parse accepts any string; lowering validates it with the
+        // same path-component rule Server::submit applies.
+        assert!(cmd.into_request("someid").is_err());
     }
 
     #[test]
     fn serve_loop_runs_a_batch_on_a_pipe() {
-        let server = Server::new(ServerConfig::default().with_threads(2)).unwrap();
+        let server = ServerConfig::default().with_threads(2).build().unwrap();
         let input = concat!(
-            r#"{"schema":1,"op":"ping"}"#,
+            r#"{"schema":2,"op":"ping"}"#,
             "\n",
-            r#"{"schema":1,"op":"submit","dataset":{"name":"smoke","scale_n":200},"#,
-            r#""topology":{"p":1},"solve":{"k":2,"b":0.5,"lambda":0.05,"iters":4,"seed":1}}"#,
+            r#"{"schema":2,"op":"submit","dataset":{"name":"smoke","scale_n":200},"#,
+            r#""topology":{"p":1},"solve":{"k":2,"b":0.5,"lambda":0.05,"iters":4,"seed":1},"#,
+            r#""tenant":"ci","priority":1}"#,
             "\n",
-            r#"{"schema":1,"op":"submit","dataset":{"name":"smoke","scale_n":200},"#,
+            r#"{"schema":2,"op":"submit","dataset":{"name":"smoke","scale_n":200},"#,
             r#""topology":{"p":1},"solve":{"k":2,"b":0.5,"lambda":0.1,"iters":4,"seed":1}}"#,
             "\n",
             "this is not json\n",
-            r#"{"schema":1,"op":"drain"}"#,
+            r#"{"schema":2,"op":"drain"}"#,
             "\n",
-            r#"{"schema":1,"op":"stats"}"#,
+            r#"{"schema":2,"op":"stats"}"#,
             "\n",
-            r#"{"schema":1,"op":"shutdown"}"#,
+            r#"{"schema":2,"op":"shutdown"}"#,
             "\n",
         );
         let mut out = Vec::new();
@@ -482,18 +692,83 @@ mod tests {
         assert_eq!(kinds.iter().filter(|k| **k == "error").count(), 1);
         assert_eq!(kinds.first(), Some(&"pong"));
         assert_eq!(kinds.last(), Some(&"bye"));
-        // Every response carries the schema tag.
+        // Every response carries the schema tag; errors carry a code.
         for e in &events {
             assert_eq!(e.get("schema").and_then(Json::as_usize), Some(PROTO_SCHEMA));
+            if e.get("event").unwrap().as_str() == Some("error") {
+                assert_eq!(e.get("code").and_then(Json::as_str), Some("bad_request"));
+            }
         }
-        // Stats cover exactly one dataset (both jobs shared the bytes)
-        // and its setup ran once.
+        // The queued ack names the submitting tenant (explicit or the
+        // server default).
+        let tenants: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("event").unwrap().as_str() == Some("queued"))
+            .map(|e| e.get("tenant").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(tenants, vec!["ci", "default"]);
+        // Stats cover exactly one dataset (both jobs shared the bytes),
+        // its setup ran once, and the queue block reflects the batch.
         let stats = events.iter().find(|e| e.get("event").unwrap().as_str() == Some("stats"));
-        let datasets = stats.unwrap().get("datasets").unwrap().as_arr().unwrap();
+        let stats = stats.unwrap();
+        let datasets = stats.get("datasets").unwrap().as_arr().unwrap();
         assert_eq!(datasets.len(), 1);
         assert_eq!(
             datasets[0].get("lipschitz_computes").and_then(Json::as_usize),
             Some(1)
         );
+        let queue = stats.get("queue").unwrap();
+        assert_eq!(queue.get("completed").and_then(Json::as_usize), Some(2));
+        assert_eq!(queue.get("shed").and_then(Json::as_usize), Some(0));
+        assert_eq!(queue.get("depth").and_then(Json::as_usize), Some(0));
+        let tenants = queue.get("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 2, "ci + default");
+    }
+
+    #[test]
+    fn serve_loop_sheds_over_quota_with_structured_error() {
+        // One worker pinned by a slow blocker; tenant "t" has quota 1,
+        // so the third submit must answer a structured error line with
+        // code over_quota and a retry hint — not block the pipe.
+        let server = ServerConfig::default()
+            .with_threads(1)
+            .with_tenant("t", TenantPolicy::default().with_max_queued(1))
+            .build()
+            .unwrap();
+        let input = concat!(
+            r#"{"schema":2,"op":"submit","dataset":{"name":"smoke","scale_n":200},"#,
+            r#""topology":{"p":1},"solve":{"k":2,"b":0.5,"lambda":0.05,"iters":4000,"seed":1},"#,
+            r#""tenant":"boot"}"#,
+            "\n",
+            r#"{"schema":2,"op":"submit","dataset":{"name":"smoke","scale_n":200},"#,
+            r#""topology":{"p":1},"solve":{"k":2,"b":0.5,"lambda":0.1,"iters":4,"seed":1},"#,
+            r#""tenant":"t"}"#,
+            "\n",
+            r#"{"schema":2,"op":"submit","dataset":{"name":"smoke","scale_n":200},"#,
+            r#""topology":{"p":1},"solve":{"k":2,"b":0.5,"lambda":0.2,"iters":4,"seed":1},"#,
+            r#""tenant":"t"}"#,
+            "\n",
+            r#"{"schema":2,"op":"drain"}"#,
+            "\n",
+            r#"{"schema":2,"op":"shutdown"}"#,
+            "\n",
+        );
+        let mut out = Vec::new();
+        serve_loop(&server, &mut std::io::Cursor::new(input), &mut out).unwrap();
+        server.shutdown().unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let events: Vec<Json> = text.lines().map(|l| parse(l).unwrap()).collect();
+        let errors: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("event").unwrap().as_str() == Some("error"))
+            .collect();
+        assert_eq!(errors.len(), 1, "{text}");
+        assert_eq!(errors[0].get("code").and_then(Json::as_str), Some("over_quota"));
+        assert!(
+            errors[0].get("retry_after_ms").and_then(Json::as_usize).unwrap() >= 1,
+            "{text}"
+        );
+        let done = events.iter().filter(|e| e.get("event").unwrap().as_str() == Some("done"));
+        assert_eq!(done.count(), 2, "both admitted jobs completed: {text}");
     }
 }

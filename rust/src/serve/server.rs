@@ -3,12 +3,29 @@
 //! A [`Server`] owns a registry of datasets keyed by content
 //! [`Fingerprint`], one shared [`PlanCache`] per dataset (hydrated from
 //! the [`PlanStore`] at registration when persistence is configured),
-//! and a pool of worker threads draining a bounded FIFO work queue.
+//! and a pool of worker threads draining a **multi-tenant scheduler**.
 //! Submitting a [`SolveRequest`] returns a [`JobTicket`] immediately;
 //! the job's progress streams into the ticket as [`JobEvent`]s —
 //! `started`, then per-round `block` / per-cadence `record` events
 //! forwarded straight from the [`crate::session::Observer`] machinery,
 //! then `done` (or `failed`) with the full [`SolverOutput`].
+//!
+//! # Admission control and QoS
+//!
+//! Every request names a **tenant** (default [`DEFAULT_TENANT`]). Each
+//! tenant has its own queue and a [`TenantPolicy`]: an admission quota
+//! (`max_queued` — a full tenant queue **sheds** the submit with a
+//! structured [`CaError::Reject`] carrying `retry_after_ms`, it never
+//! blocks the submitter), a concurrency cap (`max_in_flight`), and a
+//! DRR `weight`. Workers dequeue by weighted deficit round-robin across
+//! the tenant queues, so one greedy tenant can delay — but never
+//! starve — everyone else. Within a tenant, jobs are ordered by
+//! descending [`SolveRequest::priority`], FIFO within a priority level.
+//! A request's optional `deadline_ms` is honored at dequeue: a job
+//! whose queue wait exceeded its deadline fails fast with a
+//! [`JobEventKind::DeadlineExceeded`] event and never occupies a
+//! worker. The global `queue_cap` still bounds total queued work and
+//! sheds on overflow the same way.
 //!
 //! Determinism: a job's output is a pure function of its request
 //! (dataset fingerprint, topology, solve spec, and — when a warm-start
@@ -16,8 +33,9 @@
 //! tag), never of thread scheduling: sessions built on the shared cache
 //! are bit-identical to standalone sessions (`rust/tests/grid.rs`), so
 //! N concurrent submits return exactly what N fresh processes would
-//! (`rust/tests/serve.rs`). Warm-start tags deliberately trade that
-//! independence for fewer iterations, like
+//! (`rust/tests/serve.rs`). **Scheduling may reorder or reject jobs,
+//! but never changes an accepted job's bits.** Warm-start tags
+//! deliberately trade cross-job independence for fewer iterations, like
 //! [`crate::grid::SweepSpec::warm_start_along_lambda`].
 //!
 //! Warm pools are **bounded**: each (tag) pool keeps at most
@@ -44,15 +62,17 @@ use crate::error::{CaError, Result};
 use crate::grid::{CacheStats, PlanCache};
 use crate::runtime::backend::NativeGramBackend;
 use crate::serve::fingerprint::Fingerprint;
-use crate::serve::fleet::{validate_pool_tag, WriterId};
+use crate::serve::fleet::{validate_pool_tag, validate_tenant, WriterId};
 use crate::serve::store::{PlanStore, WarmLoad};
 use crate::session::{BlockEvent, Observer, Session, Signal, SolveSpec, Topology};
 use crate::solvers::traits::{HistoryPoint, SolverOutput};
+use std::cmp::Reverse;
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 static NATIVE_BACKEND: NativeGramBackend = NativeGramBackend;
 
@@ -64,6 +84,21 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 
 /// Job identifier, unique per server, assigned in submit order from 1.
 pub type JobId = u64;
+
+/// The tenant jobs are accounted to when a request names none.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Default per-tenant queue quota ([`TenantPolicy::max_queued`]).
+pub const DEFAULT_TENANT_MAX_QUEUED: usize = 32;
+
+/// Default per-tenant concurrency cap ([`TenantPolicy::max_in_flight`]).
+pub const DEFAULT_TENANT_MAX_INFLIGHT: usize = 8;
+
+/// Floor of the `retry_after_ms` backoff hint on a shed submit.
+const RETRY_FLOOR_MS: u64 = 10;
+
+/// Ceiling of the `retry_after_ms` backoff hint on a shed submit.
+const RETRY_CEIL_MS: u64 = 60_000;
 
 /// A dataset named by preset + scaling — the protocol-level way to say
 /// which data to solve on; the server resolves it through
@@ -115,18 +150,70 @@ pub struct SolveRequest {
     /// (unless the spec carries an explicit warm start). `None` = cold
     /// start, fully independent of other jobs.
     pub warm_tag: Option<String>,
+    /// Tenant this job is admitted and accounted under (quotas, DRR
+    /// weight, metrics). Validated like a path component.
+    pub tenant: String,
+    /// Within-tenant ordering: higher runs first, FIFO within a level.
+    /// Priorities never cross tenant boundaries — fairness across
+    /// tenants is the scheduler's job, not the submitter's.
+    pub priority: i64,
+    /// Maximum queue wait in milliseconds. Checked when a worker would
+    /// dequeue the job: an expired job fails fast with a
+    /// `deadline_exceeded` event and never occupies a worker.
+    pub deadline_ms: Option<u64>,
 }
 
 impl SolveRequest {
-    /// Cold-start request.
+    /// Cold-start request under the default tenant at priority 0.
     pub fn new(dataset_id: &str, topology: Topology, spec: SolveSpec) -> Self {
-        SolveRequest { dataset_id: dataset_id.to_string(), topology, spec, warm_tag: None }
+        SolveRequest {
+            dataset_id: dataset_id.to_string(),
+            topology,
+            spec,
+            warm_tag: None,
+            tenant: DEFAULT_TENANT.to_string(),
+            priority: 0,
+            deadline_ms: None,
+        }
     }
 
     /// Join a warm-start pool.
     pub fn with_warm_tag(mut self, tag: &str) -> Self {
         self.warm_tag = Some(tag.to_string());
         self
+    }
+
+    /// Submit under a named tenant.
+    pub fn with_tenant(mut self, tenant: &str) -> Self {
+        self.tenant = tenant.to_string();
+        self
+    }
+
+    /// Set the within-tenant priority (higher runs first).
+    pub fn with_priority(mut self, priority: i64) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Set the queue-wait deadline.
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    /// The single request validation path, shared by the wire protocol
+    /// ([`crate::serve::proto::SubmitCmd::into_request`]), the CLI, and
+    /// in-process embedders — every surface rejects exactly the same
+    /// requests.
+    pub fn validate(&self) -> Result<()> {
+        self.topology.validate()?;
+        self.spec.validate()?;
+        if let Some(tag) = &self.warm_tag {
+            // Tags name store directories (`warm/<tag>/…`), so they are
+            // validated like any other path component.
+            validate_pool_tag(tag)?;
+        }
+        validate_tenant(&self.tenant)
     }
 }
 
@@ -153,6 +240,12 @@ pub enum JobEventKind {
     Done(Box<SolverOutput>),
     /// The job errored; the message is attached.
     Failed(String),
+    /// The job's queue wait exceeded its deadline before a worker could
+    /// take it; it was failed at dequeue without occupying a worker.
+    DeadlineExceeded {
+        /// How long the job actually waited before expiring.
+        waited_ms: u64,
+    },
 }
 
 #[derive(Default)]
@@ -196,7 +289,8 @@ impl JobTicket {
     }
 
     /// Block until the job finishes; returns the output or the job's
-    /// error.
+    /// error (a [`CaError::Reject`] with code `deadline_exceeded` when
+    /// the job expired in the queue).
     pub fn wait(&self) -> Result<SolverOutput> {
         let mut guard = lock(&self.state.progress);
         while !guard.finished {
@@ -207,6 +301,16 @@ impl JobTicket {
                 JobEventKind::Done(out) => return Ok((**out).clone()),
                 JobEventKind::Failed(msg) => {
                     return Err(CaError::Solver(format!("job {} failed: {msg}", self.id)))
+                }
+                JobEventKind::DeadlineExceeded { waited_ms } => {
+                    return Err(CaError::Reject {
+                        code: "deadline_exceeded".into(),
+                        retry_after_ms: 0,
+                        msg: format!(
+                            "job {} expired after waiting {waited_ms}ms in the queue",
+                            self.id
+                        ),
+                    })
                 }
                 _ => {}
             }
@@ -450,6 +554,9 @@ struct Job {
     topology: Topology,
     spec: SolveSpec,
     warm_tag: Option<String>,
+    tenant: String,
+    deadline: Option<Duration>,
+    submitted: Instant,
     state: Arc<JobState>,
 }
 
@@ -459,14 +566,195 @@ struct Job {
 /// sweeps stay entirely in memory.
 pub const DEFAULT_WARM_POOL_MAX: usize = 16;
 
-/// Server construction parameters.
+/// Admission and scheduling policy of one tenant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TenantPolicy {
+    /// Deficit-round-robin weight (≥ 1): how many jobs this tenant may
+    /// dequeue per scheduler round relative to weight-1 tenants.
+    pub weight: u64,
+    /// Admission quota (≥ 1): submits beyond this many queued jobs are
+    /// shed with `over_quota` + `retry_after_ms`, never blocked.
+    pub max_queued: usize,
+    /// Concurrency cap (≥ 1): at most this many of the tenant's jobs
+    /// occupy workers at once.
+    pub max_in_flight: usize,
+}
+
+impl Default for TenantPolicy {
+    fn default() -> Self {
+        TenantPolicy {
+            weight: 1,
+            max_queued: DEFAULT_TENANT_MAX_QUEUED,
+            max_in_flight: DEFAULT_TENANT_MAX_INFLIGHT,
+        }
+    }
+}
+
+impl TenantPolicy {
+    /// Set the DRR weight (≥ 1).
+    pub fn with_weight(mut self, weight: u64) -> Self {
+        self.weight = weight;
+        self
+    }
+
+    /// Set the admission quota (≥ 1, ≤ the global queue cap).
+    pub fn with_max_queued(mut self, max_queued: usize) -> Self {
+        self.max_queued = max_queued;
+        self
+    }
+
+    /// Set the concurrency cap (≥ 1).
+    pub fn with_max_in_flight(mut self, max_in_flight: usize) -> Self {
+        self.max_in_flight = max_in_flight;
+        self
+    }
+
+    /// Cross-check this policy against the server limits it must fit
+    /// inside; `what` names the policy in error messages.
+    fn validate(&self, what: &str, queue_cap: usize) -> Result<()> {
+        if self.weight == 0 {
+            return Err(CaError::Config(format!("{what}: DRR weight must be ≥ 1")));
+        }
+        if self.max_queued == 0 || self.max_in_flight == 0 {
+            return Err(CaError::Config(format!(
+                "{what}: quotas must be ≥ 1 (a zero quota would shed every submit)"
+            )));
+        }
+        if self.max_queued > queue_cap {
+            return Err(CaError::Config(format!(
+                "{what}: max_queued {} exceeds the global queue cap {queue_cap}",
+                self.max_queued
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Count / total / max of a latency series, in milliseconds (mean is
+/// derived). Cheap enough to keep per tenant *and* globally.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyStats {
+    /// Samples recorded.
+    pub count: u64,
+    /// Sum of all samples, ms.
+    pub total_ms: f64,
+    /// Largest sample, ms.
+    pub max_ms: f64,
+}
+
+impl LatencyStats {
+    fn note(&mut self, ms: f64) {
+        self.count += 1;
+        self.total_ms += ms;
+        if ms > self.max_ms {
+            self.max_ms = ms;
+        }
+    }
+
+    /// Mean sample, ms (0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_ms / self.count as f64
+        }
+    }
+}
+
+/// Monotonic admission/scheduling counters (kept per tenant and
+/// globally).
+#[derive(Clone, Copy, Debug, Default)]
+struct Counters {
+    submitted: u64,
+    completed: u64,
+    shed: u64,
+    deadline_expired: u64,
+    wait: LatencyStats,
+    service: LatencyStats,
+}
+
+/// Queue/latency statistics of one tenant.
+#[derive(Clone, Debug)]
+pub struct TenantStats {
+    /// Tenant name.
+    pub tenant: String,
+    /// Configured DRR weight.
+    pub weight: u64,
+    /// Configured admission quota.
+    pub max_queued: usize,
+    /// Configured concurrency cap.
+    pub max_in_flight: usize,
+    /// Jobs currently queued.
+    pub depth: usize,
+    /// Jobs currently occupying workers.
+    pub in_flight: usize,
+    /// Jobs admitted since boot.
+    pub submitted: u64,
+    /// Jobs that finished on a worker (done or failed).
+    pub completed: u64,
+    /// Submits shed by admission control.
+    pub shed: u64,
+    /// Jobs expired at dequeue.
+    pub deadline_expired: u64,
+    /// Queue-wait latency of dequeued jobs.
+    pub wait: LatencyStats,
+    /// Worker service time of completed jobs.
+    pub service: LatencyStats,
+}
+
+/// Global queue statistics plus the per-tenant breakdown.
+#[derive(Clone, Debug)]
+pub struct QueueStats {
+    /// Jobs currently queued across all tenants.
+    pub depth: usize,
+    /// Jobs currently occupying workers.
+    pub in_flight: usize,
+    /// Jobs admitted since boot.
+    pub submitted: u64,
+    /// Jobs that finished on a worker (done or failed).
+    pub completed: u64,
+    /// Submits shed by admission control (global cap or tenant quota).
+    pub shed: u64,
+    /// Jobs expired at dequeue.
+    pub deadline_expired: u64,
+    /// Queue-wait latency of dequeued jobs.
+    pub wait: LatencyStats,
+    /// Worker service time of completed jobs.
+    pub service: LatencyStats,
+    /// Per-tenant breakdown, in tenant-name order.
+    pub tenants: Vec<TenantStats>,
+}
+
+/// Cache + warm-pool statistics of one registered dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetStats {
+    /// Registered dataset id (the fingerprint string).
+    pub id: String,
+    /// Plan-cache counters.
+    pub cache: CacheStats,
+    /// In-memory warm-pool occupancy across every tag.
+    pub warm_pool_entries: usize,
+}
+
+/// The full server picture returned by [`Server::stats`].
+#[derive(Clone, Debug)]
+pub struct ServerStats {
+    /// Every registered dataset, in id order.
+    pub datasets: Vec<DatasetStats>,
+    /// Scheduler and admission state.
+    pub queue: QueueStats,
+}
+
+/// Server construction parameters; validated as a whole by
+/// [`ServerConfig::build`].
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Worker threads (None = one per available core, validated through
     /// [`crate::cluster::engine::resolve_threads`] — 0 is an error, not
     /// a silent clamp).
     pub threads: Option<usize>,
-    /// Work-queue capacity; submits block while the queue is full.
+    /// Global work-queue capacity; submits beyond it are shed with
+    /// `over_quota` + `retry_after_ms`.
     pub queue_cap: usize,
     /// Plan-store root for cross-process persistence (None = in-memory
     /// only).
@@ -479,6 +767,11 @@ pub struct ServerConfig {
     /// pid-derived default, see
     /// [`crate::serve::fleet::WriterId::for_process`]).
     pub writer_id: Option<String>,
+    /// Policy applied to tenants without an explicit override.
+    pub tenant_default: TenantPolicy,
+    /// Per-tenant policy overrides (name → policy). Names are validated
+    /// like path components; listing a name twice is a config error.
+    pub tenants: Vec<(String, TenantPolicy)>,
 }
 
 impl Default for ServerConfig {
@@ -489,6 +782,8 @@ impl Default for ServerConfig {
             store: None,
             warm_pool_max_entries: DEFAULT_WARM_POOL_MAX,
             writer_id: None,
+            tenant_default: TenantPolicy::default(),
+            tenants: Vec::new(),
         }
     }
 }
@@ -500,7 +795,7 @@ impl ServerConfig {
         self
     }
 
-    /// Set the work-queue capacity (≥ 1).
+    /// Set the global work-queue capacity (≥ 1).
     pub fn with_queue_cap(mut self, cap: usize) -> Self {
         self.queue_cap = cap;
         self
@@ -518,60 +813,65 @@ impl ServerConfig {
         self
     }
 
-    /// Set the fleet writer identity (validated at [`Server::new`]).
+    /// Set the fleet writer identity (validated at
+    /// [`ServerConfig::build`]).
     pub fn with_writer_id(mut self, id: &str) -> Self {
         self.writer_id = Some(id.to_string());
         self
     }
-}
 
-struct ServerInner {
-    queue: Mutex<VecDeque<Job>>,
-    /// Signaled when work arrives or shutdown begins.
-    work_cv: Condvar,
-    /// Signaled when queue space frees up or shutdown begins.
-    space_cv: Condvar,
-    queue_cap: usize,
-    datasets: Mutex<BTreeMap<String, Arc<DatasetEntry>>>,
-    store: Option<PlanStore>,
-    warm_pool_max: usize,
-    shutdown: AtomicBool,
-    next_job: AtomicU64,
-}
+    /// Set the default tenant policy.
+    pub fn with_tenant_default(mut self, policy: TenantPolicy) -> Self {
+        self.tenant_default = policy;
+        self
+    }
 
-/// The resident solver service. See the module docs.
-pub struct Server {
-    inner: Arc<ServerInner>,
-    workers: Vec<JoinHandle<()>>,
-    threads: usize,
-}
+    /// Add a per-tenant policy override.
+    pub fn with_tenant(mut self, name: &str, policy: TenantPolicy) -> Self {
+        self.tenants.push((name.to_string(), policy));
+        self
+    }
 
-impl Server {
-    /// Start the worker pool (jobs run as soon as they are submitted).
-    pub fn new(config: ServerConfig) -> Result<Server> {
-        let threads = resolve_threads(config.threads)?;
-        if config.queue_cap == 0 {
+    /// Validate the whole configuration — thread count through
+    /// [`resolve_threads`], queue cap ≥ 1, warm-pool bound ≥ 1, writer
+    /// id shape, every tenant policy cross-checked against the queue
+    /// cap — and start the worker pool. All construction errors are
+    /// [`CaError::Config`] here, not first-use panics.
+    pub fn build(self) -> Result<Server> {
+        let threads = resolve_threads(self.threads)?;
+        if self.queue_cap == 0 {
             return Err(CaError::Config("serve queue capacity must be ≥ 1".into()));
         }
-        if config.warm_pool_max_entries == 0 {
+        if self.warm_pool_max_entries == 0 {
             return Err(CaError::Config(
                 "serve warm-pool bound must be ≥ 1 (warm tags are opt-in per job; \
                  omit the tag instead of bounding the pool to zero)"
                     .into(),
             ));
         }
-        let writer = match &config.writer_id {
+        let writer = match &self.writer_id {
             Some(id) => WriterId::new(id)?,
             None => WriterId::for_process(),
         };
+        self.tenant_default.validate("default tenant policy", self.queue_cap)?;
+        let mut overrides = BTreeMap::new();
+        for (name, policy) in &self.tenants {
+            validate_tenant(name)?;
+            policy.validate(&format!("tenant '{name}'"), self.queue_cap)?;
+            if overrides.insert(name.clone(), *policy).is_some() {
+                return Err(CaError::Config(format!("tenant '{name}' configured twice")));
+            }
+        }
         let inner = Arc::new(ServerInner {
-            queue: Mutex::new(VecDeque::new()),
+            sched: Mutex::new(Sched::default()),
             work_cv: Condvar::new(),
-            space_cv: Condvar::new(),
-            queue_cap: config.queue_cap,
+            queue_cap: self.queue_cap,
+            threads,
+            tenant_default: self.tenant_default,
+            tenant_overrides: overrides,
             datasets: Mutex::new(BTreeMap::new()),
-            store: config.store.map(|root| PlanStore::new(root).with_writer(writer)),
-            warm_pool_max: config.warm_pool_max_entries,
+            store: self.store.map(|root| PlanStore::new(root).with_writer(writer)),
+            warm_pool_max: self.warm_pool_max_entries,
             shutdown: AtomicBool::new(false),
             next_job: AtomicU64::new(0),
         });
@@ -583,7 +883,217 @@ impl Server {
             .collect();
         Ok(Server { inner, workers, threads })
     }
+}
 
+/// One tenant's queue + policy + counters inside the scheduler.
+struct TenantQueue {
+    policy: TenantPolicy,
+    /// Queued jobs keyed `(Reverse(priority), seq)`: the first entry is
+    /// the highest-priority, earliest-submitted job.
+    jobs: BTreeMap<(Reverse<i64>, u64), Job>,
+    /// Remaining DRR credit in the current round.
+    deficit: u64,
+    in_flight: usize,
+    counters: Counters,
+}
+
+impl TenantQueue {
+    fn new(policy: TenantPolicy) -> Self {
+        TenantQueue {
+            policy,
+            jobs: BTreeMap::new(),
+            deficit: 0,
+            in_flight: 0,
+            counters: Counters::default(),
+        }
+    }
+}
+
+/// What the scheduler handed a worker.
+enum Dequeued {
+    /// Run this job.
+    Run(Job),
+    /// The job expired in the queue; fail it without solving
+    /// (`waited_ms` is how long it actually waited).
+    Expired(Job, u64),
+}
+
+/// The multi-tenant scheduler: per-tenant queues, a DRR rotation over
+/// tenants with queued work, and the admission/latency counters. All
+/// state lives under one mutex; nothing here does I/O or solves.
+#[derive(Default)]
+struct Sched {
+    tenants: BTreeMap<String, TenantQueue>,
+    /// DRR rotation: tenants with queued jobs, each appearing once. The
+    /// front tenant is served next.
+    active: VecDeque<String>,
+    queued_total: usize,
+    /// Monotonic submit sequence — the FIFO tiebreak within a priority.
+    seq: u64,
+    counters: Counters,
+}
+
+impl Sched {
+    fn in_flight_total(&self) -> usize {
+        self.tenants.values().map(|t| t.in_flight).sum()
+    }
+
+    /// Backoff hint for a shed submit: the observed mean service time
+    /// times the per-worker backlog a retry would find, clamped to
+    /// [`RETRY_FLOOR_MS`, `RETRY_CEIL_MS`]. Before any job has
+    /// completed the floor is returned.
+    fn retry_after_ms(&self, threads: usize) -> u64 {
+        let backlog = (self.queued_total + self.in_flight_total() + 1) as f64;
+        let est = self.counters.service.mean_ms() * (backlog / threads.max(1) as f64);
+        (est.ceil() as u64).clamp(RETRY_FLOOR_MS, RETRY_CEIL_MS)
+    }
+
+    /// Count a shed submit against the tenant and the global counters.
+    fn shed(&mut self, tenant: &str) {
+        if let Some(t) = self.tenants.get_mut(tenant) {
+            t.counters.shed += 1;
+        }
+        self.counters.shed += 1;
+    }
+
+    /// Account a job that finished on a worker (done or failed).
+    fn complete(&mut self, tenant: &str, service_ms: f64) {
+        if let Some(t) = self.tenants.get_mut(tenant) {
+            t.in_flight = t.in_flight.saturating_sub(1);
+            t.counters.completed += 1;
+            t.counters.service.note(service_ms);
+        }
+        self.counters.completed += 1;
+        self.counters.service.note(service_ms);
+    }
+
+    /// Weighted deficit-round-robin dequeue. Visits each rotation slot
+    /// at most once: the front tenant is skipped (and rotated) when at
+    /// its concurrency cap, dropped from the rotation when its queue is
+    /// empty, and otherwise serves its best job — head of the
+    /// `(priority, seq)` order — charging one unit of DRR credit. A
+    /// tenant keeps the front until its credit (refilled to `weight`
+    /// when spent) runs out, so weight-w tenants dequeue w jobs per
+    /// round. An expired-deadline job is removed and returned as
+    /// [`Dequeued::Expired`] without costing credit. `None` means
+    /// nothing is runnable *now* — either no jobs are queued, or every
+    /// queued tenant is at its cap (an in-flight completion will free
+    /// one, and completions notify the work condvar).
+    fn pop(&mut self, now: Instant) -> Option<Dequeued> {
+        let mut visits = self.active.len();
+        while visits > 0 {
+            visits -= 1;
+            let name = self.active.front()?.clone();
+            let t = self.tenants.get_mut(&name).expect("active tenant is registered");
+            if t.jobs.is_empty() {
+                t.deficit = 0;
+                self.active.pop_front();
+                continue;
+            }
+            if t.in_flight >= t.policy.max_in_flight {
+                self.active.rotate_left(1);
+                continue;
+            }
+            let key = *t.jobs.keys().next().expect("non-empty queue has a head");
+            let head = t.jobs.get(&key).expect("head key just read");
+            let waited = now.saturating_duration_since(head.submitted);
+            if head.deadline.is_some_and(|d| waited > d) {
+                let job = t.jobs.remove(&key).expect("head key present");
+                t.counters.deadline_expired += 1;
+                self.counters.deadline_expired += 1;
+                self.queued_total -= 1;
+                if t.jobs.is_empty() {
+                    t.deficit = 0;
+                    self.active.pop_front();
+                }
+                return Some(Dequeued::Expired(job, waited.as_millis() as u64));
+            }
+            if t.deficit == 0 {
+                t.deficit = t.policy.weight;
+            }
+            t.deficit -= 1;
+            let job = t.jobs.remove(&key).expect("head key present");
+            t.in_flight += 1;
+            self.queued_total -= 1;
+            let wait_ms = waited.as_secs_f64() * 1e3;
+            t.counters.wait.note(wait_ms);
+            self.counters.wait.note(wait_ms);
+            if t.jobs.is_empty() {
+                t.deficit = 0;
+                self.active.pop_front();
+            } else if t.deficit == 0 {
+                self.active.rotate_left(1);
+            }
+            return Some(Dequeued::Run(job));
+        }
+        None
+    }
+
+    /// Snapshot the queue statistics.
+    fn queue_stats(&self) -> QueueStats {
+        let tenants = self
+            .tenants
+            .iter()
+            .map(|(name, t)| TenantStats {
+                tenant: name.clone(),
+                weight: t.policy.weight,
+                max_queued: t.policy.max_queued,
+                max_in_flight: t.policy.max_in_flight,
+                depth: t.jobs.len(),
+                in_flight: t.in_flight,
+                submitted: t.counters.submitted,
+                completed: t.counters.completed,
+                shed: t.counters.shed,
+                deadline_expired: t.counters.deadline_expired,
+                wait: t.counters.wait,
+                service: t.counters.service,
+            })
+            .collect();
+        QueueStats {
+            depth: self.queued_total,
+            in_flight: self.in_flight_total(),
+            submitted: self.counters.submitted,
+            completed: self.counters.completed,
+            shed: self.counters.shed,
+            deadline_expired: self.counters.deadline_expired,
+            wait: self.counters.wait,
+            service: self.counters.service,
+            tenants,
+        }
+    }
+}
+
+struct ServerInner {
+    sched: Mutex<Sched>,
+    /// Signaled on submit, on every job completion (a freed concurrency
+    /// slot may unblock a capped tenant), and at shutdown.
+    work_cv: Condvar,
+    queue_cap: usize,
+    threads: usize,
+    tenant_default: TenantPolicy,
+    tenant_overrides: BTreeMap<String, TenantPolicy>,
+    datasets: Mutex<BTreeMap<String, Arc<DatasetEntry>>>,
+    store: Option<PlanStore>,
+    warm_pool_max: usize,
+    shutdown: AtomicBool,
+    next_job: AtomicU64,
+}
+
+impl ServerInner {
+    fn policy_for(&self, tenant: &str) -> TenantPolicy {
+        self.tenant_overrides.get(tenant).copied().unwrap_or(self.tenant_default)
+    }
+}
+
+/// The resident solver service. Construct via [`ServerConfig::build`].
+/// See the module docs.
+pub struct Server {
+    inner: Arc<ServerInner>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Server {
     /// Worker threads in the pool.
     pub fn threads(&self) -> usize {
         self.threads
@@ -632,25 +1142,20 @@ impl Server {
         self.register_dataset(ds)
     }
 
-    /// Enqueue a job. Validates the request up front, blocks while the
-    /// queue is full, and errors once shutdown has begun.
+    /// Admit a job. Validates the request up front, then applies
+    /// admission control: if the global queue is at capacity or the
+    /// tenant is at its quota the submit is **shed** — it returns a
+    /// structured [`CaError::Reject`] (`code: "over_quota"`, with a
+    /// `retry_after_ms` backoff hint) immediately instead of blocking
+    /// the submitter. Errors once shutdown has begun.
     pub fn submit(&self, req: SolveRequest) -> Result<JobTicket> {
-        req.topology.validate()?;
-        req.spec.validate()?;
-        if let Some(tag) = &req.warm_tag {
-            // Tags name store directories (`warm/<tag>/…`), so they are
-            // validated like any other path component.
-            validate_pool_tag(tag)?;
-        }
-        let entry = lock(&self.inner.datasets)
-            .get(&req.dataset_id)
-            .cloned()
-            .ok_or_else(|| {
-                CaError::Config(format!(
-                    "unknown dataset id '{}' (register the dataset first)",
-                    req.dataset_id
-                ))
-            })?;
+        req.validate()?;
+        let entry = lock(&self.inner.datasets).get(&req.dataset_id).cloned().ok_or_else(|| {
+            CaError::Config(format!(
+                "unknown dataset id '{}' (register the dataset first)",
+                req.dataset_id
+            ))
+        })?;
         let id = self.inner.next_job.fetch_add(1, Ordering::Relaxed) + 1;
         let state = Arc::new(JobState::new());
         let job = Job {
@@ -659,19 +1164,61 @@ impl Server {
             topology: req.topology,
             spec: req.spec,
             warm_tag: req.warm_tag,
+            tenant: req.tenant.clone(),
+            deadline: req.deadline_ms.map(Duration::from_millis),
+            submitted: Instant::now(),
             state: Arc::clone(&state),
         };
-        let mut queue = lock(&self.inner.queue);
-        while queue.len() >= self.inner.queue_cap {
-            if self.inner.shutdown.load(Ordering::Acquire) {
-                return Err(CaError::Cluster("server is shutting down".into()));
-            }
-            queue = self.inner.space_cv.wait(queue).unwrap_or_else(|p| p.into_inner());
-        }
+        let mut sched = lock(&self.inner.sched);
         if self.inner.shutdown.load(Ordering::Acquire) {
             return Err(CaError::Cluster("server is shutting down".into()));
         }
-        queue.push_back(job);
+        // Resolve the tenant queue first so shed counters always have a
+        // home (an empty queue entry is harmless and shows in stats).
+        let policy = self.inner.policy_for(&req.tenant);
+        let tenant_depth = {
+            let t = sched
+                .tenants
+                .entry(req.tenant.clone())
+                .or_insert_with(|| TenantQueue::new(policy));
+            t.jobs.len()
+        };
+        if sched.queued_total >= self.inner.queue_cap {
+            let retry = sched.retry_after_ms(self.inner.threads);
+            let depth = sched.queued_total;
+            sched.shed(&req.tenant);
+            return Err(CaError::Reject {
+                code: "over_quota".into(),
+                retry_after_ms: retry,
+                msg: format!(
+                    "global queue full ({depth}/{} jobs queued)",
+                    self.inner.queue_cap
+                ),
+            });
+        }
+        if tenant_depth >= policy.max_queued {
+            let retry = sched.retry_after_ms(self.inner.threads);
+            sched.shed(&req.tenant);
+            return Err(CaError::Reject {
+                code: "over_quota".into(),
+                retry_after_ms: retry,
+                msg: format!(
+                    "tenant '{}' queue full ({tenant_depth}/{} jobs queued)",
+                    req.tenant, policy.max_queued
+                ),
+            });
+        }
+        sched.seq += 1;
+        let key = (Reverse(req.priority), sched.seq);
+        sched.counters.submitted += 1;
+        sched.queued_total += 1;
+        let t = sched.tenants.get_mut(&req.tenant).expect("tenant queue just resolved");
+        t.counters.submitted += 1;
+        t.jobs.insert(key, job);
+        if !sched.active.iter().any(|n| n == &req.tenant) {
+            sched.active.push_back(req.tenant);
+        }
+        drop(sched);
         self.inner.work_cv.notify_one();
         Ok(JobTicket { id, state })
     }
@@ -681,13 +1228,24 @@ impl Server {
         lock(&self.inner.datasets).get(id).map(|e| e.cache.stats())
     }
 
-    /// Cache statistics plus in-memory warm-pool occupancy of every
-    /// registered dataset, in id order.
-    pub fn stats(&self) -> Vec<(String, CacheStats, usize)> {
-        lock(&self.inner.datasets)
+    /// Full server statistics: every registered dataset (in id order)
+    /// plus the scheduler's global and per-tenant queue state.
+    pub fn stats(&self) -> ServerStats {
+        let datasets = lock(&self.inner.datasets)
             .iter()
-            .map(|(k, e)| (k.clone(), e.cache.stats(), e.warm_entries()))
-            .collect()
+            .map(|(k, e)| DatasetStats {
+                id: k.clone(),
+                cache: e.cache.stats(),
+                warm_pool_entries: e.warm_entries(),
+            })
+            .collect();
+        let queue = lock(&self.inner.sched).queue_stats();
+        ServerStats { datasets, queue }
+    }
+
+    /// The scheduler's queue statistics alone (no dataset walk).
+    pub fn queue_stats(&self) -> QueueStats {
+        lock(&self.inner.sched).queue_stats()
     }
 
     /// In-memory warm-pool occupancy (entries across every tag) of one
@@ -729,7 +1287,6 @@ impl Server {
     fn join_workers(&mut self) -> Result<()> {
         self.inner.shutdown.store(true, Ordering::Release);
         self.inner.work_cv.notify_all();
-        self.inner.space_cv.notify_all();
         let mut panicked = false;
         for handle in self.workers.drain(..) {
             panicked |= handle.join().is_err();
@@ -755,26 +1312,77 @@ impl Drop for Server {
     }
 }
 
-/// Pop the next job, or `None` once the queue is drained *and* shutdown
-/// has begun (queued jobs always complete).
-fn next_job(inner: &ServerInner) -> Option<Job> {
-    let mut queue = lock(&inner.queue);
+/// Dequeue the next runnable (or expired) job, or `None` once nothing
+/// is queued *and* shutdown has begun (queued jobs always complete —
+/// including jobs on tenants at their concurrency cap, which become
+/// runnable when an in-flight completion notifies the condvar).
+fn next_job(inner: &ServerInner) -> Option<Dequeued> {
+    let mut sched = lock(&inner.sched);
     loop {
-        if let Some(job) = queue.pop_front() {
-            inner.space_cv.notify_one();
-            return Some(job);
+        if let Some(d) = sched.pop(Instant::now()) {
+            return Some(d);
         }
-        if inner.shutdown.load(Ordering::Acquire) {
+        if sched.queued_total == 0 && inner.shutdown.load(Ordering::Acquire) {
             return None;
         }
-        queue = inner.work_cv.wait(queue).unwrap_or_else(|p| p.into_inner());
+        sched = inner.work_cv.wait(sched).unwrap_or_else(|p| p.into_inner());
+    }
+}
+
+/// Frees the job's concurrency slot and records its service time
+/// exactly once — on [`CompletionGuard::fire`] in the normal path, or
+/// on drop if the solve panicked (so a capped tenant can never be
+/// wedged by a lost slot).
+struct CompletionGuard<'a> {
+    inner: &'a ServerInner,
+    tenant: &'a str,
+    started: Instant,
+    armed: bool,
+}
+
+impl CompletionGuard<'_> {
+    fn fire(&mut self) {
+        if !self.armed {
+            return;
+        }
+        self.armed = false;
+        let service_ms = self.started.elapsed().as_secs_f64() * 1e3;
+        lock(&self.inner.sched).complete(self.tenant, service_ms);
+        self.inner.work_cv.notify_all();
+    }
+}
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        self.fire();
     }
 }
 
 fn worker_loop(inner: &ServerInner) {
-    while let Some(job) = next_job(inner) {
+    while let Some(dequeued) = next_job(inner) {
+        let job = match dequeued {
+            Dequeued::Expired(job, waited_ms) => {
+                // Deadline counters were charged inside the scheduler
+                // lock; the job only needs its terminal event. It never
+                // builds a session — "fail fast" means exactly that.
+                job.state.push(JobEvent {
+                    job: job.id,
+                    kind: JobEventKind::DeadlineExceeded { waited_ms },
+                });
+                job.state.finish();
+                continue;
+            }
+            Dequeued::Run(job) => job,
+        };
         job.state.push(JobEvent { job: job.id, kind: JobEventKind::Started });
-        match run_job(&job, inner) {
+        let mut guard = CompletionGuard {
+            inner,
+            tenant: &job.tenant,
+            started: Instant::now(),
+            armed: true,
+        };
+        let result = run_job(&job, inner);
+        match result {
             Ok(out) => {
                 if let Some(tag) = &job.warm_tag {
                     job.entry.note_warm(
@@ -785,9 +1393,14 @@ fn worker_loop(inner: &ServerInner) {
                         inner.store.as_ref(),
                     );
                 }
+                // Account the completion *before* the terminal event:
+                // once `wait()` returns, the stats already reflect the
+                // job and its concurrency slot is free.
+                guard.fire();
                 job.state.push(JobEvent { job: job.id, kind: JobEventKind::Done(Box::new(out)) });
             }
             Err(e) => {
+                guard.fire();
                 job.state
                     .push(JobEvent { job: job.id, kind: JobEventKind::Failed(e.to_string()) });
             }
@@ -856,9 +1469,15 @@ mod tests {
             .with_seed(3)
     }
 
+    /// A spec heavy enough to pin a single worker for milliseconds —
+    /// long past the microseconds the surrounding submits take.
+    fn blocker_spec() -> SolveSpec {
+        spec(0.05).with_max_iters(4000)
+    }
+
     #[test]
     fn submit_matches_standalone_session() {
-        let server = Server::new(ServerConfig::default().with_threads(2)).unwrap();
+        let server = ServerConfig::default().with_threads(2).build().unwrap();
         let id = server.register_dataset(ds()).unwrap();
         let ticket = server.submit(SolveRequest::new(&id, Topology::new(2), spec(0.05))).unwrap();
         let out = ticket.wait().unwrap();
@@ -878,7 +1497,7 @@ mod tests {
 
     #[test]
     fn unknown_dataset_and_bad_request_rejected() {
-        let server = Server::new(ServerConfig::default().with_threads(1)).unwrap();
+        let server = ServerConfig::default().with_threads(1).build().unwrap();
         let err = server
             .submit(SolveRequest::new("nope", Topology::new(1), spec(0.05)))
             .unwrap_err();
@@ -889,25 +1508,29 @@ mod tests {
         assert!(server
             .submit(SolveRequest::new(&id, Topology::new(0), spec(0.05)))
             .is_err());
+        assert!(server
+            .submit(SolveRequest::new(&id, Topology::new(1), spec(0.05)).with_tenant("../esc"))
+            .is_err());
         server.shutdown().unwrap();
     }
 
     #[test]
     fn register_is_idempotent_per_content() {
-        let server = Server::new(ServerConfig::default().with_threads(1)).unwrap();
+        let server = ServerConfig::default().with_threads(1).build().unwrap();
         let a = server.register_dataset(ds()).unwrap();
         let b = server.register_dataset(ds()).unwrap();
         assert_eq!(a, b);
-        assert_eq!(server.stats().len(), 1);
+        assert_eq!(server.stats().datasets.len(), 1);
         assert!(server.fingerprint(&a).is_some());
         server.shutdown().unwrap();
     }
 
     #[test]
     fn warm_tag_chains_from_nearest_lambda() {
-        // One worker → jobs run in submit order, so the second tagged
-        // job deterministically warm-starts from the first's solution.
-        let server = Server::new(ServerConfig::default().with_threads(1)).unwrap();
+        // One worker → same-tenant jobs run in submit order, so the
+        // second tagged job deterministically warm-starts from the
+        // first's solution.
+        let server = ServerConfig::default().with_threads(1).build().unwrap();
         let id = server.register_dataset(ds()).unwrap();
         let first = server
             .submit(SolveRequest::new(&id, Topology::new(1), spec(0.1)).with_warm_tag("path"))
@@ -929,16 +1552,122 @@ mod tests {
     }
 
     #[test]
-    fn zero_threads_and_zero_queue_rejected() {
-        assert!(Server::new(ServerConfig::default().with_threads(0)).is_err());
-        assert!(Server::new(ServerConfig::default().with_queue_cap(0)).is_err());
-        assert!(Server::new(ServerConfig::default().with_warm_pool_max(0)).is_err());
-        assert!(Server::new(ServerConfig::default().with_writer_id("../escape")).is_err());
+    fn build_rejects_invalid_limits() {
+        assert!(ServerConfig::default().with_threads(0).build().is_err());
+        assert!(ServerConfig::default().with_queue_cap(0).build().is_err());
+        assert!(ServerConfig::default().with_warm_pool_max(0).build().is_err());
+        assert!(ServerConfig::default().with_writer_id("../escape").build().is_err());
+    }
+
+    #[test]
+    fn build_cross_checks_tenant_policies() {
+        let zero_weight = TenantPolicy::default().with_weight(0);
+        assert!(ServerConfig::default().with_tenant_default(zero_weight).build().is_err());
+        let zero_quota = TenantPolicy::default().with_max_queued(0);
+        assert!(ServerConfig::default().with_tenant("a", zero_quota).build().is_err());
+        let zero_inflight = TenantPolicy::default().with_max_in_flight(0);
+        assert!(ServerConfig::default().with_tenant("a", zero_inflight).build().is_err());
+        // Per-tenant quota must fit inside the global queue cap.
+        let err = ServerConfig::default()
+            .with_queue_cap(4)
+            .with_tenant("a", TenantPolicy::default().with_max_queued(5))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("queue cap"), "{err}");
+        // The default policy is cross-checked too.
+        assert!(ServerConfig::default().with_queue_cap(4).build().is_err());
+        let small = TenantPolicy::default().with_max_queued(4);
+        assert!(ServerConfig::default()
+            .with_queue_cap(4)
+            .with_tenant_default(small)
+            .build()
+            .is_ok());
+        // Tenant names are path components; duplicates are config errors.
+        let p = TenantPolicy::default();
+        assert!(ServerConfig::default().with_tenant("../esc", p).build().is_err());
+        assert!(ServerConfig::default()
+            .with_tenant("a", p)
+            .with_tenant("a", p)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn over_quota_submit_sheds_with_retry_after_instead_of_blocking() {
+        // One worker pinned by a blocker in its own tenant; tenant "t"
+        // has an admission quota of 1, so its second submit must shed
+        // immediately with a structured over_quota rejection.
+        let server = ServerConfig::default()
+            .with_threads(1)
+            .with_tenant("t", TenantPolicy::default().with_max_queued(1))
+            .build()
+            .unwrap();
+        let id = server.register_dataset(ds()).unwrap();
+        let blocker = server
+            .submit(
+                SolveRequest::new(&id, Topology::new(1), blocker_spec()).with_tenant("boot"),
+            )
+            .unwrap();
+        let queued = server
+            .submit(SolveRequest::new(&id, Topology::new(1), spec(0.1)).with_tenant("t"))
+            .unwrap();
+        let err = server
+            .submit(SolveRequest::new(&id, Topology::new(1), spec(0.2)).with_tenant("t"))
+            .unwrap_err();
+        match &err {
+            CaError::Reject { code, retry_after_ms, .. } => {
+                assert_eq!(code, "over_quota");
+                assert!(*retry_after_ms >= 1, "retry hint must be positive: {err}");
+            }
+            other => panic!("expected a structured rejection, got {other}"),
+        }
+        blocker.wait().unwrap();
+        queued.wait().unwrap();
+        let q = server.queue_stats();
+        assert_eq!(q.shed, 1);
+        assert_eq!(q.completed, 2);
+        let t = q.tenants.iter().find(|t| t.tenant == "t").unwrap();
+        assert_eq!(t.shed, 1);
+        assert_eq!(t.submitted, 1, "the shed submit was never admitted");
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn expired_deadline_fails_fast_without_occupying_a_worker() {
+        let server = ServerConfig::default().with_threads(1).build().unwrap();
+        let id = server.register_dataset(ds()).unwrap();
+        let blocker = server
+            .submit(
+                SolveRequest::new(&id, Topology::new(1), blocker_spec()).with_tenant("boot"),
+            )
+            .unwrap();
+        // deadline_ms = 0: expired the instant a worker looks at it
+        // (the blocker guarantees a non-zero queue wait).
+        let doomed = server
+            .submit(
+                SolveRequest::new(&id, Topology::new(1), spec(0.1))
+                    .with_tenant("t")
+                    .with_deadline_ms(0),
+            )
+            .unwrap();
+        let err = doomed.wait().unwrap_err();
+        assert!(
+            matches!(&err, CaError::Reject { code, .. } if code == "deadline_exceeded"),
+            "{err}"
+        );
+        let events = doomed.events();
+        assert_eq!(events.len(), 1, "no started/block/done — the job never ran: {events:?}");
+        assert!(matches!(events[0].kind, JobEventKind::DeadlineExceeded { .. }));
+        blocker.wait().unwrap();
+        let q = server.queue_stats();
+        assert_eq!(q.deadline_expired, 1);
+        assert_eq!(q.completed, 1, "only the blocker occupied a worker");
+        server.shutdown().unwrap();
     }
 
     #[test]
     fn traversal_shaped_warm_tags_rejected_at_submit() {
-        let server = Server::new(ServerConfig::default().with_threads(1)).unwrap();
+        let server = ServerConfig::default().with_threads(1).build().unwrap();
         let id = server.register_dataset(ds()).unwrap();
         let req = SolveRequest::new(&id, Topology::new(1), spec(0.05)).with_warm_tag("../../x");
         assert!(server.submit(req).is_err());
@@ -952,13 +1681,12 @@ mod tests {
         std::fs::remove_dir_all(&store_dir).ok();
         // One worker, bound 1: jobs run in submit order, every insert
         // beyond the first evicts-and-spills the previous λ.
-        let server = Server::new(
-            ServerConfig::default()
-                .with_threads(1)
-                .with_store(&store_dir)
-                .with_warm_pool_max(1),
-        )
-        .unwrap();
+        let server = ServerConfig::default()
+            .with_threads(1)
+            .with_store(&store_dir)
+            .with_warm_pool_max(1)
+            .build()
+            .unwrap();
         let id = server.register_dataset(ds()).unwrap();
         for lambda in [0.1, 0.05, 0.09] {
             server
@@ -970,22 +1698,24 @@ mod tests {
                 .unwrap();
         }
         assert_eq!(server.warm_occupancy(&id), Some(1), "bound holds");
-        let (_, stats, occupancy) = server.stats().into_iter().next().unwrap();
-        assert_eq!(occupancy, 1);
-        assert!(stats.warm_evictions >= 2, "stats: {stats:?}");
+        let stats = server.stats();
+        let d = &stats.datasets[0];
+        assert_eq!(d.warm_pool_entries, 1);
+        assert!(d.cache.warm_evictions >= 2, "stats: {:?}", d.cache);
         // λ=0.09's nearest candidate is the *evicted* 0.1 (|Δ|=0.01, vs
         // 0.04 for the in-memory 0.05) → the warm start came off disk.
-        assert!(stats.warm_spill_hits >= 1, "stats: {stats:?}");
+        assert!(d.cache.warm_spill_hits >= 1, "stats: {:?}", d.cache);
         server.shutdown().unwrap();
         std::fs::remove_dir_all(&store_dir).ok();
     }
 
     #[test]
     fn warm_pool_eviction_without_store_drops_entries() {
-        let server = Server::new(
-            ServerConfig::default().with_threads(1).with_warm_pool_max(1),
-        )
-        .unwrap();
+        let server = ServerConfig::default()
+            .with_threads(1)
+            .with_warm_pool_max(1)
+            .build()
+            .unwrap();
         let id = server.register_dataset(ds()).unwrap();
         for lambda in [0.1, 0.05] {
             server
@@ -996,10 +1726,11 @@ mod tests {
                 .wait()
                 .unwrap();
         }
-        let (_, stats, occupancy) = server.stats().into_iter().next().unwrap();
-        assert_eq!(occupancy, 1);
-        assert_eq!(stats.warm_evictions, 1);
-        assert_eq!(stats.warm_spill_hits, 0, "no store, nothing to fall through to");
+        let stats = server.stats();
+        let d = &stats.datasets[0];
+        assert_eq!(d.warm_pool_entries, 1);
+        assert_eq!(d.cache.warm_evictions, 1);
+        assert_eq!(d.cache.warm_spill_hits, 0, "no store, nothing to fall through to");
         server.shutdown().unwrap();
     }
 }

@@ -35,12 +35,30 @@
 //!     `lipschitz_computes == 0` AND warm-starts from the first's
 //!     spilled solutions (`warm_spill_hits ≥ 1`), bit-identical to a
 //!     standalone session fed the same warm start explicitly.
+//!
+//! QoS acceptance pins (ISSUE 8):
+//!
+//! (h) saturation: greedy tenants flooding a one-worker server get
+//!     structured `over_quota` + `retry_after_ms` rejections at their
+//!     quota (submits shed, never block), the light tenant's jobs all
+//!     complete, an expired deadline never reaches a worker — and every
+//!     *accepted* job stays bit-identical to a fresh standalone
+//!     session, no matter what the scheduler reordered or shed;
+//! (i) the global queue cap sheds independently of per-tenant quotas;
+//! (j) within one tenant, higher priority dequeues first — pinned by
+//!     warm-chain replay (the later-submitted high-priority job's
+//!     solution is the warm start the low-priority job observes);
+//! (k) across tenants, weighted deficit-round-robin interleaves
+//!     queues — equal weights alternate tenants, weight 2 drains two
+//!     jobs before yielding — pinned the same replay way.
 
 use ca_prox::datasets::synthetic::{generate, SyntheticSpec};
 use ca_prox::datasets::Dataset;
+use ca_prox::error::CaError;
 use ca_prox::grid::PlanCache;
 use ca_prox::serve::{
-    Fingerprint, PlanStore, ServeClient, Server, ServerConfig, SolveRequest, WarmLoad, WriterId,
+    Fingerprint, PlanStore, ServeClient, Server, ServerConfig, SolveRequest, TenantPolicy,
+    WarmLoad, WriterId,
 };
 use ca_prox::session::{Session, SolveSpec, Topology};
 use ca_prox::util::prop::prop_check;
@@ -120,7 +138,7 @@ fn warm_boot_pays_zero_setup_and_serves_persisted_hits() {
     let store_dir = tmp_dir("warm_boot");
     let boot = |expect_cold: bool| -> (Vec<Vec<f64>>, ca_prox::grid::CacheStats) {
         let server =
-            Server::new(ServerConfig::default().with_threads(2).with_store(&store_dir)).unwrap();
+            ServerConfig::default().with_threads(2).with_store(&store_dir).build().unwrap();
         let id = server.register_dataset(dataset(21)).unwrap();
         let tickets: Vec<_> = [(0.1, 3), (0.05, 3)]
             .iter()
@@ -161,7 +179,7 @@ fn changed_bytes_get_new_fingerprint_and_full_recompute() {
     let store_dir = tmp_dir("changed_bytes");
     let run = |gen_seed: u64| -> (String, ca_prox::grid::CacheStats) {
         let server =
-            Server::new(ServerConfig::default().with_threads(1).with_store(&store_dir)).unwrap();
+            ServerConfig::default().with_threads(1).with_store(&store_dir).build().unwrap();
         // Same logical name ("smoke"-style reuse of a path), different
         // bytes when gen_seed differs.
         let id = server.register_dataset(dataset(gen_seed)).unwrap();
@@ -291,13 +309,12 @@ fn concurrent_leased_writers_never_tear_the_shared_plan() {
             .map(|(i, &lambda)| {
                 let store_dir = &store_dir;
                 scope.spawn(move || {
-                    let server = Server::new(
-                        ServerConfig::default()
-                            .with_threads(1)
-                            .with_store(store_dir)
-                            .with_writer_id(&format!("w{i}")),
-                    )
-                    .unwrap();
+                    let server = ServerConfig::default()
+                        .with_threads(1)
+                        .with_store(store_dir)
+                        .with_writer_id(&format!("w{i}"))
+                        .build()
+                        .unwrap();
                     let id = server.register_dataset(dataset(21)).unwrap();
                     let out = server
                         .submit(SolveRequest::new(&id, Topology::new(2), spec(lambda, 3)))
@@ -338,10 +355,12 @@ fn concurrent_leased_writers_never_tear_the_shared_plan() {
     assert_eq!(fresh.stats().lipschitz_computes, 0);
     assert!(fresh.stats().persisted_hits >= 1);
     // And a post-race boot is a warm boot with bit-identical solves.
-    let server = Server::new(
-        ServerConfig::default().with_threads(1).with_store(&store_dir).with_writer_id("post"),
-    )
-    .unwrap();
+    let server = ServerConfig::default()
+        .with_threads(1)
+        .with_store(&store_dir)
+        .with_writer_id("post")
+        .build()
+        .unwrap();
     let id = server.register_dataset(dataset(21)).unwrap();
     let out = server
         .submit(SolveRequest::new(&id, Topology::new(2), spec(0.05, 3)))
@@ -449,14 +468,13 @@ fn warm_pool_lru_bound_is_transparent_with_a_store() {
     let lambdas = [0.1, 0.08, 0.12, 0.05, 0.11];
     let run = |bound: usize, tag: &str| -> (Vec<Vec<u64>>, ca_prox::grid::CacheStats) {
         let store_dir = tmp_dir(tag);
-        let server = Server::new(
-            ServerConfig::default()
-                .with_threads(1)
-                .with_store(&store_dir)
-                .with_warm_pool_max(bound)
-                .with_writer_id("w"),
-        )
-        .unwrap();
+        let server = ServerConfig::default()
+            .with_threads(1)
+            .with_store(&store_dir)
+            .with_warm_pool_max(bound)
+            .with_writer_id("w")
+            .build()
+            .unwrap();
         let id = server.register_dataset(dataset(21)).unwrap();
         let ws: Vec<Vec<u64>> = lambdas
             .iter()
@@ -497,14 +515,13 @@ fn warm_pool_lru_bound_is_transparent_with_a_store() {
 fn second_server_warm_starts_from_first_servers_spilled_solutions() {
     let store_dir = tmp_dir("fleet_accept");
     let boot = |writer: &str| {
-        Server::new(
-            ServerConfig::default()
-                .with_threads(1)
-                .with_store(&store_dir)
-                .with_warm_pool_max(1)
-                .with_writer_id(writer),
-        )
-        .unwrap()
+        ServerConfig::default()
+            .with_threads(1)
+            .with_store(&store_dir)
+            .with_warm_pool_max(1)
+            .with_writer_id(writer)
+            .build()
+            .unwrap()
     };
     let a = boot("a");
     let id = a.register_dataset(dataset(21)).unwrap();
@@ -543,4 +560,268 @@ fn second_server_warm_starts_from_first_servers_spilled_solutions() {
     let cold = session.solve(&spec(0.04, 3)).unwrap();
     assert_ne!(out.w, cold.w, "the spilled warm start must actually change the trajectory");
     std::fs::remove_dir_all(&store_dir).ok();
+}
+
+/// A job heavy enough to pin a worker while a burst of submits lands
+/// behind it — deterministic saturation without sleeps.
+fn blocker_spec() -> SolveSpec {
+    spec(0.05, 99).with_max_iters(4000)
+}
+
+#[test]
+fn saturation_sheds_over_quota_keeps_light_tenant_and_accepted_bits_prop() {
+    // (h) One worker, three greedy tenants with quota 2, one light
+    // tenant. A blocker pins the worker so admission decisions are
+    // deterministic; the property generator varies the light tenant's
+    // (λ, seed) and the greedy λ spread across cases.
+    prop_check("saturation battery", 3, |g| {
+        let light_lambda = g.f64_in(0.02, 0.3);
+        let light_seed = g.usize_in(1, 1000) as u64;
+        let greedy_lambda = g.f64_in(0.02, 0.3);
+        let server = ServerConfig::default()
+            .with_threads(1)
+            .with_tenant("g0", TenantPolicy::default().with_max_queued(2))
+            .with_tenant("g1", TenantPolicy::default().with_max_queued(2))
+            .with_tenant("g2", TenantPolicy::default().with_max_queued(2))
+            .with_tenant("light", TenantPolicy::default().with_weight(8))
+            .build()
+            .map_err(|e| e.to_string())?;
+        let id = server.register_dataset(dataset(21)).map_err(|e| e.to_string())?;
+        let blocker = server
+            .submit(
+                SolveRequest::new(&id, Topology::new(1), blocker_spec()).with_tenant("boot"),
+            )
+            .map_err(|e| e.to_string())?;
+        // Greedy flood: each tenant pushes 4 jobs against a quota of 2.
+        // The two over-quota submits must shed with a structured error
+        // and a backoff hint — returning Err means they never blocked.
+        let mut accepted = Vec::new();
+        let mut shed = 0usize;
+        for tenant in ["g0", "g1", "g2"] {
+            for i in 0..4usize {
+                let req = SolveRequest::new(
+                    &id,
+                    Topology::new(1),
+                    spec(greedy_lambda, 10 + i as u64),
+                )
+                .with_tenant(tenant);
+                match server.submit(req) {
+                    Ok(t) => accepted.push((greedy_lambda, 10 + i as u64, t)),
+                    Err(CaError::Reject { code, retry_after_ms, .. }) => {
+                        if code != "over_quota" {
+                            return Err(format!("wrong shed code '{code}'"));
+                        }
+                        if retry_after_ms == 0 {
+                            return Err("shed without a backoff hint".into());
+                        }
+                        shed += 1;
+                    }
+                    Err(e) => return Err(format!("unexpected submit error: {e}")),
+                }
+            }
+        }
+        if shed != 6 {
+            return Err(format!("expected 2 sheds per greedy tenant, got {shed}"));
+        }
+        // An expired deadline never reaches a worker: the worker is
+        // still pinned, so deadline 0 is already past at dequeue.
+        let doomed = server
+            .submit(
+                SolveRequest::new(&id, Topology::new(1), spec(light_lambda, light_seed))
+                    .with_tenant("light")
+                    .with_deadline_ms(0),
+            )
+            .map_err(|e| e.to_string())?;
+        // The light tenant's real jobs are admitted and complete.
+        let light: Vec<_> = (0..2u64)
+            .map(|i| {
+                let t = server
+                    .submit(
+                        SolveRequest::new(
+                            &id,
+                            Topology::new(1),
+                            spec(light_lambda, light_seed + i),
+                        )
+                        .with_tenant("light")
+                        .with_priority(1),
+                    )
+                    .unwrap();
+                (light_lambda, light_seed + i, t)
+            })
+            .collect();
+        match doomed.wait() {
+            Err(CaError::Reject { code, .. }) if code == "deadline_exceeded" => {}
+            other => return Err(format!("doomed job must expire, got {other:?}")),
+        }
+        if doomed.events().len() != 1 {
+            return Err("an expired job must emit exactly one event (never Started)".into());
+        }
+        blocker.wait().map_err(|e| e.to_string())?;
+        // Every accepted output — greedy or light — is bit-identical to
+        // a fresh standalone session: scheduling reordered and shed,
+        // but never touched any accepted job's bits.
+        let ds = dataset(21);
+        for (lambda, seed, ticket) in accepted.iter().chain(&light) {
+            let out = ticket.wait().map_err(|e| e.to_string())?;
+            let mut standalone = Session::build(&ds, Topology::new(1)).unwrap();
+            let expect = standalone.solve(&spec(*lambda, *seed)).unwrap();
+            if out.w != expect.w {
+                return Err(format!("accepted job λ={lambda} seed={seed} changed bits"));
+            }
+        }
+        let q = server.queue_stats();
+        if q.shed != 6 || q.deadline_expired != 1 {
+            return Err(format!("queue counters off: {q:?}"));
+        }
+        // 1 blocker + 6 greedy + 2 light completed; the expired job did not.
+        if q.completed != 9 || q.depth != 0 || q.in_flight != 0 {
+            return Err(format!("queue drain state off: {q:?}"));
+        }
+        let light_stats = q
+            .tenants
+            .iter()
+            .find(|t| t.tenant == "light")
+            .ok_or("light tenant missing from stats")?;
+        if light_stats.completed != 2 || light_stats.deadline_expired != 1 {
+            return Err(format!("light tenant counters off: {light_stats:?}"));
+        }
+        server.shutdown().map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn global_queue_cap_sheds_independently_of_tenant_quotas() {
+    // (i) Quotas alone would admit 4 more jobs, but the global cap of 2
+    // fills first; the third submit sheds with the global message.
+    let server = ServerConfig::default()
+        .with_threads(1)
+        .with_queue_cap(2)
+        .with_tenant_default(TenantPolicy::default().with_max_queued(2))
+        .build()
+        .unwrap();
+    let id = server.register_dataset(dataset(21)).unwrap();
+    let blocker = server
+        .submit(SolveRequest::new(&id, Topology::new(1), blocker_spec()).with_tenant("boot"))
+        .unwrap();
+    let a = server
+        .submit(SolveRequest::new(&id, Topology::new(1), spec(0.1, 3)).with_tenant("a"))
+        .unwrap();
+    let b = server
+        .submit(SolveRequest::new(&id, Topology::new(1), spec(0.1, 4)).with_tenant("b"))
+        .unwrap();
+    let err = server
+        .submit(SolveRequest::new(&id, Topology::new(1), spec(0.1, 5)).with_tenant("c"))
+        .unwrap_err();
+    match &err {
+        CaError::Reject { code, retry_after_ms, msg } => {
+            assert_eq!(code, "over_quota");
+            assert!(*retry_after_ms >= 1);
+            assert!(msg.contains("global queue full"), "{msg}");
+        }
+        other => panic!("expected a structured rejection, got {other:?}"),
+    }
+    for t in [blocker, a, b] {
+        t.wait().unwrap();
+    }
+    assert_eq!(server.queue_stats().shed, 1);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn priority_reorders_within_a_tenant_pinned_by_warm_chain() {
+    // (j) A (priority 0) is submitted before B (priority 5), same
+    // tenant, same warm tag. If B dequeues first, B runs cold and A
+    // warm-starts from B's solution — replaying that chain manually is
+    // a bit-exact witness of the service order.
+    let server = ServerConfig::default().with_threads(1).build().unwrap();
+    let id = server.register_dataset(dataset(21)).unwrap();
+    let blocker = server
+        .submit(SolveRequest::new(&id, Topology::new(1), blocker_spec()).with_tenant("boot"))
+        .unwrap();
+    let a = server
+        .submit(
+            SolveRequest::new(&id, Topology::new(1), spec(0.1, 3))
+                .with_tenant("t")
+                .with_warm_tag("p"),
+        )
+        .unwrap();
+    let b = server
+        .submit(
+            SolveRequest::new(&id, Topology::new(1), spec(0.05, 3))
+                .with_tenant("t")
+                .with_warm_tag("p")
+                .with_priority(5),
+        )
+        .unwrap();
+    blocker.wait().unwrap();
+    let out_a = a.wait().unwrap();
+    let out_b = b.wait().unwrap();
+    let ds = dataset(21);
+    let mut session = Session::build(&ds, Topology::new(1)).unwrap();
+    let manual_b = session.solve(&spec(0.05, 3)).unwrap();
+    assert_eq!(out_b.w, manual_b.w, "B must run cold (first in the pool)");
+    let manual_a = session.solve(&spec(0.1, 3).warm_start(&manual_b.w)).unwrap();
+    assert_eq!(out_a.w, manual_a.w, "A must warm-start from B ⇒ B ran first");
+    let cold_a = session.solve(&spec(0.1, 3)).unwrap();
+    assert_ne!(out_a.w, cold_a.w, "the warm start must actually change A's trajectory");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn weighted_drr_interleaves_tenants_pinned_by_warm_chain() {
+    // (k) Tenant a queues A1(λ=0.4), A2(λ=0.2); tenant b queues
+    // B1(λ=0.1); one shared warm tag. The nearest-λ warm-start rule
+    // then makes the service order legible in the bits:
+    //   equal weights → A1, B1, A2: B1 warms from A1 (only entry),
+    //     A2 warms from B1 (0.1 is nearer to 0.2 than 0.4);
+    //   weight(a)=2   → A1, A2, B1: A2 warms from A1,
+    //     B1 warms from A2 (0.2 is nearer to 0.1 than 0.4).
+    let run = |weight_a: u64| {
+        let server = ServerConfig::default()
+            .with_threads(1)
+            .with_tenant("a", TenantPolicy::default().with_weight(weight_a))
+            .build()
+            .unwrap();
+        let id = server.register_dataset(dataset(21)).unwrap();
+        let blocker = server
+            .submit(
+                SolveRequest::new(&id, Topology::new(1), blocker_spec()).with_tenant("boot"),
+            )
+            .unwrap();
+        let submit = |tenant: &str, lambda: f64| {
+            server
+                .submit(
+                    SolveRequest::new(&id, Topology::new(1), spec(lambda, 3))
+                        .with_tenant(tenant)
+                        .with_warm_tag("path"),
+                )
+                .unwrap()
+        };
+        let a1 = submit("a", 0.4);
+        let a2 = submit("a", 0.2);
+        let b1 = submit("b", 0.1);
+        blocker.wait().unwrap();
+        let outs = (a1.wait().unwrap(), a2.wait().unwrap(), b1.wait().unwrap());
+        server.shutdown().unwrap();
+        outs
+    };
+    let ds = dataset(21);
+    let mut session = Session::build(&ds, Topology::new(1)).unwrap();
+
+    let (a1, a2, b1) = run(1);
+    let m_a1 = session.solve(&spec(0.4, 3)).unwrap();
+    let m_b1 = session.solve(&spec(0.1, 3).warm_start(&m_a1.w)).unwrap();
+    let m_a2 = session.solve(&spec(0.2, 3).warm_start(&m_b1.w)).unwrap();
+    assert_eq!(a1.w, m_a1.w, "A1 runs cold");
+    assert_eq!(b1.w, m_b1.w, "equal weights: b's turn comes after one job of a");
+    assert_eq!(a2.w, m_a2.w, "A2 sees B1's solution ⇒ order was A1, B1, A2");
+
+    let (a1, a2, b1) = run(2);
+    let m_a1 = session.solve(&spec(0.4, 3)).unwrap();
+    let m_a2 = session.solve(&spec(0.2, 3).warm_start(&m_a1.w)).unwrap();
+    let m_b1 = session.solve(&spec(0.1, 3).warm_start(&m_a2.w)).unwrap();
+    assert_eq!(a1.w, m_a1.w);
+    assert_eq!(a2.w, m_a2.w, "weight 2: a drains two jobs before yielding");
+    assert_eq!(b1.w, m_b1.w, "B1 sees A2's solution ⇒ order was A1, A2, B1");
 }
