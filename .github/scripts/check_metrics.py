@@ -1,0 +1,232 @@
+#!/usr/bin/env python3
+"""Validate a Prometheus text exposition (v0.0.4) from a serve boot.
+
+Usage: check_metrics.py SOURCE [--from-file] [--expect-jobs N]
+                               [--expect-shed N]
+
+SOURCE is a serve JSON-lines log by default: the exposition is taken
+from the `text` field of the LAST `metrics` event (so it reflects the
+final counters; check_serve.py validates the surrounding protocol).
+With --from-file, SOURCE is the raw exposition itself — the file
+`ca-prox serve --metrics-file` dumps.
+
+Checks, all fatal on failure:
+
+  * every non-comment line parses as `name{labels} value` with a
+    finite (or +Inf bucket) value, and every metric name is preceded
+    by matching `# HELP` / `# TYPE` comments;
+  * the required serve families are present: queue/in-flight gauges,
+    the per-tenant submitted/completed/shed/deadline counters, the
+    wait/service histograms, and the per-dataset cache-op counters;
+  * histograms are well-formed: cumulative `_bucket` counts are
+    monotone in `le`, the `+Inf` bucket equals `_count`, and `_sum`
+    is finite;
+  * --expect-jobs N: submitted and completed counters each sum to N
+    across tenants — reconciling the exposition with the same log's
+    `done` events that check_serve.py counted;
+  * --expect-shed N: the shed counters sum to at least N, matching
+    check_serve.py's over_quota accounting on the QoS smoke log.
+"""
+
+import json
+import math
+import re
+import sys
+
+REQUIRED_FAMILIES = [
+    "ca_prox_serve_queue_depth",
+    "ca_prox_serve_jobs_in_flight",
+    "ca_prox_serve_jobs_submitted_total",
+    "ca_prox_serve_jobs_completed_total",
+    "ca_prox_serve_jobs_shed_total",
+    "ca_prox_serve_jobs_deadline_expired_total",
+    "ca_prox_serve_tenant_queue_depth",
+    "ca_prox_serve_tenant_in_flight",
+    "ca_prox_serve_queue_wait_ms",
+    "ca_prox_serve_service_ms",
+    "ca_prox_cache_ops_total",
+    "ca_prox_warm_pool_entries",
+]
+
+HISTOGRAM_FAMILIES = ["ca_prox_serve_queue_wait_ms", "ca_prox_serve_service_ms"]
+
+SAMPLE_RE = re.compile(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})?\s+(\S+)$")
+LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def fail(msg):
+    print(f"check_metrics: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def parse_value(raw, where):
+    if raw == "+Inf":
+        return math.inf
+    try:
+        val = float(raw)
+    except ValueError:
+        fail(f"{where}: unparseable sample value '{raw}'")
+    if not math.isfinite(val):
+        fail(f"{where}: non-finite sample value '{raw}'")
+    return val
+
+
+def parse_exposition(text, origin):
+    """-> (samples: [(name, {label: value}, float)], typed: {name: type})."""
+    samples = []
+    helped, typed = set(), {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        where = f"{origin}:{lineno}"
+        line = line.rstrip()
+        if not line:
+            continue
+        if line.startswith("# HELP "):
+            helped.add(line.split()[2])
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) < 4 or parts[3] not in ("counter", "gauge", "histogram"):
+                fail(f"{where}: malformed TYPE comment: {line}")
+            typed[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            fail(f"{where}: unknown comment form: {line}")
+        m = SAMPLE_RE.match(line)
+        if not m:
+            fail(f"{where}: unparseable sample line: {line}")
+        name, labelblock, raw = m.groups()
+        labels = dict(LABEL_RE.findall(labelblock or ""))
+        base = re.sub(r"_(bucket|sum|count)$", "", name)
+        family = base if base in typed else name
+        if family not in typed or family not in helped:
+            fail(f"{where}: sample '{name}' lacks HELP/TYPE for '{family}'")
+        if name.endswith("_bucket") and "le" not in labels:
+            fail(f"{where}: histogram bucket without an 'le' label: {line}")
+        value = math.inf if raw == "+Inf" else parse_value(raw, where)
+        samples.append((name, labels, value))
+    if not samples:
+        fail(f"{origin}: exposition has no samples")
+    return samples, typed
+
+
+def check_histograms(samples, typed, origin):
+    for family, kind in sorted(typed.items()):
+        if kind != "histogram":
+            continue
+        # Group buckets by their non-le label set.
+        series = {}
+        for name, labels, value in samples:
+            if not name.startswith(family):
+                continue
+            key = tuple(sorted((k, v) for k, v in labels.items() if k != "le"))
+            entry = series.setdefault(key, {"buckets": [], "sum": None, "count": None})
+            if name == f"{family}_bucket":
+                le = math.inf if labels["le"] == "+Inf" else float(labels["le"])
+                entry["buckets"].append((le, value))
+            elif name == f"{family}_sum":
+                entry["sum"] = value
+            elif name == f"{family}_count":
+                entry["count"] = value
+        if not series:
+            fail(f"{origin}: histogram family '{family}' has no series")
+        for key, entry in sorted(series.items()):
+            where = f"{origin}: {family}{dict(key)}"
+            if entry["sum"] is None or entry["count"] is None:
+                fail(f"{where}: missing _sum or _count")
+            buckets = sorted(entry["buckets"])
+            if not buckets or buckets[-1][0] != math.inf:
+                fail(f"{where}: missing +Inf bucket")
+            prev = -1.0
+            for le, cum in buckets:
+                if cum < prev:
+                    fail(f"{where}: bucket counts not monotone at le={le}")
+                prev = cum
+            if buckets[-1][1] != entry["count"]:
+                fail(
+                    f"{where}: +Inf bucket {buckets[-1][1]} != _count {entry['count']}"
+                )
+
+
+def counter_sum(samples, family):
+    return sum(v for name, _, v in samples if name == family)
+
+
+def main(argv):
+    args = argv[1:]
+    from_file = "--from-file" in args
+    if from_file:
+        args.remove("--from-file")
+    expect_jobs = None
+    expect_shed = None
+    while len(args) > 1:
+        if args[-2] == "--expect-jobs":
+            expect_jobs = int(args[-1])
+            args = args[:-2]
+        elif args[-2] == "--expect-shed":
+            expect_shed = int(args[-1])
+            args = args[:-2]
+        else:
+            break
+    if len(args) != 1:
+        fail(
+            "usage: check_metrics.py SOURCE [--from-file] "
+            "[--expect-jobs N] [--expect-shed N]"
+        )
+    path = args[0]
+    with open(path, encoding="utf-8") as fh:
+        raw = fh.read()
+    if from_file:
+        text = raw
+    else:
+        text = None
+        for lineno, line in enumerate(raw.splitlines(), 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError:
+                continue  # protocol validity is check_serve.py's job
+            if isinstance(obj, dict) and obj.get("event") == "metrics":
+                if not isinstance(obj.get("text"), str):
+                    fail(f"{path}:{lineno}: metrics event without text")
+                text = obj["text"]
+        if text is None:
+            fail(f"{path}: no metrics event in the log")
+
+    samples, typed = parse_exposition(text, path)
+    names = {name for name, _, _ in samples}
+    for family in REQUIRED_FAMILIES:
+        present = family in names or f"{family}_count" in names
+        if not present:
+            fail(f"{path}: required family '{family}' is absent")
+    for family in HISTOGRAM_FAMILIES:
+        if typed.get(family) != "histogram":
+            fail(f"{path}: '{family}' must be TYPE histogram, got {typed.get(family)}")
+    check_histograms(samples, typed, path)
+
+    if expect_jobs is not None:
+        for family in (
+            "ca_prox_serve_jobs_submitted_total",
+            "ca_prox_serve_jobs_completed_total",
+        ):
+            got = counter_sum(samples, family)
+            if got != expect_jobs:
+                fail(f"{path}: {family} sums to {got}, expected {expect_jobs}")
+        print(f"check_metrics: {path}: submitted = completed = {expect_jobs}")
+    if expect_shed is not None:
+        got = counter_sum(samples, "ca_prox_serve_jobs_shed_total")
+        if got < expect_shed:
+            fail(
+                f"{path}: ca_prox_serve_jobs_shed_total sums to {got} "
+                f"< {expect_shed} (exposition disagrees with the shed log)"
+            )
+        print(f"check_metrics: {path}: shed counter = {got} >= {expect_shed}")
+    print(
+        f"check_metrics: {path}: {len(samples)} sample(s) across "
+        f"{len(typed)} famil(ies) OK"
+    )
+
+
+if __name__ == "__main__":
+    main(sys.argv)

@@ -9,6 +9,10 @@ Usage: check_serve.py LOG [--expect-jobs N] [--min-persisted-hits N]
 Every non-empty line of LOG must parse as a JSON object with
 schema == 2 and a known event kind (the serve responses all go to
 stdout; human chatter goes to stderr and never reaches the log).
+Every `stats` event's queue block — and each of its tenant blocks —
+must carry ordered histogram quantiles (p50 <= p99 <= max for both
+wait and service); `metrics` events must carry the exposition text
+(its contents are validated separately by check_metrics.py).
 Every `error` event must carry a machine-readable string `code`;
 `over_quota` errors additionally must carry a numeric `retry_after_ms`
 backoff hint and are tolerated ONLY when `--expect-shed` says the log
@@ -55,6 +59,7 @@ KNOWN_EVENTS = {
     "deadline_exceeded",
     "drained",
     "stats",
+    "metrics",
     "error",
     "pong",
     "bye",
@@ -64,6 +69,23 @@ KNOWN_EVENTS = {
 def fail(msg):
     print(f"check_serve: FAIL: {msg}", file=sys.stderr)
     sys.exit(1)
+
+
+def check_latency_quantiles(block, prefix, where):
+    """p50 <= p99 <= max for one wait/service latency triple; the keys
+    are additive v2 fields, so a missing quantile key is fatal."""
+    keys = [f"p50_{prefix}_ms", f"p99_{prefix}_ms", f"max_{prefix}_ms"]
+    vals = []
+    for key in keys:
+        if key not in block:
+            fail(f"{where}: stats block missing '{key}'")
+        val = block[key]
+        if not isinstance(val, (int, float)):
+            fail(f"{where}: '{key}' is not numeric: {val!r}")
+        vals.append(val)
+    p50, p99, mx = vals
+    if not (p50 <= p99 <= mx):
+        fail(f"{where}: {prefix} quantiles out of order: p50={p50} p99={p99} max={mx}")
 
 
 def main(argv):
@@ -143,9 +165,20 @@ def main(argv):
                     shed_errors += 1
                 else:
                     fail(f"{where}: '{code}' error event in the log: {line}")
+            if event == "metrics" and not isinstance(obj.get("text"), str):
+                fail(f"{where}: metrics event without an exposition text field: {line}")
             counts[event] = counts.get(event, 0) + 1
             if event == "stats":
                 last_stats = obj
+                queue = obj.get("queue")
+                if not isinstance(queue, dict):
+                    fail(f"{where}: stats event without a queue object")
+                for prefix in ("wait", "service"):
+                    check_latency_quantiles(queue, prefix, where)
+                for tenant in queue.get("tenants", []):
+                    t_where = f"{where} tenant '{tenant.get('tenant')}'"
+                    for prefix in ("wait", "service"):
+                        check_latency_quantiles(tenant, prefix, t_where)
             total += 1
     if total == 0:
         fail(f"{path}: no response lines found")

@@ -389,6 +389,72 @@ fn inmem_vs_mapped_pair(ds: &Dataset, tag: &str, reps: usize, m: usize) {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The `obs/trace-off-vs-on` hotpath pair (EXPERIMENTS.md; CI requires
+/// it via `check_bench.py --require`): the same steady-state session
+/// solve with span tracing disabled vs force-enabled. Both closures
+/// assert each rep's iterate is bit-identical to an untraced baseline —
+/// the observability invariant, also pinned in `rust/tests/obs.rs`.
+/// Two overhead ceilings are enforced: the *enabled* median may exceed
+/// the disabled median by at most 10%, and the *disabled* guard cost —
+/// micro-benchmarked directly (one relaxed load per guard) and scaled
+/// by the spans an instrumented solve actually records — must stay
+/// under 2% of the disabled solve median. The 2% bound is checked on
+/// the measured per-guard cost rather than run-vs-run wall deltas
+/// because a sub-2% difference between two full solves drowns in
+/// scheduler noise at CI rep counts.
+fn obs_trace_pair(ds: &Dataset, tag: &str, reps: usize, spec: &SolveSpec) {
+    use ca_prox::obs;
+    obs::set_enabled(false);
+    let _ = obs::take_spans();
+    let mut session = Session::build(ds, Topology::new(2)).unwrap();
+    let baseline = session.solve(spec).unwrap();
+    let t_off = bench(&format!("obs/trace-off-vs-on/off ({tag})"), 1, reps, || {
+        let out = session.solve(spec).unwrap();
+        assert_eq!(out.w, baseline.w, "untraced rep diverged from baseline");
+    });
+    emit(&t_off);
+    obs::set_enabled(true);
+    let _ = obs::take_spans();
+    let t_on = bench(&format!("obs/trace-off-vs-on/on ({tag})"), 1, reps, || {
+        let out = session.solve(spec).unwrap();
+        assert_eq!(out.w, baseline.w, "traced solve must be bit-identical to untraced");
+    });
+    obs::set_enabled(false);
+    let spans = obs::take_spans();
+    emit(&t_on);
+    assert!(!spans.is_empty(), "enabled runs must record spans");
+    // warmup (1) + reps enabled solves fed the ring.
+    let spans_per_solve = spans.len().max(1) / (reps + 1).max(1);
+    assert!(
+        t_on.median() <= 1.10 * t_off.median(),
+        "enabled tracing overhead above 10%: on {:.6}s vs off {:.6}s",
+        t_on.median(),
+        t_off.median()
+    );
+    // Disabled-path ceiling: measure the guard itself, then charge an
+    // instrumented solve's span count at that rate.
+    let probes = 1_000_000u64;
+    let start = std::time::Instant::now();
+    for i in 0..probes {
+        std::hint::black_box(ca_prox::obs::Span::enter_with_arg("obs/probe", None, i));
+    }
+    let per_guard = start.elapsed().as_secs_f64() / probes as f64;
+    let disabled_cost = per_guard * spans_per_solve as f64;
+    assert!(
+        disabled_cost <= 0.02 * t_off.median(),
+        "disabled guards cost {:.3e}s over {spans_per_solve} spans — above 2% of the \
+         {:.6}s solve median",
+        disabled_cost,
+        t_off.median()
+    );
+    println!(
+        "obs/trace-off-vs-on ({tag}): {:.2}% enabled overhead, {spans_per_solve} spans/solve, \
+         {:.1}ns/guard disabled",
+        100.0 * (t_on.median() / t_off.median() - 1.0),
+        per_guard * 1e9
+    );
+}
+
 /// CI smoke slice (`cargo bench --bench hotpath -- --quick`): one tiny
 /// kernel timing plus one Grid sweep cell, each leaving a `BENCH {json}`
 /// line — enough for the bench-smoke job to validate the schema and
@@ -420,6 +486,7 @@ fn quick_mode() {
         grid.sweep(&sweep).unwrap();
     });
     emit(&t);
+    obs_trace_pair(&ds, "quick", 3, &spec.clone().with_max_iters(16));
     serve_boot_pair(&ds, "quick", 2, &spec.clone().with_max_iters(8));
     serve_fleet_pair(&ds, "quick", 2, &spec.clone().with_max_iters(8));
     let small = load_preset("smoke", Some(300), 42).unwrap();
@@ -646,6 +713,7 @@ fn main() {
             .with_k(16)
             .with_max_iters(32)
             .with_seed(1);
+        obs_trace_pair(&ds, "covtype-50k", 5, &spec);
         serve_boot_pair(&ds, "covtype-50k", 3, &spec);
         serve_fleet_pair(&ds, "covtype-50k", 3, &spec);
         let mixed = load_preset("smoke", Some(2000), 42).unwrap();

@@ -25,9 +25,22 @@ impl Timing {
         stats::median(&self.samples)
     }
 
-    /// Sample standard deviation.
+    /// Sample standard deviation — 0.0 (never NaN) at n ≤ 1, per
+    /// [`stats::stddev`].
     pub fn stddev(&self) -> f64 {
         stats::stddev(&self.samples)
+    }
+
+    /// Percentile seconds, `q` in [0, 100]. At n = 1 every percentile
+    /// is the single sample; non-finite samples are ignored, so this is
+    /// never NaN (per [`stats::percentile`]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        stats::percentile(&self.samples, q)
+    }
+
+    /// 90th-percentile seconds.
+    pub fn p90(&self) -> f64 {
+        self.percentile(90.0)
     }
 
     /// Fastest sample (0.0 for an empty sample set, per [`stats::min`]).
@@ -38,9 +51,10 @@ impl Timing {
     /// Short human-readable summary line.
     pub fn summary(&self) -> String {
         format!(
-            "{:<40} median {:>10} mean {:>10} ±{:>9} (n={})",
+            "{:<40} median {:>10} p90 {:>10} mean {:>10} ±{:>9} (n={})",
             self.name,
             fmt_secs(self.median()),
+            fmt_secs(self.p90()),
             fmt_secs(self.mean()),
             fmt_secs(self.stddev()),
             self.samples.len()
@@ -53,10 +67,11 @@ impl Timing {
     /// through a real JSON string escaper, so the line always parses.
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"schema\":1,\"name\":\"{}\",\"n\":{},\"median_s\":{:e},\"mean_s\":{:e},\"stddev_s\":{:e},\"min_s\":{:e}}}",
+            "{{\"schema\":1,\"name\":\"{}\",\"n\":{},\"median_s\":{:e},\"p90_s\":{:e},\"mean_s\":{:e},\"stddev_s\":{:e},\"min_s\":{:e}}}",
             json_escape_str(&self.name),
             self.samples.len(),
             self.median(),
+            self.p90(),
             self.mean(),
             self.stddev(),
             self.min()
@@ -177,6 +192,33 @@ mod tests {
         let median = parsed.get("median_s").and_then(|v| v.as_f64()).unwrap();
         assert!((median - 1.0).abs() < 1e-12);
         assert!((t.min() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_sample_stats_are_finite() {
+        // n = 1 used to be the NaN/0.0 confusion corner: stddev's
+        // n − 1 divisor and percentile interpolation both degenerate.
+        let t = Timing { name: "one".into(), samples: vec![2.5] };
+        assert_eq!(t.stddev(), 0.0);
+        assert_eq!(t.median(), 2.5);
+        assert_eq!(t.p90(), 2.5);
+        assert_eq!(t.percentile(99.0), 2.5);
+        let parsed = crate::util::json::parse(&t.to_json()).unwrap();
+        for key in ["median_s", "p90_s", "mean_s", "stddev_s", "min_s"] {
+            let v = parsed.get(key).and_then(|v| v.as_f64()).unwrap();
+            assert!(v.is_finite(), "{key} must be finite at n=1");
+        }
+        assert!(t.summary().contains("p90"));
+    }
+
+    #[test]
+    fn p90_orders_between_median_and_max() {
+        let samples: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        let t = Timing { name: "ten".into(), samples };
+        assert!((t.p90() - 9.1).abs() < 1e-12, "linear interpolation at rank 8.1");
+        assert!(t.median() <= t.p90());
+        let parsed = crate::util::json::parse(&t.to_json()).unwrap();
+        assert!((parsed.get("p90_s").and_then(|v| v.as_f64()).unwrap() - 9.1).abs() < 1e-9);
     }
 
     #[test]

@@ -269,6 +269,16 @@ pub fn cmd_serve(argv: &[String]) -> Result<()> {
             takes_value: true,
             help: "listen on HOST:PORT instead of stdin/stdout",
         },
+        Flag {
+            name: "metrics-file",
+            takes_value: true,
+            help: "write the Prometheus text exposition here periodically (and at shutdown)",
+        },
+        Flag {
+            name: "metrics-interval-ms",
+            takes_value: true,
+            help: "dump period for --metrics-file, ms (default 5000)",
+        },
     ]);
     let parsed = flags.parse(argv)?;
     let mut config = ServerConfig::default();
@@ -310,6 +320,17 @@ pub fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     // All limits are cross-checked here, before any socket is bound.
     let server = config.build()?;
+    let dump = match parsed.get("metrics-file") {
+        Some(path) => {
+            let interval_ms = parsed.get_usize("metrics-interval-ms")?.unwrap_or(5000).max(1);
+            Some(MetricsDump::spawn(
+                server.metrics_watcher(),
+                std::path::PathBuf::from(path),
+                std::time::Duration::from_millis(interval_ms as u64),
+            ))
+        }
+        None => None,
+    };
     match parsed.get("socket") {
         None => {
             let stdin = std::io::stdin();
@@ -337,7 +358,60 @@ pub fn cmd_serve(argv: &[String]) -> Result<()> {
             }
         }
     }
+    if let Some(dump) = dump {
+        dump.stop();
+    }
     server.shutdown()
+}
+
+/// Background `--metrics-file` writer: dumps the Prometheus text
+/// exposition immediately, then every `interval`, and once more on
+/// stop, so file-based scrapers always see the final counters. Writes
+/// go through a sibling `.tmp` + rename so a scrape never reads a torn
+/// file.
+struct MetricsDump {
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl MetricsDump {
+    fn spawn(
+        watcher: crate::serve::server::MetricsHandle,
+        path: std::path::PathBuf,
+        interval: std::time::Duration,
+    ) -> MetricsDump {
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            let write = |text: &str| {
+                let tmp = path.with_extension("prom.tmp");
+                let res = std::fs::write(&tmp, text).and_then(|()| std::fs::rename(&tmp, &path));
+                if let Err(e) = res {
+                    log::warn!("metrics dump to {} failed: {e}", path.display());
+                }
+            };
+            // Sleep in short slices so shutdown never waits a full interval.
+            let slice = std::time::Duration::from_millis(250).min(interval);
+            let mut since_dump = std::time::Duration::ZERO;
+            write(&watcher.metrics_text());
+            while !stop_flag.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(slice);
+                since_dump += slice;
+                if since_dump >= interval {
+                    write(&watcher.metrics_text());
+                    since_dump = std::time::Duration::ZERO;
+                }
+            }
+            write(&watcher.metrics_text());
+        });
+        MetricsDump { stop, handle }
+    }
+
+    /// Signal the loop, wait for the final dump to land.
+    fn stop(self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let _ = self.handle.join();
+    }
 }
 
 /// `ca-prox submit` — send one solve to a running `ca-prox serve

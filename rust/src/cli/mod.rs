@@ -4,7 +4,7 @@
 //! ca-prox run      [--config FILE] [--dataset NAME] [--p N] [--k N] ...
 //! ca-prox sweep    --dataset NAME --p-list 1,2,4 --k-list 1,8,32 [--store DIR] ...
 //! ca-prox serve    [--store DIR|none] [--threads N] [--socket HOST:PORT]
-//!                  [--writer-id ID] [--warm-pool-max N]
+//!                  [--writer-id ID] [--warm-pool-max N] [--metrics-file FILE]
 //! ca-prox submit   --socket HOST:PORT [--dataset NAME] [--lambda X] ...
 //! ca-prox datagen  --dataset NAME --scale-n N --out FILE
 //! ca-prox ingest   --input FILE [--name NAME] [--d-hint D] [--chunk-cols N] [--out DIR]
@@ -18,7 +18,13 @@ pub mod commands;
 use args::ArgSpec;
 
 /// Entry point used by `main`; returns the process exit code.
+///
+/// Installs the logging backend first so every subcommand — not just
+/// the ones that used to call it — surfaces `log::warn!` fallbacks
+/// (kernel/vecmath pin selection, store recovery) at the
+/// `CA_PROX_LOG` level.
 pub fn run(argv: &[String]) -> i32 {
+    crate::util::logging::init();
     match dispatch(argv) {
         Ok(()) => 0,
         Err(e) => {

@@ -6,6 +6,7 @@ use crate::comm::collectives::{allreduce_sum, AllReduceAlgo};
 use crate::comm::trace::{CostTrace, Phase};
 use crate::error::Result;
 use crate::matrix::ops::GramStack;
+use crate::obs::Span;
 use crate::runtime::backend::GramBackend;
 use crate::sampling::SampleSchedule;
 
@@ -72,6 +73,7 @@ pub fn compute_gram_stack(
     let reduced = if p * stack_len <= PHYSICAL_COLLECTIVE_LIMIT {
         // Physical path: materialize every worker's buffer and run the
         // real collective round-by-round.
+        let gram_span = Span::enter_with_arg("kstep/gram", Some(Phase::GramLocal), k_eff as u64);
         let mut buffers: Vec<Vec<f64>> = cluster.map_workers(
             |w| {
                 let mut buf = vec![0.0f64; stack_len];
@@ -81,12 +83,19 @@ pub fn compute_gram_stack(
             Phase::GramLocal,
             trace,
         )?;
+        drop(gram_span);
+        let _allreduce_span =
+            Span::enter_with_arg("kstep/allreduce", Some(Phase::Collective), stack_len as u64);
         allreduce_sum(&mut buffers, algo, &cluster.machine, trace)?;
         buffers.swap_remove(0)
     } else {
         // Streaming path: windowed fill-and-sum; charge the collective's
         // analytic critical-path cost.
+        let gram_span = Span::enter_with_arg("kstep/gram", Some(Phase::GramLocal), k_eff as u64);
         let acc = cluster.map_reduce_buffers(stack_len, fill, Phase::GramLocal, trace)?;
+        drop(gram_span);
+        let _allreduce_span =
+            Span::enter_with_arg("kstep/allreduce", Some(Phase::Collective), stack_len as u64);
         let (msgs, words, flops) = algo.critical_path_cost(p, stack_len);
         trace.charge_comm(Phase::Collective, msgs, words, &cluster.machine);
         trace.charge_flops(Phase::Collective, flops, &cluster.machine);

@@ -27,6 +27,7 @@ use crate::comm::trace::CostTrace;
 use crate::error::{CaError, Result};
 use crate::grid::Grid;
 use crate::metrics::report::{SpeedupCell, SpeedupTable};
+use crate::obs::Span;
 use crate::session::{Session, SolveSpec, Topology};
 use crate::solvers::traits::{validate_solver_params, SolverOutput, StepPolicy};
 use std::collections::{BTreeMap, BTreeSet};
@@ -496,6 +497,9 @@ impl<'a> Grid<'a> {
                 .with_sample_fraction(point.b)
                 .with_k(point.k)
                 .with_seed(point.seed);
+            // Per-cell span (arg = expansion-order index); the solve's
+            // own span tree nests beneath it.
+            let _cell_span = Span::enter_with_arg("grid/cell", None, point.index as u64);
             let output = session.solve(&solve)?;
             Ok(SweepCell {
                 index: point.index,
@@ -599,6 +603,7 @@ impl<'a> Grid<'a> {
                     if let Some(w) = warm.get(&point.k) {
                         solve = solve.warm_start(w);
                     }
+                    let _cell_span = Span::enter_with_arg("grid/cell", None, point.index as u64);
                     let output = session.solve(&solve)?;
                     warm.insert(point.k, output.w.clone());
                     Ok(SweepCell {

@@ -54,7 +54,11 @@
 //! * a **PJRT runtime** ([`runtime`]) that executes AOT-compiled JAX/Pallas
 //!   kernels (HLO text artifacts) on the request path with a native
 //!   fallback — Python is never on the request path,
-//! * a config system, CLI, metrics and a benchmark kit.
+//! * a config system, CLI, metrics, a benchmark kit, and an
+//!   observability layer ([`obs`]) — hierarchical span tracing joinable
+//!   per phase against the modeled [`comm::trace::CostTrace`] seconds,
+//!   plus a Prometheus-exposition metrics registry scraped from `serve`
+//!   via the `metrics` proto command.
 //!
 //! See `DESIGN.md` for the architecture and the experiment index, and
 //! `EXPERIMENTS.md` for the reproduction of every table and figure.
@@ -70,6 +74,7 @@ pub mod error;
 pub mod grid;
 pub mod matrix;
 pub mod metrics;
+pub mod obs;
 pub mod prox;
 pub mod runtime;
 pub mod sampling;
@@ -91,6 +96,7 @@ pub mod prelude {
     pub use crate::grid::{Grid, PlanCache, SweepResult, SweepSpec};
     pub use crate::matrix::csc::CscMatrix;
     pub use crate::matrix::dense::DenseMatrix;
+    pub use crate::obs::{Registry, Span, SpanRecord};
     pub use crate::serve::{
         Fingerprint, PlanStore, ServeClient, Server, ServerConfig, SolveRequest, WriterId,
     };

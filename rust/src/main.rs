@@ -1,6 +1,16 @@
 //! `ca-prox` CLI entry point. See [`ca_prox::cli`] for commands.
 fn main() {
     ca_prox::util::logging::init();
+    // CA_PROX_TRACE=<path>: record hierarchical spans for the whole
+    // command and flush them as JSON lines on the way out.
+    let trace_path = ca_prox::obs::trace_path_from_env();
     let args: Vec<String> = std::env::args().skip(1).collect();
-    std::process::exit(ca_prox::cli::run(&args));
+    let code = ca_prox::cli::run(&args);
+    if let Some(path) = trace_path {
+        match ca_prox::obs::flush_to_path(&path) {
+            Ok(n) => log::info!("wrote {n} trace spans to {}", path.display()),
+            Err(e) => log::warn!("failed to write trace to {}: {e}", path.display()),
+        }
+    }
+    std::process::exit(code);
 }

@@ -179,6 +179,37 @@ mod tests {
         assert_eq!(csv.lines().count(), 2);
     }
 
+    /// The serialized report survives a full round trip through the
+    /// repo's own JSON parser: configuration echo, nested solver
+    /// result, trace totals and every history point come back intact.
+    #[test]
+    fn report_json_round_trips_through_parser() {
+        let r = RunReport {
+            dataset: "covtype".into(),
+            p: 8,
+            k: 8,
+            b: 0.1,
+            machine: "comet".into(),
+            output: dummy_output(),
+        };
+        let parsed = crate::util::json::parse(&r.to_json().to_string_compact()).unwrap();
+        assert_eq!(parsed.get("dataset").and_then(Json::as_str), Some("covtype"));
+        assert_eq!(parsed.get("p").and_then(Json::as_usize), Some(8));
+        assert_eq!(parsed.get("k").and_then(Json::as_usize), Some(8));
+        assert_eq!(parsed.get("b").and_then(Json::as_f64), Some(0.1));
+        assert_eq!(parsed.get("machine").and_then(Json::as_str), Some("comet"));
+        let result = parsed.get("result").unwrap();
+        assert_eq!(result.get("algorithm").and_then(Json::as_str), Some("CA-SFISTA(k=8)"));
+        assert_eq!(result.get("iterations").and_then(Json::as_usize), Some(5));
+        assert_eq!(result.get("final_objective").and_then(Json::as_f64), Some(0.5));
+        assert_eq!(result.get("converged").and_then(Json::as_bool), Some(false));
+        assert!(result.get("trace").is_some());
+        let history = result.get("history").and_then(Json::as_arr).unwrap();
+        assert_eq!(history.len(), 1);
+        assert_eq!(history[0].get("iter").and_then(Json::as_usize), Some(5));
+        assert_eq!(history[0].get("rel_error").and_then(Json::as_f64), Some(0.1));
+    }
+
     #[test]
     fn speedup_math_and_render() {
         let mut t = SpeedupTable::new("abalone");

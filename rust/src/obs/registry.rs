@@ -1,0 +1,520 @@
+//! A zero-dependency metrics registry: named counters, gauges, and
+//! log-bucketed histograms with Prometheus text-exposition v0.0.4
+//! rendering.
+//!
+//! Metric families are created on first touch and keyed by
+//! `(name, sorted labels)`; handles ([`Counter`], [`Gauge`],
+//! [`Histogram`]) are cheap `Arc` clones whose updates are single
+//! atomic ops, so a handle can be captured once and hit from a hot
+//! path. [`Registry::render`] produces the standard exposition text:
+//!
+//! ```text
+//! # HELP ca_prox_serve_queue_wait_ms Queue wait per tenant.
+//! # TYPE ca_prox_serve_queue_wait_ms histogram
+//! ca_prox_serve_queue_wait_ms_bucket{tenant="a",le="0.25"} 3
+//! ca_prox_serve_queue_wait_ms_bucket{tenant="a",le="+Inf"} 9
+//! ca_prox_serve_queue_wait_ms_sum{tenant="a"} 41.5
+//! ca_prox_serve_queue_wait_ms_count{tenant="a"} 9
+//! ```
+//!
+//! Histograms use cumulative `le` buckets, so p50/p90/p99 are derivable
+//! downstream (and via [`Histogram::quantile`], which returns the upper
+//! bound of the covering bucket clamped to the observed max — a
+//! conservative estimate that keeps `p50 ≤ p99 ≤ max` true always).
+//!
+//! The serve layer renders its exposition from a [`crate::serve::Server::stats`]
+//! snapshot (see `Server::metrics_text`) rather than double-counting in
+//! the scheduler, so the `metrics` proto command and the `stats`
+//! command can never disagree.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Shared log-spaced millisecond ladder: `0.25 · 2^i` for `i < 24`
+/// (0.25 ms … ~35 min). Used by serve latency accounting
+/// (`serve::LatencyStats`) and its exposition histograms, so stats-line
+/// quantiles and scraped bucket quantiles agree exactly.
+pub const LATENCY_MS_BOUNDS: [f64; 24] = [
+    0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0,
+    8192.0, 16384.0, 32768.0, 65536.0, 131072.0, 262144.0, 524288.0, 1048576.0, 2097152.0,
+];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn type_name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// A monotonically increasing `u64` counter handle.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A settable `f64` gauge handle (stored as bits in an `AtomicU64`).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Lock-free histogram core: per-bucket counts plus sum/count/max.
+pub struct Histogram {
+    /// Upper bounds of the finite buckets, strictly increasing; an
+    /// implicit `+Inf` bucket follows.
+    bounds: Vec<f64>,
+    /// `counts[i]` observes `v <= bounds[i]` (non-cumulative);
+    /// `counts[bounds.len()]` is the overflow bucket.
+    counts: Vec<AtomicU64>,
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]) && bounds.iter().all(|b| b.is_finite()),
+            "histogram bounds must be finite and strictly increasing"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            count: AtomicU64::new(0),
+            max_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    fn bucket_for(&self, v: f64) -> usize {
+        self.bounds.partition_point(|&b| b < v)
+    }
+
+    fn add_sum(&self, v: f64) {
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            let swap = self
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed);
+            match swap {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn raise_max(&self, v: f64) {
+        let mut cur = self.max_bits.load(Ordering::Relaxed);
+        while v > f64::from_bits(cur) {
+            match self
+                .max_bits
+                .compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Record one observation. Non-finite values are dropped (a NaN
+    /// latency is an accounting bug upstream, not a data point).
+    pub fn observe(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let i = self.bucket_for(v);
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.add_sum(v);
+        self.raise_max(v);
+    }
+
+    /// Bulk-load pre-bucketed counts (snapshot import). `counts` must
+    /// have `bounds.len() + 1` entries (finite buckets + overflow),
+    /// non-cumulative, matching this histogram's bounds.
+    pub fn merge_counts(&self, counts: &[u64], sum: f64, count: u64, max: f64) {
+        assert_eq!(counts.len(), self.counts.len(), "bucket layout mismatch");
+        for (slot, &n) in self.counts.iter().zip(counts) {
+            slot.fetch_add(n, Ordering::Relaxed);
+        }
+        self.count.fetch_add(count, Ordering::Relaxed);
+        if sum.is_finite() {
+            self.add_sum(sum);
+        }
+        if max.is_finite() {
+            self.raise_max(max);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Bucket-derived quantile, `q` in `[0, 1]`: the upper bound of the
+    /// bucket containing the `ceil(q·count)`-th observation, clamped to
+    /// the observed max (so one 3 ms sample reports 3 ms, not its 4 ms
+    /// bucket bound, and `quantile(1.0) == max`). 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, slot) in self.counts.iter().enumerate() {
+            seen += slot.load(Ordering::Relaxed);
+            if seen >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i].min(self.max())
+                } else {
+                    self.max()
+                };
+            }
+        }
+        self.max()
+    }
+}
+
+enum Series {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Arc<Histogram>),
+}
+
+struct Family {
+    help: String,
+    kind: Kind,
+    /// Rendered canonical label block (`{a="x",b="y"}` or "") → series.
+    series: BTreeMap<String, Series>,
+}
+
+/// A metric registry; create one per exposition surface and render it
+/// with [`Registry::render`].
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+fn valid_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+/// Canonical label block: keys sorted, values escaped; empty labels
+/// render as "".
+fn label_block(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut sorted: Vec<&(&str, &str)> = labels.iter().collect();
+    sorted.sort_by_key(|(k, _)| *k);
+    let body: Vec<String> = sorted
+        .iter()
+        .map(|(k, v)| {
+            assert!(valid_name(k), "invalid label name {k:?}");
+            format!("{}=\"{}\"", k, escape_label_value(v))
+        })
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// Same, but with one extra label appended after the sorted block
+/// (used for the histogram `le` label, which Prometheus renders last).
+fn label_block_with(labels_rendered: &str, key: &str, value: &str) -> String {
+    let pair = format!("{key}=\"{value}\"");
+    if labels_rendered.is_empty() {
+        format!("{{{pair}}}")
+    } else {
+        format!("{},{pair}}}", &labels_rendered[..labels_rendered.len() - 1])
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, BTreeMap<String, Family>> {
+        self.families.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn series<F, G, T>(
+        &self,
+        name: &str,
+        help: &str,
+        kind: Kind,
+        labels: &[(&str, &str)],
+        make: F,
+        cast: G,
+    ) -> T
+    where
+        F: FnOnce() -> Series,
+        G: Fn(&Series) -> Option<T>,
+    {
+        assert!(valid_name(name), "invalid metric name {name:?}");
+        let key = label_block(labels);
+        let mut families = self.lock();
+        let family = families.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            series: BTreeMap::new(),
+        });
+        assert_eq!(family.kind, kind, "metric {name} re-registered with a different type");
+        let series = family.series.entry(key).or_insert_with(make);
+        cast(series).expect("series kind matches family kind")
+    }
+
+    /// Get or create a counter series.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        self.series(
+            name,
+            help,
+            Kind::Counter,
+            labels,
+            || Series::Counter(Counter(Arc::new(AtomicU64::new(0)))),
+            |s| match s {
+                Series::Counter(c) => Some(c.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Get or create a gauge series.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        self.series(
+            name,
+            help,
+            Kind::Gauge,
+            labels,
+            || Series::Gauge(Gauge(Arc::new(AtomicU64::new(0f64.to_bits())))),
+            |s| match s {
+                Series::Gauge(g) => Some(g.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Get or create a histogram series with the given finite bucket
+    /// bounds (an `+Inf` bucket is implicit).
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Arc<Histogram> {
+        self.series(
+            name,
+            help,
+            Kind::Histogram,
+            labels,
+            || Series::Histogram(Arc::new(Histogram::new(bounds))),
+            |s| match s {
+                Series::Histogram(h) => Some(Arc::clone(h)),
+                _ => None,
+            },
+        )
+    }
+
+    /// Render the whole registry as Prometheus text exposition v0.0.4:
+    /// families sorted by name, one `# HELP`/`# TYPE` header each,
+    /// histogram buckets cumulative with a final `le="+Inf"` equal to
+    /// `_count`.
+    pub fn render(&self) -> String {
+        let families = self.lock();
+        let mut out = String::new();
+        for (name, family) in families.iter() {
+            out.push_str(&format!("# HELP {} {}\n", name, family.help.replace('\n', " ")));
+            out.push_str(&format!("# TYPE {} {}\n", name, family.kind.type_name()));
+            for (labels, series) in family.series.iter() {
+                match series {
+                    Series::Counter(c) => {
+                        out.push_str(&format!("{}{} {}\n", name, labels, c.get()));
+                    }
+                    Series::Gauge(g) => {
+                        out.push_str(&format!("{}{} {}\n", name, labels, fmt_f64(g.get())));
+                    }
+                    Series::Histogram(h) => {
+                        let mut cumulative = 0u64;
+                        for (i, slot) in h.counts.iter().enumerate() {
+                            cumulative += slot.load(Ordering::Relaxed);
+                            let le = if i < h.bounds.len() {
+                                fmt_f64(h.bounds[i])
+                            } else {
+                                "+Inf".to_string()
+                            };
+                            let lb = label_block_with(labels, "le", &le);
+                            out.push_str(&format!("{}_bucket{} {}\n", name, lb, cumulative));
+                        }
+                        out.push_str(&format!("{}_sum{} {}\n", name, labels, fmt_f64(h.sum())));
+                        out.push_str(&format!("{}_count{} {}\n", name, labels, h.count()));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate_per_label_set() {
+        let reg = Registry::new();
+        let a = reg.counter("jobs_total", "Jobs.", &[("tenant", "a")]);
+        let b = reg.counter("jobs_total", "Jobs.", &[("tenant", "b")]);
+        a.inc();
+        a.add(2);
+        b.inc();
+        // Same (name, labels) returns the same underlying series.
+        assert_eq!(reg.counter("jobs_total", "Jobs.", &[("tenant", "a")]).get(), 3);
+        assert_eq!(b.get(), 1);
+        let g = reg.gauge("queue_depth", "Depth.", &[]);
+        g.set(4.0);
+        assert_eq!(reg.gauge("queue_depth", "Depth.", &[]).get(), 4.0);
+    }
+
+    #[test]
+    fn histogram_observe_quantiles_and_max() {
+        let h = Histogram::new(&LATENCY_MS_BOUNDS);
+        // One sample: every quantile equals the sample via max-clamping,
+        // even though 3.0 lands in the le=4 bucket.
+        h.observe(3.0);
+        assert_eq!(h.quantile(0.5), 3.0);
+        assert_eq!(h.quantile(0.99), 3.0);
+        assert_eq!(h.max(), 3.0);
+        for v in [0.1, 0.3, 1.5, 6.0, 100.0, 5000.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 7);
+        let (p50, p99) = (h.quantile(0.5), h.quantile(0.99));
+        assert!(p50 <= p99 && p99 <= h.max(), "p50 {p50} <= p99 {p99} <= max");
+        assert!((h.sum() - 5110.9).abs() < 1e-9);
+        assert_eq!(h.quantile(1.0), 5000.0);
+        h.observe(f64::NAN); // dropped, not counted
+        assert_eq!(h.count(), 7);
+    }
+
+    #[test]
+    fn histogram_merge_counts_matches_direct_observe() {
+        let direct = Histogram::new(&LATENCY_MS_BOUNDS);
+        let mut counts = vec![0u64; LATENCY_MS_BOUNDS.len() + 1];
+        let (mut sum, mut max) = (0.0f64, 0.0f64);
+        let samples = [0.2, 0.9, 3.0, 3.5, 70.0];
+        for &v in &samples {
+            direct.observe(v);
+            counts[direct.bucket_for(v)] += 1;
+            sum += v;
+            max = max.max(v);
+        }
+        let merged = Histogram::new(&LATENCY_MS_BOUNDS);
+        merged.merge_counts(&counts, sum, samples.len() as u64, max);
+        assert_eq!(merged.count(), direct.count());
+        assert_eq!(merged.max(), direct.max());
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(merged.quantile(q), direct.quantile(q));
+        }
+    }
+
+    #[test]
+    fn render_is_valid_exposition_with_cumulative_buckets() {
+        let reg = Registry::new();
+        reg.counter("ca_prox_jobs_total", "Total jobs.", &[("tenant", "a\"b")]).add(2);
+        reg.gauge("ca_prox_depth", "Queue depth.", &[]).set(1.5);
+        let h = reg.histogram("ca_prox_wait_ms", "Wait.", &[("tenant", "a")], &[1.0, 2.0, 4.0]);
+        h.observe(0.5);
+        h.observe(3.0);
+        h.observe(9.0);
+        let text = reg.render();
+        assert!(text.contains("# TYPE ca_prox_jobs_total counter"));
+        assert!(text.contains("ca_prox_jobs_total{tenant=\"a\\\"b\"} 2"));
+        assert!(text.contains("ca_prox_depth 1.5"));
+        assert!(text.contains("# TYPE ca_prox_wait_ms histogram"));
+        assert!(text.contains("ca_prox_wait_ms_bucket{tenant=\"a\",le=\"1\"} 1"));
+        assert!(text.contains("ca_prox_wait_ms_bucket{tenant=\"a\",le=\"2\"} 1"));
+        assert!(text.contains("ca_prox_wait_ms_bucket{tenant=\"a\",le=\"4\"} 2"));
+        assert!(text.contains("ca_prox_wait_ms_bucket{tenant=\"a\",le=\"+Inf\"} 3"));
+        assert!(text.contains("ca_prox_wait_ms_sum{tenant=\"a\"} 12.5"));
+        assert!(text.contains("ca_prox_wait_ms_count{tenant=\"a\"} 3"));
+        // Families render in sorted order with HELP before TYPE.
+        let help = text.find("# HELP ca_prox_depth").unwrap();
+        let jobs = text.find("# HELP ca_prox_jobs_total").unwrap();
+        assert!(help < jobs);
+    }
+
+    #[test]
+    #[should_panic(expected = "different type")]
+    fn type_conflict_panics() {
+        let reg = Registry::new();
+        reg.counter("m", "h", &[]);
+        reg.gauge("m", "h", &[]);
+    }
+}

@@ -1,0 +1,420 @@
+//! Hierarchical span tracing with a lock-cheap per-thread ring buffer.
+//!
+//! A [`Span`] is an RAII guard: [`Span::enter`] opens it, dropping it
+//! records one [`SpanRecord`] (name, optional [`Phase`] label, parent
+//! link, wall-clock start + duration) into the calling thread's ring.
+//! The hot-path contract is strict:
+//!
+//! * **disabled** (the default), `Span::enter` is one relaxed atomic
+//!   load and a branch — no clock read, no allocation, no lock. The
+//!   required `obs/trace-off-vs-on` BENCH pair pins this at ≤ 2% of a
+//!   solve.
+//! * **enabled**, a span costs two `Instant::now()` reads plus one push
+//!   into a ring buffer guarded by the thread's *own* mutex — contended
+//!   only when a drain races the recording thread, never by other
+//!   recording threads.
+//!
+//! Rings are bounded ([`RING_CAPACITY`] spans per thread); overflow
+//! overwrites the oldest record and counts into [`dropped`], so tracing
+//! can stay on for a long-running server without growing memory.
+//!
+//! Spans nest per thread: the innermost open span on the current thread
+//! is the parent of the next one opened there (`parent == 0` marks a
+//! root). Spans opened on different threads (e.g. inside
+//! [`crate::cluster`] worker pools) are roots of their own thread's
+//! forest — joinable to the solve span by time range.
+//!
+//! The `phase` field carries the matching [`Phase`] name
+//! (`gram_local`, `collective`, `update`, …), so measured span seconds
+//! are joinable per phase against the analytic
+//! [`crate::comm::trace::CostTrace`] seconds — modeled-vs-measured in
+//! one key space.
+//!
+//! Export is JSON lines (schema [`TRACE_SCHEMA`]): set
+//! `CA_PROX_TRACE=<path>` before any CLI command (the binary enables
+//! tracing at entry and flushes on exit), or call
+//! [`crate::session::Session::solve_traced`] to get the spans of one
+//! solve programmatically.
+//!
+//! Invariant (pinned by `rust/tests/obs.rs`): enabling tracing never
+//! changes a solve's output bits or its analytic flop accounting —
+//! spans only *observe* the clock.
+
+use crate::comm::trace::Phase;
+use crate::util::json::Json;
+use std::cell::Cell;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Schema tag on every exported trace line.
+pub const TRACE_SCHEMA: usize = 1;
+
+/// Spans each thread retains; older records are overwritten (and
+/// counted as dropped) beyond this.
+pub const RING_CAPACITY: usize = 8192;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(0);
+static NEXT_THREAD_TAG: AtomicU64 = AtomicU64::new(0);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+/// The process-wide time origin all `start_ns` values are relative to,
+/// pinned on first use (at [`set_enabled`] or the first span).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Recover the guard from a poisoned ring mutex: records are pushed
+/// whole, so the ring stays consistent across a panic.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Turn span recording on or off (global, relaxed). Flipping the flag
+/// mid-solve is safe: an already-open span still records on drop.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch(); // pin the origin before the first span reads the clock
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether spans are currently being recorded.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// One completed span.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Unique id (> 0), process-wide, in open order.
+    pub id: u64,
+    /// Id of the innermost span open on the same thread when this one
+    /// opened; 0 for a root.
+    pub parent: u64,
+    /// Small per-thread tag (assigned on a thread's first span).
+    pub thread: u64,
+    /// Static site name (`solve`, `block`, `gram`, `allreduce`, …).
+    pub name: &'static str,
+    /// Matching analytic-cost phase, when the span covers exactly one.
+    pub phase: Option<Phase>,
+    /// Free integer argument (k-step block start, sweep cell index, …).
+    pub arg: u64,
+    /// Start, nanoseconds since the process trace epoch.
+    pub start_ns: u64,
+    /// Duration, nanoseconds.
+    pub dur_ns: u64,
+}
+
+impl SpanRecord {
+    /// One JSON-lines object (schema [`TRACE_SCHEMA`]). Times are
+    /// microseconds as floats so the line stays compact and parses with
+    /// [`crate::util::json::parse`].
+    pub fn to_json(&self) -> Json {
+        let phase = match self.phase {
+            Some(p) => Json::Str(p.name().to_string()),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("schema", Json::Num(TRACE_SCHEMA as f64)),
+            ("span", Json::Str(self.name.to_string())),
+            ("phase", phase),
+            ("id", Json::Num(self.id as f64)),
+            ("parent", Json::Num(self.parent as f64)),
+            ("thread", Json::Num(self.thread as f64)),
+            ("arg", Json::Num(self.arg as f64)),
+            ("start_us", Json::Num(self.start_ns as f64 / 1e3)),
+            ("dur_us", Json::Num(self.dur_ns as f64 / 1e3)),
+        ])
+    }
+}
+
+/// Fixed-capacity overwrite-oldest span buffer.
+struct Ring {
+    spans: Vec<SpanRecord>,
+    /// Next write position once `spans` reached capacity.
+    head: usize,
+}
+
+impl Ring {
+    fn push(&mut self, record: SpanRecord) {
+        if self.spans.len() < RING_CAPACITY {
+            self.spans.push(record);
+        } else {
+            self.spans[self.head] = record;
+            self.head = (self.head + 1) % RING_CAPACITY;
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn drain(&mut self) -> Vec<SpanRecord> {
+        self.head = 0;
+        std::mem::take(&mut self.spans)
+    }
+}
+
+/// Global list of every thread's ring, so [`take_spans`] can collect
+/// across threads. Rings are registered once per thread and never
+/// removed (a handful of words per thread after it exits).
+fn rings() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+struct ThreadCtx {
+    ring: Arc<Mutex<Ring>>,
+    /// Innermost open span on this thread (0 = none).
+    current: Cell<u64>,
+    tag: u64,
+}
+
+impl ThreadCtx {
+    fn register() -> Self {
+        let ring = Arc::new(Mutex::new(Ring { spans: Vec::new(), head: 0 }));
+        lock(rings()).push(Arc::clone(&ring));
+        ThreadCtx {
+            ring,
+            current: Cell::new(0),
+            tag: NEXT_THREAD_TAG.fetch_add(1, Ordering::Relaxed) + 1,
+        }
+    }
+}
+
+thread_local! {
+    static CTX: ThreadCtx = ThreadCtx::register();
+}
+
+/// An open span. Only the enabled path ever constructs this.
+struct ActiveSpan {
+    start: Instant,
+    id: u64,
+    parent: u64,
+    name: &'static str,
+    phase: Option<Phase>,
+    arg: u64,
+}
+
+impl ActiveSpan {
+    fn open(name: &'static str, phase: Option<Phase>, arg: u64) -> Self {
+        let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed) + 1;
+        let parent = CTX.with(|c| {
+            let parent = c.current.get();
+            c.current.set(id);
+            parent
+        });
+        ActiveSpan { start: Instant::now(), id, parent, name, phase, arg }
+    }
+
+    fn close(self) {
+        let dur_ns = self.start.elapsed().as_nanos() as u64;
+        let start_ns = self.start.saturating_duration_since(epoch()).as_nanos() as u64;
+        CTX.with(|c| {
+            c.current.set(self.parent);
+            lock(&c.ring).push(SpanRecord {
+                id: self.id,
+                parent: self.parent,
+                thread: c.tag,
+                name: self.name,
+                phase: self.phase,
+                arg: self.arg,
+                start_ns,
+                dur_ns,
+            });
+        });
+    }
+}
+
+/// RAII span guard — see the module docs for the cost contract.
+pub struct Span(Option<ActiveSpan>);
+
+impl Span {
+    /// Open a span; records on drop. When tracing is disabled this is
+    /// one relaxed load + branch and the guard is inert.
+    #[inline]
+    pub fn enter(name: &'static str, phase: Option<Phase>) -> Span {
+        Self::enter_with_arg(name, phase, 0)
+    }
+
+    /// [`Span::enter`] with a free integer argument (block start,
+    /// sweep cell index, …) carried into the record.
+    #[inline]
+    pub fn enter_with_arg(name: &'static str, phase: Option<Phase>, arg: u64) -> Span {
+        if !ENABLED.load(Ordering::Relaxed) {
+            return Span(None);
+        }
+        Span(Some(ActiveSpan::open(name, phase, arg)))
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(active) = self.0.take() {
+            active.close();
+        }
+    }
+}
+
+/// Drain every thread's ring: all spans recorded since the last drain,
+/// across all threads, sorted by (start, id). Also resets the dropped
+/// counter; read it with [`dropped`] *before* draining if you need it.
+pub fn take_spans() -> Vec<SpanRecord> {
+    let rings: Vec<Arc<Mutex<Ring>>> = lock(rings()).clone();
+    let mut spans = Vec::new();
+    for ring in rings {
+        spans.append(&mut lock(&ring).drain());
+    }
+    spans.sort_by_key(|s| (s.start_ns, s.id));
+    DROPPED.store(0, Ordering::Relaxed);
+    spans
+}
+
+/// Spans overwritten by ring overflow since the last [`take_spans`].
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Render spans as JSON lines (one [`SpanRecord::to_json`] per line).
+pub fn to_jsonl(spans: &[SpanRecord]) -> String {
+    let mut out = String::new();
+    for s in spans {
+        out.push_str(&s.to_json().to_string_compact());
+        out.push('\n');
+    }
+    out
+}
+
+/// CLI-entry hook: when `CA_PROX_TRACE=<path>` is set, enable tracing
+/// and return the path to flush to at exit (see `main.rs`).
+pub fn trace_path_from_env() -> Option<PathBuf> {
+    let path = std::env::var_os("CA_PROX_TRACE")?;
+    if path.is_empty() {
+        return None;
+    }
+    set_enabled(true);
+    Some(PathBuf::from(path))
+}
+
+/// Drain all pending spans and write them to `path` as JSON lines.
+/// Returns the number of spans written.
+pub fn flush_to_path(path: &std::path::Path) -> std::io::Result<usize> {
+    let spans = take_spans();
+    std::fs::write(path, to_jsonl(&spans))?;
+    Ok(spans.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The enable flag and the rings are process-global, so every test
+    // touching them runs under this lock to stay independent of test
+    // threading (`cargo test` runs tests concurrently).
+    fn serial() -> MutexGuard<'static, ()> {
+        static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+        lock(GATE.get_or_init(|| Mutex::new(())))
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _gate = serial();
+        set_enabled(false);
+        let _ = take_spans();
+        {
+            let _s = Span::enter("solve", None);
+            let _t = Span::enter("block", Some(Phase::Update));
+        }
+        assert!(take_spans().is_empty());
+    }
+
+    #[test]
+    fn spans_nest_and_carry_phase_names() {
+        let _gate = serial();
+        set_enabled(true);
+        let _ = take_spans();
+        {
+            let _root = Span::enter("solve", None);
+            {
+                let _block = Span::enter_with_arg("block", None, 7);
+                let _gram = Span::enter("gram", Some(Phase::GramLocal));
+            }
+            let _update = Span::enter("step", Some(Phase::Update));
+        }
+        set_enabled(false);
+        let spans = take_spans();
+        assert_eq!(spans.len(), 4);
+        let by_name = |n: &str| spans.iter().find(|s| s.name == n).unwrap();
+        let root = by_name("solve");
+        let block = by_name("block");
+        let gram = by_name("gram");
+        let update = by_name("step");
+        assert_eq!(root.parent, 0);
+        assert_eq!(block.parent, root.id);
+        assert_eq!(gram.parent, block.id);
+        assert_eq!(update.parent, root.id, "sibling after the block closed");
+        assert_eq!(block.arg, 7);
+        // Phase labels join against CostTrace phase names exactly.
+        assert_eq!(gram.phase, Some(Phase::GramLocal));
+        let j = gram.to_json();
+        assert_eq!(j.get("phase").and_then(Json::as_str), Some("gram_local"));
+        assert_eq!(j.get("schema").and_then(Json::as_usize), Some(TRACE_SCHEMA));
+        // Parent close time covers the child.
+        assert!(gram.start_ns >= block.start_ns);
+        assert!(block.dur_ns >= gram.dur_ns);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        let _gate = serial();
+        set_enabled(true);
+        let _ = take_spans();
+        {
+            let _a = Span::enter("solve", None);
+            let _b = Span::enter("gram", Some(Phase::GramLocal));
+        }
+        set_enabled(false);
+        let spans = take_spans();
+        let text = to_jsonl(&spans);
+        assert_eq!(text.lines().count(), spans.len());
+        for line in text.lines() {
+            let v = crate::util::json::parse(line).unwrap();
+            assert!(v.get("span").and_then(Json::as_str).is_some());
+            assert!(v.get("dur_us").and_then(Json::as_f64).is_some());
+        }
+    }
+
+    #[test]
+    fn ring_overflow_overwrites_oldest_and_counts_drops() {
+        let _gate = serial();
+        set_enabled(true);
+        let _ = take_spans();
+        for _ in 0..(RING_CAPACITY + 10) {
+            let _s = Span::enter("solve", None);
+        }
+        assert_eq!(dropped(), 10);
+        set_enabled(false);
+        let spans = take_spans();
+        assert_eq!(spans.len(), RING_CAPACITY);
+        assert_eq!(dropped(), 0, "drain resets the counter");
+    }
+
+    #[test]
+    fn flush_to_path_writes_jsonl() {
+        let _gate = serial();
+        set_enabled(true);
+        let _ = take_spans();
+        {
+            let _s = Span::enter("solve", None);
+        }
+        set_enabled(false);
+        let path = std::env::temp_dir()
+            .join(format!("ca_prox_trace_test_{}.jsonl", std::process::id()));
+        let n = flush_to_path(&path).unwrap();
+        assert_eq!(n, 1);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::json::parse(text.trim()).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+}

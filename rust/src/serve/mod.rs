@@ -46,7 +46,11 @@
 //!   second server warm-starts from solutions the first one computed.
 //! * [`proto`] + [`client`] — the schema-versioned JSON-lines protocol
 //!   behind `ca-prox serve` / `ca-prox submit`, and the in-process
-//!   client the tests and benches drive.
+//!   client the tests and benches drive. A `metrics` op returns the
+//!   Prometheus text exposition of [`server::Server::metrics_text`]
+//!   (per-tenant wait/service histograms, shed/deadline counters,
+//!   cache and fleet-lease gauges), and `ca-prox serve --metrics-file`
+//!   dumps the same text periodically for file-based scrapes.
 //!
 //! `rust/tests/serve.rs` pins the contract: concurrent submits are
 //! bit-identical to fresh standalone sessions, a warm boot against the
@@ -72,10 +76,14 @@ pub mod store;
 pub use client::ServeClient;
 pub use fingerprint::Fingerprint;
 pub use fleet::{validate_pool_tag, validate_tenant, Lease, WriterId, LEASE_SCHEMA};
-pub use proto::{parse_request, serve_loop, Request, SubmitCmd, PROTO_SCHEMA};
+pub use proto::{
+    parse_request, parse_stats_line, serve_loop, DatasetSnapshot, LatencySnapshot, QueueSnapshot,
+    Request, StatsSnapshot, SubmitCmd, TenantSnapshot, PROTO_SCHEMA,
+};
 pub use server::{
-    DatasetRef, DatasetStats, JobEvent, JobEventKind, JobId, JobTicket, LatencyStats, QueueStats,
-    Server, ServerConfig, ServerStats, SolveRequest, TenantPolicy, TenantStats, DEFAULT_TENANT,
-    DEFAULT_TENANT_MAX_INFLIGHT, DEFAULT_TENANT_MAX_QUEUED, DEFAULT_WARM_POOL_MAX,
+    DatasetRef, DatasetStats, JobEvent, JobEventKind, JobId, JobTicket, LatencyStats,
+    MetricsHandle, QueueStats, Server, ServerConfig, ServerStats, SolveRequest, TenantPolicy,
+    TenantStats, DEFAULT_TENANT, DEFAULT_TENANT_MAX_INFLIGHT, DEFAULT_TENANT_MAX_QUEUED,
+    DEFAULT_WARM_POOL_MAX, LATENCY_BUCKETS,
 };
 pub use store::{HydrateReport, PlanStore, WarmLoad, STORE_SCHEMA, WARM_SCHEMA};

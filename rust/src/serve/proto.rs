@@ -18,16 +18,24 @@
 //! ← {"schema":2,"event":"drained","jobs":1}
 //! → {"schema":2,"op":"stats"}
 //! ← {"schema":2,"event":"stats","datasets":[…],"queue":{"depth":0,…,"tenants":[…]}}
+//! → {"schema":2,"op":"metrics"}
+//! ← {"schema":2,"event":"metrics","text":"# HELP ca_prox_serve_queue_depth …"}
 //! → {"schema":2,"op":"shutdown"}
 //! ← {"schema":2,"event":"bye"}
 //! ```
 //!
-//! Schema v2 (this PR) adds multi-tenant QoS to v1: `tenant`,
+//! Schema v2 adds multi-tenant QoS to v1: `tenant`,
 //! `priority` and `deadline_ms` on submit, a `deadline_exceeded` job
 //! event, a structured `error` response (`code` +
 //! optional `retry_after_ms` — a shed submit answers
 //! `{"event":"error","code":"over_quota","retry_after_ms":…}` instead
-//! of blocking), and nested queue/tenant statistics.
+//! of blocking), and nested queue/tenant statistics. Still within v2
+//! (additive, old parsers keep working): every latency block carries
+//! histogram-derived `p50_*_ms`/`p99_*_ms` quantiles alongside the
+//! original `mean_*_ms`/`max_*_ms`, a `metrics` op returns the full
+//! Prometheus text exposition as one string field, and
+//! [`parse_stats_line`] parses a `stats` line back into named structs
+//! ([`StatsSnapshot`]).
 //!
 //! Submit is asynchronous (the response is `queued`; jobs run on the
 //! worker pool immediately) and `drain` blocks until every job
@@ -70,6 +78,8 @@ pub enum Request {
     Drain,
     /// Dataset + queue/tenant statistics → `stats`.
     Stats,
+    /// Prometheus text exposition of the server's metrics → `metrics`.
+    Metrics,
     /// Stop the serve loop → `bye`.
     Shutdown,
 }
@@ -131,6 +141,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
         Some("ping") => Ok(Request::Ping),
         Some("drain") => Ok(Request::Drain),
         Some("stats") => Ok(Request::Stats),
+        Some("metrics") => Ok(Request::Metrics),
         Some("shutdown") => Ok(Request::Shutdown),
         Some("submit") => Ok(Request::Submit(Box::new(parse_submit(&root)?))),
         Some(other) => Err(CaError::Config(format!("unknown op '{other}'"))),
@@ -368,9 +379,14 @@ pub fn drained_line(jobs: usize) -> String {
     response("drained", vec![("jobs", Json::Num(jobs as f64))])
 }
 
+/// Latency keys of one series: the legacy `mean_*`/`max_*` pair plus
+/// the histogram-derived `p50_*`/`p99_*` quantiles (additive — old
+/// parsers keep working, new parsers see the tail).
 fn latency_pairs(prefix: &str, l: &LatencyStats) -> Vec<(String, Json)> {
     vec![
         (format!("mean_{prefix}_ms"), Json::Num(l.mean_ms())),
+        (format!("p50_{prefix}_ms"), Json::Num(l.p50_ms())),
+        (format!("p99_{prefix}_ms"), Json::Num(l.p99_ms())),
         (format!("max_{prefix}_ms"), Json::Num(l.max_ms)),
     ]
 }
@@ -444,6 +460,227 @@ pub fn stats_line(stats: &ServerStats) -> String {
     )
 }
 
+// ---- stats-line parsing (named-struct snapshot) ----
+
+/// Latency keys of one series parsed back from a `stats` line.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySnapshot {
+    /// Mean sample, ms.
+    pub mean_ms: f64,
+    /// Histogram-derived median, ms.
+    pub p50_ms: f64,
+    /// Histogram-derived 99th percentile, ms.
+    pub p99_ms: f64,
+    /// Largest sample, ms.
+    pub max_ms: f64,
+}
+
+/// One tenant block parsed back from a `stats` line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSnapshot {
+    /// Tenant name.
+    pub tenant: String,
+    /// Jobs currently queued.
+    pub depth: usize,
+    /// Jobs currently occupying workers.
+    pub in_flight: usize,
+    /// Jobs admitted since boot.
+    pub submitted: u64,
+    /// Jobs that finished on a worker.
+    pub completed: u64,
+    /// Submits shed by admission control.
+    pub shed: u64,
+    /// Jobs expired at dequeue.
+    pub deadline_expired: u64,
+    /// Queue-wait latency keys.
+    pub wait: LatencySnapshot,
+    /// Service-time latency keys.
+    pub service: LatencySnapshot,
+}
+
+/// The queue block parsed back from a `stats` line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueueSnapshot {
+    /// Jobs currently queued across all tenants.
+    pub depth: usize,
+    /// Jobs currently occupying workers.
+    pub in_flight: usize,
+    /// Jobs admitted since boot.
+    pub submitted: u64,
+    /// Jobs that finished on a worker.
+    pub completed: u64,
+    /// Submits shed by admission control.
+    pub shed: u64,
+    /// Jobs expired at dequeue.
+    pub deadline_expired: u64,
+    /// Queue-wait latency keys.
+    pub wait: LatencySnapshot,
+    /// Service-time latency keys.
+    pub service: LatencySnapshot,
+    /// Per-tenant breakdown, in wire order.
+    pub tenants: Vec<TenantSnapshot>,
+}
+
+/// One dataset block parsed back from a `stats` line (every
+/// `CacheStats` counter plus the warm-pool occupancy).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetSnapshot {
+    /// The dataset's fingerprint id.
+    pub fingerprint: String,
+    /// Lipschitz estimates computed.
+    pub lipschitz_computes: u64,
+    /// Lipschitz requests served from the cache.
+    pub lipschitz_hits: u64,
+    /// Reference solutions computed.
+    pub reference_computes: u64,
+    /// Reference requests served from the cache.
+    pub reference_hits: u64,
+    /// Shard layouts built.
+    pub shard_builds: u64,
+    /// Shard-layout requests served from the cache.
+    pub shard_hits: u64,
+    /// Hits served from store-hydrated entries.
+    pub persisted_hits: u64,
+    /// Cache persists to the plan store.
+    pub store_writes: u64,
+    /// Warm-pool LRU evictions.
+    pub warm_evictions: u64,
+    /// Warm starts served from spilled store files.
+    pub warm_spill_hits: u64,
+    /// In-memory warm-pool entries right now.
+    pub warm_pool_entries: usize,
+}
+
+/// A fully parsed `stats` response line; see [`parse_stats_line`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatsSnapshot {
+    /// Every dataset block, in wire order.
+    pub datasets: Vec<DatasetSnapshot>,
+    /// The queue block.
+    pub queue: QueueSnapshot,
+}
+
+fn field_usize(v: &Json, key: &str, what: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| CaError::Config(format!("stats {what} missing integer '{key}'")))
+}
+
+fn field_f64(v: &Json, key: &str, what: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| CaError::Config(format!("stats {what} missing number '{key}'")))
+}
+
+fn latency_snapshot(v: &Json, prefix: &str, what: &str) -> Result<LatencySnapshot> {
+    Ok(LatencySnapshot {
+        mean_ms: field_f64(v, &format!("mean_{prefix}_ms"), what)?,
+        p50_ms: field_f64(v, &format!("p50_{prefix}_ms"), what)?,
+        p99_ms: field_f64(v, &format!("p99_{prefix}_ms"), what)?,
+        max_ms: field_f64(v, &format!("max_{prefix}_ms"), what)?,
+    })
+}
+
+fn tenant_snapshot(v: &Json) -> Result<TenantSnapshot> {
+    let tenant = v
+        .get("tenant")
+        .and_then(Json::as_str)
+        .ok_or_else(|| CaError::Config("stats tenant block missing 'tenant'".into()))?
+        .to_string();
+    let what = format!("tenant '{tenant}'");
+    Ok(TenantSnapshot {
+        depth: field_usize(v, "depth", &what)?,
+        in_flight: field_usize(v, "in_flight", &what)?,
+        submitted: field_usize(v, "submitted", &what)? as u64,
+        completed: field_usize(v, "completed", &what)? as u64,
+        shed: field_usize(v, "shed", &what)? as u64,
+        deadline_expired: field_usize(v, "deadline_expired", &what)? as u64,
+        wait: latency_snapshot(v, "wait", &what)?,
+        service: latency_snapshot(v, "service", &what)?,
+        tenant,
+    })
+}
+
+fn queue_snapshot(v: &Json) -> Result<QueueSnapshot> {
+    let tenants = v
+        .get("tenants")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| CaError::Config("stats queue missing 'tenants' array".into()))?
+        .iter()
+        .map(tenant_snapshot)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(QueueSnapshot {
+        depth: field_usize(v, "depth", "queue")?,
+        in_flight: field_usize(v, "in_flight", "queue")?,
+        submitted: field_usize(v, "submitted", "queue")? as u64,
+        completed: field_usize(v, "completed", "queue")? as u64,
+        shed: field_usize(v, "shed", "queue")? as u64,
+        deadline_expired: field_usize(v, "deadline_expired", "queue")? as u64,
+        wait: latency_snapshot(v, "wait", "queue")?,
+        service: latency_snapshot(v, "service", "queue")?,
+        tenants,
+    })
+}
+
+fn dataset_snapshot(v: &Json) -> Result<DatasetSnapshot> {
+    let fingerprint = v
+        .get("fingerprint")
+        .and_then(Json::as_str)
+        .ok_or_else(|| CaError::Config("stats dataset block missing 'fingerprint'".into()))?
+        .to_string();
+    let what = format!("dataset '{fingerprint}'");
+    let c = |key: &str| -> Result<u64> { Ok(field_usize(v, key, &what)? as u64) };
+    Ok(DatasetSnapshot {
+        lipschitz_computes: c("lipschitz_computes")?,
+        lipschitz_hits: c("lipschitz_hits")?,
+        reference_computes: c("reference_computes")?,
+        reference_hits: c("reference_hits")?,
+        shard_builds: c("shard_builds")?,
+        shard_hits: c("shard_hits")?,
+        persisted_hits: c("persisted_hits")?,
+        store_writes: c("store_writes")?,
+        warm_evictions: c("warm_evictions")?,
+        warm_spill_hits: c("warm_spill_hits")?,
+        warm_pool_entries: field_usize(v, "warm_pool_entries", &what)?,
+        fingerprint,
+    })
+}
+
+/// Parse a `stats` response line back into named structs — the typed
+/// counterpart of [`stats_line`], so clients (and tests) consume the
+/// wire stats without stringly-typed field lookups. Rejects lines with
+/// a wrong schema, a non-`stats` event, or missing fields.
+pub fn parse_stats_line(line: &str) -> Result<StatsSnapshot> {
+    let root = parse(line)?;
+    if root.get("schema").and_then(Json::as_usize) != Some(PROTO_SCHEMA) {
+        return Err(CaError::Config(format!(
+            "stats line has a wrong or missing schema (expected {PROTO_SCHEMA})"
+        )));
+    }
+    if root.get("event").and_then(Json::as_str) != Some("stats") {
+        return Err(CaError::Config("not a stats line (event != 'stats')".into()));
+    }
+    let datasets = root
+        .get("datasets")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| CaError::Config("stats line missing 'datasets' array".into()))?
+        .iter()
+        .map(dataset_snapshot)
+        .collect::<Result<Vec<_>>>()?;
+    let queue = queue_snapshot(
+        root.get("queue").ok_or_else(|| CaError::Config("stats line missing 'queue'".into()))?,
+    )?;
+    Ok(StatsSnapshot { datasets, queue })
+}
+
+/// `metrics` response: the full Prometheus text exposition
+/// ([`Server::metrics_text`]) carried as one JSON-escaped string field,
+/// so a scraper can split it back into lines
+/// (`.github/scripts/check_metrics.py` does exactly that in CI).
+pub fn metrics_line(text: &str) -> String {
+    response("metrics", vec![("text", Json::Str(text.into()))])
+}
+
 /// Structured error response (the loop keeps serving after one).
 /// `code` is machine-readable (`over_quota`, `deadline_exceeded`,
 /// `bad_request`); `retry_after_ms` is attached when the server sheds
@@ -499,6 +736,9 @@ pub fn serve_loop<R: BufRead, W: Write>(
             Err(e) => writeln!(writer, "{}", error_line_for(&e))?,
             Ok(Request::Ping) => writeln!(writer, "{}", pong_line())?,
             Ok(Request::Stats) => writeln!(writer, "{}", stats_line(&server.stats()))?,
+            Ok(Request::Metrics) => {
+                writeln!(writer, "{}", metrics_line(&server.metrics_text()))?
+            }
             Ok(Request::Shutdown) => {
                 writeln!(writer, "{}", bye_line())?;
                 writer.flush()?;
@@ -770,5 +1010,74 @@ mod tests {
         );
         let done = events.iter().filter(|e| e.get("event").unwrap().as_str() == Some("done"));
         assert_eq!(done.count(), 2, "both admitted jobs completed: {text}");
+    }
+
+    #[test]
+    fn metrics_op_and_stats_snapshot_round_trip() {
+        let server = ServerConfig::default().with_threads(1).build().unwrap();
+        let input = concat!(
+            r#"{"schema":2,"op":"submit","dataset":{"name":"smoke","scale_n":200},"#,
+            r#""topology":{"p":1},"solve":{"k":2,"b":0.5,"lambda":0.05,"iters":4,"seed":1},"#,
+            r#""tenant":"ci"}"#,
+            "\n",
+            r#"{"schema":2,"op":"drain"}"#,
+            "\n",
+            r#"{"schema":2,"op":"metrics"}"#,
+            "\n",
+            r#"{"schema":2,"op":"stats"}"#,
+            "\n",
+            r#"{"schema":2,"op":"shutdown"}"#,
+            "\n",
+        );
+        let mut out = Vec::new();
+        serve_loop(&server, &mut std::io::Cursor::new(input), &mut out).unwrap();
+        server.shutdown().unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let find = |event: &str| {
+            text.lines()
+                .find(|l| parse(l).unwrap().get("event").and_then(Json::as_str) == Some(event))
+                .map(str::to_string)
+                .unwrap_or_else(|| panic!("no {event} line in:\n{text}"))
+        };
+        // The metrics line carries a parseable exposition with the
+        // per-tenant families check_metrics.py requires, and its
+        // completed counter matches the stats snapshot.
+        let metrics = parse(&find("metrics")).unwrap();
+        let exposition = metrics.get("text").and_then(Json::as_str).unwrap().to_string();
+        for family in [
+            "ca_prox_serve_jobs_submitted_total",
+            "ca_prox_serve_jobs_completed_total",
+            "ca_prox_serve_queue_wait_ms_bucket",
+            "ca_prox_serve_service_ms_count",
+            "ca_prox_serve_queue_depth",
+            "ca_prox_cache_ops_total",
+        ] {
+            assert!(exposition.contains(family), "missing {family} in:\n{exposition}");
+        }
+        // The stats line parses into named structs with sane quantiles.
+        let snap = parse_stats_line(&find("stats")).unwrap();
+        assert_eq!(snap.queue.completed, 1);
+        assert_eq!(snap.queue.shed, 0);
+        assert_eq!(snap.datasets.len(), 1);
+        assert_eq!(snap.datasets[0].lipschitz_computes, 1);
+        let t = snap.queue.tenants.iter().find(|t| t.tenant == "ci").unwrap();
+        assert_eq!(t.completed, 1);
+        for l in [&t.wait, &t.service, &snap.queue.wait, &snap.queue.service] {
+            assert!(
+                l.p50_ms <= l.p99_ms && l.p99_ms <= l.max_ms,
+                "quantile ordering violated: {l:?}"
+            );
+            assert!(l.mean_ms >= 0.0 && l.mean_ms.is_finite());
+        }
+        assert!(
+            exposition.contains(&format!(
+                "ca_prox_serve_jobs_completed_total{{tenant=\"ci\"}} {}",
+                t.completed
+            )),
+            "metrics and stats must agree:\n{exposition}"
+        );
+        // Non-stats lines are rejected by the typed parser.
+        assert!(parse_stats_line(&find("metrics")).is_err());
+        assert!(parse_stats_line("{}").is_err());
     }
 }

@@ -60,6 +60,8 @@ use crate::cluster::engine::resolve_threads;
 use crate::datasets::{registry, Dataset};
 use crate::error::{CaError, Result};
 use crate::grid::{CacheStats, PlanCache};
+use crate::obs::registry::{Registry, LATENCY_MS_BOUNDS};
+use crate::obs::Span;
 use crate::runtime::backend::NativeGramBackend;
 use crate::serve::fingerprint::Fingerprint;
 use crate::serve::fleet::{validate_pool_tag, validate_tenant, WriterId};
@@ -630,8 +632,18 @@ impl TenantPolicy {
     }
 }
 
-/// Count / total / max of a latency series, in milliseconds (mean is
-/// derived). Cheap enough to keep per tenant *and* globally.
+/// Histogram slots of a [`LatencyStats`]: the shared log-spaced ladder
+/// ([`LATENCY_MS_BOUNDS`]) plus one overflow bucket.
+pub const LATENCY_BUCKETS: usize = LATENCY_MS_BOUNDS.len() + 1;
+
+/// A latency series in milliseconds: count / total / max plus
+/// log-bucketed counts, so tail quantiles (p50/p99) are derivable —
+/// mean+max alone hides exactly the tail behavior QoS scheduling
+/// exists to control. Cheap enough to keep per tenant *and* globally.
+///
+/// Buckets use [`LATENCY_MS_BOUNDS`], the same ladder the `metrics`
+/// exposition histograms use, so stats-line quantiles and scraped
+/// bucket quantiles agree exactly.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct LatencyStats {
     /// Samples recorded.
@@ -640,6 +652,9 @@ pub struct LatencyStats {
     pub total_ms: f64,
     /// Largest sample, ms.
     pub max_ms: f64,
+    /// Non-cumulative counts per bucket of [`LATENCY_MS_BOUNDS`]; the
+    /// last slot is the overflow bucket.
+    pub buckets: [u64; LATENCY_BUCKETS],
 }
 
 impl LatencyStats {
@@ -649,6 +664,7 @@ impl LatencyStats {
         if ms > self.max_ms {
             self.max_ms = ms;
         }
+        self.buckets[LATENCY_MS_BOUNDS.partition_point(|&b| b < ms)] += 1;
     }
 
     /// Mean sample, ms (0 when empty).
@@ -658,6 +674,40 @@ impl LatencyStats {
         } else {
             self.total_ms / self.count as f64
         }
+    }
+
+    /// Bucket-derived quantile, `q` in [0, 1]: the upper bound of the
+    /// bucket containing the `ceil(q·count)`-th sample, clamped to the
+    /// observed max — so `p50 ≤ p99 ≤ max` always holds and a single
+    /// 3 ms sample reports 3 ms, not its 4 ms bucket bound. 0 when
+    /// empty.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return if i < LATENCY_MS_BOUNDS.len() {
+                    LATENCY_MS_BOUNDS[i].min(self.max_ms)
+                } else {
+                    self.max_ms
+                };
+            }
+        }
+        self.max_ms
+    }
+
+    /// Median sample, ms.
+    pub fn p50_ms(&self) -> f64 {
+        self.quantile_ms(0.5)
+    }
+
+    /// 99th-percentile sample, ms.
+    pub fn p99_ms(&self) -> f64 {
+        self.quantile_ms(0.99)
     }
 }
 
@@ -1231,21 +1281,29 @@ impl Server {
     /// Full server statistics: every registered dataset (in id order)
     /// plus the scheduler's global and per-tenant queue state.
     pub fn stats(&self) -> ServerStats {
-        let datasets = lock(&self.inner.datasets)
-            .iter()
-            .map(|(k, e)| DatasetStats {
-                id: k.clone(),
-                cache: e.cache.stats(),
-                warm_pool_entries: e.warm_entries(),
-            })
-            .collect();
-        let queue = lock(&self.inner.sched).queue_stats();
-        ServerStats { datasets, queue }
+        stats_inner(&self.inner)
     }
 
     /// The scheduler's queue statistics alone (no dataset walk).
     pub fn queue_stats(&self) -> QueueStats {
         lock(&self.inner.sched).queue_stats()
+    }
+
+    /// Prometheus text exposition (v0.0.4) of the server's metrics:
+    /// per-tenant job counters and wait/service histograms, queue
+    /// gauges, per-dataset cache/warm-pool counters, and — when a plan
+    /// store is configured — fleet lease generations. Rendered from the
+    /// same snapshot [`Server::stats`] reports, so the `metrics` and
+    /// `stats` proto commands can never disagree.
+    pub fn metrics_text(&self) -> String {
+        render_metrics(&self.inner)
+    }
+
+    /// A `'static + Send` handle for scraping [`Server::metrics_text`]
+    /// from another thread (the CLI's `--metrics-file` dump loop)
+    /// without borrowing the server.
+    pub fn metrics_watcher(&self) -> MetricsHandle {
+        MetricsHandle { inner: Arc::clone(&self.inner) }
     }
 
     /// In-memory warm-pool occupancy (entries across every tag) of one
@@ -1310,6 +1368,120 @@ impl Drop for Server {
     fn drop(&mut self) {
         let _ = self.join_workers();
     }
+}
+
+/// A cheap clonable handle onto a server's metrics surface; see
+/// [`Server::metrics_watcher`]. Holding one does not keep workers
+/// alive — it only reads accounting state.
+#[derive(Clone)]
+pub struct MetricsHandle {
+    inner: Arc<ServerInner>,
+}
+
+impl MetricsHandle {
+    /// Same text as [`Server::metrics_text`].
+    pub fn metrics_text(&self) -> String {
+        render_metrics(&self.inner)
+    }
+}
+
+fn stats_inner(inner: &ServerInner) -> ServerStats {
+    let datasets = lock(&inner.datasets)
+        .iter()
+        .map(|(k, e)| DatasetStats {
+            id: k.clone(),
+            cache: e.cache.stats(),
+            warm_pool_entries: e.warm_entries(),
+        })
+        .collect();
+    let queue = lock(&inner.sched).queue_stats();
+    ServerStats { datasets, queue }
+}
+
+/// Build the exposition [`Registry`] from a stats snapshot and render
+/// it. Snapshot-based on purpose: the scheduler keeps exactly one set
+/// of counters (its own), and the exposition is derived — there is no
+/// second bookkeeping that could drift from the `stats` command.
+fn render_metrics(inner: &ServerInner) -> String {
+    let stats = stats_inner(inner);
+    let reg = Registry::new();
+    reg.gauge("ca_prox_serve_queue_depth", "Jobs currently queued across all tenants.", &[])
+        .set(stats.queue.depth as f64);
+    reg.gauge("ca_prox_serve_jobs_in_flight", "Jobs currently occupying workers.", &[])
+        .set(stats.queue.in_flight as f64);
+    for t in &stats.queue.tenants {
+        let labels = [("tenant", t.tenant.as_str())];
+        for (name, help, value) in [
+            ("ca_prox_serve_jobs_submitted_total", "Jobs admitted since boot.", t.submitted),
+            ("ca_prox_serve_jobs_completed_total", "Jobs finished on a worker.", t.completed),
+            ("ca_prox_serve_jobs_shed_total", "Submits shed by admission control.", t.shed),
+            (
+                "ca_prox_serve_jobs_deadline_expired_total",
+                "Jobs expired at dequeue.",
+                t.deadline_expired,
+            ),
+        ] {
+            reg.counter(name, help, &labels).add(value);
+        }
+        reg.gauge("ca_prox_serve_tenant_queue_depth", "Jobs currently queued.", &labels)
+            .set(t.depth as f64);
+        reg.gauge("ca_prox_serve_tenant_in_flight", "Jobs currently on workers.", &labels)
+            .set(t.in_flight as f64);
+        for (name, help, l) in [
+            (
+                "ca_prox_serve_queue_wait_ms",
+                "Queue wait of dequeued jobs, ms.",
+                &t.wait,
+            ),
+            (
+                "ca_prox_serve_service_ms",
+                "Worker service time of completed jobs, ms.",
+                &t.service,
+            ),
+        ] {
+            reg.histogram(name, help, &labels, &LATENCY_MS_BOUNDS)
+                .merge_counts(&l.buckets, l.total_ms, l.count, l.max_ms);
+        }
+    }
+    for d in &stats.datasets {
+        let labels = [("dataset", d.id.as_str())];
+        let c = &d.cache;
+        for (op, value) in [
+            ("lipschitz_compute", c.lipschitz_computes),
+            ("lipschitz_hit", c.lipschitz_hits),
+            ("reference_compute", c.reference_computes),
+            ("reference_hit", c.reference_hits),
+            ("shard_build", c.shard_builds),
+            ("shard_hit", c.shard_hits),
+            ("persisted_hit", c.persisted_hits),
+            ("store_write", c.store_writes),
+            ("warm_eviction", c.warm_evictions),
+            ("warm_spill_hit", c.warm_spill_hits),
+        ] {
+            let labels = [("dataset", d.id.as_str()), ("op", op)];
+            reg.counter("ca_prox_cache_ops_total", "Plan-cache and store operations.", &labels)
+                .add(value);
+        }
+        reg.gauge("ca_prox_warm_pool_entries", "In-memory warm-pool entries.", &labels)
+            .set(d.warm_pool_entries as f64);
+    }
+    if let Some(store) = &inner.store {
+        let fps: Vec<(String, Fingerprint)> =
+            lock(&inner.datasets).iter().map(|(k, e)| (k.clone(), e.fingerprint)).collect();
+        for (id, fp) in fps {
+            let leases = crate::serve::fleet::scan_leases(&store.dir_for(&fp));
+            let labels = [("dataset", id.as_str())];
+            reg.gauge(
+                "ca_prox_store_lease_generation",
+                "Highest plan generation any fleet writer has leased.",
+                &labels,
+            )
+            .set(crate::serve::fleet::max_generation(&leases) as f64);
+            reg.gauge("ca_prox_store_lease_writers", "Fleet writers holding a lease.", &labels)
+                .set(leases.len() as f64);
+        }
+    }
+    reg.render()
 }
 
 /// Dequeue the next runnable (or expired) job, or `None` once nothing
@@ -1418,6 +1590,7 @@ fn worker_loop(inner: &ServerInner) {
 }
 
 fn run_job(job: &Job, inner: &ServerInner) -> Result<SolverOutput> {
+    let _span = Span::enter_with_arg("serve/job", None, job.id);
     let mut session = Session::build_with_cache(
         &job.entry.ds,
         job.topology,
@@ -1732,5 +1905,110 @@ mod tests {
         assert_eq!(d.cache.warm_evictions, 1);
         assert_eq!(d.cache.warm_spill_hits, 0, "no store, nothing to fall through to");
         server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn latency_stats_quantiles_from_buckets() {
+        let mut l = LatencyStats::default();
+        assert_eq!(l.p50_ms(), 0.0);
+        assert_eq!(l.p99_ms(), 0.0);
+        // One sample: the max-clamp makes every quantile exact even
+        // though 3 ms lands in the le=4 bucket.
+        l.note(3.0);
+        assert_eq!(l.p50_ms(), 3.0);
+        assert_eq!(l.p99_ms(), 3.0);
+        for ms in [0.4, 0.6, 1.5, 9.0, 40.0, 900.0] {
+            l.note(ms);
+        }
+        assert_eq!(l.count, 7);
+        assert_eq!(l.buckets.iter().sum::<u64>(), 7);
+        let (p50, p99) = (l.p50_ms(), l.p99_ms());
+        assert!(p50 <= p99 && p99 <= l.max_ms, "p50 {p50} ≤ p99 {p99} ≤ max {}", l.max_ms);
+        assert!(p50 >= 1.5 && p50 <= 4.0, "median sample 3.0 → its bucket bound, got {p50}");
+        assert_eq!(p99, 900.0, "tail quantile lands in the max bucket, clamped to max");
+        assert!((l.mean_ms() - 954.5 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metrics_text_reconciles_with_stats() {
+        // Blocker pins the single worker from its own tenant, so tenant
+        // "acme" (quota 1) sheds its second queued submit
+        // deterministically — same shape as the over-quota test above.
+        let server = ServerConfig::default()
+            .with_threads(1)
+            .with_tenant("acme", TenantPolicy::default().with_max_queued(1))
+            .build()
+            .unwrap();
+        let id = server.register_dataset(ds()).unwrap();
+        let blocker = server
+            .submit(SolveRequest::new(&id, Topology::new(1), blocker_spec()).with_tenant("boot"))
+            .unwrap();
+        let queued = server
+            .submit(SolveRequest::new(&id, Topology::new(1), spec(0.05)).with_tenant("acme"))
+            .unwrap();
+        let shed = server
+            .submit(SolveRequest::new(&id, Topology::new(1), spec(0.05)).with_tenant("acme"))
+            .unwrap_err();
+        assert!(matches!(shed, CaError::Reject { .. }));
+        blocker.wait().unwrap();
+        queued.wait().unwrap();
+        let stats = server.stats();
+        let text = server.metrics_text();
+        let t = stats.queue.tenants.iter().find(|t| t.tenant == "acme").unwrap();
+        // Counters in the exposition equal the stats snapshot.
+        for (family, value) in [
+            ("ca_prox_serve_jobs_submitted_total", t.submitted),
+            ("ca_prox_serve_jobs_completed_total", t.completed),
+            ("ca_prox_serve_jobs_shed_total", t.shed),
+        ] {
+            let line = format!("{family}{{tenant=\"acme\"}} {value}");
+            assert!(text.contains(&line), "missing/mismatched line {line:?} in:\n{text}");
+        }
+        assert_eq!(t.shed, 1);
+        // Histogram count equals the stats count, and the +Inf bucket
+        // equals _count (cumulative rendering).
+        let inf = format!(
+            "ca_prox_serve_service_ms_bucket{{tenant=\"acme\",le=\"+Inf\"}} {}",
+            t.service.count
+        );
+        let count =
+            format!("ca_prox_serve_service_ms_count{{tenant=\"acme\"}} {}", t.service.count);
+        assert!(text.contains(&inf), "{text}");
+        assert!(text.contains(&count), "{text}");
+        // Dataset cache ops and warm-pool gauge are present per dataset.
+        assert!(text.contains("ca_prox_cache_ops_total{dataset=\""));
+        assert!(text.contains("op=\"lipschitz_compute\"} 1"));
+        assert!(text.contains("ca_prox_warm_pool_entries{dataset=\""));
+        // The watcher handle renders the same families from another thread.
+        let watcher = server.metrics_watcher();
+        let handle = std::thread::spawn(move || watcher.metrics_text());
+        let from_thread = handle.join().unwrap();
+        assert!(from_thread.contains("ca_prox_serve_jobs_submitted_total{tenant=\"acme\"}"));
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn metrics_text_includes_lease_generation_with_store() {
+        let dir = std::env::temp_dir()
+            .join(format!("ca_prox_metrics_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let server =
+            ServerConfig::default().with_threads(1).with_store(dir.clone()).build().unwrap();
+        let id = server.register_dataset(ds()).unwrap();
+        let ticket = server.submit(SolveRequest::new(&id, Topology::new(1), spec(0.05))).unwrap();
+        ticket.wait().unwrap();
+        server.persist_all().unwrap();
+        let text = server.metrics_text();
+        assert!(text.contains("ca_prox_store_lease_generation{dataset=\""), "{text}");
+        assert!(text.contains("ca_prox_store_lease_writers{dataset=\""), "{text}");
+        // At least one writer has published a generation ≥ 1.
+        let gen_line = text
+            .lines()
+            .find(|l| l.starts_with("ca_prox_store_lease_generation"))
+            .unwrap();
+        let value: f64 = gen_line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!(value >= 1.0, "{gen_line}");
+        server.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

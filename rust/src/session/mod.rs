@@ -35,6 +35,12 @@
 //!   serve engine forwards exactly these callbacks to its subscribers
 //!   as [`crate::serve::JobEvent`]s — one streaming contract from a
 //!   single solve up to a resident service.
+//! * **Tracing**: the hot path carries [`crate::obs::Span`] guards
+//!   (solve → per-round block → gram/collective/step phases, each
+//!   tagged with its [`CostTrace`] phase name). Disabled they cost one
+//!   relaxed atomic load; [`Session::solve_traced`] (or
+//!   `CA_PROX_TRACE=<path>`) turns them on, and `rust/tests/obs.rs`
+//!   pins that doing so never changes a solve's output bits.
 //!
 //! The legacy free functions survive as thin shims over a fresh
 //! single-use session, so their outputs are bit-identical
@@ -56,6 +62,7 @@ use crate::coordinator::state::IterState;
 use crate::datasets::Dataset;
 use crate::error::{CaError, Result};
 use crate::grid::{CacheStats, PlanCache};
+use crate::obs::{Span, SpanRecord};
 use crate::prox::objective::{relative_solution_error, LassoObjective};
 use crate::runtime::backend::{GramBackend, NativeGramBackend};
 use crate::sampling::SampleSchedule;
@@ -182,6 +189,26 @@ impl<'a> Session<'a> {
         self.solve_observed(spec, &mut NoopObserver)
     }
 
+    /// [`Session::solve`] with hierarchical tracing force-enabled for
+    /// the duration of the call. Returns the output plus the spans the
+    /// solve recorded (session/solve → session/block → gram/allreduce/
+    /// step children), sorted by start time. Drains the **global** span
+    /// rings — first on entry (so earlier work is excluded) and again on
+    /// exit — so concurrent traced solves will see each other's spans;
+    /// trace one solve at a time for a clean tree. The prior
+    /// enabled/disabled state is restored on the way out, and
+    /// `rust/tests/obs.rs` pins that tracing never changes the solve's
+    /// output bits.
+    pub fn solve_traced(&mut self, spec: &SolveSpec) -> Result<(SolverOutput, Vec<SpanRecord>)> {
+        let was_enabled = crate::obs::enabled();
+        crate::obs::set_enabled(true);
+        let _ = crate::obs::take_spans();
+        let result = self.solve_observed(spec, &mut NoopObserver);
+        let spans = crate::obs::take_spans();
+        crate::obs::set_enabled(was_enabled);
+        Ok((result?, spans))
+    }
+
     /// [`Session::solve`] with a streaming [`Observer`]: `on_record`
     /// fires at the `record_every` cadence with each history point,
     /// `on_block` after every k-step communication round, `on_done` with
@@ -194,6 +221,10 @@ impl<'a> Session<'a> {
         observer: &mut dyn Observer,
     ) -> Result<SolverOutput> {
         spec.validate()?;
+        // Root span for the whole solve; children (per-round blocks,
+        // gram/collective/step phases) hang off it. One relaxed load
+        // when tracing is disabled.
+        let _solve_span = Span::enter_with_arg("session/solve", None, self.solves as u64);
         let wall_start = std::time::Instant::now();
         let d = self.ds.d();
         let mut trace = CostTrace::new();
@@ -246,6 +277,7 @@ impl<'a> Session<'a> {
         let mut resid = vec![0.0; self.ds.x.cols()];
 
         while t0 < cap {
+            let _block_span = Span::enter_with_arg("session/block", None, t0 as u64);
             let k_eff = spec.k.min(cap - t0);
             let stack = compute_gram_stack(
                 &self.sharded,
@@ -262,6 +294,12 @@ impl<'a> Session<'a> {
             // collective round that actually executed.
             let mut halt = false;
             for j in 0..k_eff {
+                let step_phase = match spec.algo {
+                    AlgoKind::Sfista => Phase::Update,
+                    AlgoKind::Spnm => Phase::InnerSolve,
+                };
+                let step_span =
+                    Span::enter_with_arg("session/step", Some(step_phase), (t0 + j) as u64);
                 let (flops, phase) = match spec.algo {
                     AlgoKind::Sfista => (
                         state.fista_step(&stack, j, t_step, spec.lambda, spec.gradient_at)?,
@@ -272,6 +310,7 @@ impl<'a> Session<'a> {
                         Phase::InnerSolve,
                     ),
                 };
+                drop(step_span);
                 self.cluster.charge_replicated_flops(flops, phase, &mut trace);
                 if state.w.iter().any(|v| !v.is_finite()) {
                     return Err(CaError::Solver(format!(

@@ -33,17 +33,27 @@ impl log::Log for StderrLogger {
 static LOGGER: StderrLogger = StderrLogger;
 static INIT: Once = Once::new();
 
+/// Map a `CA_PROX_LOG` value to a level filter (`None` = unset →
+/// `info`; unknown values also fall back to `info`).
+pub fn level_from(var: Option<&str>) -> LevelFilter {
+    match var {
+        Some("error") => LevelFilter::Error,
+        Some("warn") => LevelFilter::Warn,
+        Some("debug") => LevelFilter::Debug,
+        Some("trace") => LevelFilter::Trace,
+        Some("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    }
+}
+
 /// Install the stderr logger (idempotent). Returns the active level.
+///
+/// Called unconditionally at CLI entry (`cli::run`) so every
+/// subcommand gets the `log::warn!` fallback messages from kernel and
+/// vecmath pin selection; library users may also call it directly.
 pub fn init() -> LevelFilter {
     INIT.call_once(|| {
-        let level = match std::env::var("CA_PROX_LOG").ok().as_deref() {
-            Some("error") => LevelFilter::Error,
-            Some("warn") => LevelFilter::Warn,
-            Some("debug") => LevelFilter::Debug,
-            Some("trace") => LevelFilter::Trace,
-            Some("off") => LevelFilter::Off,
-            _ => LevelFilter::Info,
-        };
+        let level = level_from(std::env::var("CA_PROX_LOG").ok().as_deref());
         let _ = log::set_logger(&LOGGER);
         log::set_max_level(level);
     });
@@ -60,5 +70,21 @@ mod tests {
         let b = init();
         assert_eq!(a, b);
         log::info!("logging smoke test");
+    }
+
+    #[test]
+    fn level_filtering_matches_env_contract() {
+        assert_eq!(level_from(Some("debug")), LevelFilter::Debug);
+        assert_eq!(level_from(Some("error")), LevelFilter::Error);
+        assert_eq!(level_from(Some("warn")), LevelFilter::Warn);
+        assert_eq!(level_from(Some("trace")), LevelFilter::Trace);
+        assert_eq!(level_from(Some("off")), LevelFilter::Off);
+        assert_eq!(level_from(None), LevelFilter::Info);
+        assert_eq!(level_from(Some("bogus")), LevelFilter::Info);
+        // CA_PROX_LOG=debug admits debug records and rejects trace —
+        // the same comparison `StderrLogger::enabled` performs.
+        assert!(Level::Debug <= LevelFilter::Debug);
+        assert!(Level::Trace > LevelFilter::Debug);
+        assert!(Level::Debug > LevelFilter::Info);
     }
 }

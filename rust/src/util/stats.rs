@@ -8,7 +8,8 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
-/// Unbiased sample standard deviation. Returns 0.0 for n < 2.
+/// Unbiased sample standard deviation. Returns 0.0 (never NaN) for
+/// n < 2 — the `n − 1` divisor would make a single sample 0/0.
 pub fn stddev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;
@@ -17,14 +18,17 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// Percentile with linear interpolation; `q` in [0, 100].
+/// Percentile with linear interpolation; `q` in [0, 100]. Non-finite
+/// samples are ignored (a NaN must never poison — or panic — a report);
+/// returns 0.0 when no finite samples remain. With one sample every
+/// percentile is that sample.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (q / 100.0) * (v.len() - 1) as f64;
+    v.sort_by(f64::total_cmp);
+    let rank = (q / 100.0).clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
@@ -115,6 +119,36 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert!((median(&xs) - 2.5).abs() < 1e-12);
         assert_eq!(median(&[5.0]), 5.0);
+    }
+
+    #[test]
+    fn percentile_single_sample_and_empty() {
+        // n = 1: every percentile is the sample, never NaN.
+        for q in [0.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[3.25], q), 3.25);
+        }
+        assert_eq!(percentile(&[], 90.0), 0.0);
+        // Out-of-range q clamps instead of indexing out of bounds.
+        assert_eq!(percentile(&[1.0, 2.0], 150.0), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0], -5.0), 1.0);
+    }
+
+    #[test]
+    fn percentile_ignores_non_finite() {
+        // A NaN sample used to panic the partial_cmp sort; now it is
+        // dropped and the finite samples report normally.
+        let xs = [1.0, f64::NAN, 3.0, f64::INFINITY];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+        assert!((median(&xs) - 2.0).abs() < 1e-12);
+        assert_eq!(percentile(&[f64::NAN], 50.0), 0.0);
+    }
+
+    #[test]
+    fn stddev_single_sample_is_zero_not_nan() {
+        let s = stddev(&[42.0]);
+        assert_eq!(s, 0.0);
+        assert!(!s.is_nan());
     }
 
     #[test]

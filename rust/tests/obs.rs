@@ -1,0 +1,214 @@
+//! Observability contract: enabling span tracing never changes a
+//! solve's output bits or its analytic flop accounting, the span tree
+//! mirrors the solve structure (solve → block → gram/allreduce/step)
+//! with phase labels that join against [`CostTrace`] phase names, grid
+//! sweeps emit one `grid/cell` span per cell, and the JSON-lines export
+//! round-trips through the repo's own parser.
+//!
+//! The enable flag and the span rings are process-global, so every test
+//! here serializes on one gate mutex (`cargo test` runs tests in the
+//! same binary concurrently) and leaves tracing disabled on exit.
+
+use ca_prox::comm::trace::Phase;
+use ca_prox::datasets::synthetic::{generate, SyntheticSpec};
+use ca_prox::datasets::Dataset;
+use ca_prox::grid::{Grid, SweepSpec};
+use ca_prox::obs;
+use ca_prox::obs::SpanRecord;
+use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::solvers::traits::AlgoKind;
+use ca_prox::util::json::Json;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+fn serial() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn ds() -> Dataset {
+    generate(
+        &SyntheticSpec {
+            d: 10,
+            n: 240,
+            density: 0.8,
+            noise: 0.05,
+            model_sparsity: 0.5,
+            condition: 1.0,
+        },
+        29,
+    )
+}
+
+fn spec() -> SolveSpec {
+    SolveSpec::default()
+        .with_lambda(0.02)
+        .with_sample_fraction(0.5)
+        .with_k(8)
+        .with_max_iters(24)
+        .with_history(4)
+        .with_seed(5)
+}
+
+fn find<'a>(spans: &'a [SpanRecord], name: &str) -> Vec<&'a SpanRecord> {
+    spans.iter().filter(|s| s.name == name).collect()
+}
+
+/// The hard invariant the whole layer is built around: a traced solve
+/// is bit-identical — iterate, objective, history, analytic CostTrace —
+/// to an untraced solve of the same spec on an identically fresh plan.
+#[test]
+fn traced_solve_is_bit_identical_to_untraced() {
+    let _gate = serial();
+    let ds = ds();
+    let spec = spec();
+    // Two fresh sessions with private caches: both solves are each
+    // session's first, so even the one-time Setup charge must agree.
+    let mut plain_session = Session::build(&ds, Topology::new(3)).unwrap();
+    let plain = plain_session.solve(&spec).unwrap();
+    let mut traced_session = Session::build(&ds, Topology::new(3)).unwrap();
+    let (traced, spans) = traced_session.solve_traced(&spec).unwrap();
+    assert!(!obs::enabled(), "solve_traced must restore the disabled state");
+    assert!(!spans.is_empty());
+
+    assert_eq!(traced.w, plain.w, "tracing changed the iterate");
+    assert_eq!(traced.final_objective.to_bits(), plain.final_objective.to_bits());
+    assert_eq!(traced.iterations, plain.iterations);
+    assert_eq!(traced.converged, plain.converged);
+    assert_eq!(traced.history.len(), plain.history.len());
+    for (a, b) in traced.history.iter().zip(&plain.history) {
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+        assert_eq!(a.rel_error.to_bits(), b.rel_error.to_bits());
+        assert_eq!(a.modeled_seconds.to_bits(), b.modeled_seconds.to_bits());
+    }
+    // Analytic accounting is untouched: every phase's counters match
+    // bit-for-bit, not just approximately.
+    assert_eq!(traced.trace.collective_rounds, plain.trace.collective_rounds);
+    for phase in
+        [Phase::Setup, Phase::GramLocal, Phase::Collective, Phase::Update, Phase::InnerSolve]
+    {
+        let (t, p) = (traced.trace.phase(phase), plain.trace.phase(phase));
+        assert_eq!(t.flops.to_bits(), p.flops.to_bits(), "{phase:?} flops");
+        assert_eq!(t.messages.to_bits(), p.messages.to_bits(), "{phase:?} messages");
+        assert_eq!(t.words.to_bits(), p.words.to_bits(), "{phase:?} words");
+        assert_eq!(t.seconds.to_bits(), p.seconds.to_bits(), "{phase:?} seconds");
+    }
+}
+
+/// The span tree mirrors the solve: one root, one block per collective
+/// round, gram + allreduce under each block with the matching CostTrace
+/// phase, one step span per iteration.
+#[test]
+fn span_tree_mirrors_solve_structure() {
+    let _gate = serial();
+    let ds = ds();
+    let spec = spec(); // k=8, cap 24 → 3 blocks
+    let mut session = Session::build(&ds, Topology::new(3)).unwrap();
+    let (out, spans) = session.solve_traced(&spec).unwrap();
+
+    let solves = find(&spans, "session/solve");
+    assert_eq!(solves.len(), 1);
+    let root = solves[0];
+    assert_eq!(root.parent, 0, "solve span is the root");
+
+    let blocks = find(&spans, "session/block");
+    assert_eq!(blocks.len() as u64, out.trace.collective_rounds);
+    let block_args: Vec<u64> = blocks.iter().map(|b| b.arg).collect();
+    assert_eq!(block_args, vec![0, 8, 16], "block arg = t0 of the k-step round");
+    for b in &blocks {
+        assert_eq!(b.parent, root.id);
+    }
+
+    let grams = find(&spans, "kstep/gram");
+    let reduces = find(&spans, "kstep/allreduce");
+    assert_eq!(grams.len(), blocks.len());
+    assert_eq!(reduces.len() as u64, out.trace.collective_rounds);
+    for (g, r) in grams.iter().zip(&reduces) {
+        assert_eq!(g.phase, Some(Phase::GramLocal));
+        assert_eq!(r.phase, Some(Phase::Collective));
+        assert!(blocks.iter().any(|b| b.id == g.parent), "gram nests under a block");
+        assert!(blocks.iter().any(|b| b.id == r.parent), "allreduce nests under a block");
+    }
+
+    let steps = find(&spans, "session/step");
+    assert_eq!(steps.len(), out.iterations, "one step span per applied iteration");
+    for s in &steps {
+        assert_eq!(s.phase, Some(Phase::Update), "SFISTA steps carry the update phase");
+        assert!(blocks.iter().any(|b| b.id == s.parent));
+    }
+    let step_args: Vec<u64> = steps.iter().map(|s| s.arg).collect();
+    assert_eq!(step_args, (0..out.iterations as u64).collect::<Vec<_>>());
+
+    // SPNM steps carry the inner-solve phase instead.
+    let spnm = spec.clone().with_algo(AlgoKind::Spnm).with_q(3);
+    let (_, spans) = session.solve_traced(&spnm).unwrap();
+    let steps = find(&spans, "session/step");
+    assert!(!steps.is_empty());
+    assert!(steps.iter().all(|s| s.phase == Some(Phase::InnerSolve)));
+}
+
+/// Grid sweeps tag each cell with its expansion-order index, and the
+/// per-cell solve trees nest beneath the cell spans.
+#[test]
+fn grid_sweep_emits_one_cell_span_per_cell() {
+    let _gate = serial();
+    let ds = ds();
+    obs::set_enabled(true);
+    let _ = obs::take_spans();
+    let grid = Grid::new(&ds);
+    let sweep = SweepSpec::new(vec![Topology::new(2)], spec())
+        .with_lambdas(vec![0.1, 0.02])
+        .with_ks(vec![4, 8])
+        .with_threads(1);
+    let result = grid.sweep(&sweep).unwrap();
+    obs::set_enabled(false);
+    let spans = obs::take_spans();
+    let cells = find(&spans, "grid/cell");
+    assert_eq!(cells.len(), result.cells.len());
+    let mut args: Vec<u64> = cells.iter().map(|c| c.arg).collect();
+    args.sort_unstable();
+    assert_eq!(args, (0..result.cells.len() as u64).collect::<Vec<_>>());
+    // Each cell span parents a full solve tree.
+    let solves = find(&spans, "session/solve");
+    assert_eq!(solves.len(), result.cells.len());
+    for s in &solves {
+        assert!(cells.iter().any(|c| c.id == s.parent), "solve nests under its cell");
+    }
+}
+
+/// The JSON-lines export parses back with the repo's own parser and
+/// carries the schema, span names, phase labels and timing fields.
+#[test]
+fn trace_export_round_trips_as_json_lines() {
+    let _gate = serial();
+    let ds = ds();
+    let mut session = Session::build(&ds, Topology::new(2)).unwrap();
+    let (_, spans) = session.solve_traced(&spec()).unwrap();
+    let text = obs::to_jsonl(&spans);
+    assert_eq!(text.lines().count(), spans.len());
+    for (line, span) in text.lines().zip(&spans) {
+        let v = ca_prox::util::json::parse(line).unwrap();
+        assert_eq!(v.get("schema").and_then(Json::as_usize), Some(obs::TRACE_SCHEMA));
+        assert_eq!(v.get("span").and_then(Json::as_str), Some(span.name));
+        assert_eq!(v.get("id").and_then(Json::as_usize), Some(span.id as usize));
+        assert_eq!(v.get("parent").and_then(Json::as_usize), Some(span.parent as usize));
+        match span.phase {
+            Some(p) => assert_eq!(v.get("phase").and_then(Json::as_str), Some(p.name())),
+            None => assert_eq!(v.get("phase"), Some(&Json::Null)),
+        }
+        assert!(v.get("dur_us").and_then(Json::as_f64).unwrap() >= 0.0);
+    }
+    // File flush path: what `CA_PROX_TRACE` writes at CLI exit.
+    obs::set_enabled(true);
+    let _ = obs::take_spans();
+    session.solve(&spec()).unwrap();
+    obs::set_enabled(false);
+    let path = std::env::temp_dir().join(format!("ca_prox_obs_it_{}.jsonl", std::process::id()));
+    let n = obs::flush_to_path(&path).unwrap();
+    assert!(n > 0);
+    let written = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(written.lines().count(), n);
+    std::fs::remove_file(&path).ok();
+}
