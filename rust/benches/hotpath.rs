@@ -23,7 +23,10 @@ use ca_prox::datasets::Dataset;
 use ca_prox::runtime::backend::{GramBackend, NativeGramBackend};
 use ca_prox::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
 use ca_prox::error::CaError;
-use ca_prox::serve::{ServeClient, Server, ServerConfig, SolveRequest, TenantPolicy};
+use ca_prox::serve::{
+    serve_listener, sync_once, PlanStore, ServeClient, Server, ServerConfig, SolveRequest,
+    SyncCounters, TenantPolicy, WriterId,
+};
 use ca_prox::session::{Session, SolveSpec, Topology};
 use ca_prox::solvers::traits::{AlgoKind, GradientAt, SolverConfig};
 use ca_prox::store::{ColStore, ColStoreWriter};
@@ -138,6 +141,101 @@ fn serve_fleet_pair(ds: &Dataset, tag: &str, reps: usize, spec: &SolveSpec) {
         t_cold.median() / t_warm.median()
     );
     std::fs::remove_dir_all(&store_dir).ok();
+}
+
+/// The `serve/sync-cold` vs `serve/sync-warm` hotpath pair
+/// (EXPERIMENTS.md; CI requires both via `check_bench.py --require`):
+/// fleet amortization with **no shared filesystem**. Writer `a`
+/// computes a 3-job λ-path into its own store and a listener serves
+/// that store over TCP. The cold boot runs writer `b` on a wiped,
+/// never-synced store (full setup, cold warm tier); the warm boot
+/// first replicates `a`'s store over the socket (`sync_once` — the
+/// `--peer` boot path) and then boots on the replica, hydrating `a`'s
+/// plan and warm-starting from its spilled solutions. The wall-time
+/// delta is the serve/fleet-* win minus any shared mount.
+fn serve_sync_pair(ds: &Dataset, tag: &str, reps: usize, spec: &SolveSpec) {
+    let store_a = std::env::temp_dir()
+        .join(format!("ca_prox_sync_bench_a_{}_{tag}", std::process::id()));
+    let store_b = std::env::temp_dir()
+        .join(format!("ca_prox_sync_bench_b_{}_{tag}", std::process::id()));
+    std::fs::remove_dir_all(&store_a).ok();
+    std::fs::remove_dir_all(&store_b).ok();
+    let run_batch = |store: &std::path::PathBuf, writer: &str| {
+        let server = ServerConfig::default()
+            .with_threads(1)
+            .with_store(store)
+            .with_warm_pool_max(1)
+            .with_writer_id(writer)
+            .build()
+            .unwrap();
+        let id = server.register_dataset(ds.clone()).unwrap();
+        let tickets: Vec<_> = [0.1, 0.05, 0.02]
+            .iter()
+            .map(|&lambda| {
+                let job =
+                    SolveRequest::new(&id, Topology::new(2), spec.clone().with_lambda(lambda))
+                        .with_warm_tag("path");
+                server.submit(job).unwrap()
+            })
+            .collect();
+        for t in &tickets {
+            t.wait().unwrap();
+        }
+        server.shutdown().unwrap();
+    };
+    // Writer a computes once, outside the timings; its store is the
+    // replication source below.
+    run_batch(&store_a, "a");
+    let t_cold = bench(
+        &format!("serve/sync-cold ({tag}, writer b, no peer)"),
+        0,
+        reps,
+        || {
+            std::fs::remove_dir_all(&store_b).ok();
+            run_batch(&store_b, "b");
+        },
+    );
+    emit(&t_cold);
+    let a_srv = ServerConfig::default()
+        .with_threads(1)
+        .with_store(&store_a)
+        .with_writer_id("a")
+        .build()
+        .unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::scope(|scope| {
+        let listening = scope.spawn(|| serve_listener(&a_srv, &listener));
+        let counters = SyncCounters::default();
+        let t_warm = bench(
+            &format!("serve/sync-warm ({tag}, writer b, replicated over TCP)"),
+            1,
+            reps,
+            || {
+                std::fs::remove_dir_all(&store_b).ok();
+                let b_store = PlanStore::new(&store_b).with_writer(WriterId::new("b").unwrap());
+                let report = sync_once(&b_store, &addr.to_string(), &counters).unwrap();
+                assert!(report.installed() >= 1, "sync must replicate: {report:?}");
+                run_batch(&store_b, "b");
+            },
+        );
+        emit(&t_warm);
+        println!(
+            "serve/sync warm-vs-cold speedup ({tag}): {:.2}x",
+            t_cold.median() / t_warm.median()
+        );
+        use std::io::{BufRead, Write};
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        writeln!(writer, "{{\"schema\":2,\"op\":\"shutdown\"}}").unwrap();
+        writer.flush().unwrap();
+        let mut bye = String::new();
+        std::io::BufReader::new(stream).read_line(&mut bye).unwrap();
+        listening.join().unwrap().unwrap();
+    });
+    a_srv.shutdown().unwrap();
+    std::fs::remove_dir_all(&store_a).ok();
+    std::fs::remove_dir_all(&store_b).ok();
 }
 
 /// The `serve/saturated-fifo` vs `serve/saturated-qos` hotpath pair
@@ -489,6 +587,7 @@ fn quick_mode() {
     obs_trace_pair(&ds, "quick", 3, &spec.clone().with_max_iters(16));
     serve_boot_pair(&ds, "quick", 2, &spec.clone().with_max_iters(8));
     serve_fleet_pair(&ds, "quick", 2, &spec.clone().with_max_iters(8));
+    serve_sync_pair(&ds, "quick", 2, &spec.clone().with_max_iters(8));
     let small = load_preset("smoke", Some(300), 42).unwrap();
     serve_saturation_pair(&small, "quick", 2, &spec.with_max_iters(8));
     simd_pairs(5);
@@ -716,6 +815,7 @@ fn main() {
         obs_trace_pair(&ds, "covtype-50k", 5, &spec);
         serve_boot_pair(&ds, "covtype-50k", 3, &spec);
         serve_fleet_pair(&ds, "covtype-50k", 3, &spec);
+        serve_sync_pair(&ds, "covtype-50k", 3, &spec);
         let mixed = load_preset("smoke", Some(2000), 42).unwrap();
         serve_saturation_pair(&mixed, "smoke-2k", 3, &spec.with_sample_fraction(0.5));
     }

@@ -9,9 +9,10 @@ use crate::grid::{BenchEmitter, Grid, NoopSweepObserver, PlanCache, SweepObserve
 use crate::metrics::report::RunReport;
 use crate::runtime::artifact::{default_artifacts_root, plancache_root};
 use crate::runtime::pjrt::{PjrtEngine, PjrtGramBackend};
-use crate::serve::proto::{serve_loop, submit_to_json, SubmitCmd, PROTO_SCHEMA};
+use crate::serve::proto::{serve_listener, serve_loop, submit_to_json, SubmitCmd, PROTO_SCHEMA};
 use crate::serve::server::{DatasetRef, ServerConfig, TenantPolicy};
 use crate::serve::store::PlanStore;
+use crate::serve::sync::{sync_once, SyncDaemon};
 use crate::session::Session;
 use crate::solvers::traits::SolverOutput;
 use crate::store::{ColStoreWriter, STORE_DIR_SUFFIX};
@@ -226,10 +227,16 @@ pub fn cmd_sweep(argv: &[String]) -> Result<()> {
 
 /// `ca-prox serve` — the resident solve service on a JSON-lines
 /// transport: stdin/stdout by default (one request per line, responses
-/// streamed back), or a TCP socket with `--socket HOST:PORT`. Plans
-/// persist under the fingerprint-keyed store (default
+/// streamed back), or a TCP socket with `--socket HOST:PORT` (a
+/// bounded threaded accept loop — see
+/// [`crate::serve::proto::serve_listener`] — so concurrent clients are
+/// served concurrently and transient accept errors never kill the
+/// server). Plans persist under the fingerprint-keyed store (default
 /// `artifacts/plancache`, `--store none` disables), so a rebooted
-/// server skips the setup for every dataset it has seen.
+/// server skips the setup for every dataset it has seen. With `--peer
+/// HOST:PORT[,…]` the store replicates from other servers over TCP —
+/// once at boot, and every `--sync-interval-ms` thereafter — with no
+/// shared filesystem required.
 pub fn cmd_serve(argv: &[String]) -> Result<()> {
     let flags = ArgSpec::new(vec![
         Flag {
@@ -270,6 +277,21 @@ pub fn cmd_serve(argv: &[String]) -> Result<()> {
             help: "listen on HOST:PORT instead of stdin/stdout",
         },
         Flag {
+            name: "peer",
+            takes_value: true,
+            help: "comma-separated HOST:PORT peers to replicate the plan store from",
+        },
+        Flag {
+            name: "sync-interval-ms",
+            takes_value: true,
+            help: "anti-entropy period against --peer, ms (0 = sync once at boot; default 0)",
+        },
+        Flag {
+            name: "spill-retention",
+            takes_value: true,
+            help: "max spilled warm files kept per (dataset, tag), ≥ 1 (default 64)",
+        },
+        Flag {
             name: "metrics-file",
             takes_value: true,
             help: "write the Prometheus text exposition here periodically (and at shutdown)",
@@ -282,6 +304,7 @@ pub fn cmd_serve(argv: &[String]) -> Result<()> {
     ]);
     let parsed = flags.parse(argv)?;
     let mut config = ServerConfig::default();
+    let has_store = !matches!(parsed.get("store"), Some("none"));
     match parsed.get("store") {
         Some("none") => {}
         Some(dir) => config = config.with_store(dir),
@@ -298,6 +321,38 @@ pub fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     if let Some(max_entries) = parsed.get_usize("warm-pool-max")? {
         config = config.with_warm_pool_max(max_entries);
+    }
+    if let Some(retention) = parsed.get_usize("spill-retention")? {
+        config = config.with_spill_retention(retention);
+    }
+    // Replication flags: peers are where store files come *from*; the
+    // local store is where they land, so syncing needs one.
+    let peers: Vec<String> = match parsed.get("peer") {
+        None => Vec::new(),
+        Some(list) => list
+            .split(',')
+            .map(|p| p.trim())
+            .filter(|p| !p.is_empty())
+            .map(|p| {
+                if p.contains(':') {
+                    Ok(p.to_string())
+                } else {
+                    Err(CaError::Config(format!("--peer: expected HOST:PORT, got '{p}'")))
+                }
+            })
+            .collect::<Result<Vec<String>>>()?,
+    };
+    if !peers.is_empty() && !has_store {
+        return Err(CaError::Config(
+            "--peer requires a plan store ('--store none' leaves pulled files nowhere to land)"
+                .into(),
+        ));
+    }
+    let sync_interval_ms = parsed.get_usize("sync-interval-ms")?.unwrap_or(0) as u64;
+    if sync_interval_ms > 0 && peers.is_empty() {
+        return Err(CaError::Config(
+            "--sync-interval-ms without --peer: nothing to sync against".into(),
+        ));
     }
     let mut default_policy = TenantPolicy::default();
     if let Some(max_queued) = parsed.get_usize("tenant-max-queued")? {
@@ -331,36 +386,53 @@ pub fn cmd_serve(argv: &[String]) -> Result<()> {
         }
         None => None,
     };
-    match parsed.get("socket") {
+    // Anti-entropy boot round: pull every peer's store *before* the
+    // listener opens, so the very first job already sees replicated
+    // plans (a fresh replica boots with zero Lipschitz computes). A
+    // down peer is logged and skipped — replication is best-effort,
+    // serving is not.
+    let counters = server.sync_counters();
+    for peer in &peers {
+        let store = server.store().expect("--peer was validated to require a store");
+        match sync_once(store, peer, &counters) {
+            Ok(report) => eprintln!(
+                "ca-prox serve: boot sync from {peer}: {} plan(s), {} warm file(s), \
+                 {} skipped, {} rejected",
+                report.pulled_plans, report.pulled_warm, report.skipped, report.rejected
+            ),
+            Err(e) => eprintln!("ca-prox serve: boot sync from {peer} failed: {e}"),
+        }
+    }
+    let daemon = if sync_interval_ms > 0 {
+        let store = server
+            .store()
+            .cloned()
+            .expect("--sync-interval-ms was validated to require --peer (hence a store)");
+        Some(SyncDaemon::spawn(store, peers.clone(), sync_interval_ms, Arc::clone(&counters)))
+    } else {
+        None
+    };
+    let served = match parsed.get("socket") {
         None => {
             let stdin = std::io::stdin();
             let stdout = std::io::stdout();
             let mut reader = stdin.lock();
             let mut writer = stdout.lock();
-            serve_loop(&server, &mut reader, &mut writer)?;
+            serve_loop(&server, &mut reader, &mut writer).map(|_| ())
         }
         Some(addr) => {
             let listener = std::net::TcpListener::bind(addr)?;
             eprintln!("ca-prox serve: listening on {addr} ({} workers)", server.threads());
-            loop {
-                let (stream, peer) = listener.accept()?;
-                eprintln!("ca-prox serve: connection from {peer}");
-                let mut reader = std::io::BufReader::new(stream.try_clone()?);
-                let mut writer = stream;
-                match serve_loop(&server, &mut reader, &mut writer) {
-                    Ok(true) => break, // shutdown op
-                    Ok(false) => continue, // client hung up; keep serving
-                    Err(e) => {
-                        eprintln!("ca-prox serve: connection error: {e}");
-                        continue;
-                    }
-                }
-            }
+            serve_listener(&server, &listener)
         }
+    };
+    if let Some(daemon) = daemon {
+        daemon.stop();
     }
     if let Some(dump) = dump {
         dump.stop();
     }
+    served?;
     server.shutdown()
 }
 
@@ -743,6 +815,25 @@ mod tests {
         let err =
             cmd_serve(&sv(&["--writer-id", "../escape", "--store", "none"])).unwrap_err();
         assert!(err.to_string().contains("writer id"), "{err}");
+    }
+
+    #[test]
+    fn serve_rejects_bad_sync_flags() {
+        // A peer list is only meaningful with a store to land files in.
+        let err = cmd_serve(&sv(&["--peer", "127.0.0.1:7401", "--store", "none"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("--peer requires a plan store"), "{err}");
+        // Peers must look like endpoints.
+        let err = cmd_serve(&sv(&["--peer", "nocolon", "--store", "none"])).unwrap_err();
+        assert!(err.to_string().contains("HOST:PORT"), "{err}");
+        // An interval with nobody to talk to is a misconfiguration.
+        let err = cmd_serve(&sv(&["--sync-interval-ms", "500", "--store", "none"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("without --peer"), "{err}");
+        // The disk warm tier must be able to keep at least one entry.
+        let err = cmd_serve(&sv(&["--spill-retention", "0", "--store", "none"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("spill-retention"), "{err}");
     }
 
     #[test]

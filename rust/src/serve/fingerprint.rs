@@ -90,6 +90,46 @@ impl Fingerprint {
     }
 }
 
+impl Fingerprint {
+    /// Strict inverse of the [`fmt::Display`] directory-name form:
+    /// `d<d>-n<n>-<16 lowercase hex digits>`, the exact spelling
+    /// [`Fingerprint::of`] emits (no leading zeros on d/n, no uppercase
+    /// hex). Anything else — including a re-spelling that would name
+    /// the same identity — returns `None`, so a store directory scan or
+    /// a peer's `store_list` claim can never alias two names onto one
+    /// fingerprint. This is what lets replication validate a pulled
+    /// file *without* the live dataset: the claimed name recovers `d`,
+    /// and the dataset's own fingerprint re-checks everything at
+    /// registration time.
+    pub fn parse_name(name: &str) -> Option<Fingerprint> {
+        let rest = name.strip_prefix('d')?;
+        let (d_str, rest) = rest.split_once("-n")?;
+        let (n_str, hex) = rest.split_once('-')?;
+        let canonical_usize = |s: &str| -> Option<usize> {
+            if s.is_empty() || (s.len() > 1 && s.starts_with('0')) {
+                return None;
+            }
+            if !s.bytes().all(|b| b.is_ascii_digit()) {
+                return None;
+            }
+            s.parse().ok()
+        };
+        let d = canonical_usize(d_str)?;
+        let n = canonical_usize(n_str)?;
+        if hex.len() != 16
+            || !hex.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+        {
+            return None;
+        }
+        let hash = u64::from_str_radix(hex, 16).ok()?;
+        let fp = Fingerprint { d, n, hash };
+        if fp.to_string() != name {
+            return None;
+        }
+        Some(fp)
+    }
+}
+
 impl fmt::Display for Fingerprint {
     /// Stable directory-name form, e.g. `d54-n581012-1a2b3c4d5e6f7081`.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -144,5 +184,30 @@ mod tests {
         let s = fp.to_string();
         assert_eq!(s, "d54-n581012-1a2b3c4d5e6f7081");
         assert!(s.chars().all(|c| c.is_ascii_alphanumeric() || c == '-'));
+    }
+
+    #[test]
+    fn parse_name_inverts_display_and_rejects_respellings() {
+        for fp in [
+            Fingerprint { d: 54, n: 581_012, hash: 0x1a2b_3c4d_5e6f_7081 },
+            Fingerprint { d: 1, n: 1, hash: 0 },
+            Fingerprint::of(&ds(7)).unwrap(),
+        ] {
+            assert_eq!(Fingerprint::parse_name(&fp.to_string()), Some(fp));
+        }
+        for bad in [
+            "",
+            "plan.json",
+            "d54-n581012",                       // no hash
+            "d54-n581012-1a2b3c4d5e6f70",        // short hash
+            "d54-n581012-1A2B3C4D5E6F7081",      // uppercase hex
+            "d054-n581012-1a2b3c4d5e6f7081",     // leading zero on d
+            "d54-n0581012-1a2b3c4d5e6f7081",     // leading zero on n
+            "d-5-n1-0000000000000000",           // negative-shaped d
+            "x54-n581012-1a2b3c4d5e6f7081",      // wrong prefix
+            "d54-n581012-1a2b3c4d5e6f7081.json", // trailing junk
+        ] {
+            assert_eq!(Fingerprint::parse_name(bad), None, "'{bad}' must not parse");
+        }
     }
 }

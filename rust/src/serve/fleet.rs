@@ -47,21 +47,49 @@ static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
 
 /// Atomically publish `doc` at `path`: compact write to a unique
 /// dot-prefixed temp file in `dir` (so directory scans never see it as
-/// a lease or a warm file), then rename into place. The temp file is
-/// removed on either failure. One helper carries the pattern for plan
-/// files, spilled warm vectors and leases alike.
+/// a lease or a warm file), fsync it, rename into place, then fsync the
+/// directory. The temp file is removed on either failure. One helper
+/// carries the pattern for plan files, spilled warm vectors and leases
+/// alike.
+///
+/// The two syncs make the rename durable, not just atomic: without the
+/// file sync a crash can publish a name pointing at unwritten bytes,
+/// and without the directory sync the rename itself can roll back — a
+/// peer that replicated the published plan would then disagree with the
+/// origin after its restart. On non-unix targets the directory sync is
+/// a documented no-op (`File::open` on a directory is unix-only);
+/// atomicity still holds there, only crash-durability of the *name* is
+/// platform-best-effort.
 pub(crate) fn atomic_write_json(
     dir: &Path,
     kind: &str,
     path: &Path,
     doc: &Json,
 ) -> Result<()> {
+    atomic_write_bytes(dir, kind, path, doc.to_string_compact().as_bytes())
+}
+
+/// Raw-bytes form of [`atomic_write_json`], used when the bytes to
+/// publish already exist verbatim — a plan or warm file pulled from a
+/// peer installs byte-for-byte, preserving the origin's writer stamp,
+/// generation and checksum so replicated stores converge to identical
+/// files (see [`crate::serve::sync`]).
+pub(crate) fn atomic_write_bytes(
+    dir: &Path,
+    kind: &str,
+    path: &Path,
+    bytes: &[u8],
+) -> Result<()> {
     let tmp = dir.join(format!(
         ".tmp.{kind}.{}.{}",
         std::process::id(),
         TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
     ));
-    if let Err(e) = std::fs::write(&tmp, doc.to_string_compact()) {
+    let write_synced = || -> std::io::Result<()> {
+        std::fs::write(&tmp, bytes)?;
+        std::fs::File::open(&tmp)?.sync_all()
+    };
+    if let Err(e) = write_synced() {
         std::fs::remove_file(&tmp).ok();
         return Err(CaError::Io(e));
     }
@@ -69,8 +97,24 @@ pub(crate) fn atomic_write_json(
         std::fs::remove_file(&tmp).ok();
         return Err(CaError::Io(e));
     }
+    sync_dir(dir);
     Ok(())
 }
+
+/// Flush a rename's directory entry to disk. Unix-only: directories
+/// can be opened and fsynced there; elsewhere this is a no-op and the
+/// rename's durability is whatever the platform guarantees. Failure is
+/// swallowed — the rename already happened, and a reader either sees
+/// the old complete file or the new complete file either way.
+#[cfg(unix)]
+fn sync_dir(dir: &Path) {
+    if let Ok(d) = std::fs::File::open(dir) {
+        d.sync_all().ok();
+    }
+}
+
+#[cfg(not(unix))]
+fn sync_dir(_dir: &Path) {}
 
 /// Shared character rule for anything that becomes a store path
 /// component (writer ids, warm-pool tags): ASCII alphanumerics plus

@@ -51,6 +51,18 @@
 //!   (per-tenant wait/service histograms, shed/deadline counters,
 //!   cache and fleet-lease gauges), and `ca-prox serve --metrics-file`
 //!   dumps the same text periodically for file-based scrapes.
+//!   [`proto::serve_listener`] fronts TCP with a bounded threaded
+//!   accept loop — concurrent connections, transient accept errors
+//!   survived with backoff, graceful shutdown.
+//! * [`sync`] — fleet replication **without a shared mount**: the
+//!   `store_list` / `store_pull` ops advertise and ship store files
+//!   verbatim over TCP, every pulled byte is re-validated exactly like
+//!   an on-disk load (corrupt transfers rejected wholesale, never
+//!   hydrated), pulled plans merge through the same leased-merge
+//!   lattice local writers use, and an anti-entropy daemon drives
+//!   `--peer` rounds on boot and on `--sync-interval-ms`. The disk
+//!   warm tier is retention-bounded (LRU by spill generation) so
+//!   replicated stores stay bounded.
 //!
 //! `rust/tests/serve.rs` pins the contract: concurrent submits are
 //! bit-identical to fresh standalone sessions, a warm boot against the
@@ -72,13 +84,15 @@ pub mod fleet;
 pub mod proto;
 pub mod server;
 pub mod store;
+pub mod sync;
 
 pub use client::ServeClient;
 pub use fingerprint::Fingerprint;
 pub use fleet::{validate_pool_tag, validate_tenant, Lease, WriterId, LEASE_SCHEMA};
 pub use proto::{
-    parse_request, parse_stats_line, serve_loop, DatasetSnapshot, LatencySnapshot, QueueSnapshot,
-    Request, StatsSnapshot, SubmitCmd, TenantSnapshot, PROTO_SCHEMA,
+    parse_request, parse_stats_line, serve_listener, serve_loop, DatasetSnapshot,
+    LatencySnapshot, ListingEntry, ListingWarmTag, PullCmd, PullFile, QueueSnapshot, Request,
+    StatsSnapshot, StoreFile, SubmitCmd, TenantSnapshot, MAX_CONNECTIONS, PROTO_SCHEMA,
 };
 pub use server::{
     DatasetRef, DatasetStats, JobEvent, JobEventKind, JobId, JobTicket, LatencyStats,
@@ -86,4 +100,8 @@ pub use server::{
     TenantStats, DEFAULT_TENANT, DEFAULT_TENANT_MAX_INFLIGHT, DEFAULT_TENANT_MAX_QUEUED,
     DEFAULT_WARM_POOL_MAX, LATENCY_BUCKETS,
 };
-pub use store::{HydrateReport, PlanStore, WarmLoad, STORE_SCHEMA, WARM_SCHEMA};
+pub use store::{
+    HydrateReport, PlanInstall, PlanStore, WarmInstall, WarmLoad, DEFAULT_SPILL_RETENTION,
+    STORE_SCHEMA, WARM_SCHEMA,
+};
+pub use sync::{sync_once, SyncCounters, SyncDaemon, SyncReport};

@@ -65,7 +65,8 @@ use crate::obs::Span;
 use crate::runtime::backend::NativeGramBackend;
 use crate::serve::fingerprint::Fingerprint;
 use crate::serve::fleet::{validate_pool_tag, validate_tenant, WriterId};
-use crate::serve::store::{PlanStore, WarmLoad};
+use crate::serve::store::{PlanStore, WarmLoad, DEFAULT_SPILL_RETENTION};
+use crate::serve::sync::SyncCounters;
 use crate::session::{BlockEvent, Observer, Session, Signal, SolveSpec, Topology};
 use crate::solvers::traits::{HistoryPoint, SolverOutput};
 use std::cmp::Reverse;
@@ -817,6 +818,10 @@ pub struct ServerConfig {
     /// pid-derived default, see
     /// [`crate::serve::fleet::WriterId::for_process`]).
     pub writer_id: Option<String>,
+    /// Disk-tier retention bound per `warm/<tag>/` directory, ≥ 1
+    /// (default [`DEFAULT_SPILL_RETENTION`]); the store LRU-prunes by
+    /// spill generation beyond it. Meaningless without a store.
+    pub spill_retention: usize,
     /// Policy applied to tenants without an explicit override.
     pub tenant_default: TenantPolicy,
     /// Per-tenant policy overrides (name → policy). Names are validated
@@ -832,6 +837,7 @@ impl Default for ServerConfig {
             store: None,
             warm_pool_max_entries: DEFAULT_WARM_POOL_MAX,
             writer_id: None,
+            spill_retention: DEFAULT_SPILL_RETENTION,
             tenant_default: TenantPolicy::default(),
             tenants: Vec::new(),
         }
@@ -870,6 +876,12 @@ impl ServerConfig {
         self
     }
 
+    /// Set the store's per-tag spilled-warm retention bound (≥ 1).
+    pub fn with_spill_retention(mut self, n: usize) -> Self {
+        self.spill_retention = n;
+        self
+    }
+
     /// Set the default tenant policy.
     pub fn with_tenant_default(mut self, policy: TenantPolicy) -> Self {
         self.tenant_default = policy;
@@ -899,6 +911,13 @@ impl ServerConfig {
                     .into(),
             ));
         }
+        if self.spill_retention == 0 {
+            return Err(CaError::Config(
+                "serve spill-retention bound must be ≥ 1 (run without a store to \
+                 keep nothing on disk)"
+                    .into(),
+            ));
+        }
         let writer = match &self.writer_id {
             Some(id) => WriterId::new(id)?,
             None => WriterId::for_process(),
@@ -920,10 +939,15 @@ impl ServerConfig {
             tenant_default: self.tenant_default,
             tenant_overrides: overrides,
             datasets: Mutex::new(BTreeMap::new()),
-            store: self.store.map(|root| PlanStore::new(root).with_writer(writer)),
+            store: self.store.map(|root| {
+                PlanStore::new(root)
+                    .with_writer(writer)
+                    .with_spill_retention(self.spill_retention)
+            }),
             warm_pool_max: self.warm_pool_max_entries,
             shutdown: AtomicBool::new(false),
             next_job: AtomicU64::new(0),
+            sync: Arc::new(SyncCounters::default()),
         });
         let workers = (0..threads)
             .map(|_| {
@@ -1127,6 +1151,10 @@ struct ServerInner {
     warm_pool_max: usize,
     shutdown: AtomicBool,
     next_job: AtomicU64,
+    /// Replication counters (push side fed by the proto layer serving
+    /// `store_pull`, pull side fed by the sync driver); always present
+    /// — zeros when replication is unused.
+    sync: Arc<SyncCounters>,
 }
 
 impl ServerInner {
@@ -1317,6 +1345,19 @@ impl Server {
         lock(&self.inner.datasets).get(id).map(|e| e.fingerprint)
     }
 
+    /// The configured plan store, if any — the replication ops
+    /// (`store_list` / `store_pull`) and the sync driver read and write
+    /// the store through this.
+    pub fn store(&self) -> Option<&PlanStore> {
+        self.inner.store.as_ref()
+    }
+
+    /// The server's replication counters (shared with the sync daemon;
+    /// rendered as the `ca_prox_sync_*` metric families).
+    pub fn sync_counters(&self) -> Arc<SyncCounters> {
+        Arc::clone(&self.inner.sync)
+    }
+
     /// Persist every registered dataset's cache to the plan store now
     /// (workers also persist after each completed job) and spill every
     /// still-dirty warm-pool entry, so another server on the same store
@@ -1480,6 +1521,34 @@ fn render_metrics(inner: &ServerInner) -> String {
             reg.gauge("ca_prox_store_lease_writers", "Fleet writers holding a lease.", &labels)
                 .set(leases.len() as f64);
         }
+    }
+    {
+        let s = &inner.sync;
+        let rel = Ordering::Relaxed;
+        for (direction, bytes, files) in [
+            ("pulled", s.pulled_bytes.load(rel), s.pulled_files.load(rel)),
+            ("pushed", s.pushed_bytes.load(rel), s.pushed_files.load(rel)),
+        ] {
+            let labels = [("direction", direction)];
+            reg.counter(
+                "ca_prox_sync_bytes_total",
+                "Store-file bytes replicated over TCP.",
+                &labels,
+            )
+            .add(bytes);
+            reg.counter(
+                "ca_prox_sync_files_total",
+                "Store files replicated over TCP (installed or served).",
+                &labels,
+            )
+            .add(files);
+        }
+        reg.counter(
+            "ca_prox_sync_rejected_total",
+            "Pulled transfers rejected by validation.",
+            &[],
+        )
+        .add(s.rejected.load(rel));
     }
     reg.render()
 }

@@ -44,6 +44,24 @@
 //! through to disk — the fleet's unit of shared warm work. Same
 //! discipline as the plan file: atomic rename, hex bit patterns,
 //! validate-everything-plus-checksum, corrupt files rejected wholesale.
+//! Each spill carries a per-tag monotonic **generation**, and the disk
+//! tier is bounded like the in-memory pool: at most
+//! [`PlanStore::with_spill_retention`] files per (fingerprint, tag),
+//! lowest generations pruned first — LRU by generation, never by wall
+//! clock, so replays and replicas order evictions identically.
+//!
+//! Replication ([`crate::serve::sync`]): the same files travel to peer
+//! servers over the JSON-lines TCP protocol (`store_list` /
+//! `store_pull`). A pulled file is validated **byte-for-byte exactly
+//! like an on-disk load** before anything is written — the claimed
+//! canonical fingerprint name recovers `d`
+//! ([`Fingerprint::parse_name`]), so lengths, finiteness and the
+//! embedded checksum are all checked with zero trust in the transport —
+//! and installs either adopt the peer's bytes verbatim
+//! ([`PlanInstall::Adopted`]: same generation, writer stamp and
+//! checksum, so replicas converge to identical files) or union through
+//! the leased-merge path ([`PlanInstall::Merged`]) when both sides
+//! hold work the other lacks.
 
 use crate::cluster::shard::PartitionStrategy;
 use crate::datasets::Dataset;
@@ -66,8 +84,19 @@ use std::path::{Path, PathBuf};
 /// content.
 pub const STORE_SCHEMA: usize = 2;
 
-/// Spilled-warm-start schema version.
-pub const WARM_SCHEMA: usize = 1;
+/// Spilled-warm-start schema version. v2 added the per-tag monotonic
+/// `generation` field (checksummed like everything else) that orders
+/// spills for the disk-tier retention bound and for replication; v1
+/// files are rejected and recomputed, like any unknown schema.
+pub const WARM_SCHEMA: usize = 2;
+
+/// Default disk-tier retention bound: spilled warm files kept per
+/// (fingerprint, tag). Generous next to the in-memory pool's
+/// [`crate::serve::server::DEFAULT_WARM_POOL_MAX`] — disk is cheaper
+/// than RAM, and the spill tier is what the whole fleet warm-starts
+/// from — but finite, so a very long λ-path can no longer grow a
+/// replicated store without bound.
+pub const DEFAULT_SPILL_RETENTION: usize = 64;
 
 /// What a [`PlanStore::hydrate`] call actually loaded.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -110,6 +139,38 @@ pub enum WarmLoad {
 pub struct PlanStore {
     root: PathBuf,
     writer: WriterId,
+    spill_retention: usize,
+}
+
+/// Outcome of installing one plan file pulled from a peer
+/// ([`PlanStore::install_remote_plan`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanInstall {
+    /// The peer's bytes were adopted verbatim — its writer stamp,
+    /// generation and checksum preserved, so the two stores now hold
+    /// byte-identical plan files. Carries the adopted generation.
+    Adopted(u64),
+    /// Local and remote had each certified work the other lacked; the
+    /// union was written through the leased-merge path under this
+    /// writer's stamp. Carries the new generation.
+    Merged(u64),
+    /// The local plan already covers the peer's — nothing written.
+    Skipped,
+    /// Validation failed; nothing was touched. Worth re-requesting
+    /// once: a fresh pull re-reads the peer's file.
+    Rejected(String),
+}
+
+/// Outcome of installing one warm spill pulled from a peer
+/// ([`PlanStore::install_remote_warm`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WarmInstall {
+    /// The peer's bytes were installed verbatim.
+    Installed,
+    /// An equal-or-newer local spill (or identical bytes) won.
+    Skipped,
+    /// Validation failed; nothing was touched.
+    Rejected(String),
 }
 
 /// Validated in-memory form of a store file, parsed completely before
@@ -195,16 +256,94 @@ fn checksum_plan(
 }
 
 /// Checksum of a spilled warm vector's payload.
-fn checksum_warm(fingerprint: &str, tag: &str, lambda_bits: u64, w: &[f64]) -> u64 {
+fn checksum_warm(fingerprint: &str, tag: &str, lambda_bits: u64, generation: u64, w: &[f64]) -> u64 {
     let mut h = Fnv::new();
     h.str(fingerprint);
     h.str(tag);
     h.word(lambda_bits);
+    h.word(generation);
     h.word(w.len() as u64);
     for v in w {
         h.word(v.to_bits());
     }
     h.finish()
+}
+
+/// Does `sup` semantically cover `sub` — every L̂ seed with identical
+/// bits, every reference key at an at-least-as-tight certified
+/// tolerance, every shard key? Then adopting `sup` loses none of
+/// `sub`'s one-time work: the adoption test for replicated plans.
+fn covers(sup: &Parsed, sub: &Parsed) -> bool {
+    sub.lipschitz.iter().all(|&(seed, l)| {
+        sup.lipschitz.iter().any(|&(s, l2)| s == seed && l2.to_bits() == l.to_bits())
+    }) && sub.references.iter().all(|(lb, mi, tol, _)| {
+        sup.references.iter().any(|(lb2, mi2, tol2, _)| lb2 == lb && mi2 == mi && tol2 <= tol)
+    }) && sub.shards.iter().all(|k| sup.shards.contains(k))
+}
+
+/// Compact schema-v2 plan document, checksum computed inside — one
+/// builder shared by the leased save path and the replication merge
+/// path, so the two can never disagree about formatting.
+fn build_plan_doc(
+    fp_str: &str,
+    writer: &str,
+    generation: u64,
+    lip: &[(u64, f64)],
+    refs: &[(u64, usize, f64, Vec<f64>)],
+    shards: &[(usize, PartitionStrategy)],
+) -> Json {
+    let ref_views: Vec<(u64, usize, f64, &[f64])> =
+        refs.iter().map(|(l, m, t, w)| (*l, *m, *t, w.as_slice())).collect();
+    let checksum = checksum_plan(fp_str, writer, generation, lip, &ref_views, shards);
+    Json::obj(vec![
+        ("schema", Json::Num(STORE_SCHEMA as f64)),
+        ("fingerprint", Json::Str(fp_str.to_string())),
+        ("writer", Json::Str(writer.to_string())),
+        ("generation", Json::Num(generation as f64)),
+        ("checksum", hex64(checksum)),
+        (
+            "lipschitz",
+            Json::Arr(
+                lip.iter()
+                    .map(|&(seed, l)| {
+                        Json::obj(vec![("seed", hex64(seed)), ("l_bits", hex64(l.to_bits()))])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "references",
+            Json::Arr(
+                refs.iter()
+                    .map(|(lambda_bits, max_iters, tol, w)| {
+                        Json::obj(vec![
+                            ("lambda_bits", hex64(*lambda_bits)),
+                            ("max_iters", Json::Num(*max_iters as f64)),
+                            ("tol_bits", hex64(tol.to_bits())),
+                            (
+                                "w_bits",
+                                Json::Arr(w.iter().map(|v| hex64(v.to_bits())).collect()),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "shards",
+            Json::Arr(
+                shards
+                    .iter()
+                    .map(|&(p, strategy)| {
+                        Json::obj(vec![
+                            ("p", Json::Num(p as f64)),
+                            ("partition", Json::Str(partition_name(strategy).into())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 impl PlanStore {
@@ -213,13 +352,26 @@ impl PlanStore {
     /// per-process writer identity. Nothing touches the filesystem until
     /// [`PlanStore::save`] / [`PlanStore::hydrate`].
     pub fn new(root: impl Into<PathBuf>) -> Self {
-        PlanStore { root: root.into(), writer: WriterId::for_process() }
+        PlanStore {
+            root: root.into(),
+            writer: WriterId::for_process(),
+            spill_retention: DEFAULT_SPILL_RETENTION,
+        }
     }
 
     /// Use an explicit fleet writer identity for lease files (see
     /// [`crate::serve::fleet`]); the default is pid-derived.
     pub fn with_writer(mut self, writer: WriterId) -> Self {
         self.writer = writer;
+        self
+    }
+
+    /// Bound the disk tier: keep at most `n` spilled warm files per
+    /// (fingerprint, tag), lowest generations pruned first (see
+    /// [`DEFAULT_SPILL_RETENTION`]). Values below 1 are clamped to 1 —
+    /// a store that spills must be able to keep what it just spilled.
+    pub fn with_spill_retention(mut self, n: usize) -> Self {
+        self.spill_retention = n.max(1);
         self
     }
 
@@ -340,60 +492,14 @@ impl PlanStore {
             refs.into_iter().map(|((l, m), (t, w))| (l, m, t, w)).collect();
         let shards: Vec<(usize, PartitionStrategy)> = shards.into_iter().collect();
         let entries = lip.len() + refs.len() + shards.len();
-        let fp_str = fp.to_string();
-        let ref_views: Vec<(u64, usize, f64, &[f64])> =
-            refs.iter().map(|(l, m, t, w)| (*l, *m, *t, w.as_slice())).collect();
-        let checksum =
-            checksum_plan(&fp_str, self.writer.as_str(), generation, &lip, &ref_views, &shards);
-        let doc = Json::obj(vec![
-            ("schema", Json::Num(STORE_SCHEMA as f64)),
-            ("fingerprint", Json::Str(fp_str)),
-            ("writer", Json::Str(self.writer.as_str().to_string())),
-            ("generation", Json::Num(generation as f64)),
-            ("checksum", hex64(checksum)),
-            (
-                "lipschitz",
-                Json::Arr(
-                    lip.iter()
-                        .map(|&(seed, l)| {
-                            Json::obj(vec![("seed", hex64(seed)), ("l_bits", hex64(l.to_bits()))])
-                        })
-                        .collect(),
-                ),
-            ),
-            (
-                "references",
-                Json::Arr(
-                    refs.iter()
-                        .map(|(lambda_bits, max_iters, tol, w)| {
-                            Json::obj(vec![
-                                ("lambda_bits", hex64(*lambda_bits)),
-                                ("max_iters", Json::Num(*max_iters as f64)),
-                                ("tol_bits", hex64(tol.to_bits())),
-                                (
-                                    "w_bits",
-                                    Json::Arr(w.iter().map(|v| hex64(v.to_bits())).collect()),
-                                ),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-            (
-                "shards",
-                Json::Arr(
-                    shards
-                        .iter()
-                        .map(|&(p, strategy)| {
-                            Json::obj(vec![
-                                ("p", Json::Num(p as f64)),
-                                ("partition", Json::Str(partition_name(strategy).into())),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-        ]);
+        let doc = build_plan_doc(
+            &fp.to_string(),
+            self.writer.as_str(),
+            generation,
+            &lip,
+            &refs,
+            &shards,
+        );
         // Atomic + compact: concurrent savers each publish a complete
         // file, and every byte of it is checksummed content.
         atomic_write_json(&dir, "plan.json", &self.plan_path(&fp), &doc)?;
@@ -607,7 +713,10 @@ impl PlanStore {
 
     /// Atomically spill one completed warm-start solution. Overwrites
     /// any previous spill for the same (tag, λ) — last completed
-    /// solution wins, exactly like the in-memory pool.
+    /// solution wins, exactly like the in-memory pool. The spill takes
+    /// the tag's next generation (an overwrite becomes the newest entry,
+    /// like an LRU touch), and the tag directory is then pruned to the
+    /// retention bound ([`PlanStore::with_spill_retention`]).
     pub fn spill_warm(
         &self,
         fp: &Fingerprint,
@@ -618,16 +727,60 @@ impl PlanStore {
         fleet::validate_pool_tag(tag)?;
         let dir = self.warm_dir(fp, tag);
         std::fs::create_dir_all(&dir)?;
+        let generation =
+            self.scan_warm_entries(fp, tag).iter().map(|&(g, _)| g).max().unwrap_or(0) + 1;
         let fp_str = fp.to_string();
         let doc = Json::obj(vec![
             ("schema", Json::Num(WARM_SCHEMA as f64)),
             ("fingerprint", Json::Str(fp_str.clone())),
             ("tag", Json::Str(tag.to_string())),
             ("lambda_bits", hex64(lambda_bits)),
-            ("checksum", hex64(checksum_warm(&fp_str, tag, lambda_bits, w))),
+            ("generation", Json::Num(generation as f64)),
+            ("checksum", hex64(checksum_warm(&fp_str, tag, lambda_bits, generation, w))),
             ("w_bits", Json::Arr(w.iter().map(|v| hex64(v.to_bits())).collect())),
         ]);
-        atomic_write_json(&dir, "warm", &self.warm_path(fp, tag, lambda_bits), &doc)
+        atomic_write_json(&dir, "warm", &self.warm_path(fp, tag, lambda_bits), &doc)?;
+        self.prune_warm(fp, tag);
+        Ok(())
+    }
+
+    /// Best-effort read of one spill's generation — `None` when
+    /// missing, unparseable or pre-generation schema. Ordering only;
+    /// full validation happens in [`PlanStore::load_warm`].
+    fn warm_file_generation(path: &Path) -> Option<u64> {
+        let root = parse(&std::fs::read_to_string(path).ok()?).ok()?;
+        Some(root.get("generation").and_then(Json::as_usize)? as u64)
+    }
+
+    /// `(generation, λ-bits)` of every well-named spill under
+    /// (fp, tag). Files whose generation cannot be read sort as
+    /// generation 0 — unreadable files are pruned first.
+    fn scan_warm_entries(&self, fp: &Fingerprint, tag: &str) -> Vec<(u64, u64)> {
+        self.list_warm(fp, tag)
+            .into_iter()
+            .map(|bits| {
+                (Self::warm_file_generation(&self.warm_path(fp, tag, bits)).unwrap_or(0), bits)
+            })
+            .collect()
+    }
+
+    /// Enforce the disk-tier retention bound: keep at most
+    /// `spill_retention` spills per (fingerprint, tag), dropping the
+    /// lowest generations first — LRU by generation, mirroring the
+    /// in-memory pool's bound and, like it, never consulting a wall
+    /// clock, so replicas and replays order evictions identically.
+    /// Generation ties (only possible among unreadable files) break on
+    /// λ-bits, keeping the prune deterministic.
+    fn prune_warm(&self, fp: &Fingerprint, tag: &str) {
+        let mut entries = self.scan_warm_entries(fp, tag);
+        if entries.len() <= self.spill_retention {
+            return;
+        }
+        entries.sort_unstable();
+        let excess = entries.len() - self.spill_retention;
+        for &(_, bits) in &entries[..excess] {
+            std::fs::remove_file(self.warm_path(fp, tag, bits)).ok();
+        }
     }
 
     /// Load one spilled warm vector, validating everything (schema,
@@ -646,18 +799,19 @@ impl PlanStore {
             Err(e) => return WarmLoad::Rejected(format!("unreadable {}: {e}", path.display())),
         };
         match Self::parse_warm(&text, fp, d, tag, lambda_bits) {
-            Ok(w) => WarmLoad::Loaded(w),
+            Ok((_, w)) => WarmLoad::Loaded(w),
             Err(reason) => WarmLoad::Rejected(format!("{}: {reason}", path.display())),
         }
     }
 
+    /// Full validation of one spill's text; returns `(generation, w)`.
     fn parse_warm(
         text: &str,
         fp: &Fingerprint,
         d: usize,
         tag: &str,
         lambda_bits: u64,
-    ) -> std::result::Result<Vec<f64>, String> {
+    ) -> std::result::Result<(u64, Vec<f64>), String> {
         let root = parse(text).map_err(|e| format!("unparseable ({e})"))?;
         match root.get("schema").and_then(Json::as_usize) {
             Some(WARM_SCHEMA) => {}
@@ -680,6 +834,10 @@ impl PlanStore {
         if stored_lambda != lambda_bits {
             return Err("lambda_bits does not match the file name".into());
         }
+        let generation = root
+            .get("generation")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| "bad or missing generation".to_string())? as u64;
         let stored_checksum = parse_hex64(root.get("checksum"), "checksum")?;
         let w_json = root
             .get("w_bits")
@@ -696,14 +854,14 @@ impl PlanStore {
             }
             w.push(x);
         }
-        let computed = checksum_warm(stored_fp, tag, lambda_bits, &w);
+        let computed = checksum_warm(stored_fp, tag, lambda_bits, generation, &w);
         if computed != stored_checksum {
             return Err(format!(
                 "checksum mismatch: file says {stored_checksum:016x}, payload hashes to \
                  {computed:016x}"
             ));
         }
-        Ok(w)
+        Ok((generation, w))
     }
 
     /// λ bit patterns of every spilled warm vector under (fp, tag), in
@@ -729,6 +887,198 @@ impl PlanStore {
             .collect();
         bits.sort_unstable();
         bits
+    }
+
+    // ---- replication (store push/pull over TCP, serve::sync) ----
+
+    /// Canonical fingerprint directory names under the store root,
+    /// sorted — the server's `store_list` advertisement. Only names
+    /// [`Fingerprint::parse_name`] accepts are listed; anything else in
+    /// the root (temp files, operator debris) is invisible to peers.
+    pub fn list_fingerprint_names(&self) -> Vec<String> {
+        let Ok(entries) = std::fs::read_dir(&self.root) else { return Vec::new() };
+        let mut names: Vec<String> = entries
+            .flatten()
+            .filter(|e| e.path().is_dir())
+            .filter_map(|e| e.file_name().to_str().map(str::to_string))
+            .filter(|n| Fingerprint::parse_name(n).is_some())
+            .collect();
+        names.sort();
+        names
+    }
+
+    /// Best-effort `(generation, checksum)` stamp of `fp`'s plan file —
+    /// what `store_list` advertises and what the sync client compares
+    /// to decide whether a pull is worth the bytes. `None` when missing
+    /// or unreadable; nothing here is trusted — the pull path
+    /// re-validates everything.
+    pub fn plan_summary(&self, fp: &Fingerprint) -> Option<(u64, u64)> {
+        let root = parse(&std::fs::read_to_string(self.plan_path(fp)).ok()?).ok()?;
+        let generation = root.get("generation").and_then(Json::as_usize)? as u64;
+        let checksum = parse_hex64(root.get("checksum"), "checksum").ok()?;
+        Some((generation, checksum))
+    }
+
+    /// Raw text of `fp`'s plan file, for serving a peer's pull.
+    pub fn read_plan_text(&self, fp: &Fingerprint) -> Option<String> {
+        std::fs::read_to_string(self.plan_path(fp)).ok()
+    }
+
+    /// Warm tags with a spill directory under `fp`, sorted.
+    pub fn list_warm_tags(&self, fp: &Fingerprint) -> Vec<String> {
+        let Ok(entries) = std::fs::read_dir(self.dir_for(fp).join("warm")) else {
+            return Vec::new();
+        };
+        let mut tags: Vec<String> = entries
+            .flatten()
+            .filter(|e| e.path().is_dir())
+            .filter_map(|e| e.file_name().to_str().map(str::to_string))
+            .filter(|t| fleet::validate_pool_tag(t).is_ok())
+            .collect();
+        tags.sort();
+        tags
+    }
+
+    /// Raw text of one spilled warm file, for serving a peer's pull.
+    pub fn read_warm_text(&self, fp: &Fingerprint, tag: &str, lambda_bits: u64) -> Option<String> {
+        if fleet::validate_pool_tag(tag).is_err() {
+            return None;
+        }
+        std::fs::read_to_string(self.warm_path(fp, tag, lambda_bits)).ok()
+    }
+
+    /// Install a plan file pulled from a peer, after validating the
+    /// transferred text **exactly like an on-disk load** — schema,
+    /// claimed fingerprint, entry shapes (vector lengths against the
+    /// `d` the canonical name encodes), finiteness, and the embedded
+    /// FNV-1a checksum. All-or-nothing: a transfer failing any check
+    /// returns [`PlanInstall::Rejected`] without touching the store.
+    ///
+    /// Merge rules (the same lattice the leased save walks):
+    /// * identical bytes → [`PlanInstall::Skipped`] (already converged);
+    /// * no valid local plan, or the peer's plan [`covers`] ours at a
+    ///   newer generation → **adopt verbatim**, so replicas hold
+    ///   byte-identical files (same generation, writer stamp,
+    ///   checksum). An exact generation tie with different bytes adopts
+    ///   only the lexicographically smaller spelling, so both sides of
+    ///   a mutual sync pick the same winner instead of ping-ponging;
+    /// * ours covers the peer's at an equal-or-newer generation →
+    ///   [`PlanInstall::Skipped`];
+    /// * otherwise the plans diverged → union through the leased-merge
+    ///   path (union of L̂ seeds, tighter-certified-tol wins per
+    ///   (λ, max_iters), union of shard keys; generation
+    ///   `1 + max(local, remote, leases)`, this writer's stamp). The
+    ///   next pull in the opposite direction then finds itself covered
+    ///   and adopts — two divergent stores converge in ≤ 2 rounds.
+    pub fn install_remote_plan(&self, fp: &Fingerprint, text: &str) -> Result<PlanInstall> {
+        let remote = match Self::parse_and_validate(text, fp, fp.d) {
+            Ok(p) => p,
+            Err(reason) => return Ok(PlanInstall::Rejected(reason)),
+        };
+        let dir = self.dir_for(fp);
+        let path = self.plan_path(fp);
+        let local_text = std::fs::read_to_string(&path).ok();
+        if local_text.as_deref() == Some(text) {
+            return Ok(PlanInstall::Skipped);
+        }
+        // A missing, corrupt or stale local file merges nothing — the
+        // validated transfer is strictly better.
+        let local =
+            local_text.as_deref().and_then(|t| Self::parse_and_validate(t, fp, fp.d).ok());
+        let adopt = match &local {
+            None => true,
+            Some(l) => {
+                covers(&remote, l)
+                    && (remote.generation > l.generation
+                        || (remote.generation == l.generation
+                            && text < local_text.as_deref().unwrap_or("")))
+            }
+        };
+        if adopt {
+            std::fs::create_dir_all(&dir)?;
+            fleet::atomic_write_bytes(&dir, "plan.json", &path, text.as_bytes())?;
+            gc_stale_leases(&dir, remote.generation);
+            return Ok(PlanInstall::Adopted(remote.generation));
+        }
+        let local = local.expect("non-adopt with no local plan is impossible");
+        if covers(&local, &remote) && local.generation >= remote.generation {
+            return Ok(PlanInstall::Skipped);
+        }
+        // Diverged: union under a fresh lease, like any racing writer.
+        std::fs::create_dir_all(&dir)?;
+        let generation = local
+            .generation
+            .max(remote.generation)
+            .max(max_generation(&scan_leases(&dir)))
+            + 1;
+        publish_lease(&dir, &self.writer, generation)?;
+        let mut lip: BTreeMap<u64, f64> = local.lipschitz.iter().copied().collect();
+        lip.extend(remote.lipschitz.iter().copied());
+        let mut refs: BTreeMap<(u64, usize), (f64, Vec<f64>)> = BTreeMap::new();
+        for (lb, mi, tol, w) in local.references {
+            refs.insert((lb, mi), (tol, w));
+        }
+        for (lb, mi, tol, w) in remote.references {
+            let keep_local = matches!(refs.get(&(lb, mi)), Some((t, _)) if *t < tol);
+            if !keep_local {
+                refs.insert((lb, mi), (tol, w));
+            }
+        }
+        let mut shards: BTreeSet<(usize, PartitionStrategy)> =
+            local.shards.into_iter().collect();
+        shards.extend(remote.shards);
+        let lip: Vec<(u64, f64)> = lip.into_iter().collect();
+        let refs: Vec<(u64, usize, f64, Vec<f64>)> =
+            refs.into_iter().map(|((l, m), (t, w))| (l, m, t, w)).collect();
+        let shards: Vec<(usize, PartitionStrategy)> = shards.into_iter().collect();
+        let doc =
+            build_plan_doc(&fp.to_string(), self.writer.as_str(), generation, &lip, &refs, &shards);
+        atomic_write_json(&dir, "plan.json", &path, &doc)?;
+        gc_stale_leases(&dir, generation);
+        Ok(PlanInstall::Merged(generation))
+    }
+
+    /// Install one warm spill pulled from a peer, after validating it
+    /// exactly like an on-disk load. Installs verbatim (the origin's
+    /// generation and checksum preserved) and then prunes the tag to
+    /// the retention bound. A valid local spill with a newer generation
+    /// wins (last writer, like the in-memory pool); an exact generation
+    /// tie keeps the lexicographically smaller bytes, so both sides of
+    /// a mutual sync agree.
+    pub fn install_remote_warm(
+        &self,
+        fp: &Fingerprint,
+        tag: &str,
+        lambda_bits: u64,
+        text: &str,
+    ) -> Result<WarmInstall> {
+        if let Err(e) = fleet::validate_pool_tag(tag) {
+            return Ok(WarmInstall::Rejected(e.to_string()));
+        }
+        let (remote_generation, _) = match Self::parse_warm(text, fp, fp.d, tag, lambda_bits) {
+            Ok(parsed) => parsed,
+            Err(reason) => return Ok(WarmInstall::Rejected(reason)),
+        };
+        let path = self.warm_path(fp, tag, lambda_bits);
+        let local_text = std::fs::read_to_string(&path).ok();
+        if local_text.as_deref() == Some(text) {
+            return Ok(WarmInstall::Skipped);
+        }
+        // Only a *valid* local spill can win; anything else is replaced.
+        if let Some(lt) = &local_text {
+            if let Ok((local_generation, _)) = Self::parse_warm(lt, fp, fp.d, tag, lambda_bits) {
+                if local_generation > remote_generation
+                    || (local_generation == remote_generation && lt.as_str() < text)
+                {
+                    return Ok(WarmInstall::Skipped);
+                }
+            }
+        }
+        let dir = self.warm_dir(fp, tag);
+        std::fs::create_dir_all(&dir)?;
+        fleet::atomic_write_bytes(&dir, "warm", &path, text.as_bytes())?;
+        self.prune_warm(fp, tag);
+        Ok(WarmInstall::Installed)
     }
 
     /// Remove `ds`'s plan directory, if present — plan file, leases and
@@ -1084,5 +1434,188 @@ mod tests {
         ));
         assert!(store.spill_warm(&fp, "../escape", lambda_bits, &w).is_err());
         std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn warm_retention_bounds_disk_and_keeps_newest() {
+        let ds = ds(11);
+        let store = tmp_store("retention").with_spill_retention(3);
+        let fp = Fingerprint::of(&ds).unwrap();
+        let lambdas: Vec<u64> = (1..=6).map(|i| (i as f64).to_bits()).collect();
+        let w: Vec<f64> = (0..ds.d()).map(|i| (i as f64) * 0.125 + 0.5).collect();
+        for &lb in &lambdas {
+            store.spill_warm(&fp, "path", lb, &w).unwrap();
+        }
+        // The bound holds, and it is the *newest* spills (highest
+        // generations — the last three λ values written) that survive.
+        let kept = store.list_warm(&fp, "path");
+        assert_eq!(kept, lambdas[3..].to_vec(), "LRU by generation keeps the newest spills");
+        // Survivors stay warm-start bit-transparent; evicted λs are
+        // clean misses, not errors.
+        match store.load_warm(&fp, ds.d(), "path", lambdas[5]) {
+            WarmLoad::Loaded(back) => assert_eq!(
+                w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                back.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            ),
+            other => panic!("retained spill must load, got {other:?}"),
+        }
+        assert_eq!(store.load_warm(&fp, ds.d(), "path", lambdas[0]), WarmLoad::Missing);
+        // Re-spilling a survivor bumps its generation without growing
+        // the tag past the bound.
+        store.spill_warm(&fp, "path", lambdas[4], &w).unwrap();
+        assert_eq!(store.list_warm(&fp, "path").len(), 3);
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn remote_plan_install_adopts_merges_and_rejects() {
+        let ds = ds(13);
+        let fp = Fingerprint::of(&ds).unwrap();
+        let a_root = tmp_store("sync_a").root().to_path_buf();
+        let b_root = tmp_store("sync_b").root().to_path_buf();
+        let a = PlanStore::new(&a_root).with_writer(WriterId::new("a").unwrap());
+        let b = PlanStore::new(&b_root).with_writer(WriterId::new("b").unwrap());
+        let machine = MachineModel::comet();
+        let cache_a = PlanCache::new();
+        let mut t = CostTrace::new();
+        cache_a.lipschitz(&ds, 3, &machine, &mut t).unwrap();
+        a.save(&ds, &cache_a).unwrap();
+        let a_text = a.read_plan_text(&fp).unwrap();
+
+        // Listing surface: the canonical dir name, stamped (gen, sum).
+        assert_eq!(a.list_fingerprint_names(), vec![fp.to_string()]);
+        let (gen, _sum) = a.plan_summary(&fp).unwrap();
+        assert_eq!(gen, 1);
+        assert_eq!(b.list_fingerprint_names(), Vec::<String>::new());
+
+        // A single flipped payload bit fails validation wholesale — the
+        // peer's store is untouched, exactly like a tampered disk load.
+        let marker = "\"l_bits\":\"";
+        let start = a_text.find(marker).unwrap() + marker.len();
+        let old = a_text.as_bytes()[start] as char;
+        let new = if old == '0' { '1' } else { '0' };
+        let mut flipped = a_text.clone();
+        flipped.replace_range(start..start + 1, &new.to_string());
+        match b.install_remote_plan(&fp, &flipped).unwrap() {
+            PlanInstall::Rejected(reason) => assert!(reason.contains("checksum"), "{reason}"),
+            other => panic!("corrupt transfer must be rejected, got {other:?}"),
+        }
+        assert!(b.read_plan_text(&fp).is_none(), "rejected transfer must write nothing");
+
+        // A clean transfer into an empty store adopts verbatim: same
+        // bytes, same generation, same writer stamp on both machines.
+        assert_eq!(b.install_remote_plan(&fp, &a_text).unwrap(), PlanInstall::Adopted(1));
+        assert_eq!(b.read_plan_text(&fp).unwrap(), a_text);
+        // Re-installing identical bytes is the converged fixpoint.
+        assert_eq!(b.install_remote_plan(&fp, &a_text).unwrap(), PlanInstall::Skipped);
+
+        // Diverge B with its own seed, then sync both ways: the first
+        // pull merges under a lease, the reverse pull adopts the merged
+        // file — two rounds to byte-identical stores.
+        let cache_b = PlanCache::new();
+        b.hydrate(&ds, &cache_b).unwrap();
+        let mut t2 = CostTrace::new();
+        cache_b.lipschitz(&ds, 4, &machine, &mut t2).unwrap();
+        b.save(&ds, &cache_b).unwrap();
+        let b_text = b.read_plan_text(&fp).unwrap();
+        assert_ne!(a_text, b_text);
+        // B's plan covers A's (it hydrated seed 3 before adding 4) at a
+        // newer generation, so A adopts it outright.
+        assert_eq!(a.install_remote_plan(&fp, &b_text).unwrap(), PlanInstall::Adopted(2));
+        assert_eq!(a.read_plan_text(&fp).unwrap(), b_text);
+
+        // A genuine two-sided divergence goes through the leased merge.
+        let c_root = tmp_store("sync_c").root().to_path_buf();
+        let c = PlanStore::new(&c_root).with_writer(WriterId::new("c").unwrap());
+        let cache_c = PlanCache::new();
+        let mut t3 = CostTrace::new();
+        cache_c.lipschitz(&ds, 5, &machine, &mut t3).unwrap();
+        c.save(&ds, &cache_c).unwrap();
+        let c_text = c.read_plan_text(&fp).unwrap();
+        match a.install_remote_plan(&fp, &c_text).unwrap() {
+            PlanInstall::Merged(g) => assert_eq!(g, 3, "merge supersedes both inputs"),
+            other => panic!("divergent plans must merge, got {other:?}"),
+        }
+        let merged = a.read_plan_text(&fp).unwrap();
+        let report = a.hydrate(&ds, &PlanCache::new()).unwrap();
+        assert_eq!(report.rejected, None);
+        assert_eq!(report.lipschitz, 3, "merge is a union of seeds 3, 4, 5");
+        // Reverse direction: C sees itself covered and adopts — bytes
+        // converge without a second merge.
+        assert_eq!(c.install_remote_plan(&fp, &merged).unwrap(), PlanInstall::Adopted(3));
+        assert_eq!(c.read_plan_text(&fp).unwrap(), merged);
+        std::fs::remove_dir_all(&a_root).ok();
+        std::fs::remove_dir_all(&b_root).ok();
+        std::fs::remove_dir_all(&c_root).ok();
+    }
+
+    #[test]
+    fn remote_warm_install_validates_and_fills_gaps() {
+        let ds = ds(14);
+        let fp = Fingerprint::of(&ds).unwrap();
+        let a_root = tmp_store("wsync_a").root().to_path_buf();
+        let b_root = tmp_store("wsync_b").root().to_path_buf();
+        let a = PlanStore::new(&a_root).with_writer(WriterId::new("a").unwrap());
+        let b = PlanStore::new(&b_root).with_writer(WriterId::new("b").unwrap());
+        let lambda_bits = 0.05f64.to_bits();
+        let w: Vec<f64> = (0..ds.d()).map(|i| (i as f64) * 0.5 - 1.0).collect();
+        a.spill_warm(&fp, "path", lambda_bits, &w).unwrap();
+        assert_eq!(a.list_warm_tags(&fp), vec!["path".to_string()]);
+        let text = a.read_warm_text(&fp, "path", lambda_bits).unwrap();
+
+        // Corrupt transfer: rejected, nothing hydrated.
+        let marker = "\"w_bits\":[\"";
+        let start = text.find(marker).unwrap() + marker.len();
+        let old = text.as_bytes()[start] as char;
+        let new = if old == '0' { '1' } else { '0' };
+        let mut flipped = text.clone();
+        flipped.replace_range(start..start + 1, &new.to_string());
+        match b.install_remote_warm(&fp, "path", lambda_bits, &flipped).unwrap() {
+            WarmInstall::Rejected(reason) => assert!(reason.contains("checksum"), "{reason}"),
+            other => panic!("corrupt warm transfer must be rejected, got {other:?}"),
+        }
+        assert_eq!(b.list_warm(&fp, "path"), Vec::<u64>::new());
+
+        // Clean transfer installs verbatim and loads bit-identically.
+        assert_eq!(
+            b.install_remote_warm(&fp, "path", lambda_bits, &text).unwrap(),
+            WarmInstall::Installed
+        );
+        assert_eq!(b.read_warm_text(&fp, "path", lambda_bits).unwrap(), text);
+        match b.load_warm(&fp, ds.d(), "path", lambda_bits) {
+            WarmLoad::Loaded(back) => assert_eq!(
+                w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                back.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            ),
+            other => panic!("installed spill must load, got {other:?}"),
+        }
+        assert_eq!(
+            b.install_remote_warm(&fp, "path", lambda_bits, &text).unwrap(),
+            WarmInstall::Skipped
+        );
+
+        // A newer local spill wins over a stale pull (last writer, same
+        // rule as the in-memory pool) — the generation decides.
+        let w2: Vec<f64> = w.iter().map(|v| v + 1.0).collect();
+        b.spill_warm(&fp, "path", lambda_bits, &w2).unwrap();
+        assert_eq!(
+            b.install_remote_warm(&fp, "path", lambda_bits, &text).unwrap(),
+            WarmInstall::Skipped
+        );
+        match b.load_warm(&fp, ds.d(), "path", lambda_bits) {
+            WarmLoad::Loaded(back) => assert_eq!(
+                w2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                back.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            ),
+            other => panic!("newer local spill must survive the pull, got {other:?}"),
+        }
+
+        // Traversal-shaped tags are rejected before any I/O.
+        assert!(matches!(
+            b.install_remote_warm(&fp, "../escape", lambda_bits, &text).unwrap(),
+            WarmInstall::Rejected(_)
+        ));
+        std::fs::remove_dir_all(&a_root).ok();
+        std::fs::remove_dir_all(&b_root).ok();
     }
 }

@@ -1,0 +1,348 @@
+//! Anti-entropy replication of the plan store over the serve protocol —
+//! fleet sharing **without a shared mount**.
+//!
+//! PR 5's fleet amortizes one-time work (Lipschitz estimates, reference
+//! solutions, shard layouts, spilled warm starts) through a shared
+//! `PlanStore` directory. That stops at the filesystem boundary: two
+//! servers on different machines each pay the setup cost again. This
+//! module closes the gap with a pull-based anti-entropy loop over the
+//! existing JSON-lines TCP protocol ([`crate::serve::proto`]):
+//!
+//! 1. [`sync_once`] connects to a peer, asks `store_list`, and compares
+//!    the advertised `(generation, checksum)` stamps against the local
+//!    store — nothing is transferred when the stores already agree.
+//! 2. Stale or missing entries are pulled with `store_pull`: the peer
+//!    ships the file **verbatim** (hex-chunked), and the local store
+//!    re-validates every byte exactly like an on-disk load —
+//!    fingerprint, schema, entry shapes, finiteness, FNV-1a checksum —
+//!    before installing ([`PlanStore::install_remote_plan`] /
+//!    [`PlanStore::install_remote_warm`]). A corrupted transfer is
+//!    rejected wholesale, re-requested once, and then skipped; it is
+//!    never hydrated.
+//! 3. Plans merge through the same leased-merge lattice local writers
+//!    use (union of L̂ seeds, tighter-certified-tol wins, monotonic
+//!    generations), so replication composes with concurrent local
+//!    saves, and repeated rounds converge replicas to byte-identical
+//!    stores. Warm pulls only fill locally-missing (tag, λ) entries and
+//!    respect the spill-retention bound.
+//!
+//! **Trust model**: a peer is trusted like a shared directory was — no
+//! more. Every pulled byte passes the same validation a local file
+//! does, claimed names must round-trip through
+//! [`Fingerprint::parse_name`], and the live dataset's own fingerprint
+//! still re-checks everything at registration time. A malicious or
+//! corrupt peer can therefore waste bandwidth, but cannot poison a
+//! solve.
+//!
+//! [`SyncDaemon`] drives [`sync_once`] against `--peer HOST:PORT[,…]`
+//! in the background on `--sync-interval-ms`; `ca-prox serve` also runs
+//! one blocking round per peer on boot, **before** the listener starts,
+//! so a freshly-booted replica answers its first submit from pulled
+//! plans (`lipschitz_computes == 0` — pinned by the CI fleet-sync
+//! smoke).
+
+use crate::error::{CaError, Result};
+use crate::obs::trace::Span;
+use crate::serve::fingerprint::Fingerprint;
+use crate::serve::proto::{
+    parse_store_file, parse_store_listing, store_list_request, store_pull_request, ListingEntry,
+    PullFile,
+};
+use crate::serve::store::{PlanInstall, PlanStore, WarmInstall};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Cross-thread counters for the replication data path, rendered into
+/// the metrics exposition as the `ca_prox_sync_*` families. One set per
+/// server: the pull side (sync rounds) and the push side (`store_pull`
+/// requests served to peers) both land here.
+#[derive(Debug, Default)]
+pub struct SyncCounters {
+    /// Bytes of store files received from peers (validated or not).
+    pub pulled_bytes: AtomicU64,
+    /// Store files received and installed (adopted, merged or warm).
+    pub pulled_files: AtomicU64,
+    /// Bytes of store files served to pulling peers.
+    pub pushed_bytes: AtomicU64,
+    /// Store files served to pulling peers.
+    pub pushed_files: AtomicU64,
+    /// Transfers rejected by validation (after the one re-request).
+    pub rejected: AtomicU64,
+}
+
+impl SyncCounters {
+    /// Record one file served to a pulling peer.
+    pub fn note_pushed(&self, bytes: u64) {
+        self.pushed_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.pushed_files.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_pulled(&self, bytes: u64, installed: bool) {
+        self.pulled_bytes.fetch_add(bytes, Ordering::Relaxed);
+        if installed {
+            self.pulled_files.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// What one [`sync_once`] round did against one peer.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SyncReport {
+    /// Plans adopted verbatim or merged into the local store.
+    pub pulled_plans: usize,
+    /// Warm spills installed.
+    pub pulled_warm: usize,
+    /// Files already in agreement (or where the local copy won).
+    pub skipped: usize,
+    /// Transfers rejected by validation even after one re-request.
+    pub rejected: usize,
+}
+
+impl SyncReport {
+    /// Total files that changed the local store this round.
+    pub fn installed(&self) -> usize {
+        self.pulled_plans + self.pulled_warm
+    }
+}
+
+/// One line-oriented request/response exchange on the peer connection.
+fn exchange(
+    reader: &mut impl BufRead,
+    writer: &mut impl Write,
+    request: &str,
+) -> Result<String> {
+    writeln!(writer, "{request}")?;
+    writer.flush()?;
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Err(CaError::Config("peer closed the connection mid-sync".into()));
+    }
+    Ok(line.trim().to_string())
+}
+
+/// Pull one file from the peer and offer it to the local store.
+/// Returns `Ok(true)` if it installed, `Ok(false)` if the local copy
+/// won (skip), and `Err` with the rejection reason for a failed
+/// transfer (framing damage and validation damage look the same to the
+/// caller — both are one corrupt transfer, re-requestable).
+fn pull_file(
+    reader: &mut impl BufRead,
+    writer: &mut impl Write,
+    store: &PlanStore,
+    counters: &SyncCounters,
+    fp: &Fingerprint,
+    name: &str,
+    file: &PullFile,
+) -> std::result::Result<bool, String> {
+    let line = exchange(reader, writer, &store_pull_request(name, file))
+        .map_err(|e| e.to_string())?;
+    let got = parse_store_file(&line).map_err(|e| e.to_string())?;
+    if got.fingerprint != name || got.file != *file {
+        return Err("peer answered with a different file than requested".into());
+    }
+    let outcome = match file {
+        PullFile::Plan => match store.install_remote_plan(fp, &got.text) {
+            Ok(PlanInstall::Adopted(_)) | Ok(PlanInstall::Merged(_)) => Ok(true),
+            Ok(PlanInstall::Skipped) => Ok(false),
+            Ok(PlanInstall::Rejected(reason)) => Err(reason),
+            Err(e) => Err(e.to_string()),
+        },
+        PullFile::Warm { tag, lambda_bits } => {
+            match store.install_remote_warm(fp, tag, *lambda_bits, &got.text) {
+                Ok(WarmInstall::Installed) => Ok(true),
+                Ok(WarmInstall::Skipped) => Ok(false),
+                Ok(WarmInstall::Rejected(reason)) => Err(reason),
+                Err(e) => Err(e.to_string()),
+            }
+        }
+    };
+    counters.note_pulled(got.text.len() as u64, matches!(outcome, Ok(true)));
+    outcome
+}
+
+/// Decide-and-pull for one advertised fingerprint entry.
+fn sync_entry(
+    reader: &mut impl BufRead,
+    writer: &mut impl Write,
+    store: &PlanStore,
+    counters: &SyncCounters,
+    entry: &ListingEntry,
+    report: &mut SyncReport,
+) {
+    // A name that doesn't round-trip is not a fingerprint — ignore it
+    // (a hostile peer gets no filesystem traffic out of a weird name).
+    let Some(fp) = Fingerprint::parse_name(&entry.fingerprint) else {
+        report.rejected += 1;
+        counters.rejected.fetch_add(1, Ordering::Relaxed);
+        return;
+    };
+    let mut wanted: Vec<PullFile> = Vec::new();
+    if let Some((remote_generation, remote_checksum)) = entry.plan {
+        // Pull when the peer is strictly ahead, or when equal
+        // generations carry different bytes (divergent writers — the
+        // install's tie-break converges both sides).
+        let pull = match store.plan_summary(&fp) {
+            None => true,
+            Some((local_generation, local_checksum)) => {
+                remote_generation > local_generation
+                    || (remote_generation == local_generation
+                        && remote_checksum != local_checksum)
+            }
+        };
+        if pull {
+            wanted.push(PullFile::Plan);
+        } else {
+            report.skipped += 1;
+        }
+    }
+    for tag in &entry.warm {
+        // Warm pulls fill gaps only: entries we already hold are
+        // settled by local generations, not re-transferred per round.
+        let have = store.list_warm(&fp, &tag.tag);
+        for &lambda_bits in &tag.lambdas {
+            if have.contains(&lambda_bits) {
+                report.skipped += 1;
+            } else {
+                wanted.push(PullFile::Warm { tag: tag.tag.clone(), lambda_bits });
+            }
+        }
+    }
+    for file in wanted {
+        let mut attempt =
+            pull_file(reader, writer, store, counters, &fp, &entry.fingerprint, &file);
+        if let Err(reason) = &attempt {
+            // One corrupt transfer earns one re-request; a second
+            // failure counts as rejected and moves on — never hydrated.
+            log::warn!("sync: pull of {}/{file:?} rejected ({reason}); re-requesting", entry.fingerprint);
+            attempt = pull_file(reader, writer, store, counters, &fp, &entry.fingerprint, &file);
+        }
+        match attempt {
+            Ok(true) => match file {
+                PullFile::Plan => report.pulled_plans += 1,
+                PullFile::Warm { .. } => report.pulled_warm += 1,
+            },
+            Ok(false) => report.skipped += 1,
+            Err(reason) => {
+                log::warn!("sync: pull of {}/{file:?} rejected twice ({reason}); skipping", entry.fingerprint);
+                report.rejected += 1;
+                counters.rejected.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// One blocking anti-entropy round against `peer` (`HOST:PORT`): list,
+/// compare, pull what's stale or missing, validate and install. Errors
+/// are connection-level only (unreachable peer, protocol breakdown);
+/// per-file rejections are counted in the report, not raised — one bad
+/// file never aborts the round.
+pub fn sync_once(store: &PlanStore, peer: &str, counters: &SyncCounters) -> Result<SyncReport> {
+    let _span = Span::enter("serve/sync", None);
+    let stream = TcpStream::connect(peer)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let listing_line = exchange(&mut reader, &mut writer, &store_list_request())?;
+    let listing = parse_store_listing(&listing_line)?;
+    let mut report = SyncReport::default();
+    for entry in &listing {
+        sync_entry(&mut reader, &mut writer, store, counters, entry, &mut report);
+    }
+    Ok(report)
+}
+
+/// Background anti-entropy driver: one [`sync_once`] per peer per
+/// interval, round-robin, forever — modeled on the metrics dump thread
+/// (stop flag polled in 250 ms slices so [`SyncDaemon::stop`] returns
+/// promptly even with a long interval). Sync failures are logged and
+/// retried next interval, never fatal: a peer being down is a normal
+/// state for anti-entropy.
+pub struct SyncDaemon {
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl SyncDaemon {
+    /// Spawn the daemon. `store` is this server's own store (opened
+    /// with the same writer id), `peers` the `--peer` list,
+    /// `interval_ms` the pause between rounds.
+    pub fn spawn(
+        store: PlanStore,
+        peers: Vec<String>,
+        interval_ms: u64,
+        counters: Arc<SyncCounters>,
+    ) -> SyncDaemon {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || loop {
+            let mut waited = 0u64;
+            while waited < interval_ms {
+                if stop_flag.load(Ordering::SeqCst) {
+                    return;
+                }
+                let slice = 250.min(interval_ms - waited);
+                std::thread::sleep(std::time::Duration::from_millis(slice));
+                waited += slice;
+            }
+            for peer in &peers {
+                if stop_flag.load(Ordering::SeqCst) {
+                    return;
+                }
+                match sync_once(&store, peer, &counters) {
+                    Ok(report) if report.installed() > 0 || report.rejected > 0 => {
+                        log::info!(
+                            "sync: {peer}: +{} plans +{} warm, {} skipped, {} rejected",
+                            report.pulled_plans,
+                            report.pulled_warm,
+                            report.skipped,
+                            report.rejected
+                        );
+                    }
+                    Ok(_) => {}
+                    Err(e) => log::warn!("sync: {peer}: round failed ({e}); will retry"),
+                }
+            }
+        });
+        SyncDaemon { stop, handle }
+    }
+
+    /// Signal the daemon and join it (returns within ~250 ms plus any
+    /// in-flight round).
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.handle.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_totals_and_counters_accumulate() {
+        let mut r = SyncReport::default();
+        r.pulled_plans = 2;
+        r.pulled_warm = 3;
+        assert_eq!(r.installed(), 5);
+        let c = SyncCounters::default();
+        c.note_pushed(10);
+        c.note_pushed(7);
+        c.note_pulled(4, true);
+        c.note_pulled(9, false);
+        assert_eq!(c.pushed_bytes.load(Ordering::Relaxed), 17);
+        assert_eq!(c.pushed_files.load(Ordering::Relaxed), 2);
+        assert_eq!(c.pulled_bytes.load(Ordering::Relaxed), 13);
+        assert_eq!(c.pulled_files.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn daemon_spawns_and_stops_without_peers() {
+        let store = PlanStore::new(
+            std::env::temp_dir().join(format!("ca_prox_syncd_{}", std::process::id())),
+        );
+        let daemon =
+            SyncDaemon::spawn(store, vec![], 60_000, Arc::new(SyncCounters::default()));
+        daemon.stop();
+    }
+}

@@ -51,17 +51,40 @@
 //! (k) across tenants, weighted deficit-round-robin interleaves
 //!     queues — equal weights alternate tenants, weight 2 drains two
 //!     jobs before yielding — pinned the same replay way.
+//!
+//! Replication acceptance pins (ISSUE 10):
+//!
+//! (l) N clients on N live TCP connections — all held open at a barrier
+//!     after their submit acks, impossible under a one-connection-at-a-
+//!     time accept loop — get solver output byte-identical (modulo
+//!     measured wall time) to fresh standalone sessions;
+//! (m) two servers with **no shared filesystem** converge over
+//!     `store_list`/`store_pull`: B's empty store pulls A's plan and
+//!     warm spills byte-for-byte, a second round moves nothing, and a
+//!     server booted on the replica pays `lipschitz_computes == 0`,
+//!     serves `persisted_hits ≥ 1` and `warm_spill_hits ≥ 1`, and its
+//!     solves replay A's warm chain bit-identically;
+//! (n) a peer serving transfers with ONE property-sampled byte mutated
+//!     anywhere in the framed line is rejected wholesale — after the
+//!     one re-request — and the pulling store stays byte-empty: a
+//!     corrupt peer wastes bandwidth, never poisons a solve.
 
 use ca_prox::datasets::synthetic::{generate, SyntheticSpec};
 use ca_prox::datasets::Dataset;
 use ca_prox::error::CaError;
 use ca_prox::grid::PlanCache;
+use ca_prox::serve::proto::{
+    store_file_line, store_listing_for, store_listing_line, submit_to_json,
+};
 use ca_prox::serve::{
-    Fingerprint, PlanStore, ServeClient, Server, ServerConfig, SolveRequest, TenantPolicy,
-    WarmLoad, WriterId,
+    parse_request, serve_listener, sync_once, DatasetRef, Fingerprint, PlanStore, PullFile,
+    Request, ServeClient, Server, ServerConfig, SolveRequest, SubmitCmd, SyncCounters,
+    TenantPolicy, WarmLoad, WriterId,
 };
 use ca_prox::session::{Session, SolveSpec, Topology};
+use ca_prox::util::json::{parse, Json};
 use ca_prox::util::prop::prop_check;
+use std::io::{BufRead, Write};
 use std::path::PathBuf;
 
 fn dataset(gen_seed: u64) -> Dataset {
@@ -824,4 +847,304 @@ fn weighted_drr_interleaves_tenants_pinned_by_warm_chain() {
     assert_eq!(a1.w, m_a1.w);
     assert_eq!(a2.w, m_a2.w, "weight 2: a drains two jobs before yielding");
     assert_eq!(b1.w, m_b1.w, "B1 sees A2's solution ⇒ order was A1, A2, B1");
+}
+
+/// Solver-output JSON minus the one non-deterministic field (measured
+/// wall time), reserialized so the rest compares as exact text.
+fn without_wall_seconds(v: &Json) -> String {
+    match v {
+        Json::Obj(m) => {
+            let mut m = m.clone();
+            m.remove("wall_seconds");
+            Json::Obj(m).to_string_compact()
+        }
+        other => other.to_string_compact(),
+    }
+}
+
+#[test]
+fn concurrent_tcp_connections_are_bit_identical_to_serial() {
+    // (l) Each client holds its connection open at a barrier until all
+    // of them have received their submit acks — under one-connection-
+    // at-a-time serving the first connection would block every later
+    // ack and the barrier would never release.
+    let jobs: [(f64, u64); 4] = [(0.1, 3), (0.05, 3), (0.02, 4), (0.08, 5)];
+    let server = ServerConfig::default().with_threads(4).build().unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let gate = std::sync::Barrier::new(jobs.len());
+    let done: Vec<Json> = std::thread::scope(|scope| {
+        let listening = scope.spawn(|| serve_listener(&server, &listener));
+        let handles: Vec<_> = jobs
+            .iter()
+            .map(|&(lambda, seed)| {
+                let gate = &gate;
+                scope.spawn(move || {
+                    let stream = std::net::TcpStream::connect(addr).unwrap();
+                    let mut writer = stream.try_clone().unwrap();
+                    let mut reader = std::io::BufReader::new(stream);
+                    let cmd = SubmitCmd {
+                        dataset: DatasetRef {
+                            name: "smoke".into(),
+                            scale_n: Some(240),
+                            gen_seed: 21,
+                        },
+                        topology: Topology::new(2),
+                        solve: spec(lambda, seed),
+                        warm_tag: None,
+                        tenant: None,
+                        priority: 0,
+                        deadline_ms: None,
+                    };
+                    writeln!(writer, "{}", submit_to_json(&cmd).to_string_compact()).unwrap();
+                    writer.flush().unwrap();
+                    let mut ack = String::new();
+                    reader.read_line(&mut ack).unwrap();
+                    let ack = parse(ack.trim()).unwrap();
+                    assert_eq!(ack.get("event").and_then(Json::as_str), Some("queued"));
+                    gate.wait();
+                    writeln!(writer, "{{\"schema\":2,\"op\":\"drain\"}}").unwrap();
+                    writer.flush().unwrap();
+                    let mut done = None;
+                    loop {
+                        let mut line = String::new();
+                        if reader.read_line(&mut line).unwrap() == 0 {
+                            break;
+                        }
+                        let event = parse(line.trim()).unwrap();
+                        match event.get("event").and_then(Json::as_str) {
+                            Some("done") => done = Some(event.get("output").unwrap().clone()),
+                            Some("drained") => break,
+                            Some("error") | Some("failed") => panic!("job failed: {line}"),
+                            _ => {}
+                        }
+                    }
+                    done.expect("no done event on this connection")
+                })
+            })
+            .collect();
+        let outs: Vec<Json> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // A final connection shuts the listener down gracefully.
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = std::io::BufReader::new(stream);
+        writeln!(writer, "{{\"schema\":2,\"op\":\"shutdown\"}}").unwrap();
+        writer.flush().unwrap();
+        let mut bye = String::new();
+        reader.read_line(&mut bye).unwrap();
+        assert!(bye.contains("\"bye\""), "{bye}");
+        listening.join().unwrap().unwrap();
+        outs
+    });
+    server.shutdown().unwrap();
+    // Serving over N live sockets adds zero numerical surface: every
+    // output matches a fresh standalone session byte-for-byte.
+    let ds = ca_prox::datasets::registry::load_preset("smoke", Some(240), 21).unwrap();
+    for (&(lambda, seed), out) in jobs.iter().zip(&done) {
+        let mut standalone = Session::build(&ds, Topology::new(2)).unwrap();
+        let expect = standalone.solve(&spec(lambda, seed)).unwrap();
+        assert_eq!(
+            without_wall_seconds(out),
+            without_wall_seconds(&expect.to_json()),
+            "λ={lambda} seed={seed}"
+        );
+    }
+}
+
+#[test]
+fn disjoint_stores_converge_via_tcp_sync_and_boot_warm() {
+    // (m) A computes on store-a; B's empty store-b pulls everything
+    // over TCP — no shared directory anywhere — and a server booted on
+    // the replica pays zero setup and warm-starts from A's spills.
+    let store_a = tmp_dir("sync_src");
+    let store_b = tmp_dir("sync_dst");
+    let a = ServerConfig::default()
+        .with_threads(1)
+        .with_store(&store_a)
+        .with_warm_pool_max(1)
+        .with_writer_id("a")
+        .build()
+        .unwrap();
+    let id = a.register_dataset(dataset(21)).unwrap();
+    let submit = |server: &Server, id: &str, lambda: f64| {
+        server
+            .submit(SolveRequest::new(id, Topology::new(1), spec(lambda, 3)).with_warm_tag("path"))
+            .unwrap()
+            .wait()
+            .unwrap()
+    };
+    let a1 = submit(&a, &id, 0.1);
+    let a2 = submit(&a, &id, 0.05);
+    a.persist_all().unwrap(); // the worker's own save races the ticket
+    a.shutdown().unwrap(); // spills the still-dirty 0.05 solution
+
+    // Serve A's store over TCP; B pulls into its own directory.
+    let a_srv = ServerConfig::default()
+        .with_threads(1)
+        .with_store(&store_a)
+        .with_writer_id("a")
+        .build()
+        .unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let b_store = PlanStore::new(&store_b).with_writer(WriterId::new("b").unwrap());
+    let counters = SyncCounters::default();
+    std::thread::scope(|scope| {
+        let listening = scope.spawn(|| serve_listener(&a_srv, &listener));
+        let report = sync_once(&b_store, &addr.to_string(), &counters).unwrap();
+        assert_eq!(report.rejected, 0, "{report:?}");
+        assert_eq!(report.pulled_plans, 1, "{report:?}");
+        assert_eq!(report.pulled_warm, 2, "A spilled both λs: {report:?}");
+        // Anti-entropy converges: a second round moves nothing.
+        let again = sync_once(&b_store, &addr.to_string(), &counters).unwrap();
+        assert_eq!(again.installed(), 0, "{again:?}");
+        assert_eq!(again.rejected, 0, "{again:?}");
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = std::io::BufReader::new(stream);
+        writeln!(writer, "{{\"schema\":2,\"op\":\"shutdown\"}}").unwrap();
+        writer.flush().unwrap();
+        let mut bye = String::new();
+        reader.read_line(&mut bye).unwrap();
+        assert!(bye.contains("\"bye\""), "{bye}");
+        listening.join().unwrap().unwrap();
+    });
+    a_srv.shutdown().unwrap();
+
+    // Replicated content is byte-identical across the two disjoint
+    // directories: generations, checksums, every spilled vector.
+    let fp = Fingerprint::of(&dataset(21)).unwrap();
+    let a_store = PlanStore::new(&store_a);
+    assert_eq!(
+        std::fs::read(a_store.plan_path(&fp)).unwrap(),
+        std::fs::read(b_store.plan_path(&fp)).unwrap(),
+        "adopted plan must be byte-for-byte A's plan"
+    );
+    for lambda in [0.1f64, 0.05] {
+        assert_eq!(
+            std::fs::read(a_store.warm_path(&fp, "path", lambda.to_bits())).unwrap(),
+            std::fs::read(b_store.warm_path(&fp, "path", lambda.to_bits())).unwrap(),
+            "λ={lambda}"
+        );
+    }
+
+    // A server booted on the replica behaves exactly like one booted on
+    // A's own store: zero recompute, warm tier live.
+    let b = ServerConfig::default()
+        .with_threads(1)
+        .with_store(&store_b)
+        .with_warm_pool_max(1)
+        .with_writer_id("b")
+        .build()
+        .unwrap();
+    let id_b = b.register_dataset(dataset(21)).unwrap();
+    assert_eq!(id, id_b, "same bytes, same fleet identity");
+    let out = submit(&b, &id_b, 0.04);
+    let stats = b.dataset_stats(&id_b).unwrap();
+    assert_eq!(stats.lipschitz_computes, 0, "B boots on A's pulled setup: {stats:?}");
+    assert!(stats.persisted_hits >= 1, "stats: {stats:?}");
+    assert!(stats.warm_spill_hits >= 1, "B must warm-start from a pulled spill: {stats:?}");
+    b.shutdown().unwrap();
+
+    // And the replicated tier adds zero numerical surface: B's solve
+    // replays A's warm chain bit-identically.
+    let ds = dataset(21);
+    let mut session = Session::build(&ds, Topology::new(1)).unwrap();
+    let manual_1 = session.solve(&spec(0.1, 3)).unwrap();
+    assert_eq!(a1.w, manual_1.w);
+    let manual_2 = session.solve(&spec(0.05, 3).warm_start(&manual_1.w)).unwrap();
+    assert_eq!(a2.w, manual_2.w);
+    let manual_b = session.solve(&spec(0.04, 3).warm_start(&manual_2.w)).unwrap();
+    assert_eq!(out.w, manual_b.w, "B's trajectory must flow through A's spilled solution");
+    std::fs::remove_dir_all(&store_a).ok();
+    std::fs::remove_dir_all(&store_b).ok();
+}
+
+#[test]
+fn corrupted_pull_is_rejected_wholesale_and_never_hydrated_prop() {
+    // (n) The peer answers with correctly-addressed transfers whose
+    // framed line has ONE byte mutated at a property-sampled offset.
+    // Wherever the byte lands — framing, byte count, hex chunks, the
+    // carried file body, its embedded checksum — the pull must be
+    // rejected wholesale after the one re-request, and the pulling
+    // store must stay empty.
+    let root = tmp_dir("sync_corrupt");
+    let src = PlanStore::new(root.join("src")).with_writer(WriterId::new("src").unwrap());
+    let ds = dataset(21);
+    let cache = PlanCache::new();
+    let machine = ca_prox::comm::costmodel::MachineModel::comet();
+    let mut trace = ca_prox::comm::trace::CostTrace::new();
+    cache.lipschitz(&ds, 3, &machine, &mut trace).unwrap();
+    src.save(&ds, &cache).unwrap();
+    let fp = Fingerprint::of(&ds).unwrap();
+    let w: Vec<f64> = (0..ds.d()).map(|i| i as f64 * 0.25 - 1.0).collect();
+    let lambda_bits = 0.1f64.to_bits();
+    src.spill_warm(&fp, "path", lambda_bits, &w).unwrap();
+    let name = fp.to_string();
+    let listing = store_listing_line(&store_listing_for(&src));
+    let plan_line = store_file_line(&name, &PullFile::Plan, &src.read_plan_text(&fp).unwrap());
+    let warm_file = PullFile::Warm { tag: "path".into(), lambda_bits };
+    let warm_line = store_file_line(
+        &name,
+        &warm_file,
+        &src.read_warm_text(&fp, "path", lambda_bits).unwrap(),
+    );
+    let mut case = 0u64;
+    prop_check("corrupted sync transfers never hydrate", 6, |g| {
+        case += 1;
+        // One mutated copy per file, served identically to the first
+        // request and the re-request.
+        let mut bad_plan = plan_line.clone().into_bytes();
+        g.mutate_byte(&mut bad_plan);
+        let mut bad_warm = warm_line.clone().into_bytes();
+        g.mutate_byte(&mut bad_warm);
+        let listener =
+            std::net::TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
+        let addr = listener.local_addr().map_err(|e| e.to_string())?;
+        let listing = listing.clone();
+        let peer = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let reader = std::io::BufReader::new(stream);
+            for line in reader.lines() {
+                let Ok(line) = line else { break };
+                let answer: Vec<u8> = match parse_request(&line) {
+                    Ok(Request::StoreList) => listing.clone().into_bytes(),
+                    Ok(Request::StorePull(cmd)) => match cmd.file {
+                        PullFile::Plan => bad_plan.clone(),
+                        PullFile::Warm { .. } => bad_warm.clone(),
+                    },
+                    _ => break,
+                };
+                writer.write_all(&answer).unwrap();
+                writer.write_all(b"\n").unwrap();
+                writer.flush().unwrap();
+            }
+        });
+        let dst = PlanStore::new(root.join(format!("dst{case}")))
+            .with_writer(WriterId::new("dst").map_err(|e| e.to_string())?);
+        let counters = SyncCounters::default();
+        let report =
+            sync_once(&dst, &addr.to_string(), &counters).map_err(|e| e.to_string())?;
+        peer.join().map_err(|_| "peer thread panicked".to_string())?;
+        if report.installed() != 0 {
+            return Err(format!("corrupt transfers installed something: {report:?}"));
+        }
+        if report.rejected != 2 {
+            return Err(format!("both pulls must count as rejected: {report:?}"));
+        }
+        let installed = counters.pulled_files.load(std::sync::atomic::Ordering::Relaxed);
+        if installed != 0 {
+            return Err(format!("counters saw {installed} installs"));
+        }
+        // Nothing reached the pulled-into store's disk.
+        if !dst.list_fingerprint_names().is_empty()
+            || dst.plan_summary(&fp).is_some()
+            || !dst.list_warm(&fp, "path").is_empty()
+        {
+            return Err("corrupt transfer left files on disk".into());
+        }
+        Ok(())
+    });
+    std::fs::remove_dir_all(&root).ok();
 }
